@@ -1,0 +1,69 @@
+//! The Balancer up close: calibrate the paper's Eq. 2 / Eq. 3 predictors
+//! by profiling (as §4.4 does on real GPUs), then watch Algorithm 1 pick
+//! partial-prefill lengths as the chunked-prefill instance's load varies.
+//!
+//! ```bash
+//! cargo run --release --example balancer_calibration
+//! ```
+
+use cronus::benchkit::Table;
+use cronus::cronus::balancer::{Balancer, SplitPolicy};
+use cronus::engine::instance::EngineStats;
+use cronus::simgpu::fit::calibrate;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::perfmodel::PerfModel;
+use cronus::simgpu::spec::{A10, A100};
+
+fn main() {
+    let ppi = PerfModel::new(A10, LLAMA3_8B);
+    let cpi = PerfModel::new(A100, LLAMA3_8B);
+
+    // Profile both instances with 1% measurement noise and fit the
+    // paper's linear models.
+    let (prefill, chunked) = calibrate(&ppi, &cpi, 512, 0.01, 7);
+    println!("Eq. 2 (partial prefill on {}):", ppi.gpu.name);
+    println!(
+        "  T = {:.3} µs/token · L + {:.3} ms   (R² {:.4}, MAPE {:.2}%)",
+        prefill.k_p * 1e6,
+        prefill.b_p * 1e3,
+        prefill.r2,
+        prefill.mape * 100.0
+    );
+    println!("Eq. 3 (chunked prefill iteration on {}):", cpi.gpu.name);
+    println!(
+        "  t = {:.3} µs/ctx-tok · L_p2 + {:.1} ns/ctx-tok · ΣL_d + {:.3} ms   (R² {:.4}, MAPE {:.2}%)",
+        chunked.k_ctxp * 1e6,
+        chunked.k_ctxd * 1e9,
+        chunked.b_c * 1e3,
+        chunked.r2,
+        chunked.mape * 100.0
+    );
+
+    let balancer = Balancer::new(SplitPolicy::Balanced, prefill, chunked, 512);
+    let mut table = Table::new(
+        "Algorithm 1 decisions (prompt 2048 tokens) vs CPI load",
+        &["decode reqs", "Σ decode ctx", "L_p", "L_p/L_in", "T_ppi est", "T_cpi est"],
+    );
+    for n_decode in [0usize, 32, 64, 128, 256, 400] {
+        let stats = EngineStats {
+            n_decode,
+            decode_ctx_sum: n_decode * 1300,
+            n_prefilling: 0,
+            waiting: 0,
+            free_blocks: 25_000,
+            block_size: 16,
+            total_blocks: 30_000,
+        };
+        let d = balancer.split(2048, &stats);
+        table.row(vec![
+            n_decode.to_string(),
+            (n_decode * 1300).to_string(),
+            d.partial_len.to_string(),
+            format!("{:.2}", d.partial_len as f64 / 2048.0),
+            format!("{:.1} ms", d.t_prefill_est * 1e3),
+            format!("{:.1} ms", d.t_chunked_est * 1e3),
+        ]);
+    }
+    table.print();
+    println!("\nThe busier the CPI, the more prefix Cronus pushes to the low-end GPU.");
+}

@@ -1,0 +1,55 @@
+//! Sweep every (GPU pair, model, system) combination the paper evaluates
+//! and print the resulting throughput/latency matrix — a compact view of
+//! Table 2 + Fig. 4 at reduced request count.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_sweep [-- --n 300]
+//! ```
+
+use cronus::benchkit::Table;
+use cronus::config::cli::Parser;
+use cronus::config::{DeploymentConfig, SystemKind};
+use cronus::launcher::{latency_at_rate, max_throughput, paper_trace, ExperimentOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parser = Parser::new("heterogeneous_sweep", "sweep GPU pairs × systems")
+        .opt("n", "requests per run", Some("300"))
+        .opt("seed", "trace seed", Some("42"))
+        .opt("rate-frac", "fig4 rate as a fraction of the slowest system's capacity", Some("0.7"));
+    let args = parser.parse(&args).unwrap_or_else(|e| {
+        eprintln!("{e}\n{}", parser.usage());
+        std::process::exit(2);
+    });
+    let opts = ExperimentOpts {
+        n_requests: args.get_usize("n").unwrap(),
+        seed: args.get_u64("seed").unwrap(),
+    };
+    let rate_frac = args.get_f64("rate-frac").unwrap();
+
+    let trace = paper_trace(&opts);
+    for (label, cfg) in DeploymentConfig::paper_matrix() {
+        let mut table = Table::new(
+            format!("{label} ({} requests)", opts.n_requests),
+            &["Approach", "max thpt (req/s)", "TTFT p99 (s)", "TBT p99 (s)"],
+        );
+        // Common sub-saturation rate for the latency columns.
+        let min_cap = SystemKind::ALL
+            .iter()
+            .map(|&k| max_throughput(k, &cfg, &trace).report.throughput_rps)
+            .fold(f64::INFINITY, f64::min);
+        let rate = (min_cap * rate_frac).max(0.1);
+        for kind in SystemKind::ALL {
+            let cap = max_throughput(kind, &cfg, &trace);
+            let lat = latency_at_rate(kind, &cfg, &trace, rate);
+            table.row(vec![
+                kind.name().to_string(),
+                format!("{:.2}", cap.report.throughput_rps),
+                format!("{:.3}", lat.report.ttft_p99_s),
+                format!("{:.4}", lat.report.tbt_p99_s),
+            ]);
+        }
+        table.print();
+        println!("(latency columns at {rate:.2} req/s fixed-interval arrivals)");
+    }
+}

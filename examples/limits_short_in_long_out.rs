@@ -1,0 +1,62 @@
+//! The paper's §6 limitation, demonstrated: with short inputs and long
+//! outputs the workload is decode-dominated, the high-end GPU (which
+//! Cronus dedicates to decode + chunked prefill) saturates, the low-end
+//! partial-prefill instance idles, and Cronus's advantage over
+//! disaggregated prefill shrinks — the load imbalance returns, now on
+//! the other side.
+//!
+//! ```bash
+//! cargo run --release --example limits_short_in_long_out
+//! ```
+
+use cronus::benchkit::Table;
+use cronus::config::{DeploymentConfig, SystemKind};
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::spec::{A10, A100};
+use cronus::systems::build_system;
+use cronus::workload::arrival::{stamp, ArrivalProcess};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+
+fn run(cfg: &DeploymentConfig, trace_cfg: &AzureTraceConfig, label: &str) {
+    let trace = generate(300, trace_cfg, 11);
+    let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+    let mut table = Table::new(
+        label.to_string(),
+        &["Approach", "thpt (req/s)", "PPI busy frac", "CPI busy frac"],
+    );
+    for kind in [
+        SystemKind::Cronus,
+        SystemKind::DpChunked,
+        SystemKind::DisaggLowHigh,
+    ] {
+        let out = build_system(kind, cfg).run(&trace);
+        let makespan = out.report.makespan_s;
+        let fracs: Vec<String> = out
+            .instances
+            .iter()
+            .map(|i| format!("{:.0}%", 100.0 * i.busy_time_s / makespan))
+            .collect();
+        table.row(vec![
+            kind.name().to_string(),
+            format!("{:.2}", out.report.throughput_rps),
+            fracs.first().cloned().unwrap_or_default(),
+            fracs.get(1).cloned().unwrap_or_default(),
+        ]);
+    }
+    table.print();
+}
+
+fn main() {
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    run(&cfg, &AzureTraceConfig::default(), "Conversation workload (mean in 1014 / out 247)");
+    run(
+        &cfg,
+        &AzureTraceConfig::short_input_long_output(),
+        "§6 limitation workload (mean in 128 / out 512): decode-bound",
+    );
+    println!(
+        "\nIn the second table the first instance (PPI / DP-high / prefill side)\n\
+         goes idle while the decode side saturates — the future-work case the\n\
+         paper proposes offloading decode to the prefill node for."
+    );
+}

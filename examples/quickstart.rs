@@ -1,0 +1,49 @@
+//! Quickstart: deploy Cronus on a simulated A100+A10 pair, serve a small
+//! Azure-like trace, and compare against data parallelism.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cronus::config::{DeploymentConfig, SystemKind};
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::spec::{A10, A100};
+use cronus::systems::build_system;
+use cronus::workload::arrival::{stamp, ArrivalProcess};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+
+fn main() {
+    // 1. Describe the deployment: one high-end + one low-end GPU, the
+    //    paper's engine defaults (512-token chunked prefill, 16-token KV
+    //    blocks, 100 Gbps interconnect).
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    println!(
+        "deployment: {} + {} serving {} ({} params)",
+        cfg.high_gpu.name,
+        cfg.low_gpu.name,
+        cfg.model.name,
+        cfg.model.param_count()
+    );
+
+    // 2. Generate a workload: 200 conversation requests with the Azure
+    //    2023 trace statistics, all arriving at t=0 (max-throughput mode).
+    let trace = generate(200, &AzureTraceConfig::default(), 42);
+    let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+
+    // 3. Serve it with Cronus (partially disaggregated prefill) and with
+    //    the DP+chunked baseline.
+    for kind in [SystemKind::Cronus, SystemKind::DpChunked] {
+        let out = build_system(kind, &cfg).run(&trace);
+        println!("{}", out.report.summary());
+        for inst in &out.instances {
+            println!(
+                "    {:<18} busy {:>7.2}s  iters {:>6}  prefill {:>8} tok  decode {:>8} tok",
+                inst.name,
+                inst.busy_time_s,
+                inst.n_iterations,
+                inst.tokens_prefilled,
+                inst.tokens_decoded
+            );
+        }
+    }
+}

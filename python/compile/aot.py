@@ -1,0 +1,261 @@
+"""AOT pipeline: lower the Layer-2 model to HLO text + weight blobs.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(`rust/src/runtime/`) loads the outputs and Python never appears on the
+request path again.
+
+Outputs (under ``artifacts/``):
+
+  * ``prefill_c{C}.hlo.txt``  — chunked-prefill entry point (1 request)
+  * ``decode_b{B}.hlo.txt``   — batched decode entry point
+  * ``weights.bin``           — all parameters, f32 little-endian, in
+                                ``model.PARAM_ORDER`` order
+  * ``manifest.json``         — dims, parameter table (name/shape/offset),
+                                entry-point input/output shape lists
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly.  Lowered with
+``return_tuple=True`` and unwrapped with ``to_tuple()`` on the Rust side.
+
+Pallas kernels are lowered with ``interpret=True`` so the resulting HLO is
+plain ops the CPU PJRT client can execute (real-TPU lowering would emit a
+Mosaic custom-call).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+DEFAULT_CHUNK = 64
+DEFAULT_DECODE_BATCH = 8
+WEIGHT_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    CRITICAL: print with ``print_large_constants=True``.  The default
+    printer elides big array constants as ``constant({...})`` and the
+    consuming xla_extension 0.5.1 text parser silently reads those as
+    zeros (we lost RoPE's frequency table to this once — the model
+    degraded subtly instead of failing loudly).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The 0.5.1 text parser predates `source_end_line` etc.; metadata is
+    # debug-only, drop it.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def make_prefill_fn(dims: M.ModelDims, chunk: int):
+    """Flat-arg wrapper so the HLO parameter order is exactly
+    PARAM_ORDER + [tokens, q_start, kv_k, kv_v]."""
+
+    n_params = len(M.PARAM_ORDER)
+
+    def fn(*args):
+        params = M.params_from_tuple(args[:n_params])
+        tokens, q_start, kv_k, kv_v = args[n_params:]
+        return M.prefill_chunk(
+            params, dims, tokens, q_start[0], kv_k, kv_v, use_pallas=True
+        )
+
+    return fn
+
+
+def make_decode_fn(dims: M.ModelDims, batch: int):
+    n_params = len(M.PARAM_ORDER)
+
+    def fn(*args):
+        params = M.params_from_tuple(args[:n_params])
+        tokens, pos, kv_k, kv_v = args[n_params:]
+        return M.decode_step(
+            params, dims, tokens, pos, kv_k, kv_v, use_pallas=True
+        )
+
+    return fn
+
+
+def entry_specs(
+    dims: M.ModelDims, chunk: int, batch: int
+) -> Tuple[list, list]:
+    """(prefill_dynamic_inputs, decode_dynamic_inputs) as ShapeDtypeStructs."""
+    l, t = dims.n_layers, dims.max_seq
+    hkv, dh = dims.n_kv_heads, dims.head_dim
+    prefill = [
+        jax.ShapeDtypeStruct((chunk,), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((1,), jnp.int32),  # q_start
+        jax.ShapeDtypeStruct((l, t, hkv, dh), jnp.float32),  # kv_k
+        jax.ShapeDtypeStruct((l, t, hkv, dh), jnp.float32),  # kv_v
+    ]
+    decode = [
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # pos
+        jax.ShapeDtypeStruct((batch, l, t, hkv, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, l, t, hkv, dh), jnp.float32),
+    ]
+    return prefill, decode
+
+
+def param_specs(dims: M.ModelDims) -> list:
+    shapes = M.param_shapes(dims)
+    return [
+        jax.ShapeDtypeStruct(shapes[name], jnp.float32)
+        for name in M.PARAM_ORDER
+    ]
+
+
+def lower_entries(dims: M.ModelDims, chunk: int, batch: int):
+    pspecs = param_specs(dims)
+    prefill_in, decode_in = entry_specs(dims, chunk, batch)
+    prefill_hlo = to_hlo_text(
+        jax.jit(make_prefill_fn(dims, chunk)).lower(*pspecs, *prefill_in)
+    )
+    decode_hlo = to_hlo_text(
+        jax.jit(make_decode_fn(dims, batch)).lower(*pspecs, *decode_in)
+    )
+    return prefill_hlo, decode_hlo
+
+
+def write_weights(out_dir: str, dims: M.ModelDims) -> list:
+    """Write weights.bin; return the manifest parameter table."""
+    params = M.init_params(jax.random.PRNGKey(WEIGHT_SEED), dims)
+    table = []
+    offset = 0
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        for name in M.PARAM_ORDER:
+            arr = np.asarray(params[name], dtype="<f4")
+            f.write(arr.tobytes())
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "offset_bytes": offset,
+                    "size_bytes": arr.nbytes,
+                }
+            )
+            offset += arr.nbytes
+    return table
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _shape_list(specs) -> list:
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+    ]
+
+
+def build(out_dir: str, chunk: int, batch: int) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    dims = M.TINY
+
+    prefill_hlo, decode_hlo = lower_entries(dims, chunk, batch)
+    prefill_file = f"prefill_c{chunk}.hlo.txt"
+    decode_file = f"decode_b{batch}.hlo.txt"
+    with open(os.path.join(out_dir, prefill_file), "w") as f:
+        f.write(prefill_hlo)
+    with open(os.path.join(out_dir, decode_file), "w") as f:
+        f.write(decode_hlo)
+
+    param_table = write_weights(out_dir, dims)
+    prefill_in, decode_in = entry_specs(dims, chunk, batch)
+
+    l, t = dims.n_layers, dims.max_seq
+    manifest = {
+        "format_version": 1,
+        "model": {
+            "name": dims.name,
+            "vocab": dims.vocab,
+            "d_model": dims.d_model,
+            "n_layers": dims.n_layers,
+            "n_heads": dims.n_heads,
+            "n_kv_heads": dims.n_kv_heads,
+            "head_dim": dims.head_dim,
+            "d_ff": dims.d_ff,
+            "max_seq": dims.max_seq,
+            "param_count": dims.param_count(),
+        },
+        "weights_file": "weights.bin",
+        "weights_sha256": _sha256(os.path.join(out_dir, "weights.bin")),
+        "params": param_table,
+        "entries": {
+            "prefill": {
+                "file": prefill_file,
+                "chunk": chunk,
+                "dynamic_inputs": _shape_list(prefill_in),
+                "outputs": [
+                    {"shape": [chunk, dims.vocab], "dtype": "float32"},
+                    {
+                        "shape": [l, t, dims.n_kv_heads, dims.head_dim],
+                        "dtype": "float32",
+                    },
+                    {
+                        "shape": [l, t, dims.n_kv_heads, dims.head_dim],
+                        "dtype": "float32",
+                    },
+                ],
+            },
+            "decode": {
+                "file": decode_file,
+                "batch": batch,
+                "dynamic_inputs": _shape_list(decode_in),
+                "outputs": [
+                    {"shape": [batch, dims.vocab], "dtype": "float32"},
+                    {
+                        "shape": [batch, l, t, dims.n_kv_heads, dims.head_dim],
+                        "dtype": "float32",
+                    },
+                    {
+                        "shape": [batch, l, t, dims.n_kv_heads, dims.head_dim],
+                        "dtype": "float32",
+                    },
+                ],
+            },
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"artifacts: {prefill_file} ({len(prefill_hlo)} chars), "
+        f"{decode_file} ({len(decode_hlo)} chars), weights.bin "
+        f"({dims.param_count()} params), manifest.json -> {out_dir}"
+    )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--chunk", type=int, default=DEFAULT_CHUNK)
+    parser.add_argument("--batch", type=int, default=DEFAULT_DECODE_BATCH)
+    args = parser.parse_args()
+    build(args.out_dir, args.chunk, args.batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the Cronus serving stack (build-time only).
+
+``attention`` holds the Pallas kernels; ``ref`` holds the pure-jnp oracles
+they are tested against.
+"""
+
+from compile.kernels.attention import (  # noqa: F401
+    chunked_prefill_attention,
+    decode_attention,
+)
+from compile.kernels import ref  # noqa: F401

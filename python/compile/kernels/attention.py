@@ -1,0 +1,303 @@
+"""Layer-1 Pallas kernels: the serving hot path's attention cores.
+
+Two kernels, mirroring the two iteration roles in a Cronus chunked-prefill
+instance (CPI):
+
+  * ``chunked_prefill_attention`` — a prefill *chunk* of C query tokens
+    attends to the request's KV-cache prefix (flash-attention structure:
+    the KV/context dimension streams through VMEM in blocks with an
+    online softmax).  This is the term the paper models as
+    ``k_ctxp * L(R_i^P2)`` in Eq. 3.
+  * ``decode_attention`` — one query token per request in a decode batch
+    attends to that request's cache (the ``k_ctxd * sum L(R_l^D)`` term;
+    bandwidth-bound matrix-vector work).
+
+Hardware adaptation (paper targets CUDA/vLLM; we target TPU — see
+DESIGN.md §2):
+
+  * The CUDA kernel's threadblock tiling over (query, context) becomes a
+    Pallas ``grid`` over (head, context-block) with ``BlockSpec``-driven
+    HBM→VMEM streaming; block sizes are chosen so Q, K, V tiles and the
+    f32 accumulator fit comfortably in VMEM (≈16 MiB) with room for
+    double buffering.
+  * Warp-level online softmax becomes scratch refs (running max ``m``,
+    denominator ``l``, accumulator ``acc``) carried across the innermost
+    grid dimension — Pallas guarantees sequential iteration over the last
+    grid axis, which is exactly the flash-attention recurrence.
+  * Score and output matmuls use ``preferred_element_type=float32`` so
+    the MXU accumulates in f32 even for bf16 inputs (tensor-core WMMA's
+    f32 accumulate, in TPU terms).
+  * Fully-masked context tiles are skipped with ``pl.when`` — the Pallas
+    analogue of the CUDA kernel's early-exit warps.
+
+Both kernels MUST be lowered with ``interpret=True``: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+Correctness oracle: ``kernels/ref.py`` (pytest sweeps shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default context-block size. 128 keeps a (C=128, BK=128) f32 score tile at
+# 64 KiB and K/V tiles at 128*D_h*4 bytes — ~1 MiB total VMEM at D_h=128,
+# leaving headroom for double buffering. Shrunk automatically for short
+# caches in the wrappers below.
+DEFAULT_KV_BLOCK = 128
+
+_NEG_INF = float("-inf")
+
+
+def _pick_kv_block(t: int, requested: int) -> int:
+    """Largest divisor of ``t`` that is <= requested (>=1)."""
+    bk = min(requested, t)
+    while t % bk != 0:
+        bk -= 1
+    return bk
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill attention
+# ---------------------------------------------------------------------------
+
+
+def _chunked_prefill_kernel(
+    q_start_ref,  # [1] int32 (absolute position of q row 0)
+    q_ref,  # [C, 1, D]
+    k_ref,  # [BK, 1, D]
+    v_ref,  # [BK, 1, D]
+    o_ref,  # [C, 1, D]
+    m_ref,  # scratch [C]   running max
+    l_ref,  # scratch [C]   running denominator
+    acc_ref,  # scratch [C, D] running numerator
+    *,
+    kv_block: int,
+    n_kv_blocks: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c = q_ref.shape[0]
+    d = q_ref.shape[2]
+    q_start = q_start_ref[0]
+    q_pos = q_start + jax.lax.iota(jnp.int32, c)  # [C] absolute positions
+    k_pos = j * kv_block + jax.lax.iota(jnp.int32, kv_block)  # [BK]
+
+    # Early exit: if this context tile lies entirely beyond the last query's
+    # position, it contributes nothing (causal) — skip the matmuls.
+    tile_visible = (j * kv_block) <= (q_start + c - 1)
+
+    @pl.when(tile_visible)
+    def _body():
+        q = q_ref[:, 0, :].astype(jnp.float32)  # [C, D]
+        k = k_ref[:, 0, :].astype(jnp.float32)  # [BK, D]
+        v = v_ref[:, 0, :].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [C, BK]
+        mask = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # Rows that have seen nothing yet and see nothing now keep m=-inf;
+        # guard the rescale so exp(-inf - -inf) never produces NaN.
+        alpha = jnp.where(
+            m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_new)
+        )
+        p = jnp.where(
+            m_new[:, None] == _NEG_INF, 0.0, jnp.exp(s - m_new[:, None])
+        )  # [C, BK]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        # Padded / never-visible rows have l == 0: emit zeros, not NaN.
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / denom[:, None])[:, None, :].astype(
+            o_ref.dtype
+        )
+
+
+def chunked_prefill_attention(
+    q: jnp.ndarray,  # [C, H_q, D_h]
+    k_cache: jnp.ndarray,  # [T, H_kv, D_h]
+    v_cache: jnp.ndarray,  # [T, H_kv, D_h]
+    q_start: jnp.ndarray | int,  # scalar int32
+    *,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Flash-style chunked-prefill attention (see module docstring).
+
+    Matches ``ref.chunked_prefill_attention`` exactly (up to float
+    tolerance).  ``q_start`` may be a traced scalar — it is threaded into
+    the kernel as a tiny int32 array so the same HLO serves every chunk
+    of a request.
+    """
+    c, h_q, d_h = q.shape
+    t, h_kv, _ = k_cache.shape
+    if h_q % h_kv != 0:
+        raise ValueError(f"H_q={h_q} not a multiple of H_kv={h_kv}")
+    group = h_q // h_kv
+    bk = _pick_kv_block(t, kv_block)
+    n_kv_blocks = t // bk
+
+    q_start_arr = jnp.asarray(q_start, dtype=jnp.int32).reshape((1,))
+
+    kernel = functools.partial(
+        _chunked_prefill_kernel, kv_block=bk, n_kv_blocks=n_kv_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(h_q, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, j: (0,)),  # q_start
+            pl.BlockSpec((c, 1, d_h), lambda h, j: (0, h, 0)),  # q
+            pl.BlockSpec(
+                (bk, 1, d_h), lambda h, j, g=group: (j, h // g, 0)
+            ),  # k
+            pl.BlockSpec(
+                (bk, 1, d_h), lambda h, j, g=group: (j, h // g, 0)
+            ),  # v
+        ],
+        out_specs=pl.BlockSpec((c, 1, d_h), lambda h, j: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h_q, d_h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((c,), jnp.float32),  # m: running max
+            pltpu.VMEM((c,), jnp.float32),  # l: running denominator
+            pltpu.VMEM((c, d_h), jnp.float32),  # acc: running numerator
+        ],
+        interpret=interpret,
+    )(q_start_arr, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(
+    pos_ref,  # [1] int32
+    q_ref,  # [1, 1, D]
+    k_ref,  # [1, BK, 1, D]
+    v_ref,  # [1, BK, 1, D]
+    o_ref,  # [1, 1, D]
+    m_ref,  # scratch [1]
+    l_ref,  # scratch [1]
+    acc_ref,  # scratch [D]
+    *,
+    kv_block: int,
+    n_kv_blocks: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = q_ref.shape[2]
+    pos = pos_ref[0]
+    k_pos = j * kv_block + jax.lax.iota(jnp.int32, kv_block)
+
+    # Tiles entirely past the query position are invisible (causal).
+    @pl.when(j * kv_block <= pos)
+    def _body():
+        q = q_ref[0, 0, :].astype(jnp.float32)  # [D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [BK, D]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        s = jax.lax.dot_general(
+            k, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [BK]
+        s = jnp.where(k_pos <= pos, s, _NEG_INF)
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.exp(s - m_new)  # position 0 always visible -> m_new finite
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+        m_ref[0] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / denom)[None, None, :].astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, H_q, D_h]
+    k_cache: jnp.ndarray,  # [B, T, H_kv, D_h]
+    v_cache: jnp.ndarray,  # [B, T, H_kv, D_h]
+    pos: jnp.ndarray,  # [B] int32
+    *,
+    kv_block: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Flash-style decode (single-query) attention over per-request caches.
+
+    The KV block default is larger than prefill's (512 vs 128): decode is
+    bandwidth-bound, so we maximize the KV bytes resident per VMEM fill
+    instead of tiling for the MXU.  Matches ``ref.decode_attention``.
+    """
+    b, h_q, d_h = q.shape
+    _, t, h_kv, _ = k_cache.shape
+    if h_q % h_kv != 0:
+        raise ValueError(f"H_q={h_q} not a multiple of H_kv={h_kv}")
+    group = h_q // h_kv
+    bk = _pick_kv_block(t, kv_block)
+    n_kv_blocks = t // bk
+
+    pos_arr = jnp.asarray(pos, dtype=jnp.int32).reshape((b,))
+
+    kernel = functools.partial(
+        _decode_kernel, kv_block=bk, n_kv_blocks=n_kv_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h_q, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, h, j: (i,)),  # pos
+            pl.BlockSpec((1, 1, d_h), lambda i, h, j: (i, h, 0)),  # q
+            pl.BlockSpec(
+                (1, bk, 1, d_h), lambda i, h, j, g=group: (i, j, h // g, 0)
+            ),
+            pl.BlockSpec(
+                (1, bk, 1, d_h), lambda i, h, j, g=group: (i, j, h // g, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d_h), lambda i, h, j: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h_q, d_h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),  # m
+            pltpu.VMEM((1,), jnp.float32),  # l
+            pltpu.VMEM((d_h,), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k_cache, v_cache)

@@ -1,0 +1,172 @@
+"""Paged decode attention — the vLLM-fidelity variant of the L1 kernel.
+
+The serving engine's KV cache is *paged*: a request's context lives in
+non-contiguous fixed-size blocks, addressed through a per-request block
+table (`rust/src/kvcache` is the Rust side of this contract).  The dense
+`decode_attention` kernel in `attention.py` assumes a contiguous cache;
+this kernel implements the real layout:
+
+  * the KV pool is one big array `[n_blocks, block_size, H_kv, D_h]`
+    shared by all requests;
+  * request ``b``'s context token ``t`` lives at
+    ``pool[block_table[b, t // block_size], t % block_size]``;
+  * the Pallas grid walks each request's block list, using the block
+    table as a *scalar-prefetch* index map so the HBM→VMEM streaming of
+    KV blocks is driven by the table exactly like vLLM's paged attention
+    walks physical blocks — no gather materialization.
+
+TPU adaptation notes (DESIGN.md §2): the CUDA paged-attention kernel
+resolves the block table per warp; here the table lives in SMEM-like
+scalar memory (`PrefetchScalarGridSpec`) and the index_map reads it to
+pick which pool block the next grid step streams — the DMA engine does
+the indirection, the MXU/VPU kernel body is identical to the dense case.
+
+Oracle: ``ref.decode_attention`` after gathering the pages densely
+(`gather_pages`).  interpret=True as always on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def gather_pages(
+    pool: jnp.ndarray,  # [n_blocks, block_size, H_kv, D_h]
+    block_table: jnp.ndarray,  # [B, max_blocks] int32
+) -> jnp.ndarray:
+    """Densify a paged pool into per-request caches (test oracle only).
+
+    Returns ``[B, max_blocks * block_size, H_kv, D_h]``.
+    """
+    b, max_blocks = block_table.shape
+    _, block_size, h_kv, d_h = pool.shape
+    gathered = pool[block_table.reshape(-1)]  # [B*max_blocks, bs, H, D]
+    return gathered.reshape(b, max_blocks * block_size, h_kv, d_h)
+
+
+def _paged_decode_kernel(
+    # scalar-prefetch operands
+    block_table_ref,  # [B, max_blocks] int32 (SMEM)
+    pos_ref,  # [B] int32 (SMEM)
+    # array operands
+    q_ref,  # [1, 1, D]
+    k_ref,  # [1, bs, 1, D]   (pool block selected via index_map)
+    v_ref,  # [1, bs, 1, D]
+    o_ref,  # [1, 1, D]
+    # scratch
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    block_size: int,
+    max_blocks: int,
+):
+    j = pl.program_id(2)
+    b = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = q_ref.shape[2]
+    pos = pos_ref[b]
+    k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+
+    # Blocks entirely beyond the query position are invisible; the
+    # index_map already clamps their fetch, and we skip the math.
+    @pl.when(j * block_size <= pos)
+    def _body():
+        q = q_ref[0, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        s = jax.lax.dot_general(
+            k, q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        s = jnp.where(k_pos <= pos, s, _NEG_INF)
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.exp(s - m_new)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+        m_ref[0] = m_new
+
+    @pl.when(j == max_blocks - 1)
+    def _finalize():
+        l = l_ref[0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / denom)[None, None, :].astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # [B, H_q, D_h]
+    k_pool: jnp.ndarray,  # [n_blocks, block_size, H_kv, D_h]
+    v_pool: jnp.ndarray,  # [n_blocks, block_size, H_kv, D_h]
+    block_table: jnp.ndarray,  # [B, max_blocks] int32 (entries past the
+    #   context may be any valid block id; they are masked)
+    pos: jnp.ndarray,  # [B] int32 — query's absolute position per request
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Flash-style decode attention over a paged KV pool.
+
+    Equivalent to ``ref.decode_attention(q, gather_pages(k_pool, bt),
+    gather_pages(v_pool, bt), pos)`` without materializing the gather.
+    Returns ``[B, H_q, D_h]``.
+    """
+    b, h_q, d_h = q.shape
+    n_blocks, block_size, h_kv, _ = k_pool.shape
+    _, max_blocks = block_table.shape
+    if h_q % h_kv != 0:
+        raise ValueError(f"H_q={h_q} not a multiple of H_kv={h_kv}")
+    group = h_q // h_kv
+
+    block_table = jnp.asarray(block_table, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32).reshape((b,))
+
+    kernel = functools.partial(
+        _paged_decode_kernel, block_size=block_size, max_blocks=max_blocks
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_table, pos
+        grid=(b, h_q, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, d_h), lambda i, h, j, bt, p: (i, h, 0)),  # q
+            # KV pool blocks are selected *through the block table*: grid
+            # step (i, ·, j) streams pool block block_table[i, j].
+            pl.BlockSpec(
+                (1, block_size, 1, d_h),
+                lambda i, h, j, bt, p, g=group: (bt[i, j], 0, h // g, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_size, 1, d_h),
+                lambda i, h, j, bt, p, g=group: (bt[i, j], 0, h // g, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d_h), lambda i, h, j, bt, p: (i, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((d_h,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h_q, d_h), q.dtype),
+        interpret=interpret,
+    )(block_table, pos, q, k_pool, v_pool)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match the corresponding function here to float tolerance
+(see python/tests/test_kernel.py, which sweeps shapes/dtypes with
+hypothesis).
+
+Conventions (shared with kernels/*.py and model.py):
+  * A request's KV cache is a pair of arrays ``k_cache, v_cache`` of shape
+    ``[T, H_kv, D_h]`` (``T`` = max sequence length).  Positions
+    ``[0, ctx_end)`` are valid; everything else is padding and must be
+    masked out, never read.
+  * Chunked prefill processes a chunk of ``C`` query tokens whose absolute
+    positions are ``q_start .. q_start + C - 1``.  The chunk's own KV has
+    already been written into the cache (functional update in the model),
+    so query ``i`` attends to cache positions ``j <= q_start + i``.
+  * Decode processes one query token per request at position ``pos``; it
+    attends to cache positions ``j <= pos``.
+  * Grouped-query attention: ``H_q`` query heads share ``H_kv`` KV heads,
+    group size ``G = H_q // H_kv``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _gqa_expand(x: jnp.ndarray, n_q_heads: int) -> jnp.ndarray:
+    """Expand KV heads [T, H_kv, D] -> [T, H_q, D] by repetition (GQA)."""
+    t, h_kv, d = x.shape
+    group = n_q_heads // h_kv
+    return jnp.repeat(x, group, axis=1)
+
+
+def chunked_prefill_attention(
+    q: jnp.ndarray,  # [C, H_q, D_h]
+    k_cache: jnp.ndarray,  # [T, H_kv, D_h]
+    v_cache: jnp.ndarray,  # [T, H_kv, D_h]
+    q_start: jnp.ndarray | int,  # scalar: absolute position of q[0]
+) -> jnp.ndarray:
+    """Causal attention of a prefill chunk against the KV cache prefix.
+
+    Query token ``i`` (absolute position ``q_start + i``) attends to cache
+    positions ``j`` with ``j <= q_start + i``.  Returns ``[C, H_q, D_h]``.
+    """
+    c, h_q, d_h = q.shape
+    t = k_cache.shape[0]
+    k = _gqa_expand(k_cache, h_q)  # [T, H_q, D]
+    v = _gqa_expand(v_cache, h_q)
+
+    scale = 1.0 / jnp.sqrt(jnp.array(d_h, dtype=jnp.float32))
+    # scores[i, h, j] in f32 regardless of input dtype.
+    scores = jnp.einsum(
+        "chd,thd->cht", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+
+    q_pos = q_start + jnp.arange(c)[:, None, None]  # [C,1,1]
+    k_pos = jnp.arange(t)[None, None, :]  # [1,1,T]
+    mask = k_pos <= q_pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("cht,thd->chd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, H_q, D_h]  (one query token per request)
+    k_cache: jnp.ndarray,  # [B, T, H_kv, D_h]
+    v_cache: jnp.ndarray,  # [B, T, H_kv, D_h]
+    pos: jnp.ndarray,  # [B] int32: query's absolute position per request
+) -> jnp.ndarray:
+    """Single-token (decode) attention per request.  Returns [B, H_q, D_h].
+
+    Request ``b``'s query attends to cache positions ``j <= pos[b]`` — the
+    cache slot at ``pos[b]`` holds the query token's own KV.
+    """
+    b, h_q, d_h = q.shape
+    t = k_cache.shape[1]
+    group = h_q // k_cache.shape[2]
+    k = jnp.repeat(k_cache, group, axis=2)  # [B, T, H_q, D]
+    v = jnp.repeat(v_cache, group, axis=2)
+
+    scale = 1.0 / jnp.sqrt(jnp.array(d_h, dtype=jnp.float32))
+    scores = jnp.einsum(
+        "bhd,bthd->bht", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(t)[None, None, :] <= pos[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bht,bthd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,392 @@
+"""Layer-2 JAX model: a LLaMA-style decoder-only transformer.
+
+This is the *compute graph* the Rust coordinator serves.  It exposes the
+two entry points a chunked-prefill serving engine needs — exactly the two
+iteration roles of a Cronus chunked-prefill instance (CPI):
+
+  * ``prefill_chunk`` — run one chunk of C prompt tokens for a single
+    request against its KV cache (writes the chunk's KV, returns logits
+    for every chunk position).  Repeated calls with advancing ``q_start``
+    implement chunked prefill; the *first* call on the CPI side of Cronus
+    starts from the ``q_start`` the low-end GPU's partial prefill reached,
+    with the prefix KV arriving via the KV-transfer path.
+  * ``decode_step`` — one autoregressive step for a batch of B requests,
+    each with its own KV cache and position.
+
+Both call the Layer-1 Pallas kernels for their attention cores (set
+``use_pallas=False`` to swap in the jnp oracles; tests compare the two).
+
+The model is deliberately parameterized (``ModelDims``) so the same code
+describes LLaMA3-8B / Qwen2-7B geometries (used by the Rust performance
+model via the artifact manifest) and the tiny configuration that is
+actually AOT-compiled and executed end-to-end (``TINY``).
+
+Build-time only: ``aot.py`` lowers ``jax.jit`` of these functions to HLO
+text once; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as kernels
+from compile.kernels import ref as kernels_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDims:
+    """Geometry of a decoder-only transformer (LLaMA family)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    max_seq: int  # KV-cache capacity per request (padded length)
+    rope_theta: float = 10000.0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Total parameter count (embeddings + blocks + head)."""
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        per_layer = (
+            d * self.q_dim  # wq
+            + 2 * d * self.kv_dim  # wk, wv
+            + self.q_dim * d  # wo
+            + 3 * d * f  # gate, up, down
+            + 2 * d  # norms
+        )
+        return self.vocab * d * 2 + l * per_layer + d
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """KV-cache bytes per context token (the paper's memory currency)."""
+        return 2 * self.n_layers * self.kv_dim * dtype_bytes
+
+
+# The tiny model that is actually AOT-compiled and executed end-to-end.
+TINY = ModelDims(
+    name="tiny-llama",
+    vocab=2048,
+    d_model=256,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=704,
+    max_seq=512,
+)
+
+# Geometry descriptors for the paper's evaluation models.  These are not
+# compiled; they parameterize the Rust performance model (FLOPs / bytes).
+LLAMA3_8B = ModelDims(
+    name="llama3-8b",
+    vocab=128256,
+    d_model=4096,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    max_seq=8192,
+    rope_theta=500000.0,
+)
+QWEN2_7B = ModelDims(
+    name="qwen2-7b",
+    vocab=152064,
+    d_model=3584,
+    n_layers=28,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    max_seq=8192,
+    rope_theta=1000000.0,
+)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+# Flattened parameter order — this IS the wire format: aot.py writes
+# weights.bin in this order and the Rust runtime feeds the HLO executable's
+# inputs in this order.  Do not reorder without bumping the manifest.
+PARAM_ORDER: List[str] = [
+    "embed",  # [V, D]
+    "attn_norm",  # [L, D]
+    "wq",  # [L, D, Hq*Dh]
+    "wk",  # [L, D, Hkv*Dh]
+    "wv",  # [L, D, Hkv*Dh]
+    "wo",  # [L, Hq*Dh, D]
+    "mlp_norm",  # [L, D]
+    "w_gate",  # [L, D, F]
+    "w_up",  # [L, D, F]
+    "w_down",  # [L, F, D]
+    "final_norm",  # [D]
+    "lm_head",  # [D, V]
+]
+
+Params = Dict[str, jnp.ndarray]
+
+
+def param_shapes(dims: ModelDims) -> Dict[str, Tuple[int, ...]]:
+    d, f, l, v = dims.d_model, dims.d_ff, dims.n_layers, dims.vocab
+    return {
+        "embed": (v, d),
+        "attn_norm": (l, d),
+        "wq": (l, d, dims.q_dim),
+        "wk": (l, d, dims.kv_dim),
+        "wv": (l, d, dims.kv_dim),
+        "wo": (l, dims.q_dim, d),
+        "mlp_norm": (l, d),
+        "w_gate": (l, d, f),
+        "w_up": (l, d, f),
+        "w_down": (l, f, d),
+        "final_norm": (d,),
+        "lm_head": (d, v),
+    }
+
+
+def init_params(key: jax.Array, dims: ModelDims) -> Params:
+    """Scaled-gaussian init (good enough for a synthetic serving model)."""
+    shapes = param_shapes(dims)
+    params: Params = {}
+    for name in PARAM_ORDER:
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * scale
+            )
+    return params
+
+
+def params_as_tuple(params: Params) -> Tuple[jnp.ndarray, ...]:
+    return tuple(params[name] for name in PARAM_ORDER)
+
+
+def params_from_tuple(flat: Tuple[jnp.ndarray, ...]) -> Params:
+    return dict(zip(PARAM_ORDER, flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary position embedding.  x: [..., n_heads, head_dim]; positions
+    broadcastable to x.shape[:-2]."""
+    head_dim = x.shape[-1]
+    freqs = 1.0 / (
+        theta
+        ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )  # [Dh/2]
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [...,1,Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x1 * sin + x2 * cos
+    out = jnp.stack([rot1, rot2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def _swiglu(h: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    return (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Entry point 1: chunked prefill (single request)
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(
+    params: Params,
+    dims: ModelDims,
+    tokens: jnp.ndarray,  # [C] int32 (padded chunk)
+    q_start: jnp.ndarray,  # scalar int32: absolute position of tokens[0]
+    kv_k: jnp.ndarray,  # [L, T, H_kv, D_h]
+    kv_v: jnp.ndarray,  # [L, T, H_kv, D_h]
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One chunked-prefill iteration for one request.
+
+    Writes the chunk's KV into the cache at ``q_start`` and returns
+    ``(logits [C, vocab] f32, kv_k', kv_v')``.  The caller (Rust engine)
+    chains calls with advancing ``q_start`` and, on the final chunk,
+    samples the request's first output token from the last valid row.
+    """
+    c = tokens.shape[0]
+    x = params["embed"][tokens]  # [C, D]
+    positions = q_start + jnp.arange(c, dtype=jnp.int32)
+
+    def layer(carry, xs):
+        x = carry
+        (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down,
+         k_cache, v_cache) = xs
+        h = rmsnorm(x, attn_norm)
+        q = (h @ wq).reshape(c, dims.n_heads, dims.head_dim)
+        k = (h @ wk).reshape(c, dims.n_kv_heads, dims.head_dim)
+        v = (h @ wv).reshape(c, dims.n_kv_heads, dims.head_dim)
+        q = rope(q, positions, dims.rope_theta)
+        k = rope(k, positions, dims.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (q_start, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (q_start, 0, 0))
+        if use_pallas:
+            attn = kernels.chunked_prefill_attention(
+                q, k_cache, v_cache, q_start, interpret=interpret
+            )
+        else:
+            attn = kernels_ref.chunked_prefill_attention(
+                q, k_cache, v_cache, q_start
+            )
+        x = x + attn.reshape(c, dims.q_dim) @ wo
+        x = x + _swiglu(rmsnorm(x, mlp_norm), w_gate, w_up, w_down)
+        return x, (k_cache, v_cache)
+
+    xs = (
+        params["attn_norm"], params["wq"], params["wk"], params["wv"],
+        params["wo"], params["mlp_norm"], params["w_gate"], params["w_up"],
+        params["w_down"], kv_k, kv_v,
+    )
+    x, (kv_k_new, kv_v_new) = jax.lax.scan(layer, x, xs)
+    logits = (
+        rmsnorm(x, params["final_norm"]) @ params["lm_head"]
+    ).astype(jnp.float32)
+    return logits, kv_k_new, kv_v_new
+
+
+# ---------------------------------------------------------------------------
+# Entry point 2: batched decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Params,
+    dims: ModelDims,
+    tokens: jnp.ndarray,  # [B] int32
+    pos: jnp.ndarray,  # [B] int32: position each token is written at
+    kv_k: jnp.ndarray,  # [B, L, T, H_kv, D_h]
+    kv_v: jnp.ndarray,  # [B, L, T, H_kv, D_h]
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One autoregressive decode iteration for a batch of B requests.
+
+    Request ``b`` contributes its previous output token ``tokens[b]`` at
+    position ``pos[b]``; the step writes that token's KV and returns the
+    logits for the *next* token: ``(logits [B, vocab] f32, kv')``.
+    Inactive batch slots are handled by the caller (pos=0, output row
+    ignored).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens]  # [B, D]
+
+    def write_at(cache_layer, new, positions):
+        # cache_layer [B, T, Hkv, Dh], new [B, Hkv, Dh]
+        def one(cache_b, new_b, p):
+            return jax.lax.dynamic_update_slice(
+                cache_b, new_b[None, :, :], (p, 0, 0)
+            )
+
+        return jax.vmap(one)(cache_layer, new, positions)
+
+    def layer(carry, xs):
+        x = carry
+        (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down,
+         k_cache, v_cache) = xs  # caches [B, T, Hkv, Dh]
+        h = rmsnorm(x, attn_norm)
+        q = (h @ wq).reshape(b, dims.n_heads, dims.head_dim)
+        k = (h @ wk).reshape(b, dims.n_kv_heads, dims.head_dim)
+        v = (h @ wv).reshape(b, dims.n_kv_heads, dims.head_dim)
+        q = rope(q, pos, dims.rope_theta)
+        k = rope(k, pos, dims.rope_theta)
+        k_cache = write_at(k_cache, k, pos)
+        v_cache = write_at(v_cache, v, pos)
+        if use_pallas:
+            attn = kernels.decode_attention(
+                q, k_cache, v_cache, pos, interpret=interpret
+            )
+        else:
+            attn = kernels_ref.decode_attention(q, k_cache, v_cache, pos)
+        x = x + attn.reshape(b, dims.q_dim) @ wo
+        x = x + _swiglu(rmsnorm(x, mlp_norm), w_gate, w_up, w_down)
+        return x, (k_cache, v_cache)
+
+    # Scan over layers: move the per-request layer axis to the front.
+    kv_k_l = jnp.moveaxis(kv_k, 1, 0)  # [L, B, T, Hkv, Dh]
+    kv_v_l = jnp.moveaxis(kv_v, 1, 0)
+    xs = (
+        params["attn_norm"], params["wq"], params["wk"], params["wv"],
+        params["wo"], params["mlp_norm"], params["w_gate"], params["w_up"],
+        params["w_down"], kv_k_l, kv_v_l,
+    )
+    x, (kv_k_new, kv_v_new) = jax.lax.scan(layer, x, xs)
+    logits = (
+        rmsnorm(x, params["final_norm"]) @ params["lm_head"]
+    ).astype(jnp.float32)
+    return logits, jnp.moveaxis(kv_k_new, 0, 1), jnp.moveaxis(kv_v_new, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Reference full-sequence forward (oracle for the chunked path)
+# ---------------------------------------------------------------------------
+
+
+def full_forward_ref(
+    params: Params, dims: ModelDims, tokens: jnp.ndarray
+) -> jnp.ndarray:
+    """Plain (non-incremental) causal forward over a whole sequence.
+
+    Oracle: running ``prefill_chunk`` over all chunks followed by
+    ``decode_step`` per token must reproduce these logits.  Uses the jnp
+    reference kernels and no KV cache at all.
+    """
+    n = tokens.shape[0]
+    x = params["embed"][tokens]
+    positions = jnp.arange(n, dtype=jnp.int32)
+    for li in range(dims.n_layers):
+        h = rmsnorm(x, params["attn_norm"][li])
+        q = (h @ params["wq"][li]).reshape(n, dims.n_heads, dims.head_dim)
+        k = (h @ params["wk"][li]).reshape(n, dims.n_kv_heads, dims.head_dim)
+        v = (h @ params["wv"][li]).reshape(n, dims.n_kv_heads, dims.head_dim)
+        q = rope(q, positions, dims.rope_theta)
+        k = rope(k, positions, dims.rope_theta)
+        attn = kernels_ref.chunked_prefill_attention(q, k, v, 0)
+        x = x + attn.reshape(n, dims.q_dim) @ params["wo"][li]
+        x = x + _swiglu(
+            rmsnorm(x, params["mlp_norm"][li]),
+            params["w_gate"][li],
+            params["w_up"][li],
+            params["w_down"][li],
+        )
+    return (
+        rmsnorm(x, params["final_norm"]) @ params["lm_head"]
+    ).astype(jnp.float32)

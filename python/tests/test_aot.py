@@ -1,0 +1,112 @@
+"""AOT pipeline tests: manifest consistency and HLO-text invariants."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+pytestmark = pytest.mark.skipif(
+    not _have_artifacts(), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_matches_tiny_dims(manifest):
+    m = manifest["model"]
+    assert m["name"] == M.TINY.name
+    assert m["n_layers"] == M.TINY.n_layers
+    assert m["vocab"] == M.TINY.vocab
+    assert m["param_count"] == M.TINY.param_count()
+
+
+def test_param_table_is_contiguous_and_ordered(manifest):
+    offset = 0
+    names = []
+    for entry in manifest["params"]:
+        assert entry["offset_bytes"] == offset
+        size = int(np.prod(entry["shape"])) * 4
+        assert entry["size_bytes"] == size
+        offset += size
+        names.append(entry["name"])
+    assert names == M.PARAM_ORDER
+    bin_size = os.path.getsize(os.path.join(ART, manifest["weights_file"]))
+    assert bin_size == offset
+
+
+def test_weights_bin_matches_seeded_init(manifest):
+    """weights.bin must be reproducible from the fixed seed."""
+    params = M.init_params(jax.random.PRNGKey(aot.WEIGHT_SEED), M.TINY)
+    raw = np.fromfile(os.path.join(ART, manifest["weights_file"]), dtype="<f4")
+    offset = 0
+    for name in M.PARAM_ORDER:
+        arr = np.asarray(params[name], np.float32).ravel()
+        np.testing.assert_array_equal(raw[offset : offset + arr.size], arr)
+        offset += arr.size
+
+
+@pytest.mark.parametrize("entry", ["prefill", "decode"])
+def test_hlo_text_has_entry_computation(manifest, entry):
+    path = os.path.join(ART, manifest["entries"][entry]["file"])
+    with open(path) as f:
+        text = f.read()
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # Interchange is text: a serialized proto would not be valid UTF-8 here.
+    assert text.isprintable() or "\n" in text
+
+
+def test_hlo_parameter_count(manifest):
+    """HLO entry must declare len(PARAM_ORDER) + 4 dynamic parameters."""
+    for entry in ["prefill", "decode"]:
+        path = os.path.join(ART, manifest["entries"][entry]["file"])
+        with open(path) as f:
+            text = f.read()
+        entry_block = text[text.index("ENTRY") :]
+        entry_block = entry_block[: entry_block.index("\n}")]
+        n_params = entry_block.count("parameter(")
+        assert n_params == len(M.PARAM_ORDER) + 4
+
+
+def test_entry_output_shapes(manifest):
+    pre = manifest["entries"]["prefill"]
+    assert pre["outputs"][0]["shape"] == [pre["chunk"], M.TINY.vocab]
+    dec = manifest["entries"]["decode"]
+    assert dec["outputs"][0]["shape"] == [dec["batch"], M.TINY.vocab]
+    kv_shape = [
+        M.TINY.n_layers,
+        M.TINY.max_seq,
+        M.TINY.n_kv_heads,
+        M.TINY.head_dim,
+    ]
+    assert pre["outputs"][1]["shape"] == kv_shape
+    assert dec["outputs"][1]["shape"] == [dec["batch"]] + kv_shape
+
+
+def test_lowering_is_deterministic():
+    """Same dims -> byte-identical HLO text (reproducible artifacts)."""
+    dims = M.ModelDims(
+        name="t", vocab=64, d_model=32, n_layers=1, n_heads=2,
+        n_kv_heads=1, head_dim=16, d_ff=48, max_seq=32,
+    )
+    a, _ = aot.lower_entries(dims, chunk=8, batch=2)
+    b, _ = aot.lower_entries(dims, chunk=8, batch=2)
+    assert a == b

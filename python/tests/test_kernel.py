@@ -1,0 +1,205 @@
+"""Kernel vs reference oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/dtypes of both Pallas kernels and asserts
+allclose against the pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return (
+        dict(rtol=2e-5, atol=2e-5)
+        if dtype == jnp.float32
+        else dict(rtol=2e-2, atol=2e-2)
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked_prefill_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    c=st.sampled_from([1, 3, 8, 16]),
+    h_kv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    d_h=st.sampled_from([8, 16, 32]),
+    t_blocks=st.integers(min_value=1, max_value=4),
+    kv_block=st.sampled_from([8, 16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    q_start_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_chunked_prefill_matches_ref(
+    c, h_kv, group, d_h, t_blocks, kv_block, dtype, q_start_frac, seed
+):
+    t = max(kv_block * t_blocks, c)
+    h_q = h_kv * group
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (c, h_q, d_h), dtype)
+    k = _rand(rng, (t, h_kv, d_h), dtype)
+    v = _rand(rng, (t, h_kv, d_h), dtype)
+    q_start = int(q_start_frac * (t - c))
+
+    out = A.chunked_prefill_attention(q, k, v, q_start, kv_block=kv_block)
+    ref = R.chunked_prefill_attention(q, k, v, q_start)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_chunked_prefill_q_start_zero_first_token():
+    """First chunk, first token: attends only to itself."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (1, 2, 8), jnp.float32)
+    k = _rand(rng, (16, 1, 8), jnp.float32)
+    v = _rand(rng, (16, 1, 8), jnp.float32)
+    out = A.chunked_prefill_attention(q, k, v, 0, kv_block=8)
+    # Softmax over a single visible position == that position's V.
+    expected = np.broadcast_to(np.asarray(v[0]), (1, 2, 8))
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_ignores_padding_beyond_context():
+    """Garbage in cache positions the causal mask hides must not leak."""
+    rng = np.random.default_rng(1)
+    c, t = 4, 32
+    q = _rand(rng, (c, 2, 8), jnp.float32)
+    k = _rand(rng, (t, 1, 8), jnp.float32)
+    v = _rand(rng, (t, 1, 8), jnp.float32)
+    q_start = 10
+    out1 = A.chunked_prefill_attention(q, k, v, q_start, kv_block=8)
+    # Poison everything after the last visible position.
+    vis = q_start + c
+    k2 = k.at[vis:].set(1e9)
+    v2 = v.at[vis:].set(-1e9)
+    out2 = A.chunked_prefill_attention(q, k2, v2, q_start, kv_block=8)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+def test_chunked_prefill_traced_q_start_jit():
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (8, 4, 16), jnp.float32)
+    k = _rand(rng, (64, 2, 16), jnp.float32)
+    v = _rand(rng, (64, 2, 16), jnp.float32)
+    f = jax.jit(
+        lambda q, k, v, s: A.chunked_prefill_attention(q, k, v, s, kv_block=16)
+    )
+    for s in [0, 13, 56]:
+        np.testing.assert_allclose(
+            np.asarray(f(q, k, v, jnp.int32(s))),
+            np.asarray(R.chunked_prefill_attention(q, k, v, s)),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+
+def test_chunked_prefill_rejects_bad_heads():
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (4, 3, 8), jnp.float32)  # 3 q heads
+    k = _rand(rng, (16, 2, 8), jnp.float32)  # 2 kv heads -> not divisible
+    v = k
+    with pytest.raises(ValueError):
+        A.chunked_prefill_attention(q, k, v, 0)
+
+
+def test_kv_block_not_dividing_t():
+    """kv_block is shrunk to a divisor of T automatically."""
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (4, 2, 8), jnp.float32)
+    k = _rand(rng, (48, 1, 8), jnp.float32)  # 48 not divisible by 32
+    v = _rand(rng, (48, 1, 8), jnp.float32)
+    out = A.chunked_prefill_attention(q, k, v, 5, kv_block=32)
+    ref = R.chunked_prefill_attention(q, k, v, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 5, 8]),
+    h_kv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    d_h=st.sampled_from([8, 16, 32]),
+    t_blocks=st.integers(min_value=1, max_value=4),
+    kv_block=st.sampled_from([8, 16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_decode_matches_ref(b, h_kv, group, d_h, t_blocks, kv_block, dtype, seed):
+    t = kv_block * t_blocks
+    h_q = h_kv * group
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h_q, d_h), dtype)
+    k = _rand(rng, (b, t, h_kv, d_h), dtype)
+    v = _rand(rng, (b, t, h_kv, d_h), dtype)
+    pos = jnp.asarray(rng.integers(0, t, size=(b,)), jnp.int32)
+
+    out = A.decode_attention(q, k, v, pos, kv_block=kv_block)
+    ref = R.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_pos_zero_reads_only_slot_zero():
+    rng = np.random.default_rng(5)
+    q = _rand(rng, (2, 2, 8), jnp.float32)
+    k = _rand(rng, (2, 16, 1, 8), jnp.float32)
+    v = _rand(rng, (2, 16, 1, 8), jnp.float32)
+    pos = jnp.zeros((2,), jnp.int32)
+    out = A.decode_attention(q, k, v, pos, kv_block=8)
+    expected = np.broadcast_to(np.asarray(v[:, 0]), (2, 2, 8))
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_per_request_isolation():
+    """Changing one request's cache must not affect another's output."""
+    rng = np.random.default_rng(6)
+    q = _rand(rng, (3, 4, 16), jnp.float32)
+    k = _rand(rng, (3, 32, 2, 16), jnp.float32)
+    v = _rand(rng, (3, 32, 2, 16), jnp.float32)
+    pos = jnp.asarray([31, 7, 15], jnp.int32)
+    out1 = A.decode_attention(q, k, v, pos, kv_block=16)
+    k2 = k.at[1].set(rng.normal(size=(32, 2, 16)).astype(np.float32))
+    out2 = A.decode_attention(q, k2, v, pos, kv_block=16)
+    np.testing.assert_allclose(np.asarray(out1[0]), np.asarray(out2[0]))
+    np.testing.assert_allclose(np.asarray(out1[2]), np.asarray(out2[2]))
+    assert not np.allclose(np.asarray(out1[1]), np.asarray(out2[1]))
+
+
+def test_decode_traced_pos_jit():
+    rng = np.random.default_rng(7)
+    q = _rand(rng, (4, 4, 16), jnp.float32)
+    k = _rand(rng, (4, 64, 2, 16), jnp.float32)
+    v = _rand(rng, (4, 64, 2, 16), jnp.float32)
+    f = jax.jit(lambda q, k, v, p: A.decode_attention(q, k, v, p, kv_block=16))
+    pos = jnp.asarray([0, 63, 31, 12], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(f(q, k, v, pos)),
+        np.asarray(R.decode_attention(q, k, v, pos)),
+        rtol=2e-5,
+        atol=2e-5,
+    )

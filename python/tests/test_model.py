@@ -1,0 +1,200 @@
+"""Layer-2 model tests: the chunked/incremental serving path must
+reproduce the plain full-sequence forward, with Pallas or jnp kernels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+# A smaller-than-TINY config to keep interpret-mode Pallas fast in CI.
+TEST_DIMS = M.ModelDims(
+    name="test-llama",
+    vocab=128,
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    max_seq=64,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), TEST_DIMS)
+
+
+def _empty_kv(dims, batch=None):
+    shape = (dims.n_layers, dims.max_seq, dims.n_kv_heads, dims.head_dim)
+    if batch is not None:
+        shape = (batch,) + shape
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _run_chunked_prefill(params, dims, tokens, chunk, use_pallas):
+    """Feed `tokens` through prefill_chunk in chunks; return last logits + kv."""
+    kv_k, kv_v = _empty_kv(dims)
+    n = tokens.shape[0]
+    logits = None
+    start = 0
+    while start < n:
+        n_valid = min(chunk, n - start)
+        padded = jnp.zeros((chunk,), jnp.int32)
+        padded = padded.at[:n_valid].set(tokens[start : start + n_valid])
+        logits, kv_k, kv_v = M.prefill_chunk(
+            params,
+            dims,
+            padded,
+            jnp.int32(start),
+            kv_k,
+            kv_v,
+            use_pallas=use_pallas,
+        )
+        last_row = logits[n_valid - 1]
+        start += n_valid
+    return last_row, kv_k, kv_v
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("n_tokens,chunk", [(7, 8), (16, 8), (21, 8)])
+def test_chunked_prefill_matches_full_forward(params, use_pallas, n_tokens, chunk):
+    rng = np.random.default_rng(42)
+    tokens = jnp.asarray(
+        rng.integers(0, TEST_DIMS.vocab, size=(n_tokens,)), jnp.int32
+    )
+    full = M.full_forward_ref(params, TEST_DIMS, tokens)
+    last, _, _ = _run_chunked_prefill(params, TEST_DIMS, tokens, chunk, use_pallas)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full[-1]), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_decode_continues_prefill(params, use_pallas):
+    """prefill(tokens[:k]) + decode_step over tokens[k:] == full forward."""
+    rng = np.random.default_rng(7)
+    n, k, chunk = 12, 8, 8
+    tokens = jnp.asarray(rng.integers(0, TEST_DIMS.vocab, size=(n,)), jnp.int32)
+    full = M.full_forward_ref(params, TEST_DIMS, tokens)
+
+    _, kv_k, kv_v = _run_chunked_prefill(
+        params, TEST_DIMS, tokens[:k], chunk, use_pallas
+    )
+    # Batch of 1 padded to 2 (exercises inactive-slot handling).
+    b = 2
+    kv_k_b = jnp.stack([kv_k, jnp.zeros_like(kv_k)])
+    kv_v_b = jnp.stack([kv_v, jnp.zeros_like(kv_v)])
+    logits = None
+    for i in range(k, n):
+        toks = jnp.asarray([tokens[i], 0], jnp.int32)
+        pos = jnp.asarray([i, 0], jnp.int32)
+        logits, kv_k_b, kv_v_b = M.decode_step(
+            params, TEST_DIMS, toks, pos, kv_k_b, kv_v_b, use_pallas=use_pallas
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits[0]), np.asarray(full[-1]), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_decode_batch_isolation(params):
+    """Two requests decoded together == each decoded alone."""
+    rng = np.random.default_rng(9)
+    t0 = jnp.asarray(rng.integers(0, TEST_DIMS.vocab, size=(6,)), jnp.int32)
+    t1 = jnp.asarray(rng.integers(0, TEST_DIMS.vocab, size=(9,)), jnp.int32)
+    _, k0, v0 = _run_chunked_prefill(params, TEST_DIMS, t0, 8, False)
+    _, k1, v1 = _run_chunked_prefill(params, TEST_DIMS, t1, 8, False)
+
+    def solo(kv_k, kv_v, tok, pos):
+        l, kk, vv = M.decode_step(
+            params,
+            TEST_DIMS,
+            jnp.asarray([tok], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+            kv_k[None],
+            kv_v[None],
+            use_pallas=False,
+        )
+        return l[0]
+
+    l0 = solo(k0, v0, 5, 6)
+    l1 = solo(k1, v1, 17, 9)
+    batched, _, _ = M.decode_step(
+        params,
+        TEST_DIMS,
+        jnp.asarray([5, 17], jnp.int32),
+        jnp.asarray([6, 9], jnp.int32),
+        jnp.stack([k0, k1]),
+        jnp.stack([v0, v1]),
+        use_pallas=False,
+    )
+    np.testing.assert_allclose(np.asarray(batched[0]), np.asarray(l0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(batched[1]), np.asarray(l1), rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_shapes(params):
+    kv_k, kv_v = _empty_kv(TEST_DIMS)
+    tokens = jnp.zeros((8,), jnp.int32)
+    logits, k, v = M.prefill_chunk(
+        params, TEST_DIMS, tokens, jnp.int32(0), kv_k, kv_v, use_pallas=False
+    )
+    assert logits.shape == (8, TEST_DIMS.vocab)
+    assert logits.dtype == jnp.float32
+    assert k.shape == kv_k.shape and v.shape == kv_v.shape
+
+
+def test_decode_shapes(params):
+    kv_k, kv_v = _empty_kv(TEST_DIMS, batch=3)
+    logits, k, v = M.decode_step(
+        params,
+        TEST_DIMS,
+        jnp.zeros((3,), jnp.int32),
+        jnp.zeros((3,), jnp.int32),
+        kv_k,
+        kv_v,
+        use_pallas=False,
+    )
+    assert logits.shape == (3, TEST_DIMS.vocab)
+    assert k.shape == kv_k.shape
+
+
+def test_param_count_formula():
+    """param_count() must equal the sum of actual array sizes."""
+    shapes = M.param_shapes(TEST_DIMS)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert TEST_DIMS.param_count() == total
+
+
+def test_kv_bytes_per_token():
+    # 2 (K,V) * L * kv_dim * dtype_bytes
+    assert TEST_DIMS.kv_bytes_per_token(2) == 2 * 2 * 32 * 2
+    assert M.LLAMA3_8B.kv_bytes_per_token(2) == 2 * 32 * 1024 * 2
+
+
+def test_rope_position_zero_is_identity():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 2, 16)), jnp.float32)
+    out = M.rope(x, jnp.zeros((4,), jnp.int32), 10000.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 2, 16)), jnp.float32)
+    out = M.rope(x, jnp.asarray([0, 3, 100, 511], jnp.int32), 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_paper_model_geometries():
+    """The descriptor constants must match the published configs."""
+    assert M.LLAMA3_8B.n_layers == 32 and M.LLAMA3_8B.d_model == 4096
+    assert M.QWEN2_7B.n_layers == 28 and M.QWEN2_7B.d_model == 3584
+    # ~8B / ~7.6B params
+    assert 7.5e9 < M.LLAMA3_8B.param_count() < 8.5e9
+    assert 7.0e9 < M.QWEN2_7B.param_count() < 8.2e9

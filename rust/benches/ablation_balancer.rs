@@ -1,0 +1,72 @@
+//! Ablation: how much of Cronus's win comes from Algorithm 1?
+//!
+//! Compares the balanced split against fixed-fraction splits, full
+//! disaggregation (split = whole prompt), and an idealized PP without the
+//! vLLM scheduler barrier — the design choices DESIGN.md calls out.
+//!
+//! ```bash
+//! cargo bench --bench ablation_balancer
+//! ```
+
+use cronus::baselines::pp::PpSystem;
+use cronus::benchkit::Table;
+use cronus::config::DeploymentConfig;
+use cronus::cronus::balancer::SplitPolicy;
+use cronus::cronus::frontend::CronusSystem;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::spec::{A10, A100};
+use cronus::systems::ServingSystem;
+use cronus::workload::arrival::{stamp, ArrivalProcess};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+
+fn main() {
+    let n = std::env::var("CRONUS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500usize);
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    let trace = generate(n, &AzureTraceConfig::default(), 42);
+    let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+
+    let mut table = Table::new(
+        format!("Balancer ablation (A100+A10, LLaMA3-8B, {n} requests, all-at-once)"),
+        &["Policy", "thpt (req/s)", "TTFT p99 (s)", "TBT p99 (s)"],
+    );
+    let mut run = |label: &str, sys: &mut dyn ServingSystem| {
+        let out = sys.run(&trace);
+        table.row(vec![
+            label.to_string(),
+            format!("{:.2}", out.report.throughput_rps),
+            format!("{:.3}", out.report.ttft_p99_s),
+            format!("{:.4}", out.report.tbt_p99_s),
+        ]);
+    };
+
+    run(
+        "Balanced (Algorithm 1)",
+        &mut CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "cronus"),
+    );
+    for frac in [0.25, 0.5, 0.75] {
+        run(
+            &format!("Fixed split {frac}"),
+            &mut CronusSystem::new(
+                cfg.clone(),
+                SplitPolicy::FixedFraction(frac),
+                false,
+                "fixed",
+            ),
+        );
+    }
+    run(
+        "Full split (= Disagg. L-H)",
+        &mut CronusSystem::new(cfg.clone(), SplitPolicy::Full, false, "full"),
+    );
+    run("PP with vLLM sync barrier", &mut PpSystem::new(cfg.clone()));
+    run(
+        "PP idealized (no barrier)",
+        &mut PpSystem::without_sync_barrier(cfg.clone()),
+    );
+    table.print();
+    println!("\nexpected: Algorithm 1 ≥ every fixed fraction; full split loses");
+    println!("most throughput; the idealized PP recovers much of PP's gap.");
+}

@@ -1,0 +1,66 @@
+//! Ablation for the paper's §6 limitation: short-input / long-output
+//! workloads are decode-bound, the high-end GPU saturates on decode, and
+//! Cronus's edge over the baselines narrows (the PPI idles).
+//!
+//! ```bash
+//! cargo bench --bench ablation_limits
+//! ```
+
+use cronus::benchkit::Table;
+use cronus::config::{DeploymentConfig, SystemKind};
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::spec::{A10, A100};
+use cronus::systems::build_system;
+use cronus::workload::arrival::{stamp, ArrivalProcess};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+
+fn main() {
+    let n = std::env::var("CRONUS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400usize);
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+
+    let workloads = [
+        ("conversation (in 1014 / out 247)", AzureTraceConfig::default()),
+        (
+            "short-in / long-out (in 128 / out 512)",
+            AzureTraceConfig::short_input_long_output(),
+        ),
+    ];
+    for (label, wcfg) in workloads {
+        let trace = generate(n, &wcfg, 42);
+        let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+        let mut table = Table::new(
+            format!("{label} — {n} requests"),
+            &["Approach", "thpt (req/s)", "tok/s", "PPI/low busy %"],
+        );
+        let mut cronus_rps = 0.0;
+        let mut dp_rps = 0.0;
+        for kind in SystemKind::ALL {
+            let out = build_system(kind, &cfg).run(&trace);
+            if kind == SystemKind::Cronus {
+                cronus_rps = out.report.throughput_rps;
+            }
+            if kind == SystemKind::DpChunked {
+                dp_rps = out.report.throughput_rps;
+            }
+            let low_busy = out
+                .instances
+                .iter()
+                .find(|i| i.name.contains("A10") || i.name.contains("low") || i.name.contains("PPI"))
+                .map(|i| 100.0 * i.busy_time_s / out.report.makespan_s)
+                .unwrap_or(0.0);
+            table.row(vec![
+                kind.name().to_string(),
+                format!("{:.2}", out.report.throughput_rps),
+                format!("{:.0}", out.report.token_throughput_tps),
+                format!("{low_busy:.0}%"),
+            ]);
+        }
+        table.print();
+        println!("Cronus/DP ratio: {:.2}", cronus_rps / dp_rps);
+    }
+    println!("\nexpected: the Cronus/DP ratio and the PPI busy fraction both drop");
+    println!("on the decode-bound workload (§6: decode bottlenecks the high-end GPU).");
+}

@@ -1,0 +1,104 @@
+//! Micro-benchmarks of the coordinator hot paths (§Perf deliverable):
+//! Balancer decision latency, engine planning/completion, KV allocator
+//! ops, event-queue ops, and whole-simulation iteration rate.  Used by
+//! the performance pass documented in EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo bench --bench perf_hotpath
+//! ```
+
+use cronus::benchkit::{bench_fn, time_once};
+use cronus::config::DeploymentConfig;
+use cronus::cronus::balancer::{Balancer, SplitPolicy};
+use cronus::cronus::frontend::CronusSystem;
+use cronus::engine::{EngineInstance, EngineRequest};
+use cronus::kvcache::BlockAllocator;
+use cronus::simclock::{EventQueue, SimTime};
+use cronus::simgpu::fit::calibrate;
+use cronus::simgpu::link::LinkSpec;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::perfmodel::PerfModel;
+use cronus::simgpu::spec::{A10, A100};
+use cronus::systems::ServingSystem;
+use cronus::workload::arrival::{stamp, ArrivalProcess};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+
+fn main() {
+    let mut results = Vec::new();
+
+    // --- Balancer decision latency (target: < 2 µs/request) ---
+    let ppi = PerfModel::new(A10, LLAMA3_8B);
+    let cpi = PerfModel::new(A100, LLAMA3_8B);
+    let (p, c) = calibrate(&ppi, &cpi, 512, 0.0, 1);
+    let balancer = Balancer::new(SplitPolicy::Balanced, p, c, 512);
+    let stats = cronus::engine::instance::EngineStats {
+        n_decode: 64,
+        decode_ctx_sum: 64 * 1300,
+        n_prefilling: 2,
+        waiting: 5,
+        free_blocks: 20_000,
+        block_size: 16,
+        total_blocks: 30_000,
+    };
+    let mut acc = 0usize;
+    results.push(bench_fn("balancer.split(2048) [512 candidates]", 100, 2000, || {
+        acc += balancer.split(2048, &stats).partial_len;
+    }));
+
+    // --- KV allocator ops ---
+    let mut alloc = BlockAllocator::new(40_000, 16);
+    let mut id = 0u64;
+    results.push(bench_fn("kv allocate(1014)+release", 100, 5000, || {
+        id += 1;
+        alloc.allocate(id, 1014).unwrap();
+        alloc.release(id).unwrap();
+    }));
+
+    // --- Event queue push+pop ---
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut t = 0u64;
+    results.push(bench_fn("event queue push+pop", 1000, 100_000, || {
+        t += 17;
+        q.push(SimTime(t), t);
+        q.pop();
+    }));
+
+    // --- Engine plan+complete on a realistic mixed batch ---
+    let pm = PerfModel::new(A100, LLAMA3_8B);
+    let mut engine = EngineInstance::new(
+        "bench", pm, LinkSpec::INFINIBAND_100G, 512, 512, 16, 400_000,
+    );
+    for i in 0..256 {
+        engine.submit(EngineRequest::whole(i, 800, 100_000)); // never finish
+    }
+    // Warm into steady decode state.
+    for _ in 0..600 {
+        let plan = engine.plan_iteration().unwrap();
+        engine.complete_iteration(&plan);
+    }
+    results.push(bench_fn("engine plan+complete (256-decode batch)", 50, 2000, || {
+        let plan = engine.plan_iteration().unwrap();
+        engine.complete_iteration(&plan);
+    }));
+
+    // --- Whole-system simulation rate ---
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    let trace = generate(200, &AzureTraceConfig::default(), 42);
+    let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+    let (out, wall) = time_once(|| {
+        CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x").run(&trace)
+    });
+    let iters = out.instances.iter().map(|i| i.n_iterations).sum::<u64>();
+    println!("\n== micro-benchmarks ==");
+    for r in &results {
+        println!("{}", r.summary());
+    }
+    println!("\n== whole-system rate ==");
+    println!(
+        "cronus sim: 200 requests, {iters} engine iterations in {wall:.3}s wall \
+         ({:.0} iterations/s, {:.1} sim-s/wall-s)",
+        iters as f64 / wall,
+        out.report.makespan_s / wall
+    );
+    std::hint::black_box(acc);
+}

@@ -1,0 +1,65 @@
+//! Reproduces **Table 2**: maximum throughput (requests/second) of every
+//! approach on every (GPU pair, model) evaluation cell.  All 1000
+//! requests arrive at t=0 as in the paper's measurement procedure.
+//!
+//! ```bash
+//! cargo bench --bench table2_throughput            # paper-size (1000)
+//! CRONUS_BENCH_N=200 cargo bench --bench table2_throughput
+//! ```
+
+use cronus::benchkit::time_once;
+use cronus::launcher::{table2, ExperimentOpts};
+
+fn main() {
+    let n = std::env::var("CRONUS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000usize);
+    let opts = ExperimentOpts { n_requests: n, seed: 42 };
+    let ((table, data), wall) = time_once(|| table2(&opts));
+    table.print();
+    println!("\npaper's Table 2 for reference:");
+    println!("  DP+Chunked   7.28  8.70  8.54 10.85");
+    println!("  PP+Chunked   3.86  4.08  3.96  3.97");
+    println!("  Disagg. H-L  1.31  3.45  2.93  6.74");
+    println!("  Disagg. L-H  4.11  4.35  6.14  6.59");
+    println!("  Cronus       7.39  8.29  8.70 10.27");
+    // Headline claims (shape, not absolutes).
+    let get = |label: &str, kind: cronus::config::SystemKind| -> f64 {
+        data.iter()
+            .find(|(l, k, _)| l == label && *k == kind)
+            .map(|(_, _, v)| *v)
+            .unwrap()
+    };
+    use cronus::config::SystemKind::*;
+    let mut claims = Vec::new();
+    for cell in [
+        "A100+A10 llama3-8b",
+        "A100+A10 qwen2-7b",
+        "A100+A30 llama3-8b",
+        "A100+A30 qwen2-7b",
+    ] {
+        let cronus_rps = get(cell, Cronus);
+        claims.push((
+            format!("{cell}: Cronus > PP"),
+            cronus_rps > get(cell, PpChunked),
+        ));
+        claims.push((
+            format!("{cell}: Cronus > Disagg L-H"),
+            cronus_rps > get(cell, DisaggLowHigh),
+        ));
+        claims.push((
+            format!("{cell}: Cronus > Disagg H-L"),
+            cronus_rps > get(cell, DisaggHighLow),
+        ));
+        claims.push((
+            format!("{cell}: Cronus within 20% of DP"),
+            cronus_rps > 0.8 * get(cell, DpChunked),
+        ));
+    }
+    println!("\nheadline-claim checks:");
+    for (what, ok) in &claims {
+        println!("  [{}] {}", if *ok { "ok" } else { "MISS" }, what);
+    }
+    println!("\n(total bench wall time {wall:.1}s, n={n})");
+}

@@ -1,0 +1,13 @@
+//! The paper's four baselines (§3, Table 1).
+//!
+//! * [`dp`] — data parallelism + chunked prefill: independent engines per
+//!   GPU behind a weighted round-robin dispatcher with queue caps.
+//! * [`pp`] — pipeline parallelism + chunked prefill: the model's layers
+//!   split across both GPUs proportionally to BF16 FLOPS, microbatches
+//!   alternating through the two stages with per-boundary communication.
+//! * Disaggregated prefill (both directions) is implemented by the Cronus
+//!   machinery itself with the split forced to the full prompt — see
+//!   [`crate::cronus`].
+
+pub mod dp;
+pub mod pp;

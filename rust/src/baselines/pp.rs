@@ -1,0 +1,321 @@
+//! Pipeline parallelism + chunked prefill (§3.3).
+//!
+//! The model's layers are split across the two GPUs proportionally to
+//! their BF16 FLOPS (§5.1: LLaMA3-8B 23+9 on A100+A10, 21+11 on
+//! A100+A30; Qwen2-7B 20+8 / 18+10).  Requests are partitioned into two
+//! microbatch groups whose iterations flow through the two stages as a
+//! real pipeline: stage 0 (high-end GPU, first layer block) → activation
+//! transfer over the link → stage 1 (low-end GPU, remaining layers).
+//! Each group has at most one iteration in flight (iteration *n+1* needs
+//! iteration *n*'s results), so bubbles appear whenever the stages are
+//! imbalanced for the batch at hand.
+//!
+//! This surfaces both effects the paper blames for PP's weakness:
+//!
+//! * the FLOPS-proportional split balances *compute*-bound prefill, but
+//!   decode is *bandwidth*-bound and the low-end card's bandwidth deficit
+//!   (A10: 600 vs 2039 GB/s) makes stage 1 the decode bottleneck;
+//! * every chunk/iteration pays an activation transfer + link latency,
+//!   which accumulates over a prompt's chunks into TTFT.
+//!
+//! Memory: each GPU holds its layer fraction of the KV cache for *all*
+//! requests, so per-group capacity is bounded by the tighter stage — the
+//! reduced-batch-size effect of §3.3.
+
+use std::collections::VecDeque;
+
+use crate::config::DeploymentConfig;
+use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
+use crate::metrics::Collector;
+use crate::simclock::{EventQueue, SimTime};
+use crate::simgpu::perfmodel::{IterationShape, PerfModel};
+use crate::systems::{InstanceStat, RunOutcome, ServingSystem};
+use crate::workload::Request;
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival(usize),
+    /// Stage 0 (high-end) finished group `g`'s forward part + transfer.
+    Stage0Done(usize),
+    /// Stage 1 (low-end) finished group `g`'s iteration.
+    Stage1Done(usize),
+}
+
+pub struct PpSystem {
+    cfg: DeploymentConfig,
+    /// Scheduler synchronization barrier between pipeline iterations, as
+    /// in the vLLM version the paper evaluates (0.6.1): the next
+    /// microbatch's stage-0 pass does not launch until the previous
+    /// iteration fully drains, so stages never actually overlap.  This is
+    /// the behaviour behind the paper's flat ~4 req/s PP throughput
+    /// across hardware.  Set `false` for an idealized bubble-free
+    /// pipeline (see the `ablation_balancer` bench).
+    sync_barrier: bool,
+}
+
+impl PpSystem {
+    pub fn new(cfg: DeploymentConfig) -> Self {
+        PpSystem { cfg, sync_barrier: true }
+    }
+
+    /// Idealized pipeline without the vLLM scheduler barrier (ablation).
+    pub fn without_sync_barrier(cfg: DeploymentConfig) -> Self {
+        PpSystem { cfg, sync_barrier: false }
+    }
+
+    /// Stage performance models under the FLOPS-proportional layer split.
+    pub fn stage_models(&self) -> (PerfModel, PerfModel) {
+        let (hi_layers, lo_layers) = self.cfg.pp_layer_split();
+        let n = self.cfg.model.n_layers as f64;
+        (
+            PerfModel::with_layer_fraction(
+                self.cfg.high_gpu,
+                self.cfg.model,
+                hi_layers as f64 / n,
+            ),
+            PerfModel::with_layer_fraction(
+                self.cfg.low_gpu,
+                self.cfg.model,
+                lo_layers as f64 / n,
+            ),
+        )
+    }
+
+    /// Per-group KV capacity in tokens (half of the tighter stage).
+    fn group_kv_capacity(&self) -> usize {
+        let (hi, lo) = self.stage_models();
+        let reserve = self.cfg.engine.activation_reserve_frac;
+        hi.kv_capacity_tokens(reserve).min(lo.kv_capacity_tokens(reserve)) / 2
+    }
+
+    /// Activation transfer between stages for a batch.
+    fn comm_time(&self, shape: &IterationShape) -> f64 {
+        self.cfg
+            .link
+            .transfer_time(self.cfg.model.activation_bytes(shape.total_new_tokens()))
+            + self.cfg.link.latency_s // small return hop (token ids)
+    }
+}
+
+impl ServingSystem for PpSystem {
+    fn label(&self) -> String {
+        "PP+Chunked".to_string()
+    }
+
+    fn run(&mut self, trace: &[Request]) -> RunOutcome {
+        let cfg = &self.cfg;
+        let (hi_pm, lo_pm) = self.stage_models();
+        let group_capacity = self.group_kv_capacity();
+
+        // Two microbatch groups.  The engines are used as scheduler +
+        // allocator state machines; stage timings come from the stage
+        // performance models.
+        let mut groups = [
+            EngineInstance::new(
+                "PP-group0",
+                hi_pm,
+                cfg.link,
+                cfg.engine.max_batched_tokens,
+                cfg.engine.max_running,
+                cfg.engine.block_size,
+                group_capacity,
+            ),
+            EngineInstance::new(
+                "PP-group1",
+                hi_pm,
+                cfg.link,
+                cfg.engine.max_batched_tokens,
+                cfg.engine.max_running,
+                cfg.engine.block_size,
+                group_capacity,
+            ),
+        ];
+
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut metrics = Collector::new();
+        for (i, r) in trace.iter().enumerate() {
+            q.push(SimTime(r.arrival_ns), Ev::Arrival(i));
+        }
+        let mut frontend: VecDeque<usize> = VecDeque::new();
+        let mut next_group = 0usize;
+        // Pipeline state: a group's in-flight plan while it traverses the
+        // stages; stage occupancy; queue of plans waiting for stage 1.
+        let mut plans: [Option<IterationPlan>; 2] = [None, None];
+        let mut stage0_busy = false;
+        let mut stage1_busy = false;
+        let mut stage1_queue: VecDeque<usize> = VecDeque::new();
+        let mut busy = [0.0f64; 2];
+        let mut n_slots = 0u64;
+
+        // Try to start a stage-0 pass for any group with no iteration in
+        // flight.  Returns scheduled events via the queue.
+        macro_rules! pump {
+            ($q:expr) => {{
+                // Stage 1 first (drain), then stage 0 (fill).
+                if !stage1_busy {
+                    if let Some(g) = stage1_queue.pop_front() {
+                        let shape =
+                            plans[g].as_ref().map(|p| p.shape.clone()).unwrap();
+                        let t = lo_pm.iteration_time(&shape);
+                        busy[1] += t;
+                        stage1_busy = true;
+                        $q.push_after(t, Ev::Stage1Done(g));
+                    }
+                }
+                let pipe_drained =
+                    plans[0].is_none() && plans[1].is_none();
+                if !stage0_busy && (!self.sync_barrier || pipe_drained) {
+                    // Prefer the group that has waited longest: alternate.
+                    for attempt in 0..2 {
+                        let g = (next_group + attempt) % 2;
+                        if plans[g].is_some() {
+                            continue; // iteration already in flight
+                        }
+                        if let Some(plan) = groups[g].plan_iteration() {
+                            let t = hi_pm.iteration_time(&plan.shape)
+                                + self.comm_time(&plan.shape);
+                            busy[0] += hi_pm.iteration_time(&plan.shape);
+                            n_slots += 1;
+                            plans[g] = Some(plan);
+                            stage0_busy = true;
+                            next_group = 1 - g;
+                            $q.push_after(t, Ev::Stage0Done(g));
+                            break;
+                        }
+                    }
+                }
+            }};
+        }
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Arrival(i) => {
+                    metrics.on_arrival(trace[i].id, now);
+                    frontend.push_back(i);
+                }
+                Ev::Stage0Done(g) => {
+                    stage0_busy = false;
+                    stage1_queue.push_back(g);
+                }
+                Ev::Stage1Done(g) => {
+                    stage1_busy = false;
+                    let plan = plans[g].take().expect("stage1 without plan");
+                    for ev in groups[g].complete_iteration(&plan) {
+                        match ev {
+                            EngineEvent::FirstToken(id) | EngineEvent::Token(id) => {
+                                metrics.on_token(id, now)
+                            }
+                            EngineEvent::Finished(id) => metrics.on_finish(id, now),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+
+            // Dispatch arrivals to the emptier group (ties alternate).
+            while let Some(&i) = frontend.front() {
+                let r = &trace[i];
+                let g = if groups[0].n_in_instance() == groups[1].n_in_instance() {
+                    let g = next_group;
+                    g
+                } else if groups[0].n_in_instance() < groups[1].n_in_instance() {
+                    0
+                } else {
+                    1
+                };
+                groups[g].submit(EngineRequest::whole(r.id, r.input_len, r.output_len));
+                frontend.pop_front();
+            }
+
+            pump!(q);
+        }
+
+        let report = metrics.report(self.label());
+        let (hi_layers, lo_layers) = cfg.pp_layer_split();
+        let instances = vec![
+            InstanceStat {
+                name: format!("PP-stage0({}, {hi_layers} layers)", cfg.high_gpu.name),
+                busy_time_s: busy[0],
+                n_iterations: n_slots,
+                n_preemptions: groups[0].n_preemptions + groups[1].n_preemptions,
+                tokens_prefilled: groups[0].tokens_prefilled + groups[1].tokens_prefilled,
+                tokens_decoded: groups[0].tokens_decoded + groups[1].tokens_decoded,
+            },
+            InstanceStat {
+                name: format!("PP-stage1({}, {lo_layers} layers)", cfg.low_gpu.name),
+                busy_time_s: busy[1],
+                n_iterations: n_slots,
+                n_preemptions: 0,
+                tokens_prefilled: 0,
+                tokens_decoded: 0,
+            },
+        ];
+        RunOutcome { report, instances }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::simgpu::spec::{A10, A100};
+    use crate::workload::azure::{generate, AzureTraceConfig};
+
+    #[test]
+    fn pp_serves_all_requests() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = generate(40, &AzureTraceConfig::default(), 9);
+        let out = PpSystem::new(cfg).run(&trace);
+        assert_eq!(out.report.n_finished, 40);
+        assert!(out.report.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn stage_models_use_layer_split() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let sys = PpSystem::new(cfg);
+        let (hi, lo) = sys.stage_models();
+        assert!((hi.layer_fraction - 23.0 / 32.0).abs() < 1e-12);
+        assert!((lo.layer_fraction - 9.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_capacity_bounded_by_low_end() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let sys = PpSystem::new(cfg.clone());
+        let (_, lo) = sys.stage_models();
+        let cap = sys.group_kv_capacity();
+        assert_eq!(
+            cap,
+            lo.kv_capacity_tokens(cfg.engine.activation_reserve_frac) / 2,
+            "the 24 GB card must be the binding constraint"
+        );
+    }
+
+    #[test]
+    fn decode_stage1_is_bottleneck() {
+        // The FLOPS-proportional split leaves the low-bandwidth card with
+        // a disproportionate share of memory-bound decode time.
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let sys = PpSystem::new(cfg);
+        let (hi, lo) = sys.stage_models();
+        let shape = IterationShape {
+            prefill: vec![],
+            n_decode: 64,
+            decode_ctx_sum: 64 * 1200,
+        };
+        assert!(
+            lo.iteration_time(&shape) > hi.iteration_time(&shape),
+            "low-end decode stage should dominate"
+        );
+    }
+
+    #[test]
+    fn pp_is_deterministic() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = generate(25, &AzureTraceConfig::default(), 12);
+        let a = PpSystem::new(cfg.clone()).run(&trace);
+        let b = PpSystem::new(cfg).run(&trace);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
+    }
+}

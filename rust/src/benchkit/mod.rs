@@ -1,0 +1,153 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Two roles:
+//! * wall-clock micro-benchmarks of the coordinator hot paths
+//!   ([`bench_fn`]) with warmup, repetitions and basic statistics;
+//! * experiment table formatting shared by the paper-reproduction
+//!   benches ([`Table`]).
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of a micro-benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10.0} ns/iter (p50 {:>10.0}, p99 {:>10.0}, n={})",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup; samples are per-call durations.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: iters as u64,
+        mean_ns: stats::mean(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p99_ns: stats::percentile(&samples, 99.0),
+    }
+}
+
+/// Measure a single long-running closure's wall time in seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Fixed-width text table, printed like the paper's tables.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, cell) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<width$} |", cell, width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_counts_iters() {
+        let mut n = 0u64;
+        let r = bench_fn("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Test", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("## Test"));
+        assert!(s.contains("| a "));
+        assert!(s.contains("| 1 "));
+        assert!(s.contains("|---"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

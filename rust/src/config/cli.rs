@@ -1,0 +1,205 @@
+//! Tiny CLI flag parser (`clap` substitute).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec used for parsing + usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+}
+
+pub struct Parser {
+    pub command: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Parser { command, about, specs: Vec::new() }
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.command, self.about);
+        let _ = writeln!(s, "Options:");
+        for spec in &self.specs {
+            let arg = if spec.takes_value {
+                format!("--{} <value>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let default = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {arg:<28} {}{default}", spec.help);
+        }
+        s
+    }
+
+    /// Parse raw args (without argv[0]).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let token = &raw[i];
+            if let Some(body) = token.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    out.values.insert(name, value);
+                } else {
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(token.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new("cronus", "test")
+            .opt("model", "model name", Some("llama3-8b"))
+            .opt("rate", "request rate", None)
+            .flag("verbose", "chatty")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse(&args(&[])).unwrap();
+        assert_eq!(a.get("model"), Some("llama3-8b"));
+        assert_eq!(a.get("rate"), None);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parser().parse(&args(&["--model", "qwen", "--rate=7.5"])).unwrap();
+        assert_eq!(a.get("model"), Some("qwen"));
+        assert_eq!(a.get_f64("rate"), Some(7.5));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parser().parse(&args(&["serve", "--verbose", "extra"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(matches!(
+            parser().parse(&args(&["--bogus"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            parser().parse(&args(&["--rate"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = parser().usage();
+        assert!(u.contains("--model"));
+        assert!(u.contains("default: llama3-8b"));
+        assert!(u.contains("--verbose"));
+    }
+}

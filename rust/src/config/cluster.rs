@@ -1,0 +1,268 @@
+//! Typed deployment configuration — the knobs of §5.1 of the paper, with
+//! the paper's defaults baked in:
+//!
+//! * max token batch 512 for chunked prefill (256 for DP's low-end GPU),
+//! * DP weighted round-robin 3:1 with waiting-queue caps 3 / 1,
+//! * PP layer split proportional to BF16 FLOPS,
+//! * 100 Gbps InfiniBand between nodes.
+
+use crate::simgpu::link::LinkSpec;
+use crate::simgpu::model_desc::{self, ModelDesc};
+use crate::simgpu::spec::{self, GpuSpec};
+
+use crate::config::toml::TomlDoc;
+
+/// Which serving system to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    Cronus,
+    DpChunked,
+    PpChunked,
+    DisaggHighLow,
+    DisaggLowHigh,
+}
+
+impl SystemKind {
+    pub const ALL: [SystemKind; 5] = [
+        SystemKind::DpChunked,
+        SystemKind::PpChunked,
+        SystemKind::DisaggHighLow,
+        SystemKind::DisaggLowHigh,
+        SystemKind::Cronus,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Cronus => "Cronus",
+            SystemKind::DpChunked => "DP+Chunked",
+            SystemKind::PpChunked => "PP+Chunked",
+            SystemKind::DisaggHighLow => "Disagg. H-L",
+            SystemKind::DisaggLowHigh => "Disagg. L-H",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<SystemKind> {
+        match name.to_ascii_lowercase().replace(['-', '_', ' ', '+', '.'], "").as_str() {
+            "cronus" => Some(SystemKind::Cronus),
+            "dp" | "dpchunked" => Some(SystemKind::DpChunked),
+            "pp" | "ppchunked" => Some(SystemKind::PpChunked),
+            "disagghl" | "disagghighlow" => Some(SystemKind::DisaggHighLow),
+            "disagglh" | "disagglowhigh" => Some(SystemKind::DisaggLowHigh),
+            _ => None,
+        }
+    }
+}
+
+/// Per-engine scheduler parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineParams {
+    /// Max batched tokens per iteration (chunked-prefill budget).
+    pub max_batched_tokens: usize,
+    /// Cap on concurrently running requests.
+    pub max_running: usize,
+    /// KV block size in tokens.
+    pub block_size: usize,
+    /// Fraction of device memory reserved for activations / workspace /
+    /// allocator slack (mirrors vLLM's `gpu_memory_utilization=0.9` plus
+    /// activation workspace).
+    pub activation_reserve_frac: f64,
+}
+
+impl Default for EngineParams {
+    fn default() -> Self {
+        EngineParams {
+            max_batched_tokens: 512,
+            max_running: 256,
+            block_size: 16,
+            activation_reserve_frac: 0.12,
+        }
+    }
+}
+
+/// Full deployment description (one experiment cell).
+#[derive(Clone, Debug)]
+pub struct DeploymentConfig {
+    pub high_gpu: GpuSpec,
+    pub low_gpu: GpuSpec,
+    pub model: ModelDesc,
+    pub link: LinkSpec,
+    /// Chunked-prefill engine on the high-end GPU (Cronus CPI, DP high,
+    /// PP stages, disagg decode side).
+    pub engine: EngineParams,
+    /// DP only: the low-end GPU uses a smaller chunk (paper: 256).
+    pub dp_low_chunk: usize,
+    /// DP dispatch weights (high : low), paper: 3 : 1.
+    pub dp_weights: (u32, u32),
+    /// DP waiting-queue caps (high, low), paper: (3, 1).
+    pub dp_queue_caps: (usize, usize),
+    /// Relative measurement noise used when calibrating the Balancer's
+    /// predictors (profiling is not noise-free on real hardware either).
+    pub calibration_noise: f64,
+    pub calibration_seed: u64,
+}
+
+impl DeploymentConfig {
+    /// Paper testbed: A100 + A10 or A100 + A30, 100 Gbps IB.
+    pub fn paper(high: GpuSpec, low: GpuSpec, model: ModelDesc) -> Self {
+        DeploymentConfig {
+            high_gpu: high,
+            low_gpu: low,
+            model,
+            link: LinkSpec::INFINIBAND_100G,
+            engine: EngineParams::default(),
+            dp_low_chunk: 256,
+            dp_weights: (3, 1),
+            dp_queue_caps: (3, 1),
+            calibration_noise: 0.01,
+            calibration_seed: 0xC0FFEE,
+        }
+    }
+
+    /// The four evaluation cells of Table 2 / Fig. 4:
+    /// (A100+A10, A100+A30) × (LLaMA3-8B, Qwen2-7B).
+    pub fn paper_matrix() -> Vec<(String, DeploymentConfig)> {
+        let mut out = Vec::new();
+        for (low, low_name) in [(spec::A10, "A10"), (spec::A30, "A30")] {
+            for model in [model_desc::LLAMA3_8B, model_desc::QWEN2_7B] {
+                let label = format!("A100+{low_name} {}", model.name);
+                out.push((label, DeploymentConfig::paper(spec::A100, low, model)));
+            }
+        }
+        out
+    }
+
+    /// PP layer split (high-end layers, low-end layers), proportional to
+    /// BF16 FLOPS as in §5.1.
+    pub fn pp_layer_split(&self) -> (usize, usize) {
+        let f = self.high_gpu.bf16_tflops
+            / (self.high_gpu.bf16_tflops + self.low_gpu.bf16_tflops);
+        let hi = ((self.model.n_layers as f64) * f).round() as usize;
+        let hi = hi.clamp(1, self.model.n_layers - 1);
+        (hi, self.model.n_layers - hi)
+    }
+
+    /// Load overrides from a parsed TOML document (missing keys keep the
+    /// paper defaults).
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
+        if let Some(name) = doc.get_str("cluster.high_gpu") {
+            self.high_gpu =
+                spec::by_name(name).ok_or_else(|| format!("unknown gpu '{name}'"))?;
+        }
+        if let Some(name) = doc.get_str("cluster.low_gpu") {
+            self.low_gpu =
+                spec::by_name(name).ok_or_else(|| format!("unknown gpu '{name}'"))?;
+        }
+        if let Some(name) = doc.get_str("cluster.model") {
+            self.model = model_desc::by_name(name)
+                .ok_or_else(|| format!("unknown model '{name}'"))?;
+        }
+        if let Some(g) = doc.get_f64("cluster.link_gbps") {
+            self.link.gbps = g;
+        }
+        if let Some(x) = doc.get_i64("engine.max_batched_tokens") {
+            self.engine.max_batched_tokens = x as usize;
+        }
+        if let Some(x) = doc.get_i64("engine.max_running") {
+            self.engine.max_running = x as usize;
+        }
+        if let Some(x) = doc.get_i64("engine.block_size") {
+            self.engine.block_size = x as usize;
+        }
+        if let Some(x) = doc.get_f64("engine.activation_reserve_frac") {
+            self.engine.activation_reserve_frac = x;
+        }
+        if let Some(x) = doc.get_i64("dp.low_chunk") {
+            self.dp_low_chunk = x as usize;
+        }
+        if let Some(x) = doc.get_i64("dp.weight_high") {
+            self.dp_weights.0 = x as u32;
+        }
+        if let Some(x) = doc.get_i64("dp.weight_low") {
+            self.dp_weights.1 = x as u32;
+        }
+        if let Some(x) = doc.get_i64("dp.queue_cap_high") {
+            self.dp_queue_caps.0 = x as usize;
+        }
+        if let Some(x) = doc.get_i64("dp.queue_cap_low") {
+            self.dp_queue_caps.1 = x as usize;
+        }
+        if let Some(x) = doc.get_f64("balancer.calibration_noise") {
+            self.calibration_noise = x;
+        }
+        if let Some(x) = doc.get_i64("balancer.calibration_seed") {
+            self.calibration_seed = x as u64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn paper_defaults() {
+        let c = DeploymentConfig::paper(spec::A100, spec::A10, model_desc::LLAMA3_8B);
+        assert_eq!(c.engine.max_batched_tokens, 512);
+        assert_eq!(c.dp_low_chunk, 256);
+        assert_eq!(c.dp_weights, (3, 1));
+        assert_eq!(c.dp_queue_caps, (3, 1));
+        assert_eq!(c.link.gbps, 100.0);
+    }
+
+    #[test]
+    fn paper_matrix_has_four_cells() {
+        let m = DeploymentConfig::paper_matrix();
+        assert_eq!(m.len(), 4);
+        let labels: Vec<&str> = m.iter().map(|(l, _)| l.as_str()).collect();
+        assert!(labels.contains(&"A100+A10 llama3-8b"));
+        assert!(labels.contains(&"A100+A30 qwen2-7b"));
+    }
+
+    #[test]
+    fn pp_split_matches_paper() {
+        let c = DeploymentConfig::paper(spec::A100, spec::A10, model_desc::LLAMA3_8B);
+        assert_eq!(c.pp_layer_split(), (23, 9));
+        let c = DeploymentConfig::paper(spec::A100, spec::A30, model_desc::LLAMA3_8B);
+        assert_eq!(c.pp_layer_split(), (21, 11));
+        let c = DeploymentConfig::paper(spec::A100, spec::A10, model_desc::QWEN2_7B);
+        assert_eq!(c.pp_layer_split(), (20, 8));
+        let c = DeploymentConfig::paper(spec::A100, spec::A30, model_desc::QWEN2_7B);
+        assert_eq!(c.pp_layer_split(), (18, 10));
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let mut c =
+            DeploymentConfig::paper(spec::A100, spec::A10, model_desc::LLAMA3_8B);
+        let doc = toml::parse(
+            "[cluster]\nlow_gpu = \"a30\"\nmodel = \"qwen2-7b\"\nlink_gbps = 200\n\
+             [engine]\nmax_batched_tokens = 1024\n[dp]\nlow_chunk = 128\n",
+        )
+        .unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.low_gpu.name, "A30");
+        assert_eq!(c.model.name, "qwen2-7b");
+        assert_eq!(c.link.gbps, 200.0);
+        assert_eq!(c.engine.max_batched_tokens, 1024);
+        assert_eq!(c.dp_low_chunk, 128);
+    }
+
+    #[test]
+    fn toml_unknown_gpu_errors() {
+        let mut c =
+            DeploymentConfig::paper(spec::A100, spec::A10, model_desc::LLAMA3_8B);
+        let doc = toml::parse("[cluster]\nhigh_gpu = \"tpuv9\"\n").unwrap();
+        assert!(c.apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn system_kind_names_roundtrip() {
+        for kind in SystemKind::ALL {
+            assert_eq!(SystemKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(SystemKind::from_name("dp"), Some(SystemKind::DpChunked));
+        assert!(SystemKind::from_name("magic").is_none());
+    }
+}

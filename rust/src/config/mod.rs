@@ -1,0 +1,11 @@
+//! Configuration system: a TOML-subset parser, a CLI flag parser, and the
+//! typed deployment configuration every binary consumes.
+//!
+//! (The offline build ships no `serde`/`toml`/`clap`; these are small
+//! from-scratch replacements — DESIGN.md §1.)
+
+pub mod cli;
+pub mod cluster;
+pub mod toml;
+
+pub use cluster::{DeploymentConfig, EngineParams, SystemKind};

@@ -1,0 +1,267 @@
+//! Minimal TOML-subset parser for deployment config files.
+//!
+//! Supported grammar (everything our configs use):
+//!   * `[section]` and `[section.subsection]` headers
+//!   * `key = value` with string (`"..."`), integer, float, boolean
+//!     values, and flat arrays of those
+//!   * `#` comments, blank lines
+//!
+//! Keys are flattened to `section.subsection.key` paths.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Flattened key-path -> value table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(|v| v.as_str())
+    }
+
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(|v| v.as_i64())
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(|v| v.as_bool())
+    }
+
+    /// Keys under a section prefix (e.g. "cluster.").
+    pub fn section_keys(&self, prefix: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if doc.entries.insert(path.clone(), value).is_some() {
+            return Err(err(lineno, &format!("duplicate key '{path}'")));
+        }
+    }
+    Ok(doc)
+}
+
+fn err(line: usize, msg: &str) -> TomlError {
+    TomlError { line, msg: msg.to_string() }
+}
+
+/// Remove a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(err(lineno, "trailing data after string"));
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value '{text}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let doc = parse(
+            "top = 1\n[cluster]\nhigh = \"a100\"\nlow = \"a10\"\n\
+             [engine.cpi]\nmax_tokens = 512\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("top"), Some(1));
+        assert_eq!(doc.get_str("cluster.high"), Some("a100"));
+        assert_eq!(doc.get_i64("engine.cpi.max_tokens"), Some(512));
+    }
+
+    #[test]
+    fn parses_types() {
+        let doc = parse(
+            "s = \"x\"\ni = -3\nf = 2.5\nb = true\narr = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("s"), Some("x"));
+        assert_eq!(doc.get_i64("i"), Some(-3));
+        assert_eq!(doc.get_f64("f"), Some(2.5));
+        assert_eq!(doc.get_bool("b"), Some(true));
+        match doc.get("arr").unwrap() {
+            TomlValue::Array(xs) => assert_eq!(xs.len(), 3),
+            _ => panic!("not an array"),
+        }
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse("x = 5\n").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(5.0));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse("# header\n\na = 1 # trailing\nb = \"#not a comment\"\n").unwrap();
+        assert_eq!(doc.get_i64("a"), Some(1));
+        assert_eq!(doc.get_str("b"), Some("#not a comment"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("good = 1\nbad\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("x = \n").is_err());
+        assert!(parse("x = zzz\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn section_keys_listing() {
+        let doc = parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        assert_eq!(doc.section_keys("a."), vec!["a.x", "a.y"]);
+    }
+}

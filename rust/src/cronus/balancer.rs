@@ -1,0 +1,318 @@
+//! The Balancer — paper §4.3 / §4.4 and Algorithm 1 (Appendix A).
+//!
+//! For each incoming request it chooses the partial-prefill length `L_p`:
+//! the prefix prefilled on the low-end GPU while the high-end GPU
+//! overlaps earlier requests' decode, such that
+//!
+//! ```text
+//!   T_parprefill(L_p)  ≈  T_chunked(L_in - L_p)
+//! ```
+//!
+//! Both sides are estimated with the linear predictors of §4.4, whose
+//! coefficients come from profiling (see [`crate::simgpu::fit`]):
+//!
+//! * Eq. 2: `T_prefill(L) = k_p · L + b_p` on the PPI's GPU;
+//! * Eq. 3: `t_chunked = k_ctxp · L_ctx + k_ctxd · Σ L_D + b_c` per
+//!   iteration on the CPI's GPU, summed over iterations as an arithmetic
+//!   series (Eq. 1).
+//!
+//! Candidate `L_p` values are sampled evenly between 1 and `L_in`
+//! (Algorithm 1 uses 512 candidates); the candidate minimizing
+//! `|T_prefill − T_chunked|` wins.  If the CPI lacks free KV blocks for
+//! the prompt, the whole prefill goes to the PPI (`L_p = L_in`).
+
+use crate::engine::instance::EngineStats;
+use crate::simgpu::fit::{ChunkedCoeffs, PrefillCoeffs};
+
+/// How to split each request's prefill.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SplitPolicy {
+    /// Algorithm 1 (Cronus).
+    Balanced,
+    /// Always the full prompt (the disaggregated-prefill baselines).
+    Full,
+    /// Fixed fraction of the prompt (ablation).
+    FixedFraction(f64),
+}
+
+/// Decision record (kept for ablation benches / debugging).
+#[derive(Clone, Copy, Debug)]
+pub struct SplitDecision {
+    pub partial_len: usize,
+    pub t_prefill_est: f64,
+    pub t_chunked_est: f64,
+}
+
+pub struct Balancer {
+    policy: SplitPolicy,
+    prefill: PrefillCoeffs,
+    chunked: ChunkedCoeffs,
+    /// Max batched tokens per CPI iteration (B in Algorithm 1).
+    max_batched_tokens: usize,
+    /// Number of evenly spaced candidates (512 in Algorithm 1).
+    n_candidates: usize,
+}
+
+impl Balancer {
+    pub fn new(
+        policy: SplitPolicy,
+        prefill: PrefillCoeffs,
+        chunked: ChunkedCoeffs,
+        max_batched_tokens: usize,
+    ) -> Self {
+        Balancer {
+            policy,
+            prefill,
+            chunked,
+            max_batched_tokens,
+            n_candidates: 512,
+        }
+    }
+
+    pub fn with_candidates(mut self, n: usize) -> Self {
+        self.n_candidates = n.max(1);
+        self
+    }
+
+    /// Pick the partial-prefill length for a request of `input_len`
+    /// tokens, given fresh CPI statistics.
+    pub fn split(&self, input_len: usize, cpi: &EngineStats) -> SplitDecision {
+        match self.policy {
+            SplitPolicy::Full => SplitDecision {
+                partial_len: input_len,
+                t_prefill_est: self.prefill.predict(input_len),
+                t_chunked_est: 0.0,
+            },
+            SplitPolicy::FixedFraction(f) => {
+                let lp = ((input_len as f64 * f).ceil() as usize)
+                    .clamp(1, input_len);
+                SplitDecision {
+                    partial_len: lp,
+                    t_prefill_est: self.prefill.predict(lp),
+                    t_chunked_est: self.estimate_chunked(input_len, lp, cpi),
+                }
+            }
+            SplitPolicy::Balanced => self.balanced_split(input_len, cpi),
+        }
+    }
+
+    /// Algorithm 1.
+    ///
+    /// Performance note (EXPERIMENTS.md §Perf): `T_prefill(L_p)` is
+    /// strictly increasing in `L_p` and `T_chunked(L_in − L_p)` is
+    /// non-increasing, so the signed difference crosses zero exactly
+    /// once over the candidate grid.  Instead of scanning all 512
+    /// candidates (the literal Algorithm 1 loop, ~4 µs/decision), we
+    /// binary-search the crossing and compare its two neighbours —
+    /// identical argmin, O(log n) predictor evaluations.  The exhaustive
+    /// scan is kept as `balanced_split_exhaustive` and a property test
+    /// asserts the two agree.
+    fn balanced_split(&self, input_len: usize, cpi: &EngineStats) -> SplitDecision {
+        // If the CPI cannot hold the prompt's KV, keep everything on the
+        // PPI (first branch of Algorithm 1).
+        let blocks_needed = input_len.div_ceil(cpi.block_size.max(1));
+        if cpi.free_blocks < blocks_needed {
+            return SplitDecision {
+                partial_len: input_len,
+                t_prefill_est: self.prefill.predict(input_len),
+                t_chunked_est: 0.0,
+            };
+        }
+
+        let n_cand = self.n_candidates.min(input_len);
+        let eval = |i: usize| -> SplitDecision {
+            let lp = (input_len * i).div_ceil(n_cand).clamp(1, input_len);
+            let t_prefill = self.prefill.predict(lp);
+            let t_chunked = self.estimate_chunked(input_len, lp, cpi);
+            SplitDecision { partial_len: lp, t_prefill_est: t_prefill, t_chunked_est: t_chunked }
+        };
+        let diff = |d: &SplitDecision| d.t_prefill_est - d.t_chunked_est;
+
+        // Find the smallest candidate index whose signed difference is
+        // >= 0 (it exists: at i = n_cand, T_chunked = 0 and T_prefill > 0).
+        let (mut lo, mut hi) = (1usize, n_cand);
+        let first = eval(lo);
+        if diff(&first) >= 0.0 {
+            return first; // PPI already slower at the smallest split
+        }
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if diff(&eval(mid)) >= 0.0 {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        // The |difference| minimum is at the crossing's neighbours.
+        let below = eval(lo);
+        let above = eval(hi);
+        if diff(&below).abs() <= diff(&above).abs() {
+            below
+        } else {
+            above
+        }
+    }
+
+    /// The literal Algorithm 1 scan over every candidate (used by tests
+    /// to validate the binary-search fast path, and available for
+    /// experimentation with non-monotone predictors).
+    pub fn balanced_split_exhaustive(
+        &self,
+        input_len: usize,
+        cpi: &EngineStats,
+    ) -> SplitDecision {
+        let blocks_needed = input_len.div_ceil(cpi.block_size.max(1));
+        if cpi.free_blocks < blocks_needed {
+            return SplitDecision {
+                partial_len: input_len,
+                t_prefill_est: self.prefill.predict(input_len),
+                t_chunked_est: 0.0,
+            };
+        }
+
+        let mut best = SplitDecision {
+            partial_len: input_len,
+            t_prefill_est: self.prefill.predict(input_len),
+            t_chunked_est: 0.0,
+        };
+        let mut best_diff = (best.t_prefill_est - best.t_chunked_est).abs();
+
+        let n_cand = self.n_candidates.min(input_len);
+        for i in 1..=n_cand {
+            // L_p candidates: ceil(i/n · L_in), deduplicated by stepping.
+            let lp = (input_len * i).div_ceil(n_cand).clamp(1, input_len);
+            let t_prefill = self.prefill.predict(lp);
+            let t_chunked = self.estimate_chunked(input_len, lp, cpi);
+            let diff = (t_prefill - t_chunked).abs();
+            if diff < best_diff {
+                best_diff = diff;
+                best = SplitDecision {
+                    partial_len: lp,
+                    t_prefill_est: t_prefill,
+                    t_chunked_est: t_chunked,
+                };
+            }
+        }
+        best
+    }
+
+    /// Total chunked-prefill time for the remainder `L_in - L_p` on the
+    /// CPI (Eq. 1 + Eq. 3, exactly as in Algorithm 1).
+    fn estimate_chunked(
+        &self,
+        input_len: usize,
+        lp: usize,
+        cpi: &EngineStats,
+    ) -> f64 {
+        let l_c = input_len.saturating_sub(lp);
+        if l_c == 0 {
+            return 0.0;
+        }
+        // Prefill tokens available per iteration: budget minus one token
+        // per decode request in the batch.
+        let n_p = self.max_batched_tokens.saturating_sub(cpi.n_decode).max(1);
+        let n_iter = l_c.div_ceil(n_p);
+        // Context at the start of the last iteration (Algorithm 1).
+        let l_last = lp + (l_c / n_p) * n_p;
+        let avg_ctx = (input_len + l_last) as f64 / 2.0;
+        n_iter as f64
+            * self
+                .chunked
+                .predict(avg_ctx, cpi.decode_ctx_sum as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::fit::calibrate;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::simgpu::perfmodel::PerfModel;
+    use crate::simgpu::spec::{A10, A100};
+
+    fn mk_balancer(policy: SplitPolicy) -> Balancer {
+        let ppi = PerfModel::new(A10, LLAMA3_8B);
+        let cpi = PerfModel::new(A100, LLAMA3_8B);
+        let (p, c) = calibrate(&ppi, &cpi, 512, 0.0, 1);
+        Balancer::new(policy, p, c, 512)
+    }
+
+    fn stats(free_blocks: usize, n_decode: usize, ctx_sum: usize) -> EngineStats {
+        EngineStats {
+            n_decode,
+            decode_ctx_sum: ctx_sum,
+            n_prefilling: 0,
+            waiting: 0,
+            free_blocks,
+            block_size: 16,
+            total_blocks: 40_000,
+        }
+    }
+
+    #[test]
+    fn balanced_split_equalizes_times() {
+        let b = mk_balancer(SplitPolicy::Balanced);
+        let d = b.split(2048, &stats(30_000, 48, 48 * 1200));
+        assert!(d.partial_len >= 1 && d.partial_len <= 2048);
+        // The chosen split should roughly balance both estimates.
+        let rel = (d.t_prefill_est - d.t_chunked_est).abs()
+            / d.t_prefill_est.max(d.t_chunked_est);
+        assert!(rel < 0.25, "imbalance {rel}: {d:?}");
+        // And be interior (neither all-PPI nor almost-none).
+        assert!(
+            d.partial_len > 64 && d.partial_len < 2048,
+            "degenerate split {}",
+            d.partial_len
+        );
+    }
+
+    #[test]
+    fn no_free_blocks_forces_full_prefill() {
+        let b = mk_balancer(SplitPolicy::Balanced);
+        let d = b.split(2048, &stats(10, 0, 0));
+        assert_eq!(d.partial_len, 2048);
+    }
+
+    #[test]
+    fn full_policy_always_full() {
+        let b = mk_balancer(SplitPolicy::Full);
+        let d = b.split(1500, &stats(30_000, 10, 10_000));
+        assert_eq!(d.partial_len, 1500);
+    }
+
+    #[test]
+    fn fixed_fraction_policy() {
+        let b = mk_balancer(SplitPolicy::FixedFraction(0.25));
+        let d = b.split(1000, &stats(30_000, 0, 0));
+        assert_eq!(d.partial_len, 250);
+    }
+
+    #[test]
+    fn busier_cpi_shifts_more_to_ppi() {
+        // With a heavily loaded CPI, finishing the remainder there is
+        // slower, so the balanced split pushes more prefix to the PPI.
+        let b = mk_balancer(SplitPolicy::Balanced);
+        let idle = b.split(2048, &stats(30_000, 0, 0)).partial_len;
+        let busy = b.split(2048, &stats(30_000, 400, 400 * 1500)).partial_len;
+        assert!(
+            busy > idle,
+            "busy CPI should increase partial len: idle={idle} busy={busy}"
+        );
+    }
+
+    #[test]
+    fn short_prompts_still_split_validly() {
+        let b = mk_balancer(SplitPolicy::Balanced);
+        for input in [1usize, 2, 7, 63] {
+            let d = b.split(input, &stats(30_000, 16, 16_000));
+            assert!(d.partial_len >= 1 && d.partial_len <= input, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn decision_is_deterministic() {
+        let b = mk_balancer(SplitPolicy::Balanced);
+        let s = stats(30_000, 48, 60_000);
+        assert_eq!(b.split(1777, &s).partial_len, b.split(1777, &s).partial_len);
+    }
+}

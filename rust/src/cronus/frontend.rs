@@ -1,0 +1,296 @@
+//! The Cronus frontend: event-driven driver tying Balancer, PPI and CPI
+//! together on the simulated cluster (paper Fig. 1).
+//!
+//! Request flow (numbers = the paper's Fig. 1 annotations):
+//! 1. an arriving request waits in the frontend until the PPI has a slot;
+//! 2. the Balancer reads fresh CPI statistics and picks the partial
+//!    prefill length;
+//! 3. the request is dispatched to the PPI;
+//! 4. when the PPI finishes the prefix, the frontend is notified and
+//! 5. sends the chunked-prefill request (prompt + processed-prefix
+//!    length) to the CPI;
+//! 6./7. the CPI's first iteration for the request pulls the prefix KV
+//!    from the PPI buffer over the link, overlapped with other requests'
+//!    compute; subsequent iterations run standard chunked prefill, then
+//!    decode.
+//!
+//! With [`SplitPolicy::Full`] this same driver *is* the disaggregated-
+//! prefill baseline (L→H, or H→L with `swap_gpus`).
+
+use std::collections::VecDeque;
+
+use crate::config::DeploymentConfig;
+use crate::cronus::balancer::{Balancer, SplitPolicy};
+use crate::cronus::ppi::{PartialPrefillInstance, PpiJob};
+use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
+use crate::metrics::Collector;
+use crate::simclock::{EventQueue, SimTime};
+use crate::simgpu::fit::calibrate;
+use crate::simgpu::perfmodel::PerfModel;
+use crate::systems::{InstanceStat, RunOutcome, ServingSystem};
+use crate::workload::Request;
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival(usize),
+    PpiDone,
+    CpiDone,
+}
+
+pub struct CronusSystem {
+    cfg: DeploymentConfig,
+    policy: SplitPolicy,
+    /// Swap GPU roles: PPI on the high-end, CPI on the low-end GPU
+    /// (the Disagg. H-L configuration).
+    swap_gpus: bool,
+    label: String,
+}
+
+impl CronusSystem {
+    pub fn new(
+        cfg: DeploymentConfig,
+        policy: SplitPolicy,
+        swap_gpus: bool,
+        label: impl Into<String>,
+    ) -> Self {
+        CronusSystem { cfg, policy, swap_gpus, label: label.into() }
+    }
+
+    /// Performance models for (PPI GPU, CPI GPU) under the current role
+    /// assignment.
+    pub fn perf_models(&self) -> (PerfModel, PerfModel) {
+        let (ppi_gpu, cpi_gpu) = if self.swap_gpus {
+            (self.cfg.high_gpu, self.cfg.low_gpu)
+        } else {
+            (self.cfg.low_gpu, self.cfg.high_gpu)
+        };
+        (
+            PerfModel::new(ppi_gpu, self.cfg.model),
+            PerfModel::new(cpi_gpu, self.cfg.model),
+        )
+    }
+}
+
+impl ServingSystem for CronusSystem {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn run(&mut self, trace: &[Request]) -> RunOutcome {
+        let cfg = &self.cfg;
+        let (ppi_pm, cpi_pm) = self.perf_models();
+
+        // Calibrate the Balancer's predictors by profiling, exactly as
+        // the paper does (§4.4).
+        let (prefill_coeffs, chunked_coeffs) = calibrate(
+            &ppi_pm,
+            &cpi_pm,
+            cfg.engine.max_batched_tokens,
+            cfg.calibration_noise,
+            cfg.calibration_seed,
+        );
+        let balancer = Balancer::new(
+            self.policy,
+            prefill_coeffs,
+            chunked_coeffs,
+            cfg.engine.max_batched_tokens,
+        );
+
+        let mut cpi = EngineInstance::from_params(
+            format!("CPI({})", cpi_pm.gpu.name),
+            cpi_pm,
+            cfg.link,
+            &cfg.engine,
+            cfg.engine.max_batched_tokens,
+        );
+        let mut ppi = PartialPrefillInstance::new(
+            ppi_pm,
+            ppi_pm.kv_capacity_tokens(cfg.engine.activation_reserve_frac),
+        );
+
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut metrics = Collector::new();
+        for (i, r) in trace.iter().enumerate() {
+            q.push(SimTime(r.arrival_ns), Ev::Arrival(i));
+        }
+        let mut frontend: VecDeque<usize> = VecDeque::new();
+        let mut cpi_plan: Option<IterationPlan> = None;
+        let mut rejected = 0usize;
+        let cpi_capacity_tokens =
+            cpi.kv_allocator().total_blocks() * cpi.kv_allocator().block_size();
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Arrival(i) => {
+                    metrics.on_arrival(trace[i].id, now);
+                    frontend.push_back(i);
+                }
+                Ev::PpiDone => {
+                    let (job, next) = ppi.on_done();
+                    let r = trace
+                        .iter()
+                        .find(|r| r.id == job.id)
+                        .expect("PPI job for unknown request");
+                    // ⑤ chunked-prefill request: original prompt plus the
+                    // already-processed prefix length.
+                    cpi.submit(EngineRequest::with_offset(
+                        job.id,
+                        r.input_len,
+                        r.output_len,
+                        job.partial_len,
+                    ));
+                    if let Some((_next_job, dur)) = next {
+                        q.push_after(dur, Ev::PpiDone);
+                    }
+                }
+                Ev::CpiDone => {
+                    let plan = cpi_plan.take().expect("CpiDone without plan");
+                    for ev in cpi.complete_iteration(&plan) {
+                        match ev {
+                            EngineEvent::FirstToken(id) | EngineEvent::Token(id) => {
+                                metrics.on_token(id, now)
+                            }
+                            EngineEvent::Finished(id) => metrics.on_finish(id, now),
+                            EngineEvent::KvReceived(id) => {
+                                // ⑦ transfer complete: PPI buffer freed.
+                                if let Some((_job, dur)) = ppi.release(id) {
+                                    q.push_after(dur, Ev::PpiDone);
+                                }
+                            }
+                            EngineEvent::Preempted(_) => {}
+                        }
+                    }
+                }
+            }
+
+            // ①–③ dispatch frontend -> PPI whenever a slot is free.
+            while ppi.has_slot() && !frontend.is_empty() {
+                let i = frontend.pop_front().unwrap();
+                let r = &trace[i];
+                if r.input_len > cpi_capacity_tokens {
+                    rejected += 1; // cannot ever fit; reject (vLLM would too)
+                    continue;
+                }
+                let decision = balancer.split(r.input_len, &cpi.stats());
+                if let Some((_job, dur)) =
+                    ppi.enqueue(PpiJob { id: r.id, partial_len: decision.partial_len })
+                {
+                    q.push_after(dur, Ev::PpiDone);
+                }
+            }
+
+            // Keep the CPI busy.
+            if cpi_plan.is_none() {
+                if let Some(plan) = cpi.plan_iteration() {
+                    q.push_after(plan.duration_s, Ev::CpiDone);
+                    cpi_plan = Some(plan);
+                }
+            }
+        }
+
+        if rejected > 0 {
+            log::warn!("{}: rejected {rejected} oversized requests", self.label);
+        }
+
+        let report = metrics.report(self.label.clone());
+        RunOutcome {
+            report,
+            instances: vec![
+                InstanceStat {
+                    name: format!("PPI({})", ppi.perf_model().gpu.name),
+                    busy_time_s: ppi.busy_time_s,
+                    n_iterations: ppi.n_prefills,
+                    n_preemptions: 0,
+                    tokens_prefilled: ppi.tokens_prefilled,
+                    tokens_decoded: 0,
+                },
+                InstanceStat {
+                    name: cpi.name.clone(),
+                    busy_time_s: cpi.busy_time_s,
+                    n_iterations: cpi.n_iterations,
+                    n_preemptions: cpi.n_preemptions,
+                    tokens_prefilled: cpi.tokens_prefilled,
+                    tokens_decoded: cpi.tokens_decoded,
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::simgpu::spec::{A10, A100};
+    use crate::workload::azure::{generate, AzureTraceConfig};
+
+    fn small_trace(n: usize) -> Vec<Request> {
+        generate(n, &AzureTraceConfig::default(), 11)
+    }
+
+    #[test]
+    fn cronus_serves_all_requests() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "Cronus");
+        let out = sys.run(&small_trace(50));
+        assert_eq!(out.report.n_finished, 50);
+        assert!(out.report.throughput_rps > 0.0);
+        assert!(out.report.ttft_p99_s > 0.0);
+        assert!(out.report.tbt_p99_s > 0.0);
+    }
+
+    #[test]
+    fn disagg_lh_serves_all_requests() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = CronusSystem::new(cfg, SplitPolicy::Full, false, "Disagg. L-H");
+        let out = sys.run(&small_trace(30));
+        assert_eq!(out.report.n_finished, 30);
+        // All prefill ran on the PPI.
+        let ppi = &out.instances[0];
+        let total_input: u64 =
+            small_trace(30).iter().map(|r| r.input_len as u64).sum();
+        assert_eq!(ppi.tokens_prefilled, total_input);
+    }
+
+    #[test]
+    fn disagg_hl_swaps_roles() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = CronusSystem::new(cfg, SplitPolicy::Full, true, "Disagg. H-L");
+        let (ppi_pm, cpi_pm) = sys.perf_models();
+        assert_eq!(ppi_pm.gpu.name, "A100-80G");
+        assert_eq!(cpi_pm.gpu.name, "A10");
+        let out = sys.run(&small_trace(20));
+        assert_eq!(out.report.n_finished, 20);
+    }
+
+    #[test]
+    fn cronus_splits_are_partial() {
+        // In the balanced mode the CPI must do *some* prefill work
+        // (otherwise it degenerates to disaggregated prefill).
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "Cronus");
+        let out = sys.run(&small_trace(50));
+        let ppi = &out.instances[0];
+        let cpi = &out.instances[1];
+        assert!(ppi.tokens_prefilled > 0, "PPI idle");
+        assert!(
+            cpi.tokens_prefilled > ppi.tokens_prefilled / 20,
+            "CPI did almost no prefill: {} vs {}",
+            cpi.tokens_prefilled,
+            ppi.tokens_prefilled
+        );
+        assert!(cpi.tokens_decoded > 0);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = small_trace(25);
+        let a = CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x")
+            .run(&trace);
+        let b = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "x").run(&trace);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
+        assert_eq!(a.report.ttft_p99_s, b.report.ttft_p99_s);
+    }
+}

@@ -1,0 +1,33 @@
+//! The paper's contribution: partially disaggregated prefill.
+//!
+//! A Cronus deployment pairs one low-end and one high-end GPU:
+//!
+//! * the **frontend** ([`frontend`]) accepts requests and holds them until
+//!   the partial-prefill instance has a free slot;
+//! * the **Balancer** ([`balancer`], paper §4.3 + Algorithm 1) picks the
+//!   partial-prefill length for each request so that the time the low-end
+//!   GPU spends on the prefix equals the time the high-end GPU needs to
+//!   finish the remainder via chunked prefill — keeping both pipeline
+//!   stages at equal throughput;
+//! * the **partial-prefill instance** ([`ppi`], low-end GPU) prefills the
+//!   prefix, one request at a time, buffering the produced KV;
+//! * the **chunked-prefill instance** (the high-end GPU's
+//!   [`crate::engine::EngineInstance`]) fetches the prefix KV during the
+//!   request's first iteration — overlapped with other requests' compute
+//!   (Fig. 2) — then finishes the prefill in chunks piggybacked on
+//!   decode iterations, and serves the whole decode phase.
+//!
+//! The two disaggregated-prefill baselines are this same machinery with
+//! the split forced to the full prompt ([`balancer::SplitPolicy::Full`]),
+//! optionally with the GPU roles swapped (Disagg. H-L) — exactly how the
+//! paper implements them ("we use the same code as our partial prefill
+//! implementation, but always set the partial prefill length to the input
+//! length").
+
+pub mod balancer;
+pub mod frontend;
+pub mod ppi;
+
+pub use balancer::{Balancer, SplitPolicy};
+pub use frontend::CronusSystem;
+pub use ppi::PartialPrefillInstance;

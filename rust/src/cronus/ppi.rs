@@ -1,0 +1,239 @@
+//! The partial-prefill instance (PPI) — the low-end GPU's role in Cronus.
+//!
+//! The PPI runs the prefix prefill for one request at a time (the paper
+//! caps the instance at two requests — one running, one waiting — so the
+//! Balancer always decides with fresh CPI statistics).  Finished prefixes
+//! sit in the KV-cache buffer until the CPI pulls them over the link;
+//! the buffer is bounded by the low-end GPU's KV capacity, and a full
+//! buffer back-pressures the next prefill start (the job stays admitted
+//! but cannot begin computing until a transfer frees space).
+
+use std::collections::VecDeque;
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::engine::request::ReqId;
+use crate::simgpu::perfmodel::PerfModel;
+
+/// A request staged in the PPI.
+#[derive(Clone, Copy, Debug)]
+pub struct PpiJob {
+    pub id: ReqId,
+    pub partial_len: usize,
+}
+
+/// Maximum requests in the instance (paper §4.2: "at most two at a
+/// time", so splits are computed with up-to-date CPI statistics).
+pub const PPI_CAPACITY: usize = 2;
+
+pub struct PartialPrefillInstance {
+    pm: PerfModel,
+    /// Currently computing job, if any.
+    running: Option<PpiJob>,
+    /// Admitted jobs not yet started (FIFO).
+    queue: VecDeque<PpiJob>,
+    /// Completed prefixes awaiting transfer: id -> tokens buffered.
+    buffer: FxHashMap<ReqId, usize>,
+    buffered_tokens: usize,
+    buffer_capacity_tokens: usize,
+    // --- accounting ---
+    pub busy_time_s: f64,
+    pub n_prefills: u64,
+    pub tokens_prefilled: u64,
+    /// Starts delayed because the KV buffer was full.
+    pub n_buffer_stalls: u64,
+}
+
+impl PartialPrefillInstance {
+    pub fn new(pm: PerfModel, buffer_capacity_tokens: usize) -> Self {
+        PartialPrefillInstance {
+            pm,
+            running: None,
+            queue: VecDeque::new(),
+            buffer: FxHashMap::default(),
+            buffered_tokens: 0,
+            buffer_capacity_tokens,
+            busy_time_s: 0.0,
+            n_prefills: 0,
+            tokens_prefilled: 0,
+            n_buffer_stalls: 0,
+        }
+    }
+
+    pub fn perf_model(&self) -> &PerfModel {
+        &self.pm
+    }
+
+    pub fn n_in_instance(&self) -> usize {
+        self.queue.len() + self.running.is_some() as usize
+    }
+
+    /// Is there room for another request?
+    pub fn has_slot(&self) -> bool {
+        self.n_in_instance() < PPI_CAPACITY
+    }
+
+    /// Admit a job.  If the PPI is idle and the buffer has room, the job
+    /// starts immediately: the caller schedules a completion event for
+    /// the returned `(job, duration)`.
+    pub fn enqueue(&mut self, job: PpiJob) -> Option<(PpiJob, f64)> {
+        assert!(self.has_slot(), "PPI over capacity");
+        self.queue.push_back(job);
+        self.try_start()
+    }
+
+    /// Start the head-of-line job if the instance is idle and the buffer
+    /// can absorb its output.
+    fn try_start(&mut self) -> Option<(PpiJob, f64)> {
+        if self.running.is_some() {
+            return None;
+        }
+        let job = *self.queue.front()?;
+        if self.buffered_tokens + job.partial_len > self.buffer_capacity_tokens {
+            self.n_buffer_stalls += 1;
+            return None;
+        }
+        self.queue.pop_front();
+        let duration = self.pm.prefill_time(job.partial_len);
+        self.running = Some(job);
+        self.busy_time_s += duration;
+        Some((job, duration))
+    }
+
+    /// The running prefill finished: move its KV to the buffer; start the
+    /// next queued job if possible.  Returns `(finished, next-started)`.
+    pub fn on_done(&mut self) -> (PpiJob, Option<(PpiJob, f64)>) {
+        let job = self.running.take().expect("PPI done without running job");
+        self.n_prefills += 1;
+        self.tokens_prefilled += job.partial_len as u64;
+        self.buffer.insert(job.id, job.partial_len);
+        self.buffered_tokens += job.partial_len;
+        let started = self.try_start();
+        (job, started)
+    }
+
+    /// The CPI finished pulling `id`'s prefix: free the buffer; a
+    /// buffer-stalled job may now start.
+    pub fn release(&mut self, id: ReqId) -> Option<(PpiJob, f64)> {
+        if let Some(tokens) = self.buffer.remove(&id) {
+            self.buffered_tokens -= tokens;
+        }
+        self.try_start()
+    }
+
+    pub fn buffered_tokens(&self) -> usize {
+        self.buffered_tokens
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.running.is_none()
+    }
+
+    /// Consistency checks for property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.n_in_instance() > PPI_CAPACITY {
+            return Err("PPI over capacity".into());
+        }
+        let sum: usize = self.buffer.values().sum();
+        if sum != self.buffered_tokens {
+            return Err(format!(
+                "buffer accounting drift: {} vs {}",
+                sum, self.buffered_tokens
+            ));
+        }
+        if self.buffered_tokens > self.buffer_capacity_tokens {
+            return Err("buffer over capacity".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::simgpu::spec::A10;
+
+    fn ppi(buffer: usize) -> PartialPrefillInstance {
+        PartialPrefillInstance::new(PerfModel::new(A10, LLAMA3_8B), buffer)
+    }
+
+    #[test]
+    fn runs_one_at_a_time() {
+        let mut p = ppi(100_000);
+        let d1 = p.enqueue(PpiJob { id: 1, partial_len: 500 });
+        assert!(d1.is_some(), "first job starts immediately");
+        let d2 = p.enqueue(PpiJob { id: 2, partial_len: 700 });
+        assert!(d2.is_none(), "second job queues");
+        assert!(!p.has_slot(), "instance capped at two requests");
+        let (done, next) = p.on_done();
+        assert_eq!(done.id, 1);
+        let (next_job, dur) = next.expect("queued job starts");
+        assert_eq!(next_job.id, 2);
+        assert!(dur > 0.0);
+        assert!(p.has_slot());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duration_matches_perf_model() {
+        let mut p = ppi(100_000);
+        let (_, d) = p.enqueue(PpiJob { id: 1, partial_len: 1000 }).unwrap();
+        let expected = PerfModel::new(A10, LLAMA3_8B).prefill_time(1000);
+        assert!((d - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buffer_backpressure_stalls_start() {
+        let mut p = ppi(1000);
+        p.enqueue(PpiJob { id: 1, partial_len: 800 }).unwrap();
+        let (_, next) = p.on_done(); // 800 tokens buffered
+        assert!(next.is_none());
+        // A 300-token job cannot start: 800 + 300 > 1000.
+        let started = p.enqueue(PpiJob { id: 2, partial_len: 300 });
+        assert!(started.is_none());
+        assert_eq!(p.n_buffer_stalls, 1);
+        // The stalled job keeps its slot: one more admission allowed, no
+        // overwrite (regression test for a lost-request bug).
+        assert!(p.has_slot());
+        let started = p.enqueue(PpiJob { id: 3, partial_len: 100 });
+        assert!(started.is_none(), "FIFO: job 2 must start first");
+        assert!(!p.has_slot());
+        // Releasing the buffer starts job 2 (not 3).
+        let (job, _) = p.release(1).expect("stalled job resumes");
+        assert_eq!(job.id, 2);
+        assert_eq!(p.buffered_tokens(), 0);
+        // job 3 starts after job 2 completes.
+        let (done, next) = p.on_done();
+        assert_eq!(done.id, 2);
+        assert_eq!(next.unwrap().0.id, 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn accounting() {
+        let mut p = ppi(100_000);
+        p.enqueue(PpiJob { id: 1, partial_len: 600 }).unwrap();
+        p.on_done();
+        assert_eq!(p.n_prefills, 1);
+        assert_eq!(p.tokens_prefilled, 600);
+        assert!(p.busy_time_s > 0.0);
+        assert_eq!(p.buffered_tokens(), 600);
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut p = ppi(1000);
+        assert!(p.release(42).is_none());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_capacity_panics() {
+        let mut p = ppi(100_000);
+        p.enqueue(PpiJob { id: 1, partial_len: 10 });
+        p.enqueue(PpiJob { id: 2, partial_len: 10 });
+        p.enqueue(PpiJob { id: 3, partial_len: 10 });
+    }
+}

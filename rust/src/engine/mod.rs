@@ -1,0 +1,32 @@
+//! The continuous-batching inference engine with chunked prefill —
+//! the per-GPU substrate every serving system in this crate schedules on
+//! (Sarathi/vLLM-style; the paper implements Cronus on a vLLM fork).
+//!
+//! One [`instance::EngineInstance`] models one GPU running one model
+//! (or a layer fraction of it, for pipeline parallelism).  The driver
+//! loop lives in the *system* (Cronus frontend, DP router, PP pipeline);
+//! the engine only answers two questions:
+//!
+//! 1. [`instance::EngineInstance::plan_iteration`] — given current queues
+//!    and KV state, what batch runs next and how long does it take?
+//! 2. [`instance::EngineInstance::complete_iteration`] — apply the
+//!    iteration's effects (tokens emitted, prefills advanced, requests
+//!    finished, KV freed) and report them as events.
+//!
+//! Scheduling policy (matches the paper's setup):
+//! * decode-first: every running decode request contributes one token;
+//! * the remaining token budget (512, or 256 on DP's low-end GPU) is
+//!   filled with prefill chunks, head-of-line first;
+//! * admission requires KV blocks for the full prompt; decode growth
+//!   allocates block-by-block and preempts the youngest request when the
+//!   pool runs dry;
+//! * a request arriving with `prefill_offset > 0` (Cronus partial
+//!   prefill / disaggregated prefill) spends its first iteration fetching
+//!   the prefix KV over the link — the transfer *replaces* its compute
+//!   and overlaps with other requests' iteration (paper Fig. 2).
+
+pub mod instance;
+pub mod request;
+
+pub use instance::{EngineEvent, EngineInstance, EngineStats, IterationPlan};
+pub use request::{EngineRequest, Phase};

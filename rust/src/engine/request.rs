@@ -1,0 +1,140 @@
+//! Per-request state machine inside an engine instance.
+
+pub type ReqId = u64;
+
+/// Lifecycle phase of a request on one engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// In the waiting queue; no KV allocated.
+    Queued,
+    /// Prefill in progress; `done` local prompt tokens computed so far
+    /// (on top of `prefill_offset` computed elsewhere).
+    Prefilling { done: usize },
+    /// Decode in progress; `generated` output tokens emitted so far
+    /// (the first was produced by the final prefill iteration).
+    Decoding { generated: usize },
+    Finished,
+}
+
+/// A request as tracked by an engine instance.
+#[derive(Clone, Debug)]
+pub struct EngineRequest {
+    pub id: ReqId,
+    pub input_len: usize,
+    pub output_len: usize,
+    /// Prompt tokens whose KV was computed on another instance (Cronus
+    /// partial prefill).  `prefill_offset == input_len` is full
+    /// disaggregation: this engine only decodes.
+    pub prefill_offset: usize,
+    /// KV for `[0, prefill_offset)` must still be fetched over the link;
+    /// cleared once the transfer iteration completes.
+    pub needs_kv_recv: bool,
+    pub phase: Phase,
+}
+
+impl EngineRequest {
+    /// A request served end-to-end by this engine (DP / PP / standalone).
+    pub fn whole(id: ReqId, input_len: usize, output_len: usize) -> Self {
+        EngineRequest {
+            id,
+            input_len,
+            output_len,
+            prefill_offset: 0,
+            needs_kv_recv: false,
+            phase: Phase::Queued,
+        }
+    }
+
+    /// A request whose first `prefill_offset` prompt tokens were prefilled
+    /// on another instance (arrives with a pending KV transfer).
+    pub fn with_offset(
+        id: ReqId,
+        input_len: usize,
+        output_len: usize,
+        prefill_offset: usize,
+    ) -> Self {
+        assert!(prefill_offset <= input_len);
+        EngineRequest {
+            id,
+            input_len,
+            output_len,
+            prefill_offset,
+            needs_kv_recv: prefill_offset > 0,
+            phase: Phase::Queued,
+        }
+    }
+
+    /// Prompt tokens this engine still has to prefill.
+    pub fn local_prefill_len(&self) -> usize {
+        self.input_len - self.prefill_offset
+    }
+
+    /// Prompt tokens this engine has left to prefill right now.
+    pub fn prefill_remaining(&self) -> usize {
+        match self.phase {
+            Phase::Queued => self.local_prefill_len(),
+            Phase::Prefilling { done } => self.local_prefill_len() - done,
+            _ => 0,
+        }
+    }
+
+    /// Context length (tokens with KV present) once `generated` outputs
+    /// exist: the whole prompt plus the generated tokens.
+    pub fn context_len(&self) -> usize {
+        match self.phase {
+            Phase::Queued => 0,
+            Phase::Prefilling { done } => self.prefill_offset + done,
+            Phase::Decoding { generated } => self.input_len + generated,
+            Phase::Finished => self.input_len + self.output_len,
+        }
+    }
+
+    pub fn is_decoding(&self) -> bool {
+        matches!(self.phase, Phase::Decoding { .. })
+    }
+
+    pub fn is_prefilling(&self) -> bool {
+        matches!(self.phase, Phase::Queued | Phase::Prefilling { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_request_lifecycle_counts() {
+        let mut r = EngineRequest::whole(1, 100, 10);
+        assert_eq!(r.local_prefill_len(), 100);
+        assert_eq!(r.prefill_remaining(), 100);
+        r.phase = Phase::Prefilling { done: 60 };
+        assert_eq!(r.prefill_remaining(), 40);
+        assert_eq!(r.context_len(), 60);
+        r.phase = Phase::Decoding { generated: 3 };
+        assert_eq!(r.prefill_remaining(), 0);
+        assert_eq!(r.context_len(), 103);
+    }
+
+    #[test]
+    fn offset_request() {
+        let r = EngineRequest::with_offset(2, 100, 10, 70);
+        assert!(r.needs_kv_recv);
+        assert_eq!(r.local_prefill_len(), 30);
+        // Full disaggregation: nothing to prefill locally.
+        let r = EngineRequest::with_offset(3, 100, 10, 100);
+        assert_eq!(r.local_prefill_len(), 0);
+        assert!(r.needs_kv_recv);
+    }
+
+    #[test]
+    fn zero_offset_needs_no_recv() {
+        let r = EngineRequest::with_offset(4, 100, 10, 0);
+        assert!(!r.needs_kv_recv);
+    }
+
+    #[test]
+    #[should_panic]
+    fn offset_larger_than_input_panics() {
+        EngineRequest::with_offset(5, 10, 1, 11);
+    }
+}

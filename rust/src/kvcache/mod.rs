@@ -1,0 +1,273 @@
+//! Paged KV-cache block allocator (vLLM-style).
+//!
+//! GPU memory for KV caches is divided into fixed-size blocks of
+//! `block_size` tokens; each request owns an ordered list of blocks
+//! covering its context.  The engine admits requests only when enough
+//! free blocks exist (Algorithm 1's `N_free` check reads this structure)
+//! and grows allocations one block at a time as decode extends contexts,
+//! preempting when the pool runs dry.
+
+use crate::util::fxhash::FxHashMap;
+
+pub type ReqId = u64;
+
+/// Errors surfaced to the scheduler (which reacts by waiting/preempting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum KvError {
+    #[error("out of KV blocks: need {need}, free {free}")]
+    OutOfBlocks { need: usize, free: usize },
+    #[error("unknown request {0}")]
+    UnknownRequest(ReqId),
+    #[error("request {0} already has an allocation")]
+    AlreadyAllocated(ReqId),
+}
+
+/// Fixed-pool paged block allocator.
+#[derive(Clone, Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    n_blocks: usize,
+    free: Vec<u32>,
+    /// request -> (block list, tokens covered)
+    table: FxHashMap<ReqId, (Vec<u32>, usize)>,
+}
+
+impl BlockAllocator {
+    pub fn new(n_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        BlockAllocator {
+            block_size,
+            n_blocks,
+            free: (0..n_blocks as u32).rev().collect(),
+            table: FxHashMap::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Blocks needed to cover `tokens` context tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a *new* allocation of `tokens` be satisfied right now?
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Allocate blocks covering `tokens` for a new request.
+    pub fn allocate(&mut self, req: ReqId, tokens: usize) -> Result<(), KvError> {
+        if self.table.contains_key(&req) {
+            return Err(KvError::AlreadyAllocated(req));
+        }
+        let need = self.blocks_for(tokens);
+        if need > self.free.len() {
+            return Err(KvError::OutOfBlocks { need, free: self.free.len() });
+        }
+        let blocks = self.free.split_off(self.free.len() - need);
+        self.table.insert(req, (blocks, tokens));
+        Ok(())
+    }
+
+    /// Extend a request's coverage to `new_tokens` total, allocating
+    /// additional blocks as needed (decode growth: +1 token per step).
+    pub fn grow(&mut self, req: ReqId, new_tokens: usize) -> Result<(), KvError> {
+        let (blocks, tokens) = self
+            .table
+            .get_mut(&req)
+            .ok_or(KvError::UnknownRequest(req))?;
+        if new_tokens <= *tokens {
+            *tokens = (*tokens).max(new_tokens);
+            return Ok(());
+        }
+        let have = blocks.len();
+        let need_total = new_tokens.div_ceil(self.block_size);
+        let extra = need_total.saturating_sub(have);
+        if extra > self.free.len() {
+            return Err(KvError::OutOfBlocks { need: extra, free: self.free.len() });
+        }
+        let mut newly = self.free.split_off(self.free.len() - extra);
+        blocks.append(&mut newly);
+        *tokens = new_tokens;
+        Ok(())
+    }
+
+    /// Release all blocks owned by `req`.
+    pub fn release(&mut self, req: ReqId) -> Result<usize, KvError> {
+        let (mut blocks, _) =
+            self.table.remove(&req).ok_or(KvError::UnknownRequest(req))?;
+        let n = blocks.len();
+        self.free.append(&mut blocks);
+        Ok(n)
+    }
+
+    pub fn tokens_of(&self, req: ReqId) -> Option<usize> {
+        self.table.get(&req).map(|(_, t)| *t)
+    }
+
+    pub fn holds(&self, req: ReqId) -> bool {
+        self.table.contains_key(&req)
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Sum of context tokens across all live allocations.
+    pub fn total_tokens(&self) -> usize {
+        self.table.values().map(|(_, t)| *t).sum()
+    }
+
+    /// Internal consistency check (used by property tests): every block is
+    /// either free or owned by exactly one request, and counts add up.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.n_blocks];
+        for &b in &self.free {
+            let b = b as usize;
+            if b >= self.n_blocks {
+                return Err(format!("free block {b} out of range"));
+            }
+            if seen[b] {
+                return Err(format!("block {b} double-counted (free list)"));
+            }
+            seen[b] = true;
+        }
+        for (req, (blocks, tokens)) in &self.table {
+            if blocks.len() < tokens.div_ceil(self.block_size) {
+                return Err(format!(
+                    "req {req}: {} blocks cannot cover {} tokens",
+                    blocks.len(),
+                    tokens
+                ));
+            }
+            for &b in blocks {
+                let b = b as usize;
+                if b >= self.n_blocks {
+                    return Err(format!("owned block {b} out of range"));
+                }
+                if seen[b] {
+                    return Err(format!("block {b} double-owned"));
+                }
+                seen[b] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked block (neither free nor owned)".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut a = BlockAllocator::new(10, 16);
+        a.allocate(1, 33).unwrap(); // 3 blocks
+        assert_eq!(a.free_blocks(), 7);
+        assert_eq!(a.tokens_of(1), Some(33));
+        assert_eq!(a.release(1).unwrap(), 3);
+        assert_eq!(a.free_blocks(), 10);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let a = BlockAllocator::new(10, 16);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn allocation_fails_when_exhausted() {
+        let mut a = BlockAllocator::new(4, 16);
+        a.allocate(1, 48).unwrap(); // 3 blocks
+        let err = a.allocate(2, 32).unwrap_err(); // needs 2, only 1 free
+        assert_eq!(err, KvError::OutOfBlocks { need: 2, free: 1 });
+        // Failed allocation must not leak partial state.
+        assert_eq!(a.free_blocks(), 1);
+        assert!(!a.holds(2));
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_allocate_rejected() {
+        let mut a = BlockAllocator::new(4, 16);
+        a.allocate(1, 16).unwrap();
+        assert_eq!(a.allocate(1, 16).unwrap_err(), KvError::AlreadyAllocated(1));
+    }
+
+    #[test]
+    fn grow_within_block_is_free() {
+        let mut a = BlockAllocator::new(4, 16);
+        a.allocate(1, 10).unwrap();
+        a.grow(1, 16).unwrap(); // still 1 block
+        assert_eq!(a.free_blocks(), 3);
+        a.grow(1, 17).unwrap(); // now 2 blocks
+        assert_eq!(a.free_blocks(), 2);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_fails_preserves_state() {
+        let mut a = BlockAllocator::new(2, 16);
+        a.allocate(1, 32).unwrap(); // both blocks
+        let err = a.grow(1, 33).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        assert_eq!(a.tokens_of(1), Some(32));
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_is_monotone() {
+        let mut a = BlockAllocator::new(4, 16);
+        a.allocate(1, 32).unwrap();
+        a.grow(1, 20).unwrap(); // shrink request ignored
+        assert_eq!(a.tokens_of(1), Some(32));
+    }
+
+    #[test]
+    fn release_unknown_rejected() {
+        let mut a = BlockAllocator::new(2, 16);
+        assert_eq!(a.release(9).unwrap_err(), KvError::UnknownRequest(9));
+    }
+
+    #[test]
+    fn total_tokens_tracks_live_contexts() {
+        let mut a = BlockAllocator::new(10, 16);
+        a.allocate(1, 20).unwrap();
+        a.allocate(2, 30).unwrap();
+        assert_eq!(a.total_tokens(), 50);
+        a.release(1).unwrap();
+        assert_eq!(a.total_tokens(), 30);
+        assert_eq!(a.n_requests(), 1);
+    }
+
+    #[test]
+    fn zero_token_allocation() {
+        let mut a = BlockAllocator::new(2, 16);
+        a.allocate(1, 0).unwrap();
+        assert_eq!(a.free_blocks(), 2);
+        a.grow(1, 5).unwrap();
+        assert_eq!(a.free_blocks(), 1);
+        a.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! # Cronus — partially disaggregated prefill for heterogeneous GPU clusters
+//!
+//! Production-quality reproduction of *“Cronus: Efficient LLM inference on
+//! Heterogeneous GPU Clusters via Partially Disaggregated Prefill”*
+//! (Liu, Xu & Hu, 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * The **Rust coordinator** (this crate) implements the paper's
+//!   contribution — the frontend Balancer, partial-prefill instance (PPI)
+//!   and chunked-prefill instance (CPI) — plus every substrate it needs:
+//!   a continuous-batching engine with chunked prefill, a paged KV-cache
+//!   allocator, a heterogeneous-GPU performance model, a discrete-event
+//!   simulator, workload generation, metrics, and all four baselines
+//!   (DP+chunked, PP+chunked, disaggregated H→L and L→H).
+//! * The **JAX model** and **Pallas kernels** (`python/compile/`) are
+//!   AOT-lowered to HLO text once; [`runtime`] loads and executes them via
+//!   the PJRT CPU client so the served tokens are real model output with
+//!   Python never on the request path.
+//!
+//! Start with [`systems`] (the `ServingSystem` trait ties everything
+//! together), or run `cargo run --example quickstart`.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod config;
+pub mod cronus;
+pub mod engine;
+pub mod kvcache;
+pub mod launcher;
+pub mod runtime;
+pub mod server;
+pub mod systems;
+pub mod metrics;
+pub mod simclock;
+pub mod simgpu;
+pub mod util;
+pub mod workload;

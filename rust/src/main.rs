@@ -1,0 +1,254 @@
+//! `cronus` — the launcher CLI.
+//!
+//! ```text
+//! cronus serve            run the real tiny model end-to-end (PJRT)
+//! cronus bench-table2     reproduce Table 2 (max throughput)
+//! cronus bench-fig4       reproduce Fig. 4 (TTFT/TBT P99 under load)
+//! cronus bench-table3     reproduce Table 3 (relative GPU utilization)
+//! cronus bench-fig3       reproduce Fig. 3 (linear iteration-time fits)
+//! cronus calibrate        print the Balancer's fitted predictors
+//! cronus trace            generate + summarize a workload trace
+//! cronus info             show GPU specs / model geometries / defaults
+//! ```
+//!
+//! Every subcommand takes `--n`, `--seed` and (where relevant) `--model`,
+//! `--low-gpu`, `--config <file.toml>`; see `cronus <cmd> --help`.
+
+use cronus::benchkit::Table;
+use cronus::config::cli::Parser;
+use cronus::config::{toml, DeploymentConfig};
+use cronus::launcher::{self, ExperimentOpts};
+use cronus::simgpu::model_desc;
+use cronus::simgpu::spec;
+use cronus::workload::azure::{generate, AzureTraceConfig};
+
+fn common_parser(cmd: &'static str, about: &'static str) -> Parser {
+    Parser::new(cmd, about)
+        .opt("n", "requests per run", Some("1000"))
+        .opt("seed", "workload seed", Some("42"))
+        .opt("config", "TOML config file with deployment overrides", None)
+        .opt("model", "model (llama3-8b | qwen2-7b)", Some("llama3-8b"))
+        .opt("low-gpu", "low-end GPU (a10 | a30)", Some("a10"))
+        .flag("help", "print usage")
+}
+
+fn deployment(args: &cronus::config::cli::Args) -> DeploymentConfig {
+    let model = model_desc::by_name(args.get("model").unwrap()).unwrap_or_else(|| {
+        eprintln!("unknown model {:?}", args.get("model"));
+        std::process::exit(2);
+    });
+    let low = spec::by_name(args.get("low-gpu").unwrap()).unwrap_or_else(|| {
+        eprintln!("unknown gpu {:?}", args.get("low-gpu"));
+        std::process::exit(2);
+    });
+    let mut cfg = DeploymentConfig::paper(spec::A100, low, model);
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(2);
+        });
+        let doc = toml::parse(&text).unwrap_or_else(|e| {
+            eprintln!("{path}: {e}");
+            std::process::exit(2);
+        });
+        if let Err(e) = cfg.apply_toml(&doc) {
+            eprintln!("{path}: {e}");
+            std::process::exit(2);
+        }
+    }
+    cfg
+}
+
+fn opts(args: &cronus::config::cli::Args) -> ExperimentOpts {
+    ExperimentOpts {
+        n_requests: args.get_usize("n").unwrap(),
+        seed: args.get_u64("seed").unwrap(),
+    }
+}
+
+fn main() {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if raw.is_empty() { "help".to_string() } else { raw.remove(0) };
+    match cmd.as_str() {
+        "serve" => serve(&raw),
+        "bench-table2" => with_parser(
+            common_parser("cronus bench-table2", "reproduce Table 2"),
+            &raw,
+            |args| {
+                let (table, _) = launcher::table2(&opts(args));
+                table.print();
+            },
+        ),
+        "bench-fig4" => with_parser(
+            common_parser("cronus bench-fig4", "reproduce Fig. 4")
+                .opt("rate-frac", "offered rate / slowest capacity", Some("0.7")),
+            &raw,
+            |args| {
+                let panels =
+                    launcher::fig4(&opts(args), args.get_f64("rate-frac").unwrap());
+                let (ttft, tbt) = launcher::fig4_tables(&panels);
+                ttft.print();
+                tbt.print();
+            },
+        ),
+        "bench-table3" => with_parser(
+            common_parser("cronus bench-table3", "reproduce Table 3"),
+            &raw,
+            |args| launcher::table3(&opts(args)).print(),
+        ),
+        "bench-fig3" => with_parser(
+            common_parser("cronus bench-fig3", "reproduce Fig. 3")
+                .opt("noise", "profiling noise fraction", Some("0.008")),
+            &raw,
+            |args| {
+                launcher::fig3(
+                    args.get_f64("noise").unwrap(),
+                    args.get_u64("seed").unwrap(),
+                )
+                .print()
+            },
+        ),
+        "calibrate" => with_parser(
+            common_parser("cronus calibrate", "fit the Balancer predictors"),
+            &raw,
+            |args| {
+                let cfg = deployment(args);
+                let ppi = cronus::simgpu::perfmodel::PerfModel::new(cfg.low_gpu, cfg.model);
+                let cpi =
+                    cronus::simgpu::perfmodel::PerfModel::new(cfg.high_gpu, cfg.model);
+                let (p, c) = cronus::simgpu::fit::calibrate(
+                    &ppi,
+                    &cpi,
+                    cfg.engine.max_batched_tokens,
+                    cfg.calibration_noise,
+                    cfg.calibration_seed,
+                );
+                println!(
+                    "Eq.2 on {}: T = {:.3e}·L + {:.3e}  (R² {:.4}, MAPE {:.2}%)",
+                    cfg.low_gpu.name, p.k_p, p.b_p, p.r2, p.mape * 100.0
+                );
+                println!(
+                    "Eq.3 on {}: t = {:.3e}·Lp2 + {:.3e}·ΣLd + {:.3e}  (R² {:.4}, MAPE {:.2}%)",
+                    cfg.high_gpu.name, c.k_ctxp, c.k_ctxd, c.b_c, c.r2, c.mape * 100.0
+                );
+            },
+        ),
+        "trace" => with_parser(
+            common_parser("cronus trace", "generate + summarize a workload trace")
+                .flag("short-long", "use the §6 short-input/long-output workload"),
+            &raw,
+            |args| {
+                let wcfg = if args.has_flag("short-long") {
+                    AzureTraceConfig::short_input_long_output()
+                } else {
+                    AzureTraceConfig::default()
+                };
+                let trace = generate(args.get_usize("n").unwrap(), &wcfg, args.get_u64("seed").unwrap());
+                let s = cronus::workload::stats(&trace);
+                println!("{s:?}");
+                for r in trace.iter().take(10) {
+                    println!("  req {:>4}: input {:>5}, output {:>5}", r.id, r.input_len, r.output_len);
+                }
+            },
+        ),
+        "info" => {
+            let mut t = Table::new("GPU specs", &["name", "BF16 TFLOPS", "HBM GB/s", "mem GiB"]);
+            for g in [spec::A100, spec::A30, spec::A10] {
+                t.row(vec![
+                    g.name.to_string(),
+                    format!("{}", g.bf16_tflops),
+                    format!("{}", g.hbm_gbps),
+                    format!("{}", g.mem_gib),
+                ]);
+            }
+            t.print();
+            let mut t = Table::new(
+                "Model geometries",
+                &["name", "layers", "d_model", "kv heads", "params", "KV B/token"],
+            );
+            for m in [model_desc::LLAMA3_8B, model_desc::QWEN2_7B, model_desc::TINY] {
+                t.row(vec![
+                    m.name.to_string(),
+                    m.n_layers.to_string(),
+                    m.d_model.to_string(),
+                    m.n_kv_heads.to_string(),
+                    m.param_count().to_string(),
+                    m.kv_bytes_per_token().to_string(),
+                ]);
+            }
+            t.print();
+        }
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn with_parser(
+    parser: Parser,
+    raw: &[String],
+    f: impl FnOnce(&cronus::config::cli::Args),
+) {
+    let args = parser.parse(raw).unwrap_or_else(|e| {
+        eprintln!("{e}\n{}", parser.usage());
+        std::process::exit(2);
+    });
+    if args.has_flag("help") {
+        println!("{}", parser.usage());
+        return;
+    }
+    f(&args);
+}
+
+fn serve(raw: &[String]) {
+    let parser = Parser::new("cronus serve", "serve real requests through the AOT model")
+        .opt("n", "number of requests", Some("16"))
+        .opt("seed", "workload seed", Some("7"))
+        .flag("help", "print usage");
+    with_parser(parser, raw, |args| {
+        use cronus::server::{RealServer, ServeRequest};
+        use cronus::util::rng::Rng;
+        let dir = cronus::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("no artifacts at {dir:?} — run `make artifacts` first");
+            std::process::exit(2);
+        }
+        let n = args.get_usize("n").unwrap();
+        let mut rng = Rng::new(args.get_u64("seed").unwrap());
+        let server = RealServer::start(&dir).expect("server start");
+        let t0 = std::time::Instant::now();
+        for id in 0..n as u64 {
+            let len = rng.range_usize(8, 200);
+            let prompt: Vec<i32> =
+                (0..len).map(|_| rng.range(1, 2047) as i32).collect();
+            server.submit(ServeRequest { id, prompt, max_new_tokens: rng.range_usize(4, 32) });
+        }
+        let responses = server.shutdown().expect("serve");
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        println!(
+            "{} requests, {tokens} tokens in {wall:.2}s ({:.1} tok/s)",
+            responses.len(),
+            tokens as f64 / wall
+        );
+    });
+}
+
+fn print_help() {
+    println!(
+        "cronus — partially disaggregated prefill for heterogeneous GPU clusters\n\n\
+         subcommands:\n\
+         \x20 serve          run the real tiny model end-to-end (PJRT CPU)\n\
+         \x20 bench-table2   reproduce Table 2 (max throughput)\n\
+         \x20 bench-fig4     reproduce Fig. 4 (TTFT/TBT P99 under load)\n\
+         \x20 bench-table3   reproduce Table 3 (relative GPU utilization)\n\
+         \x20 bench-fig3     reproduce Fig. 3 (linear iteration-time fits)\n\
+         \x20 calibrate      print the Balancer's fitted predictors\n\
+         \x20 trace          generate + summarize a workload trace\n\
+         \x20 info           GPU specs / model geometries\n\n\
+         run `cronus <cmd> --help` for options."
+    );
+}

@@ -1,0 +1,251 @@
+//! Metrics substrate: per-request latency bookkeeping and the three
+//! quantities the paper evaluates — throughput, TTFT P99, TBT P99.
+//!
+//! TTFT (time-to-first-token) is first-token time minus arrival; for the
+//! disaggregated/partial-prefill systems it *includes* the KV-cache
+//! transfer, matching the paper's measurement rule.  TBT
+//! (time-between-tokens) is every inter-token gap in the decode phase;
+//! P99 is taken over all gaps of all requests.
+
+use crate::simclock::SimTime;
+use crate::util::stats::{mean, percentile};
+use crate::util::fxhash::FxHashMap;
+
+pub type ReqId = u64;
+
+#[derive(Clone, Debug)]
+struct RequestRecord {
+    arrival: SimTime,
+    first_token: Option<SimTime>,
+    last_token: Option<SimTime>,
+    tbt_gaps_s: Vec<f64>,
+    finished: Option<SimTime>,
+    output_tokens: usize,
+}
+
+/// Collects per-request events during a run; produces a [`Report`].
+#[derive(Default)]
+pub struct Collector {
+    records: FxHashMap<ReqId, RequestRecord>,
+}
+
+impl Collector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_arrival(&mut self, req: ReqId, t: SimTime) {
+        let prev = self.records.insert(
+            req,
+            RequestRecord {
+                arrival: t,
+                first_token: None,
+                last_token: None,
+                tbt_gaps_s: Vec::new(),
+                finished: None,
+                output_tokens: 0,
+            },
+        );
+        debug_assert!(prev.is_none(), "request {req} arrived twice");
+    }
+
+    /// A generated token at time `t`.  The first call records TTFT; later
+    /// calls record TBT gaps.
+    pub fn on_token(&mut self, req: ReqId, t: SimTime) {
+        let rec = self.records.get_mut(&req).expect("token for unknown request");
+        match rec.last_token {
+            None => rec.first_token = Some(t),
+            Some(prev) => {
+                debug_assert!(t >= prev, "token time went backwards");
+                rec.tbt_gaps_s.push(t.saturating_sub(prev).as_secs_f64());
+            }
+        }
+        rec.last_token = Some(t);
+        rec.output_tokens += 1;
+    }
+
+    pub fn on_finish(&mut self, req: ReqId, t: SimTime) {
+        let rec = self.records.get_mut(&req).expect("finish for unknown request");
+        debug_assert!(rec.finished.is_none(), "request {req} finished twice");
+        rec.finished = Some(t);
+    }
+
+    pub fn n_arrived(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn n_finished(&self) -> usize {
+        self.records.values().filter(|r| r.finished.is_some()).count()
+    }
+
+    /// Build the final report.  `makespan` is the completion time of the
+    /// last request (simulated), which defines throughput.
+    pub fn report(&self, label: impl Into<String>) -> Report {
+        let mut ttft = Vec::new();
+        let mut tbt = Vec::new();
+        let mut e2e = Vec::new();
+        let mut makespan = SimTime::ZERO;
+        let mut finished = 0usize;
+        let mut total_output_tokens = 0usize;
+        for rec in self.records.values() {
+            if let Some(ft) = rec.first_token {
+                ttft.push(ft.saturating_sub(rec.arrival).as_secs_f64());
+            }
+            tbt.extend_from_slice(&rec.tbt_gaps_s);
+            if let Some(done) = rec.finished {
+                finished += 1;
+                makespan = makespan.max(done);
+                e2e.push(done.saturating_sub(rec.arrival).as_secs_f64());
+                total_output_tokens += rec.output_tokens;
+            }
+        }
+        let makespan_s = makespan.as_secs_f64();
+        Report {
+            label: label.into(),
+            n_requests: self.records.len(),
+            n_finished: finished,
+            makespan_s,
+            throughput_rps: if makespan_s > 0.0 {
+                finished as f64 / makespan_s
+            } else {
+                0.0
+            },
+            token_throughput_tps: if makespan_s > 0.0 {
+                total_output_tokens as f64 / makespan_s
+            } else {
+                0.0
+            },
+            ttft_mean_s: mean(&ttft),
+            ttft_p50_s: percentile(&ttft, 50.0),
+            ttft_p99_s: percentile(&ttft, 99.0),
+            tbt_mean_s: mean(&tbt),
+            tbt_p50_s: percentile(&tbt, 50.0),
+            tbt_p99_s: percentile(&tbt, 99.0),
+            e2e_p50_s: percentile(&e2e, 50.0),
+            e2e_p99_s: percentile(&e2e, 99.0),
+        }
+    }
+}
+
+/// Aggregate results of one run (one cell of a paper table / one point of
+/// a paper figure).
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub label: String,
+    pub n_requests: usize,
+    pub n_finished: usize,
+    pub makespan_s: f64,
+    pub throughput_rps: f64,
+    pub token_throughput_tps: f64,
+    pub ttft_mean_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tbt_mean_s: f64,
+    pub tbt_p50_s: f64,
+    pub tbt_p99_s: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p99_s: f64,
+}
+
+impl Report {
+    /// One-line summary used by benches and examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} {:>5}/{:<5} reqs  thpt {:>6.2} req/s ({:>7.0} tok/s)  \
+             TTFT p99 {:>7.3}s  TBT p99 {:>7.4}s  makespan {:>8.2}s",
+            self.label,
+            self.n_finished,
+            self.n_requests,
+            self.throughput_rps,
+            self.token_throughput_tps,
+            self.ttft_p99_s,
+            self.tbt_p99_s,
+            self.makespan_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn ttft_and_tbt_bookkeeping() {
+        let mut c = Collector::new();
+        c.on_arrival(1, t(1.0));
+        c.on_token(1, t(1.5)); // TTFT = 0.5
+        c.on_token(1, t(1.6)); // gap 0.1
+        c.on_token(1, t(1.8)); // gap 0.2
+        c.on_finish(1, t(1.8));
+        let r = c.report("x");
+        assert!((r.ttft_p99_s - 0.5).abs() < 1e-9);
+        assert!((r.tbt_mean_s - 0.15).abs() < 1e-9);
+        assert_eq!(r.n_finished, 1);
+    }
+
+    #[test]
+    fn throughput_uses_makespan() {
+        let mut c = Collector::new();
+        for i in 0..10 {
+            c.on_arrival(i, SimTime::ZERO);
+            c.on_token(i, t(0.5));
+            c.on_finish(i, t(2.0));
+        }
+        let r = c.report("x");
+        assert!((r.throughput_rps - 5.0).abs() < 1e-9);
+        assert_eq!(r.makespan_s, 2.0);
+    }
+
+    #[test]
+    fn unfinished_requests_counted_separately() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_arrival(2, SimTime::ZERO);
+        c.on_token(1, t(1.0));
+        c.on_finish(1, t(1.0));
+        let r = c.report("x");
+        assert_eq!(r.n_requests, 2);
+        assert_eq!(r.n_finished, 1);
+    }
+
+    #[test]
+    fn p99_separates_tail() {
+        let mut c = Collector::new();
+        // 95 fast requests + 5 slow ones (p99 rank 98.01 interpolates
+        // inside the slow cluster).
+        for i in 0..100 {
+            c.on_arrival(i, SimTime::ZERO);
+            let ttft = if i >= 95 { 10.0 } else { 0.1 };
+            c.on_token(i, t(ttft));
+            c.on_finish(i, t(ttft));
+        }
+        let r = c.report("x");
+        assert!(r.ttft_p99_s > 5.0, "p99 {}", r.ttft_p99_s);
+        assert!(r.ttft_p50_s < 0.2);
+    }
+
+    #[test]
+    fn token_throughput() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        for k in 1..=10 {
+            c.on_token(1, t(k as f64 * 0.1));
+        }
+        c.on_finish(1, t(1.0));
+        let r = c.report("x");
+        assert!((r.token_throughput_tps - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summary_contains_label() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_token(1, t(0.1));
+        c.on_finish(1, t(0.2));
+        assert!(c.report("cronus").summary().contains("cronus"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (parameter order, shapes, entry-point files).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One parameter tensor's slot in `weights.bin`.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+/// One compiled entry point.
+#[derive(Clone, Debug)]
+pub struct EntryPoint {
+    pub file: PathBuf,
+    /// chunk size (prefill) or batch size (decode).
+    pub width: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model_name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_model: usize,
+    pub max_seq: usize,
+    pub param_count: u64,
+    pub weights_file: PathBuf,
+    pub params: Vec<ParamEntry>,
+    pub prefill: EntryPoint,
+    pub decode: EntryPoint,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_value(&v, dir)
+    }
+
+    pub fn from_value(v: &Value, dir: &Path) -> Result<Manifest> {
+        let model = v.get("model").ok_or_else(|| anyhow!("missing 'model'"))?;
+        let get = |obj: &Value, key: &str| -> Result<usize> {
+            obj.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("missing model.{key}"))
+        };
+
+        let mut params = Vec::new();
+        let mut expected_offset = 0usize;
+        for entry in v
+            .get("params")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("missing 'params'"))?
+        {
+            let name = entry
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("param missing name"))?
+                .to_string();
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("param {name} missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                .collect::<Result<_>>()?;
+            let offset_bytes = entry
+                .get("offset_bytes")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("param {name} missing offset"))?;
+            let size_bytes = entry
+                .get("size_bytes")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("param {name} missing size"))?;
+            if offset_bytes != expected_offset {
+                bail!("param {name}: non-contiguous offset");
+            }
+            let elems: usize = shape.iter().product();
+            if size_bytes != elems * 4 {
+                bail!("param {name}: size {size_bytes} != shape {shape:?} * f32");
+            }
+            expected_offset += size_bytes;
+            params.push(ParamEntry { name, shape, offset_bytes, size_bytes });
+        }
+
+        let entry_point = |key: &str, width_key: &str| -> Result<EntryPoint> {
+            let e = v
+                .path(&["entries", key])
+                .ok_or_else(|| anyhow!("missing entries.{key}"))?;
+            Ok(EntryPoint {
+                file: dir.join(
+                    e.get("file")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("entries.{key}.file"))?,
+                ),
+                width: e
+                    .get(width_key)
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow!("entries.{key}.{width_key}"))?,
+            })
+        };
+
+        Ok(Manifest {
+            model_name: model
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab: get(model, "vocab")?,
+            n_layers: get(model, "n_layers")?,
+            n_heads: get(model, "n_heads")?,
+            n_kv_heads: get(model, "n_kv_heads")?,
+            head_dim: get(model, "head_dim")?,
+            d_model: get(model, "d_model")?,
+            max_seq: get(model, "max_seq")?,
+            param_count: model
+                .get("param_count")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0) as u64,
+            weights_file: dir.join(
+                v.get("weights_file")
+                    .and_then(Value::as_str)
+                    .unwrap_or("weights.bin"),
+            ),
+            params,
+            prefill: entry_point("prefill", "chunk")?,
+            decode: entry_point("decode", "batch")?,
+        })
+    }
+
+    /// Total bytes `weights.bin` must have.
+    pub fn weights_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.size_bytes).sum()
+    }
+
+    /// KV cache shape per request: `[n_layers, max_seq, n_kv_heads, head_dim]`.
+    pub fn kv_shape(&self) -> [usize; 4] {
+        [self.n_layers, self.max_seq, self.n_kv_heads, self.head_dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "model": {"name": "tiny-llama", "vocab": 2048, "d_model": 256,
+                "n_layers": 4, "n_heads": 8, "n_kv_heads": 2, "head_dim": 32,
+                "d_ff": 704, "max_seq": 512, "param_count": 3868928},
+      "weights_file": "weights.bin",
+      "params": [
+        {"name": "embed", "shape": [2048, 256], "offset_bytes": 0, "size_bytes": 2097152},
+        {"name": "attn_norm", "shape": [4, 256], "offset_bytes": 2097152, "size_bytes": 4096}
+      ],
+      "entries": {
+        "prefill": {"file": "prefill_c64.hlo.txt", "chunk": 64},
+        "decode": {"file": "decode_b8.hlo.txt", "batch": 8}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(&v, Path::new("/x")).unwrap();
+        assert_eq!(m.model_name, "tiny-llama");
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.prefill.width, 64);
+        assert_eq!(m.decode.width, 8);
+        assert_eq!(m.prefill.file, PathBuf::from("/x/prefill_c64.hlo.txt"));
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.kv_shape(), [4, 512, 2, 32]);
+        assert_eq!(m.weights_bytes(), 2097152 + 4096);
+    }
+
+    #[test]
+    fn rejects_non_contiguous_params() {
+        let bad = SAMPLE.replace("\"offset_bytes\": 2097152", "\"offset_bytes\": 999");
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_value(&v, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_size_shape_mismatch() {
+        let bad = SAMPLE.replace("\"size_bytes\": 4096", "\"size_bytes\": 4097");
+        let v = json::parse(&bad).unwrap();
+        assert!(Manifest::from_value(&v, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // built by `make artifacts`
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model_name, "tiny-llama");
+        assert_eq!(m.params.len(), 12);
+        let bin = std::fs::metadata(&m.weights_file).unwrap().len() as usize;
+        assert_eq!(bin, m.weights_bytes());
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them on
+//! the request path, with Python nowhere in sight.
+//!
+//! `make artifacts` (the build-time Python path) produces:
+//!
+//! * `prefill_c{C}.hlo.txt` / `decode_b{B}.hlo.txt` — HLO **text** for the
+//!   two model entry points (text, not serialized protos: the crate's
+//!   xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids; the
+//!   text parser reassigns them);
+//! * `weights.bin` + `manifest.json` — parameters and the wire format.
+//!
+//! [`TokenModel`] compiles each entry point once
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile`) and then serves `prefill_chunk` / `decode_batch`
+//! calls from the Rust hot path.
+
+pub mod manifest;
+pub mod token_model;
+
+pub use manifest::Manifest;
+pub use token_model::{KvState, TokenModel};
+
+/// Default artifacts directory, overridable via `CRONUS_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("CRONUS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

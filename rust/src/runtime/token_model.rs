@@ -1,0 +1,240 @@
+//! The real model on the request path: compiled HLO entry points, weight
+//! literals, per-request KV state, greedy sampling.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::manifest::Manifest;
+
+/// Host-side KV cache of one request: `[L, T, H_kv, D_h]` f32, flattened.
+#[derive(Clone)]
+pub struct KvState {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Tokens with valid KV (the request's current context length).
+    pub ctx_len: usize,
+}
+
+impl KvState {
+    pub fn new(manifest: &Manifest) -> Self {
+        let n: usize = manifest.kv_shape().iter().product();
+        KvState { k: vec![0.0; n], v: vec![0.0; n], ctx_len: 0 }
+    }
+}
+
+fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn i32_literal(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// The tiny LLaMA-style model, loaded once and executed per scheduled
+/// iteration.  Not `Sync`: owned by the serving worker thread.
+pub struct TokenModel {
+    pub manifest: Manifest,
+    #[allow(dead_code)]
+    client: PjRtClient,
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    /// Weight literals in `PARAM_ORDER` (the manifest's order).
+    weights: Vec<Literal>,
+}
+
+impl TokenModel {
+    /// Load manifest + weights, compile both entry points on the PJRT CPU
+    /// client.  This is the one-time cost; afterwards the request path is
+    /// pure Rust + PJRT.
+    pub fn load(dir: &Path) -> Result<TokenModel> {
+        let manifest = Manifest::load(dir)?;
+        let raw = std::fs::read(&manifest.weights_file)
+            .with_context(|| format!("reading {:?}", manifest.weights_file))?;
+        if raw.len() != manifest.weights_bytes() {
+            bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                raw.len(),
+                manifest.weights_bytes()
+            );
+        }
+        let mut weights = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let bytes = &raw[p.offset_bytes..p.offset_bytes + p.size_bytes];
+            let lit = Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &p.shape,
+                bytes,
+            )?;
+            weights.push(lit);
+        }
+
+        let client = PjRtClient::cpu()?;
+        let load = |path: &Path| -> Result<PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill_exe = load(&manifest.prefill.file)?;
+        let decode_exe = load(&manifest.decode.file)?;
+        Ok(TokenModel { manifest, client, prefill_exe, decode_exe, weights })
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.manifest.prefill.width
+    }
+
+    pub fn decode_batch_size(&self) -> usize {
+        self.manifest.decode.width
+    }
+
+    /// Run one prefill chunk for one request.  `tokens` may be shorter
+    /// than the chunk width (it is zero-padded); `q_start` is the absolute
+    /// position of `tokens[0]`.  Returns the logits row of the **last
+    /// valid token** and updates `kv` in place.
+    pub fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        q_start: usize,
+        kv: &mut KvState,
+    ) -> Result<Vec<f32>> {
+        let c = self.chunk_size();
+        if tokens.is_empty() || tokens.len() > c {
+            bail!("chunk must have 1..={c} tokens, got {}", tokens.len());
+        }
+        if q_start + tokens.len() > self.manifest.max_seq {
+            bail!("prefill beyond max_seq");
+        }
+        let mut padded = vec![0i32; c];
+        padded[..tokens.len()].copy_from_slice(tokens);
+
+        let kv_dims = self.manifest.kv_shape().to_vec();
+        let mut inputs: Vec<Literal> = self.weights.to_vec();
+        inputs.push(i32_literal(&[c], &padded)?);
+        inputs.push(i32_literal(&[1], &[q_start as i32])?);
+        inputs.push(f32_literal(&kv_dims, &kv.k)?);
+        inputs.push(f32_literal(&kv_dims, &kv.v)?);
+
+        let result = self.prefill_exe.execute::<Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let (logits, new_k, new_v) = result.to_tuple3()?;
+        let logits: Vec<f32> = logits.to_vec()?;
+        kv.k = new_k.to_vec()?;
+        kv.v = new_v.to_vec()?;
+        kv.ctx_len = q_start + tokens.len();
+
+        let vocab = self.manifest.vocab;
+        let last = tokens.len() - 1;
+        Ok(logits[last * vocab..(last + 1) * vocab].to_vec())
+    }
+
+    /// Run one batched decode step.  `entries[i] = (token, position, kv)`;
+    /// unused batch slots are padded internally.  Returns one logits row
+    /// per entry and updates each `KvState` in place.
+    pub fn decode_batch(
+        &self,
+        entries: &mut [(i32, usize, &mut KvState)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.decode_batch_size();
+        if entries.is_empty() || entries.len() > b {
+            bail!("decode batch must have 1..={b} entries, got {}", entries.len());
+        }
+        let kv_shape = self.manifest.kv_shape();
+        let per: usize = kv_shape.iter().product();
+
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut k = vec![0.0f32; b * per];
+        let mut v = vec![0.0f32; b * per];
+        for (i, (tok, p, kv)) in entries.iter().enumerate() {
+            tokens[i] = *tok;
+            pos[i] = *p as i32;
+            k[i * per..(i + 1) * per].copy_from_slice(&kv.k);
+            v[i * per..(i + 1) * per].copy_from_slice(&kv.v);
+        }
+
+        let mut batched_dims = vec![b];
+        batched_dims.extend_from_slice(&kv_shape);
+        let mut inputs: Vec<Literal> = self.weights.to_vec();
+        inputs.push(i32_literal(&[b], &tokens)?);
+        inputs.push(i32_literal(&[b], &pos)?);
+        inputs.push(f32_literal(&batched_dims, &k)?);
+        inputs.push(f32_literal(&batched_dims, &v)?);
+
+        let result = self.decode_exe.execute::<Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let (logits, new_k, new_v) = result.to_tuple3()?;
+        let logits: Vec<f32> = logits.to_vec()?;
+        let new_k: Vec<f32> = new_k.to_vec()?;
+        let new_v: Vec<f32> = new_v.to_vec()?;
+
+        let vocab = self.manifest.vocab;
+        let mut out = Vec::with_capacity(entries.len());
+        for (i, (_, p, kv)) in entries.iter_mut().enumerate() {
+            kv.k.copy_from_slice(&new_k[i * per..(i + 1) * per]);
+            kv.v.copy_from_slice(&new_v[i * per..(i + 1) * per]);
+            kv.ctx_len = *p + 1;
+            out.push(logits[i * vocab..(i + 1) * vocab].to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Greedy sampling.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > best_v {
+                best_v = x;
+                best = i;
+            }
+        }
+        best as i32
+    }
+
+    /// Convenience: full prefill of a prompt via repeated chunks; returns
+    /// the first generated token.
+    pub fn prefill_prompt(&self, prompt: &[i32], kv: &mut KvState) -> Result<i32> {
+        let c = self.chunk_size();
+        let mut last_logits = Vec::new();
+        let mut start = 0;
+        while start < prompt.len() {
+            let end = (start + c).min(prompt.len());
+            last_logits = self.prefill_chunk(&prompt[start..end], start, kv)?;
+            start = end;
+        }
+        Ok(Self::argmax(&last_logits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(TokenModel::argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
+        assert_eq!(TokenModel::argmax(&[-5.0]), 0);
+    }
+
+    // Full PJRT round-trip tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts` to have run).
+}

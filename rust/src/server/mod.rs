@@ -1,0 +1,241 @@
+//! Real-model serving front: a threaded server that drives the AOT
+//! tiny-LLaMA through [`crate::runtime::TokenModel`] with the same
+//! chunked-prefill-plus-batched-decode iteration structure the simulated
+//! engines use.  This is what proves the three layers compose: Rust
+//! coordination, PJRT-executed JAX model, Pallas attention cores — with
+//! Python nowhere on the request path.
+//!
+//! Used by `examples/serve_trace.rs` (the end-to-end driver) and
+//! `cronus serve`.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{KvState, TokenModel};
+
+/// A request to the real-model server.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A served response with wall-clock latency breakdown.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Wall-clock time from submission to first token.
+    pub ttft_s: f64,
+    /// Wall-clock gaps between subsequent tokens.
+    pub tbt_s: Vec<f64>,
+}
+
+enum Msg {
+    Request(ServeRequest, Instant),
+    Shutdown,
+}
+
+struct Active {
+    id: u64,
+    prompt: Vec<i32>,
+    submitted: Instant,
+    kv: KvState,
+    prefilled: usize,
+    generated: Vec<i32>,
+    max_new_tokens: usize,
+    first_token_at: Option<Instant>,
+    last_token_at: Option<Instant>,
+    gaps: Vec<f64>,
+}
+
+/// Threaded serving front over the real tiny model.
+pub struct RealServer {
+    tx: Sender<Msg>,
+    rx: Receiver<ServeResponse>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl RealServer {
+    /// Load artifacts and start the worker thread.
+    pub fn start(artifacts_dir: &Path) -> Result<RealServer> {
+        let (tx, worker_rx) = channel::<Msg>();
+        let (resp_tx, rx) = channel::<ServeResponse>();
+        let dir = artifacts_dir.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("cronus-serve".into())
+            .spawn(move || worker(&dir, worker_rx, resp_tx))?;
+        Ok(RealServer { tx, rx, handle: Some(handle) })
+    }
+
+    pub fn submit(&self, req: ServeRequest) {
+        let _ = self.tx.send(Msg::Request(req, Instant::now()));
+    }
+
+    /// Close the request stream, drain all responses, join the worker.
+    pub fn shutdown(mut self) -> Result<Vec<ServeResponse>> {
+        let _ = self.tx.send(Msg::Shutdown);
+        let mut out = Vec::new();
+        while let Ok(resp) = self.rx.recv() {
+            out.push(resp);
+        }
+        if let Some(h) = self.handle.take() {
+            h.join().expect("server thread panicked")?;
+        }
+        Ok(out)
+    }
+}
+
+/// The iteration loop: mirrors the engine's policy at miniature scale —
+/// run pending prefill chunk(s) for the head-of-line request, then one
+/// batched decode step for everything decoding.
+fn worker(
+    dir: &Path,
+    rx: Receiver<Msg>,
+    resp: Sender<ServeResponse>,
+) -> Result<()> {
+    let model = TokenModel::load(dir)?;
+    let chunk = model.chunk_size();
+    let batch = model.decode_batch_size();
+    let max_seq = model.manifest.max_seq;
+
+    let mut waiting: VecDeque<Active> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut open = true;
+
+    loop {
+        // Pull in new requests (blocking only when fully idle).
+        loop {
+            let msg = if open && waiting.is_empty() && active.is_empty() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return Ok(()),
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Shutdown => {
+                    open = false;
+                    if waiting.is_empty() && active.is_empty() {
+                        return Ok(());
+                    }
+                }
+                Msg::Request(r, at) => {
+                    let mut prompt = r.prompt;
+                    prompt.truncate(max_seq.saturating_sub(r.max_new_tokens + 1));
+                    if prompt.is_empty() {
+                        prompt.push(0);
+                    }
+                    waiting.push_back(Active {
+                        id: r.id,
+                        prompt,
+                        submitted: at,
+                        kv: KvState::new(&model.manifest),
+                        prefilled: 0,
+                        generated: Vec::new(),
+                        max_new_tokens: r.max_new_tokens.max(1),
+                        first_token_at: None,
+                        last_token_at: None,
+                        gaps: Vec::new(),
+                    });
+                }
+            }
+        }
+
+        // Admit up to the decode batch width.
+        while active.len() < batch && !waiting.is_empty() {
+            active.push(waiting.pop_front().unwrap());
+        }
+        if active.is_empty() {
+            if !open {
+                return Ok(());
+            }
+            continue;
+        }
+
+        // One prefill chunk for the first still-prefilling request.
+        if let Some(a) = active.iter_mut().find(|a| a.prefilled < a.prompt.len()) {
+            let start = a.prefilled;
+            let end = (start + chunk).min(a.prompt.len());
+            let logits =
+                model.prefill_chunk(&a.prompt[start..end], start, &mut a.kv)?;
+            a.prefilled = end;
+            if a.prefilled == a.prompt.len() {
+                let tok = TokenModel::argmax(&logits);
+                let now = Instant::now();
+                a.first_token_at = Some(now);
+                a.last_token_at = Some(now);
+                a.generated.push(tok);
+            }
+            continue; // alternate prefill/decode iterations
+        }
+
+        // Batched decode step for all active (fully prefilled) requests.
+        {
+            let mut entries: Vec<(i32, usize, &mut KvState)> = Vec::new();
+            let mut idxs: Vec<usize> = Vec::new();
+            // Split borrows: collect (token, pos) first.
+            let toks_pos: Vec<(i32, usize)> = active
+                .iter()
+                .map(|a| {
+                    let last = *a.generated.last().unwrap();
+                    (last, a.prompt.len() + a.generated.len() - 1)
+                })
+                .collect();
+            for (i, a) in active.iter_mut().enumerate() {
+                let (tok, pos) = toks_pos[i];
+                if pos + 1 >= max_seq {
+                    continue; // out of cache; will be finalized below
+                }
+                entries.push((tok, pos, &mut a.kv));
+                idxs.push(i);
+            }
+            if !entries.is_empty() {
+                let logits = model.decode_batch(&mut entries)?;
+                let now = Instant::now();
+                for (slot, row) in idxs.iter().zip(logits) {
+                    let a = &mut active[*slot];
+                    let tok = TokenModel::argmax(&row);
+                    if let Some(prev) = a.last_token_at {
+                        a.gaps.push(now.duration_since(prev).as_secs_f64());
+                    }
+                    a.last_token_at = Some(now);
+                    a.generated.push(tok);
+                }
+            }
+        }
+
+        // Retire finished requests.
+        let mut i = 0;
+        while i < active.len() {
+            let done = active[i].generated.len() >= active[i].max_new_tokens
+                || active[i].prompt.len() + active[i].generated.len()
+                    >= max_seq - 1;
+            if done {
+                let a = active.swap_remove(i);
+                let ttft = a
+                    .first_token_at
+                    .map(|t| t.duration_since(a.submitted).as_secs_f64())
+                    .unwrap_or(0.0);
+                let _ = resp.send(ServeResponse {
+                    id: a.id,
+                    tokens: a.generated,
+                    ttft_s: ttft,
+                    tbt_s: a.gaps,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Inter-node network link model (α–β): the paper's nodes are connected
+//! by 100 Gbps InfiniBand, over which disaggregated/partial prefill ships
+//! KV caches from the prefill instance to the decode instance.
+
+/// A point-to-point link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Line rate in Gbit/s.
+    pub gbps: f64,
+    /// One-way latency (α term), seconds.
+    pub latency_s: f64,
+    /// Achievable fraction of line rate (protocol + RDMA overheads).
+    pub efficiency: f64,
+}
+
+impl LinkSpec {
+    /// The paper's testbed link: 100 Gbps InfiniBand between nodes.
+    pub const INFINIBAND_100G: LinkSpec =
+        LinkSpec { gbps: 100.0, latency_s: 5.0e-6, efficiency: 0.90 };
+
+    /// Achievable bytes per second.
+    pub fn bytes_per_sec(&self) -> f64 {
+        self.gbps * 1e9 / 8.0 * self.efficiency
+    }
+
+    /// α–β transfer time for `bytes`.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.latency_s + bytes / self.bytes_per_sec()
+    }
+
+    /// Time to ship the KV cache of `tokens` context tokens for a model
+    /// storing `kv_bytes_per_token` per token.
+    pub fn kv_transfer_time(&self, tokens: usize, kv_bytes_per_token: u64) -> f64 {
+        self.transfer_time(tokens as f64 * kv_bytes_per_token as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+
+    #[test]
+    fn line_rate() {
+        let l = LinkSpec::INFINIBAND_100G;
+        assert!((l.bytes_per_sec() - 11.25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(LinkSpec::INFINIBAND_100G.transfer_time(0.0), 0.0);
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let l = LinkSpec::INFINIBAND_100G;
+        let t = l.transfer_time(100.0);
+        assert!((t - l.latency_s) / l.latency_s < 0.01);
+    }
+
+    #[test]
+    fn kv_transfer_in_realistic_band() {
+        // A 1014-token LLaMA3-8B prompt's KV is ~130 MB -> ~12 ms on
+        // 100 Gbps IB.  This is the quantity Fig. 2 overlaps with compute.
+        let l = LinkSpec::INFINIBAND_100G;
+        let t = l.kv_transfer_time(1014, LLAMA3_8B.kv_bytes_per_token());
+        assert!((0.005..0.05).contains(&t), "kv transfer {t}");
+    }
+
+    #[test]
+    fn transfer_linear_in_tokens() {
+        let l = LinkSpec::INFINIBAND_100G;
+        let per = LLAMA3_8B.kv_bytes_per_token();
+        let t1 = l.kv_transfer_time(1000, per) - l.latency_s;
+        let t2 = l.kv_transfer_time(2000, per) - l.latency_s;
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,22 @@
+//! Heterogeneous-GPU substrate: device specs, an analytical execution-time
+//! model in the paper's own form (Eq. 2 / Eq. 3), a network-link model for
+//! KV-cache transfers, and the profiling/fitting pipeline that calibrates
+//! the Balancer's coefficients exactly the way the paper does (linear
+//! regression on profiled iteration times — Fig. 3).
+//!
+//! This module is the substitution for the paper's physical
+//! A100/A30/A10 + InfiniBand testbed (DESIGN.md §1): every quantity the
+//! schedulers consume (iteration times, memory capacities, transfer
+//! times) is produced here from public spec-sheet numbers.
+
+pub mod fit;
+pub mod link;
+pub mod model_desc;
+pub mod perfmodel;
+pub mod spec;
+
+pub use fit::{profile_chunked, profile_prefill, ChunkedCoeffs, PrefillCoeffs};
+pub use link::LinkSpec;
+pub use model_desc::ModelDesc;
+pub use perfmodel::{IterationShape, PerfModel, PrefillSeg};
+pub use spec::GpuSpec;

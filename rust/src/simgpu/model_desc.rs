@@ -1,0 +1,176 @@
+//! Model geometry descriptors — the Rust mirror of `python/compile/model.py`'s
+//! `ModelDims`.  The performance model derives FLOPs and byte counts from
+//! these; the published LLaMA3-8B / Qwen2-7B configs drive the paper's
+//! experiments, and the tiny config matches the AOT-compiled artifact.
+
+/// Geometry of a decoder-only transformer (LLaMA family).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelDesc {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    /// Bytes per weight/KV element as served (2 = bf16).
+    pub dtype_bytes: usize,
+}
+
+impl ModelDesc {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Total parameter count (embed + blocks + head), matching
+    /// `model.ModelDims.param_count()` on the Python side.
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ff as u64;
+        let per_layer = d * self.q_dim() as u64
+            + 2 * d * self.kv_dim() as u64
+            + self.q_dim() as u64 * d
+            + 3 * d * f
+            + 2 * d;
+        self.vocab as u64 * d * 2 + self.n_layers as u64 * per_layer + d
+    }
+
+    /// Weight bytes resident on a device serving `layer_fraction` of the
+    /// model (PP shards layers; embeddings/head counted on their stage).
+    pub fn weight_bytes(&self, layer_fraction: f64) -> f64 {
+        self.param_count() as f64 * self.dtype_bytes as f64 * layer_fraction
+    }
+
+    /// KV-cache bytes per token of context (2 × layers × kv_dim × dtype).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.kv_dim() * self.dtype_bytes) as u64
+    }
+
+    /// Dense (non-attention-score) FLOPs to process one token:
+    /// ~2 FLOPs per parameter touched (matmul-dominated).
+    pub fn dense_flops_per_token(&self, layer_fraction: f64) -> f64 {
+        2.0 * self.param_count() as f64 * layer_fraction
+    }
+
+    /// Attention-score FLOPs for `q_tokens` queries against an *average*
+    /// context of `ctx` tokens: QKᵀ plus PV, 2·2·d_model per (q, ctx)
+    /// pair per layer (GQA shares K/V storage, not score compute).
+    pub fn attn_flops(&self, q_tokens: f64, ctx: f64, layer_fraction: f64) -> f64 {
+        4.0 * self.n_layers as f64 * layer_fraction
+            * self.d_model as f64
+            * q_tokens
+            * ctx
+    }
+
+    /// Bytes of activations crossing a pipeline-stage boundary for a batch
+    /// of `n_tokens` (hidden states only).
+    pub fn activation_bytes(&self, n_tokens: usize) -> f64 {
+        (n_tokens * self.d_model * self.dtype_bytes) as f64
+    }
+}
+
+/// LLaMA3-8B (32 layers, d=4096, 32 q-heads / 8 kv-heads, ff=14336).
+pub const LLAMA3_8B: ModelDesc = ModelDesc {
+    name: "llama3-8b",
+    vocab: 128_256,
+    d_model: 4096,
+    n_layers: 32,
+    n_heads: 32,
+    n_kv_heads: 8,
+    head_dim: 128,
+    d_ff: 14_336,
+    dtype_bytes: 2,
+};
+
+/// Qwen2-7B (28 layers, d=3584, 28 q-heads / 4 kv-heads, ff=18944).
+pub const QWEN2_7B: ModelDesc = ModelDesc {
+    name: "qwen2-7b",
+    vocab: 152_064,
+    d_model: 3584,
+    n_layers: 28,
+    n_heads: 28,
+    n_kv_heads: 4,
+    head_dim: 128,
+    d_ff: 18_944,
+    dtype_bytes: 2,
+};
+
+/// The tiny model actually AOT-compiled and executed (matches
+/// `python/compile/model.py::TINY`; served in f32 on CPU).
+pub const TINY: ModelDesc = ModelDesc {
+    name: "tiny-llama",
+    vocab: 2048,
+    d_model: 256,
+    n_layers: 4,
+    n_heads: 8,
+    n_kv_heads: 2,
+    head_dim: 32,
+    d_ff: 704,
+    dtype_bytes: 4,
+};
+
+pub fn by_name(name: &str) -> Option<ModelDesc> {
+    match name.to_ascii_lowercase().as_str() {
+        "llama3-8b" | "llama" => Some(LLAMA3_8B),
+        "qwen2-7b" | "qwen" => Some(QWEN2_7B),
+        "tiny-llama" | "tiny" => Some(TINY),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        let llama = LLAMA3_8B.param_count() as f64;
+        assert!((7.5e9..8.5e9).contains(&llama), "llama {llama}");
+        let qwen = QWEN2_7B.param_count() as f64;
+        assert!((7.0e9..8.2e9).contains(&qwen), "qwen {qwen}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        // LLaMA3-8B: 2 * 32 layers * (8*128) * 2 bytes = 128 KiB/token.
+        assert_eq!(LLAMA3_8B.kv_bytes_per_token(), 131_072);
+        // Qwen2-7B's GQA is narrower: 2 * 28 * 512 * 2 = 56 KiB/token —
+        // the reason its decode throughput is higher in Table 2.
+        assert_eq!(QWEN2_7B.kv_bytes_per_token(), 57_344);
+    }
+
+    #[test]
+    fn tiny_matches_python_manifest_values() {
+        assert_eq!(TINY.param_count(), 3_868_928);
+        assert_eq!(TINY.n_layers, 4);
+        assert_eq!(TINY.vocab, 2048);
+    }
+
+    #[test]
+    fn layer_fraction_scales_linearly() {
+        let full = LLAMA3_8B.dense_flops_per_token(1.0);
+        let half = LLAMA3_8B.dense_flops_per_token(0.5);
+        assert!((full / half - 2.0).abs() < 1e-12);
+        assert!(LLAMA3_8B.weight_bytes(0.25) * 4.0 - LLAMA3_8B.weight_bytes(1.0) < 1.0);
+    }
+
+    #[test]
+    fn attn_flops_bilinear() {
+        let a = LLAMA3_8B.attn_flops(512.0, 1000.0, 1.0);
+        assert_eq!(a, 4.0 * 32.0 * 4096.0 * 512.0 * 1000.0);
+        assert_eq!(LLAMA3_8B.attn_flops(256.0, 1000.0, 1.0) * 2.0, a);
+        assert_eq!(LLAMA3_8B.attn_flops(512.0, 500.0, 1.0) * 2.0, a);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("llama3-8b").unwrap().n_layers, 32);
+        assert_eq!(by_name("QWEN").unwrap().n_layers, 28);
+        assert!(by_name("gpt-5").is_none());
+    }
+}

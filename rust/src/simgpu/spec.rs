@@ -1,0 +1,147 @@
+//! GPU device specifications (public spec-sheet numbers).
+//!
+//! The paper's testbeds pair an A100 (80 GB) with an A10 or A30 (24 GB).
+//! We carry the three first-order quantities the two inference phases
+//! care about — dense BF16 throughput (prefill is compute-bound), HBM
+//! bandwidth (decode is memory-bound) and capacity (KV cache) — plus two
+//! derate factors that map peak numbers to achievable ones.
+
+/// A GPU device description.  All numbers are *peak* spec-sheet values;
+/// `compute_efficiency` / `mem_efficiency` derate them to the sustained
+/// fractions a tuned serving kernel achieves (roughly constant across
+/// this GPU family, so relative comparisons — what the paper's
+/// conclusions rest on — are preserved).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Dense BF16 tensor-core throughput, TFLOP/s (no sparsity).
+    pub bf16_tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Total device memory, GiB.
+    pub mem_gib: f64,
+    /// Fraction of peak FLOPs sustained on large matmuls.
+    pub compute_efficiency: f64,
+    /// Fraction of peak bandwidth sustained on streaming reads.
+    pub mem_efficiency: f64,
+    /// Fixed per-iteration overhead (kernel launches, scheduler), seconds.
+    pub iteration_overhead_s: f64,
+}
+
+impl GpuSpec {
+    /// Achievable FLOP/s.
+    pub fn flops(&self) -> f64 {
+        self.bf16_tflops * 1e12 * self.compute_efficiency
+    }
+
+    /// Achievable bytes/s.
+    pub fn bandwidth(&self) -> f64 {
+        self.hbm_gbps * 1e9 * self.mem_efficiency
+    }
+
+    /// Total memory in bytes.
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gib * (1u64 << 30) as f64
+    }
+}
+
+/// NVIDIA A100 SXM 80 GB: 312 TFLOPS BF16, 2039 GB/s HBM2e.
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100-80G",
+    bf16_tflops: 312.0,
+    hbm_gbps: 2039.0,
+    mem_gib: 80.0,
+    compute_efficiency: 0.50,
+    mem_efficiency: 0.75,
+    iteration_overhead_s: 4.0e-3,
+};
+
+/// NVIDIA A30 24 GB: 165 TFLOPS BF16, 933 GB/s HBM2.  Sustained serving
+/// bandwidth on the smaller HBM2 stack derates harder than A100's HBM2e.
+pub const A30: GpuSpec = GpuSpec {
+    name: "A30",
+    bf16_tflops: 165.0,
+    hbm_gbps: 933.0,
+    mem_gib: 24.0,
+    compute_efficiency: 0.50,
+    mem_efficiency: 0.62,
+    iteration_overhead_s: 4.0e-3,
+};
+
+/// NVIDIA A10 24 GB: 125 TFLOPS BF16, 600 GB/s GDDR6.  GDDR6 sustains a
+/// markedly lower fraction of peak than HBM on the scattered reads of
+/// paged KV attention.
+pub const A10: GpuSpec = GpuSpec {
+    name: "A10",
+    bf16_tflops: 125.0,
+    hbm_gbps: 600.0,
+    mem_gib: 24.0,
+    compute_efficiency: 0.50,
+    mem_efficiency: 0.52,
+    iteration_overhead_s: 4.0e-3,
+};
+
+/// Look up a spec by (case-insensitive) name, for config files / CLI.
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "a100" | "a100-80g" => Some(A100),
+        "a30" => Some(A30),
+        "a10" => Some(A10),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_sheet_values() {
+        assert_eq!(A100.bf16_tflops, 312.0);
+        assert_eq!(A30.bf16_tflops, 165.0);
+        assert_eq!(A10.bf16_tflops, 125.0);
+        assert_eq!(A100.mem_gib, 80.0);
+        assert_eq!(A30.mem_gib, 24.0);
+        assert_eq!(A10.mem_gib, 24.0);
+    }
+
+    #[test]
+    fn hierarchy_high_to_low() {
+        // The paper's premise: A100 dominates both low-end GPUs in
+        // compute, bandwidth and memory; A30 dominates A10.
+        assert!(A100.flops() > A30.flops() && A30.flops() > A10.flops());
+        assert!(A100.bandwidth() > A30.bandwidth());
+        assert!(A30.bandwidth() > A10.bandwidth());
+        assert!(A100.mem_bytes() > A30.mem_bytes());
+    }
+
+    #[test]
+    fn derated_numbers() {
+        assert!((A100.flops() - 312.0e12 * A100.compute_efficiency).abs() < 1.0);
+        assert!((A10.bandwidth() - 600.0e9 * A10.mem_efficiency).abs() < 1.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("A100").unwrap().name, "A100-80G");
+        assert_eq!(by_name("a30").unwrap().name, "A30");
+        assert_eq!(by_name("a10").unwrap().name, "A10");
+        assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn pp_layer_split_from_flops_matches_paper() {
+        // The paper splits LLaMA3-8B (32 layers) into 23+9 on A100+A10 and
+        // 21+11 on A100+A30; Qwen2-7B (28) into 20+8 and 18+10.  Verify
+        // the proportional-to-BF16-FLOPS rule reproduces those splits.
+        let split = |layers: f64, hi: &GpuSpec, lo: &GpuSpec| -> (u32, u32) {
+            let f = hi.bf16_tflops / (hi.bf16_tflops + lo.bf16_tflops);
+            let hi_layers = (layers * f).round() as u32;
+            (hi_layers, layers as u32 - hi_layers)
+        };
+        assert_eq!(split(32.0, &A100, &A10), (23, 9));
+        assert_eq!(split(32.0, &A100, &A30), (21, 11));
+        assert_eq!(split(28.0, &A100, &A10), (20, 8));
+        assert_eq!(split(28.0, &A100, &A30), (18, 10));
+    }
+}

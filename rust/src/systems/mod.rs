@@ -1,0 +1,65 @@
+//! The `ServingSystem` abstraction: every approach the paper evaluates —
+//! Cronus and the four baselines — implements this trait, so benches and
+//! examples can sweep them uniformly.
+
+use crate::baselines::{dp::DpSystem, pp::PpSystem};
+use crate::config::{DeploymentConfig, SystemKind};
+use crate::cronus::frontend::CronusSystem;
+use crate::cronus::balancer::SplitPolicy;
+use crate::metrics::Report;
+use crate::workload::Request;
+
+/// Per-instance accounting attached to a run (feeds Table 3).
+#[derive(Clone, Debug)]
+pub struct InstanceStat {
+    pub name: String,
+    pub busy_time_s: f64,
+    pub n_iterations: u64,
+    pub n_preemptions: u64,
+    pub tokens_prefilled: u64,
+    pub tokens_decoded: u64,
+}
+
+/// Result of serving one trace.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub report: Report,
+    pub instances: Vec<InstanceStat>,
+}
+
+/// A deployable serving system (one experiment subject).
+pub trait ServingSystem {
+    fn label(&self) -> String;
+
+    /// Serve the trace to completion on the simulated cluster.
+    fn run(&mut self, trace: &[Request]) -> RunOutcome;
+}
+
+/// Instantiate the system the paper calls `kind` on deployment `cfg`.
+pub fn build_system(
+    kind: SystemKind,
+    cfg: &DeploymentConfig,
+) -> Box<dyn ServingSystem> {
+    match kind {
+        SystemKind::Cronus => Box::new(CronusSystem::new(
+            cfg.clone(),
+            SplitPolicy::Balanced,
+            false,
+            "Cronus",
+        )),
+        SystemKind::DisaggLowHigh => Box::new(CronusSystem::new(
+            cfg.clone(),
+            SplitPolicy::Full,
+            false,
+            "Disagg. L-H",
+        )),
+        SystemKind::DisaggHighLow => Box::new(CronusSystem::new(
+            cfg.clone(),
+            SplitPolicy::Full,
+            true,
+            "Disagg. H-L",
+        )),
+        SystemKind::DpChunked => Box::new(DpSystem::new(cfg.clone())),
+        SystemKind::PpChunked => Box::new(PpSystem::new(cfg.clone())),
+    }
+}

@@ -1,0 +1,96 @@
+//! A fast non-cryptographic hasher for the scheduler's hot maps
+//! (rustc-hash's multiply-xor construction).  Request-id keys are small
+//! integers under our control, so HashDoS resistance buys nothing and
+//! SipHash costs ~3x per lookup on the engine's per-iteration paths
+//! (EXPERIMENTS.md §Perf).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// rustc-hash-style hasher: rotate, xor, multiply per word.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+}
+
+/// Drop-in `HashMap` with the fast hasher.
+pub type FxHashMap<K, V> =
+    std::collections::HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, (i * 3) as u32);
+        }
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&i), Some(&((i * 3) as u32)));
+        }
+        assert_eq!(m.len(), 1000);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes_mostly() {
+        use std::hash::Hash;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            let mut h = FxHasher::default();
+            i.hash(&mut h);
+            seen.insert(h.finish());
+        }
+        assert_eq!(seen.len(), 10_000, "collisions on sequential u64 keys");
+    }
+
+    #[test]
+    fn byte_writes_consistent() {
+        use std::hash::Hash;
+        let mut a = FxHasher::default();
+        "hello world, this is a key".hash(&mut a);
+        let mut b = FxHasher::default();
+        "hello world, this is a key".hash(&mut b);
+        assert_eq!(a.finish(), b.finish());
+    }
+}

@@ -1,0 +1,20 @@
+//! Small self-contained substrates the rest of the stack builds on.
+//!
+//! The offline build environment ships no `rand`, `serde`, `criterion` or
+//! `proptest`, so this module provides the pieces we need from scratch
+//! (documented as substitutions in DESIGN.md §1):
+//!
+//! * [`rng`] — deterministic PRNG (SplitMix64 / xoshiro256++) with the
+//!   distributions the workload generator needs.
+//! * [`stats`] — exact percentiles, ordinary least squares (the paper's
+//!   Eq. 2/3 fits), R², MAPE.
+//! * [`json`] — a minimal JSON parser for `artifacts/manifest.json`.
+//! * [`proptest_lite`] — a tiny property-testing harness used by the
+//!   invariant tests.
+//! * [`fxhash`] — a fast non-cryptographic hasher for the hot maps.
+
+pub mod fxhash;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;

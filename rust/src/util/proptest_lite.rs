@@ -1,0 +1,164 @@
+//! A tiny property-testing harness (the image ships no `proptest`).
+//!
+//! Usage mirrors the proptest idiom at a smaller scale: a property is a
+//! closure taking a seeded [`Rng`]; the runner executes it for many
+//! deterministic seeds and reports the first failing seed so failures
+//! reproduce exactly:
+//!
+//! ```
+//! use cronus::util::proptest_lite::{check, PropResult};
+//! check("sum is commutative", 100, |rng| {
+//!     let a = rng.range(0, 1000) as i64;
+//!     let b = rng.range(0, 1000) as i64;
+//!     PropResult::assert_eq("a+b == b+a", a + b, b + a)
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property case.
+#[must_use]
+pub enum PropResult {
+    Ok,
+    Fail(String),
+    /// The generated input didn't meet the property's precondition.
+    Discard,
+}
+
+impl PropResult {
+    pub fn assert_true(what: &str, cond: bool) -> PropResult {
+        if cond {
+            PropResult::Ok
+        } else {
+            PropResult::Fail(format!("assertion failed: {what}"))
+        }
+    }
+
+    pub fn assert_eq<T: PartialEq + std::fmt::Debug>(
+        what: &str,
+        a: T,
+        b: T,
+    ) -> PropResult {
+        if a == b {
+            PropResult::Ok
+        } else {
+            PropResult::Fail(format!("{what}: {a:?} != {b:?}"))
+        }
+    }
+
+    /// Chain: first failure wins.
+    pub fn and(self, next: impl FnOnce() -> PropResult) -> PropResult {
+        match self {
+            PropResult::Ok => next(),
+            other => other,
+        }
+    }
+}
+
+/// Run `cases` deterministic cases of the property; panics (with the
+/// failing seed) on the first failure.  Base seed is derived from the
+/// property name so distinct properties explore distinct streams.
+pub fn check<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    let base = name_seed(name);
+    let mut discards = 0u32;
+    let mut ran = 0u32;
+    let mut case = 0u32;
+    // Allow up to 10x discards before giving up on the precondition.
+    while ran < cases && discards < cases.saturating_mul(10) {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        match prop(&mut rng) {
+            PropResult::Ok => ran += 1,
+            PropResult::Discard => discards += 1,
+            PropResult::Fail(msg) => panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}"
+            ),
+        }
+        case += 1;
+    }
+    assert!(
+        ran >= cases.min(1),
+        "property '{name}': too many discards ({discards}) — precondition too strict"
+    );
+}
+
+/// FNV-1a of the property name — stable across runs and platforms.
+fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivially true", 50, |_| {
+            count += 1;
+            PropResult::Ok
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        check("always fails", 10, |_| {
+            PropResult::Fail("nope".into())
+        });
+    }
+
+    #[test]
+    fn discards_are_tolerated() {
+        check("half discarded", 20, |rng| {
+            if rng.f64() < 0.5 {
+                PropResult::Discard
+            } else {
+                PropResult::Ok
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn all_discards_panics() {
+        check("all discarded", 10, |_| PropResult::Discard);
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| {
+            first.push(rng.next_u64());
+            PropResult::Ok
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| {
+            second.push(rng.next_u64());
+            PropResult::Ok
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn and_chains_results() {
+        let r = PropResult::assert_true("a", true)
+            .and(|| PropResult::assert_eq("b", 1, 1));
+        assert!(matches!(r, PropResult::Ok));
+        let r = PropResult::assert_true("a", false)
+            .and(|| PropResult::assert_eq("b", 1, 2));
+        match r {
+            PropResult::Fail(msg) => assert!(msg.contains("a")),
+            _ => panic!("expected failure"),
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Statistics utilities: exact percentiles and least-squares fits.
+//!
+//! The paper models execution times with linear regressions (Eq. 2 for
+//! partial prefill, Eq. 3 for chunked-prefill iterations) and reports the
+//! fits' R² and mean-absolute-percentage-error; [`ols`] reproduces that
+//! machinery (normal equations + Gaussian elimination, fine for the 2–3
+//! feature fits we need).  Percentiles use the nearest-rank-with-linear-
+//! interpolation definition (matches numpy's default).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Percentile `p` in `[0, 100]` with linear interpolation between ranks.
+/// Returns 0.0 for an empty slice (callers treat that as "no data").
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_of_sorted(&sorted, p)
+}
+
+/// Percentile of an already-sorted slice.
+pub fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Result of an ordinary-least-squares fit `y ≈ X·beta` (intercept last).
+#[derive(Clone, Debug)]
+pub struct Fit {
+    /// Coefficients, one per feature, followed by the intercept.
+    pub beta: Vec<f64>,
+    /// Coefficient of determination.
+    pub r2: f64,
+    /// Mean absolute percentage error (fraction, not %).
+    pub mape: f64,
+}
+
+impl Fit {
+    pub fn predict(&self, features: &[f64]) -> f64 {
+        debug_assert_eq!(features.len() + 1, self.beta.len());
+        features
+            .iter()
+            .zip(&self.beta)
+            .map(|(x, b)| x * b)
+            .sum::<f64>()
+            + self.beta[self.beta.len() - 1]
+    }
+}
+
+/// OLS with intercept.  `rows[i]` is the feature vector for sample `i`.
+/// Solves the (k+1)×(k+1) normal equations by Gaussian elimination with
+/// partial pivoting — exact enough for the paper's 1–2 feature fits.
+pub fn ols(rows: &[Vec<f64>], ys: &[f64]) -> Option<Fit> {
+    let n = rows.len();
+    if n == 0 || n != ys.len() {
+        return None;
+    }
+    let k = rows[0].len();
+    let dim = k + 1;
+    if n < dim {
+        return None;
+    }
+    // Build X^T X and X^T y with the implicit trailing 1-column.
+    let feat = |row: &Vec<f64>, j: usize| if j < k { row[j] } else { 1.0 };
+    let mut a = vec![vec![0.0; dim]; dim];
+    let mut b = vec![0.0; dim];
+    for (row, &y) in rows.iter().zip(ys) {
+        debug_assert_eq!(row.len(), k);
+        for i in 0..dim {
+            let xi = feat(row, i);
+            b[i] += xi * y;
+            for j in 0..dim {
+                a[i][j] += xi * feat(row, j);
+            }
+        }
+    }
+    let beta = solve(&mut a, &mut b)?;
+    // Goodness of fit.
+    let y_mean = mean(ys);
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    let mut mape_sum = 0.0;
+    let mut mape_n = 0usize;
+    for (row, &y) in rows.iter().zip(ys) {
+        let pred: f64 =
+            (0..dim).map(|j| beta[j] * feat(row, j)).sum::<f64>();
+        ss_res += (y - pred) * (y - pred);
+        ss_tot += (y - y_mean) * (y - y_mean);
+        if y.abs() > 1e-12 {
+            mape_sum += ((y - pred) / y).abs();
+            mape_n += 1;
+        }
+    }
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    let mape = if mape_n > 0 { mape_sum / mape_n as f64 } else { 0.0 };
+    Some(Fit { beta, r2, mape })
+}
+
+/// Gaussian elimination with partial pivoting; `a` and `b` are clobbered.
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let pivot = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None; // singular
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in (col + 1)..n {
+            let f = a[row][col] / a[col][col];
+            for j in col..n {
+                a[row][j] -= f * a[col][j];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for j in (row + 1)..n {
+            acc -= a[row][j] * x[j];
+        }
+        x[row] = acc / a[row][row];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_and_variance() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 99.0) - 9.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(percentile(&[7.0], 1.0), 7.0);
+    }
+
+    #[test]
+    fn ols_recovers_exact_line() {
+        // y = 3x + 2
+        let rows: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..10).map(|i| 3.0 * i as f64 + 2.0).collect();
+        let fit = ols(&rows, &ys).unwrap();
+        assert!((fit.beta[0] - 3.0).abs() < 1e-9);
+        assert!((fit.beta[1] - 2.0).abs() < 1e-9);
+        assert!((fit.r2 - 1.0).abs() < 1e-12);
+        assert!(fit.mape < 1e-9);
+    }
+
+    #[test]
+    fn ols_two_features() {
+        // y = 2a - 0.5b + 7, exercised on a grid (mirrors Eq. 3's form).
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for a in 0..8 {
+            for b in 0..8 {
+                rows.push(vec![a as f64, b as f64]);
+                ys.push(2.0 * a as f64 - 0.5 * b as f64 + 7.0);
+            }
+        }
+        let fit = ols(&rows, &ys).unwrap();
+        assert!((fit.beta[0] - 2.0).abs() < 1e-9);
+        assert!((fit.beta[1] + 0.5).abs() < 1e-9);
+        assert!((fit.beta[2] - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_noisy_r2_high() {
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f64>> =
+            (0..200).map(|_| vec![rng.f64() * 100.0]).collect();
+        let ys: Vec<f64> = rows
+            .iter()
+            .map(|r| 1.5 * r[0] + 10.0 + rng.normal() * 0.5)
+            .collect();
+        let fit = ols(&rows, &ys).unwrap();
+        assert!(fit.r2 > 0.99, "r2 {}", fit.r2);
+        assert!((fit.beta[0] - 1.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn ols_rejects_underdetermined() {
+        assert!(ols(&[vec![1.0, 2.0]], &[3.0]).is_none());
+        assert!(ols(&[], &[]).is_none());
+    }
+
+    #[test]
+    fn ols_rejects_singular() {
+        // Feature identical to intercept -> singular normal equations.
+        let rows: Vec<Vec<f64>> = (0..10).map(|_| vec![1.0]).collect();
+        let ys: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert!(ols(&rows, &ys).is_none());
+    }
+
+    #[test]
+    fn fit_predict_matches_formula() {
+        let fit = Fit { beta: vec![2.0, -1.0, 5.0], r2: 1.0, mape: 0.0 };
+        assert_eq!(fit.predict(&[3.0, 4.0]), 2.0 * 3.0 - 4.0 + 5.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Arrival processes: stamp `arrival_ns` onto a generated trace.
+//!
+//! The paper sends requests "with fixed time interval" for the latency
+//! experiments (Fig. 4) and all-at-once for max throughput (Table 2).
+//! Poisson arrivals are provided for ablations.
+
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Everything arrives at t=0 (max-throughput measurement).
+    AllAtOnce,
+    /// One request every `interval_s` seconds (the paper's Fig. 4 load).
+    FixedInterval { interval_s: f64 },
+    /// Poisson process with `rate_rps` requests/second.
+    Poisson { rate_rps: f64, seed: u64 },
+}
+
+/// Return a copy of `trace` with arrival times stamped.
+pub fn stamp(trace: &[Request], process: ArrivalProcess) -> Vec<Request> {
+    let mut out = trace.to_vec();
+    match process {
+        ArrivalProcess::AllAtOnce => {
+            for r in &mut out {
+                r.arrival_ns = 0;
+            }
+        }
+        ArrivalProcess::FixedInterval { interval_s } => {
+            assert!(interval_s >= 0.0);
+            for (i, r) in out.iter_mut().enumerate() {
+                r.arrival_ns = (i as f64 * interval_s * 1e9).round() as u64;
+            }
+        }
+        ArrivalProcess::Poisson { rate_rps, seed } => {
+            assert!(rate_rps > 0.0);
+            let mut rng = Rng::new(seed);
+            let mut t = 0.0f64;
+            for r in &mut out {
+                t += rng.exponential(rate_rps);
+                r.arrival_ns = (t * 1e9).round() as u64;
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: fixed-interval arrivals at a target rate in requests/s.
+pub fn at_rate(trace: &[Request], rate_rps: f64) -> Vec<Request> {
+    stamp(trace, ArrivalProcess::FixedInterval { interval_s: 1.0 / rate_rps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_ns: 999,
+                input_len: 10,
+                output_len: 5,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_at_once_zeroes() {
+        let out = stamp(&mk(5), ArrivalProcess::AllAtOnce);
+        assert!(out.iter().all(|r| r.arrival_ns == 0));
+    }
+
+    #[test]
+    fn fixed_interval_spacing() {
+        let out = stamp(&mk(4), ArrivalProcess::FixedInterval { interval_s: 0.25 });
+        let times: Vec<u64> = out.iter().map(|r| r.arrival_ns).collect();
+        assert_eq!(times, vec![0, 250_000_000, 500_000_000, 750_000_000]);
+    }
+
+    #[test]
+    fn at_rate_matches_interval() {
+        let out = at_rate(&mk(3), 4.0);
+        assert_eq!(out[1].arrival_ns, 250_000_000);
+    }
+
+    #[test]
+    fn poisson_mean_rate() {
+        let out = stamp(&mk(20_000), ArrivalProcess::Poisson { rate_rps: 8.0, seed: 1 });
+        let span_s = out.last().unwrap().arrival_ns as f64 / 1e9;
+        let rate = 20_000.0 / span_s;
+        assert!((rate - 8.0).abs() < 0.3, "rate {rate}");
+        // Strictly increasing.
+        assert!(out.windows(2).all(|w| w[0].arrival_ns < w[1].arrival_ns));
+    }
+
+    #[test]
+    fn stamp_preserves_payload() {
+        let out = stamp(&mk(3), ArrivalProcess::AllAtOnce);
+        assert!(out.iter().all(|r| r.input_len == 10 && r.output_len == 5));
+        assert_eq!(out.len(), 3);
+    }
+}

@@ -1,0 +1,135 @@
+//! Synthetic Azure-2023-like conversation trace generator.
+//!
+//! Substitution for the Microsoft Azure LLM inference trace (2023) used
+//! by the paper (via Splitwise): we match the published marginal
+//! statistics of the conversation subset the paper reports — mean input
+//! 1014 tokens, mean output 247 tokens — with the long-tailed log-normal
+//! shapes characteristic of conversation workloads, clipped to the
+//! serving window.  The schedulers only ever consume
+//! `(input_len, output_len, arrival)` triples, so matching these
+//! marginals reproduces the load structure the experiments depend on.
+
+use crate::util::rng::{lognormal_mu_for_mean, Rng};
+use crate::workload::Request;
+
+/// Generator parameters (defaults = the paper's conversation trace).
+#[derive(Clone, Copy, Debug)]
+pub struct AzureTraceConfig {
+    pub mean_input: f64,
+    pub mean_output: f64,
+    /// Log-normal shape parameters (tail heaviness).
+    pub sigma_input: f64,
+    pub sigma_output: f64,
+    pub min_input: usize,
+    pub max_input: usize,
+    pub min_output: usize,
+    pub max_output: usize,
+}
+
+impl Default for AzureTraceConfig {
+    fn default() -> Self {
+        AzureTraceConfig {
+            mean_input: 1014.0,
+            mean_output: 247.0,
+            sigma_input: 0.9,
+            sigma_output: 0.8,
+            min_input: 16,
+            max_input: 8192,
+            min_output: 4,
+            max_output: 2048,
+        }
+    }
+}
+
+impl AzureTraceConfig {
+    /// The §6 limitation workload: short inputs, long outputs (decode-
+    /// dominated) — used by the `ablation_limits` bench.
+    pub fn short_input_long_output() -> Self {
+        AzureTraceConfig {
+            mean_input: 128.0,
+            mean_output: 512.0,
+            sigma_input: 0.5,
+            sigma_output: 0.6,
+            min_input: 8,
+            max_input: 1024,
+            min_output: 32,
+            max_output: 4096,
+        }
+    }
+}
+
+/// Generate `n` requests with arrival_ns = 0 (callers stamp arrivals via
+/// [`crate::workload::arrival`]).  Deterministic in `seed`.
+pub fn generate(n: usize, cfg: &AzureTraceConfig, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mu_in = lognormal_mu_for_mean(cfg.mean_input, cfg.sigma_input);
+    let mu_out = lognormal_mu_for_mean(cfg.mean_output, cfg.sigma_output);
+    (0..n)
+        .map(|i| {
+            let input_len = (rng.lognormal(mu_in, cfg.sigma_input).round()
+                as usize)
+                .clamp(cfg.min_input, cfg.max_input);
+            let output_len = (rng.lognormal(mu_out, cfg.sigma_output).round()
+                as usize)
+                .clamp(cfg.min_output, cfg.max_output);
+            Request { id: i as u64, arrival_ns: 0, input_len, output_len }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::stats;
+
+    #[test]
+    fn matches_paper_means() {
+        let trace = generate(20_000, &AzureTraceConfig::default(), 42);
+        let s = stats(&trace);
+        // Clipping pulls the mean slightly below the raw log-normal's.
+        assert!(
+            (s.mean_input - 1014.0).abs() / 1014.0 < 0.08,
+            "mean input {}",
+            s.mean_input
+        );
+        assert!(
+            (s.mean_output - 247.0).abs() / 247.0 < 0.08,
+            "mean output {}",
+            s.mean_output
+        );
+    }
+
+    #[test]
+    fn long_tail_exists_but_clipped() {
+        let trace = generate(20_000, &AzureTraceConfig::default(), 7);
+        let s = stats(&trace);
+        assert!(s.max_input > 4000, "no tail: max input {}", s.max_input);
+        assert!(s.max_input <= 8192);
+        assert!(s.max_output <= 2048);
+        assert!(trace.iter().all(|r| r.input_len >= 16 && r.output_len >= 4));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate(100, &AzureTraceConfig::default(), 5);
+        let b = generate(100, &AzureTraceConfig::default(), 5);
+        assert_eq!(a, b);
+        let c = generate(100, &AzureTraceConfig::default(), 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let trace = generate(10, &AzureTraceConfig::default(), 1);
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn short_in_long_out_flips_ratio() {
+        let trace = generate(5_000, &AzureTraceConfig::short_input_long_output(), 3);
+        let s = stats(&trace);
+        assert!(s.mean_output > 2.0 * s.mean_input, "{s:?}");
+    }
+}

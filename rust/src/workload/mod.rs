@@ -1,0 +1,78 @@
+//! Workload substrate: request traces and arrival processes.
+//!
+//! The paper drives every experiment with 1000 conversation requests from
+//! the Azure LLM inference trace 2023 (mean input 1014 tokens, mean
+//! output 247), sent at fixed intervals (Fig. 4) or all at once
+//! (Table 2's max-throughput measurement).  [`azure`] synthesizes traces
+//! matching those statistics; [`arrival`] stamps arrival times.
+
+pub mod arrival;
+pub mod azure;
+
+/// One inference request as the frontend sees it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time at the frontend, nanoseconds since experiment start.
+    pub arrival_ns: u64,
+    /// Prompt length in tokens.
+    pub input_len: usize,
+    /// Response length in tokens (the trace records it; engines treat it
+    /// as the step at which EOS is emitted).
+    pub output_len: usize,
+}
+
+impl Request {
+    pub fn total_context(&self) -> usize {
+        self.input_len + self.output_len
+    }
+}
+
+/// Summary statistics of a trace (used by tests and bench headers).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceStats {
+    pub n: usize,
+    pub mean_input: f64,
+    pub mean_output: f64,
+    pub max_input: usize,
+    pub max_output: usize,
+}
+
+pub fn stats(trace: &[Request]) -> TraceStats {
+    let n = trace.len();
+    let mean_input =
+        trace.iter().map(|r| r.input_len as f64).sum::<f64>() / n.max(1) as f64;
+    let mean_output =
+        trace.iter().map(|r| r.output_len as f64).sum::<f64>() / n.max(1) as f64;
+    TraceStats {
+        n,
+        mean_input,
+        mean_output,
+        max_input: trace.iter().map(|r| r.input_len).max().unwrap_or(0),
+        max_output: trace.iter().map(|r| r.output_len).max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_fixed_trace() {
+        let trace = vec![
+            Request { id: 0, arrival_ns: 0, input_len: 100, output_len: 10 },
+            Request { id: 1, arrival_ns: 0, input_len: 300, output_len: 30 },
+        ];
+        let s = stats(&trace);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.mean_input, 200.0);
+        assert_eq!(s.mean_output, 20.0);
+        assert_eq!(s.max_input, 300);
+    }
+
+    #[test]
+    fn total_context() {
+        let r = Request { id: 0, arrival_ns: 0, input_len: 7, output_len: 3 };
+        assert_eq!(r.total_context(), 10);
+    }
+}

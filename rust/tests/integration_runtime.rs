@@ -1,0 +1,171 @@
+//! PJRT runtime integration: load the AOT artifacts, execute the real
+//! model, and check numerics against golden values computed with the
+//! pure-jnp reference model (`model.full_forward_ref`, seed-0 weights).
+//!
+//! Golden generator (python/, run once):
+//! ```python
+//! params = M.init_params(jax.random.PRNGKey(0), M.TINY)
+//! prompt = np.random.default_rng(123).integers(1, 2048, size=40)
+//! # greedy-extend 6 tokens with M.full_forward_ref
+//! ```
+//!
+//! Requires `make artifacts`.  Tests are skipped (not failed) when the
+//! artifacts are missing so `cargo test` works before the Python step.
+
+use cronus::runtime::{artifacts_dir, KvState, TokenModel};
+
+fn model_or_skip() -> Option<TokenModel> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(TokenModel::load(&dir).expect("artifacts present but unloadable"))
+}
+
+/// `np.random.default_rng(123).integers(1, 2048, size=40)`.
+fn golden_prompt() -> Vec<i32> {
+    vec![
+        32, 1397, 1214, 111, 1861, 452, 523, 378, 683, 361, 712, 1663, 924,
+        1891, 921, 567, 1615, 1679, 1765, 1822, 52, 1051, 549, 502, 494,
+        1688, 1622, 438, 839, 1518, 304, 1290, 898, 1899, 1514, 475, 1710,
+        1636, 437, 1061,
+    ]
+}
+
+/// Golden continuation from the jnp reference (greedy, 6 tokens).
+const GOLDEN: [i32; 6] = [405, 514, 802, 88, 711, 482];
+
+#[test]
+fn manifest_and_weights_load() {
+    let Some(model) = model_or_skip() else { return };
+    assert_eq!(model.manifest.model_name, "tiny-llama");
+    assert_eq!(model.manifest.n_layers, 4);
+    assert_eq!(model.manifest.vocab, 2048);
+    assert_eq!(model.chunk_size(), 64);
+    assert_eq!(model.decode_batch_size(), 8);
+}
+
+#[test]
+fn greedy_generation_matches_jnp_reference() {
+    let Some(model) = model_or_skip() else { return };
+    let prompt = golden_prompt();
+
+    let mut kv = KvState::new(&model.manifest);
+    let first = model.prefill_prompt(&prompt, &mut kv).unwrap();
+    assert_eq!(first, GOLDEN[0], "first token (prefill) mismatch");
+
+    // Decode the rest greedily.
+    let mut tokens = vec![first];
+    for step in 1..GOLDEN.len() {
+        let pos = prompt.len() + step - 1;
+        let mut entries = vec![(tokens[step - 1], pos, &mut kv)];
+        let logits = model.decode_batch(&mut entries).unwrap();
+        let tok = TokenModel::argmax(&logits[0]);
+        assert_eq!(tok, GOLDEN[step], "decode step {step} mismatch");
+        tokens.push(tok);
+    }
+}
+
+#[test]
+fn chunking_is_equivalent() {
+    // Prefilling in chunk-width pieces or in ragged pieces must give the
+    // same first token (the KV/causal-mask contract).
+    let Some(model) = model_or_skip() else { return };
+    let prompt = golden_prompt();
+
+    let mut kv_a = KvState::new(&model.manifest);
+    let a = model.prefill_prompt(&prompt, &mut kv_a).unwrap();
+
+    let mut kv_b = KvState::new(&model.manifest);
+    let mut last = Vec::new();
+    let cuts = [0usize, 7, 19, 40];
+    for w in cuts.windows(2) {
+        last = model
+            .prefill_chunk(&prompt[w[0]..w[1]], w[0], &mut kv_b)
+            .unwrap();
+    }
+    let b = TokenModel::argmax(&last);
+    assert_eq!(a, b);
+    assert_eq!(kv_a.ctx_len, kv_b.ctx_len);
+}
+
+#[test]
+fn batched_decode_matches_single() {
+    let Some(model) = model_or_skip() else { return };
+    let p1: Vec<i32> = (1..30).collect();
+    let p2: Vec<i32> = (100..160).collect();
+
+    // Singles.
+    let mut kv1 = KvState::new(&model.manifest);
+    let t1 = model.prefill_prompt(&p1, &mut kv1).unwrap();
+    let mut kv2 = KvState::new(&model.manifest);
+    let t2 = model.prefill_prompt(&p2, &mut kv2).unwrap();
+
+    let mut kv1s = kv1.clone();
+    let mut e = vec![(t1, p1.len(), &mut kv1s)];
+    let s1 = TokenModel::argmax(&model.decode_batch(&mut e).unwrap()[0]);
+    let mut kv2s = kv2.clone();
+    let mut e = vec![(t2, p2.len(), &mut kv2s)];
+    let s2 = TokenModel::argmax(&model.decode_batch(&mut e).unwrap()[0]);
+
+    // Batched together.
+    let mut kv1b = kv1.clone();
+    let mut kv2b = kv2.clone();
+    let mut entries = vec![(t1, p1.len(), &mut kv1b), (t2, p2.len(), &mut kv2b)];
+    let logits = model.decode_batch(&mut entries).unwrap();
+    assert_eq!(TokenModel::argmax(&logits[0]), s1);
+    assert_eq!(TokenModel::argmax(&logits[1]), s2);
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let Some(model) = model_or_skip() else { return };
+    let prompt: Vec<i32> = (5..45).collect();
+    let run = || {
+        let mut kv = KvState::new(&model.manifest);
+        let mut toks = vec![model.prefill_prompt(&prompt, &mut kv).unwrap()];
+        for step in 1..5 {
+            let pos = prompt.len() + step - 1;
+            let mut e = vec![(toks[step - 1], pos, &mut kv)];
+            let l = model.decode_batch(&mut e).unwrap();
+            toks.push(TokenModel::argmax(&l[0]));
+        }
+        toks
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn rejects_oversized_inputs() {
+    let Some(model) = model_or_skip() else { return };
+    let mut kv = KvState::new(&model.manifest);
+    let too_long = vec![1i32; model.chunk_size() + 1];
+    assert!(model.prefill_chunk(&too_long, 0, &mut kv).is_err());
+    assert!(model.prefill_chunk(&[], 0, &mut kv).is_err());
+    let near_end = model.manifest.max_seq - 2;
+    assert!(model.prefill_chunk(&[1, 2, 3], near_end, &mut kv).is_err());
+}
+
+#[test]
+fn real_server_end_to_end() {
+    use cronus::server::{RealServer, ServeRequest};
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let server = RealServer::start(&dir).unwrap();
+    for i in 0..6u64 {
+        let len = 16 + (i as usize * 11) % 48;
+        let prompt: Vec<i32> =
+            (0..len as i32).map(|x| (x * 37 + i as i32) % 2047 + 1).collect();
+        server.submit(ServeRequest { id: i, prompt, max_new_tokens: 8 });
+    }
+    let responses = server.shutdown().unwrap();
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 8, "req {} token count", r.id);
+        assert!(r.ttft_s > 0.0);
+        assert!(r.tokens.iter().all(|t| (0..2048).contains(t)));
+    }
+}

@@ -1,0 +1,269 @@
+//! Cross-system integration tests: every approach serves realistic
+//! traces end to end on the simulated heterogeneous cluster, and the
+//! relationships the paper's design arguments predict hold.
+
+use cronus::config::{DeploymentConfig, SystemKind};
+use cronus::simgpu::model_desc::{LLAMA3_8B, QWEN2_7B};
+use cronus::simgpu::spec::{A10, A100, A30};
+use cronus::systems::{build_system, RunOutcome};
+use cronus::workload::arrival::{at_rate, stamp, ArrivalProcess};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+use cronus::workload::Request;
+
+fn azure(n: usize, seed: u64) -> Vec<Request> {
+    let t = generate(n, &AzureTraceConfig::default(), seed);
+    stamp(&t, ArrivalProcess::AllAtOnce)
+}
+
+fn run(kind: SystemKind, cfg: &DeploymentConfig, trace: &[Request]) -> RunOutcome {
+    build_system(kind, cfg).run(trace)
+}
+
+#[test]
+fn all_systems_serve_all_configs() {
+    let trace = azure(60, 1);
+    for (_, cfg) in DeploymentConfig::paper_matrix() {
+        for kind in SystemKind::ALL {
+            let out = run(kind, &cfg, &trace);
+            assert_eq!(
+                out.report.n_finished,
+                trace.len(),
+                "{} on {}+{}",
+                kind.name(),
+                cfg.high_gpu.name,
+                cfg.low_gpu.name
+            );
+            assert!(out.report.throughput_rps > 0.0);
+            assert!(out.report.ttft_p99_s > 0.0);
+            assert!(out.report.tbt_p99_s >= 0.0);
+            assert_eq!(out.instances.len(), 2);
+        }
+    }
+}
+
+#[test]
+fn metrics_are_internally_consistent() {
+    let trace = azure(80, 2);
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    for kind in SystemKind::ALL {
+        let out = run(kind, &cfg, &trace);
+        let r = &out.report;
+        assert!(r.ttft_p50_s <= r.ttft_p99_s, "{}", kind.name());
+        assert!(r.tbt_p50_s <= r.tbt_p99_s);
+        assert!(r.e2e_p50_s <= r.e2e_p99_s);
+        assert!(r.ttft_mean_s <= r.e2e_p99_s);
+        assert!(r.makespan_s >= r.e2e_p99_s - 1e-9);
+        // Total decode work is fixed by the trace.
+        let tokens: u64 = out.instances.iter().map(|i| i.tokens_decoded).sum();
+        let expected: u64 =
+            trace.iter().map(|r| (r.output_len - 1) as u64).sum();
+        assert!(
+            tokens >= expected,
+            "{}: decoded {tokens} < expected {expected}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn cronus_beats_both_disaggregated_variants_on_throughput() {
+    // The headline claim: partially disaggregated prefill dominates both
+    // full disaggregations on every cell.
+    let trace = azure(250, 3);
+    for (label, cfg) in DeploymentConfig::paper_matrix() {
+        let cronus = run(SystemKind::Cronus, &cfg, &trace).report.throughput_rps;
+        let hl = run(SystemKind::DisaggHighLow, &cfg, &trace).report.throughput_rps;
+        let lh = run(SystemKind::DisaggLowHigh, &cfg, &trace).report.throughput_rps;
+        assert!(cronus > hl, "{label}: Cronus {cronus} <= H-L {hl}");
+        assert!(cronus > lh, "{label}: Cronus {cronus} <= L-H {lh}");
+    }
+}
+
+#[test]
+fn cronus_beats_pp_on_throughput() {
+    let trace = azure(250, 4);
+    for (label, cfg) in DeploymentConfig::paper_matrix() {
+        let cronus = run(SystemKind::Cronus, &cfg, &trace).report.throughput_rps;
+        let pp = run(SystemKind::PpChunked, &cfg, &trace).report.throughput_rps;
+        assert!(cronus > 1.3 * pp, "{label}: Cronus {cronus} vs PP {pp}");
+    }
+}
+
+#[test]
+fn disagg_low_end_is_the_bottleneck() {
+    // Appendix B / Table 3: in both disaggregated configurations the
+    // low-end GPU runs at ~100% *relative utilization* (system throughput
+    // over that instance's standalone max) while the high-end GPU is far
+    // below.  Uses the same metric as the paper.
+    use cronus::launcher::{standalone_decode_rps, standalone_prefill_rps};
+    use cronus::simgpu::perfmodel::PerfModel;
+    let trace = azure(250, 5);
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    let hi_pm = PerfModel::new(cfg.high_gpu, cfg.model);
+    let lo_pm = PerfModel::new(cfg.low_gpu, cfg.model);
+    for kind in [SystemKind::DisaggHighLow, SystemKind::DisaggLowHigh] {
+        let sys_rps = run(kind, &cfg, &trace).report.throughput_rps;
+        // Prefill side / decode side standalone capacities for this role
+        // assignment.
+        let (prefill_cap, decode_cap, low_is_decode) =
+            if kind == SystemKind::DisaggHighLow {
+                (
+                    standalone_prefill_rps(&hi_pm, &trace),
+                    standalone_decode_rps(&cfg, &lo_pm, &trace),
+                    true,
+                )
+            } else {
+                (
+                    standalone_prefill_rps(&lo_pm, &trace),
+                    standalone_decode_rps(&cfg, &hi_pm, &trace),
+                    false,
+                )
+            };
+        let prefill_util = sys_rps / prefill_cap;
+        let decode_util = sys_rps / decode_cap;
+        let (low_util, high_util) = if low_is_decode {
+            (decode_util, prefill_util)
+        } else {
+            (prefill_util, decode_util)
+        };
+        assert!(
+            low_util > 0.75,
+            "{}: low-end relative utilization {low_util:.2} should be ~1",
+            kind.name()
+        );
+        assert!(
+            high_util < 0.65 && high_util < low_util,
+            "{}: high-end relative utilization {high_util:.2} should idle",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn latency_shape_at_moderate_load() {
+    // Fig. 4's orderings at a sub-saturation fixed-interval rate.
+    let cfg = DeploymentConfig::paper(A100, A30, LLAMA3_8B);
+    let trace = generate(150, &AzureTraceConfig::default(), 6);
+    let rate = 1.5; // below every system's capacity on A100+A30
+    let mut ttft = std::collections::HashMap::new();
+    let mut tbt = std::collections::HashMap::new();
+    for kind in SystemKind::ALL {
+        let out = build_system(kind, &cfg).run(&at_rate(&trace, rate));
+        assert_eq!(out.report.n_finished, trace.len(), "{}", kind.name());
+        ttft.insert(kind.name(), out.report.ttft_p99_s);
+        tbt.insert(kind.name(), out.report.tbt_p99_s);
+    }
+    // TTFT: H-L (prefill on dedicated A100) beats Cronus; Cronus beats
+    // L-H (all prefill on the low-end GPU) and PP (accumulated comm).
+    assert!(ttft["Disagg. H-L"] <= ttft["Cronus"], "{ttft:?}");
+    assert!(ttft["Cronus"] < ttft["Disagg. L-H"], "{ttft:?}");
+    assert!(ttft["Cronus"] < ttft["PP+Chunked"], "{ttft:?}");
+    // TBT: L-H (dedicated decode GPU) beats Cronus; Cronus beats PP.
+    assert!(tbt["Disagg. L-H"] <= tbt["Cronus"], "{tbt:?}");
+    assert!(tbt["Cronus"] < tbt["PP+Chunked"], "{tbt:?}");
+}
+
+#[test]
+fn qwen_outperforms_llama_on_decode_bound_systems() {
+    // Qwen2-7B's narrower GQA (56 KiB vs 128 KiB per token) lifts
+    // throughput of every decode-limited configuration.
+    let trace = azure(250, 7);
+    for kind in [SystemKind::DisaggHighLow, SystemKind::Cronus] {
+        let llama = run(
+            kind,
+            &DeploymentConfig::paper(A100, A30, LLAMA3_8B),
+            &trace,
+        )
+        .report
+        .throughput_rps;
+        let qwen = run(
+            kind,
+            &DeploymentConfig::paper(A100, A30, QWEN2_7B),
+            &trace,
+        )
+        .report
+        .throughput_rps;
+        assert!(qwen > llama, "{}: qwen {qwen} <= llama {llama}", kind.name());
+    }
+}
+
+#[test]
+fn a30_beats_a10_everywhere() {
+    // Upgrading the low-end card must never hurt.
+    let trace = azure(200, 8);
+    for kind in SystemKind::ALL {
+        let a10 = run(kind, &DeploymentConfig::paper(A100, A10, LLAMA3_8B), &trace)
+            .report
+            .throughput_rps;
+        let a30 = run(kind, &DeploymentConfig::paper(A100, A30, LLAMA3_8B), &trace)
+            .report
+            .throughput_rps;
+        assert!(
+            a30 >= 0.95 * a10,
+            "{}: a30 {a30} markedly worse than a10 {a10}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn systems_are_deterministic() {
+    let trace = azure(50, 9);
+    let cfg = DeploymentConfig::paper(A100, A10, QWEN2_7B);
+    for kind in SystemKind::ALL {
+        let a = run(kind, &cfg, &trace).report;
+        let b = run(kind, &cfg, &trace).report;
+        assert_eq!(a.makespan_s, b.makespan_s, "{}", kind.name());
+        assert_eq!(a.ttft_p99_s, b.ttft_p99_s);
+        assert_eq!(a.tbt_p99_s, b.tbt_p99_s);
+    }
+}
+
+#[test]
+fn poisson_arrivals_work_end_to_end() {
+    let cfg = DeploymentConfig::paper(A100, A30, LLAMA3_8B);
+    let trace = generate(100, &AzureTraceConfig::default(), 10);
+    let trace = stamp(&trace, ArrivalProcess::Poisson { rate_rps: 2.0, seed: 1 });
+    let out = run(SystemKind::Cronus, &cfg, &trace);
+    assert_eq!(out.report.n_finished, 100);
+}
+
+#[test]
+fn cronus_ttft_less_sensitive_to_low_end_gpu_than_dp() {
+    // §5.3: "TTFT P99 of DP increases significantly when A30 is
+    // downgraded to A10 ... Cronus is less sensitive."
+    let trace = generate(200, &AzureTraceConfig::default(), 12);
+    let rate = 1.2;
+    let ttft = |kind, low| {
+        let cfg = DeploymentConfig::paper(A100, low, LLAMA3_8B);
+        build_system(kind, &cfg)
+            .run(&at_rate(&trace, rate))
+            .report
+            .ttft_p99_s
+    };
+    let dp_degradation = ttft(SystemKind::DpChunked, A10) / ttft(SystemKind::DpChunked, A30);
+    let cronus_degradation = ttft(SystemKind::Cronus, A10) / ttft(SystemKind::Cronus, A30);
+    assert!(
+        cronus_degradation < dp_degradation,
+        "cronus {cronus_degradation:.3} vs dp {dp_degradation:.3}"
+    );
+}
+
+#[test]
+fn tbt_shape_on_a10_cell() {
+    // The paper's strongest TBT contrasts come from the A100+A10 cell,
+    // where the low-end GPU's decode iterations are slowest: DP and
+    // Disagg. H-L decode some/all requests on the A10 and pay for it.
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    let trace = generate(150, &AzureTraceConfig::default(), 13);
+    let rate = 0.9; // below Disagg. H-L's capacity on this cell
+    let mut tbt = std::collections::HashMap::new();
+    for kind in SystemKind::ALL {
+        let out = build_system(kind, &cfg).run(&at_rate(&trace, rate));
+        assert_eq!(out.report.n_finished, trace.len(), "{}", kind.name());
+        tbt.insert(kind.name(), out.report.tbt_p99_s);
+    }
+    assert!(tbt["Cronus"] < tbt["DP+Chunked"], "{tbt:?}");
+    assert!(tbt["Cronus"] < tbt["Disagg. H-L"], "{tbt:?}");
+    assert!(tbt["Cronus"] < tbt["PP+Chunked"], "{tbt:?}");
+}

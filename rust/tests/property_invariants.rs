@@ -1,0 +1,428 @@
+//! Property-based invariant tests (proptest_lite harness; the image
+//! ships no proptest).  Each property runs across many deterministic
+//! seeds and reports the failing seed on violation.
+
+use cronus::cronus::ppi::{PartialPrefillInstance, PpiJob};
+use cronus::engine::{EngineInstance, EngineRequest};
+use cronus::kvcache::BlockAllocator;
+use cronus::simclock::{EventQueue, SimTime};
+use cronus::simgpu::link::LinkSpec;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::perfmodel::PerfModel;
+use cronus::simgpu::spec::{A10, A100};
+use cronus::util::proptest_lite::{check, PropResult};
+use cronus::util::stats;
+
+#[test]
+fn prop_allocator_never_double_owns() {
+    check("allocator random ops keep invariants", 100, |rng| {
+        let n_blocks = rng.range_usize(4, 200);
+        let block_size = rng.range_usize(1, 32);
+        let mut a = BlockAllocator::new(n_blocks, block_size);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.range(0, 3) {
+                0 => {
+                    let tokens = rng.range_usize(0, n_blocks * block_size + 10);
+                    next_id += 1;
+                    if a.allocate(next_id, tokens).is_ok() {
+                        live.push(next_id);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len());
+                        let id = live.swap_remove(i);
+                        if a.release(id).is_err() {
+                            return PropResult::Fail("release of live failed".into());
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len());
+                        let id = live[i];
+                        let cur = a.tokens_of(id).unwrap();
+                        let _ = a.grow(id, cur + rng.range_usize(0, 64));
+                    }
+                }
+            }
+            if let Err(e) = a.check_invariants() {
+                return PropResult::Fail(e);
+            }
+        }
+        // Releasing everything returns the pool to full.
+        for id in live {
+            a.release(id).unwrap();
+        }
+        PropResult::assert_eq("pool restored", a.free_blocks(), n_blocks)
+    });
+}
+
+#[test]
+fn prop_allocator_accounting_exact() {
+    check("used + free == total always", 100, |rng| {
+        let mut a = BlockAllocator::new(64, 16);
+        for id in 0..rng.range(1, 20) {
+            let _ = a.allocate(id, rng.range_usize(1, 300));
+            if a.used_blocks() + a.free_blocks() != a.total_blocks() {
+                return PropResult::Fail("block accounting drift".into());
+            }
+        }
+        PropResult::Ok
+    });
+}
+
+#[test]
+fn prop_engine_conserves_tokens() {
+    // Whatever the workload, every submitted request must finish with
+    // exactly `output_len` reported tokens and no leaked KV.
+    check("engine token conservation", 40, |rng| {
+        let pm = PerfModel::new(A100, LLAMA3_8B);
+        let kv_tokens = rng.range_usize(2_000, 40_000);
+        let budget = [256usize, 512][rng.range_usize(0, 2)];
+        let mut e = EngineInstance::new(
+            "prop", pm, LinkSpec::INFINIBAND_100G, budget, 64, 16, kv_tokens,
+        );
+        let n = rng.range_usize(1, 30);
+        let mut expected_tokens = 0usize;
+        let mut submitted = Vec::new();
+        for id in 0..n as u64 {
+            let input = rng.range_usize(1, 1500);
+            let output = rng.range_usize(1, 120);
+            if input + output + 64 > kv_tokens {
+                continue; // would never fit; engine would reject upstream
+            }
+            let offset = if rng.f64() < 0.3 {
+                rng.range_usize(0, input + 1)
+            } else {
+                0
+            };
+            expected_tokens += output;
+            submitted.push(id);
+            e.submit(EngineRequest::with_offset(id, input, output, offset));
+        }
+        let mut first = 0usize;
+        let mut tokens = 0usize;
+        let mut finished = 0usize;
+        let mut guard = 0;
+        while e.has_work() {
+            guard += 1;
+            if guard > 200_000 {
+                return PropResult::Fail("engine did not converge".into());
+            }
+            let Some(plan) = e.plan_iteration() else { break };
+            for ev in e.complete_iteration(&plan) {
+                match ev {
+                    cronus::engine::EngineEvent::FirstToken(_) => {
+                        first += 1;
+                        tokens += 1;
+                    }
+                    cronus::engine::EngineEvent::Token(_) => tokens += 1,
+                    cronus::engine::EngineEvent::Finished(_) => finished += 1,
+                    _ => {}
+                }
+            }
+            if let Err(msg) = e.check_invariants() {
+                return PropResult::Fail(msg);
+            }
+        }
+        if submitted.is_empty() {
+            return PropResult::Discard;
+        }
+        PropResult::assert_eq("finished count", finished, submitted.len())
+            .and(|| PropResult::assert_eq("first tokens", first, submitted.len()))
+            .and(|| PropResult::assert_eq("total tokens", tokens, expected_tokens))
+            .and(|| {
+                PropResult::assert_eq(
+                    "no leaked KV",
+                    e.kv_allocator().used_blocks(),
+                    0,
+                )
+            })
+    });
+}
+
+#[test]
+fn prop_engine_iteration_durations_positive_and_bounded() {
+    check("iteration durations sane", 30, |rng| {
+        let pm = PerfModel::new(A100, LLAMA3_8B);
+        let mut e = EngineInstance::new(
+            "prop", pm, LinkSpec::INFINIBAND_100G, 512, 64, 16, 100_000,
+        );
+        for id in 0..rng.range(1, 12) {
+            e.submit(EngineRequest::whole(
+                id,
+                rng.range_usize(1, 4000),
+                rng.range_usize(1, 60),
+            ));
+        }
+        while e.has_work() {
+            let Some(plan) = e.plan_iteration() else { break };
+            if !(plan.duration_s > 0.0 && plan.duration_s < 10.0) {
+                return PropResult::Fail(format!(
+                    "weird iteration duration {}",
+                    plan.duration_s
+                ));
+            }
+            e.complete_iteration(&plan);
+        }
+        PropResult::Ok
+    });
+}
+
+#[test]
+fn prop_ppi_never_loses_jobs() {
+    check("PPI job conservation under random op order", 60, |rng| {
+        let pm = PerfModel::new(A10, LLAMA3_8B);
+        let buffer = rng.range_usize(500, 5_000);
+        let mut ppi = PartialPrefillInstance::new(pm, buffer);
+        let mut next_id = 0u64;
+        let mut in_flight: Vec<u64> = Vec::new(); // enqueued, not yet done
+        let mut buffered: Vec<u64> = Vec::new();
+        let mut running: Option<u64> = None;
+        let mut done = 0usize;
+        let total = rng.range_usize(5, 40);
+        let mut started_total = 0usize;
+        for _ in 0..1000 {
+            if done == total {
+                break;
+            }
+            let roll = rng.f64();
+            if roll < 0.4 && (next_id as usize) < total && ppi.has_slot() {
+                let len = rng.range_usize(1, buffer.min(2000));
+                if let Some((job, _)) =
+                    ppi.enqueue(PpiJob { id: next_id, partial_len: len })
+                {
+                    running = Some(job.id);
+                    started_total += 1;
+                } else {
+                    in_flight.push(next_id);
+                }
+                next_id += 1;
+            } else if roll < 0.7 && running.is_some() {
+                let (job, next) = ppi.on_done();
+                if Some(job.id) != running {
+                    return PropResult::Fail("finished wrong job".into());
+                }
+                running = None;
+                buffered.push(job.id);
+                done += 1;
+                if let Some((j, _)) = next {
+                    in_flight.retain(|x| *x != j.id);
+                    running = Some(j.id);
+                    started_total += 1;
+                }
+            } else if !buffered.is_empty() {
+                let i = rng.range_usize(0, buffered.len());
+                let id = buffered.swap_remove(i);
+                if let Some((j, _)) = ppi.release(id) {
+                    in_flight.retain(|x| *x != j.id);
+                    running = Some(j.id);
+                    started_total += 1;
+                }
+            }
+            if let Err(msg) = ppi.check_invariants() {
+                return PropResult::Fail(msg);
+            }
+        }
+        // No job may vanish: everything enqueued is either done, running,
+        // or still queued.
+        let accounted = done + running.is_some() as usize + in_flight.len();
+        PropResult::assert_eq("jobs accounted", accounted, next_id as usize)
+            .and(|| {
+                PropResult::assert_true(
+                    "starts never exceed enqueues",
+                    started_total <= next_id as usize,
+                )
+            })
+    });
+}
+
+#[test]
+fn prop_event_queue_monotone() {
+    check("event queue pops in non-decreasing time", 50, |rng| {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut pending = 0usize;
+        let mut last = SimTime::ZERO;
+        for i in 0..500u32 {
+            if pending == 0 || rng.f64() < 0.55 {
+                let t = q.now().0 + rng.range(0, 1_000_000);
+                q.push(SimTime(t), i);
+                pending += 1;
+            } else {
+                let (t, _) = q.pop().unwrap();
+                pending -= 1;
+                if t < last {
+                    return PropResult::Fail(format!("time went backwards: {t} < {last}"));
+                }
+                last = t;
+            }
+        }
+        PropResult::Ok
+    });
+}
+
+#[test]
+fn prop_percentile_bounds_and_monotonicity() {
+    check("percentile within [min,max], monotone in p", 100, |rng| {
+        let n = rng.range_usize(1, 200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 1000.0 - 500.0).collect();
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut prev = f64::NEG_INFINITY;
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let v = stats::percentile(&xs, p);
+            if v < min - 1e-9 || v > max + 1e-9 {
+                return PropResult::Fail(format!("p{p} = {v} outside [{min}, {max}]"));
+            }
+            if v < prev - 1e-9 {
+                return PropResult::Fail(format!("p{p} not monotone"));
+            }
+            prev = v;
+        }
+        PropResult::Ok
+    });
+}
+
+#[test]
+fn prop_ols_fit_recovers_planted_line() {
+    check("OLS recovers planted coefficients", 60, |rng| {
+        let k1 = rng.f64() * 10.0 - 5.0;
+        let k2 = rng.f64() * 2.0 - 1.0;
+        let b = rng.f64() * 100.0;
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..80 {
+            let x1 = rng.f64() * 1000.0;
+            let x2 = rng.f64() * 50.0;
+            rows.push(vec![x1, x2]);
+            ys.push(k1 * x1 + k2 * x2 + b);
+        }
+        let Some(fit) = stats::ols(&rows, &ys) else {
+            return PropResult::Fail("fit failed".into());
+        };
+        PropResult::assert_true(
+            "k1 recovered",
+            (fit.beta[0] - k1).abs() < 1e-6 * (1.0 + k1.abs()),
+        )
+        .and(|| {
+            PropResult::assert_true(
+                "b recovered",
+                (fit.beta[2] - b).abs() < 1e-5 * (1.0 + b.abs()),
+            )
+        })
+    });
+}
+
+#[test]
+fn prop_trace_generator_within_bounds() {
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+    check("azure trace respects clipping bounds", 40, |rng| {
+        let cfg = AzureTraceConfig::default();
+        let trace = generate(rng.range_usize(1, 500), &cfg, rng.next_u64());
+        for r in &trace {
+            if r.input_len < cfg.min_input || r.input_len > cfg.max_input {
+                return PropResult::Fail(format!("input {} out of bounds", r.input_len));
+            }
+            if r.output_len < cfg.min_output || r.output_len > cfg.max_output {
+                return PropResult::Fail(format!("output {} out of bounds", r.output_len));
+            }
+        }
+        PropResult::Ok
+    });
+}
+
+#[test]
+fn prop_balancer_split_always_valid() {
+    use cronus::cronus::balancer::{Balancer, SplitPolicy};
+    use cronus::engine::instance::EngineStats;
+    use cronus::simgpu::fit::calibrate;
+    let ppi = PerfModel::new(A10, LLAMA3_8B);
+    let cpi = PerfModel::new(A100, LLAMA3_8B);
+    let (p, c) = calibrate(&ppi, &cpi, 512, 0.01, 3);
+    let balancer = Balancer::new(SplitPolicy::Balanced, p, c, 512);
+    check("balancer split ∈ [1, input]", 200, |rng| {
+        let input = rng.range_usize(1, 8192);
+        let stats = EngineStats {
+            n_decode: rng.range_usize(0, 512),
+            decode_ctx_sum: rng.range_usize(0, 600_000),
+            n_prefilling: rng.range_usize(0, 8),
+            waiting: rng.range_usize(0, 50),
+            free_blocks: rng.range_usize(0, 40_000),
+            block_size: 16,
+            total_blocks: 40_000,
+        };
+        let d = balancer.split(input, &stats);
+        PropResult::assert_true(
+            "bounds",
+            d.partial_len >= 1 && d.partial_len <= input,
+        )
+    });
+}
+
+#[test]
+fn prop_systems_finish_everything() {
+    use cronus::config::{DeploymentConfig, SystemKind};
+    use cronus::systems::build_system;
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+    check("every system finishes every request", 12, |rng| {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let n = rng.range_usize(5, 60);
+        let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
+        let process = if rng.f64() < 0.5 {
+            ArrivalProcess::AllAtOnce
+        } else {
+            ArrivalProcess::FixedInterval { interval_s: 0.2 + rng.f64() }
+        };
+        let trace = stamp(&trace, process);
+        let kind = SystemKind::ALL[rng.range_usize(0, 5)];
+        let out = build_system(kind, &cfg).run(&trace);
+        PropResult::assert_eq("finished", out.report.n_finished, n).and(|| {
+            PropResult::assert_true(
+                "ttft <= e2e",
+                out.report.ttft_p99_s <= out.report.e2e_p99_s + 1e-9,
+            )
+        })
+    });
+}
+
+#[test]
+fn prop_balancer_fast_path_matches_exhaustive() {
+    // §Perf: the binary-search split must agree with the literal
+    // Algorithm 1 scan (same grid, same argmin quality).
+    use cronus::cronus::balancer::{Balancer, SplitPolicy};
+    use cronus::engine::instance::EngineStats;
+    use cronus::simgpu::fit::calibrate;
+    let ppi = PerfModel::new(A10, LLAMA3_8B);
+    let cpi = PerfModel::new(A100, LLAMA3_8B);
+    let (p, c) = calibrate(&ppi, &cpi, 512, 0.01, 9);
+    let balancer = Balancer::new(SplitPolicy::Balanced, p, c, 512);
+    check("fast split == exhaustive split", 150, |rng| {
+        let input = rng.range_usize(1, 8192);
+        let stats = EngineStats {
+            n_decode: rng.range_usize(0, 500),
+            decode_ctx_sum: rng.range_usize(0, 700_000),
+            n_prefilling: 0,
+            waiting: 0,
+            free_blocks: rng.range_usize(0, 40_000),
+            block_size: 16,
+            total_blocks: 40_000,
+        };
+        let fast = balancer.split(input, &stats);
+        let slow = balancer.balanced_split_exhaustive(input, &stats);
+        let fd = (fast.t_prefill_est - fast.t_chunked_est).abs();
+        let sd = (slow.t_prefill_est - slow.t_chunked_est).abs();
+        // Same candidate, or (on the rare plateau) an equally-balanced one.
+        if fast.partial_len == slow.partial_len || fd <= sd * 1.0001 + 1e-12 {
+            PropResult::Ok
+        } else {
+            PropResult::Fail(format!(
+                "fast lp={} |diff|={fd:.6e} vs exhaustive lp={} |diff|={sd:.6e} (input {input})",
+                fast.partial_len, slow.partial_len
+            ))
+        }
+    });
+}
