@@ -17,7 +17,7 @@ use cronus::util::stats;
 use cronus::workload::azure::{generate, AzureTraceConfig};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cronus::util::error::Result<()> {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("no artifacts at {dir:?} — run `make artifacts` first");

@@ -1,0 +1,59 @@
+//! Cluster scale-out sweep: 1 → N mixed (high-end, low-end) pairs behind
+//! the cluster-level router, for every routing policy.  The scenario the
+//! paper leaves unexplored — mixed-capability pairs under one frontend —
+//! and the headline scaling claim of the cluster subsystem: with the
+//! least-outstanding-tokens policy, 4 pairs sustain ≥ 3x the 1-pair
+//! throughput despite the heterogeneous mix.
+//!
+//! ```bash
+//! cargo bench --bench cluster_sweep                 # 400 requests, 8 pairs
+//! CRONUS_BENCH_N=40 CRONUS_MAX_PAIRS=2 cargo bench --bench cluster_sweep
+//! ```
+
+use cronus::benchkit::time_once;
+use cronus::cronus::router::RoutePolicy;
+use cronus::launcher::{cluster_sweep, ClusterSweepPoint, ExperimentOpts};
+
+fn main() {
+    let n = std::env::var("CRONUS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400usize);
+    let max_pairs = std::env::var("CRONUS_MAX_PAIRS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8usize);
+    let opts = ExperimentOpts { n_requests: n, seed: 42 };
+
+    let mut lot_points: Vec<ClusterSweepPoint> = Vec::new();
+    let mut wall_total = 0.0;
+    for policy in RoutePolicy::ALL {
+        let ((table, points), wall) =
+            time_once(|| cluster_sweep(&opts, policy, max_pairs));
+        table.print();
+        wall_total += wall;
+        if policy == RoutePolicy::LeastOutstandingTokens {
+            lot_points = points;
+        }
+    }
+
+    println!("\nheadline-claim checks:");
+    let at = |k: usize| lot_points.iter().find(|p| p.n_pairs == k);
+    if let Some(p4) = at(4) {
+        let ok = p4.scaling >= 3.0;
+        println!(
+            "  [{}] least-outstanding: 4-pair scaling {:.2}x >= 3x",
+            if ok { "ok" } else { "MISS" },
+            p4.scaling
+        );
+    } else {
+        println!("  [--] 4-pair check skipped (swept only {max_pairs} pairs)");
+    }
+    for p in &lot_points {
+        let finished = p.outcome.report.n_finished;
+        if finished != n {
+            println!("  [MISS] {} pairs finished {finished}/{n}", p.n_pairs);
+        }
+    }
+    println!("\n(total bench wall time {wall_total:.1}s, n={n}, policies=3)");
+}

@@ -215,13 +215,13 @@ impl ServingSystem for PpSystem {
             // Dispatch arrivals to the emptier group (ties alternate).
             while let Some(&i) = frontend.front() {
                 let r = &trace[i];
-                let g = if groups[0].n_in_instance() == groups[1].n_in_instance() {
-                    let g = next_group;
-                    g
-                } else if groups[0].n_in_instance() < groups[1].n_in_instance() {
-                    0
-                } else {
-                    1
+                let g = match groups[0]
+                    .n_in_instance()
+                    .cmp(&groups[1].n_in_instance())
+                {
+                    std::cmp::Ordering::Equal => next_group,
+                    std::cmp::Ordering::Less => 0,
+                    std::cmp::Ordering::Greater => 1,
                 };
                 groups[g].submit(EngineRequest::whole(r.id, r.input_len, r.output_len));
                 frontend.pop_front();

@@ -7,5 +7,7 @@
 pub mod cli;
 pub mod cluster;
 pub mod toml;
+pub mod topology;
 
 pub use cluster::{DeploymentConfig, EngineParams, SystemKind};
+pub use topology::{ClusterConfig, PairConfig};

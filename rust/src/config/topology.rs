@@ -1,0 +1,234 @@
+//! Cluster topology: N heterogeneous (high-end, low-end) GPU pairs
+//! behind one cluster-level router.
+//!
+//! The paper deploys Cronus on a single pair; organizational clusters
+//! (the paper's target setting, and what HexGen-2 / "High-Throughput LLM
+//! inference on Heterogeneous Clusters" schedule across) have many such
+//! pairs with different capability mixes.  A [`ClusterConfig`] is an
+//! ordered list of [`PairConfig`]s — each pair carries its own
+//! [`DeploymentConfig`] (GPU combo, link, engine knobs), the serving
+//! system it runs (Cronus by default), and a relative `rate_share` used
+//! by the weighted round-robin routing policy.
+//!
+//! TOML form (parsed by [`crate::config::toml`]):
+//!
+//! ```toml
+//! [topology]
+//! model = "llama3-8b"
+//! pairs = ["a100+a10", "a100+a30:1.5", "a100+v100"]
+//! ```
+//!
+//! Each pair spec is `<high_gpu>+<low_gpu>` with an optional
+//! `:<rate_share>` suffix.
+
+use crate::config::cluster::{DeploymentConfig, SystemKind};
+use crate::config::toml::{TomlDoc, TomlValue};
+use crate::simgpu::model_desc::{self, ModelDesc};
+use crate::simgpu::spec::{self, GpuSpec};
+
+/// One (high-end, low-end) GPU pair in the cluster.
+#[derive(Clone, Debug)]
+pub struct PairConfig {
+    /// Display name, e.g. `A100-80G+A10`.
+    pub name: String,
+    pub deployment: DeploymentConfig,
+    /// Which serving system this pair runs (Cronus unless overridden).
+    pub system: SystemKind,
+    /// Relative share of offered load for weighted routing policies.
+    pub rate_share: f64,
+}
+
+impl PairConfig {
+    /// A Cronus pair with unit rate share.
+    pub fn cronus(deployment: DeploymentConfig) -> PairConfig {
+        let name =
+            format!("{}+{}", deployment.high_gpu.name, deployment.low_gpu.name);
+        PairConfig {
+            name,
+            deployment,
+            system: SystemKind::Cronus,
+            rate_share: 1.0,
+        }
+    }
+
+    /// Parse `"a100+a10"` or `"a100+a10:2.0"` (rate share suffix).
+    pub fn from_spec(text: &str, model: ModelDesc) -> Result<PairConfig, String> {
+        let (gpus, share) = match text.split_once(':') {
+            Some((g, s)) => {
+                let share: f64 = s
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad rate share in '{text}'"))?;
+                if share <= 0.0 {
+                    return Err(format!("rate share must be > 0 in '{text}'"));
+                }
+                (g, share)
+            }
+            None => (text, 1.0),
+        };
+        let (hi, lo) = gpus
+            .split_once('+')
+            .ok_or_else(|| format!("pair spec '{text}' is not '<high>+<low>'"))?;
+        let high = spec::by_name(hi.trim())
+            .ok_or_else(|| format!("unknown gpu '{}'", hi.trim()))?;
+        let low = spec::by_name(lo.trim())
+            .ok_or_else(|| format!("unknown gpu '{}'", lo.trim()))?;
+        let mut pair = PairConfig::cronus(DeploymentConfig::paper(high, low, model));
+        pair.rate_share = share;
+        Ok(pair)
+    }
+}
+
+/// An N-pair heterogeneous cluster behind one router.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterConfig {
+    pub pairs: Vec<PairConfig>,
+}
+
+impl ClusterConfig {
+    pub fn new(pairs: Vec<PairConfig>) -> ClusterConfig {
+        ClusterConfig { pairs }
+    }
+
+    /// `n` identical Cronus pairs.
+    pub fn homogeneous(n: usize, deployment: DeploymentConfig) -> ClusterConfig {
+        ClusterConfig {
+            pairs: (0..n).map(|_| PairConfig::cronus(deployment.clone())).collect(),
+        }
+    }
+
+    /// The standard mixed-capability scale-out fleet: A100 high-end cards
+    /// paired with low-end cards of decreasing capability.  The first
+    /// pair (A100+A10) is the scale-out baseline; pairs 5–8 add V100 and
+    /// T4 partners to exercise the capability-mismatch paths.
+    pub fn mixed(n_pairs: usize, model: ModelDesc) -> ClusterConfig {
+        const LOWS: [GpuSpec; 8] = [
+            spec::A10,
+            spec::A30,
+            spec::A10,
+            spec::A30,
+            spec::V100,
+            spec::T4,
+            spec::V100,
+            spec::T4,
+        ];
+        ClusterConfig {
+            pairs: (0..n_pairs)
+                .map(|i| {
+                    let low = LOWS[i % LOWS.len()];
+                    PairConfig::cronus(DeploymentConfig::paper(spec::A100, low, model))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn total_rate_share(&self) -> f64 {
+        self.pairs.iter().map(|p| p.rate_share).sum()
+    }
+
+    /// Short display label, e.g. `cluster[A10|A30|A10]`.
+    pub fn label(&self) -> String {
+        let lows: Vec<&str> = self.pairs.iter().map(|p| p.deployment.low_gpu.name).collect();
+        format!("cluster[{}]", lows.join("|"))
+    }
+
+    /// Load a topology from a parsed TOML document.  `topology.pairs`
+    /// replaces the pair list; `topology.model` sets the served model
+    /// (defaulting to the current first pair's model).
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
+        let model = match doc.get_str("topology.model") {
+            Some(name) => model_desc::by_name(name)
+                .ok_or_else(|| format!("unknown model '{name}'"))?,
+            None => self
+                .pairs
+                .first()
+                .map(|p| p.deployment.model)
+                .unwrap_or(model_desc::LLAMA3_8B),
+        };
+        if let Some(TomlValue::Array(items)) = doc.get("topology.pairs") {
+            let mut pairs = Vec::with_capacity(items.len());
+            for item in items {
+                let text = item
+                    .as_str()
+                    .ok_or("topology.pairs entries must be strings")?;
+                pairs.push(PairConfig::from_spec(text, model)?);
+            }
+            if pairs.is_empty() {
+                return Err("topology.pairs must not be empty".into());
+            }
+            self.pairs = pairs;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+
+    #[test]
+    fn mixed_fleet_shape() {
+        let c = ClusterConfig::mixed(4, LLAMA3_8B);
+        assert_eq!(c.n_pairs(), 4);
+        let lows: Vec<&str> = c.pairs.iter().map(|p| p.deployment.low_gpu.name).collect();
+        assert_eq!(lows, vec!["A10", "A30", "A10", "A30"]);
+        assert!(c.pairs.iter().all(|p| p.deployment.high_gpu.name == "A100-80G"));
+        assert!(c.pairs.iter().all(|p| p.system == SystemKind::Cronus));
+        assert_eq!(c.total_rate_share(), 4.0);
+        assert_eq!(c.label(), "cluster[A10|A30|A10|A30]");
+    }
+
+    #[test]
+    fn mixed_fleet_extends_to_v100_t4() {
+        let c = ClusterConfig::mixed(8, LLAMA3_8B);
+        let lows: Vec<&str> = c.pairs.iter().map(|p| p.deployment.low_gpu.name).collect();
+        assert_eq!(lows[4], "V100-32G");
+        assert_eq!(lows[5], "T4");
+    }
+
+    #[test]
+    fn pair_spec_parses_share() {
+        let p = PairConfig::from_spec("a100+a30:2.5", LLAMA3_8B).unwrap();
+        assert_eq!(p.deployment.low_gpu.name, "A30");
+        assert_eq!(p.rate_share, 2.5);
+        let p = PairConfig::from_spec("a100+v100", LLAMA3_8B).unwrap();
+        assert_eq!(p.rate_share, 1.0);
+        assert!(PairConfig::from_spec("a100", LLAMA3_8B).is_err());
+        assert!(PairConfig::from_spec("a100+tpu", LLAMA3_8B).is_err());
+        assert!(PairConfig::from_spec("a100+a10:-1", LLAMA3_8B).is_err());
+    }
+
+    #[test]
+    fn toml_topology_roundtrip() {
+        let doc = toml::parse(
+            "[topology]\nmodel = \"qwen2-7b\"\n\
+             pairs = [\"a100+a10\", \"a100+a30:1.5\", \"a100+t4\"]\n",
+        )
+        .unwrap();
+        let mut c = ClusterConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.n_pairs(), 3);
+        assert_eq!(c.pairs[0].deployment.model.name, "qwen2-7b");
+        assert_eq!(c.pairs[1].rate_share, 1.5);
+        assert_eq!(c.pairs[2].deployment.low_gpu.name, "T4");
+    }
+
+    #[test]
+    fn toml_bad_entries_error() {
+        let mut c = ClusterConfig::mixed(1, LLAMA3_8B);
+        let doc = toml::parse("[topology]\npairs = [\"a100+h100\"]\n").unwrap();
+        assert!(c.apply_toml(&doc).is_err());
+        let doc = toml::parse("[topology]\nmodel = \"gpt5\"\n").unwrap();
+        assert!(c.apply_toml(&doc).is_err());
+        // No topology section: config unchanged.
+        let doc = toml::parse("[cluster]\nhigh_gpu = \"a100\"\n").unwrap();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.n_pairs(), 1);
+    }
+}

@@ -172,8 +172,14 @@ impl ServingSystem for CronusSystem {
                     continue;
                 }
                 let decision = balancer.split(r.input_len, &cpi.stats());
+                // The PPI's KV buffer bounds the prefix it can hold: a
+                // low-end card too small for the model (e.g. 16 GiB for
+                // an 8B model in a mixed cluster) degrades to pure
+                // chunked prefill on the CPI instead of stalling.
+                let partial_len =
+                    decision.partial_len.min(ppi.buffer_capacity_tokens());
                 if let Some((_job, dur)) =
-                    ppi.enqueue(PpiJob { id: r.id, partial_len: decision.partial_len })
+                    ppi.enqueue(PpiJob { id: r.id, partial_len })
                 {
                     q.push_after(dur, Ev::PpiDone);
                 }
@@ -189,7 +195,7 @@ impl ServingSystem for CronusSystem {
         }
 
         if rejected > 0 {
-            log::warn!("{}: rejected {rejected} oversized requests", self.label);
+            eprintln!("{}: rejected {rejected} oversized requests", self.label);
         }
 
         let report = metrics.report(self.label.clone());

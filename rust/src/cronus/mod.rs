@@ -24,10 +24,17 @@
 //! implementation, but always set the partial prefill length to the input
 //! length").
 
+//! Scaling out, the cluster-level **router** ([`router`]) dispatches
+//! arriving requests across many such pairs (round-robin,
+//! least-outstanding-tokens, or SLO-aware TTFT estimation) — see
+//! [`crate::systems::cluster`] for the N-pair serving system.
+
 pub mod balancer;
 pub mod frontend;
 pub mod ppi;
+pub mod router;
 
 pub use balancer::{Balancer, SplitPolicy};
 pub use frontend::CronusSystem;
 pub use ppi::PartialPrefillInstance;
+pub use router::{RoutePolicy, Router};

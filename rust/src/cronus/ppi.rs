@@ -125,6 +125,11 @@ impl PartialPrefillInstance {
         self.buffered_tokens
     }
 
+    /// Total KV tokens the buffer can hold (the low-end card's capacity).
+    pub fn buffer_capacity_tokens(&self) -> usize {
+        self.buffer_capacity_tokens
+    }
+
     pub fn is_idle(&self) -> bool {
         self.running.is_none()
     }

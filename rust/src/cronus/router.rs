@@ -1,0 +1,345 @@
+//! Cluster-level request router: dispatches each arriving request to one
+//! of N heterogeneous (high-end, low-end) pairs.
+//!
+//! The router is the cluster analogue of the paper's per-pair frontend:
+//! it sees only arrival-time information (request lengths and its own
+//! bookkeeping), never simulator ground truth.  Load is tracked as a
+//! *virtual backlog* per pair — outstanding tokens that drain at a rate
+//! estimated from the pair's [`PerfModel`]s — mirroring how production
+//! routers work off stale/estimated load signals rather than perfect
+//! instantaneous state.
+//!
+//! Three pluggable policies:
+//!
+//! * [`RoutePolicy::RoundRobin`] — weighted round-robin over the pairs'
+//!   `rate_share`s (deficit form: route to the pair with the smallest
+//!   `routed / share` ratio);
+//! * [`RoutePolicy::LeastOutstandingTokens`] — route to the pair with the
+//!   fewest outstanding (assigned − drained) tokens;
+//! * [`RoutePolicy::SloAware`] — estimate each pair's TTFT for *this*
+//!   request (queue drain time + the pair's calibrated Eq. 2 prefill
+//!   predictor) and route to the minimum, so slow-prefill pairs stop
+//!   attracting long prompts before their tails blow up.
+
+use crate::config::topology::ClusterConfig;
+use crate::simgpu::fit::{calibrate, PrefillCoeffs};
+use crate::simgpu::perfmodel::{IterationShape, PerfModel, PrefillSeg};
+use crate::workload::Request;
+
+/// Routing policy of the cluster frontend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastOutstandingTokens,
+    SloAware,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 3] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastOutstandingTokens,
+        RoutePolicy::SloAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastOutstandingTokens => "least-outstanding",
+            RoutePolicy::SloAware => "slo-aware",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<RoutePolicy> {
+        match name
+            .to_ascii_lowercase()
+            .replace(['-', '_', ' '], "")
+            .as_str()
+        {
+            "rr" | "roundrobin" => Some(RoutePolicy::RoundRobin),
+            "lot" | "leastoutstanding" | "leastoutstandingtokens" => {
+                Some(RoutePolicy::LeastOutstandingTokens)
+            }
+            "slo" | "sloaware" => Some(RoutePolicy::SloAware),
+            _ => None,
+        }
+    }
+}
+
+/// Router-side view of one pair's load.
+struct PairLoad {
+    rate_share: f64,
+    /// Estimated sustained service rate of the pair, tokens/second.
+    drain_rate_tps: f64,
+    /// The pair's calibrated Eq. 2 prefill predictor (PPI side).
+    prefill: PrefillCoeffs,
+    /// Virtual backlog: assigned-but-not-yet-drained tokens.
+    outstanding_tokens: f64,
+    n_routed: u64,
+    tokens_routed: u64,
+}
+
+/// The cluster dispatcher.  Deterministic: identical construction and
+/// request sequences produce identical assignments.
+pub struct Router {
+    policy: RoutePolicy,
+    pairs: Vec<PairLoad>,
+    last_ns: u64,
+}
+
+/// Coarse steady-state token throughput of a pair: the CPI running full
+/// chunked-prefill batches over a typical decode population, plus half
+/// the PPI's standalone prefill rate (its share of overlapped prefix
+/// work).  A router-side estimate — only relative magnitudes matter.
+fn estimated_token_rate(ppi: &PerfModel, cpi: &PerfModel, budget: usize) -> f64 {
+    let budget = budget.max(1);
+    let shape = IterationShape {
+        prefill: vec![PrefillSeg { q_tokens: budget, ctx_end: budget.max(1024) }],
+        n_decode: 64,
+        decode_ctx_sum: 64 * 1200,
+    };
+    let cpi_rate = (budget + 64) as f64 / cpi.iteration_time(&shape);
+    let ppi_rate = 2048.0 / ppi.prefill_time(2048);
+    cpi_rate + 0.5 * ppi_rate
+}
+
+impl Router {
+    /// Build a router for `cluster`, calibrating each pair's predictors
+    /// the same way its Balancer does (§4.4 profiling + OLS).
+    pub fn new(policy: RoutePolicy, cluster: &ClusterConfig) -> Router {
+        assert!(!cluster.pairs.is_empty(), "router needs at least one pair");
+        let pairs = cluster
+            .pairs
+            .iter()
+            .map(|pair| {
+                let d = &pair.deployment;
+                let ppi_pm = PerfModel::new(d.low_gpu, d.model);
+                let cpi_pm = PerfModel::new(d.high_gpu, d.model);
+                let (prefill, _chunked) = calibrate(
+                    &ppi_pm,
+                    &cpi_pm,
+                    d.engine.max_batched_tokens,
+                    d.calibration_noise,
+                    d.calibration_seed,
+                );
+                PairLoad {
+                    rate_share: pair.rate_share,
+                    drain_rate_tps: estimated_token_rate(
+                        &ppi_pm,
+                        &cpi_pm,
+                        d.engine.max_batched_tokens,
+                    ),
+                    prefill,
+                    outstanding_tokens: 0.0,
+                    n_routed: 0,
+                    tokens_routed: 0,
+                }
+            })
+            .collect();
+        Router { policy, pairs, last_ns: 0 }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Current virtual backlog per pair (exposed for tests / reporting).
+    pub fn outstanding_tokens(&self) -> Vec<f64> {
+        self.pairs.iter().map(|p| p.outstanding_tokens).collect()
+    }
+
+    /// Requests routed to each pair so far.
+    pub fn routed_counts(&self) -> Vec<u64> {
+        self.pairs.iter().map(|p| p.n_routed).collect()
+    }
+
+    /// Tokens (input + output) routed to each pair so far.
+    pub fn routed_tokens(&self) -> Vec<u64> {
+        self.pairs.iter().map(|p| p.tokens_routed).collect()
+    }
+
+    /// Estimated TTFT of `input_len` on pair `i` right now: drain the
+    /// backlog, then run the prefix on the PPI (conservative — the CPI
+    /// usually shares the prefill).
+    pub fn estimated_ttft(&self, i: usize, input_len: usize) -> f64 {
+        let p = &self.pairs[i];
+        p.outstanding_tokens / p.drain_rate_tps + p.prefill.predict(input_len)
+    }
+
+    /// Age the virtual backlogs to `t_ns` (arrival times are monotone in
+    /// every trace; stale timestamps are clamped).
+    fn advance_to(&mut self, t_ns: u64) {
+        if t_ns <= self.last_ns {
+            return;
+        }
+        let dt = (t_ns - self.last_ns) as f64 / 1e9;
+        self.last_ns = t_ns;
+        for p in &mut self.pairs {
+            p.outstanding_tokens = f64::max(0.0, p.outstanding_tokens - dt * p.drain_rate_tps);
+        }
+    }
+
+    /// Route one request; returns the chosen pair index and records the
+    /// load.  Ties break toward the lowest pair index, keeping the
+    /// assignment deterministic.
+    pub fn route(&mut self, req: &Request) -> usize {
+        self.advance_to(req.arrival_ns);
+        let score = |p: &PairLoad, i: usize| -> f64 {
+            match self.policy {
+                RoutePolicy::RoundRobin => p.n_routed as f64 / p.rate_share,
+                RoutePolicy::LeastOutstandingTokens => p.outstanding_tokens,
+                RoutePolicy::SloAware => self.estimated_ttft(i, req.input_len),
+            }
+        };
+        let mut best = 0usize;
+        let mut best_score = score(&self.pairs[0], 0);
+        for (i, p) in self.pairs.iter().enumerate().skip(1) {
+            let s = score(p, i);
+            if s < best_score {
+                best = i;
+                best_score = s;
+            }
+        }
+        let load = (req.input_len + req.output_len) as u64;
+        let p = &mut self.pairs[best];
+        p.outstanding_tokens += load as f64;
+        p.n_routed += 1;
+        p.tokens_routed += load;
+        best
+    }
+
+    /// Route a whole trace (in order), returning one pair index per
+    /// request.
+    pub fn route_trace(&mut self, trace: &[Request]) -> Vec<usize> {
+        trace.iter().map(|r| self.route(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::topology::{ClusterConfig, PairConfig};
+    use crate::config::DeploymentConfig;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::simgpu::spec::{A10, A100, A30, T4};
+    use crate::workload::arrival::{stamp, ArrivalProcess};
+    use crate::workload::azure::{generate, AzureTraceConfig};
+
+    fn trace(n: usize, seed: u64) -> Vec<Request> {
+        let t = generate(n, &AzureTraceConfig::default(), seed);
+        stamp(&t, ArrivalProcess::AllAtOnce)
+    }
+
+    #[test]
+    fn round_robin_is_fair_with_equal_shares() {
+        let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::RoundRobin, &cfg);
+        router.route_trace(&trace(100, 1));
+        assert_eq!(router.routed_counts(), vec![25, 25, 25, 25]);
+    }
+
+    #[test]
+    fn weighted_round_robin_respects_shares() {
+        let mut cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        cfg.pairs[0].rate_share = 3.0;
+        cfg.pairs[1].rate_share = 1.0;
+        let mut router = Router::new(RoutePolicy::RoundRobin, &cfg);
+        router.route_trace(&trace(200, 2));
+        assert_eq!(router.routed_counts(), vec![150, 50]);
+    }
+
+    #[test]
+    fn least_outstanding_always_picks_current_min() {
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        for r in &trace(150, 3) {
+            let before = router.outstanding_tokens();
+            let min = before.iter().cloned().fold(f64::INFINITY, f64::min);
+            let idx = router.route(r);
+            assert!(
+                before[idx] <= min + 1e-9,
+                "routed to {idx} with backlog {} > min {min}",
+                before[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn least_outstanding_balances_tokens() {
+        let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        router.route_trace(&trace(400, 4));
+        let tokens = router.routed_tokens();
+        let max = *tokens.iter().max().unwrap() as f64;
+        let min = *tokens.iter().min().unwrap() as f64;
+        assert!(min > 0.85 * max, "token imbalance under LOT: {tokens:?}");
+    }
+
+    #[test]
+    fn slo_aware_prefers_the_faster_prefill_pair() {
+        let slow = PairConfig::cronus(DeploymentConfig::paper(A100, T4, LLAMA3_8B));
+        let fast = PairConfig::cronus(DeploymentConfig::paper(A100, A30, LLAMA3_8B));
+        let cfg = ClusterConfig::new(vec![slow, fast]);
+        let mut router = Router::new(RoutePolicy::SloAware, &cfg);
+        let t = trace(1, 5);
+        assert_eq!(router.route(&t[0]), 1, "idle cluster: fastest prefill wins");
+        // Under sustained all-at-once load the faster pair absorbs more.
+        router.route_trace(&trace(199, 5));
+        let counts = router.routed_counts();
+        assert!(counts[1] > counts[0], "slo-aware counts {counts:?}");
+    }
+
+    #[test]
+    fn backlog_drains_between_arrivals() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        let mut t = trace(1, 6);
+        t[0].arrival_ns = 0;
+        router.route(&t[0]);
+        assert!(router.outstanding_tokens()[0] > 0.0);
+        // An arrival far in the future sees a fully drained cluster.
+        t[0].arrival_ns = 3_600_000_000_000; // 1h
+        t[0].id = 1;
+        router.route(&t[0]);
+        let outstanding = router.outstanding_tokens();
+        assert_eq!(outstanding[1], 0.0);
+    }
+
+    #[test]
+    fn single_pair_routes_everything_to_it() {
+        let deployment = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let cfg = ClusterConfig::homogeneous(1, deployment);
+        for policy in RoutePolicy::ALL {
+            let mut router = Router::new(policy, &cfg);
+            let a = router.route_trace(&trace(20, 7));
+            assert!(a.iter().all(|&i| i == 0), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let cfg = ClusterConfig::mixed(5, LLAMA3_8B);
+        let t = trace(120, 8);
+        for policy in RoutePolicy::ALL {
+            let a = Router::new(policy, &cfg).route_trace(&t);
+            let b = Router::new(policy, &cfg).route_trace(&t);
+            assert_eq!(a, b, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for policy in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::from_name(policy.name()), Some(policy));
+        }
+        assert_eq!(
+            RoutePolicy::from_name("LOT"),
+            Some(RoutePolicy::LeastOutstandingTokens)
+        );
+        assert_eq!(RoutePolicy::from_name("rr"), Some(RoutePolicy::RoundRobin));
+        assert!(RoutePolicy::from_name("random").is_none());
+    }
+}

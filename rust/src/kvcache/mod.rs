@@ -12,15 +12,28 @@ use crate::util::fxhash::FxHashMap;
 pub type ReqId = u64;
 
 /// Errors surfaced to the scheduler (which reacts by waiting/preempting).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KvError {
-    #[error("out of KV blocks: need {need}, free {free}")]
     OutOfBlocks { need: usize, free: usize },
-    #[error("unknown request {0}")]
     UnknownRequest(ReqId),
-    #[error("request {0} already has an allocation")]
     AlreadyAllocated(ReqId),
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { need, free } => {
+                write!(f, "out of KV blocks: need {need}, free {free}")
+            }
+            KvError::UnknownRequest(id) => write!(f, "unknown request {id}"),
+            KvError::AlreadyAllocated(id) => {
+                write!(f, "request {id} already has an allocation")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 /// Fixed-pool paged block allocator.
 #[derive(Clone, Debug)]

@@ -3,12 +3,16 @@
 //! paper table/figure (see DESIGN.md §4 for the experiment index).
 
 use crate::benchkit::Table;
+use crate::config::topology::ClusterConfig;
 use crate::config::{DeploymentConfig, SystemKind};
 use crate::cronus::balancer::SplitPolicy;
 use crate::cronus::frontend::CronusSystem;
+use crate::cronus::router::RoutePolicy;
 use crate::engine::{EngineInstance, EngineRequest};
 use crate::simgpu::fit;
+use crate::simgpu::model_desc;
 use crate::simgpu::perfmodel::PerfModel;
+use crate::systems::cluster::build_cluster_system;
 use crate::systems::{build_system, RunOutcome};
 use crate::util::rng::Rng;
 use crate::workload::arrival::{at_rate, stamp, ArrivalProcess};
@@ -289,6 +293,124 @@ pub fn fig3(noise: f64, seed: u64) -> Table {
     table
 }
 
+// ---------------------------------------------------------------------------
+// Cluster scale-out (beyond the paper: N mixed pairs, one router)
+// ---------------------------------------------------------------------------
+
+/// One point of the cluster scale-out sweep.
+pub struct ClusterSweepPoint {
+    pub n_pairs: usize,
+    pub outcome: RunOutcome,
+    /// Throughput relative to the 1-pair baseline of the same sweep.
+    pub scaling: f64,
+}
+
+/// Per-pair CPI utilization (busy time / cluster makespan) of a run,
+/// rendered like `92/88/95%`.
+pub fn cpi_utilization_summary(outcome: &RunOutcome) -> String {
+    let makespan = outcome.report.makespan_s.max(1e-12);
+    let cells: Vec<String> = outcome
+        .instances
+        .iter()
+        .filter(|i| i.name.contains("CPI"))
+        .map(|i| format!("{:.0}", 100.0 * i.busy_time_s / makespan))
+        .collect();
+    if cells.is_empty() {
+        "-".to_string()
+    } else {
+        format!("{}%", cells.join("/"))
+    }
+}
+
+/// Sweep the standard mixed-capability fleet ([`ClusterConfig::mixed`])
+/// from 1 to `max_pairs` pairs under `policy`.
+pub fn cluster_sweep(
+    opts: &ExperimentOpts,
+    policy: RoutePolicy,
+    max_pairs: usize,
+) -> (Table, Vec<ClusterSweepPoint>) {
+    let cluster = ClusterConfig::mixed(max_pairs.max(1), model_desc::LLAMA3_8B);
+    cluster_sweep_topology(opts, policy, &cluster)
+}
+
+/// Sweep an explicit topology (e.g. loaded from a `[topology]` TOML
+/// section) by growing the cluster over its pair-list prefixes: point k
+/// deploys the first k pairs.  Measures max throughput (all requests at
+/// t = 0) and cluster-wide latency tails; the 1-pair point is the
+/// scaling baseline.
+pub fn cluster_sweep_topology(
+    opts: &ExperimentOpts,
+    policy: RoutePolicy,
+    cluster: &ClusterConfig,
+) -> (Table, Vec<ClusterSweepPoint>) {
+    let trace = stamp(&paper_trace(opts), ArrivalProcess::AllAtOnce);
+    let mut table = Table::new(
+        format!(
+            "Cluster scale-out, policy = {} ({} requests, all-at-once)",
+            policy.name(),
+            opts.n_requests
+        ),
+        &[
+            "Pairs",
+            "Topology (low-end)",
+            "thpt (req/s)",
+            "scaling",
+            "TTFT p99 (s)",
+            "TBT p99 (s)",
+            "CPI util/pair",
+        ],
+    );
+    let mut points: Vec<ClusterSweepPoint> = Vec::new();
+    let mut base_rps = 0.0;
+    for n_pairs in 1..=cluster.n_pairs() {
+        let cfg = ClusterConfig::new(cluster.pairs[..n_pairs].to_vec());
+        let lows: Vec<&str> = cfg.pairs.iter().map(|p| p.deployment.low_gpu.name).collect();
+        let outcome = build_cluster_system(&cfg, policy).run(&trace);
+        if n_pairs == 1 {
+            base_rps = outcome.report.throughput_rps;
+        }
+        let scaling = if base_rps > 0.0 {
+            outcome.report.throughput_rps / base_rps
+        } else {
+            0.0
+        };
+        table.row(vec![
+            n_pairs.to_string(),
+            lows.join("|"),
+            format!("{:.2}", outcome.report.throughput_rps),
+            format!("{scaling:.2}x"),
+            format!("{:.3}", outcome.report.ttft_p99_s),
+            format!("{:.4}", outcome.report.tbt_p99_s),
+            cpi_utilization_summary(&outcome),
+        ]);
+        points.push(ClusterSweepPoint { n_pairs, outcome, scaling });
+    }
+    (table, points)
+}
+
+/// Cluster max-throughput measurement (the Table 2 procedure lifted to
+/// N pairs): all requests at t = 0.
+pub fn cluster_max_throughput(
+    cfg: &ClusterConfig,
+    policy: RoutePolicy,
+    trace: &[Request],
+) -> RunOutcome {
+    let trace = stamp(trace, ArrivalProcess::AllAtOnce);
+    build_cluster_system(cfg, policy).run(&trace)
+}
+
+/// Cluster latency measurement (the Fig. 4 procedure lifted to N pairs):
+/// fixed-interval arrivals at `rate_rps` into the router.
+pub fn cluster_latency_at_rate(
+    cfg: &ClusterConfig,
+    policy: RoutePolicy,
+    trace: &[Request],
+    rate_rps: f64,
+) -> RunOutcome {
+    let trace = at_rate(trace, rate_rps);
+    build_cluster_system(cfg, policy).run(&trace)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,6 +453,33 @@ mod tests {
             standalone_decode_rps(&cfg, &hi, &trace)
                 > standalone_decode_rps(&cfg, &lo, &trace)
         );
+    }
+
+    #[test]
+    fn cluster_sweep_scales_and_reports_utilization() {
+        let opts = ExperimentOpts { n_requests: 60, seed: 7 };
+        let (table, points) =
+            cluster_sweep(&opts, RoutePolicy::LeastOutstandingTokens, 2);
+        assert_eq!(points.len(), 2);
+        assert!((points[0].scaling - 1.0).abs() < 1e-9);
+        assert!(
+            points[1].scaling > 1.4,
+            "2-pair scaling {:.2}",
+            points[1].scaling
+        );
+        assert_eq!(points[1].outcome.report.n_finished, 60);
+        let s = table.render();
+        assert!(s.contains("least-outstanding"));
+        assert!(s.contains('%'), "utilization column missing: {s}");
+    }
+
+    #[test]
+    fn cluster_latency_at_rate_serves_all() {
+        let cfg = ClusterConfig::mixed(2, model_desc::LLAMA3_8B);
+        let trace = paper_trace(&tiny_opts());
+        let out =
+            cluster_latency_at_rate(&cfg, RoutePolicy::SloAware, &trace, 4.0);
+        assert_eq!(out.report.n_finished, trace.len());
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //!
 //! Start with [`systems`] (the `ServingSystem` trait ties everything
 //! together), or run `cargo run --example quickstart`.
+//!
+//! Beyond the paper's single pair, [`config::topology`] describes an
+//! N-pair heterogeneous cluster, [`cronus::router`] routes requests
+//! across the pairs (round-robin / least-outstanding-tokens /
+//! SLO-aware), and [`systems::cluster::ClusterSystem`] serves a trace on
+//! the whole fleet — `cargo run --example cluster_scaleout`.
+
+#![allow(clippy::too_many_arguments, clippy::type_complexity)]
 
 pub mod baselines;
 pub mod benchkit;

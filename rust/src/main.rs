@@ -6,6 +6,7 @@
 //! cronus bench-fig4       reproduce Fig. 4 (TTFT/TBT P99 under load)
 //! cronus bench-table3     reproduce Table 3 (relative GPU utilization)
 //! cronus bench-fig3       reproduce Fig. 3 (linear iteration-time fits)
+//! cronus bench-cluster    sweep 1→N mixed pairs behind the cluster router
 //! cronus calibrate        print the Balancer's fitted predictors
 //! cronus trace            generate + summarize a workload trace
 //! cronus info             show GPU specs / model geometries / defaults
@@ -17,6 +18,7 @@
 use cronus::benchkit::Table;
 use cronus::config::cli::Parser;
 use cronus::config::{toml, DeploymentConfig};
+use cronus::cronus::router::RoutePolicy;
 use cronus::launcher::{self, ExperimentOpts};
 use cronus::simgpu::model_desc;
 use cronus::simgpu::spec;
@@ -66,6 +68,26 @@ fn opts(args: &cronus::config::cli::Args) -> ExperimentOpts {
     }
 }
 
+/// Load a cluster topology from a TOML file's `[topology]` section,
+/// starting from the standard 4-pair mixed fleet.
+fn cluster_from_toml(path: &str) -> cronus::config::ClusterConfig {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("cannot read {path}: {e}");
+        std::process::exit(2);
+    });
+    let doc = toml::parse(&text).unwrap_or_else(|e| {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    });
+    let mut cluster =
+        cronus::config::ClusterConfig::mixed(4, cronus::simgpu::model_desc::LLAMA3_8B);
+    if let Err(e) = cluster.apply_toml(&doc) {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    }
+    cluster
+}
+
 fn main() {
     let mut raw: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if raw.is_empty() { "help".to_string() } else { raw.remove(0) };
@@ -95,6 +117,48 @@ fn main() {
             common_parser("cronus bench-table3", "reproduce Table 3"),
             &raw,
             |args| launcher::table3(&opts(args)).print(),
+        ),
+        "bench-cluster" => with_parser(
+            Parser::new(
+                "cronus bench-cluster",
+                "sweep 1→N mixed GPU pairs behind the cluster router",
+            )
+            .opt("n", "requests per run", Some("400"))
+            .opt("seed", "workload seed", Some("42"))
+            .opt("pairs", "max pairs to sweep (ignored with --config)", Some("4"))
+            .opt(
+                "policy",
+                "route policy (round-robin | least-outstanding | slo-aware)",
+                Some("least-outstanding"),
+            )
+            .opt("config", "TOML file with a [topology] section", None)
+            .flag("help", "print usage"),
+            &raw,
+            |args| {
+                let policy_name = args.get("policy").unwrap();
+                let policy = RoutePolicy::from_name(policy_name).unwrap_or_else(|| {
+                    eprintln!("unknown route policy {policy_name:?}");
+                    std::process::exit(2);
+                });
+                let (table, points) = match args.get("config") {
+                    Some(path) => {
+                        let cluster = cluster_from_toml(path);
+                        launcher::cluster_sweep_topology(&opts(args), policy, &cluster)
+                    }
+                    None => launcher::cluster_sweep(
+                        &opts(args),
+                        policy,
+                        args.get_usize("pairs").unwrap(),
+                    ),
+                };
+                table.print();
+                if let Some(last) = points.last() {
+                    println!(
+                        "\nscaling 1 → {} pairs: {:.2}x",
+                        last.n_pairs, last.scaling
+                    );
+                }
+            },
         ),
         "bench-fig3" => with_parser(
             common_parser("cronus bench-fig3", "reproduce Fig. 3")
@@ -246,6 +310,7 @@ fn print_help() {
          \x20 bench-fig4     reproduce Fig. 4 (TTFT/TBT P99 under load)\n\
          \x20 bench-table3   reproduce Table 3 (relative GPU utilization)\n\
          \x20 bench-fig3     reproduce Fig. 3 (linear iteration-time fits)\n\
+         \x20 bench-cluster  sweep 1\u{2192}N mixed pairs behind the cluster router\n\
          \x20 calibrate      print the Balancer's fitted predictors\n\
          \x20 trace          generate + summarize a workload trace\n\
          \x20 info           GPU specs / model geometries\n\n\

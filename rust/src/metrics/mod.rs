@@ -99,41 +99,33 @@ impl Collector {
                 total_output_tokens += rec.output_tokens;
             }
         }
-        let makespan_s = makespan.as_secs_f64();
-        Report {
-            label: label.into(),
-            n_requests: self.records.len(),
-            n_finished: finished,
-            makespan_s,
-            throughput_rps: if makespan_s > 0.0 {
-                finished as f64 / makespan_s
-            } else {
-                0.0
-            },
-            token_throughput_tps: if makespan_s > 0.0 {
-                total_output_tokens as f64 / makespan_s
-            } else {
-                0.0
-            },
-            ttft_mean_s: mean(&ttft),
-            ttft_p50_s: percentile(&ttft, 50.0),
-            ttft_p99_s: percentile(&ttft, 99.0),
-            tbt_mean_s: mean(&tbt),
-            tbt_p50_s: percentile(&tbt, 50.0),
-            tbt_p99_s: percentile(&tbt, 99.0),
-            e2e_p50_s: percentile(&e2e, 50.0),
-            e2e_p99_s: percentile(&e2e, 99.0),
-        }
+        Report::from_samples(
+            label,
+            self.records.len(),
+            finished,
+            total_output_tokens,
+            makespan.as_secs_f64(),
+            ttft,
+            tbt,
+            e2e,
+        )
     }
 }
 
 /// Aggregate results of one run (one cell of a paper table / one point of
 /// a paper figure).
+///
+/// Besides the summary statistics, a report keeps its raw per-request
+/// latency samples so reports from independent instances (the pairs of a
+/// cluster) can be [merged](Report::merge) into exact cluster-wide
+/// percentiles — percentiles of percentiles would be wrong.
 #[derive(Clone, Debug)]
 pub struct Report {
     pub label: String,
     pub n_requests: usize,
     pub n_finished: usize,
+    /// Output tokens of finished requests (defines token throughput).
+    pub n_output_tokens: usize,
     pub makespan_s: f64,
     pub throughput_rps: f64,
     pub token_throughput_tps: f64,
@@ -145,9 +137,89 @@ pub struct Report {
     pub tbt_p99_s: f64,
     pub e2e_p50_s: f64,
     pub e2e_p99_s: f64,
+    /// Raw TTFT samples, one per request that produced a first token.
+    pub ttft_samples: Vec<f64>,
+    /// Raw inter-token gaps across all requests.
+    pub tbt_samples: Vec<f64>,
+    /// Raw end-to-end latencies of finished requests.
+    pub e2e_samples: Vec<f64>,
 }
 
 impl Report {
+    /// Assemble a report from raw samples (shared by [`Collector::report`]
+    /// and [`Report::merge`]).
+    pub fn from_samples(
+        label: impl Into<String>,
+        n_requests: usize,
+        n_finished: usize,
+        n_output_tokens: usize,
+        makespan_s: f64,
+        ttft: Vec<f64>,
+        tbt: Vec<f64>,
+        e2e: Vec<f64>,
+    ) -> Report {
+        Report {
+            label: label.into(),
+            n_requests,
+            n_finished,
+            n_output_tokens,
+            makespan_s,
+            throughput_rps: if makespan_s > 0.0 {
+                n_finished as f64 / makespan_s
+            } else {
+                0.0
+            },
+            token_throughput_tps: if makespan_s > 0.0 {
+                n_output_tokens as f64 / makespan_s
+            } else {
+                0.0
+            },
+            ttft_mean_s: mean(&ttft),
+            ttft_p50_s: percentile(&ttft, 50.0),
+            ttft_p99_s: percentile(&ttft, 99.0),
+            tbt_mean_s: mean(&tbt),
+            tbt_p50_s: percentile(&tbt, 50.0),
+            tbt_p99_s: percentile(&tbt, 99.0),
+            e2e_p50_s: percentile(&e2e, 50.0),
+            e2e_p99_s: percentile(&e2e, 99.0),
+            ttft_samples: ttft,
+            tbt_samples: tbt,
+            e2e_samples: e2e,
+        }
+    }
+
+    /// Merge per-instance reports into one cluster-wide report: counts
+    /// and tokens add, the makespan is the latest finish (all instances
+    /// share the experiment's t = 0), and percentiles are recomputed over
+    /// the union of the raw samples.
+    pub fn merge(label: impl Into<String>, parts: &[Report]) -> Report {
+        let mut ttft = Vec::new();
+        let mut tbt = Vec::new();
+        let mut e2e = Vec::new();
+        let mut n_requests = 0usize;
+        let mut n_finished = 0usize;
+        let mut n_output_tokens = 0usize;
+        let mut makespan_s = 0.0f64;
+        for p in parts {
+            n_requests += p.n_requests;
+            n_finished += p.n_finished;
+            n_output_tokens += p.n_output_tokens;
+            makespan_s = makespan_s.max(p.makespan_s);
+            ttft.extend_from_slice(&p.ttft_samples);
+            tbt.extend_from_slice(&p.tbt_samples);
+            e2e.extend_from_slice(&p.e2e_samples);
+        }
+        Report::from_samples(
+            label,
+            n_requests,
+            n_finished,
+            n_output_tokens,
+            makespan_s,
+            ttft,
+            tbt,
+            e2e,
+        )
+    }
     /// One-line summary used by benches and examples.
     pub fn summary(&self) -> String {
         format!(
@@ -247,5 +319,52 @@ mod tests {
         c.on_token(1, t(0.1));
         c.on_finish(1, t(0.2));
         assert!(c.report("cronus").summary().contains("cronus"));
+    }
+
+    #[test]
+    fn report_carries_raw_samples() {
+        let mut c = Collector::new();
+        c.on_arrival(1, t(1.0));
+        c.on_token(1, t(1.5));
+        c.on_token(1, t(1.7));
+        c.on_finish(1, t(1.7));
+        let r = c.report("x");
+        assert_eq!(r.ttft_samples, vec![0.5]);
+        assert_eq!(r.tbt_samples.len(), 1);
+        assert_eq!(r.e2e_samples.len(), 1);
+        assert_eq!(r.n_output_tokens, 2);
+    }
+
+    #[test]
+    fn merge_recomputes_percentiles_over_union() {
+        // Instance A: 9 fast requests; instance B: 1 slow one.  The
+        // merged p99 must see B's tail even though B's own p99 is its
+        // only sample.
+        let mut a = Collector::new();
+        for i in 0..9 {
+            a.on_arrival(i, SimTime::ZERO);
+            a.on_token(i, t(0.1));
+            a.on_finish(i, t(0.1));
+        }
+        let mut b = Collector::new();
+        b.on_arrival(100, SimTime::ZERO);
+        b.on_token(100, t(4.0));
+        b.on_finish(100, t(5.0));
+        let merged = Report::merge("cluster", &[a.report("a"), b.report("b")]);
+        assert_eq!(merged.n_requests, 10);
+        assert_eq!(merged.n_finished, 10);
+        assert_eq!(merged.makespan_s, 5.0);
+        assert!((merged.throughput_rps - 2.0).abs() < 1e-9);
+        assert!(merged.ttft_p99_s > 3.0, "p99 {}", merged.ttft_p99_s);
+        assert!(merged.ttft_p50_s < 0.2);
+        assert_eq!(merged.ttft_samples.len(), 10);
+    }
+
+    #[test]
+    fn merge_of_nothing_is_empty() {
+        let r = Report::merge("empty", &[]);
+        assert_eq!(r.n_requests, 0);
+        assert_eq!(r.throughput_rps, 0.0);
+        assert_eq!(r.ttft_p99_s, 0.0);
     }
 }

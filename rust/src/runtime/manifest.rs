@@ -3,9 +3,9 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Value};
+use crate::{anyhow, bail};
 
 /// One parameter tensor's slot in `weights.bin`.
 #[derive(Clone, Debug)]

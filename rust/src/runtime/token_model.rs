@@ -1,12 +1,22 @@
 //! The real model on the request path: compiled HLO entry points, weight
 //! literals, per-request KV state, greedy sampling.
+//!
+//! PJRT execution needs the `xla` bindings, which the offline build does
+//! not ship; the executing implementation is therefore gated behind the
+//! `pjrt` cargo feature.  Without it, [`TokenModel::load`] returns an
+//! error explaining how to enable real serving, and everything else in
+//! the crate (the full simulation stack) works unchanged.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
-
 use crate::runtime::manifest::Manifest;
+use crate::util::error::Result;
+
+#[cfg(not(feature = "pjrt"))]
+use crate::bail;
+
+#[cfg(feature = "pjrt")]
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 
 /// Host-side KV cache of one request: `[L, T, H_kv, D_h]` f32, flattened.
 #[derive(Clone)]
@@ -24,6 +34,7 @@ impl KvState {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
     debug_assert_eq!(dims.iter().product::<usize>(), data.len());
     let bytes: &[u8] = unsafe {
@@ -36,6 +47,7 @@ fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
     )?)
 }
 
+#[cfg(feature = "pjrt")]
 fn i32_literal(dims: &[usize], data: &[i32]) -> Result<Literal> {
     debug_assert_eq!(dims.iter().product::<usize>(), data.len());
     let bytes: &[u8] = unsafe {
@@ -52,19 +64,27 @@ fn i32_literal(dims: &[usize], data: &[i32]) -> Result<Literal> {
 /// iteration.  Not `Sync`: owned by the serving worker thread.
 pub struct TokenModel {
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     #[allow(dead_code)]
     client: PjRtClient,
+    #[cfg(feature = "pjrt")]
     prefill_exe: PjRtLoadedExecutable,
+    #[cfg(feature = "pjrt")]
     decode_exe: PjRtLoadedExecutable,
     /// Weight literals in `PARAM_ORDER` (the manifest's order).
+    #[cfg(feature = "pjrt")]
     weights: Vec<Literal>,
 }
 
+#[cfg(feature = "pjrt")]
 impl TokenModel {
     /// Load manifest + weights, compile both entry points on the PJRT CPU
     /// client.  This is the one-time cost; afterwards the request path is
     /// pure Rust + PJRT.
     pub fn load(dir: &Path) -> Result<TokenModel> {
+        use crate::util::error::Context;
+        use crate::bail;
+
         let manifest = Manifest::load(dir)?;
         let raw = std::fs::read(&manifest.weights_file)
             .with_context(|| format!("reading {:?}", manifest.weights_file))?;
@@ -88,6 +108,7 @@ impl TokenModel {
 
         let client = PjRtClient::cpu()?;
         let load = |path: &Path| -> Result<PjRtLoadedExecutable> {
+            use crate::util::error::Context as _;
             let proto = xla::HloModuleProto::from_text_file(path)
                 .with_context(|| format!("parsing HLO text {path:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
@@ -96,14 +117,6 @@ impl TokenModel {
         let prefill_exe = load(&manifest.prefill.file)?;
         let decode_exe = load(&manifest.decode.file)?;
         Ok(TokenModel { manifest, client, prefill_exe, decode_exe, weights })
-    }
-
-    pub fn chunk_size(&self) -> usize {
-        self.manifest.prefill.width
-    }
-
-    pub fn decode_batch_size(&self) -> usize {
-        self.manifest.decode.width
     }
 
     /// Run one prefill chunk for one request.  `tokens` may be shorter
@@ -116,6 +129,8 @@ impl TokenModel {
         q_start: usize,
         kv: &mut KvState,
     ) -> Result<Vec<f32>> {
+        use crate::bail;
+
         let c = self.chunk_size();
         if tokens.is_empty() || tokens.len() > c {
             bail!("chunk must have 1..={c} tokens, got {}", tokens.len());
@@ -153,6 +168,8 @@ impl TokenModel {
         &self,
         entries: &mut [(i32, usize, &mut KvState)],
     ) -> Result<Vec<Vec<f32>>> {
+        use crate::bail;
+
         let b = self.decode_batch_size();
         if entries.is_empty() || entries.len() > b {
             bail!("decode batch must have 1..={b} entries, got {}", entries.len());
@@ -196,6 +213,47 @@ impl TokenModel {
         }
         Ok(out)
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl TokenModel {
+    /// Validate the artifacts, then report that this build cannot execute
+    /// them (the `pjrt` feature is off in the offline build).
+    pub fn load(dir: &Path) -> Result<TokenModel> {
+        let _ = Manifest::load(dir)?;
+        bail!(
+            "artifacts at {dir:?} are valid, but rust_pallas was built \
+             without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the vendored `xla` bindings) \
+             to execute the real model"
+        );
+    }
+
+    pub fn prefill_chunk(
+        &self,
+        _tokens: &[i32],
+        _q_start: usize,
+        _kv: &mut KvState,
+    ) -> Result<Vec<f32>> {
+        bail!("rust_pallas was built without the `pjrt` feature");
+    }
+
+    pub fn decode_batch(
+        &self,
+        _entries: &mut [(i32, usize, &mut KvState)],
+    ) -> Result<Vec<Vec<f32>>> {
+        bail!("rust_pallas was built without the `pjrt` feature");
+    }
+}
+
+impl TokenModel {
+    pub fn chunk_size(&self) -> usize {
+        self.manifest.prefill.width
+    }
+
+    pub fn decode_batch_size(&self) -> usize {
+        self.manifest.decode.width
+    }
 
     /// Greedy sampling.
     pub fn argmax(logits: &[f32]) -> i32 {
@@ -233,6 +291,14 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(TokenModel::argmax(&[0.1, 3.0, -1.0, 2.9]), 1);
         assert_eq!(TokenModel::argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn load_without_pjrt_reports_feature() {
+        // No artifacts directory: the manifest read fails first.
+        let e = TokenModel::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(e.to_string().contains("manifest.json"));
     }
 
     // Full PJRT round-trip tests live in rust/tests/integration_runtime.rs

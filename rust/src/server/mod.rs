@@ -14,9 +14,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::Result;
-
 use crate::runtime::{KvState, TokenModel};
+use crate::util::error::Result;
 
 /// A request to the real-model server.
 #[derive(Clone, Debug)]

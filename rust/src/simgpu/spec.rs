@@ -81,12 +81,41 @@ pub const A10: GpuSpec = GpuSpec {
     iteration_overhead_s: 4.0e-3,
 };
 
+/// NVIDIA V100S 32 GB: 112 TFLOPS FP16 tensor, 1134 GB/s HBM2.  No BF16
+/// tensor cores — served in FP16, with a lower sustained matmul fraction
+/// on the older Volta pipeline.
+pub const V100: GpuSpec = GpuSpec {
+    name: "V100-32G",
+    bf16_tflops: 112.0,
+    hbm_gbps: 1134.0,
+    mem_gib: 32.0,
+    compute_efficiency: 0.45,
+    mem_efficiency: 0.65,
+    iteration_overhead_s: 4.0e-3,
+};
+
+/// NVIDIA T4 16 GB: 65 TFLOPS FP16 tensor, 300 GB/s GDDR6.  Too little
+/// memory to hold an 8B model's weights plus KV — in a mixed cluster a
+/// T4 partial-prefill instance degrades to a zero-length prefix and the
+/// pair serves everything on its high-end card.
+pub const T4: GpuSpec = GpuSpec {
+    name: "T4",
+    bf16_tflops: 65.0,
+    hbm_gbps: 300.0,
+    mem_gib: 16.0,
+    compute_efficiency: 0.45,
+    mem_efficiency: 0.50,
+    iteration_overhead_s: 4.0e-3,
+};
+
 /// Look up a spec by (case-insensitive) name, for config files / CLI.
 pub fn by_name(name: &str) -> Option<GpuSpec> {
     match name.to_ascii_lowercase().as_str() {
         "a100" | "a100-80g" => Some(A100),
         "a30" => Some(A30),
         "a10" => Some(A10),
+        "v100" | "v100-32g" => Some(V100),
+        "t4" => Some(T4),
         _ => None,
     }
 }
@@ -126,7 +155,21 @@ mod tests {
         assert_eq!(by_name("A100").unwrap().name, "A100-80G");
         assert_eq!(by_name("a30").unwrap().name, "A30");
         assert_eq!(by_name("a10").unwrap().name, "A10");
+        assert_eq!(by_name("v100").unwrap().name, "V100-32G");
+        assert_eq!(by_name("T4").unwrap().name, "T4");
         assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn mixed_fleet_ordering() {
+        // The scale-out fleet's capability ladder: every low-end card is
+        // dominated by the A100, and the T4 is the weakest of the set.
+        for low in [&A30, &A10, &V100, &T4] {
+            assert!(A100.flops() > low.flops(), "{}", low.name);
+            assert!(A100.bandwidth() > low.bandwidth(), "{}", low.name);
+        }
+        assert!(T4.flops() < V100.flops() && T4.flops() < A10.flops());
+        assert!(T4.mem_bytes() < A10.mem_bytes());
     }
 
     #[test]

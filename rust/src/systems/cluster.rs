@@ -1,0 +1,180 @@
+//! The N-pair cluster serving system: a cluster-level [`Router`] in
+//! front of N independent (high-end, low-end) pair deployments.
+//!
+//! Each pair is a full serving system of its own (Cronus by default —
+//! any [`SystemKind`] per pair); the router partitions the arriving
+//! trace across pairs online, each pair serves its share on the shared
+//! simulated clock (all pairs start at the experiment's t = 0), and the
+//! per-pair reports merge into exact cluster-wide TTFT/TBT percentiles
+//! via [`Report::merge`].  Per-pair [`InstanceStat`]s are kept, prefixed
+//! `p<i>:`, so utilization imbalance across a mixed-capability fleet
+//! stays visible.
+
+use crate::config::topology::ClusterConfig;
+use crate::cronus::router::{RoutePolicy, Router};
+use crate::metrics::Report;
+use crate::systems::{build_system, InstanceStat, RunOutcome, ServingSystem};
+use crate::workload::Request;
+
+pub struct ClusterSystem {
+    cfg: ClusterConfig,
+    policy: RoutePolicy,
+    label: String,
+}
+
+impl ClusterSystem {
+    pub fn new(cfg: ClusterConfig, policy: RoutePolicy) -> ClusterSystem {
+        let label = format!("{} {}", cfg.label(), policy.name());
+        ClusterSystem { cfg, policy, label }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Partition `trace` across the pairs with this system's policy
+    /// (exposed for tests; [`run`](ServingSystem::run) uses it).
+    pub fn route(&self, trace: &[Request]) -> Vec<usize> {
+        Router::new(self.policy, &self.cfg).route_trace(trace)
+    }
+}
+
+impl ServingSystem for ClusterSystem {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn run(&mut self, trace: &[Request]) -> RunOutcome {
+        let assignments = self.route(trace);
+        let n_pairs = self.cfg.n_pairs();
+        let mut sub_traces: Vec<Vec<Request>> = vec![Vec::new(); n_pairs];
+        for (req, &pair) in trace.iter().zip(&assignments) {
+            sub_traces[pair].push(*req);
+        }
+
+        let mut reports: Vec<Report> = Vec::with_capacity(n_pairs);
+        let mut instances: Vec<InstanceStat> = Vec::new();
+        for (i, (pair, sub)) in self.cfg.pairs.iter().zip(&sub_traces).enumerate() {
+            if sub.is_empty() {
+                // An idle pair still shows up in the utilization table.
+                instances.push(InstanceStat {
+                    name: format!("p{i}:{} (idle)", pair.name),
+                    busy_time_s: 0.0,
+                    n_iterations: 0,
+                    n_preemptions: 0,
+                    tokens_prefilled: 0,
+                    tokens_decoded: 0,
+                });
+                continue;
+            }
+            let out = build_system(pair.system, &pair.deployment).run(sub);
+            reports.push(out.report);
+            for inst in out.instances {
+                instances.push(InstanceStat {
+                    name: format!("p{i}:{}", inst.name),
+                    ..inst
+                });
+            }
+        }
+
+        RunOutcome {
+            report: Report::merge(self.label.clone(), &reports),
+            instances,
+        }
+    }
+}
+
+/// Instantiate an N-pair cluster behind `policy` (the cluster analogue
+/// of [`build_system`]).
+pub fn build_cluster_system(
+    cfg: &ClusterConfig,
+    policy: RoutePolicy,
+) -> Box<dyn ServingSystem> {
+    Box::new(ClusterSystem::new(cfg.clone(), policy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+    use crate::cronus::balancer::SplitPolicy;
+    use crate::cronus::frontend::CronusSystem;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::simgpu::spec::{A10, A100};
+    use crate::workload::arrival::{stamp, ArrivalProcess};
+    use crate::workload::azure::{generate, AzureTraceConfig};
+
+    fn all_at_once(n: usize, seed: u64) -> Vec<Request> {
+        let t = generate(n, &AzureTraceConfig::default(), seed);
+        stamp(&t, ArrivalProcess::AllAtOnce)
+    }
+
+    #[test]
+    fn one_pair_cluster_matches_bare_cronus() {
+        let trace = all_at_once(40, 1);
+        let deployment = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let cfg = ClusterConfig::homogeneous(1, deployment.clone());
+        let cluster = ClusterSystem::new(cfg, RoutePolicy::RoundRobin).run(&trace);
+        let bare = CronusSystem::new(deployment, SplitPolicy::Balanced, false, "x").run(&trace);
+        assert_eq!(cluster.report.n_finished, bare.report.n_finished);
+        assert_eq!(cluster.report.makespan_s, bare.report.makespan_s);
+        assert_eq!(cluster.report.ttft_p99_s, bare.report.ttft_p99_s);
+    }
+
+    #[test]
+    fn mixed_cluster_serves_everything() {
+        let trace = all_at_once(80, 2);
+        for policy in RoutePolicy::ALL {
+            let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
+            let out = build_cluster_system(&cfg, policy).run(&trace);
+            assert_eq!(out.report.n_finished, 80, "{}", policy.name());
+            assert_eq!(out.report.n_requests, 80);
+            // Two instances (PPI + CPI) per pair.
+            assert_eq!(out.instances.len(), 8, "{}", policy.name());
+            assert!(out.instances.iter().all(|i| i.name.starts_with('p')));
+            assert!(out.report.ttft_p99_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn scaling_out_multiplies_throughput() {
+        let trace = all_at_once(160, 3);
+        let run = |n_pairs| {
+            let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+            build_cluster_system(&cfg, RoutePolicy::LeastOutstandingTokens)
+                .run(&trace)
+                .report
+                .throughput_rps
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(four > 2.5 * one, "scaling 1→4 pairs only {one:.2} → {four:.2} req/s");
+    }
+
+    #[test]
+    fn empty_pair_reported_idle() {
+        // Round-robin over 4 pairs with fewer requests than pairs leaves
+        // tail pairs idle but visible.
+        let trace = all_at_once(2, 4);
+        let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
+        let out = build_cluster_system(&cfg, RoutePolicy::RoundRobin).run(&trace);
+        assert_eq!(out.report.n_finished, 2);
+        let idle = out
+            .instances
+            .iter()
+            .filter(|i| i.name.contains("(idle)"))
+            .count();
+        assert_eq!(idle, 2);
+    }
+
+    #[test]
+    fn cluster_runs_are_deterministic() {
+        let trace = all_at_once(50, 5);
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        let a = build_cluster_system(&cfg, RoutePolicy::SloAware).run(&trace);
+        let b = build_cluster_system(&cfg, RoutePolicy::SloAware).run(&trace);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
+        assert_eq!(a.report.ttft_p99_s, b.report.ttft_p99_s);
+        assert_eq!(a.report.tbt_p99_s, b.report.tbt_p99_s);
+    }
+}

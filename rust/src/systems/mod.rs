@@ -1,6 +1,9 @@
 //! The `ServingSystem` abstraction: every approach the paper evaluates —
 //! Cronus and the four baselines — implements this trait, so benches and
-//! examples can sweep them uniformly.
+//! examples can sweep them uniformly.  [`cluster`] lifts any of them to
+//! an N-pair deployment behind the cluster-level router.
+
+pub mod cluster;
 
 use crate::baselines::{dp::DpSystem, pp::PpSystem};
 use crate::config::{DeploymentConfig, SystemKind};
@@ -8,6 +11,8 @@ use crate::cronus::frontend::CronusSystem;
 use crate::cronus::balancer::SplitPolicy;
 use crate::metrics::Report;
 use crate::workload::Request;
+
+pub use cluster::{build_cluster_system, ClusterSystem};
 
 /// Per-instance accounting attached to a run (feeds Table 3).
 #[derive(Clone, Debug)]

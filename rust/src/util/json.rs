@@ -98,7 +98,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> ParseError {
         ParseError { pos: self.pos, msg: msg.to_string() }
     }

@@ -9,10 +9,13 @@
 //! * [`stats`] — exact percentiles, ordinary least squares (the paper's
 //!   Eq. 2/3 fits), R², MAPE.
 //! * [`json`] — a minimal JSON parser for `artifacts/manifest.json`.
+//! * [`error`] — an `anyhow` substitute (`Error`, `Result`, `Context`,
+//!   the `anyhow!`/`bail!` macros) for the runtime/server layers.
 //! * [`proptest_lite`] — a tiny property-testing harness used by the
 //!   invariant tests.
 //! * [`fxhash`] — a fast non-cryptographic hasher for the hot maps.
 
+pub mod error;
 pub mod fxhash;
 pub mod json;
 pub mod proptest_lite;

@@ -390,6 +390,88 @@ fn prop_systems_finish_everything() {
 }
 
 #[test]
+fn prop_router_partitions_trace_exactly() {
+    // Cluster routing invariant: across N pairs and any policy, no
+    // request is dropped and none is routed twice — the per-pair
+    // sub-traces are an exact partition of the input trace.
+    use cronus::config::topology::ClusterConfig;
+    use cronus::cronus::router::{RoutePolicy, Router};
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+    check("router partitions the trace", 50, |rng| {
+        let n_pairs = rng.range_usize(1, 9);
+        let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+        let policy = RoutePolicy::ALL[rng.range_usize(0, 3)];
+        let n = rng.range_usize(1, 250);
+        let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
+        let process = if rng.f64() < 0.5 {
+            ArrivalProcess::AllAtOnce
+        } else {
+            ArrivalProcess::Poisson { rate_rps: 1.0 + rng.f64() * 20.0, seed: rng.next_u64() }
+        };
+        let trace = stamp(&trace, process);
+        let mut router = Router::new(policy, &cfg);
+        let assignments = router.route_trace(&trace);
+        if assignments.len() != n {
+            return PropResult::Fail(format!(
+                "{} assignments for {n} requests",
+                assignments.len()
+            ));
+        }
+        if let Some(bad) = assignments.iter().find(|&&i| i >= n_pairs) {
+            return PropResult::Fail(format!("pair index {bad} out of range"));
+        }
+        // Partition check: rebuild the per-pair sub-traces exactly the way
+        // ClusterSystem::run does, then verify their ids form the input
+        // trace's id multiset — nothing dropped, nothing duplicated.
+        let mut sub_ids: Vec<Vec<u64>> = vec![Vec::new(); n_pairs];
+        for (req, &pair) in trace.iter().zip(&assignments) {
+            sub_ids[pair].push(req.id);
+        }
+        let mut rebuilt: Vec<u64> = sub_ids.concat();
+        rebuilt.sort_unstable();
+        let mut expected: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        expected.sort_unstable();
+        if rebuilt != expected {
+            return PropResult::Fail(format!(
+                "sub-traces are not a partition: {} ids rebuilt vs {} expected",
+                rebuilt.len(),
+                expected.len()
+            ));
+        }
+        let per_pair: Vec<usize> = sub_ids.iter().map(|s| s.len()).collect();
+        let counted: Vec<u64> = router.routed_counts();
+        if per_pair.iter().map(|&c| c as u64).ne(counted.iter().copied()) {
+            return PropResult::Fail(format!(
+                "router counts {counted:?} disagree with sub-traces {per_pair:?}"
+            ));
+        }
+        let routed_total: u64 = counted.iter().sum();
+        PropResult::assert_eq("router accounting", routed_total, n as u64)
+    });
+}
+
+#[test]
+fn prop_cluster_system_serves_every_request() {
+    use cronus::config::topology::ClusterConfig;
+    use cronus::cronus::router::RoutePolicy;
+    use cronus::systems::cluster::build_cluster_system;
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+    check("cluster finishes everything", 8, |rng| {
+        let n_pairs = rng.range_usize(1, 5);
+        let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+        let policy = RoutePolicy::ALL[rng.range_usize(0, 3)];
+        let n = rng.range_usize(4, 40);
+        let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
+        let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+        let out = build_cluster_system(&cfg, policy).run(&trace);
+        PropResult::assert_eq("finished", out.report.n_finished, n)
+            .and(|| PropResult::assert_eq("arrived", out.report.n_requests, n))
+    });
+}
+
+#[test]
 fn prop_balancer_fast_path_matches_exhaustive() {
     // §Perf: the binary-search split must agree with the literal
     // Algorithm 1 scan (same grid, same argmin quality).
