@@ -38,7 +38,7 @@ fn main() {
         std::process::exit(2);
     });
 
-    let (table, points) = cluster_sweep(&opts, policy, max_pairs);
+    let (table, points) = cluster_sweep(&opts, policy, max_pairs, None);
     table.print();
 
     // Per-pair utilization of the largest cluster: every instance's busy

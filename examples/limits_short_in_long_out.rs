@@ -13,7 +13,7 @@ use cronus::benchkit::Table;
 use cronus::config::{DeploymentConfig, SystemKind};
 use cronus::simgpu::model_desc::LLAMA3_8B;
 use cronus::simgpu::spec::{A10, A100};
-use cronus::systems::build_system;
+use cronus::systems::{build_system, replay_trace};
 use cronus::workload::arrival::{stamp, ArrivalProcess};
 use cronus::workload::azure::{generate, AzureTraceConfig};
 
@@ -29,7 +29,8 @@ fn run(cfg: &DeploymentConfig, trace_cfg: &AzureTraceConfig, label: &str) {
         SystemKind::DpChunked,
         SystemKind::DisaggLowHigh,
     ] {
-        let out = build_system(kind, cfg).run(&trace);
+        let mut sys = build_system(kind, cfg);
+        let out = replay_trace(sys.as_mut(), &trace);
         let makespan = out.report.makespan_s;
         let fracs: Vec<String> = out
             .instances

@@ -8,7 +8,7 @@
 use cronus::config::{DeploymentConfig, SystemKind};
 use cronus::simgpu::model_desc::LLAMA3_8B;
 use cronus::simgpu::spec::{A10, A100};
-use cronus::systems::build_system;
+use cronus::systems::{build_system, replay_trace};
 use cronus::workload::arrival::{stamp, ArrivalProcess};
 use cronus::workload::azure::{generate, AzureTraceConfig};
 
@@ -31,9 +31,11 @@ fn main() {
     let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
 
     // 3. Serve it with Cronus (partially disaggregated prefill) and with
-    //    the DP+chunked baseline.
+    //    the DP+chunked baseline.  `replay_trace` feeds the recorded
+    //    arrivals through the online submit/advance/drain lifecycle.
     for kind in [SystemKind::Cronus, SystemKind::DpChunked] {
-        let out = build_system(kind, &cfg).run(&trace);
+        let mut sys = build_system(kind, &cfg);
+        let out = replay_trace(sys.as_mut(), &trace);
         println!("{}", out.report.summary());
         for inst in &out.instances {
             println!(

@@ -15,7 +15,7 @@ use cronus::cronus::balancer::SplitPolicy;
 use cronus::cronus::frontend::CronusSystem;
 use cronus::simgpu::model_desc::LLAMA3_8B;
 use cronus::simgpu::spec::{A10, A100};
-use cronus::systems::ServingSystem;
+use cronus::systems::{replay_trace, ServingSystem};
 use cronus::workload::arrival::{stamp, ArrivalProcess};
 use cronus::workload::azure::{generate, AzureTraceConfig};
 
@@ -33,7 +33,7 @@ fn main() {
         &["Policy", "thpt (req/s)", "TTFT p99 (s)", "TBT p99 (s)"],
     );
     let mut run = |label: &str, sys: &mut dyn ServingSystem| {
-        let out = sys.run(&trace);
+        let out = replay_trace(sys, &trace);
         table.row(vec![
             label.to_string(),
             format!("{:.2}", out.report.throughput_rps),

@@ -10,7 +10,7 @@ use cronus::benchkit::Table;
 use cronus::config::{DeploymentConfig, SystemKind};
 use cronus::simgpu::model_desc::LLAMA3_8B;
 use cronus::simgpu::spec::{A10, A100};
-use cronus::systems::build_system;
+use cronus::systems::{build_system, replay_trace};
 use cronus::workload::arrival::{stamp, ArrivalProcess};
 use cronus::workload::azure::{generate, AzureTraceConfig};
 
@@ -38,7 +38,8 @@ fn main() {
         let mut cronus_rps = 0.0;
         let mut dp_rps = 0.0;
         for kind in SystemKind::ALL {
-            let out = build_system(kind, &cfg).run(&trace);
+            let mut sys = build_system(kind, &cfg);
+            let out = replay_trace(sys.as_mut(), &trace);
             if kind == SystemKind::Cronus {
                 cronus_rps = out.report.throughput_rps;
             }

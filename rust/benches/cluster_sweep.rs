@@ -29,7 +29,7 @@ fn main() {
     let mut wall_total = 0.0;
     for policy in RoutePolicy::ALL {
         let ((table, points), wall) =
-            time_once(|| cluster_sweep(&opts, policy, max_pairs));
+            time_once(|| cluster_sweep(&opts, policy, max_pairs, None));
         table.print();
         wall_total += wall;
         if policy == RoutePolicy::LeastOutstandingTokens {

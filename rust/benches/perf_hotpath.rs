@@ -19,7 +19,7 @@ use cronus::simgpu::link::LinkSpec;
 use cronus::simgpu::model_desc::LLAMA3_8B;
 use cronus::simgpu::perfmodel::PerfModel;
 use cronus::simgpu::spec::{A10, A100};
-use cronus::systems::ServingSystem;
+use cronus::systems::replay_trace;
 use cronus::workload::arrival::{stamp, ArrivalProcess};
 use cronus::workload::azure::{generate, AzureTraceConfig};
 
@@ -86,7 +86,8 @@ fn main() {
     let trace = generate(200, &AzureTraceConfig::default(), 42);
     let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
     let (out, wall) = time_once(|| {
-        CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x").run(&trace)
+        let mut sys = CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x");
+        replay_trace(&mut sys, &trace)
     });
     let iters = out.instances.iter().map(|i| i.n_iterations).sum::<u64>();
     println!("\n== micro-benchmarks ==");

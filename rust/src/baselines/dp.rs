@@ -8,45 +8,47 @@
 //!
 //! The frontend holds requests when both queues are at their caps and
 //! refills as capacity frees — the weighted-queue form of the paper's
-//! "weights round-robin" router.
+//! "weights round-robin" router.  The whole dispatcher is online state
+//! (see [`crate::systems::ServingSystem`]): requests enter one at a time
+//! via `submit` and the engines are stepped by `advance`.
 
 use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
-use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
+use crate::engine::{EngineInstance, EngineRequest, IterationPlan};
 use crate::metrics::Collector;
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::perfmodel::PerfModel;
-use crate::systems::{InstanceStat, RunOutcome, ServingSystem};
+use crate::systems::{
+    earliest_instant, past_deadline, record_engine_event, take_pending_until,
+    Admission, InstanceStat, RunOutcome, ServingSystem, SystemEvent,
+};
 use crate::workload::Request;
 
 #[derive(Clone, Copy, Debug)]
 enum Ev {
-    Arrival(usize),
     /// Iteration completed on engine 0 (high) or 1 (low).
     EngineDone(usize),
 }
 
-pub struct DpSystem {
-    cfg: DeploymentConfig,
+/// Long-lived dispatcher + engine state.
+struct DpState {
+    engines: [EngineInstance; 2],
+    caps: [usize; 2],
+    weights: [f64; 2],
+    dispatched: [u64; 2],
+    q: EventQueue<Ev>,
+    metrics: Collector,
+    frontend: VecDeque<Request>,
+    plans: [Option<IterationPlan>; 2],
+    pending: Vec<SystemEvent>,
 }
 
-impl DpSystem {
-    pub fn new(cfg: DeploymentConfig) -> Self {
-        DpSystem { cfg }
-    }
-}
-
-impl ServingSystem for DpSystem {
-    fn label(&self) -> String {
-        "DP+Chunked".to_string()
-    }
-
-    fn run(&mut self, trace: &[Request]) -> RunOutcome {
-        let cfg = &self.cfg;
+impl DpState {
+    fn build(cfg: &DeploymentConfig) -> DpState {
         let hi_pm = PerfModel::new(cfg.high_gpu, cfg.model);
         let lo_pm = PerfModel::new(cfg.low_gpu, cfg.model);
-        let mut engines = [
+        let engines = [
             EngineInstance::from_params(
                 format!("DP-high({})", cfg.high_gpu.name),
                 hi_pm,
@@ -62,76 +64,132 @@ impl ServingSystem for DpSystem {
                 cfg.dp_low_chunk,
             ),
         ];
-        let caps = [cfg.dp_queue_caps.0, cfg.dp_queue_caps.1];
-        let weights = [cfg.dp_weights.0 as f64, cfg.dp_weights.1 as f64];
-        let mut dispatched = [0u64; 2];
-
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut metrics = Collector::new();
-        for (i, r) in trace.iter().enumerate() {
-            q.push(SimTime(r.arrival_ns), Ev::Arrival(i));
+        DpState {
+            engines,
+            caps: [cfg.dp_queue_caps.0, cfg.dp_queue_caps.1],
+            weights: [cfg.dp_weights.0 as f64, cfg.dp_weights.1 as f64],
+            dispatched: [0; 2],
+            q: EventQueue::new(),
+            metrics: Collector::new(),
+            frontend: VecDeque::new(),
+            plans: [None, None],
+            pending: Vec::new(),
         }
-        let mut frontend: VecDeque<usize> = VecDeque::new();
-        let mut plans: [Option<IterationPlan>; 2] = [None, None];
+    }
 
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                Ev::Arrival(i) => {
-                    metrics.on_arrival(trace[i].id, now);
-                    frontend.push_back(i);
-                }
-                Ev::EngineDone(which) => {
-                    let plan = plans[which].take().expect("done without plan");
-                    for ev in engines[which].complete_iteration(&plan) {
-                        match ev {
-                            EngineEvent::FirstToken(id) | EngineEvent::Token(id) => {
-                                metrics.on_token(id, now)
-                            }
-                            EngineEvent::Finished(id) => metrics.on_finish(id, now),
-                            _ => {}
-                        }
-                    }
-                }
+    fn run_until(&mut self, until: SimTime, inclusive: bool) {
+        while let Some(t) = self.q.peek_time() {
+            if past_deadline(t, until, inclusive) {
+                break;
             }
+            let (now, ev) = self.q.pop().unwrap();
+            self.handle(now, ev);
+        }
+    }
 
-            // Weighted dispatch into engines with queue headroom: among
-            // engines below their cap, pick the most under-served
+    fn handle(&mut self, now: SimTime, ev: Ev) {
+        let Ev::EngineDone(which) = ev;
+        let plan = self.plans[which].take().expect("done without plan");
+        for ev in self.engines[which].complete_iteration(&plan) {
+            record_engine_event(&mut self.metrics, &mut self.pending, now, ev);
+        }
+        self.pump();
+    }
+
+    /// Weighted dispatch into engines with queue headroom, then keep both
+    /// engines busy.
+    fn pump(&mut self) {
+        loop {
+            if self.frontend.is_empty() {
+                break;
+            }
+            // Among engines below their cap, pick the most under-served
             // relative to its weight.
-            loop {
-                if frontend.is_empty() {
-                    break;
-                }
-                let candidate = (0..2)
-                    .filter(|&e| engines[e].stats().waiting < caps[e])
-                    .min_by(|&a, &b| {
-                        let ka = dispatched[a] as f64 / weights[a];
-                        let kb = dispatched[b] as f64 / weights[b];
-                        ka.partial_cmp(&kb).unwrap()
-                    });
-                let Some(e) = candidate else { break };
-                let i = frontend.pop_front().unwrap();
-                let r = &trace[i];
-                engines[e].submit(EngineRequest::whole(
-                    r.id,
-                    r.input_len,
-                    r.output_len,
-                ));
-                dispatched[e] += 1;
-            }
+            let candidate = (0..2)
+                .filter(|&e| self.engines[e].stats().waiting < self.caps[e])
+                .min_by(|&a, &b| {
+                    let ka = self.dispatched[a] as f64 / self.weights[a];
+                    let kb = self.dispatched[b] as f64 / self.weights[b];
+                    ka.partial_cmp(&kb).unwrap()
+                });
+            let Some(e) = candidate else { break };
+            let r = self.frontend.pop_front().unwrap();
+            self.engines[e].submit(EngineRequest::whole(
+                r.id,
+                r.input_len,
+                r.output_len,
+            ));
+            self.dispatched[e] += 1;
+        }
 
-            // Keep both engines busy.
-            for e in 0..2 {
-                if plans[e].is_none() {
-                    if let Some(plan) = engines[e].plan_iteration() {
-                        q.push_after(plan.duration_s, Ev::EngineDone(e));
-                        plans[e] = Some(plan);
-                    }
+        for e in 0..2 {
+            if self.plans[e].is_none() {
+                if let Some(plan) = self.engines[e].plan_iteration() {
+                    self.q.push_after(plan.duration_s, Ev::EngineDone(e));
+                    self.plans[e] = Some(plan);
                 }
             }
         }
+    }
+}
 
-        let report = metrics.report(self.label());
-        let instances = engines
+pub struct DpSystem {
+    cfg: DeploymentConfig,
+    st: Option<DpState>,
+}
+
+impl DpSystem {
+    pub fn new(cfg: DeploymentConfig) -> Self {
+        DpSystem { cfg, st: None }
+    }
+
+    fn state(&mut self) -> &mut DpState {
+        if self.st.is_none() {
+            self.st = Some(DpState::build(&self.cfg));
+        }
+        self.st.as_mut().unwrap()
+    }
+}
+
+impl ServingSystem for DpSystem {
+    fn label(&self) -> String {
+        "DP+Chunked".to_string()
+    }
+
+    fn submit(&mut self, t: SimTime, req: Request) -> Admission {
+        let st = self.state();
+        st.run_until(t, false);
+        st.q.advance_now(t);
+        st.metrics.on_arrival(req.id, t);
+        st.frontend.push_back(req);
+        st.pump();
+        Admission::Accepted
+    }
+
+    fn next_event_at(&self) -> Option<SimTime> {
+        let st = self.st.as_ref()?;
+        earliest_instant(&st.pending, st.q.peek_time())
+    }
+
+    fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
+        match self.st.as_mut() {
+            None => Vec::new(),
+            Some(st) => {
+                st.run_until(until, true);
+                take_pending_until(&mut st.pending, until)
+            }
+        }
+    }
+
+    fn drain(&mut self) -> RunOutcome {
+        let mut st = match self.st.take() {
+            Some(st) => st,
+            None => DpState::build(&self.cfg),
+        };
+        st.run_until(SimTime(u64::MAX), true);
+        let report = st.metrics.report(self.label());
+        let instances = st
+            .engines
             .iter()
             .map(|e| InstanceStat {
                 name: e.name.clone(),
@@ -151,13 +209,14 @@ mod tests {
     use super::*;
     use crate::simgpu::model_desc::LLAMA3_8B;
     use crate::simgpu::spec::{A10, A100};
+    use crate::systems::driver::replay_trace;
     use crate::workload::azure::{generate, AzureTraceConfig};
 
     #[test]
     fn dp_serves_all_and_respects_weights() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let trace = generate(80, &AzureTraceConfig::default(), 3);
-        let out = DpSystem::new(cfg).run(&trace);
+        let out = replay_trace(&mut DpSystem::new(cfg), &trace);
         assert_eq!(out.report.n_finished, 80);
         // High-end engine should have served roughly 3x the requests;
         // token counts are a proxy.
@@ -176,7 +235,7 @@ mod tests {
     fn dp_uses_no_kv_transfers() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let trace = generate(20, &AzureTraceConfig::default(), 5);
-        let out = DpSystem::new(cfg).run(&trace);
+        let out = replay_trace(&mut DpSystem::new(cfg), &trace);
         // total prefilled tokens == total input tokens (nothing shipped).
         let total_input: u64 = trace.iter().map(|r| r.input_len as u64).sum();
         let prefilled: u64 =
@@ -188,8 +247,8 @@ mod tests {
     fn dp_is_deterministic() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let trace = generate(30, &AzureTraceConfig::default(), 6);
-        let a = DpSystem::new(cfg.clone()).run(&trace);
-        let b = DpSystem::new(cfg).run(&trace);
+        let a = replay_trace(&mut DpSystem::new(cfg.clone()), &trace);
+        let b = replay_trace(&mut DpSystem::new(cfg), &trace);
         assert_eq!(a.report.makespan_s, b.report.makespan_s);
     }
 }

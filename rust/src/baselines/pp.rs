@@ -21,96 +21,66 @@
 //! Memory: each GPU holds its layer fraction of the KV cache for *all*
 //! requests, so per-group capacity is bounded by the tighter stage — the
 //! reduced-batch-size effect of §3.3.
+//!
+//! The pipeline is online state (see [`crate::systems::ServingSystem`]):
+//! arrivals join a microbatch group at `submit` time and the two stages
+//! are stepped by `advance`.
 
 use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
-use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
+use crate::engine::{EngineInstance, EngineRequest, IterationPlan};
 use crate::metrics::Collector;
 use crate::simclock::{EventQueue, SimTime};
+use crate::simgpu::link::LinkSpec;
+use crate::simgpu::model_desc::ModelDesc;
 use crate::simgpu::perfmodel::{IterationShape, PerfModel};
-use crate::systems::{InstanceStat, RunOutcome, ServingSystem};
+use crate::systems::{
+    earliest_instant, past_deadline, record_engine_event, take_pending_until,
+    Admission, InstanceStat, RunOutcome, ServingSystem, SystemEvent,
+};
 use crate::workload::Request;
 
 #[derive(Clone, Copy, Debug)]
 enum Ev {
-    Arrival(usize),
     /// Stage 0 (high-end) finished group `g`'s forward part + transfer.
     Stage0Done(usize),
     /// Stage 1 (low-end) finished group `g`'s iteration.
     Stage1Done(usize),
 }
 
-pub struct PpSystem {
-    cfg: DeploymentConfig,
-    /// Scheduler synchronization barrier between pipeline iterations, as
-    /// in the vLLM version the paper evaluates (0.6.1): the next
-    /// microbatch's stage-0 pass does not launch until the previous
-    /// iteration fully drains, so stages never actually overlap.  This is
-    /// the behaviour behind the paper's flat ~4 req/s PP throughput
-    /// across hardware.  Set `false` for an idealized bubble-free
-    /// pipeline (see the `ablation_balancer` bench).
+/// Long-lived pipeline state: the two microbatch groups, stage occupancy
+/// and the in-flight iteration plans.
+struct PpState {
+    hi_pm: PerfModel,
+    lo_pm: PerfModel,
+    link: LinkSpec,
+    model: ModelDesc,
     sync_barrier: bool,
+    groups: [EngineInstance; 2],
+    q: EventQueue<Ev>,
+    metrics: Collector,
+    next_group: usize,
+    /// A group's in-flight plan while it traverses the stages.
+    plans: [Option<IterationPlan>; 2],
+    stage0_busy: bool,
+    stage1_busy: bool,
+    /// Plans waiting for stage 1, by group index.
+    stage1_queue: VecDeque<usize>,
+    busy: [f64; 2],
+    n_slots: u64,
+    pending: Vec<SystemEvent>,
 }
 
-impl PpSystem {
-    pub fn new(cfg: DeploymentConfig) -> Self {
-        PpSystem { cfg, sync_barrier: true }
-    }
-
-    /// Idealized pipeline without the vLLM scheduler barrier (ablation).
-    pub fn without_sync_barrier(cfg: DeploymentConfig) -> Self {
-        PpSystem { cfg, sync_barrier: false }
-    }
-
-    /// Stage performance models under the FLOPS-proportional layer split.
-    pub fn stage_models(&self) -> (PerfModel, PerfModel) {
-        let (hi_layers, lo_layers) = self.cfg.pp_layer_split();
-        let n = self.cfg.model.n_layers as f64;
-        (
-            PerfModel::with_layer_fraction(
-                self.cfg.high_gpu,
-                self.cfg.model,
-                hi_layers as f64 / n,
-            ),
-            PerfModel::with_layer_fraction(
-                self.cfg.low_gpu,
-                self.cfg.model,
-                lo_layers as f64 / n,
-            ),
-        )
-    }
-
-    /// Per-group KV capacity in tokens (half of the tighter stage).
-    fn group_kv_capacity(&self) -> usize {
-        let (hi, lo) = self.stage_models();
-        let reserve = self.cfg.engine.activation_reserve_frac;
-        hi.kv_capacity_tokens(reserve).min(lo.kv_capacity_tokens(reserve)) / 2
-    }
-
-    /// Activation transfer between stages for a batch.
-    fn comm_time(&self, shape: &IterationShape) -> f64 {
-        self.cfg
-            .link
-            .transfer_time(self.cfg.model.activation_bytes(shape.total_new_tokens()))
-            + self.cfg.link.latency_s // small return hop (token ids)
-    }
-}
-
-impl ServingSystem for PpSystem {
-    fn label(&self) -> String {
-        "PP+Chunked".to_string()
-    }
-
-    fn run(&mut self, trace: &[Request]) -> RunOutcome {
-        let cfg = &self.cfg;
-        let (hi_pm, lo_pm) = self.stage_models();
-        let group_capacity = self.group_kv_capacity();
+impl PpState {
+    fn build(cfg: &DeploymentConfig, sync_barrier: bool) -> PpState {
+        let (hi_pm, lo_pm) = stage_models_of(cfg);
+        let group_capacity = group_kv_capacity_of(cfg);
 
         // Two microbatch groups.  The engines are used as scheduler +
         // allocator state machines; stage timings come from the stage
         // performance models.
-        let mut groups = [
+        let groups = [
             EngineInstance::new(
                 "PP-group0",
                 hi_pm,
@@ -130,121 +100,221 @@ impl ServingSystem for PpSystem {
                 group_capacity,
             ),
         ];
-
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut metrics = Collector::new();
-        for (i, r) in trace.iter().enumerate() {
-            q.push(SimTime(r.arrival_ns), Ev::Arrival(i));
+        PpState {
+            hi_pm,
+            lo_pm,
+            link: cfg.link,
+            model: cfg.model,
+            sync_barrier,
+            groups,
+            q: EventQueue::new(),
+            metrics: Collector::new(),
+            next_group: 0,
+            plans: [None, None],
+            stage0_busy: false,
+            stage1_busy: false,
+            stage1_queue: VecDeque::new(),
+            busy: [0.0; 2],
+            n_slots: 0,
+            pending: Vec::new(),
         }
-        let mut frontend: VecDeque<usize> = VecDeque::new();
-        let mut next_group = 0usize;
-        // Pipeline state: a group's in-flight plan while it traverses the
-        // stages; stage occupancy; queue of plans waiting for stage 1.
-        let mut plans: [Option<IterationPlan>; 2] = [None, None];
-        let mut stage0_busy = false;
-        let mut stage1_busy = false;
-        let mut stage1_queue: VecDeque<usize> = VecDeque::new();
-        let mut busy = [0.0f64; 2];
-        let mut n_slots = 0u64;
+    }
 
-        // Try to start a stage-0 pass for any group with no iteration in
-        // flight.  Returns scheduled events via the queue.
-        macro_rules! pump {
-            ($q:expr) => {{
-                // Stage 1 first (drain), then stage 0 (fill).
-                if !stage1_busy {
-                    if let Some(g) = stage1_queue.pop_front() {
-                        let shape =
-                            plans[g].as_ref().map(|p| p.shape.clone()).unwrap();
-                        let t = lo_pm.iteration_time(&shape);
-                        busy[1] += t;
-                        stage1_busy = true;
-                        $q.push_after(t, Ev::Stage1Done(g));
-                    }
-                }
-                let pipe_drained =
-                    plans[0].is_none() && plans[1].is_none();
-                if !stage0_busy && (!self.sync_barrier || pipe_drained) {
-                    // Prefer the group that has waited longest: alternate.
-                    for attempt in 0..2 {
-                        let g = (next_group + attempt) % 2;
-                        if plans[g].is_some() {
-                            continue; // iteration already in flight
-                        }
-                        if let Some(plan) = groups[g].plan_iteration() {
-                            let t = hi_pm.iteration_time(&plan.shape)
-                                + self.comm_time(&plan.shape);
-                            busy[0] += hi_pm.iteration_time(&plan.shape);
-                            n_slots += 1;
-                            plans[g] = Some(plan);
-                            stage0_busy = true;
-                            next_group = 1 - g;
-                            $q.push_after(t, Ev::Stage0Done(g));
-                            break;
-                        }
-                    }
-                }
-            }};
+    /// Activation transfer between stages for a batch.
+    fn comm_time(&self, shape: &IterationShape) -> f64 {
+        self.link
+            .transfer_time(self.model.activation_bytes(shape.total_new_tokens()))
+            + self.link.latency_s // small return hop (token ids)
+    }
+
+    fn run_until(&mut self, until: SimTime, inclusive: bool) {
+        while let Some(t) = self.q.peek_time() {
+            if past_deadline(t, until, inclusive) {
+                break;
+            }
+            let (now, ev) = self.q.pop().unwrap();
+            self.handle(now, ev);
         }
+    }
 
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                Ev::Arrival(i) => {
-                    metrics.on_arrival(trace[i].id, now);
-                    frontend.push_back(i);
-                }
-                Ev::Stage0Done(g) => {
-                    stage0_busy = false;
-                    stage1_queue.push_back(g);
-                }
-                Ev::Stage1Done(g) => {
-                    stage1_busy = false;
-                    let plan = plans[g].take().expect("stage1 without plan");
-                    for ev in groups[g].complete_iteration(&plan) {
-                        match ev {
-                            EngineEvent::FirstToken(id) | EngineEvent::Token(id) => {
-                                metrics.on_token(id, now)
-                            }
-                            EngineEvent::Finished(id) => metrics.on_finish(id, now),
-                            _ => {}
-                        }
-                    }
+    fn handle(&mut self, now: SimTime, ev: Ev) {
+        match ev {
+            Ev::Stage0Done(g) => {
+                self.stage0_busy = false;
+                self.stage1_queue.push_back(g);
+            }
+            Ev::Stage1Done(g) => {
+                self.stage1_busy = false;
+                let plan = self.plans[g].take().expect("stage1 without plan");
+                for ev in self.groups[g].complete_iteration(&plan) {
+                    record_engine_event(&mut self.metrics, &mut self.pending, now, ev);
                 }
             }
-
-            // Dispatch arrivals to the emptier group (ties alternate).
-            while let Some(&i) = frontend.front() {
-                let r = &trace[i];
-                let g = match groups[0]
-                    .n_in_instance()
-                    .cmp(&groups[1].n_in_instance())
-                {
-                    std::cmp::Ordering::Equal => next_group,
-                    std::cmp::Ordering::Less => 0,
-                    std::cmp::Ordering::Greater => 1,
-                };
-                groups[g].submit(EngineRequest::whole(r.id, r.input_len, r.output_len));
-                frontend.pop_front();
-            }
-
-            pump!(q);
         }
+        self.pump();
+    }
 
-        let report = metrics.report(self.label());
-        let (hi_layers, lo_layers) = cfg.pp_layer_split();
+    /// Start stage passes wherever the pipeline has capacity: stage 1
+    /// first (drain), then stage 0 (fill).
+    fn pump(&mut self) {
+        if !self.stage1_busy {
+            if let Some(g) = self.stage1_queue.pop_front() {
+                let shape = self.plans[g].as_ref().map(|p| p.shape.clone()).unwrap();
+                let t = self.lo_pm.iteration_time(&shape);
+                self.busy[1] += t;
+                self.stage1_busy = true;
+                self.q.push_after(t, Ev::Stage1Done(g));
+            }
+        }
+        let pipe_drained = self.plans[0].is_none() && self.plans[1].is_none();
+        if !self.stage0_busy && (!self.sync_barrier || pipe_drained) {
+            // Prefer the group that has waited longest: alternate.
+            for attempt in 0..2 {
+                let g = (self.next_group + attempt) % 2;
+                if self.plans[g].is_some() {
+                    continue; // iteration already in flight
+                }
+                if let Some(plan) = self.groups[g].plan_iteration() {
+                    let compute = self.hi_pm.iteration_time(&plan.shape);
+                    let t = compute + self.comm_time(&plan.shape);
+                    self.busy[0] += compute;
+                    self.n_slots += 1;
+                    self.plans[g] = Some(plan);
+                    self.stage0_busy = true;
+                    self.next_group = 1 - g;
+                    self.q.push_after(t, Ev::Stage0Done(g));
+                    break;
+                }
+            }
+        }
+    }
+}
+
+pub struct PpSystem {
+    cfg: DeploymentConfig,
+    /// Scheduler synchronization barrier between pipeline iterations, as
+    /// in the vLLM version the paper evaluates (0.6.1): the next
+    /// microbatch's stage-0 pass does not launch until the previous
+    /// iteration fully drains, so stages never actually overlap.  This is
+    /// the behaviour behind the paper's flat ~4 req/s PP throughput
+    /// across hardware.  Set `false` for an idealized bubble-free
+    /// pipeline (see the `ablation_balancer` bench).
+    sync_barrier: bool,
+    st: Option<PpState>,
+}
+
+/// Stage performance models under the FLOPS-proportional layer split.
+fn stage_models_of(cfg: &DeploymentConfig) -> (PerfModel, PerfModel) {
+    let (hi_layers, lo_layers) = cfg.pp_layer_split();
+    let n = cfg.model.n_layers as f64;
+    (
+        PerfModel::with_layer_fraction(cfg.high_gpu, cfg.model, hi_layers as f64 / n),
+        PerfModel::with_layer_fraction(cfg.low_gpu, cfg.model, lo_layers as f64 / n),
+    )
+}
+
+/// Per-group KV capacity in tokens (half of the tighter stage) — the
+/// single source both the simulator state and the public accessor use.
+fn group_kv_capacity_of(cfg: &DeploymentConfig) -> usize {
+    let (hi, lo) = stage_models_of(cfg);
+    let reserve = cfg.engine.activation_reserve_frac;
+    hi.kv_capacity_tokens(reserve).min(lo.kv_capacity_tokens(reserve)) / 2
+}
+
+impl PpSystem {
+    pub fn new(cfg: DeploymentConfig) -> Self {
+        PpSystem { cfg, sync_barrier: true, st: None }
+    }
+
+    /// Idealized pipeline without the vLLM scheduler barrier (ablation).
+    pub fn without_sync_barrier(cfg: DeploymentConfig) -> Self {
+        PpSystem { cfg, sync_barrier: false, st: None }
+    }
+
+    /// Stage performance models under the FLOPS-proportional layer split.
+    pub fn stage_models(&self) -> (PerfModel, PerfModel) {
+        stage_models_of(&self.cfg)
+    }
+
+    /// Per-group KV capacity in tokens (half of the tighter stage).
+    pub fn group_kv_capacity(&self) -> usize {
+        group_kv_capacity_of(&self.cfg)
+    }
+
+    fn state(&mut self) -> &mut PpState {
+        if self.st.is_none() {
+            self.st = Some(PpState::build(&self.cfg, self.sync_barrier));
+        }
+        self.st.as_mut().unwrap()
+    }
+}
+
+impl ServingSystem for PpSystem {
+    fn label(&self) -> String {
+        "PP+Chunked".to_string()
+    }
+
+    fn submit(&mut self, t: SimTime, req: Request) -> Admission {
+        let st = self.state();
+        st.run_until(t, false);
+        st.q.advance_now(t);
+        st.metrics.on_arrival(req.id, t);
+        // Dispatch to the emptier group (ties alternate with stage-0
+        // scheduling, as in the batch loop).
+        let g = match st.groups[0].n_in_instance().cmp(&st.groups[1].n_in_instance()) {
+            std::cmp::Ordering::Equal => st.next_group,
+            std::cmp::Ordering::Less => 0,
+            std::cmp::Ordering::Greater => 1,
+        };
+        st.groups[g].submit(EngineRequest::whole(req.id, req.input_len, req.output_len));
+        st.pump();
+        Admission::Accepted
+    }
+
+    fn next_event_at(&self) -> Option<SimTime> {
+        let st = self.st.as_ref()?;
+        earliest_instant(&st.pending, st.q.peek_time())
+    }
+
+    fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
+        match self.st.as_mut() {
+            None => Vec::new(),
+            Some(st) => {
+                st.run_until(until, true);
+                take_pending_until(&mut st.pending, until)
+            }
+        }
+    }
+
+    fn drain(&mut self) -> RunOutcome {
+        let mut st = match self.st.take() {
+            Some(st) => st,
+            None => PpState::build(&self.cfg, self.sync_barrier),
+        };
+        st.run_until(SimTime(u64::MAX), true);
+        let report = st.metrics.report(self.label());
+        let (hi_layers, lo_layers) = self.cfg.pp_layer_split();
         let instances = vec![
             InstanceStat {
-                name: format!("PP-stage0({}, {hi_layers} layers)", cfg.high_gpu.name),
-                busy_time_s: busy[0],
-                n_iterations: n_slots,
-                n_preemptions: groups[0].n_preemptions + groups[1].n_preemptions,
-                tokens_prefilled: groups[0].tokens_prefilled + groups[1].tokens_prefilled,
-                tokens_decoded: groups[0].tokens_decoded + groups[1].tokens_decoded,
+                name: format!(
+                    "PP-stage0({}, {hi_layers} layers)",
+                    self.cfg.high_gpu.name
+                ),
+                busy_time_s: st.busy[0],
+                n_iterations: st.n_slots,
+                n_preemptions: st.groups[0].n_preemptions + st.groups[1].n_preemptions,
+                tokens_prefilled: st.groups[0].tokens_prefilled
+                    + st.groups[1].tokens_prefilled,
+                tokens_decoded: st.groups[0].tokens_decoded
+                    + st.groups[1].tokens_decoded,
             },
             InstanceStat {
-                name: format!("PP-stage1({}, {lo_layers} layers)", cfg.low_gpu.name),
-                busy_time_s: busy[1],
-                n_iterations: n_slots,
+                name: format!(
+                    "PP-stage1({}, {lo_layers} layers)",
+                    self.cfg.low_gpu.name
+                ),
+                busy_time_s: st.busy[1],
+                n_iterations: st.n_slots,
                 n_preemptions: 0,
                 tokens_prefilled: 0,
                 tokens_decoded: 0,
@@ -259,13 +329,14 @@ mod tests {
     use super::*;
     use crate::simgpu::model_desc::LLAMA3_8B;
     use crate::simgpu::spec::{A10, A100};
+    use crate::systems::driver::replay_trace;
     use crate::workload::azure::{generate, AzureTraceConfig};
 
     #[test]
     fn pp_serves_all_requests() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let trace = generate(40, &AzureTraceConfig::default(), 9);
-        let out = PpSystem::new(cfg).run(&trace);
+        let out = replay_trace(&mut PpSystem::new(cfg), &trace);
         assert_eq!(out.report.n_finished, 40);
         assert!(out.report.throughput_rps > 0.0);
     }
@@ -314,8 +385,8 @@ mod tests {
     fn pp_is_deterministic() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let trace = generate(25, &AzureTraceConfig::default(), 12);
-        let a = PpSystem::new(cfg.clone()).run(&trace);
-        let b = PpSystem::new(cfg).run(&trace);
+        let a = replay_trace(&mut PpSystem::new(cfg.clone()), &trace);
+        let b = replay_trace(&mut PpSystem::new(cfg), &trace);
         assert_eq!(a.report.makespan_s, b.report.makespan_s);
     }
 }

@@ -16,6 +16,13 @@
 //!
 //! With [`SplitPolicy::Full`] this same driver *is* the disaggregated-
 //! prefill baseline (L→H, or H→L with `swap_gpus`).
+//!
+//! The system is *online*: engines, event queue, balancer and metrics
+//! live in [`CronusSystem`] as long-lived state, so the driver can be
+//! stepped request by request via the `submit` / `advance` / `drain`
+//! lifecycle (see [`crate::systems::ServingSystem`]).  Oversized prompts
+//! are rejected at `submit` time and surfaced both as
+//! [`SystemEvent::Shed`] and in [`Report::n_rejected`](crate::metrics::Report).
 
 use std::collections::VecDeque;
 
@@ -27,58 +34,40 @@ use crate::metrics::Collector;
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::fit::calibrate;
 use crate::simgpu::perfmodel::PerfModel;
-use crate::systems::{InstanceStat, RunOutcome, ServingSystem};
+use crate::systems::{
+    earliest_instant, past_deadline, record_engine_event, take_pending_until,
+    Admission, InstanceStat, RunOutcome, ServingSystem, SystemEvent,
+};
+use crate::util::fxhash::FxHashMap;
 use crate::workload::Request;
 
 #[derive(Clone, Copy, Debug)]
 enum Ev {
-    Arrival(usize),
     PpiDone,
     CpiDone,
 }
 
-pub struct CronusSystem {
-    cfg: DeploymentConfig,
-    policy: SplitPolicy,
-    /// Swap GPU roles: PPI on the high-end, CPI on the low-end GPU
-    /// (the Disagg. H-L configuration).
-    swap_gpus: bool,
-    label: String,
+/// The long-lived event-loop state of one Cronus pair.
+struct CronusState {
+    balancer: Balancer,
+    cpi: EngineInstance,
+    ppi: PartialPrefillInstance,
+    q: EventQueue<Ev>,
+    metrics: Collector,
+    /// Accepted requests waiting for a PPI slot (paper step ①).
+    frontend: VecDeque<u64>,
+    /// Request records by id (the PPI handoff needs lengths).
+    reqs: FxHashMap<u64, Request>,
+    cpi_plan: Option<IterationPlan>,
+    cpi_capacity_tokens: usize,
+    n_rejected: usize,
+    /// Events produced but not yet collected via `advance`.
+    pending: Vec<SystemEvent>,
 }
 
-impl CronusSystem {
-    pub fn new(
-        cfg: DeploymentConfig,
-        policy: SplitPolicy,
-        swap_gpus: bool,
-        label: impl Into<String>,
-    ) -> Self {
-        CronusSystem { cfg, policy, swap_gpus, label: label.into() }
-    }
-
-    /// Performance models for (PPI GPU, CPI GPU) under the current role
-    /// assignment.
-    pub fn perf_models(&self) -> (PerfModel, PerfModel) {
-        let (ppi_gpu, cpi_gpu) = if self.swap_gpus {
-            (self.cfg.high_gpu, self.cfg.low_gpu)
-        } else {
-            (self.cfg.low_gpu, self.cfg.high_gpu)
-        };
-        (
-            PerfModel::new(ppi_gpu, self.cfg.model),
-            PerfModel::new(cpi_gpu, self.cfg.model),
-        )
-    }
-}
-
-impl ServingSystem for CronusSystem {
-    fn label(&self) -> String {
-        self.label.clone()
-    }
-
-    fn run(&mut self, trace: &[Request]) -> RunOutcome {
-        let cfg = &self.cfg;
-        let (ppi_pm, cpi_pm) = self.perf_models();
+impl CronusState {
+    fn build(cfg: &DeploymentConfig, policy: SplitPolicy, swap_gpus: bool) -> CronusState {
+        let (ppi_pm, cpi_pm) = role_models(cfg, swap_gpus);
 
         // Calibrate the Balancer's predictors by profiling, exactly as
         // the paper does (§4.4).
@@ -90,133 +79,238 @@ impl ServingSystem for CronusSystem {
             cfg.calibration_seed,
         );
         let balancer = Balancer::new(
-            self.policy,
+            policy,
             prefill_coeffs,
             chunked_coeffs,
             cfg.engine.max_batched_tokens,
         );
 
-        let mut cpi = EngineInstance::from_params(
+        let cpi = EngineInstance::from_params(
             format!("CPI({})", cpi_pm.gpu.name),
             cpi_pm,
             cfg.link,
             &cfg.engine,
             cfg.engine.max_batched_tokens,
         );
-        let mut ppi = PartialPrefillInstance::new(
+        let ppi = PartialPrefillInstance::new(
             ppi_pm,
             ppi_pm.kv_capacity_tokens(cfg.engine.activation_reserve_frac),
         );
-
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut metrics = Collector::new();
-        for (i, r) in trace.iter().enumerate() {
-            q.push(SimTime(r.arrival_ns), Ev::Arrival(i));
-        }
-        let mut frontend: VecDeque<usize> = VecDeque::new();
-        let mut cpi_plan: Option<IterationPlan> = None;
-        let mut rejected = 0usize;
         let cpi_capacity_tokens =
             cpi.kv_allocator().total_blocks() * cpi.kv_allocator().block_size();
 
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                Ev::Arrival(i) => {
-                    metrics.on_arrival(trace[i].id, now);
-                    frontend.push_back(i);
+        CronusState {
+            balancer,
+            cpi,
+            ppi,
+            q: EventQueue::new(),
+            metrics: Collector::new(),
+            frontend: VecDeque::new(),
+            reqs: FxHashMap::default(),
+            cpi_plan: None,
+            cpi_capacity_tokens,
+            n_rejected: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Pop and apply internal events; `inclusive` controls whether events
+    /// *at* `until` run (advance) or stay queued (submit's pre-drain).
+    fn run_until(&mut self, until: SimTime, inclusive: bool) {
+        while let Some(t) = self.q.peek_time() {
+            if past_deadline(t, until, inclusive) {
+                break;
+            }
+            let (now, ev) = self.q.pop().unwrap();
+            self.handle(now, ev);
+        }
+    }
+
+    fn handle(&mut self, now: SimTime, ev: Ev) {
+        match ev {
+            Ev::PpiDone => {
+                let (job, next) = self.ppi.on_done();
+                let r = self.reqs[&job.id];
+                // ⑤ chunked-prefill request: original prompt plus the
+                // already-processed prefix length.
+                self.cpi.submit(EngineRequest::with_offset(
+                    job.id,
+                    r.input_len,
+                    r.output_len,
+                    job.partial_len,
+                ));
+                if let Some((_next_job, dur)) = next {
+                    self.q.push_after(dur, Ev::PpiDone);
                 }
-                Ev::PpiDone => {
-                    let (job, next) = ppi.on_done();
-                    let r = trace
-                        .iter()
-                        .find(|r| r.id == job.id)
-                        .expect("PPI job for unknown request");
-                    // ⑤ chunked-prefill request: original prompt plus the
-                    // already-processed prefix length.
-                    cpi.submit(EngineRequest::with_offset(
-                        job.id,
-                        r.input_len,
-                        r.output_len,
-                        job.partial_len,
-                    ));
-                    if let Some((_next_job, dur)) = next {
-                        q.push_after(dur, Ev::PpiDone);
-                    }
-                }
-                Ev::CpiDone => {
-                    let plan = cpi_plan.take().expect("CpiDone without plan");
-                    for ev in cpi.complete_iteration(&plan) {
-                        match ev {
-                            EngineEvent::FirstToken(id) | EngineEvent::Token(id) => {
-                                metrics.on_token(id, now)
-                            }
-                            EngineEvent::Finished(id) => metrics.on_finish(id, now),
-                            EngineEvent::KvReceived(id) => {
-                                // ⑦ transfer complete: PPI buffer freed.
-                                if let Some((_job, dur)) = ppi.release(id) {
-                                    q.push_after(dur, Ev::PpiDone);
-                                }
-                            }
-                            EngineEvent::Preempted(_) => {}
+            }
+            Ev::CpiDone => {
+                let plan = self.cpi_plan.take().expect("CpiDone without plan");
+                for ev in self.cpi.complete_iteration(&plan) {
+                    if record_engine_event(&mut self.metrics, &mut self.pending, now, ev)
+                    {
+                        if let EngineEvent::Finished(id) = ev {
+                            // The request left the system; drop its record
+                            // so a long-running online frontend stays
+                            // bounded.
+                            self.reqs.remove(&id);
+                        }
+                    } else if let EngineEvent::KvReceived(id) = ev {
+                        // ⑦ transfer complete: PPI buffer freed.
+                        if let Some((_job, dur)) = self.ppi.release(id) {
+                            self.q.push_after(dur, Ev::PpiDone);
                         }
                     }
                 }
             }
+        }
+        self.pump();
+    }
 
-            // ①–③ dispatch frontend -> PPI whenever a slot is free.
-            while ppi.has_slot() && !frontend.is_empty() {
-                let i = frontend.pop_front().unwrap();
-                let r = &trace[i];
-                if r.input_len > cpi_capacity_tokens {
-                    rejected += 1; // cannot ever fit; reject (vLLM would too)
-                    continue;
-                }
-                let decision = balancer.split(r.input_len, &cpi.stats());
-                // The PPI's KV buffer bounds the prefix it can hold: a
-                // low-end card too small for the model (e.g. 16 GiB for
-                // an 8B model in a mixed cluster) degrades to pure
-                // chunked prefill on the CPI instead of stalling.
-                let partial_len =
-                    decision.partial_len.min(ppi.buffer_capacity_tokens());
-                if let Some((_job, dur)) =
-                    ppi.enqueue(PpiJob { id: r.id, partial_len })
-                {
-                    q.push_after(dur, Ev::PpiDone);
-                }
-            }
-
-            // Keep the CPI busy.
-            if cpi_plan.is_none() {
-                if let Some(plan) = cpi.plan_iteration() {
-                    q.push_after(plan.duration_s, Ev::CpiDone);
-                    cpi_plan = Some(plan);
-                }
+    /// ①–③ dispatch frontend → PPI whenever a slot is free, and keep the
+    /// CPI busy.  Runs after every event and every submission.
+    fn pump(&mut self) {
+        while self.ppi.has_slot() && !self.frontend.is_empty() {
+            let id = self.frontend.pop_front().unwrap();
+            let r = self.reqs[&id];
+            let decision = self.balancer.split(r.input_len, &self.cpi.stats());
+            // The PPI's KV buffer bounds the prefix it can hold: a
+            // low-end card too small for the model (e.g. 16 GiB for
+            // an 8B model in a mixed cluster) degrades to pure
+            // chunked prefill on the CPI instead of stalling.
+            let partial_len =
+                decision.partial_len.min(self.ppi.buffer_capacity_tokens());
+            if let Some((_job, dur)) = self.ppi.enqueue(PpiJob { id, partial_len }) {
+                self.q.push_after(dur, Ev::PpiDone);
             }
         }
 
-        if rejected > 0 {
-            eprintln!("{}: rejected {rejected} oversized requests", self.label);
+        if self.cpi_plan.is_none() {
+            if let Some(plan) = self.cpi.plan_iteration() {
+                self.q.push_after(plan.duration_s, Ev::CpiDone);
+                self.cpi_plan = Some(plan);
+            }
         }
+    }
+}
 
-        let report = metrics.report(self.label.clone());
+pub struct CronusSystem {
+    cfg: DeploymentConfig,
+    policy: SplitPolicy,
+    /// Swap GPU roles: PPI on the high-end, CPI on the low-end GPU
+    /// (the Disagg. H-L configuration).
+    swap_gpus: bool,
+    label: String,
+    /// Built lazily on first use; consumed by `drain`.
+    st: Option<CronusState>,
+}
+
+/// Performance models for (PPI GPU, CPI GPU) under `swap_gpus`.
+fn role_models(cfg: &DeploymentConfig, swap_gpus: bool) -> (PerfModel, PerfModel) {
+    let (ppi_gpu, cpi_gpu) = if swap_gpus {
+        (cfg.high_gpu, cfg.low_gpu)
+    } else {
+        (cfg.low_gpu, cfg.high_gpu)
+    };
+    (
+        PerfModel::new(ppi_gpu, cfg.model),
+        PerfModel::new(cpi_gpu, cfg.model),
+    )
+}
+
+impl CronusSystem {
+    pub fn new(
+        cfg: DeploymentConfig,
+        policy: SplitPolicy,
+        swap_gpus: bool,
+        label: impl Into<String>,
+    ) -> Self {
+        CronusSystem { cfg, policy, swap_gpus, label: label.into(), st: None }
+    }
+
+    /// Performance models for (PPI GPU, CPI GPU) under the current role
+    /// assignment.
+    pub fn perf_models(&self) -> (PerfModel, PerfModel) {
+        role_models(&self.cfg, self.swap_gpus)
+    }
+
+    fn state(&mut self) -> &mut CronusState {
+        if self.st.is_none() {
+            self.st = Some(CronusState::build(&self.cfg, self.policy, self.swap_gpus));
+        }
+        self.st.as_mut().unwrap()
+    }
+}
+
+impl ServingSystem for CronusSystem {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn submit(&mut self, t: SimTime, req: Request) -> Admission {
+        let st = self.state();
+        // Process everything scheduled before the arrival, then anchor
+        // the clock at the arrival instant.
+        st.run_until(t, false);
+        st.q.advance_now(t);
+        st.metrics.on_arrival(req.id, t);
+        if req.input_len > st.cpi_capacity_tokens {
+            // Cannot ever fit the CPI's KV pool; reject (vLLM would too).
+            st.n_rejected += 1;
+            st.metrics.on_shed(req.id);
+            let reason = format!(
+                "prompt of {} tokens exceeds the CPI KV capacity of {} tokens",
+                req.input_len, st.cpi_capacity_tokens
+            );
+            st.pending.push(SystemEvent::Shed { id: req.id, t, reason: reason.clone() });
+            return Admission::Rejected { reason };
+        }
+        st.reqs.insert(req.id, req);
+        st.frontend.push_back(req.id);
+        st.pump();
+        Admission::Accepted
+    }
+
+    fn next_event_at(&self) -> Option<SimTime> {
+        let st = self.st.as_ref()?;
+        earliest_instant(&st.pending, st.q.peek_time())
+    }
+
+    fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
+        match self.st.as_mut() {
+            None => Vec::new(),
+            Some(st) => {
+                st.run_until(until, true);
+                take_pending_until(&mut st.pending, until)
+            }
+        }
+    }
+
+    fn drain(&mut self) -> RunOutcome {
+        let mut st = match self.st.take() {
+            Some(st) => st,
+            None => CronusState::build(&self.cfg, self.policy, self.swap_gpus),
+        };
+        st.run_until(SimTime(u64::MAX), true);
+        let report = st.metrics.report(self.label.clone());
+        debug_assert_eq!(report.n_rejected, st.n_rejected);
         RunOutcome {
             report,
             instances: vec![
                 InstanceStat {
-                    name: format!("PPI({})", ppi.perf_model().gpu.name),
-                    busy_time_s: ppi.busy_time_s,
-                    n_iterations: ppi.n_prefills,
+                    name: format!("PPI({})", st.ppi.perf_model().gpu.name),
+                    busy_time_s: st.ppi.busy_time_s,
+                    n_iterations: st.ppi.n_prefills,
                     n_preemptions: 0,
-                    tokens_prefilled: ppi.tokens_prefilled,
+                    tokens_prefilled: st.ppi.tokens_prefilled,
                     tokens_decoded: 0,
                 },
                 InstanceStat {
-                    name: cpi.name.clone(),
-                    busy_time_s: cpi.busy_time_s,
-                    n_iterations: cpi.n_iterations,
-                    n_preemptions: cpi.n_preemptions,
-                    tokens_prefilled: cpi.tokens_prefilled,
-                    tokens_decoded: cpi.tokens_decoded,
+                    name: st.cpi.name.clone(),
+                    busy_time_s: st.cpi.busy_time_s,
+                    n_iterations: st.cpi.n_iterations,
+                    n_preemptions: st.cpi.n_preemptions,
+                    tokens_prefilled: st.cpi.tokens_prefilled,
+                    tokens_decoded: st.cpi.tokens_decoded,
                 },
             ],
         }
@@ -229,6 +323,7 @@ mod tests {
     use crate::config::DeploymentConfig;
     use crate::simgpu::model_desc::LLAMA3_8B;
     use crate::simgpu::spec::{A10, A100};
+    use crate::systems::driver::replay_trace;
     use crate::workload::azure::{generate, AzureTraceConfig};
 
     fn small_trace(n: usize) -> Vec<Request> {
@@ -239,8 +334,9 @@ mod tests {
     fn cronus_serves_all_requests() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let mut sys = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "Cronus");
-        let out = sys.run(&small_trace(50));
+        let out = replay_trace(&mut sys, &small_trace(50));
         assert_eq!(out.report.n_finished, 50);
+        assert_eq!(out.report.n_rejected, 0);
         assert!(out.report.throughput_rps > 0.0);
         assert!(out.report.ttft_p99_s > 0.0);
         assert!(out.report.tbt_p99_s > 0.0);
@@ -250,7 +346,7 @@ mod tests {
     fn disagg_lh_serves_all_requests() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let mut sys = CronusSystem::new(cfg, SplitPolicy::Full, false, "Disagg. L-H");
-        let out = sys.run(&small_trace(30));
+        let out = replay_trace(&mut sys, &small_trace(30));
         assert_eq!(out.report.n_finished, 30);
         // All prefill ran on the PPI.
         let ppi = &out.instances[0];
@@ -266,7 +362,7 @@ mod tests {
         let (ppi_pm, cpi_pm) = sys.perf_models();
         assert_eq!(ppi_pm.gpu.name, "A100-80G");
         assert_eq!(cpi_pm.gpu.name, "A10");
-        let out = sys.run(&small_trace(20));
+        let out = replay_trace(&mut sys, &small_trace(20));
         assert_eq!(out.report.n_finished, 20);
     }
 
@@ -276,7 +372,7 @@ mod tests {
         // (otherwise it degenerates to disaggregated prefill).
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let mut sys = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "Cronus");
-        let out = sys.run(&small_trace(50));
+        let out = replay_trace(&mut sys, &small_trace(50));
         let ppi = &out.instances[0];
         let cpi = &out.instances[1];
         assert!(ppi.tokens_prefilled > 0, "PPI idle");
@@ -293,10 +389,80 @@ mod tests {
     fn deterministic_runs() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let trace = small_trace(25);
-        let a = CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x")
-            .run(&trace);
-        let b = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "x").run(&trace);
+        let a = replay_trace(
+            &mut CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x"),
+            &trace,
+        );
+        let b = replay_trace(
+            &mut CronusSystem::new(cfg, SplitPolicy::Balanced, false, "x"),
+            &trace,
+        );
         assert_eq!(a.report.makespan_s, b.report.makespan_s);
         assert_eq!(a.report.ttft_p99_s, b.report.ttft_p99_s);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_and_shed() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "Cronus");
+        let huge = Request {
+            id: 0,
+            arrival_ns: 0,
+            input_len: 10_000_000,
+            output_len: 8,
+        };
+        let adm = sys.submit(SimTime::ZERO, huge);
+        assert!(matches!(adm, Admission::Rejected { .. }), "{adm:?}");
+        let events = sys.advance(SimTime(u64::MAX));
+        assert!(
+            events.iter().any(|e| matches!(e, SystemEvent::Shed { id: 0, .. })),
+            "{events:?}"
+        );
+        let out = sys.drain();
+        assert_eq!(out.report.n_requests, 1);
+        assert_eq!(out.report.n_finished, 0);
+        assert_eq!(out.report.n_rejected, 1);
+    }
+
+    #[test]
+    fn online_stepping_matches_oneshot_drain() {
+        // Driving with many small `advance` steps must not change the
+        // outcome vs. letting `drain` run everything at once.
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = small_trace(20);
+
+        let mut stepped = CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x");
+        let mut n_events = 0usize;
+        for r in &trace {
+            stepped.submit(SimTime(r.arrival_ns), *r);
+        }
+        while let Some(t) = stepped.next_event_at() {
+            n_events += stepped.advance(t).len();
+        }
+        let a = stepped.drain();
+
+        let mut oneshot = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "x");
+        for r in &trace {
+            oneshot.submit(SimTime(r.arrival_ns), *r);
+        }
+        let b = oneshot.drain();
+
+        assert!(n_events > 0);
+        assert_eq!(a.report.n_finished, 20);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
+        assert_eq!(a.report.ttft_p99_s, b.report.ttft_p99_s);
+        assert_eq!(a.report.tbt_p99_s, b.report.tbt_p99_s);
+    }
+
+    #[test]
+    fn drain_resets_for_reuse() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "x");
+        let trace = small_trace(10);
+        let a = replay_trace(&mut sys, &trace);
+        let b = replay_trace(&mut sys, &trace);
+        assert_eq!(a.report.n_finished, 10);
+        assert_eq!(b.report.n_finished, 10);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
     }
 }

@@ -4,10 +4,11 @@
 //! The router is the cluster analogue of the paper's per-pair frontend:
 //! it sees only arrival-time information (request lengths and its own
 //! bookkeeping), never simulator ground truth.  Load is tracked as a
-//! *virtual backlog* per pair — outstanding tokens that drain at a rate
-//! estimated from the pair's [`PerfModel`]s — mirroring how production
-//! routers work off stale/estimated load signals rather than perfect
-//! instantaneous state.
+//! *live backlog* per pair — tokens assigned by [`Router::route`] and
+//! released by [`Router::on_completed`] when the owning
+//! [`ClusterSystem`](crate::systems::cluster::ClusterSystem) observes the
+//! pair's `Finished`/`Shed` events — so routing decisions react to what
+//! the pairs actually served, not to a virtual drain-rate guess.
 //!
 //! Three pluggable policies:
 //!
@@ -15,15 +16,29 @@
 //!   `rate_share`s (deficit form: route to the pair with the smallest
 //!   `routed / share` ratio);
 //! * [`RoutePolicy::LeastOutstandingTokens`] — route to the pair with the
-//!   fewest outstanding (assigned − drained) tokens;
+//!   fewest outstanding (assigned − completed) tokens;
 //! * [`RoutePolicy::SloAware`] — estimate each pair's TTFT for *this*
-//!   request (queue drain time + the pair's calibrated Eq. 2 prefill
+//!   request (backlog drain time + the pair's calibrated Eq. 2 prefill
 //!   predictor) and route to the minimum, so slow-prefill pairs stop
 //!   attracting long prompts before their tails blow up.
+//!
+//! `rate_share` participates in *every* policy: besides weighting
+//! round-robin, it scales each pair's assumed service capacity in the
+//! TTFT estimator ([`Router::estimated_ttft`]), so an operator boosting
+//! a pair's share makes its backlog appear to drain faster and the
+//! SLO-aware policy sends it proportionally more load.
+//!
+//! [`Router::slo_admission`] is the submit-time admission-control policy
+//! (ROADMAP item): given a TTFT SLO, it accepts only when some pair's
+//! estimate meets the target, defers (with a retry hint) when the
+//! cluster is transiently overloaded, and rejects when no pair could
+//! meet the target even when idle.
 
 use crate::config::topology::ClusterConfig;
+use crate::simclock::SimTime;
 use crate::simgpu::fit::{calibrate, PrefillCoeffs};
 use crate::simgpu::perfmodel::{IterationShape, PerfModel, PrefillSeg};
+use crate::systems::Admission;
 use crate::workload::Request;
 
 /// Routing policy of the cluster frontend.
@@ -72,18 +87,25 @@ struct PairLoad {
     drain_rate_tps: f64,
     /// The pair's calibrated Eq. 2 prefill predictor (PPI side).
     prefill: PrefillCoeffs,
-    /// Virtual backlog: assigned-but-not-yet-drained tokens.
+    /// Live backlog: assigned-but-not-yet-completed tokens.
     outstanding_tokens: f64,
     n_routed: u64,
     tokens_routed: u64,
 }
 
+impl PairLoad {
+    /// Service rate the estimator assumes: the physical estimate scaled
+    /// by the operator's `rate_share` capacity prior.
+    fn effective_drain_tps(&self) -> f64 {
+        (self.drain_rate_tps * self.rate_share).max(1e-9)
+    }
+}
+
 /// The cluster dispatcher.  Deterministic: identical construction and
-/// request sequences produce identical assignments.
+/// request/completion sequences produce identical assignments.
 pub struct Router {
     policy: RoutePolicy,
     pairs: Vec<PairLoad>,
-    last_ns: u64,
 }
 
 /// Coarse steady-state token throughput of a pair: the CPI running full
@@ -135,7 +157,7 @@ impl Router {
                 }
             })
             .collect();
-        Router { policy, pairs, last_ns: 0 }
+        Router { policy, pairs }
     }
 
     pub fn policy(&self) -> RoutePolicy {
@@ -146,7 +168,7 @@ impl Router {
         self.pairs.len()
     }
 
-    /// Current virtual backlog per pair (exposed for tests / reporting).
+    /// Current live backlog per pair (exposed for tests / reporting).
     pub fn outstanding_tokens(&self) -> Vec<f64> {
         self.pairs.iter().map(|p| p.outstanding_tokens).collect()
     }
@@ -162,31 +184,20 @@ impl Router {
     }
 
     /// Estimated TTFT of `input_len` on pair `i` right now: drain the
-    /// backlog, then run the prefix on the PPI (conservative — the CPI
-    /// usually shares the prefill).
+    /// live backlog at the pair's rate-share-scaled service rate, then
+    /// run the prefix on the PPI (conservative — the CPI usually shares
+    /// the prefill).
     pub fn estimated_ttft(&self, i: usize, input_len: usize) -> f64 {
         let p = &self.pairs[i];
-        p.outstanding_tokens / p.drain_rate_tps + p.prefill.predict(input_len)
+        p.outstanding_tokens / p.effective_drain_tps() + p.prefill.predict(input_len)
     }
 
-    /// Age the virtual backlogs to `t_ns` (arrival times are monotone in
-    /// every trace; stale timestamps are clamped).
-    fn advance_to(&mut self, t_ns: u64) {
-        if t_ns <= self.last_ns {
-            return;
-        }
-        let dt = (t_ns - self.last_ns) as f64 / 1e9;
-        self.last_ns = t_ns;
-        for p in &mut self.pairs {
-            p.outstanding_tokens = f64::max(0.0, p.outstanding_tokens - dt * p.drain_rate_tps);
-        }
-    }
-
-    /// Route one request; returns the chosen pair index and records the
-    /// load.  Ties break toward the lowest pair index, keeping the
-    /// assignment deterministic.
-    pub fn route(&mut self, req: &Request) -> usize {
-        self.advance_to(req.arrival_ns);
+    /// Pick the policy's best pair, optionally restricted to pairs whose
+    /// estimated TTFT meets `slo`.  Falls back to the unrestricted best
+    /// when no pair qualifies (callers gate admission first, so this is
+    /// a safety net, not a policy).  Ties break toward the lowest pair
+    /// index, keeping the assignment deterministic.
+    fn pick(&self, req: &Request, slo: Option<f64>) -> usize {
         let score = |p: &PairLoad, i: usize| -> f64 {
             match self.policy {
                 RoutePolicy::RoundRobin => p.n_routed as f64 / p.rate_share,
@@ -194,27 +205,108 @@ impl Router {
                 RoutePolicy::SloAware => self.estimated_ttft(i, req.input_len),
             }
         };
-        let mut best = 0usize;
-        let mut best_score = score(&self.pairs[0], 0);
-        for (i, p) in self.pairs.iter().enumerate().skip(1) {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, p) in self.pairs.iter().enumerate() {
+            if let Some(slo) = slo {
+                if self.estimated_ttft(i, req.input_len) > slo {
+                    continue;
+                }
+            }
             let s = score(p, i);
-            if s < best_score {
-                best = i;
-                best_score = s;
+            if best.map_or(true, |(_, b)| s < b) {
+                best = Some((i, s));
             }
         }
+        match best {
+            Some((i, _)) => i,
+            None => self.pick(req, None),
+        }
+    }
+
+    /// Record `req`'s load against `pair`'s live backlog.
+    fn charge(&mut self, pair: usize, req: &Request) {
         let load = (req.input_len + req.output_len) as u64;
-        let p = &mut self.pairs[best];
+        let p = &mut self.pairs[pair];
         p.outstanding_tokens += load as f64;
         p.n_routed += 1;
         p.tokens_routed += load;
+    }
+
+    /// Route one request; returns the chosen pair index and records its
+    /// load as outstanding.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let best = self.pick(req, None);
+        self.charge(best, req);
         best
     }
 
-    /// Route a whole trace (in order), returning one pair index per
-    /// request.
-    pub fn route_trace(&mut self, trace: &[Request]) -> Vec<usize> {
-        trace.iter().map(|r| self.route(r)).collect()
+    /// Route among the pairs whose estimated TTFT meets `slo_ttft_s`, so
+    /// an admission decision ("some pair can serve this in time") is
+    /// honoured by the dispatch itself, whatever the base policy.
+    pub fn route_within_slo(&mut self, req: &Request, slo_ttft_s: f64) -> usize {
+        let best = self.pick(req, Some(slo_ttft_s));
+        self.charge(best, req);
+        best
+    }
+
+    /// A request previously routed to `pair` left the system (finished
+    /// or shed): release its `tokens` from the live backlog.
+    pub fn on_completed(&mut self, pair: usize, tokens: u64) {
+        let p = &mut self.pairs[pair];
+        p.outstanding_tokens = (p.outstanding_tokens - tokens as f64).max(0.0);
+    }
+
+    /// Submit-time SLO admission control: may this request be admitted
+    /// under a TTFT target of `slo_ttft_s` seconds?
+    ///
+    /// * `Accepted` — some pair's [`estimated_ttft`](Self::estimated_ttft)
+    ///   meets the target;
+    /// * `Rejected` — no pair could meet the target even with an empty
+    ///   backlog (the prompt is inherently too slow for the SLO);
+    /// * `Deferred` — transient overload: retry once the least-loaded
+    ///   candidate's backlog should have drained below the SLO headroom.
+    pub fn slo_admission(
+        &self,
+        now: SimTime,
+        input_len: usize,
+        slo_ttft_s: f64,
+    ) -> Admission {
+        let mut best_idle = f64::INFINITY;
+        // Best pair *among those that could meet the SLO when idle* —
+        // an infeasible pair must not drive the retry hint, or a
+        // transiently loaded feasible pair would be retried on a
+        // meaningless (near-zero) backlog estimate and dropped.
+        let mut best_feasible: Option<(usize, f64)> = None;
+        for (i, p) in self.pairs.iter().enumerate() {
+            let idle = p.prefill.predict(input_len);
+            best_idle = best_idle.min(idle);
+            let est = self.estimated_ttft(i, input_len);
+            if est <= slo_ttft_s {
+                return Admission::Accepted;
+            }
+            if idle <= slo_ttft_s
+                && best_feasible.map_or(true, |(_, b)| est < b)
+            {
+                best_feasible = Some((i, est));
+            }
+        }
+        if best_idle > slo_ttft_s {
+            return Admission::Rejected {
+                reason: format!(
+                    "prefill alone needs {best_idle:.3}s > TTFT SLO {slo_ttft_s:.3}s \
+                     on every pair"
+                ),
+            };
+        }
+        // Wait until the best feasible candidate's backlog fits the SLO
+        // headroom (the Option is Some here: best_idle <= slo).
+        let (best_pair, _) = best_feasible.expect("feasible pair exists");
+        let p = &self.pairs[best_pair];
+        let headroom_tokens = (slo_ttft_s - p.prefill.predict(input_len)).max(0.0)
+            * p.effective_drain_tps();
+        let excess = (p.outstanding_tokens - headroom_tokens).max(0.0);
+        let wait_s = (excess / p.effective_drain_tps()).max(1e-3);
+        Admission::Deferred { retry_at: now.after_secs(wait_s) }
     }
 }
 
@@ -233,11 +325,15 @@ mod tests {
         stamp(&t, ArrivalProcess::AllAtOnce)
     }
 
+    fn route_all(router: &mut Router, trace: &[Request]) -> Vec<usize> {
+        trace.iter().map(|r| router.route(r)).collect()
+    }
+
     #[test]
     fn round_robin_is_fair_with_equal_shares() {
         let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::RoundRobin, &cfg);
-        router.route_trace(&trace(100, 1));
+        route_all(&mut router, &trace(100, 1));
         assert_eq!(router.routed_counts(), vec![25, 25, 25, 25]);
     }
 
@@ -247,7 +343,7 @@ mod tests {
         cfg.pairs[0].rate_share = 3.0;
         cfg.pairs[1].rate_share = 1.0;
         let mut router = Router::new(RoutePolicy::RoundRobin, &cfg);
-        router.route_trace(&trace(200, 2));
+        route_all(&mut router, &trace(200, 2));
         assert_eq!(router.routed_counts(), vec![150, 50]);
     }
 
@@ -271,7 +367,7 @@ mod tests {
     fn least_outstanding_balances_tokens() {
         let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
-        router.route_trace(&trace(400, 4));
+        route_all(&mut router, &trace(400, 4));
         let tokens = router.routed_tokens();
         let max = *tokens.iter().max().unwrap() as f64;
         let min = *tokens.iter().min().unwrap() as f64;
@@ -287,25 +383,89 @@ mod tests {
         let t = trace(1, 5);
         assert_eq!(router.route(&t[0]), 1, "idle cluster: fastest prefill wins");
         // Under sustained all-at-once load the faster pair absorbs more.
-        router.route_trace(&trace(199, 5));
+        route_all(&mut router, &trace(199, 5));
         let counts = router.routed_counts();
         assert!(counts[1] > counts[0], "slo-aware counts {counts:?}");
     }
 
     #[test]
-    fn backlog_drains_between_arrivals() {
+    fn completions_release_live_backlog() {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
-        let mut t = trace(1, 6);
-        t[0].arrival_ns = 0;
-        router.route(&t[0]);
-        assert!(router.outstanding_tokens()[0] > 0.0);
-        // An arrival far in the future sees a fully drained cluster.
-        t[0].arrival_ns = 3_600_000_000_000; // 1h
-        t[0].id = 1;
-        router.route(&t[0]);
-        let outstanding = router.outstanding_tokens();
-        assert_eq!(outstanding[1], 0.0);
+        let t = trace(1, 6);
+        let pair = router.route(&t[0]);
+        let load = (t[0].input_len + t[0].output_len) as u64;
+        assert!(router.outstanding_tokens()[pair] > 0.0);
+        router.on_completed(pair, load);
+        assert_eq!(router.outstanding_tokens()[pair], 0.0);
+        // Over-release clamps at zero instead of going negative.
+        router.on_completed(pair, load);
+        assert_eq!(router.outstanding_tokens()[pair], 0.0);
+    }
+
+    #[test]
+    fn rate_share_scales_the_slo_estimator() {
+        // Two physically identical pairs; pair 0 is given 3x the share.
+        // With equal backlogs its estimated TTFT must be lower, so the
+        // SLO-aware policy sends it the bulk of a burst.
+        let mut cfg = ClusterConfig::homogeneous(
+            2,
+            DeploymentConfig::paper(A100, A10, LLAMA3_8B),
+        );
+        cfg.pairs[0].rate_share = 3.0;
+        cfg.pairs[1].rate_share = 1.0;
+        let mut router = Router::new(RoutePolicy::SloAware, &cfg);
+        route_all(&mut router, &trace(100, 13));
+        let tokens = router.routed_tokens();
+        assert!(
+            tokens[0] > 2 * tokens[1],
+            "high-share pair should absorb most load: {tokens:?}"
+        );
+    }
+
+    #[test]
+    fn route_within_slo_skips_infeasible_pairs() {
+        // Pair 0 (T4) is listed first and wins the LOT tie on an empty
+        // cluster, but its estimated TTFT blows the SLO; the
+        // SLO-constrained route must pick the A30 pair instead so the
+        // admission decision is honoured by the dispatch.
+        let slow = PairConfig::cronus(DeploymentConfig::paper(A100, T4, LLAMA3_8B));
+        let fast = PairConfig::cronus(DeploymentConfig::paper(A100, A30, LLAMA3_8B));
+        let cfg = ClusterConfig::new(vec![slow, fast]);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        let req = trace(1, 15)[0];
+        let slow_est = router.estimated_ttft(0, req.input_len);
+        let fast_est = router.estimated_ttft(1, req.input_len);
+        assert!(fast_est < slow_est);
+        let slo = (fast_est + slow_est) / 2.0; // feasible only on pair 1
+        assert_eq!(router.route_within_slo(&req, slo), 1);
+        // With an SLO nobody meets, it falls back to the plain pick.
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        assert_eq!(router.route_within_slo(&req, 0.0), 0);
+    }
+
+    #[test]
+    fn slo_admission_accepts_defers_and_rejects() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::SloAware, &cfg);
+        let now = SimTime::ZERO;
+        // Idle cluster, generous SLO: accepted.
+        assert_eq!(router.slo_admission(now, 1000, 10.0), Admission::Accepted);
+        // An SLO below the idle prefill time of every pair: rejected.
+        assert!(matches!(
+            router.slo_admission(now, 8000, 1e-6),
+            Admission::Rejected { .. }
+        ));
+        // Pile on load until the estimate blows the SLO, then expect a
+        // deferral with a strictly future retry hint.
+        let slo = router.estimated_ttft(0, 1000) + 0.05;
+        for r in &trace(400, 14) {
+            router.route(r);
+        }
+        match router.slo_admission(now, 1000, slo) {
+            Admission::Deferred { retry_at } => assert!(retry_at > now),
+            other => panic!("expected Deferred, got {other:?}"),
+        }
     }
 
     #[test]
@@ -314,7 +474,7 @@ mod tests {
         let cfg = ClusterConfig::homogeneous(1, deployment);
         for policy in RoutePolicy::ALL {
             let mut router = Router::new(policy, &cfg);
-            let a = router.route_trace(&trace(20, 7));
+            let a = route_all(&mut router, &trace(20, 7));
             assert!(a.iter().all(|&i| i == 0), "{}", policy.name());
         }
     }
@@ -324,8 +484,8 @@ mod tests {
         let cfg = ClusterConfig::mixed(5, LLAMA3_8B);
         let t = trace(120, 8);
         for policy in RoutePolicy::ALL {
-            let a = Router::new(policy, &cfg).route_trace(&t);
-            let b = Router::new(policy, &cfg).route_trace(&t);
+            let a = route_all(&mut Router::new(policy, &cfg), &t);
+            let b = route_all(&mut Router::new(policy, &cfg), &t);
             assert_eq!(a, b, "{}", policy.name());
         }
     }

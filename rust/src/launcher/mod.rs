@@ -12,7 +12,8 @@ use crate::engine::{EngineInstance, EngineRequest};
 use crate::simgpu::fit;
 use crate::simgpu::model_desc;
 use crate::simgpu::perfmodel::PerfModel;
-use crate::systems::cluster::build_cluster_system;
+use crate::systems::cluster::{build_cluster_system, ClusterSystem};
+use crate::systems::driver::replay_trace;
 use crate::systems::{build_system, RunOutcome};
 use crate::util::rng::Rng;
 use crate::workload::arrival::{at_rate, stamp, ArrivalProcess};
@@ -45,7 +46,7 @@ pub fn max_throughput(
     trace: &[Request],
 ) -> RunOutcome {
     let trace = stamp(trace, ArrivalProcess::AllAtOnce);
-    build_system(kind, cfg).run(&trace)
+    replay_trace(build_system(kind, cfg).as_mut(), &trace)
 }
 
 /// Latency measurement (Fig. 4): fixed-interval arrivals at `rate_rps`.
@@ -56,7 +57,7 @@ pub fn latency_at_rate(
     rate_rps: f64,
 ) -> RunOutcome {
     let trace = at_rate(trace, rate_rps);
-    build_system(kind, cfg).run(&trace)
+    replay_trace(build_system(kind, cfg).as_mut(), &trace)
 }
 
 // ---------------------------------------------------------------------------
@@ -225,14 +226,13 @@ pub fn table3(opts: &ExperimentOpts) -> Table {
         for kind in [SystemKind::DisaggHighLow, SystemKind::DisaggLowHigh] {
             let out = max_throughput(kind, cfg, &trace);
             let sys_rps = out.report.throughput_rps;
-            let mut sys = CronusSystem::new(
+            let sys = CronusSystem::new(
                 cfg.clone(),
                 SplitPolicy::Full,
                 kind == SystemKind::DisaggHighLow,
                 "probe",
             );
             let (ppi_pm, cpi_pm) = sys.perf_models();
-            let _ = &mut sys;
             let prefill_cap = standalone_prefill_rps(&ppi_pm, &trace);
             let decode_cap = standalone_decode_rps(cfg, &cpi_pm, &trace);
             cells.push(format!("{:.0}%", 100.0 * sys_rps / prefill_cap));
@@ -323,14 +323,17 @@ pub fn cpi_utilization_summary(outcome: &RunOutcome) -> String {
 }
 
 /// Sweep the standard mixed-capability fleet ([`ClusterConfig::mixed`])
-/// from 1 to `max_pairs` pairs under `policy`.
+/// from 1 to `max_pairs` pairs under `policy`.  `slo_ttft_s` enables
+/// router SLO admission control (requests the cluster cannot serve
+/// within the TTFT target are shed or deferred instead of queueing).
 pub fn cluster_sweep(
     opts: &ExperimentOpts,
     policy: RoutePolicy,
     max_pairs: usize,
+    slo_ttft_s: Option<f64>,
 ) -> (Table, Vec<ClusterSweepPoint>) {
     let cluster = ClusterConfig::mixed(max_pairs.max(1), model_desc::LLAMA3_8B);
-    cluster_sweep_topology(opts, policy, &cluster)
+    cluster_sweep_topology(opts, policy, &cluster, slo_ttft_s)
 }
 
 /// Sweep an explicit topology (e.g. loaded from a `[topology]` TOML
@@ -342,13 +345,18 @@ pub fn cluster_sweep_topology(
     opts: &ExperimentOpts,
     policy: RoutePolicy,
     cluster: &ClusterConfig,
+    slo_ttft_s: Option<f64>,
 ) -> (Table, Vec<ClusterSweepPoint>) {
     let trace = stamp(&paper_trace(opts), ArrivalProcess::AllAtOnce);
     let mut table = Table::new(
         format!(
-            "Cluster scale-out, policy = {} ({} requests, all-at-once)",
+            "Cluster scale-out, policy = {} ({} requests, all-at-once{})",
             policy.name(),
-            opts.n_requests
+            opts.n_requests,
+            match slo_ttft_s {
+                Some(slo) => format!(", TTFT SLO {slo:.2}s"),
+                None => String::new(),
+            }
         ),
         &[
             "Pairs",
@@ -357,6 +365,7 @@ pub fn cluster_sweep_topology(
             "scaling",
             "TTFT p99 (s)",
             "TBT p99 (s)",
+            "shed",
             "CPI util/pair",
         ],
     );
@@ -365,7 +374,9 @@ pub fn cluster_sweep_topology(
     for n_pairs in 1..=cluster.n_pairs() {
         let cfg = ClusterConfig::new(cluster.pairs[..n_pairs].to_vec());
         let lows: Vec<&str> = cfg.pairs.iter().map(|p| p.deployment.low_gpu.name).collect();
-        let outcome = build_cluster_system(&cfg, policy).run(&trace);
+        let mut sys = ClusterSystem::new(cfg, policy).with_slo_ttft(slo_ttft_s);
+        // Driver-dropped deferrals are already folded into the report.
+        let outcome = replay_trace(&mut sys, &trace);
         if n_pairs == 1 {
             base_rps = outcome.report.throughput_rps;
         }
@@ -381,6 +392,7 @@ pub fn cluster_sweep_topology(
             format!("{scaling:.2}x"),
             format!("{:.3}", outcome.report.ttft_p99_s),
             format!("{:.4}", outcome.report.tbt_p99_s),
+            outcome.report.n_rejected.to_string(),
             cpi_utilization_summary(&outcome),
         ]);
         points.push(ClusterSweepPoint { n_pairs, outcome, scaling });
@@ -396,7 +408,7 @@ pub fn cluster_max_throughput(
     trace: &[Request],
 ) -> RunOutcome {
     let trace = stamp(trace, ArrivalProcess::AllAtOnce);
-    build_cluster_system(cfg, policy).run(&trace)
+    replay_trace(build_cluster_system(cfg, policy).as_mut(), &trace)
 }
 
 /// Cluster latency measurement (the Fig. 4 procedure lifted to N pairs):
@@ -408,7 +420,7 @@ pub fn cluster_latency_at_rate(
     rate_rps: f64,
 ) -> RunOutcome {
     let trace = at_rate(trace, rate_rps);
-    build_cluster_system(cfg, policy).run(&trace)
+    replay_trace(build_cluster_system(cfg, policy).as_mut(), &trace)
 }
 
 #[cfg(test)]
@@ -459,7 +471,7 @@ mod tests {
     fn cluster_sweep_scales_and_reports_utilization() {
         let opts = ExperimentOpts { n_requests: 60, seed: 7 };
         let (table, points) =
-            cluster_sweep(&opts, RoutePolicy::LeastOutstandingTokens, 2);
+            cluster_sweep(&opts, RoutePolicy::LeastOutstandingTokens, 2, None);
         assert_eq!(points.len(), 2);
         assert!((points[0].scaling - 1.0).abs() < 1e-9);
         assert!(
@@ -471,6 +483,21 @@ mod tests {
         let s = table.render();
         assert!(s.contains("least-outstanding"));
         assert!(s.contains('%'), "utilization column missing: {s}");
+    }
+
+    #[test]
+    fn cluster_sweep_with_slo_renders_shed_column() {
+        let opts = ExperimentOpts { n_requests: 50, seed: 7 };
+        let (table, points) =
+            cluster_sweep(&opts, RoutePolicy::SloAware, 1, Some(0.5));
+        assert_eq!(points.len(), 1);
+        let r = &points[0].outcome.report;
+        // Everything the cluster admitted finished; an all-at-once burst
+        // against a 0.5s TTFT SLO cannot admit the whole trace up front.
+        assert_eq!(r.n_finished + r.n_rejected, r.n_requests);
+        let s = table.render();
+        assert!(s.contains("TTFT SLO"), "{s}");
+        assert!(s.contains("shed"), "{s}");
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //!   the PJRT CPU client so the served tokens are real model output with
 //!   Python never on the request path.
 //!
-//! Start with [`systems`] (the `ServingSystem` trait ties everything
-//! together), or run `cargo run --example quickstart`.
+//! Start with [`systems`] — the online `ServingSystem` trait
+//! (`submit` / `advance` / `drain`) ties everything together, and
+//! [`systems::driver::replay_trace`] replays recorded traces through it
+//! for the batch experiments — or run `cargo run --example quickstart`.
 //!
 //! Beyond the paper's single pair, [`config::topology`] describes an
 //! N-pair heterogeneous cluster, [`cronus::router`] routes requests

@@ -131,6 +131,11 @@ fn main() {
                 "route policy (round-robin | least-outstanding | slo-aware)",
                 Some("least-outstanding"),
             )
+            .opt(
+                "slo-ttft-ms",
+                "TTFT SLO in ms for router admission control (0 = off)",
+                Some("0"),
+            )
             .opt("config", "TOML file with a [topology] section", None)
             .flag("help", "print usage"),
             &raw,
@@ -140,15 +145,23 @@ fn main() {
                     eprintln!("unknown route policy {policy_name:?}");
                     std::process::exit(2);
                 });
+                let slo_ms = args.get_f64("slo-ttft-ms").unwrap();
+                let slo = (slo_ms > 0.0).then_some(slo_ms / 1e3);
                 let (table, points) = match args.get("config") {
                     Some(path) => {
                         let cluster = cluster_from_toml(path);
-                        launcher::cluster_sweep_topology(&opts(args), policy, &cluster)
+                        launcher::cluster_sweep_topology(
+                            &opts(args),
+                            policy,
+                            &cluster,
+                            slo,
+                        )
                     }
                     None => launcher::cluster_sweep(
                         &opts(args),
                         policy,
                         args.get_usize("pairs").unwrap(),
+                        slo,
                     ),
                 };
                 table.print();

@@ -27,6 +27,8 @@ struct RequestRecord {
 #[derive(Default)]
 pub struct Collector {
     records: FxHashMap<ReqId, RequestRecord>,
+    /// Requests shed (rejected / dropped) instead of served.
+    n_shed: usize,
 }
 
 impl Collector {
@@ -70,6 +72,16 @@ impl Collector {
         rec.finished = Some(t);
     }
 
+    /// The request was shed (rejected at admission or dropped); it stays
+    /// in `n_requests` but is surfaced via [`Report::n_rejected`].
+    pub fn on_shed(&mut self, _req: ReqId) {
+        self.n_shed += 1;
+    }
+
+    pub fn n_shed(&self) -> usize {
+        self.n_shed
+    }
+
     pub fn n_arrived(&self) -> usize {
         self.records.len()
     }
@@ -99,7 +111,7 @@ impl Collector {
                 total_output_tokens += rec.output_tokens;
             }
         }
-        Report::from_samples(
+        let mut report = Report::from_samples(
             label,
             self.records.len(),
             finished,
@@ -108,7 +120,9 @@ impl Collector {
             ttft,
             tbt,
             e2e,
-        )
+        );
+        report.n_rejected = self.n_shed;
+        report
     }
 }
 
@@ -124,6 +138,9 @@ pub struct Report {
     pub label: String,
     pub n_requests: usize,
     pub n_finished: usize,
+    /// Requests shed instead of served (admission rejections, oversized
+    /// prompts, SLO sheds).  Counted inside `n_requests`.
+    pub n_rejected: usize,
     /// Output tokens of finished requests (defines token throughput).
     pub n_output_tokens: usize,
     pub makespan_s: f64,
@@ -162,6 +179,7 @@ impl Report {
             label: label.into(),
             n_requests,
             n_finished,
+            n_rejected: 0,
             n_output_tokens,
             makespan_s,
             throughput_rps: if makespan_s > 0.0 {
@@ -198,18 +216,20 @@ impl Report {
         let mut e2e = Vec::new();
         let mut n_requests = 0usize;
         let mut n_finished = 0usize;
+        let mut n_rejected = 0usize;
         let mut n_output_tokens = 0usize;
         let mut makespan_s = 0.0f64;
         for p in parts {
             n_requests += p.n_requests;
             n_finished += p.n_finished;
+            n_rejected += p.n_rejected;
             n_output_tokens += p.n_output_tokens;
             makespan_s = makespan_s.max(p.makespan_s);
             ttft.extend_from_slice(&p.ttft_samples);
             tbt.extend_from_slice(&p.tbt_samples);
             e2e.extend_from_slice(&p.e2e_samples);
         }
-        Report::from_samples(
+        let mut report = Report::from_samples(
             label,
             n_requests,
             n_finished,
@@ -218,11 +238,13 @@ impl Report {
             ttft,
             tbt,
             e2e,
-        )
+        );
+        report.n_rejected = n_rejected;
+        report
     }
     /// One-line summary used by benches and examples.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{:<14} {:>5}/{:<5} reqs  thpt {:>6.2} req/s ({:>7.0} tok/s)  \
              TTFT p99 {:>7.3}s  TBT p99 {:>7.4}s  makespan {:>8.2}s",
             self.label,
@@ -233,7 +255,11 @@ impl Report {
             self.ttft_p99_s,
             self.tbt_p99_s,
             self.makespan_s
-        )
+        );
+        if self.n_rejected > 0 {
+            s.push_str(&format!("  shed {}", self.n_rejected));
+        }
+        s
     }
 }
 
@@ -358,6 +384,23 @@ mod tests {
         assert!(merged.ttft_p99_s > 3.0, "p99 {}", merged.ttft_p99_s);
         assert!(merged.ttft_p50_s < 0.2);
         assert_eq!(merged.ttft_samples.len(), 10);
+    }
+
+    #[test]
+    fn shed_requests_surface_in_report_and_merge() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_shed(1);
+        c.on_arrival(2, SimTime::ZERO);
+        c.on_token(2, t(0.5));
+        c.on_finish(2, t(0.5));
+        let r = c.report("x");
+        assert_eq!(r.n_requests, 2);
+        assert_eq!(r.n_finished, 1);
+        assert_eq!(r.n_rejected, 1);
+        assert!(r.summary().contains("shed 1"), "{}", r.summary());
+        let merged = Report::merge("m", &[r.clone(), r]);
+        assert_eq!(merged.n_rejected, 2);
     }
 
     #[test]

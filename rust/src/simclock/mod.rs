@@ -118,6 +118,21 @@ impl<E> EventQueue<E> {
         self.push(self.now.after_secs(dt_secs), event);
     }
 
+    /// Advance the clock to `t` without popping an event — used by
+    /// online drivers when an external arrival lands between internal
+    /// events, so relative scheduling ([`push_after`](Self::push_after))
+    /// is anchored at the arrival instant.  Never moves backwards; the
+    /// caller must have drained every event scheduled before `t` first.
+    pub fn advance_now(&mut self, t: SimTime) {
+        debug_assert!(
+            self.peek_time().map_or(true, |pt| pt >= t),
+            "advance_now({t}) past a pending event"
+        );
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         let entry = self.heap.pop()?;
@@ -198,6 +213,18 @@ mod tests {
         assert_eq!(q.pop().unwrap(), (SimTime(20), 2));
         assert_eq!(q.pop().unwrap(), (SimTime(50), 3));
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn advance_now_moves_clock_forward_only() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.advance_now(SimTime(500));
+        assert_eq!(q.now(), SimTime(500));
+        q.advance_now(SimTime(100)); // backwards: no-op
+        assert_eq!(q.now(), SimTime(500));
+        q.push_after(1.0, 7);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime(500).after_secs(1.0));
     }
 
     #[test]

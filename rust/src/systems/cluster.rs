@@ -2,40 +2,110 @@
 //! front of N independent (high-end, low-end) pair deployments.
 //!
 //! Each pair is a full serving system of its own (Cronus by default —
-//! any [`SystemKind`] per pair); the router partitions the arriving
-//! trace across pairs online, each pair serves its share on the shared
-//! simulated clock (all pairs start at the experiment's t = 0), and the
-//! per-pair reports merge into exact cluster-wide TTFT/TBT percentiles
-//! via [`Report::merge`].  Per-pair [`InstanceStat`]s are kept, prefixed
+//! any [`SystemKind`](crate::config::SystemKind) per pair).  Requests
+//! are dispatched *at their arrival instant*: `submit` first steps every
+//! pair up to the arrival (so the router sees the completions that
+//! actually happened), routes against the live per-pair backlog, and
+//! hands the request to the chosen pair's own `submit`.  All pairs share
+//! the experiment's t = 0 clock; `drain` merges the per-pair reports
+//! into exact cluster-wide TTFT/TBT percentiles via
+//! [`Report::merge`].  Per-pair [`InstanceStat`]s are kept, prefixed
 //! `p<i>:`, so utilization imbalance across a mixed-capability fleet
 //! stays visible.
+//!
+//! With a TTFT SLO configured ([`ClusterSystem::with_slo_ttft`]), the
+//! router's [`slo_admission`](Router::slo_admission) policy runs before
+//! routing: requests the cluster cannot serve in time are `Rejected`
+//! (surfaced as [`SystemEvent::Shed`] and `Report::n_rejected`) or
+//! `Deferred` with a retry hint for the open-loop driver.
 
 use crate::config::topology::ClusterConfig;
 use crate::cronus::router::{RoutePolicy, Router};
 use crate::metrics::Report;
-use crate::systems::{build_system, InstanceStat, RunOutcome, ServingSystem};
+use crate::simclock::SimTime;
+use crate::systems::{
+    build_system, earliest_instant, take_pending_until, Admission, InstanceStat,
+    RunOutcome, ServingSystem, SystemEvent,
+};
+use crate::util::fxhash::FxHashMap;
 use crate::workload::Request;
 
 pub struct ClusterSystem {
     cfg: ClusterConfig,
     policy: RoutePolicy,
     label: String,
+    /// TTFT SLO in seconds; `None` disables admission control.
+    slo_ttft_s: Option<f64>,
+    router: Router,
+    /// One online serving system per pair, same index order as `cfg`.
+    systems: Vec<Box<dyn ServingSystem>>,
+    /// In-flight requests: id → (pair index, backlog tokens to release).
+    assigned: FxHashMap<u64, (usize, u64)>,
+    routed_counts: Vec<u64>,
+    /// Requests shed by the router itself (SLO admission), not by pairs.
+    n_router_rejected: usize,
+    /// Router-level shed events not yet collected via `advance`.
+    pending: Vec<SystemEvent>,
 }
 
 impl ClusterSystem {
     pub fn new(cfg: ClusterConfig, policy: RoutePolicy) -> ClusterSystem {
         let label = format!("{} {}", cfg.label(), policy.name());
-        ClusterSystem { cfg, policy, label }
+        let router = Router::new(policy, &cfg);
+        let systems = cfg
+            .pairs
+            .iter()
+            .map(|pair| build_system(pair.system, &pair.deployment))
+            .collect();
+        let n = cfg.n_pairs();
+        ClusterSystem {
+            cfg,
+            policy,
+            label,
+            slo_ttft_s: None,
+            router,
+            systems,
+            assigned: FxHashMap::default(),
+            routed_counts: vec![0; n],
+            n_router_rejected: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Enable TTFT SLO admission control at the router (seconds).
+    pub fn with_slo_ttft(mut self, slo_ttft_s: Option<f64>) -> ClusterSystem {
+        self.slo_ttft_s = slo_ttft_s;
+        self
     }
 
     pub fn config(&self) -> &ClusterConfig {
         &self.cfg
     }
 
-    /// Partition `trace` across the pairs with this system's policy
-    /// (exposed for tests; [`run`](ServingSystem::run) uses it).
-    pub fn route(&self, trace: &[Request]) -> Vec<usize> {
-        Router::new(self.policy, &self.cfg).route_trace(trace)
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Step every pair to `until`, feed completions back into the
+    /// router's live backlog, and buffer the merged events.
+    fn collect_until(&mut self, until: SimTime) {
+        let start = self.pending.len();
+        for (i, sys) in self.systems.iter_mut().enumerate() {
+            for ev in sys.advance(until) {
+                if let SystemEvent::Finished { id, .. } | SystemEvent::Shed { id, .. } =
+                    &ev
+                {
+                    if let Some((pair, tokens)) = self.assigned.remove(id) {
+                        debug_assert_eq!(pair, i);
+                        self.router.on_completed(pair, tokens);
+                    }
+                }
+                self.pending.push(ev);
+            }
+        }
+        // Merge the per-pair streams into one time-ordered stream (the
+        // sort is stable, so each pair's own order is preserved).
+        self.pending[start..].sort_by_key(|e| e.time());
     }
 }
 
@@ -44,19 +114,83 @@ impl ServingSystem for ClusterSystem {
         self.label.clone()
     }
 
-    fn run(&mut self, trace: &[Request]) -> RunOutcome {
-        let assignments = self.route(trace);
-        let n_pairs = self.cfg.n_pairs();
-        let mut sub_traces: Vec<Vec<Request>> = vec![Vec::new(); n_pairs];
-        for (req, &pair) in trace.iter().zip(&assignments) {
-            sub_traces[pair].push(*req);
+    fn submit(&mut self, t: SimTime, req: Request) -> Admission {
+        // Bring every pair up to just before the arrival so the router
+        // routes on what has actually completed by now.
+        self.collect_until(SimTime(t.0.saturating_sub(1)));
+
+        if let Some(slo) = self.slo_ttft_s {
+            match self.router.slo_admission(t, req.input_len, slo) {
+                Admission::Accepted => {}
+                Admission::Rejected { reason } => {
+                    self.n_router_rejected += 1;
+                    self.pending.push(SystemEvent::Shed {
+                        id: req.id,
+                        t,
+                        reason: reason.clone(),
+                    });
+                    return Admission::Rejected { reason };
+                }
+                deferred @ Admission::Deferred { .. } => return deferred,
+            }
         }
 
-        let mut reports: Vec<Report> = Vec::with_capacity(n_pairs);
+        // With an SLO, dispatch only to pairs the admission check deemed
+        // able to serve in time, whatever the base policy prefers.
+        let pair = match self.slo_ttft_s {
+            Some(slo) => self.router.route_within_slo(&req, slo),
+            None => self.router.route(&req),
+        };
+        let tokens = (req.input_len + req.output_len) as u64;
+        match self.systems[pair].submit(t, req) {
+            Admission::Accepted => {
+                self.assigned.insert(req.id, (pair, tokens));
+                self.routed_counts[pair] += 1;
+                Admission::Accepted
+            }
+            Admission::Rejected { reason } => {
+                // The pair recorded the shed itself; release the backlog
+                // the router just charged.
+                self.router.on_completed(pair, tokens);
+                self.routed_counts[pair] += 1;
+                Admission::Rejected { reason }
+            }
+            deferred @ Admission::Deferred { .. } => {
+                self.router.on_completed(pair, tokens);
+                deferred
+            }
+        }
+    }
+
+    fn next_event_at(&self) -> Option<SimTime> {
+        let mut next = earliest_instant(&self.pending, None);
+        for sys in &self.systems {
+            next = match (next, sys.next_event_at()) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        next
+    }
+
+    fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
+        self.collect_until(until);
+        take_pending_until(&mut self.pending, until)
+    }
+
+    fn drain(&mut self) -> RunOutcome {
+        // Deliver all remaining completions into the router bookkeeping.
+        self.collect_until(SimTime(u64::MAX));
+        self.pending.clear();
+
+        let mut reports: Vec<Report> = Vec::new();
         let mut instances: Vec<InstanceStat> = Vec::new();
-        for (i, (pair, sub)) in self.cfg.pairs.iter().zip(&sub_traces).enumerate() {
-            if sub.is_empty() {
-                // An idle pair still shows up in the utilization table.
+        for (i, (pair, sys)) in
+            self.cfg.pairs.iter().zip(self.systems.iter_mut()).enumerate()
+        {
+            if self.routed_counts[i] == 0 {
+                // An idle pair never got a submit (its state was never
+                // built); it still shows up in the utilization table.
                 instances.push(InstanceStat {
                     name: format!("p{i}:{} (idle)", pair.name),
                     busy_time_s: 0.0,
@@ -67,7 +201,7 @@ impl ServingSystem for ClusterSystem {
                 });
                 continue;
             }
-            let out = build_system(pair.system, &pair.deployment).run(sub);
+            let out = sys.drain();
             reports.push(out.report);
             for inst in out.instances {
                 instances.push(InstanceStat {
@@ -76,11 +210,19 @@ impl ServingSystem for ClusterSystem {
                 });
             }
         }
+        let mut report = Report::merge(self.label.clone(), &reports);
+        // Router-level sheds never reached a pair; account for them at
+        // the cluster level.
+        report.n_requests += self.n_router_rejected;
+        report.n_rejected += self.n_router_rejected;
 
-        RunOutcome {
-            report: Report::merge(self.label.clone(), &reports),
-            instances,
-        }
+        // Reset for a fresh run.
+        self.router = Router::new(self.policy, &self.cfg);
+        self.assigned = FxHashMap::default();
+        self.routed_counts = vec![0; self.cfg.n_pairs()];
+        self.n_router_rejected = 0;
+
+        RunOutcome { report, instances }
     }
 }
 
@@ -101,6 +243,7 @@ mod tests {
     use crate::cronus::frontend::CronusSystem;
     use crate::simgpu::model_desc::LLAMA3_8B;
     use crate::simgpu::spec::{A10, A100};
+    use crate::systems::driver::{replay_trace, replay_trace_collect};
     use crate::workload::arrival::{stamp, ArrivalProcess};
     use crate::workload::azure::{generate, AzureTraceConfig};
 
@@ -114,8 +257,10 @@ mod tests {
         let trace = all_at_once(40, 1);
         let deployment = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let cfg = ClusterConfig::homogeneous(1, deployment.clone());
-        let cluster = ClusterSystem::new(cfg, RoutePolicy::RoundRobin).run(&trace);
-        let bare = CronusSystem::new(deployment, SplitPolicy::Balanced, false, "x").run(&trace);
+        let mut cluster_sys = ClusterSystem::new(cfg, RoutePolicy::RoundRobin);
+        let cluster = replay_trace(&mut cluster_sys, &trace);
+        let mut bare_sys = CronusSystem::new(deployment, SplitPolicy::Balanced, false, "x");
+        let bare = replay_trace(&mut bare_sys, &trace);
         assert_eq!(cluster.report.n_finished, bare.report.n_finished);
         assert_eq!(cluster.report.makespan_s, bare.report.makespan_s);
         assert_eq!(cluster.report.ttft_p99_s, bare.report.ttft_p99_s);
@@ -126,7 +271,8 @@ mod tests {
         let trace = all_at_once(80, 2);
         for policy in RoutePolicy::ALL {
             let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
-            let out = build_cluster_system(&cfg, policy).run(&trace);
+            let mut sys = build_cluster_system(&cfg, policy);
+            let out = replay_trace(sys.as_mut(), &trace);
             assert_eq!(out.report.n_finished, 80, "{}", policy.name());
             assert_eq!(out.report.n_requests, 80);
             // Two instances (PPI + CPI) per pair.
@@ -141,10 +287,9 @@ mod tests {
         let trace = all_at_once(160, 3);
         let run = |n_pairs| {
             let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
-            build_cluster_system(&cfg, RoutePolicy::LeastOutstandingTokens)
-                .run(&trace)
-                .report
-                .throughput_rps
+            let mut sys =
+                build_cluster_system(&cfg, RoutePolicy::LeastOutstandingTokens);
+            replay_trace(sys.as_mut(), &trace).report.throughput_rps
         };
         let one = run(1);
         let four = run(4);
@@ -157,7 +302,8 @@ mod tests {
         // tail pairs idle but visible.
         let trace = all_at_once(2, 4);
         let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
-        let out = build_cluster_system(&cfg, RoutePolicy::RoundRobin).run(&trace);
+        let mut sys = build_cluster_system(&cfg, RoutePolicy::RoundRobin);
+        let out = replay_trace(sys.as_mut(), &trace);
         assert_eq!(out.report.n_finished, 2);
         let idle = out
             .instances
@@ -171,10 +317,64 @@ mod tests {
     fn cluster_runs_are_deterministic() {
         let trace = all_at_once(50, 5);
         let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
-        let a = build_cluster_system(&cfg, RoutePolicy::SloAware).run(&trace);
-        let b = build_cluster_system(&cfg, RoutePolicy::SloAware).run(&trace);
+        let mut sa = build_cluster_system(&cfg, RoutePolicy::SloAware);
+        let mut sb = build_cluster_system(&cfg, RoutePolicy::SloAware);
+        let a = replay_trace(sa.as_mut(), &trace);
+        let b = replay_trace(sb.as_mut(), &trace);
         assert_eq!(a.report.makespan_s, b.report.makespan_s);
         assert_eq!(a.report.ttft_p99_s, b.report.ttft_p99_s);
         assert_eq!(a.report.tbt_p99_s, b.report.tbt_p99_s);
+    }
+
+    #[test]
+    fn cluster_events_cover_all_requests() {
+        let trace = all_at_once(30, 6);
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens);
+        let (out, events, stats) = replay_trace_collect(&mut sys, &trace);
+        assert_eq!(out.report.n_finished, 30);
+        assert_eq!(stats.n_accepted, 30);
+        let finishes = events
+            .iter()
+            .filter(|e| matches!(e, SystemEvent::Finished { .. }))
+            .count();
+        assert_eq!(finishes, 30);
+        // Live backlog fully released at the end of the run.
+        assert!(sys.assigned.is_empty());
+    }
+
+    #[test]
+    fn slo_admission_sheds_or_defers_under_overload() {
+        // A harsh TTFT SLO on a single pair under an all-at-once burst:
+        // the first requests fit, the rest defer until the backlog
+        // drains (or drop at the driver's retry cap).  Everything that
+        // was accepted must still finish.
+        let trace = all_at_once(60, 7);
+        let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+        let mut sys =
+            ClusterSystem::new(cfg, RoutePolicy::SloAware).with_slo_ttft(Some(0.5));
+        let (out, _events, stats) = replay_trace_collect(&mut sys, &trace);
+        assert_eq!(stats.n_submitted, 60);
+        assert!(
+            stats.n_deferred > 0 || stats.n_rejected > 0,
+            "harsh SLO should defer or reject something: {stats:?}"
+        );
+        // Conservation under admission control: every trace request was
+        // accepted (and finished), rejected, or dropped at the retry cap.
+        assert_eq!(out.report.n_finished, stats.n_accepted);
+        assert_eq!(
+            stats.n_accepted + stats.n_rejected + stats.n_dropped,
+            60,
+            "{stats:?}"
+        );
+        // Driver-dropped deferrals are folded into the outcome, so the
+        // report conserves the full trace.
+        assert_eq!(out.report.n_requests, 60);
+        assert_eq!(out.report.n_finished + out.report.n_rejected, 60);
+        // No SLO: everything is served.
+        let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+        let mut open = ClusterSystem::new(cfg, RoutePolicy::SloAware);
+        let out = replay_trace(&mut open, &trace);
+        assert_eq!(out.report.n_finished, 60);
     }
 }

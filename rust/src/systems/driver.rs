@@ -1,0 +1,226 @@
+//! Open-loop trace replay over the online [`ServingSystem`] lifecycle.
+//!
+//! [`replay_trace`] is the migration bridge from the old batch
+//! `run(trace)` API: it feeds every recorded arrival to
+//! [`ServingSystem::submit`] at its arrival instant (the system drains
+//! its internal events up to each instant itself, so event processing
+//! order is identical to the old single-queue loop), honours
+//! [`Admission::Deferred`] with bounded retries, and finishes with
+//! [`ServingSystem::drain`].  Every launcher, bench, example and CLI
+//! path serves traces through this harness.
+
+use crate::simclock::SimTime;
+use crate::systems::{Admission, RunOutcome, ServingSystem, SystemEvent};
+use crate::workload::Request;
+
+/// How often a single request may be deferred by SLO admission control
+/// before the open-loop driver gives up and drops it.
+pub const MAX_DEFERRALS: usize = 32;
+
+/// Bookkeeping of one open-loop replay.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Distinct trace requests offered at least once.
+    pub n_submitted: usize,
+    pub n_accepted: usize,
+    /// Requests the system rejected outright.
+    pub n_rejected: usize,
+    /// Deferral events (a request retried N times counts N).
+    pub n_deferred: usize,
+    /// Requests dropped after [`MAX_DEFERRALS`] retries.
+    pub n_dropped: usize,
+}
+
+/// Serve a whole recorded trace through the online API, reproducing the
+/// pre-redesign batch semantics, and return the final outcome.
+///
+/// Requests the driver drops after [`MAX_DEFERRALS`] retries are folded
+/// into the outcome (`n_requests` and `n_rejected`) and surfaced as
+/// synthetic [`SystemEvent::Shed`]s by [`replay_trace_collect`], so no
+/// request ever vanishes silently.
+pub fn replay_trace(system: &mut dyn ServingSystem, trace: &[Request]) -> RunOutcome {
+    replay_trace_impl(system, trace, false).0
+}
+
+/// [`replay_trace`], additionally returning every [`SystemEvent`] the
+/// run produced (in simulation-time order per system) and the replay's
+/// admission bookkeeping.
+pub fn replay_trace_collect(
+    system: &mut dyn ServingSystem,
+    trace: &[Request],
+) -> (RunOutcome, Vec<SystemEvent>, ReplayStats) {
+    replay_trace_impl(system, trace, true)
+}
+
+fn replay_trace_impl(
+    system: &mut dyn ServingSystem,
+    trace: &[Request],
+    collect: bool,
+) -> (RunOutcome, Vec<SystemEvent>, ReplayStats) {
+    // Arrival order; the sort is stable so ties keep trace order, which
+    // matches how the old batch loop enqueued arrivals.
+    let mut arrivals: Vec<Request> = trace.to_vec();
+    arrivals.sort_by_key(|r| r.arrival_ns);
+
+    let mut stats = ReplayStats {
+        n_submitted: arrivals.len(),
+        ..ReplayStats::default()
+    };
+    // Deferred retries: (retry_at, request, attempts so far).  Rare (SLO
+    // admission only), so a linear-scan priority list is fine.
+    let mut deferred: Vec<(SimTime, Request, usize)> = Vec::new();
+    // Synthetic Shed events for requests dropped at the retry cap — the
+    // system never accepted them, so the driver records the loss.
+    let mut dropped: Vec<SystemEvent> = Vec::new();
+    let mut next_arrival = 0usize;
+
+    loop {
+        let arr_t = arrivals.get(next_arrival).map(|r| SimTime(r.arrival_ns));
+        let def = deferred
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, (t, _, _))| (t.0, *i))
+            .map(|(i, (t, _, _))| (i, *t));
+        // Earliest submission instant; trace arrivals win ties so a
+        // retried request queues behind fresh load at the same instant.
+        let (t, req, attempts) = match (arr_t, def) {
+            (None, None) => break,
+            (Some(a), Some((i, d))) if d < a => {
+                let (t, r, n) = deferred.remove(i);
+                (t, r, n)
+            }
+            (None, Some((i, _))) => {
+                let (t, r, n) = deferred.remove(i);
+                (t, r, n)
+            }
+            (Some(a), _) => {
+                let r = arrivals[next_arrival];
+                next_arrival += 1;
+                (a, r, 0)
+            }
+        };
+        if !collect {
+            // Nobody will read the event stream: discard everything up
+            // to (but excluding) the submission instant so the system's
+            // pending buffer stays bounded instead of accumulating one
+            // event per token for the whole run.
+            let _ = system.advance(SimTime(t.0.saturating_sub(1)));
+        }
+        match system.submit(t, req) {
+            Admission::Accepted => stats.n_accepted += 1,
+            Admission::Rejected { .. } => stats.n_rejected += 1,
+            Admission::Deferred { retry_at } => {
+                stats.n_deferred += 1;
+                if attempts + 1 >= MAX_DEFERRALS {
+                    stats.n_dropped += 1;
+                    dropped.push(SystemEvent::Shed {
+                        id: req.id,
+                        t,
+                        reason: format!(
+                            "dropped by the replay driver after {MAX_DEFERRALS} \
+                             deferrals"
+                        ),
+                    });
+                } else {
+                    // Always strictly later than `t` so the loop makes
+                    // progress even on a degenerate retry hint.
+                    let retry = retry_at.max(SimTime(t.0 + 1));
+                    deferred.push((retry, req, attempts + 1));
+                }
+            }
+        }
+    }
+
+    let mut events = if collect {
+        system.advance(SimTime(u64::MAX))
+    } else {
+        // Drain the tail horizon-by-horizon, dropping each slice, so
+        // peak memory is one timestamp's events rather than the run's.
+        while let Some(t) = system.next_event_at() {
+            let _ = system.advance(t);
+        }
+        Vec::new()
+    };
+    let mut outcome = system.drain();
+    if stats.n_dropped > 0 {
+        // Driver-dropped requests never reached the system's metrics;
+        // account for them here so the conservation law ("every request
+        // ends Finished or Shed") holds for the outcome too.
+        outcome.report.n_requests += stats.n_dropped;
+        outcome.report.n_rejected += stats.n_dropped;
+        events.extend(dropped);
+        events.sort_by_key(|e| e.time()); // stable: ties keep system order
+    }
+    (outcome, events, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+    use crate::config::SystemKind;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::simgpu::spec::{A10, A100};
+    use crate::systems::build_system;
+    use crate::workload::arrival::{at_rate, stamp, ArrivalProcess};
+    use crate::workload::azure::{generate, AzureTraceConfig};
+
+    #[test]
+    fn replay_serves_whole_trace_and_collects_events() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = generate(30, &AzureTraceConfig::default(), 21);
+        let trace = at_rate(&trace, 4.0);
+        let mut sys = build_system(SystemKind::Cronus, &cfg);
+        let (out, events, stats) = replay_trace_collect(sys.as_mut(), &trace);
+        assert_eq!(out.report.n_finished, 30);
+        assert_eq!(stats.n_submitted, 30);
+        assert_eq!(stats.n_accepted, 30);
+        assert_eq!(stats.n_rejected, 0);
+        let finishes = events
+            .iter()
+            .filter(|e| matches!(e, SystemEvent::Finished { .. }))
+            .count();
+        assert_eq!(finishes, 30);
+        // Events are timestamped in non-decreasing simulation order.
+        for w in events.windows(2) {
+            assert!(w[0].time() <= w[1].time());
+        }
+    }
+
+    #[test]
+    fn replay_matches_unsorted_trace_order() {
+        // replay_trace sorts by arrival; a shuffled trace with the same
+        // arrivals produces the same report.
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = generate(25, &AzureTraceConfig::default(), 22);
+        let trace = at_rate(&trace, 3.0);
+        let mut shuffled = trace.clone();
+        shuffled.reverse();
+        let mut a = build_system(SystemKind::Cronus, &cfg);
+        let mut b = build_system(SystemKind::Cronus, &cfg);
+        let ra = replay_trace(a.as_mut(), &trace);
+        let rb = replay_trace(b.as_mut(), &shuffled);
+        assert_eq!(ra.report.makespan_s, rb.report.makespan_s);
+        assert_eq!(ra.report.ttft_p99_s, rb.report.ttft_p99_s);
+    }
+
+    #[test]
+    fn replay_empty_trace_is_empty_outcome() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = build_system(SystemKind::DpChunked, &cfg);
+        let out = replay_trace(sys.as_mut(), &[]);
+        assert_eq!(out.report.n_requests, 0);
+        assert_eq!(out.report.n_finished, 0);
+    }
+
+    #[test]
+    fn all_at_once_replay_matches_batch_shape() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = generate(40, &AzureTraceConfig::default(), 23);
+        let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+        let mut sys = build_system(SystemKind::PpChunked, &cfg);
+        let out = replay_trace(sys.as_mut(), &trace);
+        assert_eq!(out.report.n_finished, 40);
+        assert!(out.report.throughput_rps > 0.0);
+    }
+}

@@ -2,17 +2,43 @@
 //! Cronus and the four baselines — implements this trait, so benches and
 //! examples can sweep them uniformly.  [`cluster`] lifts any of them to
 //! an N-pair deployment behind the cluster-level router.
+//!
+//! # Lifecycle: submit → advance → drain
+//!
+//! The API is *online and event-driven* (the shape Cronus's §4.3 dynamic
+//! balancing — and everything on the roadmap: SLO admission control,
+//! autoscaling, KV-aware routing — actually needs):
+//!
+//! 1. [`ServingSystem::submit`] hands the system one request at its
+//!    arrival instant and returns an [`Admission`] decision immediately
+//!    (systems may reject oversized prompts, or defer under an SLO
+//!    admission policy);
+//! 2. [`ServingSystem::advance`] steps the simulation up to a deadline
+//!    and returns the timestamped [`SystemEvent`]s (first tokens, decode
+//!    tokens, finishes, sheds) that became visible;
+//! 3. [`ServingSystem::next_event_at`] peeks the next internal event so
+//!    open-loop drivers can interleave arrivals with progress;
+//! 4. [`ServingSystem::drain`] runs the system to completion and yields
+//!    the final [`RunOutcome`] (report + per-instance accounting).
+//!
+//! The batch experiments of the paper are a special case:
+//! [`driver::replay_trace`] replays a recorded trace through this
+//! lifecycle and reproduces the old whole-trace semantics exactly.
 
 pub mod cluster;
+pub mod driver;
 
 use crate::baselines::{dp::DpSystem, pp::PpSystem};
 use crate::config::{DeploymentConfig, SystemKind};
-use crate::cronus::frontend::CronusSystem;
 use crate::cronus::balancer::SplitPolicy;
-use crate::metrics::Report;
+use crate::cronus::frontend::CronusSystem;
+use crate::engine::EngineEvent;
+use crate::metrics::{Collector, Report, ReqId};
+use crate::simclock::SimTime;
 use crate::workload::Request;
 
 pub use cluster::{build_cluster_system, ClusterSystem};
+pub use driver::{replay_trace, replay_trace_collect, ReplayStats};
 
 /// Per-instance accounting attached to a run (feeds Table 3).
 #[derive(Clone, Debug)]
@@ -25,19 +51,157 @@ pub struct InstanceStat {
     pub tokens_decoded: u64,
 }
 
-/// Result of serving one trace.
+/// Result of serving a workload to completion.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
     pub report: Report,
     pub instances: Vec<InstanceStat>,
 }
 
-/// A deployable serving system (one experiment subject).
+/// Admission decision returned by [`ServingSystem::submit`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Admission {
+    /// The request entered the system and will end in a
+    /// [`SystemEvent::Finished`] or [`SystemEvent::Shed`].
+    Accepted,
+    /// The request can never be served (e.g. the prompt exceeds every
+    /// KV pool, or no pair can meet the SLO even when idle).  The system
+    /// has recorded it as shed.
+    Rejected { reason: String },
+    /// The system is too loaded right now (SLO admission control); the
+    /// caller may retry at `retry_at`.  Nothing was recorded.
+    Deferred { retry_at: SimTime },
+}
+
+/// A timestamped, externally visible event returned by
+/// [`ServingSystem::advance`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SystemEvent {
+    /// Prefill finished; the request's first output token exists.
+    FirstToken { id: ReqId, t: SimTime },
+    /// One more decode token.
+    Token { id: ReqId, t: SimTime },
+    /// EOS reached; the request left the system.
+    Finished { id: ReqId, t: SimTime },
+    /// The request was dropped without being served.
+    Shed { id: ReqId, t: SimTime, reason: String },
+}
+
+impl SystemEvent {
+    pub fn time(&self) -> SimTime {
+        match self {
+            SystemEvent::FirstToken { t, .. }
+            | SystemEvent::Token { t, .. }
+            | SystemEvent::Finished { t, .. }
+            | SystemEvent::Shed { t, .. } => *t,
+        }
+    }
+
+    pub fn id(&self) -> ReqId {
+        match self {
+            SystemEvent::FirstToken { id, .. }
+            | SystemEvent::Token { id, .. }
+            | SystemEvent::Finished { id, .. }
+            | SystemEvent::Shed { id, .. } => *id,
+        }
+    }
+}
+
+/// A deployable serving system (one experiment subject), driven online.
+///
+/// Time never flows backwards: calls must use non-decreasing timestamps
+/// (`submit(t, ..)` requires every event before `t` to have been
+/// consumed, which `submit` enforces by draining them internally and
+/// handing them to the next [`advance`](Self::advance) call).
 pub trait ServingSystem {
     fn label(&self) -> String;
 
-    /// Serve the trace to completion on the simulated cluster.
-    fn run(&mut self, trace: &[Request]) -> RunOutcome;
+    /// Offer one request to the system at its arrival instant `t`.
+    fn submit(&mut self, t: SimTime, req: Request) -> Admission;
+
+    /// Time of the earliest event the system will produce, or `None`
+    /// when it is fully idle (no queued work, no in-flight iteration).
+    fn next_event_at(&self) -> Option<SimTime>;
+
+    /// Step the simulation up to and including `until`; returns every
+    /// uncollected [`SystemEvent`] with `time() <= until` (including
+    /// events produced while `submit` advanced the clock internally).
+    /// Later buffered events stay queued, so the stream a caller
+    /// assembles from successive calls is monotone in time.
+    fn advance(&mut self, until: SimTime) -> Vec<SystemEvent>;
+
+    /// Run to completion and produce the final outcome.  Uncollected
+    /// events are discarded (call `advance(SimTime(u64::MAX))` first to
+    /// keep them).  The system resets and may serve a fresh run after.
+    fn drain(&mut self) -> RunOutcome;
+}
+
+/// Shared deadline predicate for the systems' event loops: `inclusive`
+/// pops events *at* the deadline (advance); exclusive leaves them
+/// queued (submit's pre-drain, so same-instant arrivals keep the old
+/// batch loop's arrival-first tie order).
+pub(crate) fn past_deadline(t: SimTime, until: SimTime, inclusive: bool) -> bool {
+    if inclusive {
+        t > until
+    } else {
+        t >= until
+    }
+}
+
+/// Record a token-bearing engine event into a collector + pending event
+/// stream — the translation every system shares.  Returns `false` when
+/// the event needs system-specific handling (KV transfers, preemptions).
+pub(crate) fn record_engine_event(
+    metrics: &mut Collector,
+    pending: &mut Vec<SystemEvent>,
+    now: SimTime,
+    ev: EngineEvent,
+) -> bool {
+    match ev {
+        EngineEvent::FirstToken(id) => {
+            metrics.on_token(id, now);
+            pending.push(SystemEvent::FirstToken { id, t: now });
+            true
+        }
+        EngineEvent::Token(id) => {
+            metrics.on_token(id, now);
+            pending.push(SystemEvent::Token { id, t: now });
+            true
+        }
+        EngineEvent::Finished(id) => {
+            metrics.on_finish(id, now);
+            pending.push(SystemEvent::Finished { id, t: now });
+            true
+        }
+        EngineEvent::KvReceived(_) | EngineEvent::Preempted(_) => false,
+    }
+}
+
+/// Earliest visible instant of a system: the first buffered (pending)
+/// event or the next queued one — the shared `next_event_at` shape.
+pub(crate) fn earliest_instant(
+    pending: &[SystemEvent],
+    queue_next: Option<SimTime>,
+) -> Option<SimTime> {
+    match (pending.first().map(|e| e.time()), queue_next) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    }
+}
+
+/// Split off and return the prefix of `pending` with events at or
+/// before `until`; later events (buffered by submit-time processing)
+/// stay queued for a future `advance` call, keeping the returned
+/// stream monotone in time.  `pending` is always time-sorted: pushes
+/// happen in event-pop order, and submit-time pushes are never earlier
+/// than previously buffered events.
+pub(crate) fn take_pending_until(
+    pending: &mut Vec<SystemEvent>,
+    until: SimTime,
+) -> Vec<SystemEvent> {
+    let idx = pending.partition_point(|e| e.time() <= until);
+    let rest = pending.split_off(idx);
+    std::mem::replace(pending, rest)
 }
 
 /// Instantiate the system the paper calls `kind` on deployment `cfg`.

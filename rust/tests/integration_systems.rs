@@ -5,7 +5,7 @@
 use cronus::config::{DeploymentConfig, SystemKind};
 use cronus::simgpu::model_desc::{LLAMA3_8B, QWEN2_7B};
 use cronus::simgpu::spec::{A10, A100, A30};
-use cronus::systems::{build_system, RunOutcome};
+use cronus::systems::{build_system, replay_trace, RunOutcome};
 use cronus::workload::arrival::{at_rate, stamp, ArrivalProcess};
 use cronus::workload::azure::{generate, AzureTraceConfig};
 use cronus::workload::Request;
@@ -16,7 +16,7 @@ fn azure(n: usize, seed: u64) -> Vec<Request> {
 }
 
 fn run(kind: SystemKind, cfg: &DeploymentConfig, trace: &[Request]) -> RunOutcome {
-    build_system(kind, cfg).run(trace)
+    replay_trace(build_system(kind, cfg).as_mut(), trace)
 }
 
 #[test]
@@ -148,7 +148,7 @@ fn latency_shape_at_moderate_load() {
     let mut ttft = std::collections::HashMap::new();
     let mut tbt = std::collections::HashMap::new();
     for kind in SystemKind::ALL {
-        let out = build_system(kind, &cfg).run(&at_rate(&trace, rate));
+        let out = run(kind, &cfg, &at_rate(&trace, rate));
         assert_eq!(out.report.n_finished, trace.len(), "{}", kind.name());
         ttft.insert(kind.name(), out.report.ttft_p99_s);
         tbt.insert(kind.name(), out.report.tbt_p99_s);
@@ -236,10 +236,7 @@ fn cronus_ttft_less_sensitive_to_low_end_gpu_than_dp() {
     let rate = 1.2;
     let ttft = |kind, low| {
         let cfg = DeploymentConfig::paper(A100, low, LLAMA3_8B);
-        build_system(kind, &cfg)
-            .run(&at_rate(&trace, rate))
-            .report
-            .ttft_p99_s
+        run(kind, &cfg, &at_rate(&trace, rate)).report.ttft_p99_s
     };
     let dp_degradation = ttft(SystemKind::DpChunked, A10) / ttft(SystemKind::DpChunked, A30);
     let cronus_degradation = ttft(SystemKind::Cronus, A10) / ttft(SystemKind::Cronus, A30);
@@ -259,7 +256,7 @@ fn tbt_shape_on_a10_cell() {
     let rate = 0.9; // below Disagg. H-L's capacity on this cell
     let mut tbt = std::collections::HashMap::new();
     for kind in SystemKind::ALL {
-        let out = build_system(kind, &cfg).run(&at_rate(&trace, rate));
+        let out = run(kind, &cfg, &at_rate(&trace, rate));
         assert_eq!(out.report.n_finished, trace.len(), "{}", kind.name());
         tbt.insert(kind.name(), out.report.tbt_p99_s);
     }

@@ -365,7 +365,7 @@ fn prop_balancer_split_always_valid() {
 #[test]
 fn prop_systems_finish_everything() {
     use cronus::config::{DeploymentConfig, SystemKind};
-    use cronus::systems::build_system;
+    use cronus::systems::{build_system, replay_trace};
     use cronus::workload::arrival::{stamp, ArrivalProcess};
     use cronus::workload::azure::{generate, AzureTraceConfig};
     check("every system finishes every request", 12, |rng| {
@@ -379,7 +379,7 @@ fn prop_systems_finish_everything() {
         };
         let trace = stamp(&trace, process);
         let kind = SystemKind::ALL[rng.range_usize(0, 5)];
-        let out = build_system(kind, &cfg).run(&trace);
+        let out = replay_trace(build_system(kind, &cfg).as_mut(), &trace);
         PropResult::assert_eq("finished", out.report.n_finished, n).and(|| {
             PropResult::assert_true(
                 "ttft <= e2e",
@@ -387,6 +387,141 @@ fn prop_systems_finish_everything() {
             )
         })
     });
+}
+
+#[test]
+fn prop_replay_conserves_requests_and_tokens() {
+    // The online-API conservation law: every request submitted through
+    // `replay_trace` ends exactly once as Finished or Shed, its event
+    // stream carries exactly `output_len` tokens (1 FirstToken +
+    // output_len-1 Tokens), and the engines' token accounting agrees
+    // with the event stream.
+    use cronus::config::{DeploymentConfig, SystemKind};
+    use cronus::systems::{build_system, replay_trace_collect, SystemEvent};
+    use cronus::util::fxhash::FxHashMap;
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+    check("replay conserves requests and tokens", 10, |rng| {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let n = rng.range_usize(5, 50);
+        let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
+        let process = if rng.f64() < 0.5 {
+            ArrivalProcess::AllAtOnce
+        } else {
+            ArrivalProcess::Poisson {
+                rate_rps: 0.5 + rng.f64() * 6.0,
+                seed: rng.next_u64(),
+            }
+        };
+        let trace = stamp(&trace, process);
+        let kind = SystemKind::ALL[rng.range_usize(0, 5)];
+        let mut sys = build_system(kind, &cfg);
+        let (out, events, stats) = replay_trace_collect(sys.as_mut(), &trace);
+
+        let mut finished: FxHashMap<u64, usize> = FxHashMap::default();
+        let mut shed: FxHashMap<u64, usize> = FxHashMap::default();
+        let mut tokens: FxHashMap<u64, usize> = FxHashMap::default();
+        for ev in &events {
+            match ev {
+                SystemEvent::Finished { id, .. } => *finished.entry(*id).or_insert(0) += 1,
+                SystemEvent::Shed { id, .. } => *shed.entry(*id).or_insert(0) += 1,
+                SystemEvent::FirstToken { id, .. } | SystemEvent::Token { id, .. } => {
+                    *tokens.entry(*id).or_insert(0) += 1
+                }
+            }
+        }
+        // Terminal-state exactness: Finished xor Shed, exactly once.
+        for r in &trace {
+            let f = finished.get(&r.id).copied().unwrap_or(0);
+            let s = shed.get(&r.id).copied().unwrap_or(0);
+            if f + s != 1 {
+                return PropResult::Fail(format!(
+                    "request {} ended {f}x Finished / {s}x Shed",
+                    r.id
+                ));
+            }
+            let got = tokens.get(&r.id).copied().unwrap_or(0);
+            let want = if f == 1 { r.output_len } else { 0 };
+            if got != want {
+                return PropResult::Fail(format!(
+                    "request {}: {got} token events, expected {want}",
+                    r.id
+                ));
+            }
+        }
+        // Event stream vs report vs engine accounting.
+        let n_finished: usize = finished.values().sum();
+        let n_shed: usize = shed.values().sum();
+        let decoded: u64 = out.instances.iter().map(|i| i.tokens_decoded).sum();
+        let expected_decoded: u64 = trace
+            .iter()
+            .filter(|r| finished.contains_key(&r.id))
+            .map(|r| (r.output_len - 1) as u64)
+            .sum();
+        PropResult::assert_eq("report.n_finished", out.report.n_finished, n_finished)
+            .and(|| PropResult::assert_eq("report.n_rejected", out.report.n_rejected, n_shed))
+            .and(|| PropResult::assert_eq("accepted", stats.n_accepted, n_finished))
+            .and(|| {
+                PropResult::assert_true(
+                    "engine decode accounting covers the event stream",
+                    decoded >= expected_decoded,
+                )
+            })
+    });
+}
+
+#[test]
+fn online_cronus_paper_trace_matches_batch_replay() {
+    // Regression pin for the API redesign: the online single-pair Cronus
+    // driven request-by-request (explicit submit + fine-grained advance)
+    // must reproduce the replay_trace report — which preserves the
+    // pre-redesign batch event order — on the paper's workload, and the
+    // one-pair cluster must agree too.
+    use cronus::config::topology::ClusterConfig;
+    use cronus::config::{DeploymentConfig, SystemKind};
+    use cronus::cronus::router::RoutePolicy;
+    use cronus::simclock::SimTime;
+    use cronus::systems::cluster::build_cluster_system;
+    use cronus::systems::{build_system, replay_trace, ServingSystem};
+    use cronus::workload::arrival::at_rate;
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+
+    let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    let trace = generate(300, &AzureTraceConfig::default(), 42);
+    let trace = at_rate(&trace, 4.0);
+
+    let batch = replay_trace(build_system(SystemKind::Cronus, &cfg).as_mut(), &trace);
+    assert_eq!(batch.report.n_finished, 300);
+    assert!(batch.report.ttft_p50_s > 0.0);
+    assert!(batch.report.ttft_p99_s >= batch.report.ttft_p50_s);
+
+    // Hand-driven online loop: advance to every event between arrivals.
+    let mut online = build_system(SystemKind::Cronus, &cfg);
+    for r in &trace {
+        let t = SimTime(r.arrival_ns);
+        while let Some(next) = online.next_event_at() {
+            if next >= t {
+                break;
+            }
+            online.advance(next);
+        }
+        online.submit(t, *r);
+    }
+    let online_out = online.drain();
+    assert_eq!(online_out.report.n_finished, 300);
+    assert_eq!(online_out.report.ttft_p50_s, batch.report.ttft_p50_s);
+    assert_eq!(online_out.report.ttft_p99_s, batch.report.ttft_p99_s);
+    assert_eq!(online_out.report.tbt_p99_s, batch.report.tbt_p99_s);
+    assert_eq!(online_out.report.makespan_s, batch.report.makespan_s);
+
+    // One-pair cluster, same workload: identical percentiles.
+    let cluster_cfg = ClusterConfig::homogeneous(1, cfg);
+    let mut cluster = build_cluster_system(&cluster_cfg, RoutePolicy::RoundRobin);
+    let cluster_out = replay_trace(cluster.as_mut(), &trace);
+    assert_eq!(cluster_out.report.n_finished, 300);
+    assert_eq!(cluster_out.report.ttft_p50_s, batch.report.ttft_p50_s);
+    assert_eq!(cluster_out.report.ttft_p99_s, batch.report.ttft_p99_s);
+    assert_eq!(cluster_out.report.makespan_s, batch.report.makespan_s);
 }
 
 #[test]
@@ -411,7 +546,8 @@ fn prop_router_partitions_trace_exactly() {
         };
         let trace = stamp(&trace, process);
         let mut router = Router::new(policy, &cfg);
-        let assignments = router.route_trace(&trace);
+        let assignments: Vec<usize> =
+            trace.iter().map(|r| router.route(r)).collect();
         if assignments.len() != n {
             return PropResult::Fail(format!(
                 "{} assignments for {n} requests",
@@ -421,9 +557,8 @@ fn prop_router_partitions_trace_exactly() {
         if let Some(bad) = assignments.iter().find(|&&i| i >= n_pairs) {
             return PropResult::Fail(format!("pair index {bad} out of range"));
         }
-        // Partition check: rebuild the per-pair sub-traces exactly the way
-        // ClusterSystem::run does, then verify their ids form the input
-        // trace's id multiset — nothing dropped, nothing duplicated.
+        // Partition check: group ids per pair, then verify they form the
+        // input trace's id multiset — nothing dropped, nothing duplicated.
         let mut sub_ids: Vec<Vec<u64>> = vec![Vec::new(); n_pairs];
         for (req, &pair) in trace.iter().zip(&assignments) {
             sub_ids[pair].push(req.id);
@@ -456,6 +591,7 @@ fn prop_cluster_system_serves_every_request() {
     use cronus::config::topology::ClusterConfig;
     use cronus::cronus::router::RoutePolicy;
     use cronus::systems::cluster::build_cluster_system;
+    use cronus::systems::replay_trace;
     use cronus::workload::arrival::{stamp, ArrivalProcess};
     use cronus::workload::azure::{generate, AzureTraceConfig};
     check("cluster finishes everything", 8, |rng| {
@@ -465,7 +601,7 @@ fn prop_cluster_system_serves_every_request() {
         let n = rng.range_usize(4, 40);
         let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
         let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
-        let out = build_cluster_system(&cfg, policy).run(&trace);
+        let out = replay_trace(build_cluster_system(&cfg, policy).as_mut(), &trace);
         PropResult::assert_eq("finished", out.report.n_finished, n)
             .and(|| PropResult::assert_eq("arrived", out.report.n_requests, n))
     });
