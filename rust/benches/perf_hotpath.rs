@@ -3,15 +3,31 @@
 //! ops, event-queue ops, and whole-simulation iteration rate.  Used by
 //! the performance pass documented in EXPERIMENTS.md §Perf.
 //!
+//! Besides the human-readable summary, the harness emits a
+//! machine-readable `BENCH_hotpath.json` (override the path with
+//! `CRONUS_BENCH_JSON`; scale the whole-system trace with
+//! `CRONUS_BENCH_N`).  The JSON schema is stable — CI archives the file
+//! on every run so regressions are diffable across commits:
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "generated_by": "perf_hotpath",
+//!   "benchmarks": [{"name", "iters", "mean_ns", "p50_ns", "p99_ns"}, ...],
+//!   "whole_system": {"label", "n_requests", "engine_iterations",
+//!                    "wall_s", "iterations_per_s", "sim_s_per_wall_s"}
+//! }
+//! ```
+//!
 //! ```bash
 //! cargo bench --bench perf_hotpath
 //! ```
 
-use cronus::benchkit::{bench_fn, time_once};
+use cronus::benchkit::{bench_fn, time_once, JVal};
 use cronus::config::DeploymentConfig;
 use cronus::cronus::balancer::{Balancer, SplitPolicy};
 use cronus::cronus::frontend::CronusSystem;
-use cronus::engine::{EngineInstance, EngineRequest};
+use cronus::engine::{EngineInstance, EngineRequest, IterationPlan};
 use cronus::kvcache::BlockAllocator;
 use cronus::simclock::{EventQueue, SimTime};
 use cronus::simgpu::fit::calibrate;
@@ -64,6 +80,8 @@ fn main() {
     }));
 
     // --- Engine plan+complete on a realistic mixed batch ---
+    // Uses the zero-allocation scratch API exactly as the serving
+    // systems do: one reusable plan + one reusable event buffer.
     let pm = PerfModel::new(A100, LLAMA3_8B);
     let mut engine = EngineInstance::new(
         "bench", pm, LinkSpec::INFINIBAND_100G, 512, 512, 16, 400_000,
@@ -71,35 +89,75 @@ fn main() {
     for i in 0..256 {
         engine.submit(EngineRequest::whole(i, 800, 100_000)); // never finish
     }
+    let mut plan = IterationPlan::default();
+    let mut events = Vec::new();
     // Warm into steady decode state.
     for _ in 0..600 {
-        let plan = engine.plan_iteration().unwrap();
-        engine.complete_iteration(&plan);
+        assert!(engine.plan_iteration_into(&mut plan));
+        engine.complete_iteration_into(&plan, &mut events);
     }
     results.push(bench_fn("engine plan+complete (256-decode batch)", 50, 2000, || {
-        let plan = engine.plan_iteration().unwrap();
-        engine.complete_iteration(&plan);
+        engine.plan_iteration_into(&mut plan);
+        engine.complete_iteration_into(&plan, &mut events);
+    }));
+
+    // --- Engine stats snapshot (O(1) incremental counters) ---
+    let mut ctx_acc = 0usize;
+    results.push(bench_fn("engine stats() [256 running]", 100, 10_000, || {
+        ctx_acc = ctx_acc.wrapping_add(engine.stats().decode_ctx_sum);
     }));
 
     // --- Whole-system simulation rate ---
+    let n_requests: usize = std::env::var("CRONUS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
     let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
-    let trace = generate(200, &AzureTraceConfig::default(), 42);
+    let trace = generate(n_requests, &AzureTraceConfig::default(), 42);
     let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
     let (out, wall) = time_once(|| {
         let mut sys = CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x");
         replay_trace(&mut sys, &trace)
     });
     let iters = out.instances.iter().map(|i| i.n_iterations).sum::<u64>();
+    let iterations_per_s = iters as f64 / wall;
+    let sim_per_wall = out.report.makespan_s / wall;
+
     println!("\n== micro-benchmarks ==");
     for r in &results {
         println!("{}", r.summary());
     }
     println!("\n== whole-system rate ==");
     println!(
-        "cronus sim: 200 requests, {iters} engine iterations in {wall:.3}s wall \
-         ({:.0} iterations/s, {:.1} sim-s/wall-s)",
-        iters as f64 / wall,
-        out.report.makespan_s / wall
+        "cronus sim: {n_requests} requests, {iters} engine iterations in {wall:.3}s wall \
+         ({iterations_per_s:.0} iterations/s, {sim_per_wall:.1} sim-s/wall-s)",
     );
+
+    // --- Machine-readable artifact (see EXPERIMENTS.md §Perf) ---
+    let artifact = JVal::Obj(vec![
+        ("schema_version".into(), JVal::Int(1)),
+        ("generated_by".into(), JVal::Str("perf_hotpath".into())),
+        (
+            "benchmarks".into(),
+            JVal::Arr(results.iter().map(|r| r.to_jval()).collect()),
+        ),
+        (
+            "whole_system".into(),
+            JVal::Obj(vec![
+                ("label".into(), JVal::Str("cronus-sim".into())),
+                ("n_requests".into(), JVal::Int(n_requests as u64)),
+                ("engine_iterations".into(), JVal::Int(iters)),
+                ("wall_s".into(), JVal::Num(wall)),
+                ("iterations_per_s".into(), JVal::Num(iterations_per_s)),
+                ("sim_s_per_wall_s".into(), JVal::Num(sim_per_wall)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("CRONUS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&path, artifact.render() + "\n")
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("\nwrote {path}");
     std::hint::black_box(acc);
+    std::hint::black_box(ctx_acc);
 }

@@ -15,7 +15,7 @@
 use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
-use crate::engine::{EngineInstance, EngineRequest, IterationPlan};
+use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
 use crate::metrics::Collector;
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::perfmodel::PerfModel;
@@ -41,6 +41,10 @@ struct DpState {
     metrics: Collector,
     frontend: VecDeque<Request>,
     plans: [Option<IterationPlan>; 2],
+    /// Recycled plan buffers (one per engine) + shared event buffer:
+    /// the steady-state step loop allocates nothing.
+    spares: [IterationPlan; 2],
+    ev_buf: Vec<EngineEvent>,
     pending: Vec<SystemEvent>,
 }
 
@@ -73,6 +77,8 @@ impl DpState {
             metrics: Collector::new(),
             frontend: VecDeque::new(),
             plans: [None, None],
+            spares: [IterationPlan::default(), IterationPlan::default()],
+            ev_buf: Vec::new(),
             pending: Vec::new(),
         }
     }
@@ -90,9 +96,13 @@ impl DpState {
     fn handle(&mut self, now: SimTime, ev: Ev) {
         let Ev::EngineDone(which) = ev;
         let plan = self.plans[which].take().expect("done without plan");
-        for ev in self.engines[which].complete_iteration(&plan) {
+        let mut events = std::mem::take(&mut self.ev_buf);
+        self.engines[which].complete_iteration_into(&plan, &mut events);
+        for &ev in &events {
             record_engine_event(&mut self.metrics, &mut self.pending, now, ev);
         }
+        self.ev_buf = events;
+        self.spares[which] = plan;
         self.pump();
     }
 
@@ -124,9 +134,12 @@ impl DpState {
 
         for e in 0..2 {
             if self.plans[e].is_none() {
-                if let Some(plan) = self.engines[e].plan_iteration() {
+                let mut plan = std::mem::take(&mut self.spares[e]);
+                if self.engines[e].plan_iteration_into(&mut plan) {
                     self.q.push_after(plan.duration_s, Ev::EngineDone(e));
                     self.plans[e] = Some(plan);
+                } else {
+                    self.spares[e] = plan;
                 }
             }
         }

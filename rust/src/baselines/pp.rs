@@ -29,7 +29,7 @@
 use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
-use crate::engine::{EngineInstance, EngineRequest, IterationPlan};
+use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
 use crate::metrics::Collector;
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::link::LinkSpec;
@@ -63,6 +63,13 @@ struct PpState {
     next_group: usize,
     /// A group's in-flight plan while it traverses the stages.
     plans: [Option<IterationPlan>; 2],
+    /// Recycled plan buffers + shared event buffer (zero-allocation
+    /// steady state), and the stage-1 iteration time computed once at
+    /// stage-0 launch (the shape is immutable while in flight, so this
+    /// replaces a per-pass `shape.clone()`).
+    spares: [IterationPlan; 2],
+    ev_buf: Vec<EngineEvent>,
+    stage1_t: [f64; 2],
     stage0_busy: bool,
     stage1_busy: bool,
     /// Plans waiting for stage 1, by group index.
@@ -111,6 +118,9 @@ impl PpState {
             metrics: Collector::new(),
             next_group: 0,
             plans: [None, None],
+            spares: [IterationPlan::default(), IterationPlan::default()],
+            ev_buf: Vec::new(),
+            stage1_t: [0.0; 2],
             stage0_busy: false,
             stage1_busy: false,
             stage1_queue: VecDeque::new(),
@@ -146,9 +156,13 @@ impl PpState {
             Ev::Stage1Done(g) => {
                 self.stage1_busy = false;
                 let plan = self.plans[g].take().expect("stage1 without plan");
-                for ev in self.groups[g].complete_iteration(&plan) {
+                let mut events = std::mem::take(&mut self.ev_buf);
+                self.groups[g].complete_iteration_into(&plan, &mut events);
+                for &ev in &events {
                     record_engine_event(&mut self.metrics, &mut self.pending, now, ev);
                 }
+                self.ev_buf = events;
+                self.spares[g] = plan;
             }
         }
         self.pump();
@@ -159,8 +173,8 @@ impl PpState {
     fn pump(&mut self) {
         if !self.stage1_busy {
             if let Some(g) = self.stage1_queue.pop_front() {
-                let shape = self.plans[g].as_ref().map(|p| p.shape.clone()).unwrap();
-                let t = self.lo_pm.iteration_time(&shape);
+                debug_assert!(self.plans[g].is_some(), "stage1 without plan");
+                let t = self.stage1_t[g];
                 self.busy[1] += t;
                 self.stage1_busy = true;
                 self.q.push_after(t, Ev::Stage1Done(g));
@@ -174,9 +188,12 @@ impl PpState {
                 if self.plans[g].is_some() {
                     continue; // iteration already in flight
                 }
-                if let Some(plan) = self.groups[g].plan_iteration() {
+                let mut plan = std::mem::take(&mut self.spares[g]);
+                if self.groups[g].plan_iteration_into(&mut plan) {
                     let compute = self.hi_pm.iteration_time(&plan.shape);
                     let t = compute + self.comm_time(&plan.shape);
+                    // The stage-1 pass reuses the same immutable shape.
+                    self.stage1_t[g] = self.lo_pm.iteration_time(&plan.shape);
                     self.busy[0] += compute;
                     self.n_slots += 1;
                     self.plans[g] = Some(plan);
@@ -184,6 +201,8 @@ impl PpState {
                     self.next_group = 1 - g;
                     self.q.push_after(t, Ev::Stage0Done(g));
                     break;
+                } else {
+                    self.spares[g] = plan;
                 }
             }
         }

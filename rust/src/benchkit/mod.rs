@@ -1,10 +1,14 @@
 //! Minimal benchmark harness (criterion is unavailable offline).
 //!
-//! Two roles:
+//! Three roles:
 //! * wall-clock micro-benchmarks of the coordinator hot paths
 //!   ([`bench_fn`]) with warmup, repetitions and basic statistics;
 //! * experiment table formatting shared by the paper-reproduction
-//!   benches ([`Table`]).
+//!   benches ([`Table`]);
+//! * machine-readable result emission ([`JVal`]) — the perf-regression
+//!   harness (`benches/perf_hotpath.rs`) serializes its results to
+//!   `BENCH_hotpath.json` with a schema-stable layout that CI archives
+//!   (see EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
 
@@ -54,6 +58,93 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();
     let out = f();
     (out, t0.elapsed().as_secs_f64())
+}
+
+/// Minimal JSON value serializer — the writing counterpart of
+/// [`crate::util::json`] (which only parses).  Just enough for the bench
+/// artifacts: objects keep insertion order so the emitted schema is
+/// stable and diffable across runs.
+#[derive(Clone, Debug)]
+pub enum JVal {
+    Num(f64),
+    Int(u64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<JVal>),
+    Obj(Vec<(String, JVal)>),
+}
+
+impl JVal {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            // Non-finite floats have no JSON representation; emit null so
+            // a broken measurement fails schema validation loudly instead
+            // of producing unparseable output.
+            JVal::Num(x) if !x.is_finite() => out.push_str("null"),
+            JVal::Num(x) => out.push_str(&format!("{x}")),
+            JVal::Int(x) => out.push_str(&format!("{x}")),
+            JVal::Str(s) => write_escaped(s, out),
+            JVal::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JVal::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            JVal::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append `s` as a JSON string literal (quotes + escapes) to `out`.
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl BenchResult {
+    /// Schema-stable JSON object for the bench artifact.
+    pub fn to_jval(&self) -> JVal {
+        JVal::Obj(vec![
+            ("name".into(), JVal::Str(self.name.clone())),
+            ("iters".into(), JVal::Int(self.iters)),
+            ("mean_ns".into(), JVal::Num(self.mean_ns)),
+            ("p50_ns".into(), JVal::Num(self.p50_ns)),
+            ("p99_ns".into(), JVal::Num(self.p99_ns)),
+        ])
+    }
 }
 
 /// Fixed-width text table, printed like the paper's tables.
@@ -149,5 +240,52 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("x", &["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn jval_round_trips_through_own_parser() {
+        use crate::util::json;
+        let v = JVal::Obj(vec![
+            ("schema_version".into(), JVal::Int(1)),
+            (
+                "benchmarks".into(),
+                JVal::Arr(vec![JVal::Obj(vec![
+                    ("name".into(), JVal::Str("kv allocate+release".into())),
+                    ("mean_ns".into(), JVal::Num(123.456)),
+                ])]),
+            ),
+            ("quote \"esc\"\n".into(), JVal::Bool(true)),
+            ("none".into(), JVal::Num(f64::NAN)),
+        ]);
+        let text = v.render();
+        let parsed = json::parse(&text).expect("serializer must emit valid JSON");
+        assert_eq!(
+            parsed.path(&["schema_version"]).unwrap().as_f64(),
+            Some(1.0)
+        );
+        let b = &parsed.get("benchmarks").unwrap().as_arr().unwrap()[0];
+        assert_eq!(b.get("name").unwrap().as_str(), Some("kv allocate+release"));
+        assert_eq!(b.get("mean_ns").unwrap().as_f64(), Some(123.456));
+        assert_eq!(
+            parsed.get("quote \"esc\"\n").unwrap().as_bool(),
+            Some(true)
+        );
+        assert_eq!(parsed.get("none"), Some(&json::Value::Null));
+    }
+
+    #[test]
+    fn bench_result_jval_has_stable_schema() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 5,
+            mean_ns: 1.0,
+            p50_ns: 2.0,
+            p99_ns: 3.0,
+        };
+        let text = r.to_jval().render();
+        let v = crate::util::json::parse(&text).unwrap();
+        for key in ["name", "iters", "mean_ns", "p50_ns", "p99_ns"] {
+            assert!(v.get(key).is_some(), "missing key {key} in {text}");
+        }
     }
 }

@@ -59,6 +59,11 @@ struct CronusState {
     /// Request records by id (the PPI handoff needs lengths).
     reqs: FxHashMap<u64, Request>,
     cpi_plan: Option<IterationPlan>,
+    /// Recycled plan buffer: capacity survives across iterations so the
+    /// steady-state plan/complete loop allocates nothing.
+    plan_spare: IterationPlan,
+    /// Reusable engine-event buffer for `complete_iteration_into`.
+    ev_buf: Vec<EngineEvent>,
     cpi_capacity_tokens: usize,
     n_rejected: usize,
     /// Events produced but not yet collected via `advance`.
@@ -108,6 +113,8 @@ impl CronusState {
             frontend: VecDeque::new(),
             reqs: FxHashMap::default(),
             cpi_plan: None,
+            plan_spare: IterationPlan::default(),
+            ev_buf: Vec::new(),
             cpi_capacity_tokens,
             n_rejected: 0,
             pending: Vec::new(),
@@ -145,7 +152,9 @@ impl CronusState {
             }
             Ev::CpiDone => {
                 let plan = self.cpi_plan.take().expect("CpiDone without plan");
-                for ev in self.cpi.complete_iteration(&plan) {
+                let mut events = std::mem::take(&mut self.ev_buf);
+                self.cpi.complete_iteration_into(&plan, &mut events);
+                for &ev in &events {
                     if record_engine_event(&mut self.metrics, &mut self.pending, now, ev)
                     {
                         if let EngineEvent::Finished(id) = ev {
@@ -161,6 +170,9 @@ impl CronusState {
                         }
                     }
                 }
+                // Recycle both buffers for the next iteration.
+                self.ev_buf = events;
+                self.plan_spare = plan;
             }
         }
         self.pump();
@@ -185,9 +197,12 @@ impl CronusState {
         }
 
         if self.cpi_plan.is_none() {
-            if let Some(plan) = self.cpi.plan_iteration() {
+            let mut plan = std::mem::take(&mut self.plan_spare);
+            if self.cpi.plan_iteration_into(&mut plan) {
                 self.q.push_after(plan.duration_s, Ev::CpiDone);
                 self.cpi_plan = Some(plan);
+            } else {
+                self.plan_spare = plan; // keep the warmed capacity
             }
         }
     }

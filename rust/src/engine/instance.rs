@@ -1,4 +1,43 @@
 //! One GPU's inference engine: queues, KV accounting, iteration planning.
+//!
+//! # Hot-path design (EXPERIMENTS.md §Perf)
+//!
+//! The engine is the inner loop of every experiment: `plan_iteration` /
+//! `complete_iteration` run millions of times per sweep, so the data
+//! layout is chosen to make one steady-state iteration allocation-free
+//! and hash-free:
+//!
+//! * **Slab storage** — live requests sit in a dense `Vec<Slot>` with a
+//!   free-list; the `ReqId -> slot` hash map is touched only at `submit`
+//!   and on finish, never inside the iteration loop.  Slots (and their
+//!   id-map entries) are *evicted when a request finishes*, so a
+//!   long-running online engine holds memory proportional to its live
+//!   population, not to everything it ever served.
+//! * **Phase membership lists** — `running` is split into a decode list
+//!   and a prefill list, both ordered by admission sequence (the order
+//!   the old single `running` vector had).  Removal is O(1): the slot's
+//!   `epoch` is bumped, which invalidates its list entries; stale
+//!   entries are compacted away by the next planning pass, which walks
+//!   the list anyway.  This replaces the three per-plan
+//!   `iter().filter().collect()` scans and both O(n) `retain` calls of
+//!   the previous design.
+//! * **Incremental statistics** — `n_decode`, `decode_ctx_sum` and
+//!   `n_prefilling` are maintained on every phase transition, making
+//!   [`EngineInstance::stats`] and the admission headroom check O(1)
+//!   (the headroom check used to rescan `running` per admission, making
+//!   admission bursts O(n²)).
+//! * **Reusable scratch** — [`EngineInstance::plan_iteration_into`] and
+//!   [`EngineInstance::complete_iteration_into`] fill caller-owned
+//!   buffers whose capacity survives across iterations, so steady-state
+//!   planning performs zero heap allocations (verified by the
+//!   allocation-counting test in `tests/zero_alloc.rs`; the only
+//!   amortized exception is paged-KV block-list doubling as contexts
+//!   grow past a power-of-two block count).
+//!
+//! The refactor is *events-identical*: for any submission schedule the
+//! engine emits byte-for-byte the same event stream (order, ids,
+//! durations) as the previous implementation — pinned by the lockstep
+//! oracle test in `tests/events_golden.rs`.
 
 use std::collections::VecDeque;
 
@@ -12,7 +51,18 @@ use crate::simgpu::perfmodel::{IterationShape, PerfModel, PrefillSeg};
 /// What one planned iteration contains.  The driver schedules its
 /// completion `duration_s` after it starts and then feeds the plan back
 /// into [`EngineInstance::complete_iteration`].
-#[derive(Clone, Debug)]
+///
+/// A plan doubles as a *reusable scratch buffer*: pass it to
+/// [`EngineInstance::plan_iteration_into`] again after completion and
+/// its vectors are refilled in place, retaining capacity — the
+/// steady-state zero-allocation path every serving system uses.
+///
+/// Invariant: a plan handed to `complete_iteration` must have been
+/// produced by `plan_iteration`/`plan_iteration_into` on the *same*
+/// engine (clones included).  The public vectors are for inspection;
+/// hand-editing them desynchronizes the plan's internal slot bindings
+/// and completion will panic rather than mis-apply it.
+#[derive(Clone, Debug, Default)]
 pub struct IterationPlan {
     /// (request, chunk tokens, finishes local prefill?)
     pub prefill_parts: Vec<(ReqId, usize, bool)>,
@@ -25,6 +75,68 @@ pub struct IterationPlan {
     pub shape: IterationShape,
     /// Simulated duration of this iteration.
     pub duration_s: f64,
+    // Slot bindings parallel to the public vectors: `complete_iteration`
+    // resolves requests by slab index instead of re-probing the id map.
+    prefill_slots: Vec<SlotRef>,
+    decode_slots: Vec<SlotRef>,
+    recv_slots: Vec<SlotRef>,
+}
+
+impl IterationPlan {
+    /// Reset all buffers, retaining their capacity.
+    fn clear(&mut self) {
+        self.prefill_parts.clear();
+        self.decode_ids.clear();
+        self.kv_recv.clear();
+        self.shape.prefill.clear();
+        self.shape.n_decode = 0;
+        self.shape.decode_ctx_sum = 0;
+        self.duration_s = 0.0;
+        self.prefill_slots.clear();
+        self.decode_slots.clear();
+        self.recv_slots.clear();
+    }
+}
+
+/// A plan's reference to a slab slot at a specific membership epoch.
+/// Slot identity is stable between plan and completion (submission is
+/// the only slot-recycling path and cannot interleave), so completion
+/// re-checks the slot's *phase* exactly like the pre-slab
+/// implementation re-probed the request map; the recorded epoch
+/// additionally guards the prefill/recv paths, where it is equivalent
+/// to the phase check.
+#[derive(Clone, Copy, Debug, Default)]
+struct SlotRef {
+    slot: u32,
+    epoch: u32,
+}
+
+/// A membership entry in the decode or prefill list.  `seq` is the
+/// admission sequence number, which totally orders (re-)admissions and
+/// reproduces the old `running` vector's order; `epoch` validates the
+/// entry against the slot (stale entries are dropped on the next pass).
+#[derive(Clone, Copy, Debug)]
+struct Member {
+    slot: u32,
+    epoch: u32,
+    seq: u64,
+}
+
+/// One occupied (or recycled) slab slot.
+#[derive(Clone, Debug)]
+struct Slot {
+    req: EngineRequest,
+    /// Tokens already reported for this request (survives preemption so
+    /// recovered requests don't double-report).
+    emitted: usize,
+    /// Membership epoch: bumped on every list insertion/removal and on
+    /// slot recycling, so stale `Member`/`SlotRef` entries never match.
+    epoch: u32,
+    /// Admission sequence of the current admission (0 while queued
+    /// before first admission).
+    seq: u64,
+    /// Occupied (vs sitting in the free list).
+    live: bool,
 }
 
 /// Externally visible effects of a completed iteration.
@@ -39,11 +151,15 @@ pub enum EngineEvent {
     /// Prefix-KV transfer completed (the sending side may free its copy).
     KvReceived(ReqId),
     /// Request was preempted (KV freed, re-queued; it will recompute).
+    /// Reserved: currently *never emitted* — recompute-on-resume makes
+    /// preemptions externally invisible (the engine only counts them in
+    /// `n_preemptions`), and consumers treat this variant as unreachable.
     Preempted(ReqId),
 }
 
 /// Snapshot the Cronus Balancer reads (§4.3: "retrieves statistics from
-/// the chunked prefill instance").
+/// the chunked prefill instance").  Maintained incrementally; reading it
+/// is O(1).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     pub n_decode: usize,
@@ -62,14 +178,25 @@ pub struct EngineInstance {
     link: LinkSpec,
     max_batched_tokens: usize,
     max_running: usize,
+    /// Keyed by slab slot index (dense small integers), not request id.
     kv: BlockAllocator,
-    waiting: VecDeque<ReqId>,
-    /// Admission order (oldest first) — preemption evicts from the back.
-    running: Vec<ReqId>,
-    reqs: FxHashMap<ReqId, EngineRequest>,
-    /// Tokens already reported per request (survives preemption so
-    /// recovered requests don't double-report).
-    emitted: FxHashMap<ReqId, usize>,
+    /// Waiting queue of slab slot indices — preemption re-queues at the
+    /// front.
+    waiting: VecDeque<u32>,
+    /// Running decode requests, ordered by admission sequence.
+    decode_list: Vec<Member>,
+    /// Running prefill requests, ordered by admission sequence.
+    prefill_list: Vec<Member>,
+    slots: Vec<Slot>,
+    free_slots: Vec<u32>,
+    /// Request id -> slot; touched only at submit/finish boundaries.
+    by_id: FxHashMap<ReqId, u32>,
+    // --- incremental statistics (see EngineStats) ---
+    n_decode: usize,
+    decode_ctx_sum: usize,
+    n_prefilling: usize,
+    /// Monotone admission counter feeding `Member::seq`.
+    admit_counter: u64,
     // --- accounting ---
     pub busy_time_s: f64,
     pub n_iterations: u64,
@@ -97,9 +224,15 @@ impl EngineInstance {
             max_running,
             kv: BlockAllocator::new(n_blocks, block_size),
             waiting: VecDeque::new(),
-            running: Vec::new(),
-            reqs: FxHashMap::default(),
-            emitted: FxHashMap::default(),
+            decode_list: Vec::new(),
+            prefill_list: Vec::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            by_id: FxHashMap::default(),
+            n_decode: 0,
+            decode_ctx_sum: 0,
+            n_prefilling: 0,
+            admit_counter: 0,
             busy_time_s: 0.0,
             n_iterations: 0,
             n_preemptions: 0,
@@ -133,37 +266,70 @@ impl EngineInstance {
     }
 
     pub fn submit(&mut self, req: EngineRequest) {
-        debug_assert!(!self.reqs.contains_key(&req.id));
-        self.waiting.push_back(req.id);
-        self.emitted.entry(req.id).or_insert(0);
-        self.reqs.insert(req.id, req);
+        debug_assert!(
+            !self.by_id.contains_key(&req.id),
+            "request {} submitted while still live",
+            req.id
+        );
+        let id = req.id;
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                // Recycled slot: the epoch was bumped at retirement, so
+                // any stale members pointing here never match.
+                let slot = &mut self.slots[s as usize];
+                slot.req = req;
+                slot.emitted = 0;
+                slot.seq = 0;
+                slot.live = true;
+                s
+            }
+            None => {
+                let s = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    req,
+                    emitted: 0,
+                    epoch: 0,
+                    seq: 0,
+                    live: true,
+                });
+                s
+            }
+        };
+        self.by_id.insert(id, slot);
+        self.waiting.push_back(slot);
+    }
+
+    fn n_running(&self) -> usize {
+        self.n_decode + self.n_prefilling
     }
 
     pub fn has_work(&self) -> bool {
-        !self.waiting.is_empty() || !self.running.is_empty()
+        !self.waiting.is_empty() || self.n_running() > 0
     }
 
     pub fn n_in_instance(&self) -> usize {
-        self.waiting.len() + self.running.len()
+        self.waiting.len() + self.n_running()
     }
 
+    /// Requests currently tracked by the slab (waiting + running).
+    /// Finished requests are evicted, so this stays bounded by the live
+    /// population on long online runs.
+    pub fn n_tracked_requests(&self) -> usize {
+        self.by_id.len()
+    }
+
+    /// Slab capacity (high-water mark of concurrently live requests).
+    pub fn slab_size(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// O(1): all counters are maintained incrementally on phase
+    /// transitions.
     pub fn stats(&self) -> EngineStats {
-        let mut n_decode = 0;
-        let mut decode_ctx_sum = 0;
-        let mut n_prefilling = 0;
-        for id in &self.running {
-            let r = &self.reqs[id];
-            if r.is_decoding() {
-                n_decode += 1;
-                decode_ctx_sum += r.context_len();
-            } else {
-                n_prefilling += 1;
-            }
-        }
         EngineStats {
-            n_decode,
-            decode_ctx_sum,
-            n_prefilling,
+            n_decode: self.n_decode,
+            decode_ctx_sum: self.decode_ctx_sum,
+            n_prefilling: self.n_prefilling,
             waiting: self.waiting.len(),
             free_blocks: self.kv.free_blocks(),
             block_size: self.kv.block_size(),
@@ -178,92 +344,129 @@ impl EngineInstance {
     /// Plan the next iteration.  Returns `None` when there is nothing to
     /// run (caller goes idle until new work arrives).  Mutates allocator
     /// state (admissions, growth, preemptions) — the plan *will* run.
+    ///
+    /// Convenience wrapper over [`Self::plan_iteration_into`] that
+    /// allocates a fresh plan; hot loops should hold a reusable
+    /// [`IterationPlan`] and call the `_into` form instead.
     pub fn plan_iteration(&mut self) -> Option<IterationPlan> {
-        let mut events_preempt: Vec<ReqId> = Vec::new();
+        let mut plan = IterationPlan::default();
+        if self.plan_iteration_into(&mut plan) {
+            Some(plan)
+        } else {
+            None
+        }
+    }
+
+    /// Plan the next iteration into a caller-owned buffer, retaining its
+    /// capacity.  Returns `false` (with `plan` cleared) when there is
+    /// nothing to run.  Like the old `plan_iteration() -> None` path,
+    /// a `false` return is not a pure no-op: planning may still have
+    /// compacted membership lists and — when the KV pool is exhausted —
+    /// preempted victims (KV freed, request re-queued) before
+    /// discovering that nothing can run.
+    pub fn plan_iteration_into(&mut self, plan: &mut IterationPlan) -> bool {
+        plan.clear();
         let mut budget = self.max_batched_tokens;
-        let mut shape = IterationShape::default();
-        let mut prefill_parts = Vec::new();
-        let mut decode_ids = Vec::new();
-        let mut kv_recv = Vec::new();
 
         // 1. Decode-first: every running decode request gets one token.
-        let decoding: Vec<ReqId> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|id| self.reqs[id].is_decoding())
-            .collect();
-        for id in decoding {
+        //    The pass compacts stale members (preempted/finished since
+        //    the last pass) in place while it walks the list.
+        let len = self.decode_list.len();
+        let mut write = 0usize;
+        let mut read = 0usize;
+        while read < len {
             if budget == 0 {
                 break;
             }
-            // A preemption triggered by an earlier decode request in this
-            // same pass may have evicted this one — skip it.  (Preemption
-            // resets the phase to Queued, so the phase check suffices; an
-            // earlier `running.contains` scan here made planning O(n²) —
-            // see EXPERIMENTS.md §Perf.)
-            if !self.reqs[&id].is_decoding() {
+            let m = self.decode_list[read];
+            read += 1;
+            // A preemption triggered by an earlier decode request in
+            // this same pass (or an earlier retirement) bumped the
+            // slot's epoch — the entry is stale; drop it.
+            if self.slots[m.slot as usize].epoch != m.epoch {
                 continue;
             }
-            let ctx = self.reqs[&id].context_len();
+            self.decode_list[write] = m;
+            write += 1;
+            let idx = m.slot as usize;
+            let ctx = self.slots[idx].req.context_len();
             // Grow KV coverage for the token this iteration writes.
+            let mut covered = true;
             loop {
-                match self.kv.grow(id, ctx + 1) {
+                match self.kv.grow(m.slot as u64, ctx + 1) {
                     Ok(()) => break,
                     Err(_) => {
-                        if let Some(victim) = self.pick_preemption_victim(id) {
+                        if let Some(victim) = self.pick_preemption_victim(m.slot) {
                             self.preempt(victim);
-                            events_preempt.push(victim);
                         } else {
-                            break; // nothing to evict; skip this decode
+                            covered = false; // nothing to evict; skip
+                            break;
                         }
                     }
                 }
             }
-            if self.kv.tokens_of(id).map(|t| t >= ctx + 1) != Some(true) {
+            if !covered {
                 continue; // could not grow; try next iteration
             }
             budget -= 1;
-            shape.n_decode += 1;
-            shape.decode_ctx_sum += ctx;
-            decode_ids.push(id);
+            plan.shape.n_decode += 1;
+            plan.shape.decode_ctx_sum += ctx;
+            plan.decode_ids.push(self.slots[idx].req.id);
+            plan.decode_slots.push(SlotRef { slot: m.slot, epoch: m.epoch });
         }
+        if read < len {
+            // Budget ran out: keep the unvisited tail (stale entries in
+            // it are dropped by a later pass).
+            self.decode_list.copy_within(read..len, write);
+            write += len - read;
+        }
+        self.decode_list.truncate(write);
 
-        // 2. Fill remaining budget with prefill chunks (head-of-line).
-        //    (A preempted request may appear in `running` no longer —
-        //    filter against current membership.)
-        let prefilling: Vec<ReqId> = self
-            .running
-            .iter()
-            .copied()
-            .filter(|id| self.reqs[id].is_prefilling())
-            .collect();
-        for id in prefilling {
+        // 2. Fill remaining budget with prefill chunks (head-of-line),
+        //    compacting stale members the same way.
+        let len = self.prefill_list.len();
+        let mut write = 0usize;
+        let mut read = 0usize;
+        while read < len {
             if budget == 0 {
                 break;
             }
-            let r = &self.reqs[&id];
-            let remaining = r.prefill_remaining();
+            let m = self.prefill_list[read];
+            read += 1;
+            if self.slots[m.slot as usize].epoch != m.epoch {
+                continue;
+            }
+            self.prefill_list[write] = m;
+            write += 1;
+            let idx = m.slot as usize;
+            let remaining = self.slots[idx].req.prefill_remaining();
             if remaining == 0 {
                 continue;
             }
             let chunk = remaining.min(budget);
-            let done = match r.phase {
+            let done = match self.slots[idx].req.phase {
                 Phase::Prefilling { done } => done,
                 _ => 0,
             };
-            let ctx_end = r.prefill_offset + done + chunk;
-            shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end });
-            prefill_parts.push((id, chunk, chunk == remaining));
+            let ctx_end = self.slots[idx].req.prefill_offset + done + chunk;
+            plan.shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end });
+            plan.prefill_parts.push((self.slots[idx].req.id, chunk, chunk == remaining));
+            plan.prefill_slots.push(SlotRef { slot: m.slot, epoch: m.epoch });
             budget -= chunk;
         }
+        if read < len {
+            self.prefill_list.copy_within(read..len, write);
+            write += len - read;
+        }
+        self.prefill_list.truncate(write);
 
         // 3. Admit from the waiting queue.
-        while !self.waiting.is_empty() && self.running.len() < self.max_running {
-            let id = *self.waiting.front().unwrap();
-            let r = &self.reqs[&id];
-            let needs_recv = r.needs_kv_recv;
-            let local_prefill = r.local_prefill_len();
+        while !self.waiting.is_empty() && self.n_running() < self.max_running {
+            let slot = *self.waiting.front().unwrap();
+            let idx = slot as usize;
+            let needs_recv = self.slots[idx].req.needs_kv_recv;
+            let local_prefill = self.slots[idx].req.local_prefill_len();
+            let input_len = self.slots[idx].req.input_len;
             // Recv-only admissions don't consume token budget; compute
             // admissions need budget for at least one token.
             if !needs_recv && budget == 0 {
@@ -272,25 +475,24 @@ impl EngineInstance {
             // Admission watermark: beyond the prompt itself, keep one
             // spare block per running decode request so near-term decode
             // growth doesn't immediately preempt what we just admitted.
-            let headroom_blocks = self
-                .running
-                .iter()
-                .filter(|id| self.reqs[id].is_decoding())
-                .count();
-            let need = self.kv.blocks_for(r.input_len) + headroom_blocks;
+            // `n_decode` is maintained incrementally — this check used
+            // to rescan `running` per admission.
+            let need = self.kv.blocks_for(input_len) + self.n_decode;
             if need > self.kv.free_blocks() {
                 break; // head-of-line blocking, as in vLLM
             }
-            self.kv.allocate(id, r.input_len).expect("checked can_allocate");
+            self.kv
+                .allocate(slot as u64, input_len)
+                .expect("checked can_allocate");
             self.waiting.pop_front();
-            self.running.push(id);
-            let r = self.reqs.get_mut(&id).unwrap();
-            r.phase = Phase::Prefilling { done: 0 };
+            self.admit(slot);
             if needs_recv {
                 // First iteration = KV transfer, replacing this request's
                 // compute (it contributes nothing else this iteration).
-                kv_recv.push((id, r.prefill_offset));
-                r.needs_kv_recv = false;
+                let offset = self.slots[idx].req.prefill_offset;
+                plan.kv_recv.push((self.slots[idx].req.id, offset));
+                plan.recv_slots.push(SlotRef { slot, epoch: self.slots[idx].epoch });
+                self.slots[idx].req.needs_kv_recv = false;
             } else {
                 let chunk = local_prefill.min(budget);
                 if chunk == 0 {
@@ -298,169 +500,397 @@ impl EngineInstance {
                     // (offset 0 => local == input >= 1), but guard anyway.
                     continue;
                 }
-                shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end: chunk });
-                prefill_parts.push((id, chunk, chunk == local_prefill));
+                plan.shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end: chunk });
+                plan.prefill_parts.push((
+                    self.slots[idx].req.id,
+                    chunk,
+                    chunk == local_prefill,
+                ));
+                plan.prefill_slots.push(SlotRef { slot, epoch: self.slots[idx].epoch });
                 budget -= chunk;
             }
         }
 
-        if shape.is_empty() && kv_recv.is_empty() {
-            return None;
+        if plan.shape.is_empty() && plan.kv_recv.is_empty() {
+            return false;
         }
 
         // 4. Timing: compute time of the batch, overlapped with the
         //    longest KV transfer (Fig. 2: transfers hide behind other
         //    requests' compute; an uncovered remainder extends the
         //    iteration).
-        let compute_t = self.pm.iteration_time(&shape);
-        let transfer_t = kv_recv
+        let compute_t = self.pm.iteration_time(&plan.shape);
+        let transfer_t = plan
+            .kv_recv
             .iter()
             .map(|(_, tokens)| {
                 self.link
                     .kv_transfer_time(*tokens, self.pm.model.kv_bytes_per_token())
             })
             .fold(0.0f64, f64::max);
-        let duration_s = compute_t.max(transfer_t);
+        plan.duration_s = compute_t.max(transfer_t);
 
         self.n_iterations += 1;
-        self.busy_time_s += duration_s;
-
-        Some(IterationPlan { prefill_parts, decode_ids, kv_recv, shape, duration_s })
+        self.busy_time_s += plan.duration_s;
+        true
     }
 
     /// Apply a completed iteration; returns the externally visible events
-    /// (tokens, finishes, completed transfers).  Preemptions performed at
-    /// planning time are reported here too via the internal queue.
+    /// (tokens, finishes, completed transfers).
+    ///
+    /// Convenience wrapper over [`Self::complete_iteration_into`]; hot
+    /// loops should reuse an event buffer instead.
     pub fn complete_iteration(&mut self, plan: &IterationPlan) -> Vec<EngineEvent> {
         let mut events = Vec::new();
+        self.complete_iteration_into(plan, &mut events);
+        events
+    }
 
-        for (id, tokens) in &plan.kv_recv {
-            events.push(EngineEvent::KvReceived(*id));
-            self.tokens_prefilled += *tokens as u64; // context made present
+    /// Apply a completed iteration, writing the externally visible
+    /// events into a caller-owned buffer (cleared first, capacity
+    /// retained).
+    pub fn complete_iteration_into(
+        &mut self,
+        plan: &IterationPlan,
+        events: &mut Vec<EngineEvent>,
+    ) {
+        events.clear();
+
+        for (k, &(id, tokens)) in plan.kv_recv.iter().enumerate() {
+            events.push(EngineEvent::KvReceived(id));
+            self.tokens_prefilled += tokens as u64; // context made present
+            let sr = plan.recv_slots[k];
+            debug_assert_eq!(self.slots[sr.slot as usize].epoch, sr.epoch);
             // If nothing remains to prefill locally (full disaggregation),
             // the handoff iteration yields the first token.
-            let r = self.reqs.get_mut(id).unwrap();
-            if r.local_prefill_len() == 0 {
-                self.finish_prefill(*id, &mut events);
+            if self.slots[sr.slot as usize].req.local_prefill_len() == 0 {
+                self.finish_prefill(sr.slot, events);
             }
         }
 
-        for (id, chunk, finishes) in &plan.prefill_parts {
-            let r = match self.reqs.get_mut(id) {
-                Some(r) if r.is_prefilling() => r,
-                _ => continue, // preempted later in the same planning pass
-            };
-            let done = match r.phase {
+        for (k, &(_id, chunk, finishes)) in plan.prefill_parts.iter().enumerate() {
+            let sr = plan.prefill_slots[k];
+            let idx = sr.slot as usize;
+            if self.slots[idx].epoch != sr.epoch || !self.slots[idx].req.is_prefilling() {
+                continue; // preempted later in the same planning pass
+            }
+            let done = match self.slots[idx].req.phase {
                 Phase::Prefilling { done } => done,
                 _ => 0,
             };
-            r.phase = Phase::Prefilling { done: done + chunk };
-            self.tokens_prefilled += *chunk as u64;
-            if *finishes {
-                self.finish_prefill(*id, &mut events);
+            self.slots[idx].req.phase = Phase::Prefilling { done: done + chunk };
+            self.tokens_prefilled += chunk as u64;
+            if finishes {
+                self.finish_prefill(sr.slot, events);
             }
         }
 
-        for id in &plan.decode_ids {
-            let r = match self.reqs.get_mut(id) {
-                Some(r) if r.is_decoding() => r,
-                _ => continue,
-            };
-            if let Phase::Decoding { generated } = r.phase {
+        for (k, &id) in plan.decode_ids.iter().enumerate() {
+            let sr = plan.decode_slots[k];
+            let idx = sr.slot as usize;
+            // Gate on the slot's *phase*, not its epoch: a request
+            // preempted later in the same planning pass is Queued (skip,
+            // as before) — but one preempted, re-admitted *and* fully
+            // re-prefilled within this very iteration is Decoding again
+            // via recovery, and the original engine applies its planned
+            // decode step in that case.  Slot identity is stable between
+            // plan and complete (submissions are the only slot-recycling
+            // path and cannot interleave), so the phase check reproduces
+            // the old `reqs.get_mut(id)`-based behaviour exactly.
+            if let Phase::Decoding { generated } = self.slots[idx].req.phase {
                 let new_gen = generated + 1;
-                r.phase = Phase::Decoding { generated: new_gen };
+                self.slots[idx].req.phase = Phase::Decoding { generated: new_gen };
+                self.decode_ctx_sum += 1; // this request's context grew by one
                 self.tokens_decoded += 1;
-                let emitted = self.emitted.get_mut(id).unwrap();
-                if new_gen > *emitted {
-                    *emitted = new_gen;
-                    events.push(EngineEvent::Token(*id));
+                if new_gen > self.slots[idx].emitted {
+                    self.slots[idx].emitted = new_gen;
+                    events.push(EngineEvent::Token(id));
                 }
-                if new_gen >= r.output_len {
-                    r.phase = Phase::Finished;
-                    events.push(EngineEvent::Finished(*id));
-                    self.retire(*id);
+                if new_gen >= self.slots[idx].req.output_len {
+                    self.slots[idx].req.phase = Phase::Finished;
+                    events.push(EngineEvent::Finished(id));
+                    self.n_decode -= 1;
+                    self.decode_ctx_sum -= self.slots[idx].req.input_len + new_gen;
+                    self.retire(sr.slot);
                 }
             }
         }
-
-        events
     }
 
     /// Transition a request from prefill to decode, emitting its first
     /// token (unless it is recovering from preemption and already did).
-    fn finish_prefill(&mut self, id: ReqId, events: &mut Vec<EngineEvent>) {
-        let emitted = *self.emitted.get(&id).unwrap_or(&0);
-        let r = self.reqs.get_mut(&id).unwrap();
+    /// The caller guarantees the slot currently counts as prefilling.
+    fn finish_prefill(&mut self, slot: u32, events: &mut Vec<EngineEvent>) {
+        let idx = slot as usize;
+        let id = self.slots[idx].req.id;
+        let emitted = self.slots[idx].emitted;
+        // Leaving the prefill membership whatever happens next.
+        self.n_prefilling -= 1;
+        self.slots[idx].epoch = self.slots[idx].epoch.wrapping_add(1);
         if emitted == 0 {
-            r.phase = Phase::Decoding { generated: 1 };
+            self.slots[idx].req.phase = Phase::Decoding { generated: 1 };
             events.push(EngineEvent::FirstToken(id));
-            *self.emitted.get_mut(&id).unwrap() = 1;
-            if r.output_len <= 1 {
-                r.phase = Phase::Finished;
+            self.slots[idx].emitted = 1;
+            if self.slots[idx].req.output_len <= 1 {
+                self.slots[idx].req.phase = Phase::Finished;
                 events.push(EngineEvent::Finished(id));
-                self.retire(id);
+                self.retire(slot);
+            } else {
+                self.enter_decode(slot, 1);
             }
         } else {
             // Preemption recovery: resume where the request left off.
-            r.phase = Phase::Decoding { generated: emitted };
-            if emitted >= r.output_len {
-                r.phase = Phase::Finished;
+            self.slots[idx].req.phase = Phase::Decoding { generated: emitted };
+            if emitted >= self.slots[idx].req.output_len {
+                self.slots[idx].req.phase = Phase::Finished;
                 events.push(EngineEvent::Finished(id));
-                self.retire(id);
+                self.retire(slot);
+            } else {
+                self.enter_decode(slot, emitted);
             }
         }
     }
 
-    fn retire(&mut self, id: ReqId) {
-        self.running.retain(|x| *x != id);
-        let _ = self.kv.release(id);
+    /// Add a slot to the decode membership, keeping the list ordered by
+    /// admission sequence (prefill→decode transitions can complete out
+    /// of admission order when KV transfers are in play).
+    fn enter_decode(&mut self, slot: u32, generated: usize) {
+        let idx = slot as usize;
+        self.n_decode += 1;
+        self.decode_ctx_sum += self.slots[idx].req.input_len + generated;
+        let seq = self.slots[idx].seq;
+        let m = Member { slot, epoch: self.slots[idx].epoch, seq };
+        let pos = self.decode_list.partition_point(|x| x.seq < seq);
+        self.decode_list.insert(pos, m);
+    }
+
+    /// Mark the head-of-queue slot admitted: fresh admission sequence,
+    /// fresh epoch, prefill membership.
+    fn admit(&mut self, slot: u32) {
+        let idx = slot as usize;
+        self.admit_counter += 1;
+        self.slots[idx].seq = self.admit_counter;
+        self.slots[idx].epoch = self.slots[idx].epoch.wrapping_add(1);
+        self.slots[idx].req.phase = Phase::Prefilling { done: 0 };
+        self.n_prefilling += 1;
+        self.prefill_list.push(Member {
+            slot,
+            epoch: self.slots[idx].epoch,
+            seq: self.admit_counter,
+        });
+    }
+
+    /// Drop a finished request: KV freed, id mapping evicted, slot
+    /// recycled.  Phase counters are the caller's responsibility (the
+    /// request may leave from decode or directly from prefill).
+    fn retire(&mut self, slot: u32) {
+        let idx = slot as usize;
+        let _ = self.kv.release(slot as u64);
+        self.slots[idx].epoch = self.slots[idx].epoch.wrapping_add(1);
+        self.by_id.remove(&self.slots[idx].req.id);
+        self.slots[idx].live = false;
+        self.free_slots.push(slot);
     }
 
     /// Preemption victim: the youngest running request other than
     /// `protect` (vLLM's recompute policy evicts latest-admitted first).
-    fn pick_preemption_victim(&self, protect: ReqId) -> Option<ReqId> {
-        self.running.iter().rev().copied().find(|id| *id != protect)
-    }
-
-    fn preempt(&mut self, id: ReqId) {
-        self.n_preemptions += 1;
-        let _ = self.kv.release(id);
-        self.running.retain(|x| *x != id);
-        let r = self.reqs.get_mut(&id).unwrap();
-        // Recompute everything locally on resume: the engine holds the
-        // full model + prompt, so a lost transferred prefix is rebuilt.
-        r.prefill_offset = 0;
-        r.needs_kv_recv = false;
-        r.phase = Phase::Queued;
-        self.waiting.push_front(id);
-    }
-
-    /// Consistency checks for property tests.
-    pub fn check_invariants(&self) -> Result<(), String> {
-        self.kv.check_invariants()?;
-        for id in &self.running {
-            let r = self.reqs.get(id).ok_or("running id without record")?;
-            if matches!(r.phase, Phase::Queued | Phase::Finished) {
-                return Err(format!("running request {id} in phase {:?}", r.phase));
+    /// Rare path — only runs when the KV pool is exhausted — so the
+    /// reverse scans over possibly-stale tails are fine.
+    fn pick_preemption_victim(&self, protect: u32) -> Option<u32> {
+        let d = self.last_valid_member(&self.decode_list, protect);
+        let p = self.last_valid_member(&self.prefill_list, protect);
+        match (d, p) {
+            (Some((ds, dslot)), Some((ps, pslot))) => {
+                if ds > ps {
+                    Some(dslot)
+                } else {
+                    Some(pslot)
+                }
             }
-            if !self.kv.holds(*id) {
-                return Err(format!("running request {id} without KV"));
+            (Some((_, s)), None) | (None, Some((_, s))) => Some(s),
+            (None, None) => None,
+        }
+    }
+
+    /// Latest-admitted valid member of a list, excluding `protect`.
+    fn last_valid_member(&self, list: &[Member], protect: u32) -> Option<(u64, u32)> {
+        list.iter()
+            .rev()
+            .find(|m| {
+                m.slot != protect && self.slots[m.slot as usize].epoch == m.epoch
+            })
+            .map(|m| (m.seq, m.slot))
+    }
+
+    fn preempt(&mut self, slot: u32) {
+        self.n_preemptions += 1;
+        let idx = slot as usize;
+        match self.slots[idx].req.phase {
+            Phase::Decoding { generated } => {
+                self.n_decode -= 1;
+                self.decode_ctx_sum -= self.slots[idx].req.input_len + generated;
+            }
+            _ => {
+                self.n_prefilling -= 1;
             }
         }
-        for id in &self.waiting {
-            let r = self.reqs.get(id).ok_or("waiting id without record")?;
-            if !matches!(r.phase, Phase::Queued) {
-                return Err(format!("waiting request {id} in phase {:?}", r.phase));
+        let _ = self.kv.release(slot as u64);
+        // Invalidate the membership entry (compacted away by the next
+        // planning pass) instead of an O(n) `retain`.
+        self.slots[idx].epoch = self.slots[idx].epoch.wrapping_add(1);
+        // Recompute everything locally on resume: the engine holds the
+        // full model + prompt, so a lost transferred prefix is rebuilt.
+        self.slots[idx].req.prefill_offset = 0;
+        self.slots[idx].req.needs_kv_recv = false;
+        self.slots[idx].req.phase = Phase::Queued;
+        self.waiting.push_front(slot);
+    }
+
+    /// Consistency checks for property tests: membership lists, slab
+    /// occupancy, id map, KV holdings and the incremental statistics all
+    /// have to agree with one another.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.kv.check_invariants()?;
+        let mut seen = vec![false; self.slots.len()];
+        let mut n_dec = 0usize;
+        let mut ctx_sum = 0usize;
+        let mut n_pre = 0usize;
+
+        let mut last_seq = 0u64;
+        for m in &self.decode_list {
+            if m.seq < last_seq {
+                return Err("decode list out of admission order".into());
             }
-            if self.kv.holds(*id) {
-                return Err(format!("waiting request {id} holds KV"));
+            last_seq = m.seq;
+            let slot = &self.slots[m.slot as usize];
+            if slot.epoch != m.epoch {
+                continue; // stale entry awaiting compaction
             }
+            if seen[m.slot as usize] {
+                return Err(format!("slot {} in two memberships", m.slot));
+            }
+            seen[m.slot as usize] = true;
+            if !slot.live {
+                return Err(format!("decode member for dead slot {}", m.slot));
+            }
+            match slot.req.phase {
+                Phase::Decoding { generated } => {
+                    n_dec += 1;
+                    ctx_sum += slot.req.input_len + generated;
+                }
+                other => {
+                    return Err(format!(
+                        "decode member {} in phase {other:?}",
+                        slot.req.id
+                    ))
+                }
+            }
+            if !self.kv.holds(m.slot as u64) {
+                return Err(format!("running request {} without KV", slot.req.id));
+            }
+        }
+
+        let mut last_seq = 0u64;
+        for m in &self.prefill_list {
+            if m.seq < last_seq {
+                return Err("prefill list out of admission order".into());
+            }
+            last_seq = m.seq;
+            let slot = &self.slots[m.slot as usize];
+            if slot.epoch != m.epoch {
+                continue;
+            }
+            if seen[m.slot as usize] {
+                return Err(format!("slot {} in two memberships", m.slot));
+            }
+            seen[m.slot as usize] = true;
+            if !slot.live {
+                return Err(format!("prefill member for dead slot {}", m.slot));
+            }
+            if !matches!(slot.req.phase, Phase::Prefilling { .. }) {
+                return Err(format!(
+                    "prefill member {} in phase {:?}",
+                    slot.req.id, slot.req.phase
+                ));
+            }
+            n_pre += 1;
+            if !self.kv.holds(m.slot as u64) {
+                return Err(format!("running request {} without KV", slot.req.id));
+            }
+        }
+
+        for &w in &self.waiting {
+            let slot = &self.slots[w as usize];
+            if !slot.live {
+                return Err(format!("waiting entry for dead slot {w}"));
+            }
+            if seen[w as usize] {
+                return Err(format!("waiting slot {w} also running"));
+            }
+            seen[w as usize] = true;
+            if !matches!(slot.req.phase, Phase::Queued) {
+                return Err(format!(
+                    "waiting request {} in phase {:?}",
+                    slot.req.id, slot.req.phase
+                ));
+            }
+            if self.kv.holds(w as u64) {
+                return Err(format!("waiting request {} holds KV", slot.req.id));
+            }
+        }
+
+        if n_dec != self.n_decode
+            || ctx_sum != self.decode_ctx_sum
+            || n_pre != self.n_prefilling
+        {
+            return Err(format!(
+                "incremental stats drift: decode {}/{} ctx {}/{} prefill {}/{}",
+                self.n_decode, n_dec, self.decode_ctx_sum, ctx_sum, self.n_prefilling, n_pre
+            ));
+        }
+
+        let live = self.slots.iter().filter(|s| s.live).count();
+        if live != n_dec + n_pre + self.waiting.len() {
+            return Err(format!(
+                "live slot count {live} != members {} + waiting {}",
+                n_dec + n_pre,
+                self.waiting.len()
+            ));
+        }
+        if self.by_id.len() != live {
+            return Err(format!(
+                "id map size {} != live slots {live}",
+                self.by_id.len()
+            ));
+        }
+        for (&id, &slot) in &self.by_id {
+            let s = self
+                .slots
+                .get(slot as usize)
+                .ok_or_else(|| format!("id {id} maps to bad slot {slot}"))?;
+            if !s.live || s.req.id != id {
+                return Err(format!("id {id} maps to slot {slot} holding {}", s.req.id));
+            }
+        }
+        for &f in &self.free_slots {
+            let s = self
+                .slots
+                .get(f as usize)
+                .ok_or_else(|| format!("free slot {f} out of range"))?;
+            if s.live {
+                return Err(format!("free slot {f} is live"));
+            }
+        }
+        if self.free_slots.len() + live != self.slots.len() {
+            return Err("slab accounting drift (free + live != slots)".into());
         }
         Ok(())
     }
 
+    /// Look up a *live* (waiting or running) request; finished requests
+    /// are evicted and return `None`.
     pub fn request(&self, id: ReqId) -> Option<&EngineRequest> {
-        self.reqs.get(&id)
+        self.by_id.get(&id).map(|&s| &self.slots[s as usize].req)
     }
 }
 
@@ -699,5 +1129,104 @@ mod tests {
         let fin = events.iter().filter(|e| matches!(e, EngineEvent::Finished(_))).count();
         assert_eq!(fin, 100);
         assert_eq!(e.kv_allocator().used_blocks(), 0);
+    }
+
+    #[test]
+    fn finished_requests_are_evicted() {
+        // The slab must not grow with the number of requests *served* —
+        // only with the number concurrently live (the unbounded-memory
+        // fix this PR ships: `reqs`/`emitted` used to be retained
+        // forever).
+        let mut e = engine(512, 300_000);
+        for wave in 0..20u64 {
+            for i in 0..50u64 {
+                e.submit(EngineRequest::whole(wave * 50 + i, 200, 5));
+            }
+            assert_eq!(e.n_tracked_requests(), 50);
+            run_to_completion(&mut e);
+            assert_eq!(e.n_tracked_requests(), 0, "finished requests leaked");
+            assert_eq!(e.kv_allocator().n_requests(), 0);
+        }
+        // 1000 requests served, but the slab only ever held one wave.
+        assert!(
+            e.slab_size() <= 50,
+            "slab grew to {} slots for 50 concurrent requests",
+            e.slab_size()
+        );
+    }
+
+    #[test]
+    fn resubmission_after_finish_is_allowed() {
+        // Eviction on finish means an id can be reused once its first
+        // lifetime ended (online frontends recycle nothing, but the
+        // engine no longer keeps ghosts around to collide with).
+        let mut e = engine(512, 100_000);
+        e.submit(EngineRequest::whole(7, 100, 2));
+        run_to_completion(&mut e);
+        assert!(e.request(7).is_none(), "finished request still tracked");
+        e.submit(EngineRequest::whole(7, 100, 2));
+        let events = run_to_completion(&mut e);
+        let fin = events.iter().filter(|e| matches!(e, EngineEvent::Finished(_))).count();
+        assert_eq!(fin, 1);
+    }
+
+    #[test]
+    fn plan_scratch_retains_capacity() {
+        // The `_into` APIs must reuse the caller's buffers: after the
+        // first refill, capacities never shrink and never need to grow
+        // again in steady state.
+        let mut e = engine(512, 400_000);
+        for i in 0..64 {
+            e.submit(EngineRequest::whole(i, 512, 10_000));
+        }
+        let mut plan = IterationPlan::default();
+        let mut events = Vec::new();
+        // ~2 iterations per admission: 200 warmup iterations put all 64
+        // requests into steady decode.
+        for _ in 0..200 {
+            assert!(e.plan_iteration_into(&mut plan));
+            e.complete_iteration_into(&plan, &mut events);
+        }
+        let cap = plan.decode_ids.capacity();
+        assert!(cap >= 64, "decode scratch never warmed: {cap}");
+        for _ in 0..50 {
+            assert!(e.plan_iteration_into(&mut plan));
+            e.complete_iteration_into(&plan, &mut events);
+        }
+        assert_eq!(plan.decode_ids.capacity(), cap, "scratch was reallocated");
+        assert_eq!(plan.decode_ids.len(), 64);
+    }
+
+    #[test]
+    fn incremental_stats_match_recomputation() {
+        // Randomized-ish mixed workload: after every step the O(1)
+        // counters must equal a from-scratch recomputation (also wired
+        // into check_invariants, asserted here explicitly).
+        let mut e = engine(256, 8_000);
+        for i in 0..24u64 {
+            let input = 50 + (i as usize * 131) % 900;
+            let output = 1 + (i as usize * 17) % 60;
+            let offset = if i % 3 == 0 {
+                (25 + (i as usize * 67) % 500).min(input)
+            } else {
+                0
+            };
+            e.submit(EngineRequest::with_offset(i, input, output, offset));
+        }
+        let mut guard = 0;
+        while e.has_work() {
+            guard += 1;
+            assert!(guard < 100_000);
+            let Some(plan) = e.plan_iteration() else { break };
+            e.complete_iteration(&plan);
+            e.check_invariants().unwrap();
+            let s = e.stats();
+            assert_eq!(s.n_decode + s.n_prefilling + s.waiting, e.n_in_instance());
+        }
+        let s = e.stats();
+        assert_eq!(s.n_decode, 0);
+        assert_eq!(s.decode_ctx_sum, 0);
+        assert_eq!(s.n_prefilling, 0);
+        assert_eq!(s.waiting, 0);
     }
 }

@@ -13,6 +13,13 @@
 //!    iteration's effects (tokens emitted, prefills advanced, requests
 //!    finished, KV freed) and report them as events.
 //!
+//! Hot loops should use the allocation-free forms
+//! [`instance::EngineInstance::plan_iteration_into`] /
+//! [`instance::EngineInstance::complete_iteration_into`], which refill
+//! caller-owned scratch buffers ([`instance::IterationPlan`] and a
+//! `Vec<EngineEvent>`) instead of allocating per iteration — see the
+//! README "Performance" section and EXPERIMENTS.md §Perf.
+//!
 //! Scheduling policy (matches the paper's setup):
 //! * decode-first: every running decode request contributes one token;
 //! * the remaining token budget (512, or 256 on DP's low-end GPU) is

@@ -65,11 +65,13 @@ impl EngineRequest {
     }
 
     /// Prompt tokens this engine still has to prefill.
+    #[inline]
     pub fn local_prefill_len(&self) -> usize {
         self.input_len - self.prefill_offset
     }
 
     /// Prompt tokens this engine has left to prefill right now.
+    #[inline]
     pub fn prefill_remaining(&self) -> usize {
         match self.phase {
             Phase::Queued => self.local_prefill_len(),
@@ -80,6 +82,10 @@ impl EngineRequest {
 
     /// Context length (tokens with KV present) once `generated` outputs
     /// exist: the whole prompt plus the generated tokens.
+    ///
+    /// Read once per decode request per planned iteration — the single
+    /// hottest accessor in the crate (see EXPERIMENTS.md §Perf).
+    #[inline]
     pub fn context_len(&self) -> usize {
         match self.phase {
             Phase::Queued => 0,
@@ -89,10 +95,12 @@ impl EngineRequest {
         }
     }
 
+    #[inline]
     pub fn is_decoding(&self) -> bool {
         matches!(self.phase, Phase::Decoding { .. })
     }
 
+    #[inline]
     pub fn is_prefilling(&self) -> bool {
         matches!(self.phase, Phase::Queued | Phase::Prefilling { .. })
     }

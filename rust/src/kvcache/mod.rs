@@ -98,6 +98,12 @@ impl BlockAllocator {
 
     /// Extend a request's coverage to `new_tokens` total, allocating
     /// additional blocks as needed (decode growth: +1 token per step).
+    ///
+    /// Runs once per decode request per iteration, so it moves blocks
+    /// off the free list in place instead of splitting off a temporary
+    /// vector — the steady-state path performs no heap allocation (the
+    /// request's block list doubles amortizedly as its context crosses
+    /// power-of-two block counts; see EXPERIMENTS.md §Perf).
     pub fn grow(&mut self, req: ReqId, new_tokens: usize) -> Result<(), KvError> {
         let (blocks, tokens) = self
             .table
@@ -113,8 +119,9 @@ impl BlockAllocator {
         if extra > self.free.len() {
             return Err(KvError::OutOfBlocks { need: extra, free: self.free.len() });
         }
-        let mut newly = self.free.split_off(self.free.len() - extra);
-        blocks.append(&mut newly);
+        for _ in 0..extra {
+            blocks.push(self.free.pop().expect("checked free list length"));
+        }
         *tokens = new_tokens;
         Ok(())
     }
@@ -128,10 +135,12 @@ impl BlockAllocator {
         Ok(n)
     }
 
+    #[inline]
     pub fn tokens_of(&self, req: ReqId) -> Option<usize> {
         self.table.get(&req).map(|(_, t)| *t)
     }
 
+    #[inline]
     pub fn holds(&self, req: ReqId) -> bool {
         self.table.contains_key(&req)
     }

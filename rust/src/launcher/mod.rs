@@ -189,10 +189,16 @@ pub fn standalone_decode_rps(
     }
     let mut t = 0.0f64;
     let mut finished = 0usize;
+    // Zero-allocation stepping: one plan + one event buffer, reused.
+    let mut plan = crate::engine::IterationPlan::default();
+    let mut events = Vec::new();
     while engine.has_work() {
-        let Some(plan) = engine.plan_iteration() else { break };
+        if !engine.plan_iteration_into(&mut plan) {
+            break;
+        }
         t += plan.duration_s;
-        for ev in engine.complete_iteration(&plan) {
+        engine.complete_iteration_into(&plan, &mut events);
+        for ev in &events {
             if matches!(ev, crate::engine::EngineEvent::Finished(_)) {
                 finished += 1;
             }

@@ -8,7 +8,7 @@
 //! P99 is taken over all gaps of all requests.
 
 use crate::simclock::SimTime;
-use crate::util::stats::{mean, percentile};
+use crate::util::stats::{mean, percentile_of_sorted};
 use crate::util::fxhash::FxHashMap;
 
 pub type ReqId = u64;
@@ -93,9 +93,10 @@ impl Collector {
     /// Build the final report.  `makespan` is the completion time of the
     /// last request (simulated), which defines throughput.
     pub fn report(&self, label: impl Into<String>) -> Report {
-        let mut ttft = Vec::new();
-        let mut tbt = Vec::new();
-        let mut e2e = Vec::new();
+        let mut ttft = Vec::with_capacity(self.records.len());
+        let mut tbt =
+            Vec::with_capacity(self.records.values().map(|r| r.tbt_gaps_s.len()).sum());
+        let mut e2e = Vec::with_capacity(self.records.len());
         let mut makespan = SimTime::ZERO;
         let mut finished = 0usize;
         let mut total_output_tokens = 0usize;
@@ -155,26 +156,37 @@ pub struct Report {
     pub e2e_p50_s: f64,
     pub e2e_p99_s: f64,
     /// Raw TTFT samples, one per request that produced a first token.
+    /// Sorted ascending ([`Report::from_samples`] sorts once and derives
+    /// every percentile from the sorted vector).
     pub ttft_samples: Vec<f64>,
-    /// Raw inter-token gaps across all requests.
+    /// Raw inter-token gaps across all requests (sorted ascending).
     pub tbt_samples: Vec<f64>,
-    /// Raw end-to-end latencies of finished requests.
+    /// Raw end-to-end latencies of finished requests (sorted ascending).
     pub e2e_samples: Vec<f64>,
 }
 
 impl Report {
     /// Assemble a report from raw samples (shared by [`Collector::report`]
     /// and [`Report::merge`]).
+    ///
+    /// Each sample vector is sorted exactly once and every percentile is
+    /// read off the sorted data (`percentile` used to clone + sort the
+    /// vector 2–3 times per statistic — see EXPERIMENTS.md §Perf).  The
+    /// sorted vectors are retained as the raw samples, which also makes
+    /// the mean independent of collection order.
     pub fn from_samples(
         label: impl Into<String>,
         n_requests: usize,
         n_finished: usize,
         n_output_tokens: usize,
         makespan_s: f64,
-        ttft: Vec<f64>,
-        tbt: Vec<f64>,
-        e2e: Vec<f64>,
+        mut ttft: Vec<f64>,
+        mut tbt: Vec<f64>,
+        mut e2e: Vec<f64>,
     ) -> Report {
+        ttft.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        tbt.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        e2e.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
         Report {
             label: label.into(),
             n_requests,
@@ -193,13 +205,13 @@ impl Report {
                 0.0
             },
             ttft_mean_s: mean(&ttft),
-            ttft_p50_s: percentile(&ttft, 50.0),
-            ttft_p99_s: percentile(&ttft, 99.0),
+            ttft_p50_s: percentile_of_sorted(&ttft, 50.0),
+            ttft_p99_s: percentile_of_sorted(&ttft, 99.0),
             tbt_mean_s: mean(&tbt),
-            tbt_p50_s: percentile(&tbt, 50.0),
-            tbt_p99_s: percentile(&tbt, 99.0),
-            e2e_p50_s: percentile(&e2e, 50.0),
-            e2e_p99_s: percentile(&e2e, 99.0),
+            tbt_p50_s: percentile_of_sorted(&tbt, 50.0),
+            tbt_p99_s: percentile_of_sorted(&tbt, 99.0),
+            e2e_p50_s: percentile_of_sorted(&e2e, 50.0),
+            e2e_p99_s: percentile_of_sorted(&e2e, 99.0),
             ttft_samples: ttft,
             tbt_samples: tbt,
             e2e_samples: e2e,
@@ -211,9 +223,12 @@ impl Report {
     /// share the experiment's t = 0), and percentiles are recomputed over
     /// the union of the raw samples.
     pub fn merge(label: impl Into<String>, parts: &[Report]) -> Report {
-        let mut ttft = Vec::new();
-        let mut tbt = Vec::new();
-        let mut e2e = Vec::new();
+        let mut ttft =
+            Vec::with_capacity(parts.iter().map(|p| p.ttft_samples.len()).sum());
+        let mut tbt =
+            Vec::with_capacity(parts.iter().map(|p| p.tbt_samples.len()).sum());
+        let mut e2e =
+            Vec::with_capacity(parts.iter().map(|p| p.e2e_samples.len()).sum());
         let mut n_requests = 0usize;
         let mut n_finished = 0usize;
         let mut n_rejected = 0usize;
@@ -401,6 +416,26 @@ mod tests {
         assert!(r.summary().contains("shed 1"), "{}", r.summary());
         let merged = Report::merge("m", &[r.clone(), r]);
         assert_eq!(merged.n_rejected, 2);
+    }
+
+    #[test]
+    fn from_samples_sorts_once_and_matches_clone_sort_percentiles() {
+        let raw = vec![3.0, 1.0, 2.0, 10.0, 0.5];
+        let r = Report::from_samples(
+            "x",
+            5,
+            5,
+            5,
+            1.0,
+            raw.clone(),
+            Vec::new(),
+            Vec::new(),
+        );
+        let mut sorted = raw.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(r.ttft_samples, sorted, "samples retained sorted");
+        assert_eq!(r.ttft_p50_s, crate::util::stats::percentile(&raw, 50.0));
+        assert_eq!(r.ttft_p99_s, crate::util::stats::percentile(&raw, 99.0));
     }
 
     #[test]

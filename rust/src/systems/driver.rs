@@ -8,6 +8,12 @@
 //! [`Admission::Deferred`] with bounded retries, and finishes with
 //! [`ServingSystem::drain`].  Every launcher, bench, example and CLI
 //! path serves traces through this harness.
+//!
+//! Replay throughput is bounded by the engines' iteration loop, which
+//! is allocation-free in steady state (every system steps its engines
+//! through reusable plan/event scratch buffers — see EXPERIMENTS.md
+//! §Perf); the driver itself keeps peak memory at one horizon's events
+//! by discarding slices incrementally when nobody collects them.
 
 use crate::simclock::SimTime;
 use crate::systems::{Admission, RunOutcome, ServingSystem, SystemEvent};

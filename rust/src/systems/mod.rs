@@ -199,6 +199,11 @@ pub(crate) fn take_pending_until(
     pending: &mut Vec<SystemEvent>,
     until: SimTime,
 ) -> Vec<SystemEvent> {
+    // Common case: the whole buffer drains (open-loop replay advances to
+    // the next event instant) — hand it over without the binary search.
+    if pending.last().map_or(true, |e| e.time() <= until) {
+        return std::mem::take(pending);
+    }
     let idx = pending.partition_point(|e| e.time() <= until);
     let rest = pending.split_off(idx);
     std::mem::replace(pending, rest)

@@ -1,0 +1,664 @@
+//! Events-identical pin for the zero-allocation engine refactor.
+//!
+//! The `oracle` module below is a **verbatim copy of the pre-refactor
+//! `EngineInstance`** (hash-map request table, single `running` vector,
+//! per-call allocations) — the golden reference committed with the
+//! refactor PR.  Every scenario drives the oracle and the refactored
+//! engine in lockstep through the same submission schedule and asserts
+//! that plans (batch composition, order, bit-exact durations) and event
+//! streams (order, ids) are byte-identical, then cross-checks an FNV-1a
+//! digest of both streams plus every accounting counter.
+//!
+//! A second family of tests pins the *system-level* `SystemEvent`
+//! stream: replaying the paper trace must produce a digest identical to
+//! the stream assembled by hand-driven online stepping, for Cronus and
+//! both baselines.
+
+use cronus::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
+use cronus::simgpu::link::LinkSpec;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::perfmodel::PerfModel;
+use cronus::simgpu::spec::A100;
+use cronus::workload::arrival::{at_rate, stamp, ArrivalProcess};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+
+/// FNV-1a 64-bit, folding little-endian words.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn event(&mut self, ev: &EngineEvent) {
+        let (tag, id) = match ev {
+            EngineEvent::FirstToken(id) => (1u64, *id),
+            EngineEvent::Token(id) => (2, *id),
+            EngineEvent::Finished(id) => (3, *id),
+            EngineEvent::KvReceived(id) => (4, *id),
+            EngineEvent::Preempted(id) => (5, *id),
+        };
+        self.u64(tag);
+        self.u64(id);
+    }
+
+    fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// The pre-refactor engine, kept verbatim as the golden reference.
+mod oracle {
+    use std::collections::VecDeque;
+
+    use cronus::engine::{EngineEvent, EngineRequest, Phase};
+    use cronus::kvcache::BlockAllocator;
+    use cronus::simgpu::link::LinkSpec;
+    use cronus::simgpu::perfmodel::{IterationShape, PerfModel, PrefillSeg};
+
+    pub type ReqId = u64;
+    type FxHashMap<K, V> = cronus::util::fxhash::FxHashMap<K, V>;
+
+    #[derive(Clone, Debug)]
+    pub struct OraclePlan {
+        pub prefill_parts: Vec<(ReqId, usize, bool)>,
+        pub decode_ids: Vec<ReqId>,
+        pub kv_recv: Vec<(ReqId, usize)>,
+        pub shape: IterationShape,
+        pub duration_s: f64,
+    }
+
+    pub struct OracleEngine {
+        pm: PerfModel,
+        link: LinkSpec,
+        max_batched_tokens: usize,
+        max_running: usize,
+        kv: BlockAllocator,
+        waiting: VecDeque<ReqId>,
+        /// Admission order (oldest first) — preemption evicts from the back.
+        running: Vec<ReqId>,
+        reqs: FxHashMap<ReqId, EngineRequest>,
+        /// Tokens already reported per request (survives preemption).
+        emitted: FxHashMap<ReqId, usize>,
+        pub busy_time_s: f64,
+        pub n_iterations: u64,
+        pub n_preemptions: u64,
+        pub tokens_prefilled: u64,
+        pub tokens_decoded: u64,
+    }
+
+    impl OracleEngine {
+        pub fn new(
+            pm: PerfModel,
+            link: LinkSpec,
+            max_batched_tokens: usize,
+            max_running: usize,
+            block_size: usize,
+            kv_capacity_tokens: usize,
+        ) -> Self {
+            let n_blocks = kv_capacity_tokens / block_size;
+            OracleEngine {
+                pm,
+                link,
+                max_batched_tokens,
+                max_running,
+                kv: BlockAllocator::new(n_blocks, block_size),
+                waiting: VecDeque::new(),
+                running: Vec::new(),
+                reqs: FxHashMap::default(),
+                emitted: FxHashMap::default(),
+                busy_time_s: 0.0,
+                n_iterations: 0,
+                n_preemptions: 0,
+                tokens_prefilled: 0,
+                tokens_decoded: 0,
+            }
+        }
+
+        pub fn submit(&mut self, req: EngineRequest) {
+            debug_assert!(!self.reqs.contains_key(&req.id));
+            self.waiting.push_back(req.id);
+            self.emitted.entry(req.id).or_insert(0);
+            self.reqs.insert(req.id, req);
+        }
+
+        pub fn has_work(&self) -> bool {
+            !self.waiting.is_empty() || !self.running.is_empty()
+        }
+
+        pub fn plan_iteration(&mut self) -> Option<OraclePlan> {
+            let mut budget = self.max_batched_tokens;
+            let mut shape = IterationShape::default();
+            let mut prefill_parts = Vec::new();
+            let mut decode_ids = Vec::new();
+            let mut kv_recv = Vec::new();
+
+            // 1. Decode-first: every running decode request gets one token.
+            let decoding: Vec<ReqId> = self
+                .running
+                .iter()
+                .copied()
+                .filter(|id| self.reqs[id].is_decoding())
+                .collect();
+            for id in decoding {
+                if budget == 0 {
+                    break;
+                }
+                if !self.reqs[&id].is_decoding() {
+                    continue;
+                }
+                let ctx = self.reqs[&id].context_len();
+                loop {
+                    match self.kv.grow(id, ctx + 1) {
+                        Ok(()) => break,
+                        Err(_) => {
+                            if let Some(victim) = self.pick_preemption_victim(id) {
+                                self.preempt(victim);
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                }
+                if self.kv.tokens_of(id).map(|t| t >= ctx + 1) != Some(true) {
+                    continue;
+                }
+                budget -= 1;
+                shape.n_decode += 1;
+                shape.decode_ctx_sum += ctx;
+                decode_ids.push(id);
+            }
+
+            // 2. Fill remaining budget with prefill chunks (head-of-line).
+            let prefilling: Vec<ReqId> = self
+                .running
+                .iter()
+                .copied()
+                .filter(|id| self.reqs[id].is_prefilling())
+                .collect();
+            for id in prefilling {
+                if budget == 0 {
+                    break;
+                }
+                let r = &self.reqs[&id];
+                let remaining = r.prefill_remaining();
+                if remaining == 0 {
+                    continue;
+                }
+                let chunk = remaining.min(budget);
+                let done = match r.phase {
+                    Phase::Prefilling { done } => done,
+                    _ => 0,
+                };
+                let ctx_end = r.prefill_offset + done + chunk;
+                shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end });
+                prefill_parts.push((id, chunk, chunk == remaining));
+                budget -= chunk;
+            }
+
+            // 3. Admit from the waiting queue.
+            while !self.waiting.is_empty() && self.running.len() < self.max_running {
+                let id = *self.waiting.front().unwrap();
+                let r = &self.reqs[&id];
+                let needs_recv = r.needs_kv_recv;
+                let local_prefill = r.local_prefill_len();
+                if !needs_recv && budget == 0 {
+                    break;
+                }
+                let headroom_blocks = self
+                    .running
+                    .iter()
+                    .filter(|id| self.reqs[id].is_decoding())
+                    .count();
+                let need = self.kv.blocks_for(r.input_len) + headroom_blocks;
+                if need > self.kv.free_blocks() {
+                    break;
+                }
+                self.kv.allocate(id, r.input_len).expect("checked can_allocate");
+                self.waiting.pop_front();
+                self.running.push(id);
+                let r = self.reqs.get_mut(&id).unwrap();
+                r.phase = Phase::Prefilling { done: 0 };
+                if needs_recv {
+                    kv_recv.push((id, r.prefill_offset));
+                    r.needs_kv_recv = false;
+                } else {
+                    let chunk = local_prefill.min(budget);
+                    if chunk == 0 {
+                        continue;
+                    }
+                    shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end: chunk });
+                    prefill_parts.push((id, chunk, chunk == local_prefill));
+                    budget -= chunk;
+                }
+            }
+
+            if shape.is_empty() && kv_recv.is_empty() {
+                return None;
+            }
+
+            let compute_t = self.pm.iteration_time(&shape);
+            let transfer_t = kv_recv
+                .iter()
+                .map(|(_, tokens)| {
+                    self.link
+                        .kv_transfer_time(*tokens, self.pm.model.kv_bytes_per_token())
+                })
+                .fold(0.0f64, f64::max);
+            let duration_s = compute_t.max(transfer_t);
+
+            self.n_iterations += 1;
+            self.busy_time_s += duration_s;
+
+            Some(OraclePlan { prefill_parts, decode_ids, kv_recv, shape, duration_s })
+        }
+
+        pub fn complete_iteration(&mut self, plan: &OraclePlan) -> Vec<EngineEvent> {
+            let mut events = Vec::new();
+
+            for (id, tokens) in &plan.kv_recv {
+                events.push(EngineEvent::KvReceived(*id));
+                self.tokens_prefilled += *tokens as u64;
+                let r = self.reqs.get_mut(id).unwrap();
+                if r.local_prefill_len() == 0 {
+                    self.finish_prefill(*id, &mut events);
+                }
+            }
+
+            for (id, chunk, finishes) in &plan.prefill_parts {
+                let r = match self.reqs.get_mut(id) {
+                    Some(r) if r.is_prefilling() => r,
+                    _ => continue,
+                };
+                let done = match r.phase {
+                    Phase::Prefilling { done } => done,
+                    _ => 0,
+                };
+                r.phase = Phase::Prefilling { done: done + chunk };
+                self.tokens_prefilled += *chunk as u64;
+                if *finishes {
+                    self.finish_prefill(*id, &mut events);
+                }
+            }
+
+            for id in &plan.decode_ids {
+                let r = match self.reqs.get_mut(id) {
+                    Some(r) if r.is_decoding() => r,
+                    _ => continue,
+                };
+                if let Phase::Decoding { generated } = r.phase {
+                    let new_gen = generated + 1;
+                    r.phase = Phase::Decoding { generated: new_gen };
+                    self.tokens_decoded += 1;
+                    let emitted = self.emitted.get_mut(id).unwrap();
+                    if new_gen > *emitted {
+                        *emitted = new_gen;
+                        events.push(EngineEvent::Token(*id));
+                    }
+                    if new_gen >= r.output_len {
+                        r.phase = Phase::Finished;
+                        events.push(EngineEvent::Finished(*id));
+                        self.retire(*id);
+                    }
+                }
+            }
+
+            events
+        }
+
+        fn finish_prefill(&mut self, id: ReqId, events: &mut Vec<EngineEvent>) {
+            let emitted = *self.emitted.get(&id).unwrap_or(&0);
+            let r = self.reqs.get_mut(&id).unwrap();
+            if emitted == 0 {
+                r.phase = Phase::Decoding { generated: 1 };
+                events.push(EngineEvent::FirstToken(id));
+                *self.emitted.get_mut(&id).unwrap() = 1;
+                if r.output_len <= 1 {
+                    r.phase = Phase::Finished;
+                    events.push(EngineEvent::Finished(id));
+                    self.retire(id);
+                }
+            } else {
+                r.phase = Phase::Decoding { generated: emitted };
+                if emitted >= r.output_len {
+                    r.phase = Phase::Finished;
+                    events.push(EngineEvent::Finished(id));
+                    self.retire(id);
+                }
+            }
+        }
+
+        fn retire(&mut self, id: ReqId) {
+            self.running.retain(|x| *x != id);
+            let _ = self.kv.release(id);
+        }
+
+        fn pick_preemption_victim(&self, protect: ReqId) -> Option<ReqId> {
+            self.running.iter().rev().copied().find(|id| *id != protect)
+        }
+
+        fn preempt(&mut self, id: ReqId) {
+            self.n_preemptions += 1;
+            let _ = self.kv.release(id);
+            self.running.retain(|x| *x != id);
+            let r = self.reqs.get_mut(&id).unwrap();
+            r.prefill_offset = 0;
+            r.needs_kv_recv = false;
+            r.phase = Phase::Queued;
+            self.waiting.push_front(id);
+        }
+    }
+}
+
+/// An engine-level workload: (arrival_ns, request) plus engine geometry.
+struct Scenario {
+    name: &'static str,
+    max_batched_tokens: usize,
+    max_running: usize,
+    block_size: usize,
+    kv_capacity_tokens: usize,
+    arrivals: Vec<(u64, EngineRequest)>,
+}
+
+/// Drive oracle and refactored engine in lockstep; panic on the first
+/// divergence; return the (shared) stream digest and the preemption
+/// count (so scenarios can assert the paths they target were hit).
+fn run_lockstep(sc: &Scenario) -> (u64, u64) {
+    let pm = PerfModel::new(A100, LLAMA3_8B);
+    let mut new_e = EngineInstance::new(
+        sc.name,
+        pm,
+        LinkSpec::INFINIBAND_100G,
+        sc.max_batched_tokens,
+        sc.max_running,
+        sc.block_size,
+        sc.kv_capacity_tokens,
+    );
+    let mut old_e = oracle::OracleEngine::new(
+        pm,
+        LinkSpec::INFINIBAND_100G,
+        sc.max_batched_tokens,
+        sc.max_running,
+        sc.block_size,
+        sc.kv_capacity_tokens,
+    );
+
+    let mut new_digest = Fnv::new();
+    let mut old_digest = Fnv::new();
+    let mut plan = IterationPlan::default();
+    let mut events = Vec::new();
+    let mut t_ns = 0u64;
+    let mut next = 0usize;
+    let mut steps = 0u64;
+    loop {
+        steps += 1;
+        assert!(steps < 1_000_000, "[{}] lockstep did not converge", sc.name);
+        while next < sc.arrivals.len() && sc.arrivals[next].0 <= t_ns {
+            let req = sc.arrivals[next].1.clone();
+            new_e.submit(req.clone());
+            old_e.submit(req);
+            next += 1;
+        }
+
+        let new_planned = new_e.plan_iteration_into(&mut plan);
+        let old_plan = old_e.plan_iteration();
+        assert_eq!(
+            new_planned,
+            old_plan.is_some(),
+            "[{}] plan presence diverged at t={t_ns}ns",
+            sc.name
+        );
+        let Some(old_plan) = old_plan else {
+            if next < sc.arrivals.len() {
+                t_ns = sc.arrivals[next].0; // idle until the next arrival
+                continue;
+            }
+            break;
+        };
+
+        // Batch composition must match element-for-element.
+        assert_eq!(plan.prefill_parts, old_plan.prefill_parts, "[{}] t={t_ns}", sc.name);
+        assert_eq!(plan.decode_ids, old_plan.decode_ids, "[{}] t={t_ns}", sc.name);
+        assert_eq!(plan.kv_recv, old_plan.kv_recv, "[{}] t={t_ns}", sc.name);
+        assert_eq!(plan.shape.prefill, old_plan.shape.prefill, "[{}] t={t_ns}", sc.name);
+        assert_eq!(plan.shape.n_decode, old_plan.shape.n_decode, "[{}] t={t_ns}", sc.name);
+        assert_eq!(
+            plan.shape.decode_ctx_sum, old_plan.shape.decode_ctx_sum,
+            "[{}] t={t_ns}",
+            sc.name
+        );
+        // Durations must be bit-identical, not merely close.
+        assert_eq!(
+            plan.duration_s.to_bits(),
+            old_plan.duration_s.to_bits(),
+            "[{}] duration diverged at t={t_ns}: {} vs {}",
+            sc.name,
+            plan.duration_s,
+            old_plan.duration_s
+        );
+
+        new_e.complete_iteration_into(&plan, &mut events);
+        let old_events = old_e.complete_iteration(&old_plan);
+        assert_eq!(events, old_events, "[{}] event stream diverged at t={t_ns}", sc.name);
+
+        new_digest.u64(plan.duration_s.to_bits());
+        old_digest.u64(old_plan.duration_s.to_bits());
+        for ev in &events {
+            new_digest.event(ev);
+        }
+        for ev in &old_events {
+            old_digest.event(ev);
+        }
+
+        t_ns = t_ns.saturating_add((plan.duration_s * 1e9).round() as u64);
+    }
+
+    assert!(!new_e.has_work(), "[{}] refactored engine stuck", sc.name);
+    assert!(!old_e.has_work(), "[{}] oracle engine stuck", sc.name);
+
+    // Accounting must agree to the last token and the last f64 bit.
+    assert_eq!(new_e.n_iterations, old_e.n_iterations);
+    assert_eq!(new_e.n_preemptions, old_e.n_preemptions);
+    assert_eq!(new_e.tokens_prefilled, old_e.tokens_prefilled);
+    assert_eq!(new_e.tokens_decoded, old_e.tokens_decoded);
+    assert_eq!(new_e.busy_time_s.to_bits(), old_e.busy_time_s.to_bits());
+
+    let (nd, od) = (new_digest.finish(), old_digest.finish());
+    assert_eq!(nd, od, "[{}] stream digests diverged", sc.name);
+    (nd, new_e.n_preemptions)
+}
+
+fn paper_arrivals() -> Vec<(u64, EngineRequest)> {
+    let trace = generate(300, &AzureTraceConfig::default(), 42);
+    let trace = at_rate(&trace, 4.0);
+    trace
+        .iter()
+        .map(|r| (r.arrival_ns, EngineRequest::whole(r.id, r.input_len, r.output_len)))
+        .collect()
+}
+
+#[test]
+fn golden_paper_trace_events_identical() {
+    let (digest, _) = run_lockstep(&Scenario {
+        name: "paper-trace",
+        max_batched_tokens: 512,
+        max_running: 256,
+        block_size: 16,
+        kv_capacity_tokens: 400_000,
+        arrivals: paper_arrivals(),
+    });
+    println!("golden digest [paper-trace]: {digest:#018x}");
+}
+
+#[test]
+fn golden_partial_prefill_offsets_events_identical() {
+    // Cronus-style arrivals: a third of the requests carry a partial
+    // prefix (KV transfer on admission), a few fully disaggregated.
+    let trace = generate(200, &AzureTraceConfig::default(), 7);
+    let trace = at_rate(&trace, 6.0);
+    let arrivals: Vec<(u64, EngineRequest)> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let req = if i % 7 == 0 {
+                EngineRequest::with_offset(r.id, r.input_len, r.output_len, r.input_len)
+            } else if i % 3 == 0 {
+                EngineRequest::with_offset(
+                    r.id,
+                    r.input_len,
+                    r.output_len,
+                    r.input_len / 2,
+                )
+            } else {
+                EngineRequest::whole(r.id, r.input_len, r.output_len)
+            };
+            (r.arrival_ns, req)
+        })
+        .collect();
+    let (digest, _) = run_lockstep(&Scenario {
+        name: "partial-prefill",
+        max_batched_tokens: 512,
+        max_running: 256,
+        block_size: 16,
+        kv_capacity_tokens: 300_000,
+        arrivals,
+    });
+    println!("golden digest [partial-prefill]: {digest:#018x}");
+}
+
+#[test]
+fn golden_preemption_stress_events_identical() {
+    // Six long-output requests land at t = 0 in a pool that holds their
+    // prompts but not their decode growth: constant preemption and
+    // head-of-line readmission — the path where membership-epoch
+    // bookkeeping could plausibly diverge from the old retain-based
+    // removal (including the corner where a victim is re-admitted and
+    // fully re-prefilled within the very iteration that planned its
+    // decode step).
+    let offsets = [0usize, 64, 0, 0, 128, 0];
+    let arrivals: Vec<(u64, EngineRequest)> = (0..6u64)
+        .map(|i| (0, EngineRequest::with_offset(i, 128, 300, offsets[i as usize])))
+        .collect();
+    let (digest, preemptions) = run_lockstep(&Scenario {
+        name: "preemption-stress",
+        max_batched_tokens: 512,
+        max_running: 64,
+        block_size: 16,
+        kv_capacity_tokens: 1_024,
+        arrivals,
+    });
+    assert!(preemptions > 0, "stress scenario never preempted");
+    println!("golden digest [preemption-stress]: {digest:#018x} ({preemptions} preemptions)");
+}
+
+#[test]
+fn golden_burst_admission_events_identical() {
+    // Everything arrives at t = 0: exercises the admission loop (whose
+    // headroom check went from O(n) rescans to the incremental counter)
+    // under maximum queue pressure.
+    let trace = generate(150, &AzureTraceConfig::default(), 23);
+    let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+    let arrivals: Vec<(u64, EngineRequest)> = trace
+        .iter()
+        .map(|r| (r.arrival_ns, EngineRequest::whole(r.id, r.input_len, r.output_len)))
+        .collect();
+    let (digest, _) = run_lockstep(&Scenario {
+        name: "burst",
+        max_batched_tokens: 512,
+        max_running: 128,
+        block_size: 16,
+        kv_capacity_tokens: 250_000,
+        arrivals,
+    });
+    println!("golden digest [burst]: {digest:#018x}");
+}
+
+// ---------------------------------------------------------------------------
+// System-level stream pins: the full SystemEvent stream (ids, variants,
+// timestamps) must be identical whether assembled by `replay_trace_collect`
+// or by hand-driven online stepping — for Cronus and both baselines.
+// ---------------------------------------------------------------------------
+
+mod system_stream {
+    use cronus::config::{DeploymentConfig, SystemKind};
+    use cronus::simclock::SimTime;
+    use cronus::simgpu::model_desc::LLAMA3_8B;
+    use cronus::simgpu::spec::{A10, A100};
+    use cronus::systems::{build_system, replay_trace_collect, SystemEvent};
+    use cronus::workload::arrival::at_rate;
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+
+    use super::Fnv;
+
+    fn digest_stream(events: &[SystemEvent]) -> u64 {
+        let mut d = Fnv::new();
+        for ev in events {
+            let (tag, id, t) = match ev {
+                SystemEvent::FirstToken { id, t } => (1u64, *id, t.0),
+                SystemEvent::Token { id, t } => (2, *id, t.0),
+                SystemEvent::Finished { id, t } => (3, *id, t.0),
+                SystemEvent::Shed { id, t, .. } => (4, *id, t.0),
+            };
+            d.u64(tag);
+            d.u64(id);
+            d.u64(t);
+        }
+        d.finish()
+    }
+
+    fn replay_vs_stepped(kind: SystemKind, n: usize, seed: u64) {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = generate(n, &AzureTraceConfig::default(), seed);
+        let trace = at_rate(&trace, 4.0);
+
+        let mut batch = build_system(kind, &cfg);
+        let (_, replay_events, _) = replay_trace_collect(batch.as_mut(), &trace);
+
+        let mut online = build_system(kind, &cfg);
+        let mut stepped_events = Vec::new();
+        for r in &trace {
+            let t = SimTime(r.arrival_ns);
+            while let Some(next) = online.next_event_at() {
+                if next >= t {
+                    break;
+                }
+                stepped_events.extend(online.advance(next));
+            }
+            online.submit(t, *r);
+        }
+        stepped_events.extend(online.advance(SimTime(u64::MAX)));
+        online.drain();
+
+        assert_eq!(
+            replay_events.len(),
+            stepped_events.len(),
+            "{kind:?}: stream lengths diverged"
+        );
+        assert_eq!(replay_events, stepped_events, "{kind:?}: streams diverged");
+        let d = digest_stream(&replay_events);
+        assert_eq!(d, digest_stream(&stepped_events));
+        println!("system stream digest [{kind:?}]: {d:#018x}");
+    }
+
+    #[test]
+    fn cronus_stream_digest_stable_across_drive_modes() {
+        replay_vs_stepped(SystemKind::Cronus, 120, 42);
+    }
+
+    #[test]
+    fn dp_stream_digest_stable_across_drive_modes() {
+        replay_vs_stepped(SystemKind::DpChunked, 80, 11);
+    }
+
+    #[test]
+    fn pp_stream_digest_stable_across_drive_modes() {
+        replay_vs_stepped(SystemKind::PpChunked, 60, 13);
+    }
+}
