@@ -55,5 +55,8 @@ fn main() {
             println!("  [MISS] {} pairs finished {finished}/{n}", p.n_pairs);
         }
     }
-    println!("\n(total bench wall time {wall_total:.1}s, n={n}, policies=3)");
+    println!(
+        "\n(total bench wall time {wall_total:.1}s, n={n}, policies={})",
+        RoutePolicy::ALL.len()
+    );
 }

@@ -1,0 +1,130 @@
+//! Closed-loop multi-turn sessions under every routing policy: the
+//! KV-affinity headline measurement.  The same seeded session workload
+//! is served closed-loop (turn *k+1* submitted only after turn *k*'s
+//! finish plus think time) on a mixed-capability cluster; KV-affinity
+//! routing must complete the same turns as least-outstanding-tokens
+//! while executing strictly fewer prefill tokens (the resident session
+//! prefixes are neither recomputed nor transferred).
+//!
+//! Besides the table, the bench emits a machine-readable
+//! `BENCH_session_affinity.json` (override with
+//! `CRONUS_SESSION_BENCH_JSON`); CI validates the schema and archives
+//! the artifact — record, don't gate (see EXPERIMENTS.md §Sessions).
+//!
+//! ```bash
+//! cargo bench --bench session_affinity                 # 120 sessions, 4 pairs
+//! CRONUS_BENCH_N=40 CRONUS_MAX_PAIRS=2 cargo bench --bench session_affinity
+//! ```
+
+use cronus::benchkit::{time_once, JVal};
+use cronus::config::ClusterConfig;
+use cronus::cronus::router::RoutePolicy;
+use cronus::launcher::{session_affinity_sweep, session_workload, SessionPoint};
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::workload::session::total_turns;
+
+fn main() {
+    let n_sessions = std::env::var("CRONUS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120usize);
+    let max_pairs = std::env::var("CRONUS_MAX_PAIRS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4usize);
+    let seed = 42u64;
+    let think_mean_s = 2.0;
+
+    let sessions = session_workload(n_sessions, think_mean_s, seed);
+    let n_turns = total_turns(&sessions);
+    let cluster = ClusterConfig::mixed(max_pairs, LLAMA3_8B);
+    let ((table, points), wall) =
+        time_once(|| session_affinity_sweep(&sessions, &cluster, None));
+    table.print();
+
+    let lot = points
+        .iter()
+        .find(|pt| pt.policy == RoutePolicy::LeastOutstandingTokens)
+        .expect("policy swept");
+    let aff = points
+        .iter()
+        .find(|pt| pt.policy == RoutePolicy::KvAffinity)
+        .expect("policy swept");
+
+    println!("\nheadline-claim checks:");
+    let equal_turns = aff.stats.n_finished_turns == lot.stats.n_finished_turns;
+    println!(
+        "  [{}] kv-affinity completes the same turns as least-outstanding \
+         ({} vs {})",
+        if equal_turns { "ok" } else { "MISS" },
+        aff.stats.n_finished_turns,
+        lot.stats.n_finished_turns
+    );
+    let fewer_prefill = aff.prefill_tokens_executed < lot.prefill_tokens_executed;
+    println!(
+        "  [{}] kv-affinity executes strictly fewer prefill tokens \
+         ({} vs {}, {} saved, hit rate {:.0}%)",
+        if fewer_prefill { "ok" } else { "MISS" },
+        aff.prefill_tokens_executed,
+        lot.prefill_tokens_executed,
+        aff.outcome.report.prefill_tokens_saved,
+        100.0 * aff.outcome.report.kv_hit_rate
+    );
+    println!(
+        "\n(total bench wall time {wall:.1}s, {n_sessions} sessions / {n_turns} \
+         turns, {max_pairs} pairs, policies={})",
+        RoutePolicy::ALL.len()
+    );
+
+    // --- Machine-readable artifact (see EXPERIMENTS.md §Sessions) ---
+    let policy_jval = |pt: &SessionPoint| -> JVal {
+        let r = &pt.outcome.report;
+        JVal::Obj(vec![
+            ("policy".into(), JVal::Str(pt.policy.name().into())),
+            ("finished_turns".into(), JVal::Int(pt.stats.n_finished_turns as u64)),
+            ("shed".into(), JVal::Int(r.n_rejected as u64)),
+            (
+                "prefill_tokens_executed".into(),
+                JVal::Int(pt.prefill_tokens_executed),
+            ),
+            ("kv_hits".into(), JVal::Int(r.n_kv_hits as u64)),
+            ("kv_hit_rate".into(), JVal::Num(r.kv_hit_rate)),
+            ("prefill_tokens_saved".into(), JVal::Int(r.prefill_tokens_saved)),
+            ("throughput_rps".into(), JVal::Num(r.throughput_rps)),
+            ("ttft_p99_s".into(), JVal::Num(r.ttft_p99_s)),
+            ("tbt_p99_s".into(), JVal::Num(r.tbt_p99_s)),
+            ("makespan_s".into(), JVal::Num(r.makespan_s)),
+        ])
+    };
+    let artifact = JVal::Obj(vec![
+        ("schema_version".into(), JVal::Int(1)),
+        ("generated_by".into(), JVal::Str("session_affinity".into())),
+        (
+            "workload".into(),
+            JVal::Obj(vec![
+                ("n_sessions".into(), JVal::Int(n_sessions as u64)),
+                ("n_turns".into(), JVal::Int(n_turns as u64)),
+                ("n_pairs".into(), JVal::Int(max_pairs as u64)),
+                ("think_mean_s".into(), JVal::Num(think_mean_s)),
+                ("seed".into(), JVal::Int(seed)),
+            ]),
+        ),
+        (
+            "policies".into(),
+            JVal::Arr(points.iter().map(policy_jval).collect()),
+        ),
+        (
+            "checks".into(),
+            JVal::Obj(vec![
+                ("equal_finished_turns".into(), JVal::Bool(equal_turns)),
+                ("affinity_fewer_prefill_tokens".into(), JVal::Bool(fewer_prefill)),
+            ]),
+        ),
+        ("wall_s".into(), JVal::Num(wall)),
+    ]);
+    let path = std::env::var("CRONUS_SESSION_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_session_affinity.json".to_string());
+    std::fs::write(&path, artifact.render() + "\n")
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("wrote {path}");
+}

@@ -211,6 +211,7 @@ impl ServingSystem for DpSystem {
                 n_preemptions: e.n_preemptions,
                 tokens_prefilled: e.tokens_prefilled,
                 tokens_decoded: e.tokens_decoded,
+                tokens_kv_received: e.tokens_kv_received,
             })
             .collect();
         RunOutcome { report, instances }

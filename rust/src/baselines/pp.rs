@@ -326,6 +326,8 @@ impl ServingSystem for PpSystem {
                     + st.groups[1].tokens_prefilled,
                 tokens_decoded: st.groups[0].tokens_decoded
                     + st.groups[1].tokens_decoded,
+                tokens_kv_received: st.groups[0].tokens_kv_received
+                    + st.groups[1].tokens_kv_received,
             },
             InstanceStat {
                 name: format!(
@@ -337,6 +339,7 @@ impl ServingSystem for PpSystem {
                 n_preemptions: 0,
                 tokens_prefilled: 0,
                 tokens_decoded: 0,
+                tokens_kv_received: 0,
             },
         ];
         RunOutcome { report, instances }

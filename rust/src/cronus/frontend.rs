@@ -139,12 +139,15 @@ impl CronusState {
                 let (job, next) = self.ppi.on_done();
                 let r = self.reqs[&job.id];
                 // ⑤ chunked-prefill request: original prompt plus the
-                // already-processed prefix length.
-                self.cpi.submit(EngineRequest::with_offset(
+                // already-processed prefix length — the session prefix
+                // resident from a previous turn (`kv_credit`, free) plus
+                // the PPI's partial prefill (transferred over the link).
+                self.cpi.submit(EngineRequest::with_prefix_credit(
                     job.id,
                     r.input_len,
                     r.output_len,
-                    job.partial_len,
+                    r.kv_credit + job.partial_len,
+                    r.kv_credit,
                 ));
                 if let Some((_next_job, dur)) = next {
                     self.q.push_after(dur, Ev::PpiDone);
@@ -181,9 +184,31 @@ impl CronusState {
     /// ①–③ dispatch frontend → PPI whenever a slot is free, and keep the
     /// CPI busy.  Runs after every event and every submission.
     fn pump(&mut self) {
-        while self.ppi.has_slot() && !self.frontend.is_empty() {
+        while !self.frontend.is_empty() {
+            let r = self.reqs[self.frontend.front().unwrap()];
+            // Cold requests wait for a PPI slot (paper step ①); warm
+            // turns queued behind a blocked cold head keep FIFO order.
+            if r.kv_credit == 0 && !self.ppi.has_slot() {
+                break;
+            }
             let id = self.frontend.pop_front().unwrap();
-            let r = self.reqs[&id];
+            if r.kv_credit > 0 {
+                // A warm follow-up turn's resident prefix lives in the
+                // *CPI's* KV pool; the PPI holds none of the session's
+                // KV, so it has nothing to contribute.  The fresh suffix
+                // goes straight to the CPI's chunked prefill — whose
+                // Eq. 3 model prices attention over the full resident
+                // context — without queueing behind unrelated cold
+                // prefills for a PPI slot it does not need.
+                self.cpi.submit(EngineRequest::with_prefix_credit(
+                    id,
+                    r.input_len,
+                    r.output_len,
+                    r.kv_credit,
+                    r.kv_credit,
+                ));
+                continue;
+            }
             let decision = self.balancer.split(r.input_len, &self.cpi.stats());
             // The PPI's KV buffer bounds the prefix it can hold: a
             // low-end card too small for the model (e.g. 16 GiB for
@@ -268,6 +293,14 @@ impl ServingSystem for CronusSystem {
         st.run_until(t, false);
         st.q.advance_now(t);
         st.metrics.on_arrival(req.id, t);
+        // Clamp the granted resident-prefix credit to something this
+        // pair can honour: never the whole prompt (at least one token is
+        // computed) and never more than the declared session prefix.
+        let mut req = req;
+        req.kv_credit = req
+            .kv_credit
+            .min(req.prefix_len)
+            .min(req.input_len.saturating_sub(1));
         if req.input_len > st.cpi_capacity_tokens {
             // Cannot ever fit the CPI's KV pool; reject (vLLM would too).
             st.n_rejected += 1;
@@ -318,6 +351,7 @@ impl ServingSystem for CronusSystem {
                     n_preemptions: 0,
                     tokens_prefilled: st.ppi.tokens_prefilled,
                     tokens_decoded: 0,
+                    tokens_kv_received: 0,
                 },
                 InstanceStat {
                     name: st.cpi.name.clone(),
@@ -326,6 +360,7 @@ impl ServingSystem for CronusSystem {
                     n_preemptions: st.cpi.n_preemptions,
                     tokens_prefilled: st.cpi.tokens_prefilled,
                     tokens_decoded: st.cpi.tokens_decoded,
+                    tokens_kv_received: st.cpi.tokens_kv_received,
                 },
             ],
         }
@@ -420,12 +455,7 @@ mod tests {
     fn oversized_request_is_rejected_and_shed() {
         let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
         let mut sys = CronusSystem::new(cfg, SplitPolicy::Balanced, false, "Cronus");
-        let huge = Request {
-            id: 0,
-            arrival_ns: 0,
-            input_len: 10_000_000,
-            output_len: 8,
-        };
+        let huge = Request::new(0, 0, 10_000_000, 8);
         let adm = sys.submit(SimTime::ZERO, huge);
         assert!(matches!(adm, Admission::Rejected { .. }), "{adm:?}");
         let events = sys.advance(SimTime(u64::MAX));
@@ -437,6 +467,34 @@ mod tests {
         assert_eq!(out.report.n_requests, 1);
         assert_eq!(out.report.n_finished, 0);
         assert_eq!(out.report.n_rejected, 1);
+    }
+
+    #[test]
+    fn kv_credit_skips_resident_prefix_prefill() {
+        use crate::systems::prefill_tokens_executed;
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        // Same follow-up turn, cold (no credit) vs warm (600 of the 1000
+        // prompt tokens resident from the previous turn).
+        let mut cold_req = Request::new(1, 0, 1000, 16);
+        cold_req.session_id = 1;
+        cold_req.prefix_len = 600;
+        let mut warm_req = cold_req;
+        warm_req.kv_credit = 600;
+
+        let run = |req: Request| {
+            let mut sys =
+                CronusSystem::new(cfg.clone(), SplitPolicy::Balanced, false, "x");
+            replay_trace(&mut sys, &[req])
+        };
+        let cold = run(cold_req);
+        let warm = run(warm_req);
+        assert_eq!(cold.report.n_finished, 1);
+        assert_eq!(warm.report.n_finished, 1);
+        // Executed prefill = prompt minus the resident credit, exactly.
+        assert_eq!(prefill_tokens_executed(&cold), 1000);
+        assert_eq!(prefill_tokens_executed(&warm), 400);
+        // Skipping 600 prefill tokens can only help the finish time.
+        assert!(warm.report.makespan_s <= cold.report.makespan_s);
     }
 
     #[test]

@@ -102,12 +102,19 @@ impl PartialPrefillInstance {
 
     /// The running prefill finished: move its KV to the buffer; start the
     /// next queued job if possible.  Returns `(finished, next-started)`.
+    ///
+    /// Zero-length jobs (warm session turns, or partials clamped to an
+    /// undersized buffer) produce no KV, so nothing is buffered — there
+    /// will be no transfer, hence no [`release`](Self::release), and an
+    /// entry would leak forever.
     pub fn on_done(&mut self) -> (PpiJob, Option<(PpiJob, f64)>) {
         let job = self.running.take().expect("PPI done without running job");
         self.n_prefills += 1;
         self.tokens_prefilled += job.partial_len as u64;
-        self.buffer.insert(job.id, job.partial_len);
-        self.buffered_tokens += job.partial_len;
+        if job.partial_len > 0 {
+            self.buffer.insert(job.id, job.partial_len);
+            self.buffered_tokens += job.partial_len;
+        }
         let started = self.try_start();
         (job, started)
     }
@@ -224,6 +231,19 @@ mod tests {
         assert_eq!(p.tokens_prefilled, 600);
         assert!(p.busy_time_s > 0.0);
         assert_eq!(p.buffered_tokens(), 600);
+    }
+
+    #[test]
+    fn zero_length_job_buffers_nothing() {
+        // Warm session turns run through the PPI as zero-length handoffs;
+        // they must not leave dangling buffer entries behind.
+        let mut p = ppi(1000);
+        p.enqueue(PpiJob { id: 1, partial_len: 0 }).unwrap();
+        let (done, _) = p.on_done();
+        assert_eq!(done.id, 1);
+        assert_eq!(p.buffered_tokens(), 0);
+        assert!(p.buffer.is_empty(), "zero-length job leaked a buffer entry");
+        p.check_invariants().unwrap();
     }
 
     #[test]

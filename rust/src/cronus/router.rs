@@ -10,7 +10,7 @@
 //! pair's `Finished`/`Shed` events — so routing decisions react to what
 //! the pairs actually served, not to a virtual drain-rate guess.
 //!
-//! Three pluggable policies:
+//! Four pluggable policies:
 //!
 //! * [`RoutePolicy::RoundRobin`] — weighted round-robin over the pairs'
 //!   `rate_share`s (deficit form: route to the pair with the smallest
@@ -20,7 +20,19 @@
 //! * [`RoutePolicy::SloAware`] — estimate each pair's TTFT for *this*
 //!   request (backlog drain time + the pair's calibrated Eq. 2 prefill
 //!   predictor) and route to the minimum, so slow-prefill pairs stop
-//!   attracting long prompts before their tails blow up.
+//!   attracting long prompts before their tails blow up;
+//! * [`RoutePolicy::KvAffinity`] — route a conversation's follow-up
+//!   turns to the pair already holding the session's prefix KV (the
+//!   *resident* pair), so the replayed context is neither recomputed nor
+//!   transferred.  The router keeps a prefix-residency map (session →
+//!   pair, with per-pair capacity-weighted LRU eviction); if the
+//!   resident pair's estimated TTFT would blow the SLO the follow-up
+//!   falls back to the load-based pick, and first turns / sessionless
+//!   requests always use the load-based pick
+//!   (least-outstanding-tokens).  KV placement dominating scheduling
+//!   quality in heterogeneous disaggregated clusters is the core finding
+//!   of HexGen-2 (2025) and the multi-vendor disaggregated serving line
+//!   of work.
 //!
 //! `rate_share` participates in *every* policy: besides weighting
 //! round-robin, it scales each pair's assumed service capacity in the
@@ -32,14 +44,23 @@
 //! (ROADMAP item): given a TTFT SLO, it accepts only when some pair's
 //! estimate meets the target, defers (with a retry hint) when the
 //! cluster is transiently overloaded, and rejects when no pair could
-//! meet the target even when idle.
+//! meet the target even when idle.  The estimate is *prefix-credit
+//! aware*: a follow-up turn whose session KV is resident on a pair only
+//! needs that pair to prefill the fresh suffix, so admission no longer
+//! over-rejects follow-ups whose full prompt would be too slow.
 
 use crate::config::topology::ClusterConfig;
+use crate::config::SystemKind;
 use crate::simclock::SimTime;
 use crate::simgpu::fit::{calibrate, PrefillCoeffs};
 use crate::simgpu::perfmodel::{IterationShape, PerfModel, PrefillSeg};
 use crate::systems::Admission;
-use crate::workload::Request;
+use crate::util::fxhash::FxHashMap;
+use crate::workload::{Request, NO_SESSION};
+
+/// Fraction of a pair's CPI KV capacity the router is willing to pin for
+/// session prefix residency (the rest stays free for in-flight batches).
+const KV_RESIDENCY_FRAC: f64 = 0.5;
 
 /// Routing policy of the cluster frontend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,13 +68,15 @@ pub enum RoutePolicy {
     RoundRobin,
     LeastOutstandingTokens,
     SloAware,
+    KvAffinity,
 }
 
 impl RoutePolicy {
-    pub const ALL: [RoutePolicy; 3] = [
+    pub const ALL: [RoutePolicy; 4] = [
         RoutePolicy::RoundRobin,
         RoutePolicy::LeastOutstandingTokens,
         RoutePolicy::SloAware,
+        RoutePolicy::KvAffinity,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -61,6 +84,7 @@ impl RoutePolicy {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::LeastOutstandingTokens => "least-outstanding",
             RoutePolicy::SloAware => "slo-aware",
+            RoutePolicy::KvAffinity => "kv-affinity",
         }
     }
 
@@ -75,6 +99,7 @@ impl RoutePolicy {
                 Some(RoutePolicy::LeastOutstandingTokens)
             }
             "slo" | "sloaware" => Some(RoutePolicy::SloAware),
+            "kv" | "affinity" | "kvaffinity" => Some(RoutePolicy::KvAffinity),
             _ => None,
         }
     }
@@ -91,6 +116,40 @@ struct PairLoad {
     outstanding_tokens: f64,
     n_routed: u64,
     tokens_routed: u64,
+    /// Session prefix KV currently pinned on this pair (tokens).
+    resident_tokens: u64,
+    /// Residency budget (tokens): a [`KV_RESIDENCY_FRAC`] slice of the
+    /// pair's CPI KV capacity, so bigger pairs keep more sessions warm
+    /// (capacity-weighted eviction).
+    residency_capacity_tokens: u64,
+    /// Whether the pair's serving system can exploit a resident prefix
+    /// (the Cronus frontend family); DP/PP pairs always re-prefill, so
+    /// granting them credit would fake savings.
+    supports_credit: bool,
+}
+
+/// Where one session's prefix KV lives.
+#[derive(Clone, Copy, Debug)]
+struct Residency {
+    pair: usize,
+    /// Context tokens resident (the session's prompt + response so far).
+    tokens: u64,
+    /// Monotone use counter for LRU eviction.
+    last_use: u64,
+}
+
+/// Outcome of one routing decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    /// Chosen pair index.
+    pub pair: usize,
+    /// Resident-prefix tokens the pair may skip (0 on a miss; always
+    /// `<= req.prefix_len`).  The cluster stamps this into the request's
+    /// `kv_credit` before handing it to the pair.
+    pub kv_credit: usize,
+    /// Backlog tokens charged against the pair — release exactly this via
+    /// [`Router::on_completed`] when the request leaves the system.
+    pub charged_tokens: u64,
 }
 
 impl PairLoad {
@@ -102,10 +161,23 @@ impl PairLoad {
 }
 
 /// The cluster dispatcher.  Deterministic: identical construction and
-/// request/completion sequences produce identical assignments.
+/// request/completion sequences produce identical assignments (LRU
+/// eviction breaks ties on a unique monotone counter, never on hash
+/// iteration order).
 pub struct Router {
     policy: RoutePolicy,
     pairs: Vec<PairLoad>,
+    /// Session → residency of its prefix KV.  Maintained only under
+    /// [`RoutePolicy::KvAffinity`]; empty (and therefore inert in the
+    /// TTFT estimator) under the load-based policies.
+    residency: FxHashMap<u64, Residency>,
+    /// Monotone counter feeding `Residency::last_use`.
+    use_seq: u64,
+    // --- session/KV accounting (cluster-level metrics) ---
+    n_kv_hits: u64,
+    prefill_tokens_saved: u64,
+    /// Follow-up turns (non-empty session prefix) committed.
+    n_prefix_routed: u64,
 }
 
 /// Coarse steady-state token throughput of a pair: the CPI running full
@@ -143,6 +215,8 @@ impl Router {
                     d.calibration_noise,
                     d.calibration_seed,
                 );
+                let cpi_capacity =
+                    cpi_pm.kv_capacity_tokens(d.engine.activation_reserve_frac);
                 PairLoad {
                     rate_share: pair.rate_share,
                     drain_rate_tps: estimated_token_rate(
@@ -154,10 +228,28 @@ impl Router {
                     outstanding_tokens: 0.0,
                     n_routed: 0,
                     tokens_routed: 0,
+                    resident_tokens: 0,
+                    residency_capacity_tokens: (cpi_capacity as f64
+                        * KV_RESIDENCY_FRAC)
+                        as u64,
+                    supports_credit: matches!(
+                        pair.system,
+                        SystemKind::Cronus
+                            | SystemKind::DisaggLowHigh
+                            | SystemKind::DisaggHighLow
+                    ),
                 }
             })
             .collect();
-        Router { policy, pairs }
+        Router {
+            policy,
+            pairs,
+            residency: FxHashMap::default(),
+            use_seq: 0,
+            n_kv_hits: 0,
+            prefill_tokens_saved: 0,
+            n_prefix_routed: 0,
+        }
     }
 
     pub fn policy(&self) -> RoutePolicy {
@@ -178,18 +270,63 @@ impl Router {
         self.pairs.iter().map(|p| p.n_routed).collect()
     }
 
-    /// Tokens (input + output) routed to each pair so far.
+    /// Tokens (input + output, net of resident-prefix credit) routed to
+    /// each pair so far.
     pub fn routed_tokens(&self) -> Vec<u64> {
         self.pairs.iter().map(|p| p.tokens_routed).collect()
     }
 
-    /// Estimated TTFT of `input_len` on pair `i` right now: drain the
-    /// live backlog at the pair's rate-share-scaled service rate, then
-    /// run the prefix on the PPI (conservative — the CPI usually shares
-    /// the prefill).
+    /// Estimated TTFT of `input_len` prefill tokens on pair `i` right
+    /// now: drain the live backlog at the pair's rate-share-scaled
+    /// service rate, then run the prefix on the PPI (conservative — the
+    /// CPI usually shares the prefill).
     pub fn estimated_ttft(&self, i: usize, input_len: usize) -> f64 {
         let p = &self.pairs[i];
         p.outstanding_tokens / p.effective_drain_tps() + p.prefill.predict(input_len)
+    }
+
+    /// Prefix-credit-aware TTFT estimate for `req` on pair `i`: if the
+    /// session's KV is resident there, only the fresh suffix needs
+    /// prefilling.  (Fixes the old estimator, which assumed a full-prompt
+    /// prefill for every request and so over-rejected follow-up turns at
+    /// the SLO admission gate.)
+    pub fn estimated_ttft_for(&self, i: usize, req: &Request) -> f64 {
+        self.estimated_ttft(i, req.input_len - self.resident_credit(i, req))
+    }
+
+    /// Resident-prefix tokens pair `i` could skip for `req` (0 unless the
+    /// session's KV is resident on exactly this pair and the pair's
+    /// system can exploit it).  Capped below `input_len` so at least one
+    /// token is always computed.
+    fn resident_credit(&self, pair: usize, req: &Request) -> usize {
+        if req.session_id == NO_SESSION || !self.pairs[pair].supports_credit {
+            return 0;
+        }
+        match self.residency.get(&req.session_id) {
+            Some(r) if r.pair == pair => req
+                .prefix_len
+                .min(r.tokens as usize)
+                .min(req.input_len.saturating_sub(1)),
+            _ => 0,
+        }
+    }
+
+    /// The resident pair for `req`'s session under the affinity policy,
+    /// with its credit — `None` on a miss, for non-session requests, or
+    /// when the resident pair's estimated TTFT blows `slo` (fall back to
+    /// the load-based pick).
+    fn affinity_target(&self, req: &Request, slo: Option<f64>) -> Option<(usize, usize)> {
+        if self.policy != RoutePolicy::KvAffinity || req.session_id == NO_SESSION {
+            return None;
+        }
+        let r = self.residency.get(&req.session_id)?;
+        let credit = self.resident_credit(r.pair, req);
+        if let Some(slo) = slo {
+            if self.estimated_ttft(r.pair, req.input_len - credit) > slo {
+                return None;
+            }
+        }
+        Some((r.pair, credit))
     }
 
     /// Pick the policy's best pair, optionally restricted to pairs whose
@@ -201,14 +338,18 @@ impl Router {
         let score = |p: &PairLoad, i: usize| -> f64 {
             match self.policy {
                 RoutePolicy::RoundRobin => p.n_routed as f64 / p.rate_share,
-                RoutePolicy::LeastOutstandingTokens => p.outstanding_tokens,
-                RoutePolicy::SloAware => self.estimated_ttft(i, req.input_len),
+                // KvAffinity falls back to the least-outstanding pick for
+                // misses / first turns / sessionless load.
+                RoutePolicy::LeastOutstandingTokens | RoutePolicy::KvAffinity => {
+                    p.outstanding_tokens
+                }
+                RoutePolicy::SloAware => self.estimated_ttft_for(i, req),
             }
         };
         let mut best: Option<(usize, f64)> = None;
         for (i, p) in self.pairs.iter().enumerate() {
             if let Some(slo) = slo {
-                if self.estimated_ttft(i, req.input_len) > slo {
+                if self.estimated_ttft_for(i, req) > slo {
                     continue;
                 }
             }
@@ -223,52 +364,190 @@ impl Router {
         }
     }
 
-    /// Record `req`'s load against `pair`'s live backlog.
-    fn charge(&mut self, pair: usize, req: &Request) {
-        let load = (req.input_len + req.output_len) as u64;
+    /// Record `req`'s load against `pair`'s live backlog; `credit`
+    /// tokens of the prompt are resident there and will not be served
+    /// again.  Returns the charged tokens.
+    fn charge(&mut self, pair: usize, req: &Request, credit: usize) -> u64 {
+        let load = (req.input_len - credit + req.output_len) as u64;
         let p = &mut self.pairs[pair];
         p.outstanding_tokens += load as f64;
         p.n_routed += 1;
         p.tokens_routed += load;
+        load
     }
 
-    /// Route one request; returns the chosen pair index and records its
-    /// load as outstanding.
-    pub fn route(&mut self, req: &Request) -> usize {
-        let best = self.pick(req, None);
-        self.charge(best, req);
-        best
+    fn route_impl(&mut self, req: &Request, slo: Option<f64>) -> RouteDecision {
+        let (pair, kv_credit) = match self.affinity_target(req, slo) {
+            Some(hit) => hit,
+            None => (self.pick(req, slo), 0),
+        };
+        let charged_tokens = self.charge(pair, req, kv_credit);
+        RouteDecision { pair, kv_credit, charged_tokens }
+    }
+
+    /// Route one request; records its load as outstanding.  The caller
+    /// must either [`commit_route`](Self::commit_route) the decision once
+    /// the pair accepts, or release `charged_tokens` via
+    /// [`on_completed`](Self::on_completed) if the pair turns it away.
+    pub fn route(&mut self, req: &Request) -> RouteDecision {
+        self.route_impl(req, None)
     }
 
     /// Route among the pairs whose estimated TTFT meets `slo_ttft_s`, so
     /// an admission decision ("some pair can serve this in time") is
-    /// honoured by the dispatch itself, whatever the base policy.
-    pub fn route_within_slo(&mut self, req: &Request, slo_ttft_s: f64) -> usize {
-        let best = self.pick(req, Some(slo_ttft_s));
-        self.charge(best, req);
-        best
+    /// honoured by the dispatch itself, whatever the base policy.  Under
+    /// KV affinity the resident pair wins only while it is SLO-feasible.
+    pub fn route_within_slo(&mut self, req: &Request, slo_ttft_s: f64) -> RouteDecision {
+        self.route_impl(req, Some(slo_ttft_s))
+    }
+
+    /// The pair accepted the routed request: record KV-hit metrics and,
+    /// under the affinity policy, pin the session's post-turn context KV
+    /// on the chosen pair (evicting least-recently-used sessions when the
+    /// pair's residency budget overflows).
+    pub fn commit_route(&mut self, req: &Request, decision: &RouteDecision) {
+        if req.session_id == NO_SESSION {
+            return;
+        }
+        if req.prefix_len > 0 {
+            self.n_prefix_routed += 1;
+        }
+        if decision.kv_credit > 0 {
+            self.n_kv_hits += 1;
+            self.prefill_tokens_saved += decision.kv_credit as u64;
+        }
+        if self.policy == RoutePolicy::KvAffinity {
+            self.note_residency(decision.pair, req);
+        }
+    }
+
+    /// Pin `req`'s session KV (its full post-turn context) on `pair`.
+    fn note_residency(&mut self, pair: usize, req: &Request) {
+        self.use_seq += 1;
+        if let Some(old) = self.residency.remove(&req.session_id) {
+            self.pairs[old.pair].resident_tokens =
+                self.pairs[old.pair].resident_tokens.saturating_sub(old.tokens);
+        }
+        if !self.pairs[pair].supports_credit {
+            // A DP/PP pair re-prefills every prompt: pinning the session
+            // there would make affinity stick follow-ups to it (skewing
+            // load) without ever saving a token.  The stale residency on
+            // the previous pair was still dropped above.
+            return;
+        }
+        let tokens = (req.input_len + req.output_len) as u64;
+        if tokens > self.pairs[pair].residency_capacity_tokens {
+            return; // context too large to keep warm at all
+        }
+        while self.pairs[pair].resident_tokens + tokens
+            > self.pairs[pair].residency_capacity_tokens
+        {
+            // Evict the least-recently-used session resident on this
+            // pair.  `last_use` values are unique, so the victim is
+            // deterministic regardless of map iteration order.
+            let victim = self
+                .residency
+                .iter()
+                .filter(|(_, r)| r.pair == pair)
+                .min_by_key(|(_, r)| r.last_use)
+                .map(|(id, _)| *id);
+            match victim {
+                Some(id) => {
+                    let r = self.residency.remove(&id).expect("victim exists");
+                    self.pairs[pair].resident_tokens =
+                        self.pairs[pair].resident_tokens.saturating_sub(r.tokens);
+                }
+                None => break,
+            }
+        }
+        self.pairs[pair].resident_tokens += tokens;
+        self.residency.insert(
+            req.session_id,
+            Residency { pair, tokens, last_use: self.use_seq },
+        );
     }
 
     /// A request previously routed to `pair` left the system (finished
-    /// or shed): release its `tokens` from the live backlog.
+    /// or shed): release its charged `tokens` from the live backlog.
     pub fn on_completed(&mut self, pair: usize, tokens: u64) {
         let p = &mut self.pairs[pair];
         p.outstanding_tokens = (p.outstanding_tokens - tokens as f64).max(0.0);
     }
 
+    /// A session ended (its final turn completed, or a turn was shed and
+    /// the conversation aborted): drop its prefix residency so the KV
+    /// budget goes back to live sessions.
+    ///
+    /// A conversation abandoned *between* turns (e.g. the closed-loop
+    /// driver dropping a deferred turn at its retry cap, or a user who
+    /// simply leaves) never produces a terminal event the cluster could
+    /// translate into this call — the router cannot distinguish a
+    /// thinking user from a departed one.  Such residency ages out via
+    /// the per-pair LRU eviction instead, exactly like an idle entry in
+    /// a real KV cache.
+    pub fn release_session(&mut self, session_id: u64) {
+        if let Some(r) = self.residency.remove(&session_id) {
+            self.pairs[r.pair].resident_tokens =
+                self.pairs[r.pair].resident_tokens.saturating_sub(r.tokens);
+        }
+    }
+
+    /// Pair currently holding `session_id`'s prefix KV, if any.
+    pub fn session_residency(&self, session_id: u64) -> Option<usize> {
+        self.residency.get(&session_id).map(|r| r.pair)
+    }
+
+    /// Sessions currently resident across the cluster.
+    pub fn resident_sessions(&self) -> usize {
+        self.residency.len()
+    }
+
+    /// Resident session-KV tokens per pair.
+    pub fn resident_tokens(&self) -> Vec<u64> {
+        self.pairs.iter().map(|p| p.resident_tokens).collect()
+    }
+
+    /// Override pair `i`'s residency budget (tokens) — for tests and for
+    /// operators tuning how much CPI KV may be pinned by warm sessions.
+    pub fn set_residency_capacity_tokens(&mut self, i: usize, tokens: u64) {
+        self.pairs[i].residency_capacity_tokens = tokens;
+    }
+
+    /// Follow-up turns routed to their resident pair.
+    pub fn kv_hits(&self) -> u64 {
+        self.n_kv_hits
+    }
+
+    /// Prefill tokens skipped by KV hits.
+    pub fn prefill_tokens_saved(&self) -> u64 {
+        self.prefill_tokens_saved
+    }
+
+    /// Follow-up turns (non-empty prefix) committed, hit or miss — the
+    /// denominator of the cluster's `kv_hit_rate`.
+    pub fn n_prefix_routed(&self) -> u64 {
+        self.n_prefix_routed
+    }
+
     /// Submit-time SLO admission control: may this request be admitted
     /// under a TTFT target of `slo_ttft_s` seconds?
     ///
-    /// * `Accepted` — some pair's [`estimated_ttft`](Self::estimated_ttft)
-    ///   meets the target;
+    /// * `Accepted` — some pair's prefix-credit-aware estimate
+    ///   ([`estimated_ttft_for`](Self::estimated_ttft_for)) meets the
+    ///   target;
     /// * `Rejected` — no pair could meet the target even with an empty
     ///   backlog (the prompt is inherently too slow for the SLO);
     /// * `Deferred` — transient overload: retry once the least-loaded
     ///   candidate's backlog should have drained below the SLO headroom.
+    ///
+    /// A follow-up turn is judged on the prefill each pair would
+    /// actually run: on the resident pair only the fresh suffix counts,
+    /// so long conversations stop being over-rejected once their prefix
+    /// KV is warm.
     pub fn slo_admission(
         &self,
         now: SimTime,
-        input_len: usize,
+        req: &Request,
         slo_ttft_s: f64,
     ) -> Admission {
         let mut best_idle = f64::INFINITY;
@@ -278,9 +557,10 @@ impl Router {
         // meaningless (near-zero) backlog estimate and dropped.
         let mut best_feasible: Option<(usize, f64)> = None;
         for (i, p) in self.pairs.iter().enumerate() {
-            let idle = p.prefill.predict(input_len);
+            let eff_len = req.input_len - self.resident_credit(i, req);
+            let idle = p.prefill.predict(eff_len);
             best_idle = best_idle.min(idle);
-            let est = self.estimated_ttft(i, input_len);
+            let est = self.estimated_ttft(i, eff_len);
             if est <= slo_ttft_s {
                 return Admission::Accepted;
             }
@@ -302,7 +582,8 @@ impl Router {
         // headroom (the Option is Some here: best_idle <= slo).
         let (best_pair, _) = best_feasible.expect("feasible pair exists");
         let p = &self.pairs[best_pair];
-        let headroom_tokens = (slo_ttft_s - p.prefill.predict(input_len)).max(0.0)
+        let eff_len = req.input_len - self.resident_credit(best_pair, req);
+        let headroom_tokens = (slo_ttft_s - p.prefill.predict(eff_len)).max(0.0)
             * p.effective_drain_tps();
         let excess = (p.outstanding_tokens - headroom_tokens).max(0.0);
         let wait_s = (excess / p.effective_drain_tps()).max(1e-3);
@@ -326,7 +607,21 @@ mod tests {
     }
 
     fn route_all(router: &mut Router, trace: &[Request]) -> Vec<usize> {
-        trace.iter().map(|r| router.route(r)).collect()
+        trace.iter().map(|r| router.route(r).pair).collect()
+    }
+
+    /// Turn `k` of session `sid`: `prefix` replayed tokens + fresh tail.
+    fn session_req(sid: u64, prefix: usize, fresh: usize, output: usize) -> Request {
+        Request {
+            id: sid * 1000 + prefix as u64,
+            arrival_ns: 0,
+            input_len: prefix + fresh,
+            output_len: output,
+            session_id: sid,
+            prefix_len: prefix,
+            kv_credit: 0,
+            final_turn: false,
+        }
     }
 
     #[test]
@@ -354,7 +649,7 @@ mod tests {
         for r in &trace(150, 3) {
             let before = router.outstanding_tokens();
             let min = before.iter().cloned().fold(f64::INFINITY, f64::min);
-            let idx = router.route(r);
+            let idx = router.route(r).pair;
             assert!(
                 before[idx] <= min + 1e-9,
                 "routed to {idx} with backlog {} > min {min}",
@@ -381,7 +676,7 @@ mod tests {
         let cfg = ClusterConfig::new(vec![slow, fast]);
         let mut router = Router::new(RoutePolicy::SloAware, &cfg);
         let t = trace(1, 5);
-        assert_eq!(router.route(&t[0]), 1, "idle cluster: fastest prefill wins");
+        assert_eq!(router.route(&t[0]).pair, 1, "idle cluster: fastest prefill wins");
         // Under sustained all-at-once load the faster pair absorbs more.
         route_all(&mut router, &trace(199, 5));
         let counts = router.routed_counts();
@@ -393,8 +688,10 @@ mod tests {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
         let t = trace(1, 6);
-        let pair = router.route(&t[0]);
+        let d = router.route(&t[0]);
+        let pair = d.pair;
         let load = (t[0].input_len + t[0].output_len) as u64;
+        assert_eq!(d.charged_tokens, load, "no credit: full load charged");
         assert!(router.outstanding_tokens()[pair] > 0.0);
         router.on_completed(pair, load);
         assert_eq!(router.outstanding_tokens()[pair], 0.0);
@@ -438,10 +735,10 @@ mod tests {
         let fast_est = router.estimated_ttft(1, req.input_len);
         assert!(fast_est < slow_est);
         let slo = (fast_est + slow_est) / 2.0; // feasible only on pair 1
-        assert_eq!(router.route_within_slo(&req, slo), 1);
+        assert_eq!(router.route_within_slo(&req, slo).pair, 1);
         // With an SLO nobody meets, it falls back to the plain pick.
         let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
-        assert_eq!(router.route_within_slo(&req, 0.0), 0);
+        assert_eq!(router.route_within_slo(&req, 0.0).pair, 0);
     }
 
     #[test]
@@ -450,10 +747,13 @@ mod tests {
         let mut router = Router::new(RoutePolicy::SloAware, &cfg);
         let now = SimTime::ZERO;
         // Idle cluster, generous SLO: accepted.
-        assert_eq!(router.slo_admission(now, 1000, 10.0), Admission::Accepted);
+        assert_eq!(
+            router.slo_admission(now, &Request::new(0, 0, 1000, 64), 10.0),
+            Admission::Accepted
+        );
         // An SLO below the idle prefill time of every pair: rejected.
         assert!(matches!(
-            router.slo_admission(now, 8000, 1e-6),
+            router.slo_admission(now, &Request::new(0, 0, 8000, 64), 1e-6),
             Admission::Rejected { .. }
         ));
         // Pile on load until the estimate blows the SLO, then expect a
@@ -462,7 +762,7 @@ mod tests {
         for r in &trace(400, 14) {
             router.route(r);
         }
-        match router.slo_admission(now, 1000, slo) {
+        match router.slo_admission(now, &Request::new(0, 0, 1000, 64), slo) {
             Admission::Deferred { retry_at } => assert!(retry_at > now),
             other => panic!("expected Deferred, got {other:?}"),
         }
@@ -500,6 +800,189 @@ mod tests {
             Some(RoutePolicy::LeastOutstandingTokens)
         );
         assert_eq!(RoutePolicy::from_name("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::from_name("kv"), Some(RoutePolicy::KvAffinity));
+        assert_eq!(
+            RoutePolicy::from_name("KV-Affinity"),
+            Some(RoutePolicy::KvAffinity)
+        );
         assert!(RoutePolicy::from_name("random").is_none());
+    }
+
+    // --- KV-affinity ---
+
+    #[test]
+    fn affinity_routes_follow_up_to_resident_pair_with_credit() {
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        // Turn 0 (no prefix): load-based pick, then commit pins residency.
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        assert_eq!(d0.kv_credit, 0);
+        router.commit_route(&t0, &d0);
+        assert_eq!(router.session_residency(1), Some(d0.pair));
+        assert_eq!(router.resident_tokens()[d0.pair], 900);
+        // Turn 1 replays the 900-token context: same pair, full credit.
+        let t1 = session_req(1, 900, 300, 80);
+        let d1 = router.route(&t1);
+        assert_eq!(d1.pair, d0.pair, "follow-up must stick to the resident pair");
+        assert_eq!(d1.kv_credit, 900);
+        // Backlog is charged for the fresh work only.
+        assert_eq!(d1.charged_tokens, (300 + 80) as u64);
+        router.commit_route(&t1, &d1);
+        assert_eq!(router.kv_hits(), 1);
+        assert_eq!(router.prefill_tokens_saved(), 900);
+        assert_eq!(router.n_prefix_routed(), 1);
+        // A different session starts fresh: no credit.
+        let other = session_req(2, 0, 500, 50);
+        assert_eq!(router.route(&other).kv_credit, 0);
+    }
+
+    #[test]
+    fn non_affinity_policies_never_grant_credit() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        for policy in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastOutstandingTokens,
+            RoutePolicy::SloAware,
+        ] {
+            let mut router = Router::new(policy, &cfg);
+            let t0 = session_req(1, 0, 800, 100);
+            let d0 = router.route(&t0);
+            router.commit_route(&t0, &d0);
+            let t1 = session_req(1, 900, 300, 80);
+            let d1 = router.route(&t1);
+            assert_eq!(d1.kv_credit, 0, "{}", policy.name());
+            router.commit_route(&t1, &d1);
+            assert_eq!(router.kv_hits(), 0, "{}", policy.name());
+            assert_eq!(router.n_prefix_routed(), 1, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn residency_capacity_evicts_least_recently_used() {
+        let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        // Budget fits two ~1000-token sessions, not three.
+        router.set_residency_capacity_tokens(0, 2500);
+        for sid in 1..=3u64 {
+            let t = session_req(sid, 0, 900, 100);
+            let d = router.route(&t);
+            router.commit_route(&t, &d);
+        }
+        // Session 1 (least recently used) was evicted to fit session 3.
+        assert_eq!(router.session_residency(1), None);
+        assert_eq!(router.session_residency(2), Some(0));
+        assert_eq!(router.session_residency(3), Some(0));
+        assert_eq!(router.resident_sessions(), 2);
+        assert_eq!(router.resident_tokens()[0], 2000);
+        // An evicted session's follow-up is a miss: no credit.
+        let t1 = session_req(1, 1000, 200, 50);
+        assert_eq!(router.route(&t1).kv_credit, 0);
+        // A context bigger than the whole budget is never pinned.
+        let huge = session_req(9, 0, 4000, 100);
+        let d = router.route(&huge);
+        router.commit_route(&huge, &d);
+        assert_eq!(router.session_residency(9), None);
+    }
+
+    #[test]
+    fn affinity_falls_back_when_resident_pair_blows_the_slo() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        router.commit_route(&t0, &d0);
+        let resident = d0.pair;
+        // Bury the resident pair in backlog: affinity keeps routing the
+        // session's turns there, and none complete.
+        for _ in 0..150 {
+            let t = session_req(1, 900, 2000, 100);
+            let d = router.route(&t);
+            assert_eq!(d.pair, resident);
+            router.commit_route(&t, &d);
+        }
+        let t1 = session_req(1, 900, 300, 80);
+        let slo = router.estimated_ttft(1 - resident, t1.input_len) + 0.1;
+        assert!(
+            router.estimated_ttft_for(resident, &t1) > slo,
+            "resident pair must be infeasible for this test"
+        );
+        let d1 = router.route_within_slo(&t1, slo);
+        assert_eq!(d1.pair, 1 - resident, "SLO-infeasible resident pair skipped");
+        assert_eq!(d1.kv_credit, 0, "fallback pair holds no prefix KV");
+    }
+
+    #[test]
+    fn sessions_are_never_pinned_on_credit_less_pairs() {
+        // Pair 0 is a DP deployment: it re-prefills everything, so
+        // affinity must not pin sessions there (follow-ups would stick
+        // without saving a token).
+        let mut dp = PairConfig::cronus(DeploymentConfig::paper(A100, A10, LLAMA3_8B));
+        dp.system = SystemKind::DpChunked;
+        let cronus = PairConfig::cronus(DeploymentConfig::paper(A100, A30, LLAMA3_8B));
+        let cfg = ClusterConfig::new(vec![dp, cronus]);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        // Turn 0 lands on the (empty, first) DP pair via the LOT
+        // fallback; the commit must not create residency.
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        assert_eq!(d0.pair, 0);
+        router.commit_route(&t0, &d0);
+        assert_eq!(router.session_residency(1), None);
+        // The follow-up is a plain load-based pick with zero credit, not
+        // a sticky route to the DP pair.
+        let t1 = session_req(1, 900, 300, 80);
+        let d1 = router.route(&t1);
+        assert_eq!(d1.kv_credit, 0);
+        assert_eq!(router.kv_hits(), 0);
+    }
+
+    #[test]
+    fn release_session_frees_residency() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        router.commit_route(&t0, &d0);
+        assert_eq!(router.resident_sessions(), 1);
+        router.release_session(1);
+        assert_eq!(router.resident_sessions(), 0);
+        assert_eq!(router.resident_tokens(), vec![0, 0]);
+        // Releasing an unknown session is a no-op.
+        router.release_session(99);
+        assert_eq!(router.resident_sessions(), 0);
+    }
+
+    #[test]
+    fn estimated_ttft_accounts_for_resident_prefix() {
+        // Regression (tentpole satellite): the SLO admission path used to
+        // assume a full-prompt prefill for every request, over-rejecting
+        // follow-up turns whose prefix KV is already resident.
+        let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 500, 100);
+        let d0 = router.route(&t0);
+        router.commit_route(&t0, &d0);
+        router.on_completed(d0.pair, d0.charged_tokens);
+        // Follow-up: 600 resident + 400 fresh.  Pick an SLO between the
+        // fresh-only and full-prompt idle prefill times.
+        let t1 = session_req(1, 600, 400, 50);
+        let full = router.estimated_ttft(0, t1.input_len);
+        let fresh = router.estimated_ttft(0, t1.input_len - 600);
+        assert!(fresh < full);
+        let slo = (fresh + full) / 2.0;
+        assert!(
+            router.estimated_ttft_for(0, &t1) <= slo,
+            "credit-aware estimate must see only the fresh suffix"
+        );
+        // Old behaviour (full-prompt estimate) would have rejected: the
+        // idle full-prompt prefill already exceeds the SLO.
+        assert_eq!(router.slo_admission(SimTime::ZERO, &t1, slo), Admission::Accepted);
+        // A sessionless request of the same length is still rejected.
+        let cold = Request::new(7, 0, t1.input_len, 50);
+        assert!(matches!(
+            router.slo_admission(SimTime::ZERO, &cold, slo),
+            Admission::Rejected { .. }
+        ));
     }
 }

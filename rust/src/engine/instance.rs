@@ -203,6 +203,10 @@ pub struct EngineInstance {
     pub n_preemptions: u64,
     pub tokens_prefilled: u64,
     pub tokens_decoded: u64,
+    /// Of `tokens_prefilled`, context made present by KV *transfers*
+    /// rather than local compute — subtract to get the prefill tokens
+    /// this engine actually executed.
+    pub tokens_kv_received: u64,
 }
 
 impl EngineInstance {
@@ -238,6 +242,7 @@ impl EngineInstance {
             n_preemptions: 0,
             tokens_prefilled: 0,
             tokens_decoded: 0,
+            tokens_kv_received: 0,
         }
     }
 
@@ -489,18 +494,24 @@ impl EngineInstance {
             if needs_recv {
                 // First iteration = KV transfer, replacing this request's
                 // compute (it contributes nothing else this iteration).
-                let offset = self.slots[idx].req.prefill_offset;
-                plan.kv_recv.push((self.slots[idx].req.id, offset));
+                // Only the non-resident part of the offset crosses the
+                // link — a session prefix already in this engine's pool
+                // costs neither transfer nor compute.
+                let transfer = self.slots[idx].req.transfer_len();
+                plan.kv_recv.push((self.slots[idx].req.id, transfer));
                 plan.recv_slots.push(SlotRef { slot, epoch: self.slots[idx].epoch });
                 self.slots[idx].req.needs_kv_recv = false;
             } else {
                 let chunk = local_prefill.min(budget);
                 if chunk == 0 {
                     // Zero-length local prefill without recv cannot happen
-                    // (offset 0 => local == input >= 1), but guard anyway.
+                    // (resident_len < input => local >= 1), but guard anyway.
                     continue;
                 }
-                plan.shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end: chunk });
+                // A fully resident prefix (no transfer) is context the
+                // first chunk already attends over.
+                let ctx_end = self.slots[idx].req.prefill_offset + chunk;
+                plan.shape.prefill.push(PrefillSeg { q_tokens: chunk, ctx_end });
                 plan.prefill_parts.push((
                     self.slots[idx].req.id,
                     chunk,
@@ -559,6 +570,7 @@ impl EngineInstance {
         for (k, &(id, tokens)) in plan.kv_recv.iter().enumerate() {
             events.push(EngineEvent::KvReceived(id));
             self.tokens_prefilled += tokens as u64; // context made present
+            self.tokens_kv_received += tokens as u64; // ... without compute
             let sr = plan.recv_slots[k];
             debug_assert_eq!(self.slots[sr.slot as usize].epoch, sr.epoch);
             // If nothing remains to prefill locally (full disaggregation),
@@ -739,8 +751,10 @@ impl EngineInstance {
         // planning pass) instead of an O(n) `retain`.
         self.slots[idx].epoch = self.slots[idx].epoch.wrapping_add(1);
         // Recompute everything locally on resume: the engine holds the
-        // full model + prompt, so a lost transferred prefix is rebuilt.
+        // full model + prompt, so a lost transferred (or resident)
+        // prefix is rebuilt.
         self.slots[idx].req.prefill_offset = 0;
+        self.slots[idx].req.resident_len = 0;
         self.slots[idx].req.needs_kv_recv = false;
         self.slots[idx].req.phase = Phase::Queued;
         self.waiting.push_front(slot);
@@ -992,6 +1006,49 @@ mod tests {
         assert_eq!(p2.shape.prefill[0].ctx_end, 1000);
         let ev = e.complete_iteration(&p2);
         assert!(ev.contains(&EngineEvent::FirstToken(1)));
+    }
+
+    #[test]
+    fn resident_prefix_skips_transfer_and_compute() {
+        // 1000-token prompt, offset 700 of which 300 are session-resident:
+        // only 400 cross the link, and executed prefill excludes both the
+        // transfer and the resident prefix.
+        let mut e = engine(512, 100_000);
+        e.submit(EngineRequest::with_prefix_credit(1, 1000, 3, 700, 300));
+        let p1 = e.plan_iteration().unwrap();
+        assert_eq!(p1.kv_recv, vec![(1, 400)]);
+        let ev = e.complete_iteration(&p1);
+        assert_eq!(ev, vec![EngineEvent::KvReceived(1)]);
+        assert_eq!(e.tokens_kv_received, 400);
+        // Remaining local prefill (300) with full-context attention.
+        let p2 = e.plan_iteration().unwrap();
+        assert_eq!(p2.prefill_parts, vec![(1, 300, true)]);
+        assert_eq!(p2.shape.prefill[0].ctx_end, 1000);
+        let ev = e.complete_iteration(&p2);
+        assert!(ev.contains(&EngineEvent::FirstToken(1)));
+        // tokens_prefilled = transfer (400) + local (300); executed
+        // compute = 300; the 300 resident tokens cost nothing.
+        assert_eq!(e.tokens_prefilled, 700);
+        assert_eq!(e.tokens_prefilled - e.tokens_kv_received, 300);
+        run_to_completion(&mut e);
+    }
+
+    #[test]
+    fn fully_resident_offset_needs_no_transfer_iteration() {
+        // Offset entirely resident: no KvReceived, the first iteration
+        // goes straight to local prefill of the fresh suffix.
+        let mut e = engine(512, 100_000);
+        e.submit(EngineRequest::with_prefix_credit(1, 800, 2, 500, 500));
+        let p1 = e.plan_iteration().unwrap();
+        assert!(p1.kv_recv.is_empty());
+        assert_eq!(p1.prefill_parts, vec![(1, 300, true)]);
+        assert_eq!(p1.shape.prefill[0].ctx_end, 800);
+        let ev = e.complete_iteration(&p1);
+        assert!(ev.contains(&EngineEvent::FirstToken(1)));
+        assert_eq!(e.tokens_kv_received, 0);
+        assert_eq!(e.tokens_prefilled, 300);
+        run_to_completion(&mut e);
+        assert_eq!(e.kv_allocator().n_requests(), 0, "KV leaked");
     }
 
     #[test]

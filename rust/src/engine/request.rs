@@ -22,12 +22,19 @@ pub struct EngineRequest {
     pub id: ReqId,
     pub input_len: usize,
     pub output_len: usize,
-    /// Prompt tokens whose KV was computed on another instance (Cronus
-    /// partial prefill).  `prefill_offset == input_len` is full
-    /// disaggregation: this engine only decodes.
+    /// Prompt tokens whose KV was computed elsewhere — on another
+    /// instance (Cronus partial prefill) or in a previous turn of the
+    /// same conversation (resident session prefix).
+    /// `prefill_offset == input_len` is full disaggregation: this engine
+    /// only decodes.
     pub prefill_offset: usize,
-    /// KV for `[0, prefill_offset)` must still be fetched over the link;
-    /// cleared once the transfer iteration completes.
+    /// Leading `prefill_offset` tokens whose KV is *already resident* in
+    /// this engine's pool (session prefix reuse): neither recomputed nor
+    /// transferred.  Only `[resident_len, prefill_offset)` moves over the
+    /// link.
+    pub resident_len: usize,
+    /// KV for `[resident_len, prefill_offset)` must still be fetched over
+    /// the link; cleared once the transfer iteration completes.
     pub needs_kv_recv: bool,
     pub phase: Phase,
 }
@@ -40,6 +47,7 @@ impl EngineRequest {
             input_len,
             output_len,
             prefill_offset: 0,
+            resident_len: 0,
             needs_kv_recv: false,
             phase: Phase::Queued,
         }
@@ -53,15 +61,42 @@ impl EngineRequest {
         output_len: usize,
         prefill_offset: usize,
     ) -> Self {
+        Self::with_prefix_credit(id, input_len, output_len, prefill_offset, 0)
+    }
+
+    /// A request whose first `prefill_offset` prompt tokens carry KV from
+    /// elsewhere, of which the leading `resident_len` are already in this
+    /// engine's pool (session prefix reuse — no transfer, no compute);
+    /// only `[resident_len, prefill_offset)` is pulled over the link.
+    pub fn with_prefix_credit(
+        id: ReqId,
+        input_len: usize,
+        output_len: usize,
+        prefill_offset: usize,
+        resident_len: usize,
+    ) -> Self {
         assert!(prefill_offset <= input_len);
+        assert!(resident_len <= prefill_offset);
+        // A fully resident whole prompt would leave the engine nothing
+        // to do and nothing to transfer — at least one prompt token must
+        // be computed or received (callers cap credit at input_len - 1).
+        assert!(resident_len == 0 || resident_len < input_len);
         EngineRequest {
             id,
             input_len,
             output_len,
             prefill_offset,
-            needs_kv_recv: prefill_offset > 0,
+            resident_len,
+            needs_kv_recv: prefill_offset > resident_len,
             phase: Phase::Queued,
         }
+    }
+
+    /// KV tokens that must move over the link before this engine can
+    /// continue the prefill (the non-resident part of the offset).
+    #[inline]
+    pub fn transfer_len(&self) -> usize {
+        self.prefill_offset - self.resident_len
     }
 
     /// Prompt tokens this engine still has to prefill.
@@ -138,6 +173,29 @@ mod tests {
     fn zero_offset_needs_no_recv() {
         let r = EngineRequest::with_offset(4, 100, 10, 0);
         assert!(!r.needs_kv_recv);
+    }
+
+    #[test]
+    fn resident_prefix_shrinks_the_transfer() {
+        // 70 offset tokens, 30 of them already resident: 40 transfer.
+        let r = EngineRequest::with_prefix_credit(6, 100, 10, 70, 30);
+        assert!(r.needs_kv_recv);
+        assert_eq!(r.transfer_len(), 40);
+        assert_eq!(r.local_prefill_len(), 30);
+        // Fully resident offset: no transfer at all.
+        let r = EngineRequest::with_prefix_credit(7, 100, 10, 30, 30);
+        assert!(!r.needs_kv_recv);
+        assert_eq!(r.transfer_len(), 0);
+        assert_eq!(r.local_prefill_len(), 70);
+        // Plain with_offset keeps the old all-transferred semantics.
+        let r = EngineRequest::with_offset(8, 100, 10, 70);
+        assert_eq!(r.transfer_len(), 70);
+    }
+
+    #[test]
+    #[should_panic]
+    fn resident_larger_than_offset_panics() {
+        EngineRequest::with_prefix_credit(9, 100, 10, 50, 51);
     }
 
     #[test]

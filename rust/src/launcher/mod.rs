@@ -13,11 +13,13 @@ use crate::simgpu::fit;
 use crate::simgpu::model_desc;
 use crate::simgpu::perfmodel::PerfModel;
 use crate::systems::cluster::{build_cluster_system, ClusterSystem};
+use crate::systems::driver::{closed_loop, ClosedLoopStats};
 use crate::systems::driver::replay_trace;
-use crate::systems::{build_system, RunOutcome};
+use crate::systems::{build_system, prefill_tokens_executed, RunOutcome};
 use crate::util::rng::Rng;
 use crate::workload::arrival::{at_rate, stamp, ArrivalProcess};
 use crate::workload::azure::{generate, AzureTraceConfig};
+use crate::workload::session::{generate_sessions, total_turns, Session, SessionConfig};
 use crate::workload::Request;
 
 /// Shared experiment options.
@@ -406,6 +408,108 @@ pub fn cluster_sweep_topology(
     (table, points)
 }
 
+// ---------------------------------------------------------------------------
+// Closed-loop sessions + KV-affinity routing (beyond the paper)
+// ---------------------------------------------------------------------------
+
+/// One row of the closed-loop session sweep.
+pub struct SessionPoint {
+    pub policy: RoutePolicy,
+    pub outcome: RunOutcome,
+    pub stats: ClosedLoopStats,
+    /// Prefill tokens the cluster actually computed (excludes KV
+    /// transfers and resident session prefixes).
+    pub prefill_tokens_executed: u64,
+}
+
+/// Serve a session workload closed-loop on a cluster under `policy`.
+pub fn closed_loop_cluster(
+    cluster: &ClusterConfig,
+    policy: RoutePolicy,
+    slo_ttft_s: Option<f64>,
+    sessions: &[Session],
+) -> (RunOutcome, ClosedLoopStats) {
+    let mut sys =
+        ClusterSystem::new(cluster.clone(), policy).with_slo_ttft(slo_ttft_s);
+    closed_loop(&mut sys, sessions)
+}
+
+/// The standard closed-loop session workload for the affinity benches:
+/// `seed` keeps it reproducible, `think_mean_s` models the user.
+pub fn session_workload(
+    n_sessions: usize,
+    think_mean_s: f64,
+    seed: u64,
+) -> Vec<Session> {
+    generate_sessions(&SessionConfig {
+        n_sessions,
+        think_mean_s,
+        seed,
+        ..SessionConfig::default()
+    })
+}
+
+/// Drive the same closed-loop session workload under every routing
+/// policy and tabulate turns served, latency tails, executed prefill
+/// and KV-affinity hit accounting — the measurement behind
+/// `cronus bench-cluster --closed-loop` and `benches/session_affinity`.
+pub fn session_affinity_sweep(
+    sessions: &[Session],
+    cluster: &ClusterConfig,
+    slo_ttft_s: Option<f64>,
+) -> (Table, Vec<SessionPoint>) {
+    let n_turns = total_turns(sessions);
+    let mut table = Table::new(
+        format!(
+            "Closed-loop sessions: {} sessions / {} turns on {}{}",
+            sessions.len(),
+            n_turns,
+            cluster.label(),
+            match slo_ttft_s {
+                Some(slo) => format!(", TTFT SLO {slo:.2}s"),
+                None => String::new(),
+            }
+        ),
+        &[
+            "Policy",
+            "turns",
+            "thpt (req/s)",
+            "TTFT p99 (s)",
+            "TBT p99 (s)",
+            "prefill tok",
+            "kv hits",
+            "hit rate",
+            "saved tok",
+            "shed",
+        ],
+    );
+    let mut points = Vec::new();
+    for policy in RoutePolicy::ALL {
+        let (outcome, stats) = closed_loop_cluster(cluster, policy, slo_ttft_s, sessions);
+        let executed = prefill_tokens_executed(&outcome);
+        let r = &outcome.report;
+        table.row(vec![
+            policy.name().to_string(),
+            format!("{}/{}", stats.n_finished_turns, n_turns),
+            format!("{:.2}", r.throughput_rps),
+            format!("{:.3}", r.ttft_p99_s),
+            format!("{:.4}", r.tbt_p99_s),
+            executed.to_string(),
+            r.n_kv_hits.to_string(),
+            format!("{:.0}%", 100.0 * r.kv_hit_rate),
+            r.prefill_tokens_saved.to_string(),
+            r.n_rejected.to_string(),
+        ]);
+        points.push(SessionPoint {
+            policy,
+            outcome,
+            stats,
+            prefill_tokens_executed: executed,
+        });
+    }
+    (table, points)
+}
+
 /// Cluster max-throughput measurement (the Table 2 procedure lifted to
 /// N pairs): all requests at t = 0.
 pub fn cluster_max_throughput(
@@ -504,6 +608,29 @@ mod tests {
         let s = table.render();
         assert!(s.contains("TTFT SLO"), "{s}");
         assert!(s.contains("shed"), "{s}");
+    }
+
+    #[test]
+    fn session_affinity_sweep_reports_all_policies() {
+        let sessions = session_workload(5, 0.5, 7);
+        let cluster = ClusterConfig::mixed(2, model_desc::LLAMA3_8B);
+        let (table, points) = session_affinity_sweep(&sessions, &cluster, None);
+        assert_eq!(points.len(), RoutePolicy::ALL.len());
+        let s = table.render();
+        assert!(s.contains("kv-affinity"), "{s}");
+        assert!(s.contains("hit rate"), "{s}");
+        let lot = points
+            .iter()
+            .find(|p| p.policy == RoutePolicy::LeastOutstandingTokens)
+            .unwrap();
+        let aff = points
+            .iter()
+            .find(|p| p.policy == RoutePolicy::KvAffinity)
+            .unwrap();
+        // Same completed turns, strictly fewer executed prefill tokens.
+        assert_eq!(lot.stats.n_finished_turns, aff.stats.n_finished_turns);
+        assert!(aff.prefill_tokens_executed < lot.prefill_tokens_executed);
+        assert!(aff.outcome.report.kv_hit_rate > 0.0);
     }
 
     #[test]

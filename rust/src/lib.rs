@@ -23,9 +23,13 @@
 //!
 //! Beyond the paper's single pair, [`config::topology`] describes an
 //! N-pair heterogeneous cluster, [`cronus::router`] routes requests
-//! across the pairs (round-robin / least-outstanding-tokens /
-//! SLO-aware), and [`systems::cluster::ClusterSystem`] serves a trace on
-//! the whole fleet — `cargo run --example cluster_scaleout`.
+//! across the pairs (round-robin / least-outstanding-tokens / SLO-aware
+//! / KV-affinity), and [`systems::cluster::ClusterSystem`] serves a
+//! trace on the whole fleet — `cargo run --example cluster_scaleout`.
+//! [`workload::session`] + [`systems::driver::closed_loop`] drive
+//! multi-turn conversations closed-loop (think time between turns), the
+//! regime where KV-affinity routing skips re-prefilling each turn's
+//! replayed context — `cronus bench-cluster --closed-loop`.
 
 #![allow(clippy::too_many_arguments, clippy::type_complexity)]
 

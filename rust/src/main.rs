@@ -128,7 +128,8 @@ fn main() {
             .opt("pairs", "max pairs to sweep (ignored with --config)", Some("4"))
             .opt(
                 "policy",
-                "route policy (round-robin | least-outstanding | slo-aware)",
+                "route policy (round-robin | least-outstanding | slo-aware | \
+                 kv-affinity)",
                 Some("least-outstanding"),
             )
             .opt(
@@ -137,6 +138,17 @@ fn main() {
                 Some("0"),
             )
             .opt("config", "TOML file with a [topology] section", None)
+            .flag(
+                "closed-loop",
+                "serve multi-turn sessions closed-loop (think time between \
+                 turns) and compare routing policies incl. kv-affinity",
+            )
+            .opt("sessions", "closed-loop sessions", Some("60"))
+            .opt(
+                "think-ms",
+                "mean think time between turns in ms (closed-loop)",
+                Some("2000"),
+            )
             .flag("help", "print usage"),
             &raw,
             |args| {
@@ -147,6 +159,39 @@ fn main() {
                 });
                 let slo_ms = args.get_f64("slo-ttft-ms").unwrap();
                 let slo = (slo_ms > 0.0).then_some(slo_ms / 1e3);
+                if args.has_flag("closed-loop") {
+                    // Closed-loop mode: same session workload under every
+                    // routing policy on a fixed cluster.
+                    let cluster = match args.get("config") {
+                        Some(path) => cluster_from_toml(path),
+                        None => cronus::config::ClusterConfig::mixed(
+                            args.get_usize("pairs").unwrap(),
+                            cronus::simgpu::model_desc::LLAMA3_8B,
+                        ),
+                    };
+                    let sessions = launcher::session_workload(
+                        args.get_usize("sessions").unwrap(),
+                        args.get_f64("think-ms").unwrap() / 1e3,
+                        args.get_u64("seed").unwrap(),
+                    );
+                    let (table, points) =
+                        launcher::session_affinity_sweep(&sessions, &cluster, slo);
+                    table.print();
+                    if let Some(aff) = points
+                        .iter()
+                        .find(|p| p.policy == RoutePolicy::KvAffinity)
+                    {
+                        let r = &aff.outcome.report;
+                        println!(
+                            "\nkv-affinity: {} hits ({:.0}% of follow-ups), \
+                             {} prefill tokens saved",
+                            r.n_kv_hits,
+                            100.0 * r.kv_hit_rate,
+                            r.prefill_tokens_saved
+                        );
+                    }
+                    return;
+                }
                 let (table, points) = match args.get("config") {
                     Some(path) => {
                         let cluster = cluster_from_toml(path);

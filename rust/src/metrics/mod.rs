@@ -155,6 +155,15 @@ pub struct Report {
     pub tbt_p99_s: f64,
     pub e2e_p50_s: f64,
     pub e2e_p99_s: f64,
+    /// Follow-up turns routed to the pair already holding their session's
+    /// prefix KV (cluster-level; 0 outside KV-affinity routing).
+    pub n_kv_hits: usize,
+    /// Prefill tokens those hits skipped (neither recomputed nor
+    /// transferred).
+    pub prefill_tokens_saved: u64,
+    /// `n_kv_hits` / follow-up turns routed (turns with a non-empty
+    /// session prefix); 0.0 when the workload has no follow-up turns.
+    pub kv_hit_rate: f64,
     /// Raw TTFT samples, one per request that produced a first token.
     /// Sorted ascending ([`Report::from_samples`] sorts once and derives
     /// every percentile from the sorted vector).
@@ -212,6 +221,9 @@ impl Report {
             tbt_p99_s: percentile_of_sorted(&tbt, 99.0),
             e2e_p50_s: percentile_of_sorted(&e2e, 50.0),
             e2e_p99_s: percentile_of_sorted(&e2e, 99.0),
+            n_kv_hits: 0,
+            prefill_tokens_saved: 0,
+            kv_hit_rate: 0.0,
             ttft_samples: ttft,
             tbt_samples: tbt,
             e2e_samples: e2e,
@@ -233,12 +245,16 @@ impl Report {
         let mut n_finished = 0usize;
         let mut n_rejected = 0usize;
         let mut n_output_tokens = 0usize;
+        let mut n_kv_hits = 0usize;
+        let mut prefill_tokens_saved = 0u64;
         let mut makespan_s = 0.0f64;
         for p in parts {
             n_requests += p.n_requests;
             n_finished += p.n_finished;
             n_rejected += p.n_rejected;
             n_output_tokens += p.n_output_tokens;
+            n_kv_hits += p.n_kv_hits;
+            prefill_tokens_saved += p.prefill_tokens_saved;
             makespan_s = makespan_s.max(p.makespan_s);
             ttft.extend_from_slice(&p.ttft_samples);
             tbt.extend_from_slice(&p.tbt_samples);
@@ -255,6 +271,10 @@ impl Report {
             e2e,
         );
         report.n_rejected = n_rejected;
+        report.n_kv_hits = n_kv_hits;
+        report.prefill_tokens_saved = prefill_tokens_saved;
+        // `kv_hit_rate` needs the follow-up-turn denominator, which the
+        // per-pair parts don't carry; the cluster sets it after merging.
         report
     }
     /// One-line summary used by benches and examples.
@@ -273,6 +293,13 @@ impl Report {
         );
         if self.n_rejected > 0 {
             s.push_str(&format!("  shed {}", self.n_rejected));
+        }
+        if self.n_kv_hits > 0 {
+            s.push_str(&format!(
+                "  kv-hit {:.0}% (saved {} tok)",
+                100.0 * self.kv_hit_rate,
+                self.prefill_tokens_saved
+            ));
         }
         s
     }
@@ -436,6 +463,25 @@ mod tests {
         assert_eq!(r.ttft_samples, sorted, "samples retained sorted");
         assert_eq!(r.ttft_p50_s, crate::util::stats::percentile(&raw, 50.0));
         assert_eq!(r.ttft_p99_s, crate::util::stats::percentile(&raw, 99.0));
+    }
+
+    #[test]
+    fn kv_hits_merge_and_surface_in_summary() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_token(1, t(0.1));
+        c.on_finish(1, t(0.2));
+        let mut r = c.report("x");
+        assert_eq!(r.n_kv_hits, 0);
+        assert!(!r.summary().contains("kv-hit"));
+        r.n_kv_hits = 3;
+        r.prefill_tokens_saved = 1200;
+        r.kv_hit_rate = 0.75;
+        assert!(r.summary().contains("kv-hit 75%"), "{}", r.summary());
+        assert!(r.summary().contains("saved 1200 tok"), "{}", r.summary());
+        let merged = Report::merge("m", &[r.clone(), r]);
+        assert_eq!(merged.n_kv_hits, 6);
+        assert_eq!(merged.prefill_tokens_saved, 2400);
     }
 
     #[test]

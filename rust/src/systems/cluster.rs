@@ -18,6 +18,12 @@
 //! routing: requests the cluster cannot serve in time are `Rejected`
 //! (surfaced as [`SystemEvent::Shed`] and `Report::n_rejected`) or
 //! `Deferred` with a retry hint for the open-loop driver.
+//!
+//! Session requests participate in KV-affinity routing: the cluster
+//! stamps the router's granted `kv_credit` into the request handed to
+//! the resident pair, releases residency when a session's final turn
+//! completes (or a turn sheds and the conversation aborts), and reports
+//! `Report::{n_kv_hits, kv_hit_rate, prefill_tokens_saved}` on drain.
 
 use crate::config::topology::ClusterConfig;
 use crate::cronus::router::{RoutePolicy, Router};
@@ -28,7 +34,16 @@ use crate::systems::{
     RunOutcome, ServingSystem, SystemEvent,
 };
 use crate::util::fxhash::FxHashMap;
-use crate::workload::Request;
+use crate::workload::{Request, NO_SESSION};
+
+/// Cluster-side record of one in-flight request.
+struct AssignedReq {
+    pair: usize,
+    /// Backlog tokens to release via [`Router::on_completed`].
+    tokens: u64,
+    session_id: u64,
+    final_turn: bool,
+}
 
 pub struct ClusterSystem {
     cfg: ClusterConfig,
@@ -39,8 +54,8 @@ pub struct ClusterSystem {
     router: Router,
     /// One online serving system per pair, same index order as `cfg`.
     systems: Vec<Box<dyn ServingSystem>>,
-    /// In-flight requests: id → (pair index, backlog tokens to release).
-    assigned: FxHashMap<u64, (usize, u64)>,
+    /// In-flight requests by id.
+    assigned: FxHashMap<u64, AssignedReq>,
     routed_counts: Vec<u64>,
     /// Requests shed by the router itself (SLO admission), not by pairs.
     n_router_rejected: usize,
@@ -87,7 +102,8 @@ impl ClusterSystem {
     }
 
     /// Step every pair to `until`, feed completions back into the
-    /// router's live backlog, and buffer the merged events.
+    /// router's live backlog (and session-residency lifecycle), and
+    /// buffer the merged events.
     fn collect_until(&mut self, until: SimTime) {
         let start = self.pending.len();
         for (i, sys) in self.systems.iter_mut().enumerate() {
@@ -95,9 +111,16 @@ impl ClusterSystem {
                 if let SystemEvent::Finished { id, .. } | SystemEvent::Shed { id, .. } =
                     &ev
                 {
-                    if let Some((pair, tokens)) = self.assigned.remove(id) {
-                        debug_assert_eq!(pair, i);
-                        self.router.on_completed(pair, tokens);
+                    if let Some(a) = self.assigned.remove(id) {
+                        debug_assert_eq!(a.pair, i);
+                        self.router.on_completed(a.pair, a.tokens);
+                        // A finished final turn releases the session's
+                        // prefix KV; a shed turn aborts the conversation,
+                        // so its residency is dead weight either way.
+                        let shed = matches!(ev, SystemEvent::Shed { .. });
+                        if a.session_id != NO_SESSION && (a.final_turn || shed) {
+                            self.router.release_session(a.session_id);
+                        }
                     }
                 }
                 self.pending.push(ev);
@@ -120,10 +143,14 @@ impl ServingSystem for ClusterSystem {
         self.collect_until(SimTime(t.0.saturating_sub(1)));
 
         if let Some(slo) = self.slo_ttft_s {
-            match self.router.slo_admission(t, req.input_len, slo) {
+            match self.router.slo_admission(t, &req, slo) {
                 Admission::Accepted => {}
                 Admission::Rejected { reason } => {
                     self.n_router_rejected += 1;
+                    if req.session_id != NO_SESSION {
+                        // The conversation ends here; free its residency.
+                        self.router.release_session(req.session_id);
+                    }
                     self.pending.push(SystemEvent::Shed {
                         id: req.id,
                         t,
@@ -137,26 +164,45 @@ impl ServingSystem for ClusterSystem {
 
         // With an SLO, dispatch only to pairs the admission check deemed
         // able to serve in time, whatever the base policy prefers.
-        let pair = match self.slo_ttft_s {
+        let decision = match self.slo_ttft_s {
             Some(slo) => self.router.route_within_slo(&req, slo),
             None => self.router.route(&req),
         };
-        let tokens = (req.input_len + req.output_len) as u64;
-        match self.systems[pair].submit(t, req) {
+        let pair = decision.pair;
+        // The chosen pair may skip the resident prefix: stamp the granted
+        // credit into the request it sees.
+        let mut pair_req = req;
+        pair_req.kv_credit = decision.kv_credit;
+        match self.systems[pair].submit(t, pair_req) {
             Admission::Accepted => {
-                self.assigned.insert(req.id, (pair, tokens));
+                // Commit only on acceptance, so residency and hit
+                // accounting never reflect requests the pair turned away.
+                self.router.commit_route(&req, &decision);
+                self.assigned.insert(
+                    req.id,
+                    AssignedReq {
+                        pair,
+                        tokens: decision.charged_tokens,
+                        session_id: req.session_id,
+                        final_turn: req.final_turn,
+                    },
+                );
                 self.routed_counts[pair] += 1;
                 Admission::Accepted
             }
             Admission::Rejected { reason } => {
                 // The pair recorded the shed itself; release the backlog
-                // the router just charged.
-                self.router.on_completed(pair, tokens);
+                // the router just charged.  The conversation aborts with
+                // it, so its residency goes too.
+                self.router.on_completed(pair, decision.charged_tokens);
+                if req.session_id != NO_SESSION {
+                    self.router.release_session(req.session_id);
+                }
                 self.routed_counts[pair] += 1;
                 Admission::Rejected { reason }
             }
             deferred @ Admission::Deferred { .. } => {
-                self.router.on_completed(pair, tokens);
+                self.router.on_completed(pair, decision.charged_tokens);
                 deferred
             }
         }
@@ -198,6 +244,7 @@ impl ServingSystem for ClusterSystem {
                     n_preemptions: 0,
                     tokens_prefilled: 0,
                     tokens_decoded: 0,
+                    tokens_kv_received: 0,
                 });
                 continue;
             }
@@ -215,6 +262,15 @@ impl ServingSystem for ClusterSystem {
         // the cluster level.
         report.n_requests += self.n_router_rejected;
         report.n_rejected += self.n_router_rejected;
+        // KV-affinity accounting lives in the router, not the pairs.
+        report.n_kv_hits = self.router.kv_hits() as usize;
+        report.prefill_tokens_saved = self.router.prefill_tokens_saved();
+        let prefix_routed = self.router.n_prefix_routed();
+        report.kv_hit_rate = if prefix_routed > 0 {
+            self.router.kv_hits() as f64 / prefix_routed as f64
+        } else {
+            0.0
+        };
 
         // Reset for a fresh run.
         self.router = Router::new(self.policy, &self.cfg);
@@ -341,6 +397,54 @@ mod tests {
         assert_eq!(finishes, 30);
         // Live backlog fully released at the end of the run.
         assert!(sys.assigned.is_empty());
+    }
+
+    #[test]
+    fn closed_loop_affinity_reports_kv_hits_and_saves_prefill() {
+        use crate::systems::driver::closed_loop;
+        use crate::systems::prefill_tokens_executed;
+        use crate::workload::session::{generate_sessions, SessionConfig};
+        let sessions = generate_sessions(&SessionConfig {
+            n_sessions: 6,
+            min_turns: 2,
+            max_turns: 4,
+            think_mean_s: 0.5,
+            start_window_s: 2.0,
+            mean_new_input: 256.0,
+            max_new_input: 1024,
+            seed: 9,
+            ..SessionConfig::default()
+        });
+        let n_turns: usize = sessions.iter().map(|s| s.turns.len()).sum();
+        let total_input: u64 = sessions
+            .iter()
+            .map(|s| s.total_input_tokens() as u64)
+            .sum();
+
+        let run = |policy: RoutePolicy| {
+            let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+            let mut sys = ClusterSystem::new(cfg, policy);
+            let (out, stats) = closed_loop(&mut sys, &sessions);
+            assert!(sys.assigned.is_empty(), "{}", policy.name());
+            (out, stats)
+        };
+
+        let (lot, lot_stats) = run(RoutePolicy::LeastOutstandingTokens);
+        let (aff, aff_stats) = run(RoutePolicy::KvAffinity);
+        assert_eq!(lot_stats.n_finished_turns, n_turns);
+        assert_eq!(aff_stats.n_finished_turns, n_turns);
+
+        // KV-oblivious routing recomputes every prompt token; affinity
+        // skips exactly the resident prefixes it reports as saved.
+        assert_eq!(prefill_tokens_executed(&lot), total_input);
+        assert_eq!(lot.report.n_kv_hits, 0);
+        assert!(aff.report.n_kv_hits > 0);
+        assert!(aff.report.kv_hit_rate > 0.0);
+        assert!(aff.report.prefill_tokens_saved > 0);
+        assert_eq!(
+            prefill_tokens_executed(&aff),
+            total_input - aff.report.prefill_tokens_saved
+        );
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Open-loop trace replay over the online [`ServingSystem`] lifecycle.
+//! Open- and closed-loop drivers over the online [`ServingSystem`]
+//! lifecycle.
 //!
 //! [`replay_trace`] is the migration bridge from the old batch
 //! `run(trace)` API: it feeds every recorded arrival to
@@ -9,14 +10,23 @@
 //! [`ServingSystem::drain`].  Every launcher, bench, example and CLI
 //! path serves traces through this harness.
 //!
+//! [`closed_loop`] drives multi-turn [`Session`]s the way real users do:
+//! turn *k+1* is submitted only after turn *k*'s `Finished` event plus
+//! the user's think time, so arrival times are an *output* of the
+//! simulation.  Built purely on `submit` / `next_event_at` / `advance`,
+//! it works against any serving system — a bare pair or the N-pair
+//! cluster — and is fully deterministic for a given session workload.
+//!
 //! Replay throughput is bounded by the engines' iteration loop, which
 //! is allocation-free in steady state (every system steps its engines
 //! through reusable plan/event scratch buffers — see EXPERIMENTS.md
-//! §Perf); the driver itself keeps peak memory at one horizon's events
-//! by discarding slices incrementally when nobody collects them.
+//! §Perf); the drivers keep peak memory at one horizon's events by
+//! discarding slices incrementally when nobody collects them.
 
 use crate::simclock::SimTime;
 use crate::systems::{Admission, RunOutcome, ServingSystem, SystemEvent};
+use crate::util::fxhash::FxHashMap;
+use crate::workload::session::Session;
 use crate::workload::Request;
 
 /// How often a single request may be deferred by SLO admission control
@@ -160,6 +170,241 @@ fn replay_trace_impl(
     (outcome, events, stats)
 }
 
+// ---------------------------------------------------------------------------
+// Closed-loop multi-turn session driving
+// ---------------------------------------------------------------------------
+
+/// Bookkeeping of one closed-loop session run.
+///
+/// `submissions` records every *accepted* turn as `(request id,
+/// submission instant)` in submission order — filled by both the
+/// collecting and non-collecting drivers, so the two are comparable and
+/// tests can assert the closed-loop causality (turn *k+1* is never
+/// submitted before turn *k*'s finish plus think time).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClosedLoopStats {
+    pub n_sessions: usize,
+    /// Turns across all generated sessions (an aborted session's later
+    /// turns are never submitted).
+    pub n_turns_total: usize,
+    /// Distinct turns offered to the system at least once.
+    pub n_submitted: usize,
+    /// Turns that produced a `Finished` event.
+    pub n_finished_turns: usize,
+    /// Turns rejected outright at admission.
+    pub n_rejected_turns: usize,
+    /// Turns shed by the system after acceptance.
+    pub n_shed_turns: usize,
+    /// Deferral events (a turn retried N times counts N).
+    pub n_deferred: usize,
+    /// Turns dropped after [`MAX_DEFERRALS`] retries.
+    pub n_dropped_turns: usize,
+    /// Sessions cut short by a rejected / shed / dropped turn.
+    pub n_aborted_sessions: usize,
+    /// Sessions whose final turn finished.
+    pub n_completed_sessions: usize,
+    /// `(request id, submission instant)` per accepted turn.
+    pub submissions: Vec<(u64, SimTime)>,
+}
+
+/// Per-session driver state.
+#[derive(Clone, Copy, Debug)]
+enum SessState {
+    /// The next turn may be submitted at `at` (`attempts` deferrals so
+    /// far for this turn).
+    Ready { at: SimTime, attempts: usize },
+    /// A turn is in flight; waiting for its terminal event.
+    Waiting { req_id: u64 },
+    /// All turns finished, or the session aborted.
+    Done,
+}
+
+/// Serve a session workload closed-loop: each session's turn *k+1* is
+/// submitted only once turn *k* finished and the think time elapsed.
+/// Rejected / dropped turns abort their session (the user left).
+/// Deterministic: identical sessions and system produce identical
+/// submission and event sequences.
+pub fn closed_loop(
+    system: &mut dyn ServingSystem,
+    sessions: &[Session],
+) -> (RunOutcome, ClosedLoopStats) {
+    let (out, _events, stats) = closed_loop_impl(system, sessions, false);
+    (out, stats)
+}
+
+/// [`closed_loop`], additionally returning every [`SystemEvent`] the run
+/// produced (in simulation-time order).
+pub fn closed_loop_collect(
+    system: &mut dyn ServingSystem,
+    sessions: &[Session],
+) -> (RunOutcome, Vec<SystemEvent>, ClosedLoopStats) {
+    closed_loop_impl(system, sessions, true)
+}
+
+fn closed_loop_impl(
+    system: &mut dyn ServingSystem,
+    sessions: &[Session],
+    collect: bool,
+) -> (RunOutcome, Vec<SystemEvent>, ClosedLoopStats) {
+    let mut stats = ClosedLoopStats {
+        n_sessions: sessions.len(),
+        n_turns_total: sessions.iter().map(|s| s.turns.len()).sum(),
+        ..ClosedLoopStats::default()
+    };
+    let mut states: Vec<SessState> = sessions
+        .iter()
+        .map(|s| SessState::Ready { at: SimTime(s.start_ns), attempts: 0 })
+        .collect();
+    let mut next_turn: Vec<usize> = vec![0; sessions.len()];
+    // Session id -> index, to resolve terminal events back to sessions.
+    let mut by_session: FxHashMap<u64, usize> = FxHashMap::default();
+    for (i, s) in sessions.iter().enumerate() {
+        by_session.insert(s.id, i);
+    }
+    let mut events: Vec<SystemEvent> = Vec::new();
+    // Synthetic Shed events for turns dropped at the retry cap.
+    let mut dropped: Vec<SystemEvent> = Vec::new();
+
+    loop {
+        // Earliest ready submission (ties break toward the lowest session
+        // index — deterministic).
+        let mut ready: Option<(SimTime, usize, usize)> = None;
+        let mut n_waiting = 0usize;
+        for (i, st) in states.iter().enumerate() {
+            match *st {
+                SessState::Ready { at, attempts } => {
+                    if ready.map_or(true, |(t, _, _)| at < t) {
+                        ready = Some((at, i, attempts));
+                    }
+                }
+                SessState::Waiting { .. } => n_waiting += 1,
+                SessState::Done => {}
+            }
+        }
+        let next_ev = system.next_event_at();
+
+        let submit_now = match (ready, next_ev) {
+            (None, None) => break,
+            // All sessions done or in flight with nothing pending —
+            // remaining events are the tail of the final turns; the
+            // post-loop drain handles them.
+            (None, Some(_)) if n_waiting == 0 => break,
+            (None, Some(_)) => false,
+            // Events at or before the submission instant run first, so a
+            // finish at the same instant schedules before fresh load.
+            (Some((at, _, _)), Some(te)) => te > at,
+            (Some(_), None) => true,
+        };
+
+        if submit_now {
+            let (at, i, attempts) = ready.expect("submit_now implies ready");
+            let k = next_turn[i];
+            let req = sessions[i].request(k, at.0);
+            if attempts == 0 {
+                stats.n_submitted += 1;
+            }
+            match system.submit(at, req) {
+                Admission::Accepted => {
+                    stats.submissions.push((req.id, at));
+                    states[i] = SessState::Waiting { req_id: req.id };
+                }
+                Admission::Rejected { .. } => {
+                    // The system recorded the shed; the user gives up.
+                    stats.n_rejected_turns += 1;
+                    stats.n_aborted_sessions += 1;
+                    states[i] = SessState::Done;
+                }
+                Admission::Deferred { retry_at } => {
+                    stats.n_deferred += 1;
+                    if attempts + 1 >= MAX_DEFERRALS {
+                        stats.n_dropped_turns += 1;
+                        stats.n_aborted_sessions += 1;
+                        dropped.push(SystemEvent::Shed {
+                            id: req.id,
+                            t: at,
+                            reason: format!(
+                                "dropped by the closed-loop driver after \
+                                 {MAX_DEFERRALS} deferrals"
+                            ),
+                        });
+                        states[i] = SessState::Done;
+                    } else {
+                        // Strictly later than `at` so the loop always
+                        // makes progress, even on a degenerate hint.
+                        states[i] = SessState::Ready {
+                            at: retry_at.max(SimTime(at.0 + 1)),
+                            attempts: attempts + 1,
+                        };
+                    }
+                }
+            }
+            continue;
+        }
+
+        let te = next_ev.expect("not submitting implies a pending event");
+        let batch = system.advance(te);
+        for ev in &batch {
+            let (id, t, finished) = match ev {
+                SystemEvent::Finished { id, t } => (*id, *t, true),
+                SystemEvent::Shed { id, t, .. } => (*id, *t, false),
+                _ => continue,
+            };
+            let sid = crate::workload::session::session_of_request(id);
+            let i = match by_session.get(&sid) {
+                Some(&i) => i,
+                None => continue,
+            };
+            let req_id = match states[i] {
+                SessState::Waiting { req_id } => req_id,
+                _ => continue,
+            };
+            if req_id != id {
+                continue;
+            }
+            if finished {
+                stats.n_finished_turns += 1;
+                next_turn[i] += 1;
+                if next_turn[i] == sessions[i].turns.len() {
+                    stats.n_completed_sessions += 1;
+                    states[i] = SessState::Done;
+                } else {
+                    // Think, then come back with the follow-up turn.
+                    let think = sessions[i].turns[next_turn[i]].think_s;
+                    states[i] =
+                        SessState::Ready { at: t.after_secs(think), attempts: 0 };
+                }
+            } else {
+                stats.n_shed_turns += 1;
+                stats.n_aborted_sessions += 1;
+                states[i] = SessState::Done;
+            }
+        }
+        if collect {
+            events.extend(batch);
+        }
+    }
+
+    // Tail: everything left is token traffic of already-resolved turns.
+    if collect {
+        events.extend(system.advance(SimTime(u64::MAX)));
+    } else {
+        while let Some(t) = system.next_event_at() {
+            let _ = system.advance(t);
+        }
+    }
+    let mut outcome = system.drain();
+    if stats.n_dropped_turns > 0 {
+        // Driver-dropped turns never reached the system's metrics;
+        // account for them so "every submitted turn ends Finished xor
+        // Shed" holds for the outcome too.
+        outcome.report.n_requests += stats.n_dropped_turns;
+        outcome.report.n_rejected += stats.n_dropped_turns;
+        events.extend(dropped);
+        events.sort_by_key(|e| e.time()); // stable: ties keep stream order
+    }
+    (outcome, events, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,5 +473,94 @@ mod tests {
         let out = replay_trace(sys.as_mut(), &trace);
         assert_eq!(out.report.n_finished, 40);
         assert!(out.report.throughput_rps > 0.0);
+    }
+
+    // --- closed-loop sessions ---
+
+    use crate::workload::session::{
+        generate_sessions, turn_request_id, SessionConfig,
+    };
+
+    fn small_sessions(n: usize, seed: u64) -> Vec<crate::workload::session::Session> {
+        generate_sessions(&SessionConfig {
+            n_sessions: n,
+            min_turns: 2,
+            max_turns: 4,
+            think_mean_s: 0.5,
+            start_window_s: 2.0,
+            mean_new_input: 256.0,
+            max_new_input: 1024,
+            seed,
+            ..SessionConfig::default()
+        })
+    }
+
+    #[test]
+    fn closed_loop_finishes_every_turn_on_a_bare_pair() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let sessions = small_sessions(5, 31);
+        let n_turns: usize = sessions.iter().map(|s| s.turns.len()).sum();
+        let mut sys = build_system(SystemKind::Cronus, &cfg);
+        let (out, events, stats) = closed_loop_collect(sys.as_mut(), &sessions);
+        assert_eq!(stats.n_sessions, 5);
+        assert_eq!(stats.n_turns_total, n_turns);
+        assert_eq!(stats.n_submitted, n_turns);
+        assert_eq!(stats.n_finished_turns, n_turns);
+        assert_eq!(stats.n_completed_sessions, 5);
+        assert_eq!(stats.n_aborted_sessions, 0);
+        assert_eq!(out.report.n_finished, n_turns);
+        assert_eq!(out.report.n_requests, n_turns);
+        // Event stream is monotone in time.
+        for w in events.windows(2) {
+            assert!(w[0].time() <= w[1].time());
+        }
+        let finishes = events
+            .iter()
+            .filter(|e| matches!(e, SystemEvent::Finished { .. }))
+            .count();
+        assert_eq!(finishes, n_turns);
+    }
+
+    #[test]
+    fn closed_loop_respects_finish_plus_think_causality() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let sessions = small_sessions(4, 33);
+        let mut sys = build_system(SystemKind::Cronus, &cfg);
+        let (_out, events, stats) = closed_loop_collect(sys.as_mut(), &sessions);
+        // Finish time per request id.
+        let mut finish: std::collections::HashMap<u64, SimTime> =
+            std::collections::HashMap::new();
+        for ev in &events {
+            if let SystemEvent::Finished { id, t } = ev {
+                finish.insert(*id, *t);
+            }
+        }
+        let submit_at: std::collections::HashMap<u64, SimTime> =
+            stats.submissions.iter().copied().collect();
+        for s in &sessions {
+            // Turn 0 is submitted at the session start, never earlier.
+            let t0 = submit_at[&turn_request_id(s.id, 0)];
+            assert_eq!(t0, SimTime(s.start_ns));
+            for k in 1..s.turns.len() {
+                let prev_finish = finish[&turn_request_id(s.id, k - 1)];
+                let earliest = prev_finish.after_secs(s.turns[k].think_s);
+                let t = submit_at[&turn_request_id(s.id, k)];
+                assert!(
+                    t >= earliest,
+                    "session {} turn {k} submitted at {t} before finish {prev_finish} + think",
+                    s.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_empty_sessions_is_empty_outcome() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut sys = build_system(SystemKind::Cronus, &cfg);
+        let (out, stats) = closed_loop(sys.as_mut(), &[]);
+        assert_eq!(out.report.n_requests, 0);
+        assert_eq!(stats.n_submitted, 0);
+        assert!(stats.submissions.is_empty());
     }
 }

@@ -38,7 +38,10 @@ use crate::simclock::SimTime;
 use crate::workload::Request;
 
 pub use cluster::{build_cluster_system, ClusterSystem};
-pub use driver::{replay_trace, replay_trace_collect, ReplayStats};
+pub use driver::{
+    closed_loop, closed_loop_collect, replay_trace, replay_trace_collect,
+    ClosedLoopStats, ReplayStats,
+};
 
 /// Per-instance accounting attached to a run (feeds Table 3).
 #[derive(Clone, Debug)]
@@ -49,6 +52,23 @@ pub struct InstanceStat {
     pub n_preemptions: u64,
     pub tokens_prefilled: u64,
     pub tokens_decoded: u64,
+    /// Of `tokens_prefilled`, context made present by KV transfers rather
+    /// than local compute; `tokens_prefilled - tokens_kv_received` is the
+    /// prefill this instance actually executed (what KV-affinity routing
+    /// saves — see [`prefill_tokens_executed`]).
+    pub tokens_kv_received: u64,
+}
+
+/// Prefill tokens a run actually *computed*, across all instances:
+/// `tokens_prefilled` minus the context that arrived as KV transfers.
+/// Session-prefix KV resident from a previous turn counts in neither, so
+/// KV-affinity savings show up directly in this number.
+pub fn prefill_tokens_executed(outcome: &RunOutcome) -> u64 {
+    outcome
+        .instances
+        .iter()
+        .map(|i| i.tokens_prefilled.saturating_sub(i.tokens_kv_received))
+        .sum()
 }
 
 /// Result of serving a workload to completion.

@@ -55,14 +55,7 @@ mod tests {
     use super::*;
 
     fn mk(n: usize) -> Vec<Request> {
-        (0..n)
-            .map(|i| Request {
-                id: i as u64,
-                arrival_ns: 999,
-                input_len: 10,
-                output_len: 5,
-            })
-            .collect()
+        (0..n).map(|i| Request::new(i as u64, 999, 10, 5)).collect()
     }
 
     #[test]

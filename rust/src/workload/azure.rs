@@ -72,7 +72,7 @@ pub fn generate(n: usize, cfg: &AzureTraceConfig, seed: u64) -> Vec<Request> {
             let output_len = (rng.lognormal(mu_out, cfg.sigma_output).round()
                 as usize)
                 .clamp(cfg.min_output, cfg.max_output);
-            Request { id: i as u64, arrival_ns: 0, input_len, output_len }
+            Request::new(i as u64, 0, input_len, output_len)
         })
         .collect()
 }

@@ -1,13 +1,22 @@
-//! Workload substrate: request traces and arrival processes.
+//! Workload substrate: request traces, arrival processes, and multi-turn
+//! conversation sessions.
 //!
 //! The paper drives every experiment with 1000 conversation requests from
 //! the Azure LLM inference trace 2023 (mean input 1014 tokens, mean
 //! output 247), sent at fixed intervals (Fig. 4) or all at once
 //! (Table 2's max-throughput measurement).  [`azure`] synthesizes traces
 //! matching those statistics; [`arrival`] stamps arrival times.
+//! [`session`] generates *closed-loop* multi-turn conversations (each
+//! turn's prompt replays the prior context, so follow-up turns can reuse
+//! prefix KV resident on the pair that served the previous turn).
 
 pub mod arrival;
 pub mod azure;
+pub mod session;
+
+/// [`Request::session_id`] value marking a standalone (sessionless)
+/// single-shot request; real session ids start at 1.
+pub const NO_SESSION: u64 = 0;
 
 /// One inference request as the frontend sees it.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -20,11 +29,49 @@ pub struct Request {
     /// Response length in tokens (the trace records it; engines treat it
     /// as the step at which EOS is emitted).
     pub output_len: usize,
+    /// Conversation this request belongs to ([`NO_SESSION`] for
+    /// standalone requests).  Follow-up turns of the same session replay
+    /// the prior context as a prompt prefix.
+    pub session_id: u64,
+    /// Leading `input_len` tokens that replay the session's prior context
+    /// (previous turns' prompts + responses); 0 for first turns and
+    /// standalone requests.  Always `< input_len` — every turn adds at
+    /// least one fresh token.
+    pub prefix_len: usize,
+    /// Prefix tokens whose KV is *resident* on the system this request is
+    /// dispatched to.  Granted by the cluster router when it routes a
+    /// follow-up turn to the pair holding the session's KV; always
+    /// `<= prefix_len`.  Workload generators leave it 0.
+    pub kv_credit: usize,
+    /// Last turn of its session: the router releases the session's KV
+    /// residency once this request completes.
+    pub final_turn: bool,
 }
 
 impl Request {
+    /// A standalone (sessionless) request — the shape every pre-session
+    /// workload generator produces.
+    pub fn new(id: u64, arrival_ns: u64, input_len: usize, output_len: usize) -> Request {
+        Request {
+            id,
+            arrival_ns,
+            input_len,
+            output_len,
+            session_id: NO_SESSION,
+            prefix_len: 0,
+            kv_credit: 0,
+            final_turn: false,
+        }
+    }
+
     pub fn total_context(&self) -> usize {
         self.input_len + self.output_len
+    }
+
+    /// Prompt tokens that are genuinely new this turn (not a replay of
+    /// the session's prior context).
+    pub fn fresh_input(&self) -> usize {
+        self.input_len - self.prefix_len
     }
 }
 
@@ -59,10 +106,7 @@ mod tests {
 
     #[test]
     fn stats_of_fixed_trace() {
-        let trace = vec![
-            Request { id: 0, arrival_ns: 0, input_len: 100, output_len: 10 },
-            Request { id: 1, arrival_ns: 0, input_len: 300, output_len: 30 },
-        ];
+        let trace = vec![Request::new(0, 0, 100, 10), Request::new(1, 0, 300, 30)];
         let s = stats(&trace);
         assert_eq!(s.n, 2);
         assert_eq!(s.mean_input, 200.0);
@@ -72,7 +116,9 @@ mod tests {
 
     #[test]
     fn total_context() {
-        let r = Request { id: 0, arrival_ns: 0, input_len: 7, output_len: 3 };
+        let r = Request::new(0, 0, 7, 3);
         assert_eq!(r.total_context(), 10);
+        assert_eq!(r.session_id, NO_SESSION);
+        assert_eq!(r.fresh_input(), 7);
     }
 }

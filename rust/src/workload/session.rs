@@ -1,0 +1,288 @@
+//! Multi-turn conversation sessions for closed-loop serving.
+//!
+//! The open-loop traces of [`crate::workload::azure`] replay recorded
+//! arrivals; real conversational deployments are *closed-loop*: a user
+//! submits turn *k+1* only after reading turn *k*'s response, and each
+//! follow-up prompt replays the whole prior context (previous prompts +
+//! responses) plus some fresh tokens.  That replay is exactly the prefix
+//! whose KV can be reused when the follow-up lands on the pair that
+//! served the previous turn (see [`crate::cronus::router`]'s
+//! `KvAffinity` policy) — the regime HexGen-2 and the multi-vendor
+//! disaggregated-serving line of work show dominates heterogeneous
+//! cluster scheduling quality.
+//!
+//! A [`Session`] is a pure, seeded description of one conversation:
+//! per-turn fresh-input / output lengths (log-normal, like the Azure
+//! marginals) and per-turn think times (exponential).  The closed-loop
+//! driver ([`crate::systems::driver::closed_loop`]) materializes each
+//! turn into a [`Request`] only when the previous turn has finished and
+//! the think time has elapsed, so arrival times are an *output* of the
+//! simulation, not an input.
+
+use crate::util::rng::{lognormal_mu_for_mean, Rng};
+use crate::workload::Request;
+
+/// Stride between the request ids of consecutive sessions:
+/// turn `k` of session `s` gets request id `s * TURN_ID_STRIDE + k`.
+/// Deterministic and collision-free for up to 4096 turns per session,
+/// so two runs of the same workload produce byte-identical id streams.
+pub const TURN_ID_STRIDE: u64 = 1 << 12;
+
+/// Request id of turn `turn` of session `session_id`.
+pub fn turn_request_id(session_id: u64, turn: usize) -> u64 {
+    debug_assert!((turn as u64) < TURN_ID_STRIDE);
+    session_id * TURN_ID_STRIDE + turn as u64
+}
+
+/// Session a request id belongs to (inverse of [`turn_request_id`]).
+pub fn session_of_request(req_id: u64) -> u64 {
+    req_id / TURN_ID_STRIDE
+}
+
+/// Generator parameters for a closed-loop session workload.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    pub n_sessions: usize,
+    /// Turns per session, uniform in `[min_turns, max_turns]`.
+    pub min_turns: usize,
+    pub max_turns: usize,
+    /// Mean think time between a turn's finish and the next turn's
+    /// submission (exponential distribution).
+    pub think_mean_s: f64,
+    /// Session start times are uniform in `[0, start_window_s)`.
+    pub start_window_s: f64,
+    /// Fresh prompt tokens per turn (log-normal, clamped).
+    pub mean_new_input: f64,
+    pub sigma_new_input: f64,
+    pub min_new_input: usize,
+    pub max_new_input: usize,
+    /// Response tokens per turn (log-normal, clamped).
+    pub mean_output: f64,
+    pub sigma_output: f64,
+    pub min_output: usize,
+    pub max_output: usize,
+    pub seed: u64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            n_sessions: 32,
+            min_turns: 2,
+            max_turns: 6,
+            think_mean_s: 2.0,
+            start_window_s: 10.0,
+            mean_new_input: 512.0,
+            sigma_new_input: 0.9,
+            min_new_input: 16,
+            max_new_input: 3072,
+            mean_output: 160.0,
+            sigma_output: 0.8,
+            min_output: 4,
+            max_output: 768,
+            seed: 42,
+        }
+    }
+}
+
+/// One turn of a conversation, before it is materialized into a
+/// [`Request`] by the closed-loop driver.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionTurn {
+    /// Fresh prompt tokens this turn adds on top of the replayed context.
+    pub new_input: usize,
+    /// Response tokens this turn generates.
+    pub output_len: usize,
+    /// Think time between the previous turn's finish and this turn's
+    /// submission; 0 for turn 0 (the session starts at
+    /// [`Session::start_ns`]).
+    pub think_s: f64,
+}
+
+/// One seeded conversation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Session {
+    /// Session id (>= 1; 0 is [`crate::workload::NO_SESSION`]).
+    pub id: u64,
+    /// Submission instant of turn 0, nanoseconds since experiment start.
+    pub start_ns: u64,
+    pub turns: Vec<SessionTurn>,
+}
+
+impl Session {
+    /// Context tokens accumulated before turn `k` — the prompt prefix
+    /// turn `k` replays (sum of all earlier turns' fresh inputs and
+    /// outputs).  0 for turn 0.
+    pub fn prefix_len(&self, k: usize) -> usize {
+        self.turns[..k]
+            .iter()
+            .map(|t| t.new_input + t.output_len)
+            .sum()
+    }
+
+    /// Full prompt length of turn `k`: replayed prior context plus the
+    /// turn's fresh tokens.
+    pub fn input_len(&self, k: usize) -> usize {
+        self.prefix_len(k) + self.turns[k].new_input
+    }
+
+    /// Materialize turn `k` as a [`Request`] arriving at `arrival_ns`.
+    /// The id is a deterministic function of (session, turn) so repeated
+    /// runs produce identical streams.
+    pub fn request(&self, k: usize, arrival_ns: u64) -> Request {
+        let turn = &self.turns[k];
+        Request {
+            id: turn_request_id(self.id, k),
+            arrival_ns,
+            input_len: self.input_len(k),
+            output_len: turn.output_len,
+            session_id: self.id,
+            prefix_len: self.prefix_len(k),
+            kv_credit: 0,
+            final_turn: k + 1 == self.turns.len(),
+        }
+    }
+
+    /// Sum of all turns' prompt lengths — the prefill tokens a
+    /// KV-oblivious system executes when every turn completes.
+    pub fn total_input_tokens(&self) -> usize {
+        (0..self.turns.len()).map(|k| self.input_len(k)).sum()
+    }
+}
+
+/// Total turns across a session set.
+pub fn total_turns(sessions: &[Session]) -> usize {
+    sessions.iter().map(|s| s.turns.len()).sum()
+}
+
+/// Generate a seeded session workload.  Deterministic in `cfg.seed`;
+/// session ids are `1..=n_sessions` in generation order.
+pub fn generate_sessions(cfg: &SessionConfig) -> Vec<Session> {
+    assert!(cfg.min_turns >= 1, "sessions need at least one turn");
+    assert!(cfg.min_turns <= cfg.max_turns, "min_turns > max_turns");
+    assert!(
+        (cfg.max_turns as u64) < TURN_ID_STRIDE,
+        "max_turns exceeds the request-id stride"
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mu_in = lognormal_mu_for_mean(cfg.mean_new_input, cfg.sigma_new_input);
+    let mu_out = lognormal_mu_for_mean(cfg.mean_output, cfg.sigma_output);
+    (0..cfg.n_sessions)
+        .map(|s| {
+            let start_ns = (rng.f64() * cfg.start_window_s * 1e9).round() as u64;
+            let n_turns = rng.range_usize(cfg.min_turns, cfg.max_turns + 1);
+            let turns = (0..n_turns)
+                .map(|k| SessionTurn {
+                    new_input: (rng.lognormal(mu_in, cfg.sigma_new_input).round()
+                        as usize)
+                        .clamp(cfg.min_new_input, cfg.max_new_input),
+                    output_len: (rng.lognormal(mu_out, cfg.sigma_output).round()
+                        as usize)
+                        .clamp(cfg.min_output, cfg.max_output),
+                    think_s: if k == 0 {
+                        0.0
+                    } else {
+                        rng.exponential(1.0 / cfg.think_mean_s.max(1e-9))
+                    },
+                })
+                .collect();
+            Session { id: s as u64 + 1, start_ns, turns }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::NO_SESSION;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = SessionConfig::default();
+        let a = generate_sessions(&cfg);
+        let b = generate_sessions(&cfg);
+        assert_eq!(a, b);
+        let c = generate_sessions(&SessionConfig { seed: 43, ..cfg });
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prefix_is_prior_context() {
+        let cfg = SessionConfig { n_sessions: 4, seed: 7, ..Default::default() };
+        for s in generate_sessions(&cfg) {
+            assert!(s.id > NO_SESSION);
+            let mut ctx = 0usize;
+            for k in 0..s.turns.len() {
+                assert_eq!(s.prefix_len(k), ctx);
+                assert_eq!(s.input_len(k), ctx + s.turns[k].new_input);
+                let req = s.request(k, 123);
+                assert_eq!(req.session_id, s.id);
+                assert_eq!(req.prefix_len, ctx);
+                assert_eq!(req.fresh_input(), s.turns[k].new_input);
+                assert!(req.prefix_len < req.input_len, "turn adds fresh tokens");
+                assert_eq!(req.final_turn, k + 1 == s.turns.len());
+                assert_eq!(req.kv_credit, 0);
+                assert_eq!(session_of_request(req.id), s.id);
+                ctx += s.turns[k].new_input + s.turns[k].output_len;
+            }
+            assert_eq!(
+                s.total_input_tokens(),
+                (0..s.turns.len()).map(|k| s.input_len(k)).sum::<usize>()
+            );
+        }
+    }
+
+    #[test]
+    fn turn_counts_and_clamps_respected() {
+        let cfg = SessionConfig {
+            n_sessions: 50,
+            min_turns: 2,
+            max_turns: 5,
+            seed: 11,
+            ..Default::default()
+        };
+        let sessions = generate_sessions(&cfg);
+        assert_eq!(sessions.len(), 50);
+        for s in &sessions {
+            assert!((2..=5).contains(&s.turns.len()));
+            assert!(s.start_ns <= (cfg.start_window_s * 1e9) as u64);
+            for (k, t) in s.turns.iter().enumerate() {
+                assert!((cfg.min_new_input..=cfg.max_new_input).contains(&t.new_input));
+                assert!((cfg.min_output..=cfg.max_output).contains(&t.output_len));
+                if k == 0 {
+                    assert_eq!(t.think_s, 0.0);
+                } else {
+                    assert!(t.think_s > 0.0);
+                }
+            }
+        }
+        // Ids are unique across all turns of all sessions.
+        let mut ids: Vec<u64> = sessions
+            .iter()
+            .flat_map(|s| (0..s.turns.len()).map(|k| turn_request_id(s.id, k)))
+            .collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn think_times_match_mean_roughly() {
+        let cfg = SessionConfig {
+            n_sessions: 400,
+            min_turns: 8,
+            max_turns: 8,
+            think_mean_s: 3.0,
+            seed: 5,
+            ..Default::default()
+        };
+        let sessions = generate_sessions(&cfg);
+        let thinks: Vec<f64> = sessions
+            .iter()
+            .flat_map(|s| s.turns.iter().skip(1).map(|t| t.think_s))
+            .collect();
+        let mean = thinks.iter().sum::<f64>() / thinks.len() as f64;
+        assert!((mean - 3.0).abs() < 0.3, "think mean {mean}");
+    }
+}

@@ -536,7 +536,7 @@ fn prop_router_partitions_trace_exactly() {
     check("router partitions the trace", 50, |rng| {
         let n_pairs = rng.range_usize(1, 9);
         let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
-        let policy = RoutePolicy::ALL[rng.range_usize(0, 3)];
+        let policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len())];
         let n = rng.range_usize(1, 250);
         let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
         let process = if rng.f64() < 0.5 {
@@ -547,7 +547,7 @@ fn prop_router_partitions_trace_exactly() {
         let trace = stamp(&trace, process);
         let mut router = Router::new(policy, &cfg);
         let assignments: Vec<usize> =
-            trace.iter().map(|r| router.route(r)).collect();
+            trace.iter().map(|r| router.route(r).pair).collect();
         if assignments.len() != n {
             return PropResult::Fail(format!(
                 "{} assignments for {n} requests",
@@ -597,7 +597,7 @@ fn prop_cluster_system_serves_every_request() {
     check("cluster finishes everything", 8, |rng| {
         let n_pairs = rng.range_usize(1, 5);
         let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
-        let policy = RoutePolicy::ALL[rng.range_usize(0, 3)];
+        let policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len())];
         let n = rng.range_usize(4, 40);
         let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
         let trace = stamp(&trace, ArrivalProcess::AllAtOnce);

@@ -1,0 +1,139 @@
+//! Closed-loop determinism pins (tentpole satellite), extending the
+//! `events_golden.rs` lockstep pattern to the closed-loop path: the same
+//! seed must produce *byte-identical* `SystemEvent` streams across two
+//! independent runs, and the collecting / non-collecting drivers must
+//! agree on every outcome number and on the submission schedule.
+
+use cronus::config::topology::ClusterConfig;
+use cronus::config::DeploymentConfig;
+use cronus::cronus::balancer::SplitPolicy;
+use cronus::cronus::frontend::CronusSystem;
+use cronus::cronus::router::RoutePolicy;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::simgpu::spec::{A10, A100};
+use cronus::systems::cluster::ClusterSystem;
+use cronus::systems::driver::{closed_loop, closed_loop_collect};
+use cronus::systems::SystemEvent;
+use cronus::workload::session::{generate_sessions, Session, SessionConfig};
+
+fn sessions(seed: u64) -> Vec<Session> {
+    generate_sessions(&SessionConfig {
+        n_sessions: 6,
+        min_turns: 2,
+        max_turns: 4,
+        think_mean_s: 0.4,
+        start_window_s: 2.0,
+        mean_new_input: 256.0,
+        max_new_input: 1024,
+        mean_output: 128.0,
+        max_output: 384,
+        seed,
+        ..SessionConfig::default()
+    })
+}
+
+/// FNV-1a digest over the full (tag, id, timestamp) stream — mirroring
+/// the byte-level pin `events_golden.rs` applies to the open-loop path.
+fn digest_stream(events: &[SystemEvent]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for ev in events {
+        let (tag, id, t) = match ev {
+            SystemEvent::FirstToken { id, t } => (1u64, *id, t.0),
+            SystemEvent::Token { id, t } => (2, *id, t.0),
+            SystemEvent::Finished { id, t } => (3, *id, t.0),
+            SystemEvent::Shed { id, t, .. } => (4, *id, t.0),
+        };
+        mix(tag);
+        mix(id);
+        mix(t);
+    }
+    h
+}
+
+#[test]
+fn same_seed_yields_byte_identical_streams() {
+    let sessions = sessions(17);
+    let run = || {
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::KvAffinity);
+        closed_loop_collect(&mut sys, &sessions)
+    };
+    let (out_a, events_a, stats_a) = run();
+    let (out_b, events_b, stats_b) = run();
+
+    assert!(!events_a.is_empty());
+    assert_eq!(events_a, events_b, "event streams diverged across runs");
+    let d = digest_stream(&events_a);
+    assert_eq!(d, digest_stream(&events_b));
+    println!("closed-loop stream digest [kv-affinity]: {d:#018x}");
+
+    assert_eq!(stats_a, stats_b, "submission schedules diverged");
+    assert_eq!(out_a.report.makespan_s, out_b.report.makespan_s);
+    assert_eq!(out_a.report.ttft_samples, out_b.report.ttft_samples);
+    assert_eq!(out_a.report.tbt_samples, out_b.report.tbt_samples);
+    assert_eq!(out_a.report.n_kv_hits, out_b.report.n_kv_hits);
+    assert_eq!(
+        out_a.report.prefill_tokens_saved,
+        out_b.report.prefill_tokens_saved
+    );
+}
+
+#[test]
+fn collect_and_noncollect_drivers_agree() {
+    // The collecting and non-collecting closed-loop drivers interact
+    // with the system identically — retaining the events must not change
+    // a single outcome number or submission instant.
+    let sessions = sessions(23);
+    for policy in RoutePolicy::ALL {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut with = ClusterSystem::new(cfg.clone(), policy);
+        let (out_c, events, stats_c) = closed_loop_collect(&mut with, &sessions);
+        let mut without = ClusterSystem::new(cfg, policy);
+        let (out_n, stats_n) = closed_loop(&mut without, &sessions);
+
+        assert_eq!(stats_c, stats_n, "{}", policy.name());
+        assert_eq!(out_c.report.n_finished, out_n.report.n_finished);
+        assert_eq!(out_c.report.n_requests, out_n.report.n_requests);
+        assert_eq!(out_c.report.makespan_s, out_n.report.makespan_s);
+        assert_eq!(out_c.report.ttft_samples, out_n.report.ttft_samples);
+        assert_eq!(out_c.report.tbt_samples, out_n.report.tbt_samples);
+        assert_eq!(out_c.report.e2e_samples, out_n.report.e2e_samples);
+        assert_eq!(out_c.report.n_kv_hits, out_n.report.n_kv_hits);
+        assert_eq!(
+            out_c.report.prefill_tokens_saved,
+            out_n.report.prefill_tokens_saved
+        );
+        // The collected stream covers every finished turn.
+        let finishes = events
+            .iter()
+            .filter(|e| matches!(e, SystemEvent::Finished { .. }))
+            .count();
+        assert_eq!(finishes, stats_c.n_finished_turns, "{}", policy.name());
+    }
+}
+
+#[test]
+fn one_pair_cluster_closed_loop_matches_bare_pair() {
+    // A 1-pair cluster under a credit-less policy must serve the session
+    // workload exactly like the bare Cronus pair: the cluster layer adds
+    // routing, not behaviour.
+    let sessions = sessions(29);
+    let deployment = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+    let cfg = ClusterConfig::homogeneous(1, deployment.clone());
+    let mut cluster = ClusterSystem::new(cfg, RoutePolicy::RoundRobin);
+    let (cluster_out, cluster_stats) = closed_loop(&mut cluster, &sessions);
+    let mut bare = CronusSystem::new(deployment, SplitPolicy::Balanced, false, "x");
+    let (bare_out, bare_stats) = closed_loop(&mut bare, &sessions);
+
+    assert_eq!(cluster_stats, bare_stats);
+    assert_eq!(cluster_out.report.n_finished, bare_out.report.n_finished);
+    assert_eq!(cluster_out.report.makespan_s, bare_out.report.makespan_s);
+    assert_eq!(cluster_out.report.ttft_p99_s, bare_out.report.ttft_p99_s);
+    assert_eq!(cluster_out.report.tbt_p99_s, bare_out.report.tbt_p99_s);
+}

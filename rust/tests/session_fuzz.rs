@@ -1,0 +1,326 @@
+//! Randomized closed-loop session fuzzer (tentpole satellite).
+//!
+//! For many seeds, the same generated multi-turn session workload is
+//! served closed-loop on a mixed cluster under `KvAffinity` and
+//! `LeastOutstandingTokens`, and the shared invariants are asserted:
+//!
+//! * every submitted turn ends Finished xor Shed exactly once;
+//! * token conservation — a finished turn's event stream carries exactly
+//!   `output_len` tokens (1 FirstToken + output_len−1 Tokens), a shed
+//!   turn's none;
+//! * the event stream is monotone in time;
+//! * turn *k+1* is never submitted before turn *k*'s finish plus the
+//!   user's think time (closed-loop causality);
+//! * at equal completed-turn count, KV-affinity executes *strictly
+//!   fewer* prefill tokens than load-only routing, exactly the resident
+//!   prefixes it reports as saved, and surfaces a non-zero `kv_hit_rate`
+//!   in the `Report` (the acceptance criterion of the issue);
+//! * with a TTFT SLO configured, affinity never bypasses admission:
+//!   everything still conserves and the run completes.
+
+use cronus::config::topology::ClusterConfig;
+use cronus::cronus::router::RoutePolicy;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::systems::cluster::ClusterSystem;
+use cronus::systems::driver::{closed_loop_collect, ClosedLoopStats};
+use cronus::systems::{prefill_tokens_executed, RunOutcome, SystemEvent};
+use cronus::util::fxhash::FxHashMap;
+use cronus::util::proptest_lite::{check, PropResult};
+use cronus::workload::session::{
+    generate_sessions, turn_request_id, Session, SessionConfig,
+};
+
+fn run(
+    sessions: &[Session],
+    n_pairs: usize,
+    policy: RoutePolicy,
+    slo_ttft_s: Option<f64>,
+) -> (RunOutcome, Vec<SystemEvent>, ClosedLoopStats) {
+    let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+    let mut sys = ClusterSystem::new(cfg, policy).with_slo_ttft(slo_ttft_s);
+    closed_loop_collect(&mut sys, sessions)
+}
+
+/// The invariants every closed-loop run must satisfy, whatever the
+/// policy or SLO.
+fn verify_invariants(
+    sessions: &[Session],
+    out: &RunOutcome,
+    events: &[SystemEvent],
+    stats: &ClosedLoopStats,
+    label: &str,
+) -> PropResult {
+    // Monotone event stream.
+    for w in events.windows(2) {
+        if w[0].time() > w[1].time() {
+            return PropResult::Fail(format!("{label}: event stream went backwards"));
+        }
+    }
+
+    let mut finished: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut shed: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut tokens: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut finish_time: FxHashMap<u64, cronus::simclock::SimTime> =
+        FxHashMap::default();
+    for ev in events {
+        match ev {
+            SystemEvent::Finished { id, t } => {
+                *finished.entry(*id).or_insert(0) += 1;
+                finish_time.insert(*id, *t);
+            }
+            SystemEvent::Shed { id, .. } => *shed.entry(*id).or_insert(0) += 1,
+            SystemEvent::FirstToken { id, .. } | SystemEvent::Token { id, .. } => {
+                *tokens.entry(*id).or_insert(0) += 1
+            }
+        }
+    }
+
+    // Every *submitted* turn ends Finished xor Shed exactly once, with
+    // exact token conservation.  Turns of aborted sessions that were
+    // never submitted must not appear at all.
+    let submitted: FxHashMap<u64, cronus::simclock::SimTime> =
+        stats.submissions.iter().copied().collect();
+    for s in sessions {
+        for k in 0..s.turns.len() {
+            let id = turn_request_id(s.id, k);
+            let f = finished.get(&id).copied().unwrap_or(0);
+            let sh = shed.get(&id).copied().unwrap_or(0);
+            let was_offered = submitted.contains_key(&id)
+                || shed.contains_key(&id); // rejected/dropped turns: Shed only
+            if !was_offered {
+                if f + sh + tokens.get(&id).copied().unwrap_or(0) != 0 {
+                    return PropResult::Fail(format!(
+                        "{label}: unsubmitted turn {id} produced events"
+                    ));
+                }
+                continue;
+            }
+            if f + sh != 1 {
+                return PropResult::Fail(format!(
+                    "{label}: turn {id} ended {f}x Finished / {sh}x Shed"
+                ));
+            }
+            let got = tokens.get(&id).copied().unwrap_or(0);
+            let want = if f == 1 { s.turns[k].output_len } else { 0 };
+            if got != want {
+                return PropResult::Fail(format!(
+                    "{label}: turn {id} emitted {got} tokens, expected {want}"
+                ));
+            }
+        }
+    }
+
+    // Closed-loop causality: turn k submitted no earlier than turn k-1's
+    // finish plus think time; turn 0 no earlier than the session start.
+    for s in sessions {
+        for k in 0..s.turns.len() {
+            let id = turn_request_id(s.id, k);
+            let t = match submitted.get(&id) {
+                Some(&t) => t,
+                None => continue,
+            };
+            let earliest = if k == 0 {
+                cronus::simclock::SimTime(s.start_ns)
+            } else {
+                match finish_time.get(&turn_request_id(s.id, k - 1)) {
+                    Some(prev) => prev.after_secs(s.turns[k].think_s),
+                    None => {
+                        return PropResult::Fail(format!(
+                            "{label}: turn {id} submitted but predecessor never \
+                             finished"
+                        ))
+                    }
+                }
+            };
+            if t < earliest {
+                return PropResult::Fail(format!(
+                    "{label}: turn {id} submitted at {t} before finish+think \
+                     {earliest}"
+                ));
+            }
+        }
+    }
+
+    // Report-level conservation: submitted turns resolve as finished or
+    // rejected, and the report agrees with the event stream.
+    let n_finished: usize = finished.values().sum();
+    let n_shed: usize = shed.values().sum();
+    PropResult::assert_eq(
+        &format!("{label}: report.n_finished"),
+        out.report.n_finished,
+        n_finished,
+    )
+    .and(|| {
+        PropResult::assert_eq(
+            &format!("{label}: report.n_rejected"),
+            out.report.n_rejected,
+            n_shed,
+        )
+    })
+    .and(|| {
+        PropResult::assert_eq(
+            &format!("{label}: submitted turns all resolved"),
+            stats.n_submitted,
+            stats.n_finished_turns
+                + stats.n_rejected_turns
+                + stats.n_shed_turns
+                + stats.n_dropped_turns,
+        )
+    })
+    .and(|| {
+        PropResult::assert_eq(
+            &format!("{label}: stats.n_finished_turns"),
+            stats.n_finished_turns,
+            n_finished,
+        )
+    })
+}
+
+#[test]
+fn fuzz_affinity_vs_load_only_routing() {
+    check("closed-loop affinity vs LOT invariants", 8, |rng| {
+        let scfg = SessionConfig {
+            n_sessions: rng.range_usize(3, 9),
+            min_turns: 2,
+            max_turns: 2 + rng.range_usize(0, 3),
+            think_mean_s: 0.2 + rng.f64() * 1.5,
+            start_window_s: rng.f64() * 4.0,
+            mean_new_input: 192.0 + rng.f64() * 256.0,
+            max_new_input: 1024,
+            mean_output: 96.0 + rng.f64() * 96.0,
+            max_output: 384,
+            seed: rng.next_u64(),
+            ..SessionConfig::default()
+        };
+        let sessions = generate_sessions(&scfg);
+        let n_pairs = rng.range_usize(2, 4);
+        let total_turns: usize = sessions.iter().map(|s| s.turns.len()).sum();
+        let total_input: u64 =
+            sessions.iter().map(|s| s.total_input_tokens() as u64).sum();
+
+        let (lot_out, lot_events, lot_stats) =
+            run(&sessions, n_pairs, RoutePolicy::LeastOutstandingTokens, None);
+        let (aff_out, aff_events, aff_stats) =
+            run(&sessions, n_pairs, RoutePolicy::KvAffinity, None);
+
+        let r = verify_invariants(&sessions, &lot_out, &lot_events, &lot_stats, "LOT")
+            .and(|| {
+                verify_invariants(
+                    &sessions,
+                    &aff_out,
+                    &aff_events,
+                    &aff_stats,
+                    "KvAffinity",
+                )
+            });
+        if !matches!(r, PropResult::Ok) {
+            return r;
+        }
+
+        // The exact prefill accounting below assumes no preemptions (a
+        // preempted request re-prefills its prompt, inflating executed
+        // tokens).  These workloads sit far below KV-pool pressure, so
+        // preemption is not expected — but a seed that somehow triggers
+        // one is a precondition miss, not an affinity bug.
+        let preemptions = |out: &RunOutcome| -> u64 {
+            out.instances.iter().map(|i| i.n_preemptions).sum()
+        };
+        if preemptions(&lot_out) + preemptions(&aff_out) > 0 {
+            return PropResult::Discard;
+        }
+
+        // Without an SLO nothing is shed: both policies complete every
+        // turn, so the prefill comparison is at equal completed turns.
+        PropResult::assert_eq("LOT completes all", lot_stats.n_finished_turns, total_turns)
+            .and(|| {
+                PropResult::assert_eq(
+                    "affinity completes all",
+                    aff_stats.n_finished_turns,
+                    total_turns,
+                )
+            })
+            .and(|| {
+                // KV-oblivious routing recomputes every prompt token.
+                PropResult::assert_eq(
+                    "LOT executes the full prompt stream",
+                    prefill_tokens_executed(&lot_out),
+                    total_input,
+                )
+            })
+            .and(|| {
+                PropResult::assert_true(
+                    "affinity reports hits",
+                    aff_out.report.n_kv_hits > 0
+                        && aff_out.report.kv_hit_rate > 0.0
+                        && aff_out.report.prefill_tokens_saved > 0,
+                )
+            })
+            .and(|| {
+                // Acceptance criterion: strictly fewer prefill tokens at
+                // equal completed-turn count — and exactly the saved
+                // amount fewer.
+                PropResult::assert_eq(
+                    "affinity skips exactly the saved prefix tokens",
+                    prefill_tokens_executed(&aff_out),
+                    total_input - aff_out.report.prefill_tokens_saved,
+                )
+            })
+            .and(|| {
+                PropResult::assert_true(
+                    "strictly fewer prefill tokens under affinity",
+                    prefill_tokens_executed(&aff_out)
+                        < prefill_tokens_executed(&lot_out),
+                )
+            })
+            .and(|| {
+                PropResult::assert_eq(
+                    "LOT never hits",
+                    lot_out.report.n_kv_hits,
+                    0,
+                )
+            })
+    });
+}
+
+/// "Affinity never violates `--slo-ttft-ms`" is enforced at the
+/// *admission* boundary: the resident pair is used only while its
+/// prefix-credit-aware TTFT estimate meets the SLO (pinned by the
+/// `affinity_falls_back_when_resident_pair_blows_the_slo` router unit
+/// test), and everything dispatched went through `slo_admission`.
+/// Measured TTFT is a prediction subject to estimator error — the same
+/// deliberate scope as the open-loop SLO tests — so this fuzz asserts
+/// the structural invariants plus exact conservation, not a hard bound
+/// on realized latency.
+#[test]
+fn fuzz_affinity_under_slo_admission_conserves() {
+    check("closed-loop affinity under SLO admission", 6, |rng| {
+        let scfg = SessionConfig {
+            n_sessions: rng.range_usize(3, 8),
+            min_turns: 2,
+            max_turns: 4,
+            think_mean_s: 0.2 + rng.f64(),
+            start_window_s: rng.f64() * 2.0,
+            mean_new_input: 256.0,
+            max_new_input: 1024,
+            mean_output: 128.0,
+            max_output: 384,
+            seed: rng.next_u64(),
+            ..SessionConfig::default()
+        };
+        let sessions = generate_sessions(&scfg);
+        // A moderately tight SLO: some turns may defer/shed, none may
+        // vanish or double-resolve.
+        let slo = Some(0.5 + rng.f64() * 1.5);
+        let (out, events, stats) =
+            run(&sessions, rng.range_usize(1, 4), RoutePolicy::KvAffinity, slo);
+        verify_invariants(&sessions, &out, &events, &stats, "KvAffinity+SLO").and(
+            || {
+                PropResult::assert_eq(
+                    "report conserves submitted turns",
+                    out.report.n_finished + out.report.n_rejected,
+                    out.report.n_requests,
+                )
+            },
+        )
+    });
+}
