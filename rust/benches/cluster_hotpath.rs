@@ -1,0 +1,109 @@
+//! Cluster stepping overhead vs fleet size: the event-calendar headline
+//! measurement (EXPERIMENTS.md §Cluster-perf).
+//!
+//! The same open-loop trace is replayed through an N-pair cluster for
+//! N ∈ {4, 16, 64, 256}; the simulated work is fixed by the trace, so
+//! ns/arrival isolates the cluster-layer cost (routing + stepping +
+//! event merging).  With the lazily-invalidated per-pair event calendar
+//! (`submit`/`advance`/`next_event_at` touch only due pairs, O(due +
+//! log N)) the per-arrival overhead must grow *sublinearly* in the pair
+//! count — the pre-calendar stepper scanned all N pairs per arrival and
+//! grew linearly.
+//!
+//! Besides the table, the bench emits a machine-readable
+//! `BENCH_cluster_hotpath.json` (override with
+//! `CRONUS_CLUSTER_BENCH_JSON`); CI validates the schema and archives
+//! the artifact — record, don't gate on latency (CI machines are noisy).
+//!
+//! ```bash
+//! cargo bench --bench cluster_hotpath                  # 512 requests, 4→256 pairs
+//! CRONUS_BENCH_N=128 CRONUS_MAX_PAIRS=64 cargo bench --bench cluster_hotpath
+//! ```
+
+use cronus::benchkit::JVal;
+use cronus::launcher::{cluster_hotpath_sweep, HotpathPoint};
+
+fn main() {
+    let n_requests = std::env::var("CRONUS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512usize);
+    let max_pairs = std::env::var("CRONUS_MAX_PAIRS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256usize)
+        .max(1);
+    let rate_rps = 64.0;
+    let seed = 42u64;
+
+    let mut pair_counts: Vec<usize> =
+        [4usize, 16, 64, 256].into_iter().filter(|&p| p <= max_pairs).collect();
+    if pair_counts.is_empty() {
+        pair_counts.push(max_pairs);
+    }
+
+    let (table, points) =
+        cluster_hotpath_sweep(&pair_counts, n_requests, rate_rps, seed);
+    table.print();
+
+    // Headline claim: cluster overhead per arrival grows sublinearly in
+    // the pair count (an O(N)-per-arrival stepper would track the
+    // linear-growth line).
+    let first = points.first().expect("at least one sweep point");
+    let last = points.last().expect("at least one sweep point");
+    let per_arrival_growth = last.ns_per_arrival / first.ns_per_arrival.max(1e-9);
+    let linear_growth = last.n_pairs as f64 / first.n_pairs as f64;
+    let sublinear = points.len() < 2 || per_arrival_growth < linear_growth;
+    println!("\nheadline-claim check:");
+    println!(
+        "  [{}] per-arrival overhead grows sublinearly {} → {} pairs \
+         ({:.2}x vs {:.0}x linear)",
+        if sublinear { "ok" } else { "MISS" },
+        first.n_pairs,
+        last.n_pairs,
+        per_arrival_growth,
+        linear_growth,
+    );
+
+    // --- Machine-readable artifact (see EXPERIMENTS.md §Cluster-perf) ---
+    let point_jval = |p: &HotpathPoint| -> JVal {
+        JVal::Obj(vec![
+            ("pairs".into(), JVal::Int(p.n_pairs as u64)),
+            ("wall_s".into(), JVal::Num(p.wall_s)),
+            ("ns_per_arrival".into(), JVal::Num(p.ns_per_arrival)),
+            ("events".into(), JVal::Int(p.n_events)),
+            ("events_per_s".into(), JVal::Num(p.events_per_s)),
+            ("finished".into(), JVal::Int(p.outcome.report.n_finished as u64)),
+            ("shed".into(), JVal::Int(p.outcome.report.n_rejected as u64)),
+        ])
+    };
+    let artifact = JVal::Obj(vec![
+        ("schema_version".into(), JVal::Int(1)),
+        ("generated_by".into(), JVal::Str("cluster_hotpath".into())),
+        (
+            "workload".into(),
+            JVal::Obj(vec![
+                ("n_requests".into(), JVal::Int(n_requests as u64)),
+                ("rate_rps".into(), JVal::Num(rate_rps)),
+                ("seed".into(), JVal::Int(seed)),
+                ("policy".into(), JVal::Str("least-outstanding".into())),
+            ]),
+        ),
+        ("points".into(), JVal::Arr(points.iter().map(point_jval).collect())),
+        (
+            "checks".into(),
+            JVal::Obj(vec![
+                ("pairs_min".into(), JVal::Int(first.n_pairs as u64)),
+                ("pairs_max".into(), JVal::Int(last.n_pairs as u64)),
+                ("per_arrival_growth".into(), JVal::Num(per_arrival_growth)),
+                ("linear_growth".into(), JVal::Num(linear_growth)),
+                ("sublinear_per_arrival".into(), JVal::Bool(sublinear)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("CRONUS_CLUSTER_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_cluster_hotpath.json".to_string());
+    std::fs::write(&path, artifact.render() + "\n")
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("wrote {path}");
+}

@@ -11,6 +11,13 @@
 //! "weights round-robin" router.  The whole dispatcher is online state
 //! (see [`crate::systems::ServingSystem`]): requests enter one at a time
 //! via `submit` and the engines are stepped by `advance`.
+//!
+//! The dispatcher honours [`Request::kv_credit`] (ROADMAP DP/PP
+//! prefix-credit item, DP half): a follow-up turn routed back to the
+//! pair holding its session's prefix KV skips that prefix outright —
+//! the engine neither recomputes nor transfers it — so KV-affinity
+//! clusters save prefill on DP pairs exactly as they do on Cronus
+//! pairs.
 
 use std::collections::VecDeque;
 
@@ -20,7 +27,7 @@ use crate::metrics::Collector;
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::perfmodel::PerfModel;
 use crate::systems::{
-    earliest_instant, past_deadline, record_engine_event, take_pending_until,
+    drain_pending_into, earliest_instant, past_deadline, record_engine_event,
     Admission, InstanceStat, RunOutcome, ServingSystem, SystemEvent,
 };
 use crate::workload::Request;
@@ -124,10 +131,17 @@ impl DpState {
                 });
             let Some(e) = candidate else { break };
             let r = self.frontend.pop_front().unwrap();
-            self.engines[e].submit(EngineRequest::whole(
+            // A resident session prefix (granted by the cluster router
+            // via `Request::kv_credit`) is skipped outright: its KV
+            // already lives in this engine's pool, so it is neither
+            // recomputed nor transferred.  Sessionless requests carry a
+            // zero credit and take the exact `whole`-request path.
+            self.engines[e].submit(EngineRequest::with_prefix_credit(
                 r.id,
                 r.input_len,
                 r.output_len,
+                r.kv_credit,
+                r.kv_credit,
             ));
             self.dispatched[e] += 1;
         }
@@ -174,6 +188,8 @@ impl ServingSystem for DpSystem {
         st.run_until(t, false);
         st.q.advance_now(t);
         st.metrics.on_arrival(req.id, t);
+        let mut req = req;
+        req.clamp_kv_credit();
         st.frontend.push_back(req);
         st.pump();
         Admission::Accepted
@@ -185,12 +201,15 @@ impl ServingSystem for DpSystem {
     }
 
     fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
-        match self.st.as_mut() {
-            None => Vec::new(),
-            Some(st) => {
-                st.run_until(until, true);
-                take_pending_until(&mut st.pending, until)
-            }
+        let mut out = Vec::new();
+        self.advance_into(until, &mut out);
+        out
+    }
+
+    fn advance_into(&mut self, until: SimTime, out: &mut Vec<SystemEvent>) {
+        if let Some(st) = self.st.as_mut() {
+            st.run_until(until, true);
+            drain_pending_into(&mut st.pending, until, out);
         }
     }
 
@@ -255,6 +274,51 @@ mod tests {
         let prefilled: u64 =
             out.instances.iter().map(|i| i.tokens_prefilled).sum();
         assert_eq!(prefilled, total_input);
+    }
+
+    #[test]
+    fn dp_kv_credit_skips_resident_prefix_prefill() {
+        use crate::systems::prefill_tokens_executed;
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        // Same follow-up turn, cold (no credit) vs warm (600 of the 1000
+        // prompt tokens resident from the previous turn).
+        let mut cold_req = crate::workload::Request::new(1, 0, 1000, 16);
+        cold_req.session_id = 1;
+        cold_req.prefix_len = 600;
+        let mut warm_req = cold_req;
+        warm_req.kv_credit = 600;
+
+        let run = |req| replay_trace(&mut DpSystem::new(cfg.clone()), &[req]);
+        let cold = run(cold_req);
+        let warm = run(warm_req);
+        assert_eq!(cold.report.n_finished, 1);
+        assert_eq!(warm.report.n_finished, 1);
+        // Executed prefill = prompt minus the resident credit, exactly —
+        // and nothing moved over the link (the prefix was resident, not
+        // transferred).
+        assert_eq!(prefill_tokens_executed(&cold), 1000);
+        assert_eq!(prefill_tokens_executed(&warm), 400);
+        let received: u64 =
+            warm.instances.iter().map(|i| i.tokens_kv_received).sum();
+        assert_eq!(received, 0);
+        // Skipping 600 prefill tokens can only help the finish time.
+        assert!(warm.report.makespan_s <= cold.report.makespan_s);
+    }
+
+    #[test]
+    fn dp_clamps_oversized_credit() {
+        // A credit exceeding the declared prefix (or the whole prompt)
+        // must be clamped, not panic the engine's invariants.
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut req = crate::workload::Request::new(1, 0, 500, 8);
+        req.session_id = 3;
+        req.prefix_len = 499;
+        req.kv_credit = 10_000;
+        let out = replay_trace(&mut DpSystem::new(cfg), &[req]);
+        assert_eq!(out.report.n_finished, 1);
+        use crate::systems::prefill_tokens_executed;
+        // Clamped to prefix_len (499): exactly one prompt token computed.
+        assert_eq!(prefill_tokens_executed(&out), 1);
     }
 
     #[test]

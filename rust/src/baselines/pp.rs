@@ -36,7 +36,7 @@ use crate::simgpu::link::LinkSpec;
 use crate::simgpu::model_desc::ModelDesc;
 use crate::simgpu::perfmodel::{IterationShape, PerfModel};
 use crate::systems::{
-    earliest_instant, past_deadline, record_engine_event, take_pending_until,
+    drain_pending_into, earliest_instant, past_deadline, record_engine_event,
     Admission, InstanceStat, RunOutcome, ServingSystem, SystemEvent,
 };
 use crate::workload::Request;
@@ -296,12 +296,15 @@ impl ServingSystem for PpSystem {
     }
 
     fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
-        match self.st.as_mut() {
-            None => Vec::new(),
-            Some(st) => {
-                st.run_until(until, true);
-                take_pending_until(&mut st.pending, until)
-            }
+        let mut out = Vec::new();
+        self.advance_into(until, &mut out);
+        out
+    }
+
+    fn advance_into(&mut self, until: SimTime, out: &mut Vec<SystemEvent>) {
+        if let Some(st) = self.st.as_mut() {
+            st.run_until(until, true);
+            drain_pending_into(&mut st.pending, until, out);
         }
     }
 

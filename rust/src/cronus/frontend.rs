@@ -35,7 +35,7 @@ use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::fit::calibrate;
 use crate::simgpu::perfmodel::PerfModel;
 use crate::systems::{
-    earliest_instant, past_deadline, record_engine_event, take_pending_until,
+    drain_pending_into, earliest_instant, past_deadline, record_engine_event,
     Admission, InstanceStat, RunOutcome, ServingSystem, SystemEvent,
 };
 use crate::util::fxhash::FxHashMap;
@@ -293,14 +293,8 @@ impl ServingSystem for CronusSystem {
         st.run_until(t, false);
         st.q.advance_now(t);
         st.metrics.on_arrival(req.id, t);
-        // Clamp the granted resident-prefix credit to something this
-        // pair can honour: never the whole prompt (at least one token is
-        // computed) and never more than the declared session prefix.
         let mut req = req;
-        req.kv_credit = req
-            .kv_credit
-            .min(req.prefix_len)
-            .min(req.input_len.saturating_sub(1));
+        req.clamp_kv_credit();
         if req.input_len > st.cpi_capacity_tokens {
             // Cannot ever fit the CPI's KV pool; reject (vLLM would too).
             st.n_rejected += 1;
@@ -324,12 +318,15 @@ impl ServingSystem for CronusSystem {
     }
 
     fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
-        match self.st.as_mut() {
-            None => Vec::new(),
-            Some(st) => {
-                st.run_until(until, true);
-                take_pending_until(&mut st.pending, until)
-            }
+        let mut out = Vec::new();
+        self.advance_into(until, &mut out);
+        out
+    }
+
+    fn advance_into(&mut self, until: SimTime, out: &mut Vec<SystemEvent>) {
+        if let Some(st) = self.st.as_mut() {
+            st.run_until(until, true);
+            drain_pending_into(&mut st.pending, until, out);
         }
     }
 

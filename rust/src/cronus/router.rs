@@ -8,7 +8,10 @@
 //! released by [`Router::on_completed`] when the owning
 //! [`ClusterSystem`](crate::systems::cluster::ClusterSystem) observes the
 //! pair's `Finished`/`Shed` events — so routing decisions react to what
-//! the pairs actually served, not to a virtual drain-rate guess.
+//! the pairs actually served, not to a virtual drain-rate guess.  The
+//! backlogs are mirrored into an indexed tournament tree (`LoadIndex`)
+//! so the least-outstanding argmin on the routing hot path is O(1) per
+//! arrival with O(log N) updates, not a full scan of the fleet.
 //!
 //! Four pluggable policies:
 //!
@@ -123,8 +126,10 @@ struct PairLoad {
     /// (capacity-weighted eviction).
     residency_capacity_tokens: u64,
     /// Whether the pair's serving system can exploit a resident prefix
-    /// (the Cronus frontend family); DP/PP pairs always re-prefill, so
-    /// granting them credit would fake savings.
+    /// (the Cronus frontend family and the DP dispatcher, which stamps
+    /// `Request::kv_credit` through to its engines); PP pairs always
+    /// re-prefill through the staged pipeline, so granting them credit
+    /// would fake savings.
     supports_credit: bool,
 }
 
@@ -160,6 +165,68 @@ impl PairLoad {
     }
 }
 
+/// Tournament tree (a complete binary segment tree) over the pairs'
+/// live backlogs: O(1) argmin with ties to the lowest pair index,
+/// O(log N) point update.  This is the indexed load structure behind
+/// the [`RoutePolicy::LeastOutstandingTokens`] hot path — the policy's
+/// argmin used to be a full O(N) scan on every arrival, which dominated
+/// cluster routing cost at hundreds of pairs.
+struct LoadIndex {
+    /// Power-of-two leaf span (`>= n_pairs`).
+    size: usize,
+    /// `tree[1]` is the root; leaf `i` lives at `size + i`.  Each
+    /// internal node stores the index of the minimum leaf in its
+    /// subtree; ties prefer the left child, i.e. the lower pair index —
+    /// exactly the scan's first-minimum tie-break.
+    tree: Vec<usize>,
+    /// Leaf loads; unused leaves (`i >= n_pairs`) hold +∞.
+    vals: Vec<f64>,
+}
+
+impl LoadIndex {
+    fn new(n: usize) -> LoadIndex {
+        let size = n.next_power_of_two().max(1);
+        let mut idx = LoadIndex {
+            size,
+            tree: vec![0; 2 * size],
+            vals: vec![f64::INFINITY; size],
+        };
+        idx.vals[..n].fill(0.0);
+        for (i, leaf) in idx.tree[size..].iter_mut().enumerate() {
+            *leaf = i;
+        }
+        for node in (1..size).rev() {
+            idx.tree[node] = idx.pick_child(node);
+        }
+        idx
+    }
+
+    fn pick_child(&self, node: usize) -> usize {
+        let l = self.tree[2 * node];
+        let r = self.tree[2 * node + 1];
+        if self.vals[l] <= self.vals[r] {
+            l
+        } else {
+            r
+        }
+    }
+
+    /// Set pair `i`'s load and rebubble its root path: O(log N).
+    fn set(&mut self, i: usize, v: f64) {
+        self.vals[i] = v;
+        let mut node = (self.size + i) / 2;
+        while node >= 1 {
+            self.tree[node] = self.pick_child(node);
+            node /= 2;
+        }
+    }
+
+    /// Pair with the smallest load (lowest index on ties): O(1).
+    fn argmin(&self) -> usize {
+        self.tree[1]
+    }
+}
+
 /// The cluster dispatcher.  Deterministic: identical construction and
 /// request/completion sequences produce identical assignments (LRU
 /// eviction breaks ties on a unique monotone counter, never on hash
@@ -167,6 +234,10 @@ impl PairLoad {
 pub struct Router {
     policy: RoutePolicy,
     pairs: Vec<PairLoad>,
+    /// Indexed mirror of the pairs' `outstanding_tokens`, kept in sync
+    /// by [`charge`](Self::charge) / [`on_completed`](Self::on_completed)
+    /// so the least-outstanding argmin is O(1) instead of a scan.
+    load_index: LoadIndex,
     /// Session → residency of its prefix KV.  Maintained only under
     /// [`RoutePolicy::KvAffinity`]; empty (and therefore inert in the
     /// TTFT estimator) under the load-based policies.
@@ -237,13 +308,16 @@ impl Router {
                         SystemKind::Cronus
                             | SystemKind::DisaggLowHigh
                             | SystemKind::DisaggHighLow
+                            | SystemKind::DpChunked
                     ),
                 }
             })
             .collect();
+        let load_index = LoadIndex::new(cluster.pairs.len());
         Router {
             policy,
             pairs,
+            load_index,
             residency: FxHashMap::default(),
             use_seq: 0,
             n_kv_hits: 0,
@@ -254,6 +328,26 @@ impl Router {
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
+    }
+
+    /// Reset every piece of load/session state to the just-constructed
+    /// value, keeping the calibrated per-pair predictors (they are a
+    /// pure function of the cluster config, so a reset router is
+    /// indistinguishable from a freshly built one).  Lets a cluster
+    /// `drain` reset for reuse without re-profiling all N pairs.
+    pub fn reset(&mut self) {
+        for (i, p) in self.pairs.iter_mut().enumerate() {
+            p.outstanding_tokens = 0.0;
+            p.n_routed = 0;
+            p.tokens_routed = 0;
+            p.resident_tokens = 0;
+            self.load_index.set(i, 0.0);
+        }
+        self.residency.clear();
+        self.use_seq = 0;
+        self.n_kv_hits = 0;
+        self.prefill_tokens_saved = 0;
+        self.n_prefix_routed = 0;
     }
 
     pub fn n_pairs(&self) -> usize {
@@ -335,6 +429,19 @@ impl Router {
     /// a safety net, not a policy).  Ties break toward the lowest pair
     /// index, keeping the assignment deterministic.
     fn pick(&self, req: &Request, slo: Option<f64>) -> usize {
+        // Hot path: the unconstrained least-outstanding argmin (also the
+        // KvAffinity miss/first-turn fallback) is answered by the load
+        // index in O(1) instead of scanning all N pairs.  SLO-filtered
+        // routing still scans — the feasibility filter depends on the
+        // request — as do the other policies' scores.
+        if slo.is_none()
+            && matches!(
+                self.policy,
+                RoutePolicy::LeastOutstandingTokens | RoutePolicy::KvAffinity
+            )
+        {
+            return self.load_index.argmin();
+        }
         let score = |p: &PairLoad, i: usize| -> f64 {
             match self.policy {
                 RoutePolicy::RoundRobin => p.n_routed as f64 / p.rate_share,
@@ -373,6 +480,7 @@ impl Router {
         p.outstanding_tokens += load as f64;
         p.n_routed += 1;
         p.tokens_routed += load;
+        self.load_index.set(pair, self.pairs[pair].outstanding_tokens);
         load
     }
 
@@ -429,7 +537,7 @@ impl Router {
                 self.pairs[old.pair].resident_tokens.saturating_sub(old.tokens);
         }
         if !self.pairs[pair].supports_credit {
-            // A DP/PP pair re-prefills every prompt: pinning the session
+            // A PP pair re-prefills every prompt: pinning the session
             // there would make affinity stick follow-ups to it (skewing
             // load) without ever saving a token.  The stale residency on
             // the previous pair was still dropped above.
@@ -472,6 +580,7 @@ impl Router {
     pub fn on_completed(&mut self, pair: usize, tokens: u64) {
         let p = &mut self.pairs[pair];
         p.outstanding_tokens = (p.outstanding_tokens - tokens as f64).max(0.0);
+        self.load_index.set(pair, self.pairs[pair].outstanding_tokens);
     }
 
     /// A session ended (its final turn completed, or a turn was shed and
@@ -914,15 +1023,15 @@ mod tests {
 
     #[test]
     fn sessions_are_never_pinned_on_credit_less_pairs() {
-        // Pair 0 is a DP deployment: it re-prefills everything, so
-        // affinity must not pin sessions there (follow-ups would stick
-        // without saving a token).
-        let mut dp = PairConfig::cronus(DeploymentConfig::paper(A100, A10, LLAMA3_8B));
-        dp.system = SystemKind::DpChunked;
+        // Pair 0 is a PP deployment: the staged pipeline re-prefills
+        // everything, so affinity must not pin sessions there
+        // (follow-ups would stick without saving a token).
+        let mut pp = PairConfig::cronus(DeploymentConfig::paper(A100, A10, LLAMA3_8B));
+        pp.system = SystemKind::PpChunked;
         let cronus = PairConfig::cronus(DeploymentConfig::paper(A100, A30, LLAMA3_8B));
-        let cfg = ClusterConfig::new(vec![dp, cronus]);
+        let cfg = ClusterConfig::new(vec![pp, cronus]);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
-        // Turn 0 lands on the (empty, first) DP pair via the LOT
+        // Turn 0 lands on the (empty, first) PP pair via the LOT
         // fallback; the commit must not create residency.
         let t0 = session_req(1, 0, 800, 100);
         let d0 = router.route(&t0);
@@ -930,11 +1039,99 @@ mod tests {
         router.commit_route(&t0, &d0);
         assert_eq!(router.session_residency(1), None);
         // The follow-up is a plain load-based pick with zero credit, not
-        // a sticky route to the DP pair.
+        // a sticky route to the PP pair.
         let t1 = session_req(1, 900, 300, 80);
         let d1 = router.route(&t1);
         assert_eq!(d1.kv_credit, 0);
         assert_eq!(router.kv_hits(), 0);
+    }
+
+    #[test]
+    fn dp_pairs_now_support_residency_and_credit() {
+        // ROADMAP DP prefix-credit item: the DP dispatcher honours
+        // `kv_credit`, so affinity may pin sessions on DP pairs and
+        // grant them credit like any Cronus pair.
+        let mut dp = PairConfig::cronus(DeploymentConfig::paper(A100, A10, LLAMA3_8B));
+        dp.system = SystemKind::DpChunked;
+        let cronus = PairConfig::cronus(DeploymentConfig::paper(A100, A30, LLAMA3_8B));
+        let cfg = ClusterConfig::new(vec![dp, cronus]);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        assert_eq!(d0.pair, 0, "empty DP pair wins the LOT tie");
+        router.commit_route(&t0, &d0);
+        assert_eq!(router.session_residency(1), Some(0));
+        let t1 = session_req(1, 900, 300, 80);
+        let d1 = router.route(&t1);
+        assert_eq!(d1.pair, 0, "follow-up sticks to the resident DP pair");
+        assert_eq!(d1.kv_credit, 900);
+        assert_eq!(d1.charged_tokens, 380);
+        router.commit_route(&t1, &d1);
+        assert_eq!(router.kv_hits(), 1);
+        assert_eq!(router.prefill_tokens_saved(), 900);
+    }
+
+    #[test]
+    fn reset_restores_the_freshly_built_state() {
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        router.commit_route(&t0, &d0);
+        route_all(&mut router, &trace(40, 19));
+        assert!(router.resident_sessions() > 0);
+        router.reset();
+        // Indistinguishable from a new router: same counters, empty
+        // residency, zeroed (index-consistent) backlogs, same routes.
+        assert_eq!(router.outstanding_tokens(), vec![0.0; 3]);
+        assert_eq!(router.routed_counts(), vec![0; 3]);
+        assert_eq!(router.resident_sessions(), 0);
+        assert_eq!(router.resident_tokens(), vec![0; 3]);
+        assert_eq!(router.kv_hits(), 0);
+        assert_eq!(router.prefill_tokens_saved(), 0);
+        assert_eq!(router.n_prefix_routed(), 0);
+        let t = trace(30, 20);
+        let replayed = route_all(&mut router, &t);
+        let fresh = route_all(&mut Router::new(RoutePolicy::KvAffinity, &cfg), &t);
+        assert_eq!(replayed, fresh);
+    }
+
+    #[test]
+    fn load_index_matches_scan_argmin() {
+        // The O(1) indexed argmin must agree with a naive scan over the
+        // live backlogs after any charge/complete sequence, ties to the
+        // lowest pair index (the routing hot path's determinism pin).
+        let cfg = ClusterConfig::mixed(5, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        let t = trace(60, 17);
+        let mut charged: Vec<(usize, u64)> = Vec::new();
+        for (k, r) in t.iter().enumerate() {
+            let scan = {
+                let loads = router.outstanding_tokens();
+                let mut best = 0usize;
+                for (i, &v) in loads.iter().enumerate() {
+                    if v < loads[best] {
+                        best = i;
+                    }
+                }
+                best
+            };
+            let d = router.route(r);
+            assert_eq!(d.pair, scan, "arrival {k}");
+            charged.push((d.pair, d.charged_tokens));
+            // Release a few in-flight requests along the way so the
+            // index sees decreases (and the zero clamp) too.
+            if k % 3 == 2 {
+                let (pair, tokens) = charged.remove(0);
+                router.on_completed(pair, tokens);
+            }
+        }
+        for (pair, tokens) in charged {
+            router.on_completed(pair, tokens);
+        }
+        // Everything released: all backlogs zero, tie breaks to pair 0.
+        assert_eq!(router.outstanding_tokens(), vec![0.0; 5]);
+        assert_eq!(router.route(&t[0]).pair, 0);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! (`cronus bench-*`) and the `cargo bench` targets.  One function per
 //! paper table/figure (see DESIGN.md §4 for the experiment index).
 
-use crate::benchkit::Table;
+use crate::benchkit::{time_once, Table};
 use crate::config::topology::ClusterConfig;
 use crate::config::{DeploymentConfig, SystemKind};
 use crate::cronus::balancer::SplitPolicy;
@@ -510,6 +510,80 @@ pub fn session_affinity_sweep(
     (table, points)
 }
 
+// ---------------------------------------------------------------------------
+// Cluster hot path: stepping overhead vs fleet size (EXPERIMENTS.md
+// §Cluster-perf)
+// ---------------------------------------------------------------------------
+
+/// One point of the cluster hot-path sweep.
+pub struct HotpathPoint {
+    pub n_pairs: usize,
+    /// Wall time of the whole replay (submit + advance + drain).
+    pub wall_s: f64,
+    /// Wall time per submitted request.
+    pub ns_per_arrival: f64,
+    /// Every `SystemEvent` the run produced (tokens + terminals).
+    pub n_events: u64,
+    pub events_per_s: f64,
+    pub outcome: RunOutcome,
+}
+
+/// Measure the cluster stepping overhead as the fleet grows: the same
+/// open-loop trace is replayed through a [`ClusterSystem`] at each pair
+/// count under least-outstanding-tokens routing.  With the event
+/// calendar, `submit`/`advance`/`next_event_at` touch only pairs with
+/// due events, so ns/arrival must grow sublinearly in the pair count
+/// (the pre-calendar stepper scanned all N pairs per arrival).  The
+/// total simulated work is fixed by the trace, so the pair-count axis
+/// isolates the cluster-layer overhead this PR indexes away.
+pub fn cluster_hotpath_sweep(
+    pair_counts: &[usize],
+    n_requests: usize,
+    rate_rps: f64,
+    seed: u64,
+) -> (Table, Vec<HotpathPoint>) {
+    let base = generate(n_requests, &AzureTraceConfig::default(), seed);
+    let trace = at_rate(&base, rate_rps);
+    let mut table = Table::new(
+        format!(
+            "Cluster hot path: {n_requests} requests at {rate_rps:.0} rps, \
+             least-outstanding routing"
+        ),
+        &["Pairs", "wall (s)", "ns/arrival", "events", "events/s", "finished"],
+    );
+    let mut points = Vec::new();
+    for &n_pairs in pair_counts {
+        let cfg = ClusterConfig::mixed(n_pairs, model_desc::LLAMA3_8B);
+        let mut sys =
+            ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens);
+        let (outcome, wall_s) = time_once(|| replay_trace(&mut sys, &trace));
+        let r = &outcome.report;
+        // One FirstToken/Token per output token plus one terminal event
+        // per request — the full stream the run produced.
+        let n_events =
+            (r.n_output_tokens + r.n_finished + r.n_rejected) as u64;
+        let ns_per_arrival = wall_s * 1e9 / n_requests.max(1) as f64;
+        let events_per_s = n_events as f64 / wall_s.max(1e-12);
+        table.row(vec![
+            n_pairs.to_string(),
+            format!("{wall_s:.3}"),
+            format!("{ns_per_arrival:.0}"),
+            n_events.to_string(),
+            format!("{events_per_s:.0}"),
+            r.n_finished.to_string(),
+        ]);
+        points.push(HotpathPoint {
+            n_pairs,
+            wall_s,
+            ns_per_arrival,
+            n_events,
+            events_per_s,
+            outcome,
+        });
+    }
+    (table, points)
+}
+
 /// Cluster max-throughput measurement (the Table 2 procedure lifted to
 /// N pairs): all requests at t = 0.
 pub fn cluster_max_throughput(
@@ -631,6 +705,22 @@ mod tests {
         assert_eq!(lot.stats.n_finished_turns, aff.stats.n_finished_turns);
         assert!(aff.prefill_tokens_executed < lot.prefill_tokens_executed);
         assert!(aff.outcome.report.kv_hit_rate > 0.0);
+    }
+
+    #[test]
+    fn cluster_hotpath_sweep_serves_every_point() {
+        let (table, points) = cluster_hotpath_sweep(&[1, 2], 24, 16.0, 7);
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert_eq!(p.outcome.report.n_finished, 24);
+            assert!(p.wall_s > 0.0 && p.ns_per_arrival > 0.0);
+            // 24 finishes + at least one token each.
+            assert!(p.n_events > 48, "{}", p.n_events);
+            assert!(p.events_per_s > 0.0);
+        }
+        let s = table.render();
+        assert!(s.contains("ns/arrival"), "{s}");
+        assert!(s.contains("least-outstanding"), "{s}");
     }
 
     #[test]

@@ -161,8 +161,12 @@ pub struct Report {
     /// Prefill tokens those hits skipped (neither recomputed nor
     /// transferred).
     pub prefill_tokens_saved: u64,
-    /// `n_kv_hits` / follow-up turns routed (turns with a non-empty
-    /// session prefix); 0.0 when the workload has no follow-up turns.
+    /// Follow-up turns routed (turns with a non-empty session prefix) —
+    /// the denominator of `kv_hit_rate`, carried so merging reports
+    /// keeps the rate consistent.
+    pub n_prefix_routed: usize,
+    /// `n_kv_hits` / `n_prefix_routed`; 0.0 when the workload has no
+    /// follow-up turns.
     pub kv_hit_rate: f64,
     /// Raw TTFT samples, one per request that produced a first token.
     /// Sorted ascending ([`Report::from_samples`] sorts once and derives
@@ -223,6 +227,7 @@ impl Report {
             e2e_p99_s: percentile_of_sorted(&e2e, 99.0),
             n_kv_hits: 0,
             prefill_tokens_saved: 0,
+            n_prefix_routed: 0,
             kv_hit_rate: 0.0,
             ttft_samples: ttft,
             tbt_samples: tbt,
@@ -247,6 +252,7 @@ impl Report {
         let mut n_output_tokens = 0usize;
         let mut n_kv_hits = 0usize;
         let mut prefill_tokens_saved = 0u64;
+        let mut n_prefix_routed = 0usize;
         let mut makespan_s = 0.0f64;
         for p in parts {
             n_requests += p.n_requests;
@@ -255,6 +261,7 @@ impl Report {
             n_output_tokens += p.n_output_tokens;
             n_kv_hits += p.n_kv_hits;
             prefill_tokens_saved += p.prefill_tokens_saved;
+            n_prefix_routed += p.n_prefix_routed;
             makespan_s = makespan_s.max(p.makespan_s);
             ttft.extend_from_slice(&p.ttft_samples);
             tbt.extend_from_slice(&p.tbt_samples);
@@ -273,8 +280,16 @@ impl Report {
         report.n_rejected = n_rejected;
         report.n_kv_hits = n_kv_hits;
         report.prefill_tokens_saved = prefill_tokens_saved;
-        // `kv_hit_rate` needs the follow-up-turn denominator, which the
-        // per-pair parts don't carry; the cluster sets it after merging.
+        report.n_prefix_routed = n_prefix_routed;
+        // The per-pair parts of a cluster run carry no KV accounting
+        // (the router owns it; the cluster stamps hits + denominator
+        // after merging), but merging *cluster-level* reports keeps the
+        // rate consistent with the summed hits.
+        report.kv_hit_rate = if n_prefix_routed > 0 {
+            n_kv_hits as f64 / n_prefix_routed as f64
+        } else {
+            0.0
+        };
         report
     }
     /// One-line summary used by benches and examples.
@@ -476,12 +491,18 @@ mod tests {
         assert!(!r.summary().contains("kv-hit"));
         r.n_kv_hits = 3;
         r.prefill_tokens_saved = 1200;
+        r.n_prefix_routed = 4;
         r.kv_hit_rate = 0.75;
         assert!(r.summary().contains("kv-hit 75%"), "{}", r.summary());
         assert!(r.summary().contains("saved 1200 tok"), "{}", r.summary());
         let merged = Report::merge("m", &[r.clone(), r]);
         assert_eq!(merged.n_kv_hits, 6);
         assert_eq!(merged.prefill_tokens_saved, 2400);
+        // The denominator merges too, so the merged rate stays
+        // consistent with the summed hits (it used to reset to 0%).
+        assert_eq!(merged.n_prefix_routed, 8);
+        assert!((merged.kv_hit_rate - 0.75).abs() < 1e-12);
+        assert!(merged.summary().contains("kv-hit 75%"), "{}", merged.summary());
     }
 
     #[test]

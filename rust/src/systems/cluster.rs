@@ -3,15 +3,24 @@
 //!
 //! Each pair is a full serving system of its own (Cronus by default —
 //! any [`SystemKind`](crate::config::SystemKind) per pair).  Requests
-//! are dispatched *at their arrival instant*: `submit` first steps every
-//! pair up to the arrival (so the router sees the completions that
-//! actually happened), routes against the live per-pair backlog, and
-//! hands the request to the chosen pair's own `submit`.  All pairs share
-//! the experiment's t = 0 clock; `drain` merges the per-pair reports
-//! into exact cluster-wide TTFT/TBT percentiles via
-//! [`Report::merge`].  Per-pair [`InstanceStat`]s are kept, prefixed
-//! `p<i>:`, so utilization imbalance across a mixed-capability fleet
-//! stays visible.
+//! are dispatched *at their arrival instant*: `submit` first steps the
+//! pairs with due events up to the arrival (so the router sees the
+//! completions that actually happened), routes against the live
+//! per-pair backlog, and hands the request to the chosen pair's own
+//! `submit`.  All pairs share the experiment's t = 0 clock; `drain`
+//! merges the per-pair reports into exact cluster-wide TTFT/TBT
+//! percentiles via [`Report::merge`].  Per-pair [`InstanceStat`]s are
+//! kept, prefixed `p<i>:`, so utilization imbalance across a
+//! mixed-capability fleet stays visible.
+//!
+//! Stepping is driven by an `EventCalendar` — a lazily-invalidated
+//! min-heap of per-pair `next_event_at` keys — so `submit` / `advance` /
+//! `next_event_at` touch only pairs that actually have due events:
+//! O(due + log N) per arrival instead of the O(N) scan the first cluster
+//! implementation did, which is what lets a single router front hundreds
+//! of pairs (see `benches/cluster_hotpath.rs`).  The merged event stream
+//! is byte-identical to the scan-everything stepper's — pinned across
+//! every policy, driver and SLO mode by `tests/cluster_calendar_oracle.rs`.
 //!
 //! With a TTFT SLO configured ([`ClusterSystem::with_slo_ttft`]), the
 //! router's [`slo_admission`](Router::slo_admission) policy runs before
@@ -25,12 +34,15 @@
 //! completes (or a turn sheds and the conversation aborts), and reports
 //! `Report::{n_kv_hits, kv_hit_rate, prefill_tokens_saved}` on drain.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::config::topology::ClusterConfig;
 use crate::cronus::router::{RoutePolicy, Router};
 use crate::metrics::Report;
 use crate::simclock::SimTime;
 use crate::systems::{
-    build_system, earliest_instant, take_pending_until, Admission, InstanceStat,
+    build_system, drain_pending_into, earliest_instant, Admission, InstanceStat,
     RunOutcome, ServingSystem, SystemEvent,
 };
 use crate::util::fxhash::FxHashMap;
@@ -45,9 +57,74 @@ struct AssignedReq {
     final_turn: bool,
 }
 
+/// The cluster's event calendar: a lazily-invalidated min-heap over the
+/// pairs' `next_event_at` instants, so stepping the fleet touches only
+/// the pairs with *due* events — O(due + log N) per operation instead of
+/// the O(N) scan-everything stepping it replaced.
+///
+/// Entries are `(instant, generation, pair)`.  A pair's key is re-issued
+/// with a bumped generation whenever the pair is submitted to or
+/// advanced; superseded entries stay buried in the heap and are
+/// discarded when they surface ([`clean_top`](Self::clean_top) runs
+/// after every mutation, so the top entry is always live and
+/// [`peek`](Self::peek) is O(1) and `&self`).
+struct EventCalendar {
+    heap: BinaryHeap<Reverse<(SimTime, u64, usize)>>,
+    /// Current generation per pair; entries carrying an older generation
+    /// are stale.
+    gens: Vec<u64>,
+}
+
+impl EventCalendar {
+    fn new(n: usize) -> EventCalendar {
+        EventCalendar {
+            heap: BinaryHeap::with_capacity(n + 1),
+            gens: vec![0; n],
+        }
+    }
+
+    /// Re-key `pair` to `at` (its fresh `next_event_at`), superseding
+    /// every entry previously issued for it.  O(log N) amortized.
+    fn set(&mut self, pair: usize, at: Option<SimTime>) {
+        self.gens[pair] += 1;
+        if let Some(t) = at {
+            self.heap.push(Reverse((t, self.gens[pair], pair)));
+        }
+        self.clean_top();
+    }
+
+    /// Earliest pair event across the cluster.
+    fn peek(&self) -> Option<SimTime> {
+        self.heap.peek().map(|&Reverse((t, _, _))| t)
+    }
+
+    /// Pop one pair with an event at or before `until`.  The pair's key
+    /// is consumed — the caller advances the pair and re-`set`s it.
+    fn pop_due(&mut self, until: SimTime) -> Option<usize> {
+        match self.heap.peek() {
+            Some(&Reverse((t, _, _))) if t <= until => {}
+            _ => return None,
+        }
+        let Reverse((_, _, pair)) = self.heap.pop().expect("peeked entry");
+        self.gens[pair] += 1; // buried duplicates die with the key
+        self.clean_top();
+        Some(pair)
+    }
+
+    /// Discard superseded entries until the top is live (or the heap is
+    /// empty), restoring the `peek` invariant.
+    fn clean_top(&mut self) {
+        while let Some(&Reverse((_, g, pair))) = self.heap.peek() {
+            if self.gens[pair] == g {
+                break;
+            }
+            self.heap.pop();
+        }
+    }
+}
+
 pub struct ClusterSystem {
     cfg: ClusterConfig,
-    policy: RoutePolicy,
     label: String,
     /// TTFT SLO in seconds; `None` disables admission control.
     slo_ttft_s: Option<f64>,
@@ -59,8 +136,18 @@ pub struct ClusterSystem {
     routed_counts: Vec<u64>,
     /// Requests shed by the router itself (SLO admission), not by pairs.
     n_router_rejected: usize,
-    /// Router-level shed events not yet collected via `advance`.
+    /// Merged events not yet collected via `advance` (time-sorted).
     pending: Vec<SystemEvent>,
+    /// Per-pair next-event calendar — the O(log N) stepping structure.
+    calendar: EventCalendar,
+    /// Recycled per-pair event streams for one `collect_until` batch.
+    scratch: Vec<Vec<SystemEvent>>,
+    /// Recycled list of pairs due in the current batch.
+    due: Vec<usize>,
+    /// Recycled merge cursors (one per pair; only due pairs are used).
+    cursors: Vec<usize>,
+    /// Recycled k-way-merge head heap: `(next event time, pair)`.
+    merge: BinaryHeap<Reverse<(SimTime, usize)>>,
 }
 
 impl ClusterSystem {
@@ -75,7 +162,6 @@ impl ClusterSystem {
         let n = cfg.n_pairs();
         ClusterSystem {
             cfg,
-            policy,
             label,
             slo_ttft_s: None,
             router,
@@ -84,6 +170,11 @@ impl ClusterSystem {
             routed_counts: vec![0; n],
             n_router_rejected: 0,
             pending: Vec::new(),
+            calendar: EventCalendar::new(n),
+            scratch: (0..n).map(|_| Vec::new()).collect(),
+            due: Vec::new(),
+            cursors: vec![0; n],
+            merge: BinaryHeap::new(),
         }
     }
 
@@ -101,15 +192,39 @@ impl ClusterSystem {
         &self.router
     }
 
-    /// Step every pair to `until`, feed completions back into the
-    /// router's live backlog (and session-residency lifecycle), and
-    /// buffer the merged events.
+    /// Step every pair with a *due* event to `until`, feed completions
+    /// back into the router's live backlog (and session-residency
+    /// lifecycle), and buffer the merged events.
+    ///
+    /// The calendar hands over only the due pairs — O(due · log N), not
+    /// O(N) — and the per-pair streams (each already time-ordered) are
+    /// k-way merged into `pending` with ties toward the lower pair
+    /// index: exactly the order the old scan-everything stepper's
+    /// per-batch stable sort produced, byte for byte (pinned by
+    /// `tests/cluster_calendar_oracle.rs`).
     fn collect_until(&mut self, until: SimTime) {
-        let start = self.pending.len();
-        for (i, sys) in self.systems.iter_mut().enumerate() {
-            for ev in sys.advance(until) {
+        // The due list is recycled: taken out so iterating it never
+        // borrows `self` while pairs/router/scratch are touched.
+        let mut due = std::mem::take(&mut self.due);
+        debug_assert!(due.is_empty());
+        while let Some(pair) = self.calendar.pop_due(until) {
+            due.push(pair);
+        }
+        if due.is_empty() {
+            self.due = due;
+            return;
+        }
+        // Ascending pair index keeps the router bookkeeping and the
+        // merge tie-break in the old per-pair iteration order.
+        due.sort_unstable();
+
+        for &i in &due {
+            let mut buf = std::mem::take(&mut self.scratch[i]);
+            debug_assert!(buf.is_empty());
+            self.systems[i].advance_into(until, &mut buf);
+            for ev in &buf {
                 if let SystemEvent::Finished { id, .. } | SystemEvent::Shed { id, .. } =
-                    &ev
+                    ev
                 {
                     if let Some(a) = self.assigned.remove(id) {
                         debug_assert_eq!(a.pair, i);
@@ -123,12 +238,45 @@ impl ClusterSystem {
                         }
                     }
                 }
-                self.pending.push(ev);
+            }
+            self.scratch[i] = buf;
+            // Re-key the pair: everything at or before `until` was just
+            // consumed, so its next event (if any) is strictly later.
+            self.calendar.set(i, self.systems[i].next_event_at());
+        }
+
+        if let [i] = due[..] {
+            // Single due pair (the common case once fleets are large and
+            // event times spread out): move its stream over wholesale.
+            let mut buf = std::mem::take(&mut self.scratch[i]);
+            self.pending.append(&mut buf);
+            self.scratch[i] = buf;
+        } else {
+            // K-way merge of the due pairs' streams.  The head heap
+            // orders by (time, pair); cloning is allocation-free for
+            // every token-bearing event (only a rare `Shed` carries a
+            // heap-owned reason string).
+            debug_assert!(self.merge.is_empty());
+            for &i in &due {
+                self.cursors[i] = 0;
+                if let Some(ev) = self.scratch[i].first() {
+                    self.merge.push(Reverse((ev.time(), i)));
+                }
+            }
+            while let Some(Reverse((_, i))) = self.merge.pop() {
+                let c = self.cursors[i];
+                self.pending.push(self.scratch[i][c].clone());
+                self.cursors[i] = c + 1;
+                if let Some(next) = self.scratch[i].get(c + 1) {
+                    self.merge.push(Reverse((next.time(), i)));
+                }
+            }
+            for &i in &due {
+                self.scratch[i].clear();
             }
         }
-        // Merge the per-pair streams into one time-ordered stream (the
-        // sort is stable, so each pair's own order is preserved).
-        self.pending[start..].sort_by_key(|e| e.time());
+        due.clear();
+        self.due = due;
     }
 }
 
@@ -173,7 +321,11 @@ impl ServingSystem for ClusterSystem {
         // credit into the request it sees.
         let mut pair_req = req;
         pair_req.kv_credit = decision.kv_credit;
-        match self.systems[pair].submit(t, pair_req) {
+        let admission = self.systems[pair].submit(t, pair_req);
+        // The pair's timeline changed (new work scheduled, or a Shed
+        // buffered on rejection): refresh its calendar key.
+        self.calendar.set(pair, self.systems[pair].next_event_at());
+        match admission {
             Admission::Accepted => {
                 // Commit only on acceptance, so residency and hit
                 // accounting never reflect requests the pair turned away.
@@ -209,19 +361,20 @@ impl ServingSystem for ClusterSystem {
     }
 
     fn next_event_at(&self) -> Option<SimTime> {
-        let mut next = earliest_instant(&self.pending, None);
-        for sys in &self.systems {
-            next = match (next, sys.next_event_at()) {
-                (Some(a), Some(b)) => Some(a.min(b)),
-                (a, b) => a.or(b),
-            };
-        }
-        next
+        // O(1): the first buffered event and the calendar top (always
+        // live) — no per-pair scan.
+        earliest_instant(&self.pending, self.calendar.peek())
     }
 
     fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
+        let mut out = Vec::new();
+        self.advance_into(until, &mut out);
+        out
+    }
+
+    fn advance_into(&mut self, until: SimTime, out: &mut Vec<SystemEvent>) {
         self.collect_until(until);
-        take_pending_until(&mut self.pending, until)
+        drain_pending_into(&mut self.pending, until, out);
     }
 
     fn drain(&mut self) -> RunOutcome {
@@ -265,18 +418,22 @@ impl ServingSystem for ClusterSystem {
         // KV-affinity accounting lives in the router, not the pairs.
         report.n_kv_hits = self.router.kv_hits() as usize;
         report.prefill_tokens_saved = self.router.prefill_tokens_saved();
-        let prefix_routed = self.router.n_prefix_routed();
-        report.kv_hit_rate = if prefix_routed > 0 {
-            self.router.kv_hits() as f64 / prefix_routed as f64
+        report.n_prefix_routed = self.router.n_prefix_routed() as usize;
+        report.kv_hit_rate = if report.n_prefix_routed > 0 {
+            self.router.kv_hits() as f64 / report.n_prefix_routed as f64
         } else {
             0.0
         };
 
-        // Reset for a fresh run.
-        self.router = Router::new(self.policy, &self.cfg);
-        self.assigned = FxHashMap::default();
-        self.routed_counts = vec![0; self.cfg.n_pairs()];
+        // Reset for a fresh run (each drained pair reset itself, so
+        // every calendar key is gone).  `Router::reset` keeps the
+        // calibrated predictors, so drain stays O(N) bookkeeping
+        // instead of O(N) re-profiling.
+        self.router.reset();
+        self.assigned.clear();
+        self.routed_counts.iter_mut().for_each(|c| *c = 0);
         self.n_router_rejected = 0;
+        self.calendar = EventCalendar::new(self.cfg.n_pairs());
 
         RunOutcome { report, instances }
     }
@@ -397,6 +554,23 @@ mod tests {
         assert_eq!(finishes, 30);
         // Live backlog fully released at the end of the run.
         assert!(sys.assigned.is_empty());
+    }
+
+    #[test]
+    fn cluster_drain_resets_for_reuse() {
+        // Back-to-back runs on one ClusterSystem (calendar, router and
+        // assignment state all reset by drain) match exactly — and the
+        // reset keeps the calibrated predictors instead of re-profiling.
+        let trace = all_at_once(30, 8);
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::KvAffinity);
+        let a = replay_trace(&mut sys, &trace);
+        let b = replay_trace(&mut sys, &trace);
+        assert_eq!(a.report.n_finished, 30);
+        assert_eq!(b.report.n_finished, 30);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
+        assert_eq!(a.report.ttft_p99_s, b.report.ttft_p99_s);
+        assert_eq!(a.report.tbt_p99_s, b.report.tbt_p99_s);
     }
 
     #[test]

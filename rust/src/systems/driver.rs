@@ -20,8 +20,15 @@
 //! Replay throughput is bounded by the engines' iteration loop, which
 //! is allocation-free in steady state (every system steps its engines
 //! through reusable plan/event scratch buffers — see EXPERIMENTS.md
-//! §Perf); the drivers keep peak memory at one horizon's events by
-//! discarding slices incrementally when nobody collects them.
+//! §Perf); both drivers step systems through the zero-alloc
+//! [`ServingSystem::advance_into`] with recycled event buffers, keep
+//! peak memory at one horizon's events by discarding slices
+//! incrementally when nobody collects them, and the closed-loop driver
+//! keys pending turn submissions in a min-heap (`ReadyQueue`) instead
+//! of rescanning every session per loop iteration.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::simclock::SimTime;
 use crate::systems::{Admission, RunOutcome, ServingSystem, SystemEvent};
@@ -88,6 +95,9 @@ fn replay_trace_impl(
     // Synthetic Shed events for requests dropped at the retry cap — the
     // system never accepted them, so the driver records the loss.
     let mut dropped: Vec<SystemEvent> = Vec::new();
+    // Recycled event buffer for the non-collecting discard path: the
+    // steady-state loop allocates no `Vec` per step.
+    let mut scratch: Vec<SystemEvent> = Vec::new();
     let mut next_arrival = 0usize;
 
     loop {
@@ -120,7 +130,8 @@ fn replay_trace_impl(
             // to (but excluding) the submission instant so the system's
             // pending buffer stays bounded instead of accumulating one
             // event per token for the whole run.
-            let _ = system.advance(SimTime(t.0.saturating_sub(1)));
+            system.advance_into(SimTime(t.0.saturating_sub(1)), &mut scratch);
+            scratch.clear();
         }
         match system.submit(t, req) {
             Admission::Accepted => stats.n_accepted += 1,
@@ -147,16 +158,17 @@ fn replay_trace_impl(
         }
     }
 
-    let mut events = if collect {
-        system.advance(SimTime(u64::MAX))
+    let mut events = Vec::new();
+    if collect {
+        system.advance_into(SimTime(u64::MAX), &mut events);
     } else {
         // Drain the tail horizon-by-horizon, dropping each slice, so
         // peak memory is one timestamp's events rather than the run's.
         while let Some(t) = system.next_event_at() {
-            let _ = system.advance(t);
+            system.advance_into(t, &mut scratch);
+            scratch.clear();
         }
-        Vec::new()
-    };
+    }
     let mut outcome = system.drain();
     if stats.n_dropped > 0 {
         // Driver-dropped requests never reached the system's metrics;
@@ -219,6 +231,51 @@ enum SessState {
     Done,
 }
 
+/// Pending turn submissions keyed by submission instant: a lazily-
+/// invalidated min-heap replaces the per-iteration scan over every
+/// session the closed-loop driver used to do — O(log S) per state
+/// transition instead of O(S) per loop turn.  Entries are
+/// `(at, session index, generation)`; ties break toward the lowest
+/// session index, exactly the scan's deterministic order, and an entry
+/// is live only while its generation matches the session's current one.
+struct ReadyQueue {
+    heap: BinaryHeap<Reverse<(SimTime, usize, u64)>>,
+    gens: Vec<u64>,
+}
+
+impl ReadyQueue {
+    fn new(n: usize) -> ReadyQueue {
+        ReadyQueue {
+            heap: BinaryHeap::with_capacity(n + 1),
+            gens: vec![0; n],
+        }
+    }
+
+    /// Session `i` became ready at `at`.
+    fn push(&mut self, i: usize, at: SimTime) {
+        self.gens[i] += 1;
+        self.heap.push(Reverse((at, i, self.gens[i])));
+    }
+
+    /// Earliest live entry, discarding superseded ones.
+    fn peek(&mut self) -> Option<(SimTime, usize)> {
+        while let Some(&Reverse((at, i, g))) = self.heap.peek() {
+            if self.gens[i] == g {
+                return Some((at, i));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Consume the live top entry (the one `peek` just returned).  Each
+    /// generation is issued exactly once, so no buried entry for the
+    /// same session can come alive again.
+    fn pop(&mut self) {
+        self.heap.pop();
+    }
+}
+
 /// Serve a session workload closed-loop: each session's turn *k+1* is
 /// submitted only once turn *k* finished and the think time elapsed.
 /// Rejected / dropped turns abort their session (the user left).
@@ -255,6 +312,14 @@ fn closed_loop_impl(
         .iter()
         .map(|s| SessState::Ready { at: SimTime(s.start_ns), attempts: 0 })
         .collect();
+    // Pending submissions, keyed by submit instant (satellite perf fix:
+    // the driver used to rescan every session per loop iteration).
+    let mut ready_q = ReadyQueue::new(sessions.len());
+    for (i, s) in sessions.iter().enumerate() {
+        ready_q.push(i, SimTime(s.start_ns));
+    }
+    // Sessions currently in flight (their next state change is an event).
+    let mut n_waiting = 0usize;
     let mut next_turn: Vec<usize> = vec![0; sessions.len()];
     // Session id -> index, to resolve terminal events back to sessions.
     let mut by_session: FxHashMap<u64, usize> = FxHashMap::default();
@@ -262,25 +327,25 @@ fn closed_loop_impl(
         by_session.insert(s.id, i);
     }
     let mut events: Vec<SystemEvent> = Vec::new();
+    // Recycled per-step event buffer (moved into `events` when
+    // collecting, cleared otherwise — either way capacity survives).
+    let mut batch: Vec<SystemEvent> = Vec::new();
     // Synthetic Shed events for turns dropped at the retry cap.
     let mut dropped: Vec<SystemEvent> = Vec::new();
 
     loop {
         // Earliest ready submission (ties break toward the lowest session
-        // index — deterministic).
-        let mut ready: Option<(SimTime, usize, usize)> = None;
-        let mut n_waiting = 0usize;
-        for (i, st) in states.iter().enumerate() {
-            match *st {
-                SessState::Ready { at, attempts } => {
-                    if ready.map_or(true, |(t, _, _)| at < t) {
-                        ready = Some((at, i, attempts));
-                    }
+        // index — deterministic, same order as the scan this replaced).
+        let ready = ready_q.peek().map(|(at, i)| {
+            let attempts = match states[i] {
+                SessState::Ready { at: a, attempts } => {
+                    debug_assert_eq!(a, at);
+                    attempts
                 }
-                SessState::Waiting { .. } => n_waiting += 1,
-                SessState::Done => {}
-            }
-        }
+                st => unreachable!("live ready entry for {st:?}"),
+            };
+            (at, i, attempts)
+        });
         let next_ev = system.next_event_at();
 
         let submit_now = match (ready, next_ev) {
@@ -298,6 +363,7 @@ fn closed_loop_impl(
 
         if submit_now {
             let (at, i, attempts) = ready.expect("submit_now implies ready");
+            ready_q.pop();
             let k = next_turn[i];
             let req = sessions[i].request(k, at.0);
             if attempts == 0 {
@@ -307,6 +373,7 @@ fn closed_loop_impl(
                 Admission::Accepted => {
                     stats.submissions.push((req.id, at));
                     states[i] = SessState::Waiting { req_id: req.id };
+                    n_waiting += 1;
                 }
                 Admission::Rejected { .. } => {
                     // The system recorded the shed; the user gives up.
@@ -331,10 +398,10 @@ fn closed_loop_impl(
                     } else {
                         // Strictly later than `at` so the loop always
                         // makes progress, even on a degenerate hint.
-                        states[i] = SessState::Ready {
-                            at: retry_at.max(SimTime(at.0 + 1)),
-                            attempts: attempts + 1,
-                        };
+                        let retry = retry_at.max(SimTime(at.0 + 1));
+                        states[i] =
+                            SessState::Ready { at: retry, attempts: attempts + 1 };
+                        ready_q.push(i, retry);
                     }
                 }
             }
@@ -342,7 +409,8 @@ fn closed_loop_impl(
         }
 
         let te = next_ev.expect("not submitting implies a pending event");
-        let batch = system.advance(te);
+        debug_assert!(batch.is_empty());
+        system.advance_into(te, &mut batch);
         for ev in &batch {
             let (id, t, finished) = match ev {
                 SystemEvent::Finished { id, t } => (*id, *t, true),
@@ -361,6 +429,7 @@ fn closed_loop_impl(
             if req_id != id {
                 continue;
             }
+            n_waiting -= 1;
             if finished {
                 stats.n_finished_turns += 1;
                 next_turn[i] += 1;
@@ -370,8 +439,9 @@ fn closed_loop_impl(
                 } else {
                     // Think, then come back with the follow-up turn.
                     let think = sessions[i].turns[next_turn[i]].think_s;
-                    states[i] =
-                        SessState::Ready { at: t.after_secs(think), attempts: 0 };
+                    let at = t.after_secs(think);
+                    states[i] = SessState::Ready { at, attempts: 0 };
+                    ready_q.push(i, at);
                 }
             } else {
                 stats.n_shed_turns += 1;
@@ -380,16 +450,19 @@ fn closed_loop_impl(
             }
         }
         if collect {
-            events.extend(batch);
+            events.append(&mut batch);
+        } else {
+            batch.clear();
         }
     }
 
     // Tail: everything left is token traffic of already-resolved turns.
     if collect {
-        events.extend(system.advance(SimTime(u64::MAX)));
+        system.advance_into(SimTime(u64::MAX), &mut events);
     } else {
         while let Some(t) = system.next_event_at() {
-            let _ = system.advance(t);
+            system.advance_into(t, &mut batch);
+            batch.clear();
         }
     }
     let mut outcome = system.drain();

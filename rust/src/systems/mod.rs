@@ -150,6 +150,17 @@ pub trait ServingSystem {
     /// assembles from successive calls is monotone in time.
     fn advance(&mut self, until: SimTime) -> Vec<SystemEvent>;
 
+    /// Zero-allocation form of [`advance`](Self::advance): append every
+    /// uncollected event with `time() <= until` to `out` (which is *not*
+    /// cleared first), so a driver can recycle one buffer across the
+    /// whole run instead of receiving a fresh `Vec` per step.  The
+    /// default implementation wraps `advance`; every system in this
+    /// crate overrides it with an allocation-free drain of its internal
+    /// pending buffer (see `drain_pending_into`).
+    fn advance_into(&mut self, until: SimTime, out: &mut Vec<SystemEvent>) {
+        out.append(&mut self.advance(until));
+    }
+
     /// Run to completion and produce the final outcome.  Uncollected
     /// events are discarded (call `advance(SimTime(u64::MAX))` first to
     /// keep them).  The system resets and may serve a fresh run after.
@@ -209,24 +220,27 @@ pub(crate) fn earliest_instant(
     }
 }
 
-/// Split off and return the prefix of `pending` with events at or
-/// before `until`; later events (buffered by submit-time processing)
-/// stay queued for a future `advance` call, keeping the returned
-/// stream monotone in time.  `pending` is always time-sorted: pushes
-/// happen in event-pop order, and submit-time pushes are never earlier
-/// than previously buffered events.
-pub(crate) fn take_pending_until(
+/// Drain the prefix of `pending` with events at or before `until` into
+/// `out`, preserving order; later events (buffered by submit-time
+/// processing) stay queued for a future `advance` call, keeping the
+/// assembled stream monotone in time.  `pending` is always time-sorted:
+/// pushes happen in event-pop order, and submit-time pushes are never
+/// earlier than previously buffered events.  Both vectors keep their
+/// capacity, so a steady-state advance loop allocates nothing — the
+/// shared implementation behind every [`ServingSystem::advance_into`].
+pub(crate) fn drain_pending_into(
     pending: &mut Vec<SystemEvent>,
     until: SimTime,
-) -> Vec<SystemEvent> {
+    out: &mut Vec<SystemEvent>,
+) {
     // Common case: the whole buffer drains (open-loop replay advances to
     // the next event instant) — hand it over without the binary search.
     if pending.last().map_or(true, |e| e.time() <= until) {
-        return std::mem::take(pending);
+        out.append(pending);
+    } else {
+        let idx = pending.partition_point(|e| e.time() <= until);
+        out.extend(pending.drain(..idx));
     }
-    let idx = pending.partition_point(|e| e.time() <= until);
-    let rest = pending.split_off(idx);
-    std::mem::replace(pending, rest)
 }
 
 /// Instantiate the system the paper calls `kind` on deployment `cfg`.

@@ -73,6 +73,18 @@ impl Request {
     pub fn fresh_input(&self) -> usize {
         self.input_len - self.prefix_len
     }
+
+    /// Clamp the router-granted resident-prefix credit to what a serving
+    /// system can honour: never more than the declared session prefix,
+    /// and never the whole prompt (at least one token is always
+    /// computed — the engine asserts this).  Every credit-capable
+    /// system calls this once at `submit` time.
+    pub fn clamp_kv_credit(&mut self) {
+        self.kv_credit = self
+            .kv_credit
+            .min(self.prefix_len)
+            .min(self.input_len.saturating_sub(1));
+    }
 }
 
 /// Summary statistics of a trace (used by tests and bench headers).

@@ -1,0 +1,412 @@
+//! Lockstep oracle for the cluster event calendar (tentpole acceptance
+//! criterion).
+//!
+//! `NaiveClusterSystem` below embeds the pre-calendar cluster stepping
+//! verbatim: every `submit`/`advance` scans and advances **all N
+//! pairs**, merges the per-pair streams with a per-batch stable sort,
+//! and `next_event_at` scans every pair.  The production
+//! [`ClusterSystem`] replaced that with a lazily-invalidated per-pair
+//! event calendar (O(due + log N)) and a k-way merge — this test proves
+//! the two produce **byte-identical** `SystemEvent` streams, bit-equal
+//! reports (every float compared by `to_bits`), identical per-instance
+//! accounting and identical driver bookkeeping across:
+//!
+//! * all four routing policies,
+//! * open-loop trace replay and closed-loop multi-turn sessions,
+//! * SLO admission on and off,
+//! * a mixed-kind fleet (Cronus + DP pairs, exercising the DP
+//!   prefix-credit path), over multiple seeds.
+
+use cronus::config::topology::ClusterConfig;
+use cronus::config::SystemKind;
+use cronus::cronus::router::{RoutePolicy, Router};
+use cronus::metrics::Report;
+use cronus::simclock::SimTime;
+use cronus::systems::cluster::ClusterSystem;
+use cronus::systems::driver::{closed_loop_collect, replay_trace_collect};
+use cronus::systems::{
+    build_system, Admission, InstanceStat, RunOutcome, ServingSystem, SystemEvent,
+};
+use cronus::util::fxhash::FxHashMap;
+use cronus::workload::arrival::at_rate;
+use cronus::workload::azure::{generate, AzureTraceConfig};
+use cronus::workload::session::{generate_sessions, SessionConfig};
+use cronus::workload::{Request, NO_SESSION};
+
+// --- the retained pre-calendar reference stepper -------------------------
+
+struct NaiveAssigned {
+    pair: usize,
+    tokens: u64,
+    session_id: u64,
+    final_turn: bool,
+}
+
+/// The scan-everything cluster stepper exactly as it shipped before the
+/// event calendar, rebuilt on the crate's public API.
+struct NaiveClusterSystem {
+    cfg: ClusterConfig,
+    label: String,
+    slo_ttft_s: Option<f64>,
+    router: Router,
+    systems: Vec<Box<dyn ServingSystem>>,
+    assigned: FxHashMap<u64, NaiveAssigned>,
+    routed_counts: Vec<u64>,
+    n_router_rejected: usize,
+    pending: Vec<SystemEvent>,
+}
+
+impl NaiveClusterSystem {
+    fn new(cfg: ClusterConfig, policy: RoutePolicy, slo: Option<f64>) -> Self {
+        let label = format!("{} {}", cfg.label(), policy.name());
+        let router = Router::new(policy, &cfg);
+        let systems = cfg
+            .pairs
+            .iter()
+            .map(|pair| build_system(pair.system, &pair.deployment))
+            .collect();
+        let n = cfg.n_pairs();
+        NaiveClusterSystem {
+            cfg,
+            label,
+            slo_ttft_s: slo,
+            router,
+            systems,
+            assigned: FxHashMap::default(),
+            routed_counts: vec![0; n],
+            n_router_rejected: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    /// The old stepping: advance *every* pair, then stable-sort the
+    /// fresh batch segment by time.
+    fn collect_until(&mut self, until: SimTime) {
+        let start = self.pending.len();
+        for (i, sys) in self.systems.iter_mut().enumerate() {
+            for ev in sys.advance(until) {
+                if let SystemEvent::Finished { id, .. } | SystemEvent::Shed { id, .. } =
+                    &ev
+                {
+                    if let Some(a) = self.assigned.remove(id) {
+                        assert_eq!(a.pair, i);
+                        self.router.on_completed(a.pair, a.tokens);
+                        let shed = matches!(ev, SystemEvent::Shed { .. });
+                        if a.session_id != NO_SESSION && (a.final_turn || shed) {
+                            self.router.release_session(a.session_id);
+                        }
+                    }
+                }
+                self.pending.push(ev);
+            }
+        }
+        self.pending[start..].sort_by_key(|e| e.time());
+    }
+
+    fn take_pending_until(&mut self, until: SimTime) -> Vec<SystemEvent> {
+        if self.pending.last().map_or(true, |e| e.time() <= until) {
+            return std::mem::take(&mut self.pending);
+        }
+        let idx = self.pending.partition_point(|e| e.time() <= until);
+        let rest = self.pending.split_off(idx);
+        std::mem::replace(&mut self.pending, rest)
+    }
+}
+
+impl ServingSystem for NaiveClusterSystem {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn submit(&mut self, t: SimTime, req: Request) -> Admission {
+        self.collect_until(SimTime(t.0.saturating_sub(1)));
+
+        if let Some(slo) = self.slo_ttft_s {
+            match self.router.slo_admission(t, &req, slo) {
+                Admission::Accepted => {}
+                Admission::Rejected { reason } => {
+                    self.n_router_rejected += 1;
+                    if req.session_id != NO_SESSION {
+                        self.router.release_session(req.session_id);
+                    }
+                    self.pending.push(SystemEvent::Shed {
+                        id: req.id,
+                        t,
+                        reason: reason.clone(),
+                    });
+                    return Admission::Rejected { reason };
+                }
+                deferred @ Admission::Deferred { .. } => return deferred,
+            }
+        }
+
+        let decision = match self.slo_ttft_s {
+            Some(slo) => self.router.route_within_slo(&req, slo),
+            None => self.router.route(&req),
+        };
+        let pair = decision.pair;
+        let mut pair_req = req;
+        pair_req.kv_credit = decision.kv_credit;
+        match self.systems[pair].submit(t, pair_req) {
+            Admission::Accepted => {
+                self.router.commit_route(&req, &decision);
+                self.assigned.insert(
+                    req.id,
+                    NaiveAssigned {
+                        pair,
+                        tokens: decision.charged_tokens,
+                        session_id: req.session_id,
+                        final_turn: req.final_turn,
+                    },
+                );
+                self.routed_counts[pair] += 1;
+                Admission::Accepted
+            }
+            Admission::Rejected { reason } => {
+                self.router.on_completed(pair, decision.charged_tokens);
+                if req.session_id != NO_SESSION {
+                    self.router.release_session(req.session_id);
+                }
+                self.routed_counts[pair] += 1;
+                Admission::Rejected { reason }
+            }
+            deferred @ Admission::Deferred { .. } => {
+                self.router.on_completed(pair, decision.charged_tokens);
+                deferred
+            }
+        }
+    }
+
+    fn next_event_at(&self) -> Option<SimTime> {
+        let mut next = self.pending.first().map(|e| e.time());
+        for sys in &self.systems {
+            next = match (next, sys.next_event_at()) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        next
+    }
+
+    fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
+        self.collect_until(until);
+        self.take_pending_until(until)
+    }
+
+    fn drain(&mut self) -> RunOutcome {
+        self.collect_until(SimTime(u64::MAX));
+        self.pending.clear();
+
+        let mut reports: Vec<Report> = Vec::new();
+        let mut instances: Vec<InstanceStat> = Vec::new();
+        for (i, (pair, sys)) in
+            self.cfg.pairs.iter().zip(self.systems.iter_mut()).enumerate()
+        {
+            if self.routed_counts[i] == 0 {
+                instances.push(InstanceStat {
+                    name: format!("p{i}:{} (idle)", pair.name),
+                    busy_time_s: 0.0,
+                    n_iterations: 0,
+                    n_preemptions: 0,
+                    tokens_prefilled: 0,
+                    tokens_decoded: 0,
+                    tokens_kv_received: 0,
+                });
+                continue;
+            }
+            let out = sys.drain();
+            reports.push(out.report);
+            for inst in out.instances {
+                instances.push(InstanceStat {
+                    name: format!("p{i}:{}", inst.name),
+                    ..inst
+                });
+            }
+        }
+        let mut report = Report::merge(self.label.clone(), &reports);
+        report.n_requests += self.n_router_rejected;
+        report.n_rejected += self.n_router_rejected;
+        report.n_kv_hits = self.router.kv_hits() as usize;
+        report.prefill_tokens_saved = self.router.prefill_tokens_saved();
+        report.n_prefix_routed = self.router.n_prefix_routed() as usize;
+        report.kv_hit_rate = if report.n_prefix_routed > 0 {
+            self.router.kv_hits() as f64 / report.n_prefix_routed as f64
+        } else {
+            0.0
+        };
+        RunOutcome { report, instances }
+    }
+}
+
+// --- bit-equality helpers ------------------------------------------------
+
+fn assert_f64_bits(label: &str, a: f64, b: f64) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{label}: {a} vs {b}");
+}
+
+fn assert_samples_bits(label: &str, a: &[f64], b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "{label}: sample counts differ");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_f64_bits(&format!("{label}[{k}]"), *x, *y);
+    }
+}
+
+fn assert_outcomes_bit_equal(label: &str, a: &RunOutcome, b: &RunOutcome) {
+    let (ra, rb) = (&a.report, &b.report);
+    assert_eq!(ra.label, rb.label, "{label}: label");
+    assert_eq!(ra.n_requests, rb.n_requests, "{label}: n_requests");
+    assert_eq!(ra.n_finished, rb.n_finished, "{label}: n_finished");
+    assert_eq!(ra.n_rejected, rb.n_rejected, "{label}: n_rejected");
+    assert_eq!(ra.n_output_tokens, rb.n_output_tokens, "{label}: tokens");
+    assert_eq!(ra.n_kv_hits, rb.n_kv_hits, "{label}: kv hits");
+    assert_eq!(ra.n_prefix_routed, rb.n_prefix_routed, "{label}: prefix routed");
+    assert_eq!(
+        ra.prefill_tokens_saved, rb.prefill_tokens_saved,
+        "{label}: saved"
+    );
+    assert_f64_bits(&format!("{label}: makespan"), ra.makespan_s, rb.makespan_s);
+    assert_f64_bits(
+        &format!("{label}: throughput"),
+        ra.throughput_rps,
+        rb.throughput_rps,
+    );
+    assert_f64_bits(
+        &format!("{label}: tok throughput"),
+        ra.token_throughput_tps,
+        rb.token_throughput_tps,
+    );
+    assert_f64_bits(&format!("{label}: ttft mean"), ra.ttft_mean_s, rb.ttft_mean_s);
+    assert_f64_bits(&format!("{label}: ttft p50"), ra.ttft_p50_s, rb.ttft_p50_s);
+    assert_f64_bits(&format!("{label}: ttft p99"), ra.ttft_p99_s, rb.ttft_p99_s);
+    assert_f64_bits(&format!("{label}: tbt mean"), ra.tbt_mean_s, rb.tbt_mean_s);
+    assert_f64_bits(&format!("{label}: tbt p50"), ra.tbt_p50_s, rb.tbt_p50_s);
+    assert_f64_bits(&format!("{label}: tbt p99"), ra.tbt_p99_s, rb.tbt_p99_s);
+    assert_f64_bits(&format!("{label}: e2e p50"), ra.e2e_p50_s, rb.e2e_p50_s);
+    assert_f64_bits(&format!("{label}: e2e p99"), ra.e2e_p99_s, rb.e2e_p99_s);
+    assert_f64_bits(&format!("{label}: hit rate"), ra.kv_hit_rate, rb.kv_hit_rate);
+    assert_samples_bits(&format!("{label}: ttft samples"), &ra.ttft_samples, &rb.ttft_samples);
+    assert_samples_bits(&format!("{label}: tbt samples"), &ra.tbt_samples, &rb.tbt_samples);
+    assert_samples_bits(&format!("{label}: e2e samples"), &ra.e2e_samples, &rb.e2e_samples);
+
+    assert_eq!(a.instances.len(), b.instances.len(), "{label}: instances");
+    for (ia, ib) in a.instances.iter().zip(&b.instances) {
+        assert_eq!(ia.name, ib.name, "{label}: instance name");
+        assert_f64_bits(
+            &format!("{label}: {} busy", ia.name),
+            ia.busy_time_s,
+            ib.busy_time_s,
+        );
+        assert_eq!(ia.n_iterations, ib.n_iterations, "{label}: {}", ia.name);
+        assert_eq!(ia.n_preemptions, ib.n_preemptions, "{label}: {}", ia.name);
+        assert_eq!(ia.tokens_prefilled, ib.tokens_prefilled, "{label}: {}", ia.name);
+        assert_eq!(ia.tokens_decoded, ib.tokens_decoded, "{label}: {}", ia.name);
+        assert_eq!(
+            ia.tokens_kv_received, ib.tokens_kv_received,
+            "{label}: {}",
+            ia.name
+        );
+    }
+}
+
+// --- the lockstep matrix -------------------------------------------------
+
+/// A 3-pair mixed-kind fleet: two Cronus pairs and one DP pair, so the
+/// oracle also covers the DP prefix-credit dispatch.
+fn fleet() -> ClusterConfig {
+    let mut cfg = ClusterConfig::mixed(3, cronus::simgpu::model_desc::LLAMA3_8B);
+    cfg.pairs[2].system = SystemKind::DpChunked;
+    cfg
+}
+
+fn open_loop_trace(seed: u64) -> Vec<Request> {
+    let t = generate(30, &AzureTraceConfig::default(), seed);
+    at_rate(&t, 8.0)
+}
+
+fn sessions(seed: u64) -> Vec<cronus::workload::session::Session> {
+    generate_sessions(&SessionConfig {
+        n_sessions: 4,
+        min_turns: 2,
+        max_turns: 4,
+        think_mean_s: 0.4,
+        start_window_s: 2.0,
+        mean_new_input: 256.0,
+        max_new_input: 1024,
+        mean_output: 96.0,
+        max_output: 256,
+        seed,
+        ..SessionConfig::default()
+    })
+}
+
+#[test]
+fn calendar_matches_naive_stepper_open_loop() {
+    for seed in [11u64, 12] {
+        let trace = open_loop_trace(seed);
+        for policy in RoutePolicy::ALL {
+            for slo in [None, Some(0.6)] {
+                let label = format!(
+                    "open-loop seed={seed} policy={} slo={slo:?}",
+                    policy.name()
+                );
+                let mut naive = NaiveClusterSystem::new(fleet(), policy, slo);
+                let (out_n, ev_n, stats_n) =
+                    replay_trace_collect(&mut naive, &trace);
+                let mut cal =
+                    ClusterSystem::new(fleet(), policy).with_slo_ttft(slo);
+                let (out_c, ev_c, stats_c) = replay_trace_collect(&mut cal, &trace);
+                assert_eq!(stats_n, stats_c, "{label}: driver stats");
+                assert_eq!(ev_n, ev_c, "{label}: event streams");
+                assert_outcomes_bit_equal(&label, &out_n, &out_c);
+                assert!(
+                    out_c.report.n_finished > 0,
+                    "{label}: degenerate run finished nothing"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn calendar_matches_naive_stepper_closed_loop() {
+    for seed in [21u64, 22] {
+        let workload = sessions(seed);
+        for policy in RoutePolicy::ALL {
+            for slo in [None, Some(1.0)] {
+                let label = format!(
+                    "closed-loop seed={seed} policy={} slo={slo:?}",
+                    policy.name()
+                );
+                let mut naive = NaiveClusterSystem::new(fleet(), policy, slo);
+                let (out_n, ev_n, stats_n) =
+                    closed_loop_collect(&mut naive, &workload);
+                let mut cal =
+                    ClusterSystem::new(fleet(), policy).with_slo_ttft(slo);
+                let (out_c, ev_c, stats_c) = closed_loop_collect(&mut cal, &workload);
+                assert_eq!(stats_n, stats_c, "{label}: driver stats");
+                assert_eq!(ev_n, ev_c, "{label}: event streams");
+                assert_outcomes_bit_equal(&label, &out_n, &out_c);
+            }
+        }
+    }
+}
+
+#[test]
+fn calendar_matches_naive_under_burst() {
+    // All-at-once bursts maximize same-instant ties: every pair has due
+    // events at the same timestamps, so the k-way merge's (time, pair)
+    // tie-break is exercised on every batch.
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    for policy in RoutePolicy::ALL {
+        let t = generate(40, &AzureTraceConfig::default(), 31);
+        let trace = stamp(&t, ArrivalProcess::AllAtOnce);
+        let label = format!("burst policy={}", policy.name());
+        let mut naive = NaiveClusterSystem::new(fleet(), policy, None);
+        let (out_n, ev_n, _) = replay_trace_collect(&mut naive, &trace);
+        let mut cal = ClusterSystem::new(fleet(), policy);
+        let (out_c, ev_c, _) = replay_trace_collect(&mut cal, &trace);
+        assert_eq!(ev_n, ev_c, "{label}: event streams");
+        assert_outcomes_bit_equal(&label, &out_n, &out_c);
+        assert_eq!(out_c.report.n_finished, 40, "{label}");
+    }
+}

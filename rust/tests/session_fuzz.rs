@@ -30,15 +30,23 @@ use cronus::workload::session::{
     generate_sessions, turn_request_id, Session, SessionConfig,
 };
 
+fn run_cfg(
+    sessions: &[Session],
+    cfg: ClusterConfig,
+    policy: RoutePolicy,
+    slo_ttft_s: Option<f64>,
+) -> (RunOutcome, Vec<SystemEvent>, ClosedLoopStats) {
+    let mut sys = ClusterSystem::new(cfg, policy).with_slo_ttft(slo_ttft_s);
+    closed_loop_collect(&mut sys, sessions)
+}
+
 fn run(
     sessions: &[Session],
     n_pairs: usize,
     policy: RoutePolicy,
     slo_ttft_s: Option<f64>,
 ) -> (RunOutcome, Vec<SystemEvent>, ClosedLoopStats) {
-    let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
-    let mut sys = ClusterSystem::new(cfg, policy).with_slo_ttft(slo_ttft_s);
-    closed_loop_collect(&mut sys, sessions)
+    run_cfg(sessions, ClusterConfig::mixed(n_pairs, LLAMA3_8B), policy, slo_ttft_s)
 }
 
 /// The invariants every closed-loop run must satisfy, whatever the
@@ -279,6 +287,113 @@ fn fuzz_affinity_vs_load_only_routing() {
                     0,
                 )
             })
+    });
+}
+
+/// Mixed Cronus+DP fleets (ROADMAP DP prefix-credit item): every other
+/// pair runs the DP dispatcher, which now honours `Request::kv_credit`,
+/// so affinity may pin sessions on DP pairs and the exact savings
+/// accounting must hold across the whole heterogeneous fleet — a DP
+/// pair's skipped prefix shows up neither as computed prefill nor as a
+/// KV transfer.
+#[test]
+fn fuzz_affinity_on_mixed_cronus_dp_fleet() {
+    use cronus::config::SystemKind;
+    check("closed-loop affinity on a Cronus+DP fleet", 6, |rng| {
+        let scfg = SessionConfig {
+            n_sessions: rng.range_usize(3, 8),
+            min_turns: 2,
+            max_turns: 2 + rng.range_usize(0, 3),
+            think_mean_s: 0.2 + rng.f64(),
+            start_window_s: rng.f64() * 3.0,
+            mean_new_input: 192.0 + rng.f64() * 192.0,
+            max_new_input: 1024,
+            mean_output: 96.0 + rng.f64() * 64.0,
+            max_output: 320,
+            seed: rng.next_u64(),
+            ..SessionConfig::default()
+        };
+        let sessions = generate_sessions(&scfg);
+        let n_pairs = rng.range_usize(2, 4);
+        let mut cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+        for (i, p) in cfg.pairs.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                p.system = SystemKind::DpChunked;
+            }
+        }
+        let total_turns: usize = sessions.iter().map(|s| s.turns.len()).sum();
+        let total_input: u64 =
+            sessions.iter().map(|s| s.total_input_tokens() as u64).sum();
+
+        let (lot_out, lot_events, lot_stats) = run_cfg(
+            &sessions,
+            cfg.clone(),
+            RoutePolicy::LeastOutstandingTokens,
+            None,
+        );
+        let (aff_out, aff_events, aff_stats) =
+            run_cfg(&sessions, cfg, RoutePolicy::KvAffinity, None);
+
+        let r = verify_invariants(&sessions, &lot_out, &lot_events, &lot_stats, "LOT+DP")
+            .and(|| {
+                verify_invariants(
+                    &sessions,
+                    &aff_out,
+                    &aff_events,
+                    &aff_stats,
+                    "KvAffinity+DP",
+                )
+            });
+        if !matches!(r, PropResult::Ok) {
+            return r;
+        }
+        let preemptions = |out: &RunOutcome| -> u64 {
+            out.instances.iter().map(|i| i.n_preemptions).sum()
+        };
+        if preemptions(&lot_out) + preemptions(&aff_out) > 0 {
+            return PropResult::Discard;
+        }
+
+        PropResult::assert_eq(
+            "mixed fleet: LOT completes all",
+            lot_stats.n_finished_turns,
+            total_turns,
+        )
+        .and(|| {
+            PropResult::assert_eq(
+                "mixed fleet: affinity completes all",
+                aff_stats.n_finished_turns,
+                total_turns,
+            )
+        })
+        .and(|| {
+            PropResult::assert_eq(
+                "mixed fleet: LOT executes the full prompt stream",
+                prefill_tokens_executed(&lot_out),
+                total_input,
+            )
+        })
+        .and(|| {
+            PropResult::assert_true(
+                "mixed fleet: affinity reports hits",
+                aff_out.report.n_kv_hits > 0
+                    && aff_out.report.prefill_tokens_saved > 0,
+            )
+        })
+        .and(|| {
+            PropResult::assert_eq(
+                "mixed fleet: affinity skips exactly the saved prefix tokens",
+                prefill_tokens_executed(&aff_out),
+                total_input - aff_out.report.prefill_tokens_saved,
+            )
+        })
+        .and(|| {
+            PropResult::assert_true(
+                "mixed fleet: strictly fewer prefill tokens under affinity",
+                prefill_tokens_executed(&aff_out)
+                    < prefill_tokens_executed(&lot_out),
+            )
+        })
     });
 }
 
