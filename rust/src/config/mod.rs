@@ -3,6 +3,39 @@
 //!
 //! (The offline build ships no `serde`/`toml`/`clap`; these are small
 //! from-scratch replacements — DESIGN.md §1.)
+//!
+//! One parsed [`toml::TomlDoc`] feeds every typed config through its
+//! `apply_toml` method: `[topology]` → [`ClusterConfig`], `[autoscale]`
+//! → `systems::AutoscaleConfig`, and `[cluster]`/`[engine]`/`[dp]`/
+//! `[balancer]` → [`DeploymentConfig`].  The repo-root `CONFIG.md` is
+//! the key-by-key reference; the pair-spec grammar is
+//! `<high>+<low>[:<rate_share>][@<system>]`.
+//!
+//! # Example
+//!
+//! ```
+//! use cronus::config::{toml, ClusterConfig, SystemKind};
+//! use cronus::systems::AutoscaleConfig;
+//!
+//! let doc = toml::parse(
+//!     "[topology]\n\
+//!      model = \"llama3-8b\"\n\
+//!      pairs = [\"a100+a10\", \"a100+a30:1.5@dp\"]\n\
+//!      [autoscale]\n\
+//!      initial_pairs = 2\n",
+//! )
+//! .unwrap();
+//!
+//! let mut fleet = ClusterConfig::default();
+//! fleet.apply_toml(&doc).unwrap();
+//! assert_eq!(fleet.n_pairs(), 2);
+//! assert_eq!(fleet.pairs[1].rate_share, 1.5);
+//! assert_eq!(fleet.pairs[1].system, SystemKind::DpChunked);
+//!
+//! let mut auto = AutoscaleConfig::default();
+//! auto.apply_toml(&doc);
+//! assert_eq!(auto.initial_pairs, 2);
+//! ```
 
 pub mod cli;
 pub mod cluster;

@@ -15,11 +15,16 @@
 //! ```toml
 //! [topology]
 //! model = "llama3-8b"
-//! pairs = ["a100+a10", "a100+a30:1.5", "a100+v100"]
+//! pairs = ["a100+a10", "a100+a30:1.5", "a100+v100@dp"]
 //! ```
 //!
 //! Each pair spec is `<high_gpu>+<low_gpu>` with an optional
-//! `:<rate_share>` suffix.
+//! `:<rate_share>` suffix and an optional `@<system>` suffix (`cronus`,
+//! `dp`, `pp`, `disagg-hl`, `disagg-lh`; Cronus when omitted).
+//! [`ClusterConfig::to_toml`] emits this exact grammar back out — the
+//! topology planner writes its winning fleet through it, and the CI docs
+//! job round-trips the emitted file through [`crate::config::toml`].
+//! See `CONFIG.md` at the repository root for the full key reference.
 
 use crate::config::cluster::{DeploymentConfig, SystemKind};
 use crate::config::toml::{TomlDoc, TomlValue};
@@ -51,9 +56,18 @@ impl PairConfig {
         }
     }
 
-    /// Parse `"a100+a10"` or `"a100+a10:2.0"` (rate share suffix).
+    /// Parse `"a100+a10"`, `"a100+a10:2.0"` (rate share suffix) or
+    /// `"a100+a10:2.0@dp"` (serving-system suffix).
     pub fn from_spec(text: &str, model: ModelDesc) -> Result<PairConfig, String> {
-        let (gpus, share) = match text.split_once(':') {
+        let (rest, system) = match text.rsplit_once('@') {
+            Some((r, s)) => {
+                let kind = SystemKind::from_name(s.trim())
+                    .ok_or_else(|| format!("unknown system '{}' in '{text}'", s.trim()))?;
+                (r, kind)
+            }
+            None => (text, SystemKind::Cronus),
+        };
+        let (gpus, share) = match rest.split_once(':') {
             Some((g, s)) => {
                 let share: f64 = s
                     .trim()
@@ -64,7 +78,7 @@ impl PairConfig {
                 }
                 (g, share)
             }
-            None => (text, 1.0),
+            None => (rest, 1.0),
         };
         let (hi, lo) = gpus
             .split_once('+')
@@ -75,7 +89,50 @@ impl PairConfig {
             .ok_or_else(|| format!("unknown gpu '{}'", lo.trim()))?;
         let mut pair = PairConfig::cronus(DeploymentConfig::paper(high, low, model));
         pair.rate_share = share;
+        pair.system = system;
         Ok(pair)
+    }
+
+    /// Render this pair back into the spec grammar `from_spec` accepts:
+    /// `<high>+<low>[:<share>][@<system>]`, with the unit share and the
+    /// default Cronus system elided.
+    pub fn spec(&self) -> String {
+        let mut s = format!(
+            "{}+{}",
+            self.deployment.high_gpu.name.to_ascii_lowercase(),
+            self.deployment.low_gpu.name.to_ascii_lowercase()
+        );
+        if self.rate_share != 1.0 {
+            s.push(':');
+            s.push_str(&self.rate_share.to_string());
+        }
+        if self.system != SystemKind::Cronus {
+            s.push('@');
+            s.push_str(system_spec_token(self.system));
+        }
+        s
+    }
+
+    /// Rental cost of the pair's two cards, USD/hour.
+    pub fn cost_per_hour(&self) -> f64 {
+        self.deployment.high_gpu.cost_per_hour + self.deployment.low_gpu.cost_per_hour
+    }
+
+    /// Combined board power of the pair's two cards, watts.
+    pub fn power_w(&self) -> f64 {
+        self.deployment.high_gpu.power_w + self.deployment.low_gpu.power_w
+    }
+}
+
+/// The canonical lowercase token `SystemKind::from_name` maps back to
+/// each kind — used when emitting pair specs.
+fn system_spec_token(kind: SystemKind) -> &'static str {
+    match kind {
+        SystemKind::Cronus => "cronus",
+        SystemKind::DpChunked => "dp",
+        SystemKind::PpChunked => "pp",
+        SystemKind::DisaggHighLow => "disagg-hl",
+        SystemKind::DisaggLowHigh => "disagg-lh",
     }
 }
 
@@ -130,6 +187,17 @@ impl ClusterConfig {
         self.pairs.iter().map(|p| p.rate_share).sum()
     }
 
+    /// Total fleet rental cost, USD/hour (the planner's cost budget
+    /// counts both cards of every pair).
+    pub fn cost_per_hour(&self) -> f64 {
+        self.pairs.iter().map(|p| p.cost_per_hour()).sum()
+    }
+
+    /// Total fleet board power, watts.
+    pub fn power_w(&self) -> f64 {
+        self.pairs.iter().map(|p| p.power_w()).sum()
+    }
+
     /// Short display label, e.g. `cluster[A10|A30|A10]`.
     pub fn label(&self) -> String {
         let lows: Vec<&str> = self.pairs.iter().map(|p| p.deployment.low_gpu.name).collect();
@@ -163,6 +231,25 @@ impl ClusterConfig {
             self.pairs = pairs;
         }
         Ok(())
+    }
+
+    /// Emit this topology as a `[topology]` TOML section in exactly the
+    /// grammar [`ClusterConfig::apply_toml`] reads back (single-line
+    /// `pairs` array — the in-tree parser's requirement).  The model is
+    /// taken from the first pair; the planner always emits single-model
+    /// fleets.
+    pub fn to_toml(&self) -> String {
+        let model = self
+            .pairs
+            .first()
+            .map(|p| p.deployment.model.name)
+            .unwrap_or(model_desc::LLAMA3_8B.name);
+        let specs: Vec<String> =
+            self.pairs.iter().map(|p| format!("\"{}\"", p.spec())).collect();
+        format!(
+            "[topology]\nmodel = \"{model}\"\npairs = [{}]\n",
+            specs.join(", ")
+        )
     }
 }
 
@@ -217,6 +304,65 @@ mod tests {
         assert_eq!(c.pairs[0].deployment.model.name, "qwen2-7b");
         assert_eq!(c.pairs[1].rate_share, 1.5);
         assert_eq!(c.pairs[2].deployment.low_gpu.name, "T4");
+    }
+
+    #[test]
+    fn pair_spec_parses_system_suffix() {
+        let p = PairConfig::from_spec("a100+a30@dp", LLAMA3_8B).unwrap();
+        assert_eq!(p.system, SystemKind::DpChunked);
+        assert_eq!(p.rate_share, 1.0);
+        let p = PairConfig::from_spec("a100+t4:2.5@disagg-hl", LLAMA3_8B).unwrap();
+        assert_eq!(p.system, SystemKind::DisaggHighLow);
+        assert_eq!(p.rate_share, 2.5);
+        assert!(PairConfig::from_spec("a100+a30@warp", LLAMA3_8B).is_err());
+    }
+
+    #[test]
+    fn pair_spec_round_trips_through_emission() {
+        let specs = [
+            "a100-80g+a10",
+            "a100-80g+a30:1.5",
+            "a100-80g+v100-32g:2@dp",
+            "v100-32g+t4@pp",
+        ];
+        for text in specs {
+            let p = PairConfig::from_spec(text, LLAMA3_8B).unwrap();
+            assert_eq!(p.spec(), text, "emission changed the spec");
+            let q = PairConfig::from_spec(&p.spec(), LLAMA3_8B).unwrap();
+            assert_eq!(q.system, p.system);
+            assert_eq!(q.rate_share, p.rate_share);
+            assert_eq!(q.deployment.high_gpu, p.deployment.high_gpu);
+            assert_eq!(q.deployment.low_gpu, p.deployment.low_gpu);
+        }
+    }
+
+    #[test]
+    fn to_toml_round_trips_through_parser() {
+        let mut c = ClusterConfig::mixed(3, LLAMA3_8B);
+        c.pairs[1].rate_share = 1.5;
+        c.pairs[2].system = SystemKind::DpChunked;
+        let text = c.to_toml();
+        let doc = toml::parse(&text).unwrap();
+        let mut rt = ClusterConfig::default();
+        rt.apply_toml(&doc).unwrap();
+        assert_eq!(rt.n_pairs(), c.n_pairs());
+        for (a, b) in rt.pairs.iter().zip(&c.pairs) {
+            assert_eq!(a.deployment.high_gpu, b.deployment.high_gpu);
+            assert_eq!(a.deployment.low_gpu, b.deployment.low_gpu);
+            assert_eq!(a.deployment.model, b.deployment.model);
+            assert_eq!(a.system, b.system);
+            assert_eq!(a.rate_share, b.rate_share);
+        }
+    }
+
+    #[test]
+    fn fleet_cost_and_power_sum_both_cards() {
+        use crate::simgpu::spec::{A10, A100, A30};
+        let c = ClusterConfig::mixed(2, LLAMA3_8B); // A100+A10, A100+A30
+        let want_cost = 2.0 * A100.cost_per_hour + A10.cost_per_hour + A30.cost_per_hour;
+        assert!((c.cost_per_hour() - want_cost).abs() < 1e-12);
+        let want_w = 2.0 * A100.power_w + A10.power_w + A30.power_w;
+        assert!((c.power_w() - want_w).abs() < 1e-12);
     }
 
     #[test]

@@ -51,6 +51,38 @@
 //! aware*: a follow-up turn whose session KV is resident on a pair only
 //! needs that pair to prefill the fresh suffix, so admission no longer
 //! over-rejects follow-ups whose full prompt would be too slow.
+//!
+//! Every pair also carries an *active* flag ([`Router::set_pair_active`])
+//! — the mechanism behind the cluster's elastic autoscaling.  An inactive
+//! pair (standby, or draining toward retirement) is parked at +∞ in the
+//! load index and skipped by every policy scan, the affinity target and
+//! the SLO admission gate, while its remaining in-flight backlog keeps
+//! draining through [`Router::on_completed`].  With all pairs active
+//! (the default) the flag is free: every routing path behaves exactly as
+//! before.
+//!
+//! # Example
+//!
+//! Build a router over a two-pair fleet and dispatch one request:
+//!
+//! ```
+//! use cronus::config::topology::ClusterConfig;
+//! use cronus::cronus::router::{RoutePolicy, Router};
+//! use cronus::simgpu::model_desc::LLAMA3_8B;
+//! use cronus::workload::Request;
+//!
+//! let fleet = ClusterConfig::mixed(2, LLAMA3_8B);
+//! let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &fleet);
+//! let req = Request::new(0, 0, 512, 64);
+//! let d = router.route(&req);
+//! assert!(d.pair < fleet.n_pairs());
+//! router.commit_route(&req, &d);
+//! // ... the chosen pair serves the request, then completes it ...
+//! router.on_completed(d.pair, d.charged_tokens);
+//! assert_eq!(router.outstanding_tokens()[d.pair], 0.0);
+//! ```
+
+use std::collections::BTreeSet;
 
 use crate::config::topology::ClusterConfig;
 use crate::config::SystemKind;
@@ -131,6 +163,15 @@ struct PairLoad {
     /// re-prefill through the staged pipeline, so granting them credit
     /// would fake savings.
     supports_credit: bool,
+    /// Resident sessions ordered by last use — `(last_use, session_id)`
+    /// with unique `last_use` values, so `first()` is the exact LRU
+    /// victim in O(log S) (this used to be an O(S) scan of the whole
+    /// residency map per eviction).
+    lru: BTreeSet<(u64, u64)>,
+    /// Whether the router may send new work here.  The fleet controller
+    /// parks draining/standby pairs at `false`; every pair starts (and
+    /// without autoscaling forever stays) active.
+    active: bool,
 }
 
 /// Where one session's prefix KV lives.
@@ -310,6 +351,8 @@ impl Router {
                             | SystemKind::DisaggHighLow
                             | SystemKind::DpChunked
                     ),
+                    lru: BTreeSet::new(),
+                    active: true,
                 }
             })
             .collect();
@@ -341,6 +384,8 @@ impl Router {
             p.n_routed = 0;
             p.tokens_routed = 0;
             p.resident_tokens = 0;
+            p.lru.clear();
+            p.active = true;
             self.load_index.set(i, 0.0);
         }
         self.residency.clear();
@@ -352,6 +397,53 @@ impl Router {
 
     pub fn n_pairs(&self) -> usize {
         self.pairs.len()
+    }
+
+    /// Include or exclude pair `i` from routing — the fleet controller's
+    /// activation / drain switch.  An inactive pair is parked at +∞ in
+    /// the load index and skipped by every policy scan, the affinity
+    /// target and SLO admission; its in-flight backlog keeps draining
+    /// via [`on_completed`](Self::on_completed) without resurrecting it.
+    /// No-op when the flag already matches.
+    pub fn set_pair_active(&mut self, i: usize, active: bool) {
+        let p = &mut self.pairs[i];
+        if p.active == active {
+            return;
+        }
+        p.active = active;
+        let v = if active { p.outstanding_tokens } else { f64::INFINITY };
+        self.load_index.set(i, v);
+    }
+
+    /// Whether pair `i` currently receives new work.
+    pub fn is_pair_active(&self, i: usize) -> bool {
+        self.pairs[i].active
+    }
+
+    /// Pairs currently receiving new work.
+    pub fn n_active_pairs(&self) -> usize {
+        self.pairs.iter().filter(|p| p.active).count()
+    }
+
+    /// Drop every session resident on `pair` — called when the pair is
+    /// retired and its KV memory goes away.  Follow-ups of the evicted
+    /// sessions route as ordinary misses afterwards.  Returns how many
+    /// sessions were evicted.
+    pub fn evict_pair_residency(&mut self, pair: usize) -> usize {
+        let mut n = 0;
+        while let Some((_, id)) = self.pairs[pair].lru.pop_first() {
+            self.residency.remove(&id);
+            n += 1;
+        }
+        self.pairs[pair].resident_tokens = 0;
+        n
+    }
+
+    /// Calibrated sustained service-rate estimate per pair (tokens/s),
+    /// before `rate_share` scaling — the topology planner reads these to
+    /// assign capacity-proportional shares.
+    pub fn drain_rates_tps(&self) -> Vec<f64> {
+        self.pairs.iter().map(|p| p.drain_rate_tps).collect()
     }
 
     /// Current live backlog per pair (exposed for tests / reporting).
@@ -414,6 +506,11 @@ impl Router {
             return None;
         }
         let r = self.residency.get(&req.session_id)?;
+        if !self.pairs[r.pair].active {
+            // The resident pair is draining or retired — don't stick new
+            // turns to it; fall back to the load-based pick (a miss).
+            return None;
+        }
         let credit = self.resident_credit(r.pair, req);
         if let Some(slo) = slo {
             if self.estimated_ttft(r.pair, req.input_len - credit) > slo {
@@ -455,6 +552,9 @@ impl Router {
         };
         let mut best: Option<(usize, f64)> = None;
         for (i, p) in self.pairs.iter().enumerate() {
+            if !p.active {
+                continue;
+            }
             if let Some(slo) = slo {
                 if self.estimated_ttft_for(i, req) > slo {
                     continue;
@@ -467,7 +567,13 @@ impl Router {
         }
         match best {
             Some((i, _)) => i,
-            None => self.pick(req, None),
+            // No active pair met the SLO filter: safety-net unrestricted
+            // pick (admission gates first, so this is rare).
+            None if slo.is_some() => self.pick(req, None),
+            // No active pair at all — the fleet controller never drains
+            // below its minimum, so this is unreachable in practice; the
+            // index argmin keeps the answer deterministic regardless.
+            None => self.load_index.argmin(),
         }
     }
 
@@ -480,7 +586,9 @@ impl Router {
         p.outstanding_tokens += load as f64;
         p.n_routed += 1;
         p.tokens_routed += load;
-        self.load_index.set(pair, self.pairs[pair].outstanding_tokens);
+        if p.active {
+            self.load_index.set(pair, self.pairs[pair].outstanding_tokens);
+        }
         load
     }
 
@@ -535,6 +643,7 @@ impl Router {
         if let Some(old) = self.residency.remove(&req.session_id) {
             self.pairs[old.pair].resident_tokens =
                 self.pairs[old.pair].resident_tokens.saturating_sub(old.tokens);
+            self.pairs[old.pair].lru.remove(&(old.last_use, req.session_id));
         }
         if !self.pairs[pair].supports_credit {
             // A PP pair re-prefills every prompt: pinning the session
@@ -551,16 +660,13 @@ impl Router {
             > self.pairs[pair].residency_capacity_tokens
         {
             // Evict the least-recently-used session resident on this
-            // pair.  `last_use` values are unique, so the victim is
-            // deterministic regardless of map iteration order.
-            let victim = self
-                .residency
-                .iter()
-                .filter(|(_, r)| r.pair == pair)
-                .min_by_key(|(_, r)| r.last_use)
-                .map(|(id, _)| *id);
-            match victim {
-                Some(id) => {
+            // pair: the first entry of the pair's ordered
+            // `(last_use, session)` tree — O(log S) instead of the old
+            // full residency-map scan.  `last_use` values are unique, so
+            // the victim is exactly the scan's min and the eviction
+            // order is deterministic.
+            match self.pairs[pair].lru.pop_first() {
+                Some((_, id)) => {
                     let r = self.residency.remove(&id).expect("victim exists");
                     self.pairs[pair].resident_tokens =
                         self.pairs[pair].resident_tokens.saturating_sub(r.tokens);
@@ -569,6 +675,7 @@ impl Router {
             }
         }
         self.pairs[pair].resident_tokens += tokens;
+        self.pairs[pair].lru.insert((self.use_seq, req.session_id));
         self.residency.insert(
             req.session_id,
             Residency { pair, tokens, last_use: self.use_seq },
@@ -580,7 +687,9 @@ impl Router {
     pub fn on_completed(&mut self, pair: usize, tokens: u64) {
         let p = &mut self.pairs[pair];
         p.outstanding_tokens = (p.outstanding_tokens - tokens as f64).max(0.0);
-        self.load_index.set(pair, self.pairs[pair].outstanding_tokens);
+        if p.active {
+            self.load_index.set(pair, self.pairs[pair].outstanding_tokens);
+        }
     }
 
     /// A session ended (its final turn completed, or a turn was shed and
@@ -598,6 +707,7 @@ impl Router {
         if let Some(r) = self.residency.remove(&session_id) {
             self.pairs[r.pair].resident_tokens =
                 self.pairs[r.pair].resident_tokens.saturating_sub(r.tokens);
+            self.pairs[r.pair].lru.remove(&(r.last_use, session_id));
         }
     }
 
@@ -666,6 +776,9 @@ impl Router {
         // meaningless (near-zero) backlog estimate and dropped.
         let mut best_feasible: Option<(usize, f64)> = None;
         for (i, p) in self.pairs.iter().enumerate() {
+            if !p.active {
+                continue;
+            }
             let eff_len = req.input_len - self.resident_credit(i, req);
             let idle = p.prefill.predict(eff_len);
             best_idle = best_idle.min(idle);
@@ -1148,6 +1261,156 @@ mod tests {
         // Releasing an unknown session is a no-op.
         router.release_session(99);
         assert_eq!(router.resident_sessions(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_matches_reference_scan() {
+        // Satellite pin: the per-pair (last_use → session) tree must
+        // evict exactly the session the old O(S) residency-map scan
+        // chose, at every step of a randomized commit sequence.
+        use crate::util::rng::Rng;
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let caps = [3000u64, 2000u64];
+        router.set_residency_capacity_tokens(0, caps[0]);
+        router.set_residency_capacity_tokens(1, caps[1]);
+        // Reference model replicating the pre-index scan eviction:
+        // (session, pair, tokens, last_use), victim = min last_use on
+        // the overflowing pair.
+        let mut model: Vec<(u64, usize, u64, u64)> = Vec::new();
+        let mut use_seq = 0u64;
+        let mut rng = Rng::new(0xD1CE);
+        for step in 0..400 {
+            let sid = rng.range(1, 13);
+            // Every 25th context is too large to keep warm on either
+            // pair, exercising the "drop old entry, insert nothing" path.
+            let fresh =
+                if step % 25 == 24 { 4000 } else { rng.range_usize(100, 1500) };
+            let output = rng.range_usize(40, 160);
+            let req = session_req(sid, 0, fresh, output);
+            let d = router.route(&req);
+            router.commit_route(&req, &d);
+            // Mirror note_residency with the old scan semantics.
+            use_seq += 1;
+            model.retain(|&(s, _, _, _)| s != sid);
+            let tokens = (req.input_len + req.output_len) as u64;
+            if tokens <= caps[d.pair] {
+                let used = |m: &Vec<(u64, usize, u64, u64)>| -> u64 {
+                    m.iter().filter(|e| e.1 == d.pair).map(|e| e.2).sum()
+                };
+                while used(&model) + tokens > caps[d.pair] {
+                    let victim = model
+                        .iter()
+                        .filter(|e| e.1 == d.pair)
+                        .min_by_key(|e| e.3)
+                        .map(|e| e.0)
+                        .expect("an entry must exist to overflow");
+                    model.retain(|&(s, _, _, _)| s != victim);
+                }
+                model.push((sid, d.pair, tokens, use_seq));
+            }
+            // The router must agree with the reference at every step.
+            assert_eq!(router.resident_sessions(), model.len(), "step {step}");
+            for &(s, p, _, _) in &model {
+                assert_eq!(router.session_residency(s), Some(p), "step {step}");
+            }
+            let want: [u64; 2] = [0, 1].map(|p| {
+                model.iter().filter(|e| e.1 == p).map(|e| e.2).sum::<u64>()
+            });
+            assert_eq!(router.resident_tokens(), want.to_vec(), "step {step}");
+        }
+    }
+
+    // --- elastic fleet: pair activation / drain ---
+
+    #[test]
+    fn inactive_pairs_are_skipped_by_every_policy() {
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        for policy in RoutePolicy::ALL {
+            let mut router = Router::new(policy, &cfg);
+            router.set_pair_active(0, false);
+            assert!(!router.is_pair_active(0));
+            assert_eq!(router.n_active_pairs(), 2);
+            for r in &trace(60, 21) {
+                assert_ne!(router.route(r).pair, 0, "{}", policy.name());
+            }
+            // Reactivation puts the pair back into rotation.
+            router.set_pair_active(0, true);
+            let routed = route_all(&mut router, &trace(60, 22));
+            assert!(routed.contains(&0), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn draining_pair_completions_do_not_resurrect_it() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        let t = trace(10, 23);
+        let decisions: Vec<RouteDecision> = t.iter().map(|r| router.route(r)).collect();
+        router.set_pair_active(0, false);
+        for d in &decisions {
+            if d.pair == 0 {
+                router.on_completed(0, d.charged_tokens);
+            }
+        }
+        // Pair 0 drained to an empty backlog, but it is inactive: every
+        // new arrival still goes to pair 1.
+        assert_eq!(router.outstanding_tokens()[0], 0.0);
+        for r in &trace(20, 24) {
+            assert_eq!(router.route(r).pair, 1);
+        }
+    }
+
+    #[test]
+    fn affinity_does_not_stick_to_an_inactive_resident_pair() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        router.commit_route(&t0, &d0);
+        router.set_pair_active(d0.pair, false);
+        let t1 = session_req(1, 900, 300, 80);
+        let d1 = router.route(&t1);
+        assert_ne!(d1.pair, d0.pair, "follow-up must leave the draining pair");
+        assert_eq!(d1.kv_credit, 0, "the other pair holds no prefix KV");
+    }
+
+    #[test]
+    fn retiring_a_pair_evicts_its_residency() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        router.commit_route(&t0, &d0);
+        let t1 = session_req(2, 0, 700, 90);
+        let d1 = router.route(&t1);
+        router.commit_route(&t1, &d1);
+        assert_ne!(d0.pair, d1.pair, "LOT spreads the two sessions");
+        assert_eq!(router.resident_sessions(), 2);
+        assert_eq!(router.evict_pair_residency(d0.pair), 1);
+        assert_eq!(router.session_residency(1), None);
+        assert_eq!(router.session_residency(2), Some(d1.pair));
+        assert_eq!(router.resident_tokens()[d0.pair], 0);
+    }
+
+    #[test]
+    fn slo_admission_ignores_inactive_pairs() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::SloAware, &cfg);
+        let slo = router.estimated_ttft(0, 1000).max(router.estimated_ttft(1, 1000)) + 0.05;
+        router.set_pair_active(1, false);
+        // Bury the only active pair.
+        for r in &trace(400, 25) {
+            router.route(r);
+        }
+        let req = Request::new(0, 0, 1000, 64);
+        // An idle pair 1 would accept, but it is inactive: deferred.
+        assert!(matches!(
+            router.slo_admission(SimTime::ZERO, &req, slo),
+            Admission::Deferred { .. }
+        ));
+        router.set_pair_active(1, true);
+        assert_eq!(router.slo_admission(SimTime::ZERO, &req, slo), Admission::Accepted);
     }
 
     #[test]

@@ -14,8 +14,10 @@ use crate::simgpu::model_desc;
 use crate::simgpu::perfmodel::PerfModel;
 use crate::systems::cluster::{build_cluster_system, ClusterSystem};
 use crate::systems::driver::{closed_loop, ClosedLoopStats};
-use crate::systems::driver::replay_trace;
-use crate::systems::{build_system, prefill_tokens_executed, RunOutcome};
+use crate::systems::driver::{replay_trace, replay_trace_collect};
+use crate::systems::{
+    build_system, prefill_tokens_executed, AutoscaleConfig, RunOutcome, SystemEvent,
+};
 use crate::util::rng::Rng;
 use crate::workload::arrival::{at_rate, stamp, ArrivalProcess};
 use crate::workload::azure::{generate, AzureTraceConfig};
@@ -607,6 +609,70 @@ pub fn cluster_latency_at_rate(
     replay_trace(build_cluster_system(cfg, policy).as_mut(), &trace)
 }
 
+/// A two-phase arrival pattern for exercising the fleet controller: the
+/// first 70% of requests arrive at `burst_rps`, the rest at a 10x
+/// slower trickle — queue pressure forces a scale-up, the trickle lets
+/// the fleet drain back down.
+pub fn bursty_trace(n: usize, seed: u64, burst_rps: f64) -> Vec<Request> {
+    let base = generate(n, &AzureTraceConfig::default(), seed);
+    let split = base.len() * 7 / 10;
+    let burst_gap = 1e9 / burst_rps.max(1e-3);
+    let mut t_ns = 0.0f64;
+    base.iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut r = *r;
+            r.arrival_ns = t_ns as u64;
+            t_ns += if i < split { burst_gap } else { 10.0 * burst_gap };
+            r
+        })
+        .collect()
+}
+
+/// The `--autoscale` experiment: replay a burst-then-trickle trace
+/// through an elastic fleet and tabulate every scale event with the
+/// active pair count after it.
+pub fn autoscale_demo(
+    opts: &ExperimentOpts,
+    cluster: &ClusterConfig,
+    policy: RoutePolicy,
+    autoscale: &AutoscaleConfig,
+) -> (Table, RunOutcome) {
+    let trace = bursty_trace(opts.n_requests, opts.seed, 40.0);
+    let mut sys =
+        ClusterSystem::new(cluster.clone(), policy).with_autoscale(autoscale.clone());
+    let (out, events, _stats) = replay_trace_collect(&mut sys, &trace);
+    let mut active = autoscale
+        .initial_pairs
+        .clamp(autoscale.min_pairs.max(1), cluster.n_pairs());
+    let mut table = Table::new(
+        format!(
+            "elastic fleet: {} on {} requests (burst then trickle)",
+            cluster.label(),
+            trace.len()
+        ),
+        &["t (s)", "event", "pair", "active pairs"],
+    );
+    for ev in &events {
+        let (label, pair, t) = match ev {
+            SystemEvent::ScaleUp { pair, t } => ("scale-up", *pair, *t),
+            SystemEvent::ScaleDown { pair, t } => ("scale-down", *pair, *t),
+            _ => continue,
+        };
+        active = match label {
+            "scale-up" => active + 1,
+            _ => active.saturating_sub(1),
+        };
+        table.row(vec![
+            format!("{:.3}", t.as_secs_f64()),
+            label.to_string(),
+            pair.to_string(),
+            active.to_string(),
+        ]);
+    }
+    (table, out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -730,6 +796,31 @@ mod tests {
         let out =
             cluster_latency_at_rate(&cfg, RoutePolicy::SloAware, &trace, 4.0);
         assert_eq!(out.report.n_finished, trace.len());
+    }
+
+    #[test]
+    fn autoscale_demo_scales_up_under_burst() {
+        let cluster = ClusterConfig::mixed(2, model_desc::LLAMA3_8B);
+        let autoscale = AutoscaleConfig { scale_up_backlog: 1024.0, ..Default::default() };
+        let (table, out) = autoscale_demo(
+            &tiny_opts(),
+            &cluster,
+            RoutePolicy::LeastOutstandingTokens,
+            &autoscale,
+        );
+        assert!(out.report.n_scale_ups >= 1, "burst never forced a scale-up");
+        assert_eq!(out.report.n_finished, 20);
+        assert!(table.render().contains("scale-up"));
+    }
+
+    #[test]
+    fn bursty_trace_has_two_arrival_phases() {
+        let t = bursty_trace(20, 7, 40.0);
+        assert_eq!(t.len(), 20);
+        let gap = |i: usize| t[i + 1].arrival_ns - t[i].arrival_ns;
+        assert_eq!(gap(0), 25_000_000); // 40 rps
+        assert_eq!(gap(15), 250_000_000); // 10x slower trickle
+        assert!(t.windows(2).all(|w| w[0].arrival_ns < w[1].arrival_ns));
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod cronus;
 pub mod engine;
 pub mod kvcache;
 pub mod launcher;
+pub mod planner;
 pub mod runtime;
 pub mod server;
 pub mod systems;

@@ -7,6 +7,7 @@
 //! cronus bench-table3     reproduce Table 3 (relative GPU utilization)
 //! cronus bench-fig3       reproduce Fig. 3 (linear iteration-time fits)
 //! cronus bench-cluster    sweep 1→N mixed pairs behind the cluster router
+//! cronus plan-topology    search pair compositions under a budget, emit TOML
 //! cronus calibrate        print the Balancer's fitted predictors
 //! cronus trace            generate + summarize a workload trace
 //! cronus info             show GPU specs / model geometries / defaults
@@ -68,17 +69,22 @@ fn opts(args: &cronus::config::cli::Args) -> ExperimentOpts {
     }
 }
 
-/// Load a cluster topology from a TOML file's `[topology]` section,
-/// starting from the standard 4-pair mixed fleet.
-fn cluster_from_toml(path: &str) -> cronus::config::ClusterConfig {
+/// Read and parse a TOML file, exiting with a diagnostic on failure.
+fn load_toml(path: &str) -> toml::TomlDoc {
     let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
         eprintln!("cannot read {path}: {e}");
         std::process::exit(2);
     });
-    let doc = toml::parse(&text).unwrap_or_else(|e| {
+    toml::parse(&text).unwrap_or_else(|e| {
         eprintln!("{path}: {e}");
         std::process::exit(2);
-    });
+    })
+}
+
+/// Load a cluster topology from a TOML file's `[topology]` section,
+/// starting from the standard 4-pair mixed fleet.
+fn cluster_from_toml(path: &str) -> cronus::config::ClusterConfig {
+    let doc = load_toml(path);
     let mut cluster =
         cronus::config::ClusterConfig::mixed(4, cronus::simgpu::model_desc::LLAMA3_8B);
     if let Err(e) = cluster.apply_toml(&doc) {
@@ -139,6 +145,11 @@ fn main() {
             )
             .opt("config", "TOML file with a [topology] section", None)
             .flag(
+                "autoscale",
+                "elastic fleet: grow/shrink the active pair set from router \
+                 queue depth ([autoscale] keys in --config tune thresholds)",
+            )
+            .flag(
                 "closed-loop",
                 "serve multi-turn sessions closed-loop (think time between \
                  turns) and compare routing policies incl. kv-affinity",
@@ -159,6 +170,36 @@ fn main() {
                 });
                 let slo_ms = args.get_f64("slo-ttft-ms").unwrap();
                 let slo = (slo_ms > 0.0).then_some(slo_ms / 1e3);
+                if args.has_flag("autoscale") {
+                    // Elastic-fleet mode: burst/trickle trace, scale
+                    // events tabulated as they happen.
+                    let cluster = match args.get("config") {
+                        Some(path) => cluster_from_toml(path),
+                        None => cronus::config::ClusterConfig::mixed(
+                            args.get_usize("pairs").unwrap(),
+                            cronus::simgpu::model_desc::LLAMA3_8B,
+                        ),
+                    };
+                    let mut acfg = cronus::systems::AutoscaleConfig::default();
+                    if let Some(path) = args.get("config") {
+                        acfg.apply_toml(&load_toml(path));
+                    }
+                    let (table, out) =
+                        launcher::autoscale_demo(&opts(args), &cluster, policy, &acfg);
+                    table.print();
+                    let r = &out.report;
+                    println!(
+                        "\n{} finished / {} rejected; scale +{}/-{}; \
+                         TTFT p99 {:.3}s, TBT p99 {:.3}s",
+                        r.n_finished,
+                        r.n_rejected,
+                        r.n_scale_ups,
+                        r.n_scale_downs,
+                        r.ttft_p99_s,
+                        r.tbt_p99_s
+                    );
+                    return;
+                }
                 if args.has_flag("closed-loop") {
                     // Closed-loop mode: same session workload under every
                     // routing policy on a fixed cluster.
@@ -215,6 +256,83 @@ fn main() {
                         "\nscaling 1 → {} pairs: {:.2}x",
                         last.n_pairs, last.scaling
                     );
+                }
+            },
+        ),
+        "plan-topology" => with_parser(
+            Parser::new(
+                "cronus plan-topology",
+                "search pair compositions under a cost/power budget and emit \
+                 the winning [topology] TOML",
+            )
+            .opt("budget", "max fleet cost, USD/hour (0 = unconstrained)", Some("0"))
+            .opt("power-budget", "max fleet power, watts (0 = unconstrained)", Some("0"))
+            .opt("n", "requests in the scoring trace", Some("120"))
+            .opt("seed", "scoring trace seed", Some("42"))
+            .opt("model", "model (llama3-8b | qwen2-7b)", Some("llama3-8b"))
+            .opt("beam", "beam width of the search", Some("3"))
+            .opt("max-pairs", "largest fleet considered", Some("8"))
+            .opt(
+                "policy",
+                "route policy candidates are scored under (round-robin | \
+                 least-outstanding | slo-aware | kv-affinity)",
+                Some("least-outstanding"),
+            )
+            .opt("out", "write the winning [topology] TOML to this file", None)
+            .flag("help", "print usage"),
+            &raw,
+            |args| {
+                let model =
+                    model_desc::by_name(args.get("model").unwrap()).unwrap_or_else(|| {
+                        eprintln!("unknown model {:?}", args.get("model"));
+                        std::process::exit(2);
+                    });
+                let policy_name = args.get("policy").unwrap();
+                let policy = RoutePolicy::from_name(policy_name).unwrap_or_else(|| {
+                    eprintln!("unknown route policy {policy_name:?}");
+                    std::process::exit(2);
+                });
+                let budget = args.get_f64("budget").unwrap();
+                let power = args.get_f64("power-budget").unwrap();
+                let cfg = cronus::planner::PlannerConfig {
+                    budget_cost_per_hour: (budget > 0.0).then_some(budget),
+                    budget_power_w: (power > 0.0).then_some(power),
+                    beam_width: args.get_usize("beam").unwrap(),
+                    max_pairs: args.get_usize("max-pairs").unwrap(),
+                    n_requests: args.get_usize("n").unwrap(),
+                    seed: args.get_u64("seed").unwrap(),
+                    model,
+                    policy,
+                };
+                let outcome = cronus::planner::plan(&cfg).unwrap_or_else(|e| {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                });
+                cronus::planner::report_table(&outcome).print();
+                match &outcome.baseline {
+                    Some(b) => println!(
+                        "\npreset → planned at ${:.2}/hr: {:.2} → {:.2} req/s, \
+                         TTFT p99 {:.3} → {:.3} s  ({} fleets evaluated)",
+                        outcome.best.cost_per_hour,
+                        b.throughput_rps,
+                        outcome.best.throughput_rps,
+                        b.ttft_p99_s,
+                        outcome.best.ttft_p99_s,
+                        outcome.n_evaluated
+                    ),
+                    None => println!(
+                        "\nno mixed() preset prefix fits the budget \
+                         ({} fleets evaluated)",
+                        outcome.n_evaluated
+                    ),
+                }
+                println!("\n{}", outcome.toml);
+                if let Some(path) = args.get("out") {
+                    std::fs::write(path, &outcome.toml).unwrap_or_else(|e| {
+                        eprintln!("cannot write {path}: {e}");
+                        std::process::exit(2);
+                    });
+                    eprintln!("wrote {path}");
                 }
             },
         ),
@@ -369,6 +487,8 @@ fn print_help() {
          \x20 bench-table3   reproduce Table 3 (relative GPU utilization)\n\
          \x20 bench-fig3     reproduce Fig. 3 (linear iteration-time fits)\n\
          \x20 bench-cluster  sweep 1\u{2192}N mixed pairs behind the cluster router\n\
+         \x20                (--autoscale: queue-driven elastic pair set)\n\
+         \x20 plan-topology  search pair compositions under a budget, emit TOML\n\
          \x20 calibrate      print the Balancer's fitted predictors\n\
          \x20 trace          generate + summarize a workload trace\n\
          \x20 info           GPU specs / model geometries\n\n\

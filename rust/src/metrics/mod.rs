@@ -168,6 +168,11 @@ pub struct Report {
     /// `n_kv_hits` / `n_prefix_routed`; 0.0 when the workload has no
     /// follow-up turns.
     pub kv_hit_rate: f64,
+    /// Standby pairs activated by the fleet controller during the run
+    /// (cluster-level; 0 without `--autoscale`).
+    pub n_scale_ups: usize,
+    /// Pairs drained and retired to standby by the fleet controller.
+    pub n_scale_downs: usize,
     /// Raw TTFT samples, one per request that produced a first token.
     /// Sorted ascending ([`Report::from_samples`] sorts once and derives
     /// every percentile from the sorted vector).
@@ -229,6 +234,8 @@ impl Report {
             prefill_tokens_saved: 0,
             n_prefix_routed: 0,
             kv_hit_rate: 0.0,
+            n_scale_ups: 0,
+            n_scale_downs: 0,
             ttft_samples: ttft,
             tbt_samples: tbt,
             e2e_samples: e2e,
@@ -253,6 +260,8 @@ impl Report {
         let mut n_kv_hits = 0usize;
         let mut prefill_tokens_saved = 0u64;
         let mut n_prefix_routed = 0usize;
+        let mut n_scale_ups = 0usize;
+        let mut n_scale_downs = 0usize;
         let mut makespan_s = 0.0f64;
         for p in parts {
             n_requests += p.n_requests;
@@ -262,6 +271,8 @@ impl Report {
             n_kv_hits += p.n_kv_hits;
             prefill_tokens_saved += p.prefill_tokens_saved;
             n_prefix_routed += p.n_prefix_routed;
+            n_scale_ups += p.n_scale_ups;
+            n_scale_downs += p.n_scale_downs;
             makespan_s = makespan_s.max(p.makespan_s);
             ttft.extend_from_slice(&p.ttft_samples);
             tbt.extend_from_slice(&p.tbt_samples);
@@ -281,6 +292,8 @@ impl Report {
         report.n_kv_hits = n_kv_hits;
         report.prefill_tokens_saved = prefill_tokens_saved;
         report.n_prefix_routed = n_prefix_routed;
+        report.n_scale_ups = n_scale_ups;
+        report.n_scale_downs = n_scale_downs;
         // The per-pair parts of a cluster run carry no KV accounting
         // (the router owns it; the cluster stamps hits + denominator
         // after merging), but merging *cluster-level* reports keeps the
@@ -314,6 +327,12 @@ impl Report {
                 "  kv-hit {:.0}% (saved {} tok)",
                 100.0 * self.kv_hit_rate,
                 self.prefill_tokens_saved
+            ));
+        }
+        if self.n_scale_ups + self.n_scale_downs > 0 {
+            s.push_str(&format!(
+                "  scale +{}/-{}",
+                self.n_scale_ups, self.n_scale_downs
             ));
         }
         s
@@ -503,6 +522,23 @@ mod tests {
         assert_eq!(merged.n_prefix_routed, 8);
         assert!((merged.kv_hit_rate - 0.75).abs() < 1e-12);
         assert!(merged.summary().contains("kv-hit 75%"), "{}", merged.summary());
+    }
+
+    #[test]
+    fn scale_counters_merge_and_surface_in_summary() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_token(1, t(0.1));
+        c.on_finish(1, t(0.2));
+        let mut r = c.report("x");
+        assert_eq!((r.n_scale_ups, r.n_scale_downs), (0, 0));
+        assert!(!r.summary().contains("scale"));
+        r.n_scale_ups = 3;
+        r.n_scale_downs = 2;
+        assert!(r.summary().contains("scale +3/-2"), "{}", r.summary());
+        let merged = Report::merge("m", &[r.clone(), r]);
+        assert_eq!(merged.n_scale_ups, 6);
+        assert_eq!(merged.n_scale_downs, 4);
     }
 
     #[test]

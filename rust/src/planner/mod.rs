@@ -1,0 +1,419 @@
+//! Offline topology planning: search the pair-composition space for the
+//! best `[topology]` under a cost or power budget.
+//!
+//! The planner answers the operator question the paper leaves open: *you
+//! rent a heterogeneous GPU fleet — which (high, low) pairs should you
+//! build, and how many?*  Candidate fleets are composed from "bricks" —
+//! (high GPU, low GPU, serving system) triples where the high card
+//! strictly dominates the low one in both achievable FLOPs and
+//! bandwidth (the paper's premise for partial prefill offload) — and
+//! scored by actually replaying a workload trace through a full
+//! [`ClusterSystem`](crate::systems::cluster::ClusterSystem), not by a
+//! closed-form proxy.  A beam search grows fleets one brick at a time
+//! under the budget; the hand-written [`ClusterConfig::mixed`] preset
+//! (trimmed to the largest prefix the budget allows) is seeded into the
+//! beam, so the planner's answer is never worse than the preset at
+//! equal budget.  Two cheap local post-passes then try
+//! capacity-proportional rate shares and per-pair serving-system flips,
+//! keeping each only if the replayed score improves.
+//!
+//! The winning fleet is emitted through [`ClusterConfig::to_toml`] and
+//! round-tripped through the config parser before it is returned, so
+//! the file `cronus plan-topology` writes is guaranteed to load.
+//!
+//! ```no_run
+//! use cronus::planner::{plan, report_table, PlannerConfig};
+//!
+//! let cfg = PlannerConfig {
+//!     budget_cost_per_hour: Some(12.0),
+//!     ..Default::default()
+//! };
+//! let outcome = plan(&cfg).expect("some pair fits a $12/hr budget");
+//! report_table(&outcome).print();
+//! println!("{}", outcome.toml);
+//! ```
+
+use std::collections::BTreeSet;
+
+use crate::benchkit::Table;
+use crate::config::cluster::{DeploymentConfig, SystemKind};
+use crate::config::toml;
+use crate::config::topology::{ClusterConfig, PairConfig};
+use crate::cronus::router::{RoutePolicy, Router};
+use crate::launcher::cluster_max_throughput;
+use crate::simgpu::model_desc::{self, ModelDesc};
+use crate::simgpu::spec::{GpuSpec, ALL_GPUS};
+use crate::workload::azure::{generate, AzureTraceConfig};
+use crate::workload::Request;
+
+/// Planner knobs.  Budgets are optional but in practice you set at
+/// least one — an unconstrained search just buys the biggest fleet
+/// `max_pairs` allows.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Maximum fleet rental cost, USD/hour (both cards of every pair).
+    pub budget_cost_per_hour: Option<f64>,
+    /// Maximum fleet board power, watts.
+    pub budget_power_w: Option<f64>,
+    /// Beam width of the search (candidates kept per fleet size).
+    pub beam_width: usize,
+    /// Largest fleet considered.
+    pub max_pairs: usize,
+    /// Requests in the scoring trace (replayed per candidate).
+    pub n_requests: usize,
+    /// Seed of the scoring trace.
+    pub seed: u64,
+    /// Model every pair serves.
+    pub model: ModelDesc,
+    /// Routing policy candidates are scored under.
+    pub policy: RoutePolicy,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> PlannerConfig {
+        PlannerConfig {
+            budget_cost_per_hour: None,
+            budget_power_w: None,
+            beam_width: 3,
+            max_pairs: 8,
+            n_requests: 120,
+            seed: 42,
+            model: model_desc::LLAMA3_8B,
+            policy: RoutePolicy::LeastOutstandingTokens,
+        }
+    }
+}
+
+/// One scored fleet.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub cluster: ClusterConfig,
+    pub cost_per_hour: f64,
+    pub power_w: f64,
+    pub throughput_rps: f64,
+    pub ttft_p99_s: f64,
+    pub tbt_p99_s: f64,
+}
+
+/// Result of a planning run.
+pub struct PlanOutcome {
+    /// The winning fleet.
+    pub best: Candidate,
+    /// Top candidates, best first (at most ten).
+    pub ranked: Vec<Candidate>,
+    /// The hand-written `mixed()` preset trimmed to the budget, scored
+    /// on the same trace — the before/after comparison point.  `None`
+    /// when not even one preset pair fits.
+    pub baseline: Option<Candidate>,
+    /// Fleets actually replayed during the search.
+    pub n_evaluated: usize,
+    /// `best` as a `[topology]` TOML document (round-trip validated).
+    pub toml: String,
+}
+
+/// The search's building blocks: every (high, low) combination where the
+/// high card strictly dominates in both achievable FLOPs and bandwidth,
+/// crossed with the two serving systems worth running on a pair.
+fn bricks() -> Vec<(GpuSpec, GpuSpec, SystemKind)> {
+    let mut out = Vec::new();
+    for hi in ALL_GPUS {
+        for lo in ALL_GPUS {
+            if hi.flops() > lo.flops() && hi.bandwidth() > lo.bandwidth() {
+                for system in [SystemKind::Cronus, SystemKind::DpChunked] {
+                    out.push((hi, lo, system));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn brick_pair(
+    hi: GpuSpec,
+    lo: GpuSpec,
+    system: SystemKind,
+    model: ModelDesc,
+) -> PairConfig {
+    let mut p = PairConfig::cronus(DeploymentConfig::paper(hi, lo, model));
+    p.system = system;
+    p
+}
+
+fn fits(cluster: &ClusterConfig, cfg: &PlannerConfig) -> bool {
+    cfg.budget_cost_per_hour.map_or(true, |b| cluster.cost_per_hour() <= b + 1e-9)
+        && cfg.budget_power_w.map_or(true, |b| cluster.power_w() <= b + 1e-9)
+}
+
+/// Canonical multiset key of a fleet (pair order does not matter to the
+/// router's policies, so permutations are the same candidate).
+fn fleet_key(cluster: &ClusterConfig) -> String {
+    let mut specs: Vec<String> = cluster.pairs.iter().map(|p| p.spec()).collect();
+    specs.sort();
+    specs.join("|")
+}
+
+fn evaluate(cluster: ClusterConfig, cfg: &PlannerConfig, trace: &[Request]) -> Candidate {
+    let out = cluster_max_throughput(&cluster, cfg.policy, trace);
+    Candidate {
+        cost_per_hour: cluster.cost_per_hour(),
+        power_w: cluster.power_w(),
+        throughput_rps: out.report.throughput_rps,
+        ttft_p99_s: out.report.ttft_p99_s,
+        tbt_p99_s: out.report.tbt_p99_s,
+        cluster,
+    }
+}
+
+/// `a` strictly beats `b`: higher throughput, or equal throughput with
+/// lower TTFT P99.
+pub fn better(a: &Candidate, b: &Candidate) -> bool {
+    if (a.throughput_rps - b.throughput_rps).abs() > 1e-9 {
+        return a.throughput_rps > b.throughput_rps;
+    }
+    a.ttft_p99_s < b.ttft_p99_s
+}
+
+fn rank(v: &mut [Candidate]) {
+    v.sort_by(|a, b| {
+        b.throughput_rps
+            .partial_cmp(&a.throughput_rps)
+            .expect("throughput is never NaN")
+            .then(a.ttft_p99_s.partial_cmp(&b.ttft_p99_s).expect("ttft is never NaN"))
+    });
+}
+
+/// The hand-written preset trimmed to the largest prefix the budget
+/// allows.
+fn mixed_baseline(cfg: &PlannerConfig) -> Option<ClusterConfig> {
+    let full = ClusterConfig::mixed(cfg.max_pairs, cfg.model);
+    (1..=cfg.max_pairs)
+        .rev()
+        .map(|n| ClusterConfig::new(full.pairs[..n].to_vec()))
+        .find(|c| fits(c, cfg))
+}
+
+/// Run the search.  Errors only when no single brick fits the budget or
+/// when the emitted TOML fails its own round-trip validation (a bug,
+/// not an input condition).
+pub fn plan(cfg: &PlannerConfig) -> Result<PlanOutcome, String> {
+    assert!(cfg.beam_width > 0 && cfg.max_pairs > 0, "degenerate planner config");
+    let trace = generate(cfg.n_requests, &AzureTraceConfig::default(), cfg.seed);
+    let bricks = bricks();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut n_evaluated = 0usize;
+    let mut ranked: Vec<Candidate> = Vec::new();
+
+    // Level 1: every single brick that fits, plus the mixed() preset
+    // prefix — seeding the preset makes the final answer no worse than
+    // the hand-written fleet at equal budget, by construction.
+    let mut beam: Vec<Candidate> = Vec::new();
+    for &(hi, lo, system) in &bricks {
+        let c = ClusterConfig::new(vec![brick_pair(hi, lo, system, cfg.model)]);
+        if !fits(&c, cfg) || !seen.insert(fleet_key(&c)) {
+            continue;
+        }
+        n_evaluated += 1;
+        beam.push(evaluate(c, cfg, &trace));
+    }
+    let baseline = mixed_baseline(cfg).map(|c| {
+        n_evaluated += 1;
+        evaluate(c, cfg, &trace)
+    });
+    if let Some(b) = &baseline {
+        if seen.insert(fleet_key(&b.cluster)) {
+            beam.push(b.clone());
+        }
+    }
+    if beam.is_empty() {
+        return Err("no (high, low) pair fits the budget".into());
+    }
+    rank(&mut beam);
+    beam.truncate(cfg.beam_width);
+    ranked.extend(beam.iter().cloned());
+
+    // Grow the beam one brick at a time while the budget allows.
+    loop {
+        let mut next: Vec<Candidate> = Vec::new();
+        for cand in &beam {
+            if cand.cluster.n_pairs() >= cfg.max_pairs {
+                continue;
+            }
+            for &(hi, lo, system) in &bricks {
+                let mut pairs = cand.cluster.pairs.clone();
+                pairs.push(brick_pair(hi, lo, system, cfg.model));
+                let c = ClusterConfig::new(pairs);
+                if !fits(&c, cfg) || !seen.insert(fleet_key(&c)) {
+                    continue;
+                }
+                n_evaluated += 1;
+                next.push(evaluate(c, cfg, &trace));
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        rank(&mut next);
+        next.truncate(cfg.beam_width);
+        ranked.extend(next.iter().cloned());
+        beam = next;
+    }
+
+    rank(&mut ranked);
+    ranked.truncate(10);
+    let mut best = ranked[0].clone();
+
+    // Post-pass 1: capacity-proportional rate shares (normalized so the
+    // slowest pair gets 1.0, rounded to two decimals for a readable
+    // TOML).  Only matters under share-weighted routing, and is kept
+    // only if the replayed score actually improves.
+    let rates = Router::new(cfg.policy, &best.cluster).drain_rates_tps();
+    let slowest = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    if slowest > 0.0 && best.cluster.n_pairs() > 1 {
+        let mut tuned = best.cluster.clone();
+        for (p, r) in tuned.pairs.iter_mut().zip(&rates) {
+            p.rate_share = (r / slowest * 100.0).round() / 100.0;
+        }
+        n_evaluated += 1;
+        let cand = evaluate(tuned, cfg, &trace);
+        if better(&cand, &best) {
+            best = cand.clone();
+            ranked.insert(0, cand);
+            ranked.truncate(10);
+        }
+    }
+
+    // Post-pass 2: flip each pair's serving system between Cronus and
+    // DP+Chunked, keeping a flip only when it wins on the replay.
+    for i in 0..best.cluster.n_pairs() {
+        let flipped = match best.cluster.pairs[i].system {
+            SystemKind::Cronus => SystemKind::DpChunked,
+            _ => SystemKind::Cronus,
+        };
+        let mut tuned = best.cluster.clone();
+        tuned.pairs[i].system = flipped;
+        n_evaluated += 1;
+        let cand = evaluate(tuned, cfg, &trace);
+        if better(&cand, &best) {
+            best = cand.clone();
+            ranked.insert(0, cand);
+            ranked.truncate(10);
+        }
+    }
+
+    let toml_text = best.cluster.to_toml();
+    validate_roundtrip(&toml_text, &best.cluster)?;
+    Ok(PlanOutcome { best, ranked, baseline, n_evaluated, toml: toml_text })
+}
+
+/// Parse the emitted TOML back through the config layer and check it
+/// reproduces the fleet exactly — the guarantee behind handing the file
+/// straight to `cronus bench-cluster --config`.
+fn validate_roundtrip(text: &str, want: &ClusterConfig) -> Result<(), String> {
+    let doc =
+        toml::parse(text).map_err(|e| format!("emitted TOML failed to parse: {e:?}"))?;
+    let mut got = ClusterConfig::default();
+    got.apply_toml(&doc)?;
+    if got.n_pairs() != want.n_pairs() {
+        return Err("emitted TOML changed the pair count".into());
+    }
+    for (a, b) in got.pairs.iter().zip(&want.pairs) {
+        if a.deployment.high_gpu != b.deployment.high_gpu
+            || a.deployment.low_gpu != b.deployment.low_gpu
+            || a.deployment.model != b.deployment.model
+            || a.system != b.system
+            || a.rate_share != b.rate_share
+        {
+            return Err(format!("emitted TOML changed pair '{}'", b.spec()));
+        }
+    }
+    Ok(())
+}
+
+/// Render the ranked candidates (and the preset baseline, if any) as a
+/// report table.
+pub fn report_table(outcome: &PlanOutcome) -> Table {
+    let mut t = Table::new(
+        "topology plan (ranked by replayed throughput)",
+        &["fleet", "pairs", "$/hr", "watts", "req/s", "TTFT p99 (s)", "TBT p99 (s)"],
+    );
+    let mut push = |label: &str, c: &Candidate| {
+        let specs: Vec<String> = c.cluster.pairs.iter().map(|p| p.spec()).collect();
+        t.row(vec![
+            format!("{label}{}", specs.join(", ")),
+            c.cluster.n_pairs().to_string(),
+            format!("{:.2}", c.cost_per_hour),
+            format!("{:.0}", c.power_w),
+            format!("{:.2}", c.throughput_rps),
+            format!("{:.3}", c.ttft_p99_s),
+            format!("{:.3}", c.tbt_p99_s),
+        ]);
+    };
+    for c in &outcome.ranked {
+        push("", c);
+    }
+    if let Some(b) = &outcome.baseline {
+        push("[preset] ", b);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bricks_respect_the_domination_premise() {
+        let b = bricks();
+        // 8 dominating GPU combos x 2 systems (see simgpu::spec ladder).
+        assert_eq!(b.len(), 16);
+        for (hi, lo, _) in &b {
+            assert!(hi.flops() > lo.flops(), "{}+{}", hi.name, lo.name);
+            assert!(hi.bandwidth() > lo.bandwidth(), "{}+{}", hi.name, lo.name);
+        }
+        // The V100 has more bandwidth but fewer FLOPs than the A30:
+        // neither dominates the other, so neither pairing is a brick.
+        assert!(!b.iter().any(|(h, l, _)| h.name == "V100-32G" && l.name == "A30"));
+        assert!(!b.iter().any(|(h, l, _)| h.name == "A30" && l.name == "V100-32G"));
+    }
+
+    #[test]
+    fn fleet_key_ignores_pair_order() {
+        let model = model_desc::LLAMA3_8B;
+        let a = ClusterConfig::new(vec![
+            brick_pair(ALL_GPUS[0], ALL_GPUS[3], SystemKind::Cronus, model),
+            brick_pair(ALL_GPUS[0], ALL_GPUS[4], SystemKind::DpChunked, model),
+        ]);
+        let b = ClusterConfig::new(vec![a.pairs[1].clone(), a.pairs[0].clone()]);
+        assert_eq!(fleet_key(&a), fleet_key(&b));
+    }
+
+    #[test]
+    fn tight_budget_plans_a_single_cheap_pair() {
+        // At $1/hr only A10+T4 fits (0.60 + 0.35); the preset's A100
+        // pairs never do, so there is no baseline.
+        let cfg = PlannerConfig {
+            budget_cost_per_hour: Some(1.0),
+            n_requests: 10,
+            beam_width: 2,
+            max_pairs: 3,
+            ..Default::default()
+        };
+        let out = plan(&cfg).expect("a10+t4 fits");
+        assert!(out.baseline.is_none());
+        assert_eq!(out.best.cluster.n_pairs(), 1);
+        assert!(out.best.cost_per_hour <= 1.0);
+        assert_eq!(out.best.cluster.pairs[0].deployment.high_gpu.name, "A10");
+        assert!(out.best.throughput_rps > 0.0);
+        assert!(out.toml.contains("[topology]"));
+    }
+
+    #[test]
+    fn impossible_budget_is_an_error() {
+        let cfg = PlannerConfig {
+            budget_cost_per_hour: Some(0.1),
+            n_requests: 10,
+            ..Default::default()
+        };
+        assert!(plan(&cfg).is_err());
+    }
+}

@@ -5,6 +5,13 @@
 //! care about — dense BF16 throughput (prefill is compute-bound), HBM
 //! bandwidth (decode is memory-bound) and capacity (KV cache) — plus two
 //! derate factors that map peak numbers to achievable ones.
+//!
+//! Each spec also carries two fleet-economics numbers the topology
+//! planner budgets against: a nominal rental cost (USD per GPU-hour,
+//! on-demand list-price ballpark) and the board power limit (watts).
+//! Absolute dollar figures drift with the market; what the planner's
+//! conclusions rest on is the *relative* cost ladder (A100 ≫ V100 >
+//! A30 > A10 > T4), which is stable.
 
 /// A GPU device description.  All numbers are *peak* spec-sheet values;
 /// `compute_efficiency` / `mem_efficiency` derate them to the sustained
@@ -26,6 +33,10 @@ pub struct GpuSpec {
     pub mem_efficiency: f64,
     /// Fixed per-iteration overhead (kernel launches, scheduler), seconds.
     pub iteration_overhead_s: f64,
+    /// Nominal rental cost, USD per GPU-hour (planner cost budget).
+    pub cost_per_hour: f64,
+    /// Board power limit (TDP), watts (planner power budget).
+    pub power_w: f64,
 }
 
 impl GpuSpec {
@@ -54,6 +65,8 @@ pub const A100: GpuSpec = GpuSpec {
     compute_efficiency: 0.50,
     mem_efficiency: 0.75,
     iteration_overhead_s: 4.0e-3,
+    cost_per_hour: 3.00,
+    power_w: 400.0,
 };
 
 /// NVIDIA A30 24 GB: 165 TFLOPS BF16, 933 GB/s HBM2.  Sustained serving
@@ -66,6 +79,8 @@ pub const A30: GpuSpec = GpuSpec {
     compute_efficiency: 0.50,
     mem_efficiency: 0.62,
     iteration_overhead_s: 4.0e-3,
+    cost_per_hour: 0.80,
+    power_w: 165.0,
 };
 
 /// NVIDIA A10 24 GB: 125 TFLOPS BF16, 600 GB/s GDDR6.  GDDR6 sustains a
@@ -79,6 +94,8 @@ pub const A10: GpuSpec = GpuSpec {
     compute_efficiency: 0.50,
     mem_efficiency: 0.52,
     iteration_overhead_s: 4.0e-3,
+    cost_per_hour: 0.60,
+    power_w: 150.0,
 };
 
 /// NVIDIA V100S 32 GB: 112 TFLOPS FP16 tensor, 1134 GB/s HBM2.  No BF16
@@ -92,6 +109,8 @@ pub const V100: GpuSpec = GpuSpec {
     compute_efficiency: 0.45,
     mem_efficiency: 0.65,
     iteration_overhead_s: 4.0e-3,
+    cost_per_hour: 1.20,
+    power_w: 250.0,
 };
 
 /// NVIDIA T4 16 GB: 65 TFLOPS FP16 tensor, 300 GB/s GDDR6.  Too little
@@ -106,7 +125,13 @@ pub const T4: GpuSpec = GpuSpec {
     compute_efficiency: 0.45,
     mem_efficiency: 0.50,
     iteration_overhead_s: 4.0e-3,
+    cost_per_hour: 0.35,
+    power_w: 70.0,
 };
+
+/// Every GPU model the simulator knows — the topology planner's default
+/// inventory, ordered high-end first.
+pub const ALL_GPUS: [GpuSpec; 5] = [A100, V100, A30, A10, T4];
 
 /// Look up a spec by (case-insensitive) name, for config files / CLI.
 pub fn by_name(name: &str) -> Option<GpuSpec> {
@@ -170,6 +195,30 @@ mod tests {
         }
         assert!(T4.flops() < V100.flops() && T4.flops() < A10.flops());
         assert!(T4.mem_bytes() < A10.mem_bytes());
+    }
+
+    #[test]
+    fn cost_and_power_ladder() {
+        // Fleet economics follow capability: the A100 is by far the most
+        // expensive and hungriest card, the T4 the cheapest and leanest.
+        for low in [&V100, &A30, &A10, &T4] {
+            assert!(A100.cost_per_hour > low.cost_per_hour, "{}", low.name);
+            assert!(A100.power_w > low.power_w, "{}", low.name);
+        }
+        assert!(V100.cost_per_hour > A30.cost_per_hour);
+        assert!(A30.cost_per_hour > A10.cost_per_hour);
+        assert!(A10.cost_per_hour > T4.cost_per_hour);
+        for g in &ALL_GPUS {
+            assert!(g.cost_per_hour > 0.0 && g.power_w > 0.0, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn inventory_covers_every_named_spec() {
+        assert_eq!(ALL_GPUS.len(), 5);
+        for g in &ALL_GPUS {
+            assert_eq!(by_name(g.name).unwrap(), *g);
+        }
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Queue-driven elastic fleet control.
+//!
+//! A [`FleetController`] watches the cluster router's per-pair
+//! outstanding-token backlog over a sliding time window and decides when
+//! to *activate* a standby pair (scale up) or *drain* an active one
+//! (scale down).  The controller only makes decisions — the cluster
+//! executes them: activation re-registers the pair with the router's
+//! load index, while a drained pair first stops receiving new work and
+//! is retired only once its last in-flight request finishes, so no
+//! request is ever lost or duplicated by a scaling action (see the
+//! conservation test in `tests/autoscale.rs`).
+//!
+//! Thresholds are expressed in **backlog tokens per active pair**: the
+//! mean over the window of `total outstanding tokens / active pairs`.
+//! Normalizing by the active count makes one pair of thresholds work
+//! across fleet sizes — a four-pair fleet at 4 × 6 k tokens is exactly
+//! as loaded as a one-pair fleet at 6 k.
+//!
+//! # Example
+//!
+//! ```
+//! use cronus::simclock::SimTime;
+//! use cronus::systems::{AutoscaleConfig, FleetController, ScaleDecision};
+//!
+//! let cfg = AutoscaleConfig { window_s: 0.1, cooldown_s: 0.0, ..Default::default() };
+//! let mut ctl = FleetController::new(3, cfg);
+//! assert_eq!(ctl.n_active(), 1); // starts at `initial_pairs`
+//!
+//! // Sustained backlog above the scale-up threshold activates pair 1.
+//! let mut t = SimTime::ZERO;
+//! loop {
+//!     t = t.after_secs(0.05);
+//!     if let Some(d) = ctl.decide(t, &[10_000.0, 0.0, 0.0]) {
+//!         assert_eq!(d, ScaleDecision::Activate(1));
+//!         break;
+//!     }
+//! }
+//! assert_eq!(ctl.n_active(), 2);
+//! ```
+
+use std::collections::VecDeque;
+
+use crate::config::toml::TomlDoc;
+use crate::simclock::SimTime;
+
+/// Knobs for the [`FleetController`].  Loadable from an `[autoscale]`
+/// TOML section via [`AutoscaleConfig::apply_toml`]; see `CONFIG.md` for
+/// the key-by-key reference.
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many active pairs.
+    pub min_pairs: usize,
+    /// Pairs active at t=0 (clamped to `[min_pairs, n_pairs]`).
+    pub initial_pairs: usize,
+    /// Sliding window (seconds) over which backlog samples are averaged.
+    pub window_s: f64,
+    /// Mean backlog tokens *per active pair* above which a standby pair
+    /// is activated.
+    pub scale_up_backlog: f64,
+    /// Mean backlog tokens *per active pair* below which an active pair
+    /// is drained.
+    pub scale_down_backlog: f64,
+    /// Minimum time between scaling decisions, so one burst cannot
+    /// thrash the fleet up and down.
+    pub cooldown_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_pairs: 1,
+            initial_pairs: 1,
+            window_s: 2.0,
+            scale_up_backlog: 6144.0,
+            scale_down_backlog: 768.0,
+            cooldown_s: 1.0,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Overlay `[autoscale]` keys from a parsed TOML document.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) {
+        if let Some(x) = doc.get_i64("autoscale.min_pairs") {
+            self.min_pairs = x as usize;
+        }
+        if let Some(x) = doc.get_i64("autoscale.initial_pairs") {
+            self.initial_pairs = x as usize;
+        }
+        if let Some(x) = doc.get_f64("autoscale.window_s") {
+            self.window_s = x;
+        }
+        if let Some(x) = doc.get_f64("autoscale.scale_up_backlog") {
+            self.scale_up_backlog = x;
+        }
+        if let Some(x) = doc.get_f64("autoscale.scale_down_backlog") {
+            self.scale_down_backlog = x;
+        }
+        if let Some(x) = doc.get_f64("autoscale.cooldown_s") {
+            self.cooldown_s = x;
+        }
+    }
+}
+
+/// Lifecycle state of one pair under fleet control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairState {
+    /// Receiving new work.
+    Active,
+    /// No new work routed to it; retires when its backlog empties.
+    Draining,
+    /// Retired (or never started) — eligible for the next scale-up.
+    Standby,
+}
+
+/// A scaling action the cluster should execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Start routing to this standby pair.
+    Activate(usize),
+    /// Stop routing to this active pair and retire it once empty.
+    Drain(usize),
+}
+
+/// The scaling policy: a windowed mean of per-active-pair backlog with
+/// hysteresis (distinct up/down thresholds) and a decision cooldown.
+/// Deterministic — decisions depend only on the observed `(time,
+/// backlog)` sequence, never on wall-clock or randomness, so a run with
+/// autoscaling is exactly as reproducible as one without.
+pub struct FleetController {
+    cfg: AutoscaleConfig,
+    states: Vec<PairState>,
+    /// `(sample time, backlog per active pair)`, oldest first.
+    samples: VecDeque<(SimTime, f64)>,
+    /// Running sum of the sample values (O(1) windowed mean).
+    sum: f64,
+    last_scale_at: Option<SimTime>,
+}
+
+impl FleetController {
+    /// A controller for `n_pairs` pairs; the first
+    /// `initial_pairs.clamp(min_pairs, n_pairs)` start active, the rest
+    /// standby.
+    pub fn new(n_pairs: usize, cfg: AutoscaleConfig) -> FleetController {
+        assert!(n_pairs > 0, "fleet controller needs at least one pair");
+        let initial = cfg.initial_pairs.clamp(cfg.min_pairs.max(1), n_pairs);
+        let states = (0..n_pairs)
+            .map(|i| if i < initial { PairState::Active } else { PairState::Standby })
+            .collect();
+        FleetController { cfg, states, samples: VecDeque::new(), sum: 0.0, last_scale_at: None }
+    }
+
+    /// Pair `i` currently receives new work.
+    pub fn is_active(&self, i: usize) -> bool {
+        self.states[i] == PairState::Active
+    }
+
+    /// Pair `i` is draining toward retirement.
+    pub fn is_draining(&self, i: usize) -> bool {
+        self.states[i] == PairState::Draining
+    }
+
+    /// Pairs currently receiving new work.
+    pub fn n_active(&self) -> usize {
+        self.states.iter().filter(|s| **s == PairState::Active).count()
+    }
+
+    /// Observe the router's per-pair outstanding-token backlog at `t`
+    /// and return at most one scaling action.
+    ///
+    /// The cluster calls this once per arrival; between arrivals the
+    /// fleet has no reason to grow (no queue pressure) and shrinking can
+    /// wait for the next call, so no separate timer is needed.
+    pub fn decide(&mut self, t: SimTime, outstanding: &[f64]) -> Option<ScaleDecision> {
+        let n_active = self.n_active().max(1);
+        let total: f64 = self
+            .states
+            .iter()
+            .zip(outstanding)
+            .filter(|(s, _)| **s == PairState::Active)
+            .map(|(_, o)| *o)
+            .sum();
+        let horizon = SimTime::from_secs_f64(self.cfg.window_s);
+        while let Some(&(ts, v)) = self.samples.front() {
+            if ts.0 + horizon.0 < t.0 {
+                self.sum -= v;
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+        let per_active = total / n_active as f64;
+        self.samples.push_back((t, per_active));
+        self.sum += per_active;
+        let mean = self.sum / self.samples.len() as f64;
+
+        if let Some(last) = self.last_scale_at {
+            if t.0 < last.after_secs(self.cfg.cooldown_s).0 {
+                return None;
+            }
+        }
+        if mean > self.cfg.scale_up_backlog {
+            // Lowest-index standby first: retired pairs are reused in a
+            // fixed order, keeping runs deterministic.
+            let target = self.states.iter().position(|s| *s == PairState::Standby)?;
+            self.states[target] = PairState::Active;
+            self.last_scale_at = Some(t);
+            return Some(ScaleDecision::Activate(target));
+        }
+        if mean < self.cfg.scale_down_backlog
+            && self.n_active() > self.cfg.min_pairs.max(1)
+            && !self.states.contains(&PairState::Draining)
+        {
+            // Drain the emptiest active pair (ties to the highest index,
+            // so pair 0 stays the fleet's stable core).
+            let mut victim: Option<(usize, f64)> = None;
+            for (i, s) in self.states.iter().enumerate() {
+                if *s == PairState::Active
+                    && victim.map_or(true, |(_, b)| outstanding[i] <= b)
+                {
+                    victim = Some((i, outstanding[i]));
+                }
+            }
+            let (target, _) = victim?;
+            self.states[target] = PairState::Draining;
+            self.last_scale_at = Some(t);
+            return Some(ScaleDecision::Drain(target));
+        }
+        None
+    }
+
+    /// A draining pair's last in-flight request finished: it is now
+    /// standby and may be re-activated by a later scale-up.
+    pub fn on_pair_drained(&mut self, i: usize) {
+        debug_assert_eq!(self.states[i], PairState::Draining);
+        self.states[i] = PairState::Standby;
+    }
+
+    /// Restore the t=0 state (initial actives, empty window).
+    pub fn reset(&mut self) {
+        let initial = self.cfg.initial_pairs.clamp(self.cfg.min_pairs.max(1), self.states.len());
+        for (i, s) in self.states.iter_mut().enumerate() {
+            *s = if i < initial { PairState::Active } else { PairState::Standby };
+        }
+        self.samples.clear();
+        self.sum = 0.0;
+        self.last_scale_at = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_pairs: 1,
+            initial_pairs: 1,
+            window_s: 1.0,
+            scale_up_backlog: 1000.0,
+            scale_down_backlog: 100.0,
+            cooldown_s: 0.5,
+        }
+    }
+
+    fn at(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn scales_up_on_sustained_backlog_and_respects_cooldown() {
+        let mut ctl = FleetController::new(3, cfg());
+        assert_eq!(ctl.n_active(), 1);
+        // One hot sample pushes the windowed mean over the threshold.
+        let d = ctl.decide(at(0.1), &[5000.0, 0.0, 0.0]);
+        assert_eq!(d, Some(ScaleDecision::Activate(1)));
+        assert!(ctl.is_active(1));
+        // Still hot, but inside the cooldown: no second action.
+        assert_eq!(ctl.decide(at(0.2), &[5000.0, 5000.0, 0.0]), None);
+        // Past the cooldown the next standby pair activates.
+        let d = ctl.decide(at(0.7), &[5000.0, 5000.0, 0.0]);
+        assert_eq!(d, Some(ScaleDecision::Activate(2)));
+        assert_eq!(ctl.n_active(), 3);
+    }
+
+    #[test]
+    fn drains_emptiest_pair_and_reuses_it_after_retirement() {
+        let mut c = cfg();
+        c.initial_pairs = 3;
+        let mut ctl = FleetController::new(3, c);
+        assert_eq!(ctl.n_active(), 3);
+        // Idle fleet: drain the emptiest (ties → highest index).
+        let d = ctl.decide(at(0.1), &[50.0, 10.0, 10.0]);
+        assert_eq!(d, Some(ScaleDecision::Drain(2)));
+        assert!(ctl.is_draining(2));
+        // Only one pair drains at a time, even past the cooldown.
+        assert_eq!(ctl.decide(at(1.0), &[10.0, 10.0, 5.0]), None);
+        ctl.on_pair_drained(2);
+        assert_eq!(ctl.n_active(), 2);
+        // The retired pair is the next scale-up target.
+        let d = ctl.decide(at(2.0), &[9000.0, 9000.0, 0.0]);
+        assert_eq!(d, Some(ScaleDecision::Activate(2)));
+    }
+
+    #[test]
+    fn never_drains_below_min_pairs() {
+        let mut c = cfg();
+        c.min_pairs = 2;
+        c.initial_pairs = 2;
+        c.cooldown_s = 0.0;
+        let mut ctl = FleetController::new(3, c);
+        for k in 1..20 {
+            assert_eq!(ctl.decide(at(k as f64), &[0.0, 0.0, 0.0]), None);
+        }
+        assert_eq!(ctl.n_active(), 2);
+    }
+
+    #[test]
+    fn window_forgets_old_samples() {
+        let mut c = cfg();
+        c.cooldown_s = 0.0;
+        let mut ctl = FleetController::new(2, c);
+        // A burst inflates the mean and activates pair 1...
+        let d = ctl.decide(at(0.1), &[8000.0, 0.0]);
+        assert_eq!(d, Some(ScaleDecision::Activate(1)));
+        // ...but once the window slides past the burst sample, only the
+        // idle observation remains and the emptier pair drains.
+        let d = ctl.decide(at(3.0), &[10.0, 0.0]);
+        assert_eq!(d, Some(ScaleDecision::Drain(1)));
+        ctl.on_pair_drained(1);
+        // At the fleet minimum nothing further happens.
+        assert_eq!(ctl.decide(at(4.0), &[10.0, 0.0]), None);
+        assert_eq!(ctl.n_active(), 1);
+    }
+
+    #[test]
+    fn reset_restores_initial_states() {
+        let mut ctl = FleetController::new(3, cfg());
+        ctl.decide(at(0.1), &[5000.0, 0.0, 0.0]);
+        assert_eq!(ctl.n_active(), 2);
+        ctl.reset();
+        assert_eq!(ctl.n_active(), 1);
+        assert!(ctl.is_active(0));
+        assert!(!ctl.is_active(1));
+    }
+
+    #[test]
+    fn apply_toml_overlays_every_key() {
+        let doc = toml::parse(
+            "[autoscale]\nmin_pairs = 2\ninitial_pairs = 3\nwindow_s = 4.0\n\
+             scale_up_backlog = 5000\nscale_down_backlog = 500\ncooldown_s = 2.5\n",
+        )
+        .expect("parse");
+        let mut c = AutoscaleConfig::default();
+        c.apply_toml(&doc);
+        assert_eq!(c.min_pairs, 2);
+        assert_eq!(c.initial_pairs, 3);
+        assert_eq!(c.window_s, 4.0);
+        assert_eq!(c.scale_up_backlog, 5000.0);
+        assert_eq!(c.scale_down_backlog, 500.0);
+        assert_eq!(c.cooldown_s, 2.5);
+    }
+}

@@ -33,6 +33,51 @@
 //! the resident pair, releases residency when a session's final turn
 //! completes (or a turn sheds and the conversation aborts), and reports
 //! `Report::{n_kv_hits, kv_hit_rate, prefill_tokens_saved}` on drain.
+//!
+//! With a [`FleetController`] attached ([`ClusterSystem::with_autoscale`])
+//! the active pair set becomes elastic: each arrival first feeds the
+//! router's live backlog to the controller, which may *activate* a
+//! standby pair (it rejoins the router's load index and starts taking
+//! work at that instant) or *drain* an active one.  A draining pair
+//! stops receiving new requests immediately but is retired only when its
+//! last in-flight request finishes — its resident sessions are evicted
+//! at that point, never mid-flight — so scaling actions can never lose
+//! or duplicate a request (`tests/autoscale.rs` pins conservation and
+//! determinism).  Scale actions surface in the event stream as
+//! [`SystemEvent::ScaleUp`] / [`SystemEvent::ScaleDown`] and are counted
+//! in `Report::{n_scale_ups, n_scale_downs}`.  Without a controller the
+//! cluster behaves — byte for byte — as before.
+//!
+//! # Example
+//!
+//! ```
+//! use cronus::config::topology::ClusterConfig;
+//! use cronus::cronus::router::RoutePolicy;
+//! use cronus::simgpu::model_desc::LLAMA3_8B;
+//! use cronus::systems::cluster::ClusterSystem;
+//! use cronus::systems::driver::replay_trace;
+//! use cronus::systems::AutoscaleConfig;
+//! use cronus::workload::arrival::{stamp, ArrivalProcess};
+//! use cronus::workload::azure::{generate, AzureTraceConfig};
+//!
+//! let trace = stamp(&generate(20, &AzureTraceConfig::default(), 7), ArrivalProcess::AllAtOnce);
+//! let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+//!
+//! // A fixed two-pair fleet...
+//! let mut fixed = ClusterSystem::new(cfg.clone(), RoutePolicy::LeastOutstandingTokens);
+//! let out = replay_trace(&mut fixed, &trace);
+//! assert_eq!(out.report.n_finished, 20);
+//! assert_eq!(out.report.n_scale_ups, 0);
+//!
+//! // ...and the same fleet under queue-driven autoscaling: the burst
+//! // forces the second pair to spin up.
+//! let autoscale = AutoscaleConfig { scale_up_backlog: 512.0, ..Default::default() };
+//! let mut elastic = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+//!     .with_autoscale(autoscale);
+//! let out = replay_trace(&mut elastic, &trace);
+//! assert_eq!(out.report.n_finished, 20);
+//! assert!(out.report.n_scale_ups >= 1);
+//! ```
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -42,8 +87,8 @@ use crate::cronus::router::{RoutePolicy, Router};
 use crate::metrics::Report;
 use crate::simclock::SimTime;
 use crate::systems::{
-    build_system, drain_pending_into, earliest_instant, Admission, InstanceStat,
-    RunOutcome, ServingSystem, SystemEvent,
+    build_system, drain_pending_into, earliest_instant, Admission, AutoscaleConfig,
+    FleetController, InstanceStat, RunOutcome, ScaleDecision, ServingSystem, SystemEvent,
 };
 use crate::util::fxhash::FxHashMap;
 use crate::workload::{Request, NO_SESSION};
@@ -133,6 +178,14 @@ pub struct ClusterSystem {
     systems: Vec<Box<dyn ServingSystem>>,
     /// In-flight requests by id.
     assigned: FxHashMap<u64, AssignedReq>,
+    /// Elastic fleet controller; `None` keeps the pair set fixed (and
+    /// the whole autoscale path inert — behavior is byte-identical to a
+    /// controller-less cluster).
+    autoscale: Option<FleetController>,
+    /// In-flight request count per pair (drain-before-retire tracking).
+    inflight: Vec<usize>,
+    n_scale_ups: usize,
+    n_scale_downs: usize,
     routed_counts: Vec<u64>,
     /// Requests shed by the router itself (SLO admission), not by pairs.
     n_router_rejected: usize,
@@ -167,6 +220,10 @@ impl ClusterSystem {
             router,
             systems,
             assigned: FxHashMap::default(),
+            autoscale: None,
+            inflight: vec![0; n],
+            n_scale_ups: 0,
+            n_scale_downs: 0,
             routed_counts: vec![0; n],
             n_router_rejected: 0,
             pending: Vec::new(),
@@ -182,6 +239,48 @@ impl ClusterSystem {
     pub fn with_slo_ttft(mut self, slo_ttft_s: Option<f64>) -> ClusterSystem {
         self.slo_ttft_s = slo_ttft_s;
         self
+    }
+
+    /// Attach a queue-driven [`FleetController`]: pairs beyond its
+    /// `initial_pairs` start standby (masked out of routing) and the
+    /// active set grows and shrinks with the router's backlog.
+    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> ClusterSystem {
+        let ctl = FleetController::new(self.cfg.n_pairs(), cfg);
+        for i in 0..self.cfg.n_pairs() {
+            self.router.set_pair_active(i, ctl.is_active(i));
+        }
+        self.autoscale = Some(ctl);
+        self
+    }
+
+    /// Feed the router's live backlog to the fleet controller at arrival
+    /// instant `t` and execute at most one scaling action.
+    ///
+    /// Activation takes effect immediately (the pair rejoins the load
+    /// index before this arrival is routed).  A drain masks the pair out
+    /// of routing now; if it is already empty it retires on the spot,
+    /// otherwise [`collect_until`](Self::collect_until) retires it when
+    /// its last in-flight request completes.
+    fn autoscale_tick(&mut self, t: SimTime) {
+        let Some(ctl) = self.autoscale.as_mut() else { return };
+        let outstanding = self.router.outstanding_tokens();
+        match ctl.decide(t, &outstanding) {
+            Some(ScaleDecision::Activate(i)) => {
+                self.router.set_pair_active(i, true);
+                self.n_scale_ups += 1;
+                self.pending.push(SystemEvent::ScaleUp { pair: i, t });
+            }
+            Some(ScaleDecision::Drain(i)) => {
+                self.router.set_pair_active(i, false);
+                if self.inflight[i] == 0 {
+                    ctl.on_pair_drained(i);
+                    self.router.evict_pair_residency(i);
+                    self.n_scale_downs += 1;
+                    self.pending.push(SystemEvent::ScaleDown { pair: i, t });
+                }
+            }
+            None => {}
+        }
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -218,6 +317,12 @@ impl ClusterSystem {
         // merge tie-break in the old per-pair iteration order.
         due.sort_unstable();
 
+        // Draining pairs that empty in this batch, with the instant of
+        // the terminal event that emptied them.  Never pushed to when
+        // autoscaling is off, so the fixed-fleet hot path stays
+        // allocation-free.
+        let mut retired: Vec<(usize, SimTime)> = Vec::new();
+
         for &i in &due {
             let mut buf = std::mem::take(&mut self.scratch[i]);
             debug_assert!(buf.is_empty());
@@ -235,6 +340,14 @@ impl ClusterSystem {
                         let shed = matches!(ev, SystemEvent::Shed { .. });
                         if a.session_id != NO_SESSION && (a.final_turn || shed) {
                             self.router.release_session(a.session_id);
+                        }
+                        self.inflight[i] -= 1;
+                        if self.inflight[i] == 0
+                            && self.autoscale.as_ref().is_some_and(|c| c.is_draining(i))
+                        {
+                            // Drain-before-retire: the pair's last
+                            // in-flight request just left the system.
+                            retired.push((i, ev.time()));
                         }
                     }
                 }
@@ -277,6 +390,19 @@ impl ClusterSystem {
         }
         due.clear();
         self.due = due;
+
+        // Retire the pairs that drained empty: back to standby, resident
+        // sessions evicted, and a ScaleDown stitched into the merged
+        // stream at the retirement instant (a rare O(n) insert that
+        // keeps `pending` time-sorted).
+        for (pair, retire_t) in retired {
+            let ctl = self.autoscale.as_mut().expect("retired pairs imply a controller");
+            ctl.on_pair_drained(pair);
+            self.router.evict_pair_residency(pair);
+            self.n_scale_downs += 1;
+            let pos = self.pending.partition_point(|e| e.time() <= retire_t);
+            self.pending.insert(pos, SystemEvent::ScaleDown { pair, t: retire_t });
+        }
     }
 }
 
@@ -289,6 +415,9 @@ impl ServingSystem for ClusterSystem {
         // Bring every pair up to just before the arrival so the router
         // routes on what has actually completed by now.
         self.collect_until(SimTime(t.0.saturating_sub(1)));
+        // Let the fleet controller react to the live backlog before this
+        // arrival is admitted or routed.
+        self.autoscale_tick(t);
 
         if let Some(slo) = self.slo_ttft_s {
             match self.router.slo_admission(t, &req, slo) {
@@ -340,6 +469,7 @@ impl ServingSystem for ClusterSystem {
                     },
                 );
                 self.routed_counts[pair] += 1;
+                self.inflight[pair] += 1;
                 Admission::Accepted
             }
             Admission::Rejected { reason } => {
@@ -424,6 +554,8 @@ impl ServingSystem for ClusterSystem {
         } else {
             0.0
         };
+        report.n_scale_ups = self.n_scale_ups;
+        report.n_scale_downs = self.n_scale_downs;
 
         // Reset for a fresh run (each drained pair reset itself, so
         // every calendar key is gone).  `Router::reset` keeps the
@@ -434,6 +566,17 @@ impl ServingSystem for ClusterSystem {
         self.routed_counts.iter_mut().for_each(|c| *c = 0);
         self.n_router_rejected = 0;
         self.calendar = EventCalendar::new(self.cfg.n_pairs());
+        self.inflight.iter_mut().for_each(|c| *c = 0);
+        self.n_scale_ups = 0;
+        self.n_scale_downs = 0;
+        // `Router::reset` re-activated every pair; restore the
+        // controller's t=0 standby mask for the next run.
+        if let Some(ctl) = self.autoscale.as_mut() {
+            ctl.reset();
+            for i in 0..self.cfg.n_pairs() {
+                self.router.set_pair_active(i, ctl.is_active(i));
+            }
+        }
 
         RunOutcome { report, instances }
     }

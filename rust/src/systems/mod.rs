@@ -25,6 +25,7 @@
 //! [`driver::replay_trace`] replays a recorded trace through this
 //! lifecycle and reproduces the old whole-trace semantics exactly.
 
+pub mod autoscale;
 pub mod cluster;
 pub mod driver;
 
@@ -37,6 +38,7 @@ use crate::metrics::{Collector, Report, ReqId};
 use crate::simclock::SimTime;
 use crate::workload::Request;
 
+pub use autoscale::{AutoscaleConfig, FleetController, PairState, ScaleDecision};
 pub use cluster::{build_cluster_system, ClusterSystem};
 pub use driver::{
     closed_loop, closed_loop_collect, replay_trace, replay_trace_collect,
@@ -105,6 +107,12 @@ pub enum SystemEvent {
     Finished { id: ReqId, t: SimTime },
     /// The request was dropped without being served.
     Shed { id: ReqId, t: SimTime, reason: String },
+    /// Autoscaling activated standby pair `pair` (cluster systems only).
+    ScaleUp { pair: usize, t: SimTime },
+    /// Autoscaling finished draining pair `pair` and retired it to
+    /// standby (cluster systems only).  Emitted at the instant the last
+    /// in-flight request on the pair completed.
+    ScaleDown { pair: usize, t: SimTime },
 }
 
 impl SystemEvent {
@@ -113,16 +121,22 @@ impl SystemEvent {
             SystemEvent::FirstToken { t, .. }
             | SystemEvent::Token { t, .. }
             | SystemEvent::Finished { t, .. }
-            | SystemEvent::Shed { t, .. } => *t,
+            | SystemEvent::Shed { t, .. }
+            | SystemEvent::ScaleUp { t, .. }
+            | SystemEvent::ScaleDown { t, .. } => *t,
         }
     }
 
+    /// The request the event belongs to.  Scale events carry no request;
+    /// they report the affected pair index instead.
     pub fn id(&self) -> ReqId {
         match self {
             SystemEvent::FirstToken { id, .. }
             | SystemEvent::Token { id, .. }
             | SystemEvent::Finished { id, .. }
             | SystemEvent::Shed { id, .. } => *id,
+            SystemEvent::ScaleUp { pair, .. }
+            | SystemEvent::ScaleDown { pair, .. } => *pair as ReqId,
         }
     }
 }

@@ -1,0 +1,199 @@
+//! Elastic-fleet integration pins: conservation under scale-down (a
+//! retiring pair never loses or duplicates a request), byte-identical
+//! determinism of scaled runs, inertness of a controller that never
+//! triggers, and the planner's never-worse-than-preset guarantee.
+
+use std::collections::HashMap;
+
+use cronus::config::topology::ClusterConfig;
+use cronus::config::toml;
+use cronus::cronus::router::RoutePolicy;
+use cronus::launcher::bursty_trace;
+use cronus::planner::{better, plan, PlannerConfig};
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::systems::cluster::ClusterSystem;
+use cronus::systems::driver::replay_trace_collect;
+use cronus::systems::{AutoscaleConfig, SystemEvent};
+use cronus::workload::azure::{generate, AzureTraceConfig};
+use cronus::workload::Request;
+
+/// Thresholds tuned so a 40 rps burst forces scale-ups and a sparse
+/// tail forces scale-downs within one run.
+fn twitchy() -> AutoscaleConfig {
+    AutoscaleConfig {
+        min_pairs: 1,
+        initial_pairs: 1,
+        window_s: 0.5,
+        scale_up_backlog: 3000.0,
+        scale_down_backlog: 1500.0,
+        cooldown_s: 0.2,
+    }
+}
+
+/// 60 requests at 40 rps, then 20 at one request per 10 s: the burst
+/// saturates a single pair within half a second and the tail leaves at
+/// most a request or two in flight, so with [`twitchy`] thresholds the
+/// fleet must both grow and shrink during the run.
+fn burst_then_sparse_tail(seed: u64) -> Vec<Request> {
+    let mut trace = generate(80, &AzureTraceConfig::default(), seed);
+    for (i, r) in trace.iter_mut().enumerate() {
+        r.arrival_ns = if i < 60 {
+            i as u64 * 25_000_000
+        } else {
+            60 * 25_000_000 + (i as u64 - 60) * 10_000_000_000
+        };
+    }
+    trace
+}
+
+/// FNV-1a digest over the (tag, id, timestamp) stream, scale events
+/// included (tags 5/6) — the same byte-level pin the determinism suites
+/// apply to the fixed-fleet paths.
+fn digest_stream(events: &[SystemEvent]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for ev in events {
+        let (tag, id, t) = match ev {
+            SystemEvent::FirstToken { id, t } => (1u64, *id, t.0),
+            SystemEvent::Token { id, t } => (2, *id, t.0),
+            SystemEvent::Finished { id, t } => (3, *id, t.0),
+            SystemEvent::Shed { id, t, .. } => (4, *id, t.0),
+            SystemEvent::ScaleUp { pair, t } => (5, *pair as u64, t.0),
+            SystemEvent::ScaleDown { pair, t } => (6, *pair as u64, t.0),
+        };
+        mix(tag);
+        mix(id);
+        mix(t);
+    }
+    h
+}
+
+#[test]
+fn scaling_conserves_every_request() {
+    let trace = burst_then_sparse_tail(11);
+    let cfg = ClusterConfig::mixed(4, LLAMA3_8B);
+    let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+        .with_autoscale(twitchy());
+    let (out, events, stats) = replay_trace_collect(&mut sys, &trace);
+
+    // The run actually exercised both directions.
+    let ups = events.iter().filter(|e| matches!(e, SystemEvent::ScaleUp { .. })).count();
+    let downs = events.iter().filter(|e| matches!(e, SystemEvent::ScaleDown { .. })).count();
+    assert!(ups >= 1, "burst never scaled up");
+    assert!(downs >= 1, "trickle never scaled down");
+    assert_eq!(out.report.n_scale_ups, ups);
+    assert_eq!(out.report.n_scale_downs, downs);
+
+    // Conservation: every trace request terminates exactly once — no
+    // request is lost or duplicated by activation or drain-then-retire.
+    let mut terminal: HashMap<u64, u32> = HashMap::new();
+    for ev in &events {
+        if let SystemEvent::Finished { id, .. } | SystemEvent::Shed { id, .. } = ev {
+            *terminal.entry(*id).or_insert(0) += 1;
+        }
+    }
+    assert_eq!(terminal.len(), trace.len());
+    for r in &trace {
+        assert_eq!(terminal.get(&r.id), Some(&1), "request {} not conserved", r.id);
+    }
+    assert_eq!(stats.n_accepted, trace.len());
+    assert_eq!(out.report.n_finished, trace.len());
+
+    // Scale events stay time-ordered within the merged stream.
+    assert!(events.windows(2).all(|w| w[0].time() <= w[1].time()));
+}
+
+#[test]
+fn scaled_runs_are_byte_identical() {
+    let trace = bursty_trace(90, 23, 40.0);
+    let run = || {
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::KvAffinity).with_autoscale(twitchy());
+        replay_trace_collect(&mut sys, &trace)
+    };
+    let (out_a, events_a, stats_a) = run();
+    let (out_b, events_b, stats_b) = run();
+    assert!(
+        events_a.iter().any(|e| matches!(e, SystemEvent::ScaleUp { .. })),
+        "determinism pin must cover scale events"
+    );
+    assert_eq!(events_a, events_b, "scaled event streams diverged");
+    assert_eq!(digest_stream(&events_a), digest_stream(&events_b));
+    assert_eq!(stats_a, stats_b);
+    assert_eq!(out_a.report.makespan_s, out_b.report.makespan_s);
+    assert_eq!(out_a.report.ttft_p99_s, out_b.report.ttft_p99_s);
+    assert_eq!(out_a.report.n_scale_ups, out_b.report.n_scale_ups);
+    assert_eq!(out_a.report.n_scale_downs, out_b.report.n_scale_downs);
+}
+
+#[test]
+fn inert_controller_matches_fixed_fleet_byte_for_byte() {
+    // All pairs active from t=0 and thresholds no backlog can cross:
+    // the controller observes but never acts, and the run must be
+    // byte-identical to a plain fixed-fleet cluster.
+    let trace = bursty_trace(60, 31, 40.0);
+    let inert = AutoscaleConfig {
+        min_pairs: 3,
+        initial_pairs: 3,
+        scale_up_backlog: f64::INFINITY,
+        scale_down_backlog: 0.0,
+        ..Default::default()
+    };
+    let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+    let mut fixed = ClusterSystem::new(cfg.clone(), RoutePolicy::LeastOutstandingTokens);
+    let mut elastic = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+        .with_autoscale(inert);
+    let (out_f, events_f, stats_f) = replay_trace_collect(&mut fixed, &trace);
+    let (out_e, events_e, stats_e) = replay_trace_collect(&mut elastic, &trace);
+    assert_eq!(events_f, events_e, "inert controller changed the event stream");
+    assert_eq!(digest_stream(&events_f), digest_stream(&events_e));
+    assert_eq!(stats_f, stats_e);
+    assert_eq!(out_f.report.makespan_s, out_e.report.makespan_s);
+    assert_eq!(out_f.report.ttft_p99_s, out_e.report.ttft_p99_s);
+    assert_eq!(out_e.report.n_scale_ups, 0);
+    assert_eq!(out_e.report.n_scale_downs, 0);
+}
+
+#[test]
+fn planner_never_loses_to_the_mixed_preset_at_equal_budget() {
+    // Budget exactly the 3-pair mixed() preset's cost: the preset is a
+    // feasible candidate (and is seeded into the beam), so the planned
+    // fleet must match or beat it on throughput-then-TTFT.
+    let preset = ClusterConfig::mixed(3, LLAMA3_8B);
+    let cfg = PlannerConfig {
+        budget_cost_per_hour: Some(preset.cost_per_hour()),
+        beam_width: 2,
+        max_pairs: 3,
+        n_requests: 25,
+        ..Default::default()
+    };
+    let outcome = plan(&cfg).expect("the preset itself fits the budget");
+    let baseline = outcome.baseline.as_ref().expect("preset prefix fits");
+    assert_eq!(baseline.cluster.n_pairs(), 3);
+    assert!(
+        !better(baseline, &outcome.best),
+        "planned fleet lost to the preset: {:.3} rps / {:.3} s vs {:.3} rps / {:.3} s",
+        outcome.best.throughput_rps,
+        outcome.best.ttft_p99_s,
+        baseline.throughput_rps,
+        baseline.ttft_p99_s
+    );
+    assert!(outcome.best.cost_per_hour <= preset.cost_per_hour() + 1e-9);
+
+    // The emitted TOML loads back through the config layer unchanged.
+    let doc = toml::parse(&outcome.toml).expect("planner emits parseable TOML");
+    let mut rt = ClusterConfig::default();
+    rt.apply_toml(&doc).expect("planner TOML applies");
+    assert_eq!(rt.n_pairs(), outcome.best.cluster.n_pairs());
+    for (a, b) in rt.pairs.iter().zip(&outcome.best.cluster.pairs) {
+        assert_eq!(a.deployment.high_gpu, b.deployment.high_gpu);
+        assert_eq!(a.deployment.low_gpu, b.deployment.low_gpu);
+        assert_eq!(a.system, b.system);
+        assert_eq!(a.rate_share, b.rate_share);
+    }
+}

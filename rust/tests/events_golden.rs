@@ -605,6 +605,8 @@ mod system_stream {
                 SystemEvent::Token { id, t } => (2, *id, t.0),
                 SystemEvent::Finished { id, t } => (3, *id, t.0),
                 SystemEvent::Shed { id, t, .. } => (4, *id, t.0),
+                SystemEvent::ScaleUp { pair, t } => (5, *pair as u64, t.0),
+                SystemEvent::ScaleDown { pair, t } => (6, *pair as u64, t.0),
             };
             d.u64(tag);
             d.u64(id);
