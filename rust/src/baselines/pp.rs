@@ -25,6 +25,14 @@
 //! The pipeline is online state (see [`crate::systems::ServingSystem`]):
 //! arrivals join a microbatch group at `submit` time and the two stages
 //! are stepped by `advance`.
+//!
+//! Like DP (see [`crate::baselines::dp`]), the group dispatcher honours
+//! [`Request::kv_credit`] (ROADMAP DP/PP prefix-credit item, PP half):
+//! a follow-up turn routed back to the pair holding its session's
+//! prefix KV skips that prefix outright — both stages hold their layer
+//! share of the resident KV, so the prefix is neither recomputed nor
+//! transferred and KV-affinity clusters save prefill on PP pairs
+//! exactly as they do on DP and Cronus pairs.
 
 use std::collections::VecDeque;
 
@@ -285,7 +293,20 @@ impl ServingSystem for PpSystem {
             std::cmp::Ordering::Less => 0,
             std::cmp::Ordering::Greater => 1,
         };
-        st.groups[g].submit(EngineRequest::whole(req.id, req.input_len, req.output_len));
+        // A resident session prefix (granted by the cluster router via
+        // `Request::kv_credit`) is skipped outright: each stage already
+        // holds its layer share of that KV, so nothing is recomputed or
+        // transferred.  Sessionless requests carry a zero credit and
+        // take the exact `whole`-request path.
+        let mut req = req;
+        req.clamp_kv_credit();
+        st.groups[g].submit(EngineRequest::with_prefix_credit(
+            req.id,
+            req.input_len,
+            req.output_len,
+            req.kv_credit,
+            req.kv_credit,
+        ));
         st.pump();
         Admission::Accepted
     }
@@ -404,6 +425,51 @@ mod tests {
             lo.iteration_time(&shape) > hi.iteration_time(&shape),
             "low-end decode stage should dominate"
         );
+    }
+
+    #[test]
+    fn pp_kv_credit_skips_resident_prefix_prefill() {
+        use crate::systems::prefill_tokens_executed;
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        // Same follow-up turn, cold (no credit) vs warm (600 of the 1000
+        // prompt tokens resident from the previous turn).
+        let mut cold_req = crate::workload::Request::new(1, 0, 1000, 16);
+        cold_req.session_id = 1;
+        cold_req.prefix_len = 600;
+        let mut warm_req = cold_req;
+        warm_req.kv_credit = 600;
+
+        let run = |req| replay_trace(&mut PpSystem::new(cfg.clone()), &[req]);
+        let cold = run(cold_req);
+        let warm = run(warm_req);
+        assert_eq!(cold.report.n_finished, 1);
+        assert_eq!(warm.report.n_finished, 1);
+        // Executed prefill = prompt minus the resident credit, exactly —
+        // and nothing moved over the link (the prefix was resident, not
+        // transferred).
+        assert_eq!(prefill_tokens_executed(&cold), 1000);
+        assert_eq!(prefill_tokens_executed(&warm), 400);
+        let received: u64 =
+            warm.instances.iter().map(|i| i.tokens_kv_received).sum();
+        assert_eq!(received, 0);
+        // Skipping 600 prefill tokens can only help the finish time.
+        assert!(warm.report.makespan_s <= cold.report.makespan_s);
+    }
+
+    #[test]
+    fn pp_clamps_oversized_credit() {
+        // A credit exceeding the declared prefix (or the whole prompt)
+        // must be clamped, not panic the engine's invariants.
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let mut req = crate::workload::Request::new(1, 0, 500, 8);
+        req.session_id = 3;
+        req.prefix_len = 499;
+        req.kv_credit = 10_000;
+        let out = replay_trace(&mut PpSystem::new(cfg), &[req]);
+        assert_eq!(out.report.n_finished, 1);
+        use crate::systems::prefill_tokens_executed;
+        // Clamped to prefix_len (499): exactly one prompt token computed.
+        assert_eq!(prefill_tokens_executed(&out), 1);
     }
 
     #[test]

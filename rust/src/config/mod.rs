@@ -6,10 +6,11 @@
 //!
 //! One parsed [`toml::TomlDoc`] feeds every typed config through its
 //! `apply_toml` method: `[topology]` → [`ClusterConfig`], `[autoscale]`
-//! → `systems::AutoscaleConfig`, and `[cluster]`/`[engine]`/`[dp]`/
-//! `[balancer]` → [`DeploymentConfig`].  The repo-root `CONFIG.md` is
-//! the key-by-key reference; the pair-spec grammar is
-//! `<high>+<low>[:<rate_share>][@<system>]`.
+//! → `systems::AutoscaleConfig`, `[classes]` →
+//! `qos::ClassRegistry` (multi-tenant service classes), and
+//! `[cluster]`/`[engine]`/`[dp]`/`[balancer]` → [`DeploymentConfig`].
+//! The repo-root `CONFIG.md` is the key-by-key reference; the pair-spec
+//! grammar is `<high>+<low>[:<rate_share>][@<system>][=<model>]`.
 //!
 //! # Example
 //!

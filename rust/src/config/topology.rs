@@ -19,8 +19,12 @@
 //! ```
 //!
 //! Each pair spec is `<high_gpu>+<low_gpu>` with an optional
-//! `:<rate_share>` suffix and an optional `@<system>` suffix (`cronus`,
-//! `dp`, `pp`, `disagg-hl`, `disagg-lh`; Cronus when omitted).
+//! `:<rate_share>` suffix, an optional `@<system>` suffix (`cronus`,
+//! `dp`, `pp`, `disagg-hl`, `disagg-lh`; Cronus when omitted), and an
+//! optional `=<model>` suffix overriding `topology.model` for that pair
+//! alone — a multi-model fleet for the QoS router's model-aware
+//! placement (`"a100+a30=qwen2-7b"` serves Qwen2-7B while the rest of
+//! the fleet serves the topology model).
 //! [`ClusterConfig::to_toml`] emits this exact grammar back out — the
 //! topology planner writes its winning fleet through it, and the CI docs
 //! job round-trips the emitted file through [`crate::config::toml`].
@@ -56,9 +60,21 @@ impl PairConfig {
         }
     }
 
-    /// Parse `"a100+a10"`, `"a100+a10:2.0"` (rate share suffix) or
-    /// `"a100+a10:2.0@dp"` (serving-system suffix).
+    /// Parse `"a100+a10"`, `"a100+a10:2.0"` (rate share suffix),
+    /// `"a100+a10:2.0@dp"` (serving-system suffix) or
+    /// `"a100+a10=qwen2-7b"` (per-pair served-model override).
     pub fn from_spec(text: &str, model: ModelDesc) -> Result<PairConfig, String> {
+        // The model override is the outermost suffix: strip it first so
+        // the remaining grammar is exactly the pre-override one.
+        let (text2, model) = match text.rsplit_once('=') {
+            Some((r, m)) => {
+                let desc = model_desc::by_name(m.trim())
+                    .ok_or_else(|| format!("unknown model '{}' in '{text}'", m.trim()))?;
+                (r, desc)
+            }
+            None => (text, model),
+        };
+        let text = text2;
         let (rest, system) = match text.rsplit_once('@') {
             Some((r, s)) => {
                 let kind = SystemKind::from_name(s.trim())
@@ -109,6 +125,19 @@ impl PairConfig {
         if self.system != SystemKind::Cronus {
             s.push('@');
             s.push_str(system_spec_token(self.system));
+        }
+        s
+    }
+
+    /// [`PairConfig::spec`] plus the `=<model>` suffix whenever this
+    /// pair's served model differs from `default_model` (the fleet's
+    /// `topology.model`) — what [`ClusterConfig::to_toml`] emits so
+    /// multi-model fleets round-trip.
+    pub fn spec_with_default(&self, default_model: ModelDesc) -> String {
+        let mut s = self.spec();
+        if self.deployment.model != default_model {
+            s.push('=');
+            s.push_str(self.deployment.model.name);
         }
         s
     }
@@ -235,19 +264,24 @@ impl ClusterConfig {
 
     /// Emit this topology as a `[topology]` TOML section in exactly the
     /// grammar [`ClusterConfig::apply_toml`] reads back (single-line
-    /// `pairs` array — the in-tree parser's requirement).  The model is
-    /// taken from the first pair; the planner always emits single-model
-    /// fleets.
+    /// `pairs` array — the in-tree parser's requirement).  The default
+    /// model is taken from the first pair; pairs serving a different
+    /// model carry an explicit `=<model>` suffix, so multi-model fleets
+    /// round-trip too.
     pub fn to_toml(&self) -> String {
         let model = self
             .pairs
             .first()
-            .map(|p| p.deployment.model.name)
-            .unwrap_or(model_desc::LLAMA3_8B.name);
-        let specs: Vec<String> =
-            self.pairs.iter().map(|p| format!("\"{}\"", p.spec())).collect();
+            .map(|p| p.deployment.model)
+            .unwrap_or(model_desc::LLAMA3_8B);
+        let specs: Vec<String> = self
+            .pairs
+            .iter()
+            .map(|p| format!("\"{}\"", p.spec_with_default(model)))
+            .collect();
         format!(
-            "[topology]\nmodel = \"{model}\"\npairs = [{}]\n",
+            "[topology]\nmodel = \"{}\"\npairs = [{}]\n",
+            model.name,
             specs.join(", ")
         )
     }
@@ -315,6 +349,50 @@ mod tests {
         assert_eq!(p.system, SystemKind::DisaggHighLow);
         assert_eq!(p.rate_share, 2.5);
         assert!(PairConfig::from_spec("a100+a30@warp", LLAMA3_8B).is_err());
+    }
+
+    #[test]
+    fn pair_spec_parses_model_override() {
+        use crate::simgpu::model_desc::QWEN2_7B;
+        let p = PairConfig::from_spec("a100+a30=qwen2-7b", LLAMA3_8B).unwrap();
+        assert_eq!(p.deployment.model, QWEN2_7B);
+        assert_eq!(p.rate_share, 1.0);
+        assert_eq!(p.system, SystemKind::Cronus);
+        // Composes with both earlier suffixes (model is outermost).
+        let p = PairConfig::from_spec("a100+t4:2.5@dp=qwen2-7b", LLAMA3_8B).unwrap();
+        assert_eq!(p.deployment.model, QWEN2_7B);
+        assert_eq!(p.rate_share, 2.5);
+        assert_eq!(p.system, SystemKind::DpChunked);
+        // Omitted: inherits the fleet model.
+        let p = PairConfig::from_spec("a100+a10", LLAMA3_8B).unwrap();
+        assert_eq!(p.deployment.model, LLAMA3_8B);
+        assert!(PairConfig::from_spec("a100+a10=gpt5", LLAMA3_8B).is_err());
+    }
+
+    #[test]
+    fn multi_model_fleet_round_trips_through_toml() {
+        use crate::simgpu::model_desc::QWEN2_7B;
+        let mut c = ClusterConfig::mixed(3, LLAMA3_8B);
+        c.pairs[2].deployment = DeploymentConfig::paper(
+            c.pairs[2].deployment.high_gpu,
+            c.pairs[2].deployment.low_gpu,
+            QWEN2_7B,
+        );
+        let text = c.to_toml();
+        assert!(text.contains("=qwen2-7b"), "override suffix missing: {text}");
+        let doc = toml::parse(&text).unwrap();
+        let mut rt = ClusterConfig::default();
+        rt.apply_toml(&doc).unwrap();
+        assert_eq!(rt.pairs[0].deployment.model, LLAMA3_8B);
+        assert_eq!(rt.pairs[1].deployment.model, LLAMA3_8B);
+        assert_eq!(rt.pairs[2].deployment.model, QWEN2_7B);
+        // A pair matching the fleet model gets no suffix; a differing
+        // one carries exactly the override.
+        assert_eq!(c.pairs[0].spec_with_default(LLAMA3_8B), "a100-80g+a10");
+        assert_eq!(
+            c.pairs[2].spec_with_default(LLAMA3_8B),
+            "a100-80g+a10=qwen2-7b"
+        );
     }
 
     #[test]

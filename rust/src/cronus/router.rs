@@ -61,6 +61,31 @@
 //! (the default) the flag is free: every routing path behaves exactly as
 //! before.
 //!
+//! With a [`ClassRegistry`](crate::qos::ClassRegistry) attached via
+//! [`Router::set_class_registry`] the router is also *QoS-aware*:
+//!
+//! * **Model-aware routing** — every pair carries the model its
+//!   `DeploymentConfig` deploys; a request whose service class pins a
+//!   model is considered only on pairs serving that model.  The filter
+//!   applies uniformly: all four policies' scans, the least-outstanding
+//!   fast path, the affinity target and SLO admission (the cluster
+//!   sheds with a distinct reason when no active pair is compatible,
+//!   via [`Router::has_active_compatible_pair`]).
+//! * **TBT-aware admission** — [`Router::estimated_tbt_inflation`]
+//!   prices the decode-side cost of adding one more stream to a pair:
+//!   the decode batch grows by one sequence and the batch context by
+//!   the request's full context, stretching every in-flight request's
+//!   inter-token gap (the pair's `PerfModel` decode iteration shape
+//!   prices exactly this).  [`Router::tbt_admission`] defers a request
+//!   when on *every* compatible active pair the projected decode
+//!   iteration would blow the strictest TBT-P99 SLO among the classes
+//!   already in flight there — protecting incumbents' decode tails the
+//!   way `slo_admission` protects the arrival's own TTFT.
+//!
+//! Without a registry — or with one holding only the default class and
+//! no TBT SLOs — every QoS path is inert and routing is byte-identical
+//! to the pre-QoS router.
+//!
 //! # Example
 //!
 //! Build a router over a two-pair fleet and dispatch one request:
@@ -85,9 +110,10 @@
 use std::collections::BTreeSet;
 
 use crate::config::topology::ClusterConfig;
-use crate::config::SystemKind;
+use crate::qos::{ClassId, ClassRegistry};
 use crate::simclock::SimTime;
 use crate::simgpu::fit::{calibrate, PrefillCoeffs};
+use crate::simgpu::model_desc::ModelDesc;
 use crate::simgpu::perfmodel::{IterationShape, PerfModel, PrefillSeg};
 use crate::systems::Admission;
 use crate::util::fxhash::FxHashMap;
@@ -96,6 +122,16 @@ use crate::workload::{Request, NO_SESSION};
 /// Fraction of a pair's CPI KV capacity the router is willing to pin for
 /// session prefix residency (the rest stays free for in-flight batches).
 const KV_RESIDENCY_FRAC: f64 = 0.5;
+
+/// Retry hint attached to a TBT-admission deferral: long enough for a
+/// few decode streams to retire, short enough that the driver's retry
+/// budget spans a realistic drain.
+const TBT_RETRY_S: f64 = 0.05;
+
+/// Reference prompt length for [`Router::best_ttft_headroom`] — the
+/// fleet controller's TTFT-headroom probe prices a typical prompt, not
+/// any particular request.
+pub const HEADROOM_PROBE_TOKENS: usize = 512;
 
 /// Routing policy of the cluster frontend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -158,11 +194,24 @@ struct PairLoad {
     /// (capacity-weighted eviction).
     residency_capacity_tokens: u64,
     /// Whether the pair's serving system can exploit a resident prefix
-    /// (the Cronus frontend family and the DP dispatcher, which stamps
-    /// `Request::kv_credit` through to its engines); PP pairs always
-    /// re-prefill through the staged pipeline, so granting them credit
-    /// would fake savings.
+    /// stamped through `Request::kv_credit`.  Every in-tree system
+    /// honours the credit now — the Cronus frontend family and both
+    /// disaggregated baselines from the start, the DP dispatcher and
+    /// the staged PP pipeline since they learned to stamp it through to
+    /// their engines — so this is `true` for every pair; the field
+    /// remains for future systems that re-prefill unconditionally.
     supports_credit: bool,
+    /// Model the pair's deployment serves — requests whose service
+    /// class pins a model are only routed to pairs serving it.
+    model: ModelDesc,
+    /// Decode-side (CPI) performance model, pricing the TBT-aware
+    /// admission estimates.
+    decode_pm: PerfModel,
+    /// Committed-and-not-yet-finished requests (decode streams the TBT
+    /// estimator assumes are batched here).
+    n_streams: u32,
+    /// Sum of those requests' full contexts (input + output tokens).
+    ctx_sum: u64,
     /// Resident sessions ordered by last use — `(last_use, session_id)`
     /// with unique `last_use` values, so `first()` is the exact LRU
     /// victim in O(log S) (this used to be an O(S) scan of the whole
@@ -290,6 +339,13 @@ pub struct Router {
     prefill_tokens_saved: u64,
     /// Follow-up turns (non-empty session prefix) committed.
     n_prefix_routed: u64,
+    // --- QoS (None / default-only registry = all paths inert) ---
+    /// Service classes, when the cluster runs multi-tenant QoS.
+    classes: Option<ClassRegistry>,
+    /// In-flight request count per `[pair][class]` — the TBT admission
+    /// gate derives each pair's strictest incumbent TBT SLO from it.
+    /// Empty until a registry is attached.
+    class_inflight: Vec<Vec<u32>>,
 }
 
 /// Coarse steady-state token throughput of a pair: the CPI running full
@@ -344,13 +400,11 @@ impl Router {
                     residency_capacity_tokens: (cpi_capacity as f64
                         * KV_RESIDENCY_FRAC)
                         as u64,
-                    supports_credit: matches!(
-                        pair.system,
-                        SystemKind::Cronus
-                            | SystemKind::DisaggLowHigh
-                            | SystemKind::DisaggHighLow
-                            | SystemKind::DpChunked
-                    ),
+                    supports_credit: true,
+                    model: d.model,
+                    decode_pm: cpi_pm,
+                    n_streams: 0,
+                    ctx_sum: 0,
                     lru: BTreeSet::new(),
                     active: true,
                 }
@@ -366,11 +420,49 @@ impl Router {
             n_kv_hits: 0,
             prefill_tokens_saved: 0,
             n_prefix_routed: 0,
+            classes: None,
+            class_inflight: Vec::new(),
         }
     }
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
+    }
+
+    /// Attach the cluster's service-class registry: enables model-aware
+    /// routing (classes pinning a model) and TBT-aware admission
+    /// (classes with `slo_tbt_p99_s`).  A registry holding only the
+    /// default class changes nothing.
+    pub fn set_class_registry(&mut self, registry: ClassRegistry) {
+        self.class_inflight = vec![vec![0; registry.len()]; self.pairs.len()];
+        self.classes = Some(registry);
+    }
+
+    /// Model the class of `req` pins the request to, if any.
+    fn required_model(&self, req: &Request) -> Option<ModelDesc> {
+        self.classes.as_ref().and_then(|r| r.get(req.class).model)
+    }
+
+    fn pair_serves(&self, i: usize, need: Option<ModelDesc>) -> bool {
+        need.map_or(true, |m| self.pairs[i].model.name == m.name)
+    }
+
+    /// Whether some *active* pair serves the model `req`'s class pins
+    /// (vacuously true for unconstrained requests).  The cluster sheds
+    /// incompatible requests with a distinct reason before admission.
+    pub fn has_active_compatible_pair(&self, req: &Request) -> bool {
+        match self.required_model(req) {
+            None => true,
+            Some(m) => self
+                .pairs
+                .iter()
+                .any(|p| p.active && p.model.name == m.name),
+        }
+    }
+
+    /// Model served by pair `i` (from its deployment config).
+    pub fn pair_model(&self, i: usize) -> ModelDesc {
+        self.pairs[i].model
     }
 
     /// Reset every piece of load/session state to the just-constructed
@@ -384,9 +476,14 @@ impl Router {
             p.n_routed = 0;
             p.tokens_routed = 0;
             p.resident_tokens = 0;
+            p.n_streams = 0;
+            p.ctx_sum = 0;
             p.lru.clear();
             p.active = true;
             self.load_index.set(i, 0.0);
+        }
+        for ci in &mut self.class_inflight {
+            ci.fill(0);
         }
         self.residency.clear();
         self.use_seq = 0;
@@ -511,6 +608,11 @@ impl Router {
             // turns to it; fall back to the load-based pick (a miss).
             return None;
         }
+        if !self.pair_serves(r.pair, self.required_model(req)) {
+            // The session changed to a class pinning a different model
+            // than the resident pair serves: a miss, never a mismatch.
+            return None;
+        }
         let credit = self.resident_credit(r.pair, req);
         if let Some(slo) = slo {
             if self.estimated_ttft(r.pair, req.input_len - credit) > slo {
@@ -526,12 +628,14 @@ impl Router {
     /// a safety net, not a policy).  Ties break toward the lowest pair
     /// index, keeping the assignment deterministic.
     fn pick(&self, req: &Request, slo: Option<f64>) -> usize {
+        let need = self.required_model(req);
         // Hot path: the unconstrained least-outstanding argmin (also the
         // KvAffinity miss/first-turn fallback) is answered by the load
         // index in O(1) instead of scanning all N pairs.  SLO-filtered
-        // routing still scans — the feasibility filter depends on the
-        // request — as do the other policies' scores.
+        // and model-constrained routing still scan — those filters
+        // depend on the request — as do the other policies' scores.
         if slo.is_none()
+            && need.is_none()
             && matches!(
                 self.policy,
                 RoutePolicy::LeastOutstandingTokens | RoutePolicy::KvAffinity
@@ -552,7 +656,7 @@ impl Router {
         };
         let mut best: Option<(usize, f64)> = None;
         for (i, p) in self.pairs.iter().enumerate() {
-            if !p.active {
+            if !p.active || !self.pair_serves(i, need) {
                 continue;
             }
             if let Some(slo) = slo {
@@ -567,12 +671,14 @@ impl Router {
         }
         match best {
             Some((i, _)) => i,
-            // No active pair met the SLO filter: safety-net unrestricted
-            // pick (admission gates first, so this is rare).
+            // No active compatible pair met the SLO filter: safety-net
+            // unrestricted pick (admission gates first, so this is rare).
             None if slo.is_some() => self.pick(req, None),
             // No active pair at all — the fleet controller never drains
-            // below its minimum, so this is unreachable in practice; the
-            // index argmin keeps the answer deterministic regardless.
+            // below its minimum, and the cluster sheds model-mismatched
+            // requests before routing, so this is unreachable in
+            // practice; the index argmin keeps the answer deterministic
+            // regardless.
             None => self.load_index.argmin(),
         }
     }
@@ -622,6 +728,13 @@ impl Router {
     /// on the chosen pair (evicting least-recently-used sessions when the
     /// pair's residency budget overflows).
     pub fn commit_route(&mut self, req: &Request, decision: &RouteDecision) {
+        let p = &mut self.pairs[decision.pair];
+        p.n_streams += 1;
+        p.ctx_sum += req.total_context() as u64;
+        if let Some(ci) = self.class_inflight.get_mut(decision.pair) {
+            let c = (req.class.0 as usize).min(ci.len() - 1);
+            ci[c] += 1;
+        }
         if req.session_id == NO_SESSION {
             return;
         }
@@ -690,6 +803,110 @@ impl Router {
         if p.active {
             self.load_index.set(pair, self.pairs[pair].outstanding_tokens);
         }
+    }
+
+    /// A committed request of `class` with full context `ctx` left
+    /// `pair` (finished or shed in flight): retire its decode stream
+    /// from the TBT estimator's view.  The counterpart of the stream
+    /// tracking [`commit_route`](Self::commit_route) does; callers that
+    /// never use TBT admission may skip it (the counters are then
+    /// advisory only).
+    pub fn on_stream_completed(&mut self, pair: usize, class: ClassId, ctx: u64) {
+        let p = &mut self.pairs[pair];
+        p.n_streams = p.n_streams.saturating_sub(1);
+        p.ctx_sum = p.ctx_sum.saturating_sub(ctx);
+        if let Some(ci) = self.class_inflight.get_mut(pair) {
+            let c = (class.0 as usize).min(ci.len() - 1);
+            ci[c] = ci[c].saturating_sub(1);
+        }
+    }
+
+    /// Estimated decode iteration time (≈ inter-token gap) on `pair`
+    /// right now, from its committed stream count and context sum
+    /// priced through the pair's decode-side `PerfModel`.  0 when
+    /// nothing is in flight.
+    pub fn estimated_tbt_s(&self, pair: usize) -> f64 {
+        let p = &self.pairs[pair];
+        if p.n_streams == 0 {
+            return 0.0;
+        }
+        p.decode_pm.iteration_time(&IterationShape {
+            prefill: Vec::new(),
+            n_decode: p.n_streams as usize,
+            decode_ctx_sum: p.ctx_sum as usize,
+        })
+    }
+
+    /// How much admitting `req` onto `pair` would stretch the pair's
+    /// decode iteration: one more stream in the batch, plus the
+    /// request's full context in the batch's KV reads.  This is the
+    /// TBT inflation every in-flight request on the pair would suffer.
+    pub fn estimated_tbt_inflation(&self, pair: usize, req: &Request) -> f64 {
+        (self.projected_tbt_s(pair, req) - self.estimated_tbt_s(pair)).max(0.0)
+    }
+
+    /// Decode iteration time on `pair` *with* `req` added to the batch.
+    fn projected_tbt_s(&self, pair: usize, req: &Request) -> f64 {
+        let p = &self.pairs[pair];
+        p.decode_pm.iteration_time(&IterationShape {
+            prefill: Vec::new(),
+            n_decode: p.n_streams as usize + 1,
+            decode_ctx_sum: p.ctx_sum as usize + req.total_context(),
+        })
+    }
+
+    /// TBT-aware admission: defer `req` (returning a retry hint) when
+    /// on every compatible active pair, adding its decode stream would
+    /// push the pair's projected iteration time past the strictest
+    /// TBT-P99 SLO among the classes already in flight there.  `None`
+    /// admits: some pair has TBT headroom (or hosts no TBT-constrained
+    /// incumbents), or no class declares a TBT SLO at all.
+    pub fn tbt_admission(&self, now: SimTime, req: &Request) -> Option<SimTime> {
+        let reg = self.classes.as_ref()?;
+        if !reg.any_tbt_slo() {
+            return None;
+        }
+        let need = self.required_model(req);
+        let mut saw_pair = false;
+        for (i, p) in self.pairs.iter().enumerate() {
+            if !p.active || !self.pair_serves(i, need) {
+                continue;
+            }
+            saw_pair = true;
+            let strictest = self.class_inflight[i]
+                .iter()
+                .enumerate()
+                .filter(|&(_, &n)| n > 0)
+                .filter_map(|(c, _)| reg.get(ClassId(c as u16)).slo_tbt_p99_s)
+                .fold(f64::INFINITY, f64::min);
+            if !strictest.is_finite() {
+                // No TBT-constrained incumbent on this pair: admit.
+                return None;
+            }
+            if self.projected_tbt_s(i, req) <= strictest {
+                return None; // headroom holds on this pair
+            }
+        }
+        if saw_pair {
+            Some(now.after_secs(TBT_RETRY_S))
+        } else {
+            None // nothing to protect; the model-compat shed handles it
+        }
+    }
+
+    /// Best (largest) TTFT-SLO headroom any active pair offers a
+    /// reference [`HEADROOM_PROBE_TOKENS`]-token prompt right now —
+    /// the fleet controller's beyond-backlog scale-up signal.  `None`
+    /// when no pair is active.
+    pub fn best_ttft_headroom(&self, slo_ttft_s: f64) -> Option<f64> {
+        self.pairs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.active)
+            .map(|(i, _)| slo_ttft_s - self.estimated_ttft(i, HEADROOM_PROBE_TOKENS))
+            .fold(None, |acc: Option<f64>, h| {
+                Some(acc.map_or(h, |a: f64| a.max(h)))
+            })
     }
 
     /// A session ended (its final turn completed, or a turn was shed and
@@ -769,6 +986,8 @@ impl Router {
         req: &Request,
         slo_ttft_s: f64,
     ) -> Admission {
+        let need = self.required_model(req);
+        let mut saw_compatible = false;
         let mut best_idle = f64::INFINITY;
         // Best pair *among those that could meet the SLO when idle* —
         // an infeasible pair must not drive the retry hint, or a
@@ -776,9 +995,10 @@ impl Router {
         // meaningless (near-zero) backlog estimate and dropped.
         let mut best_feasible: Option<(usize, f64)> = None;
         for (i, p) in self.pairs.iter().enumerate() {
-            if !p.active {
+            if !p.active || !self.pair_serves(i, need) {
                 continue;
             }
+            saw_compatible = true;
             let eff_len = req.input_len - self.resident_credit(i, req);
             let idle = p.prefill.predict(eff_len);
             best_idle = best_idle.min(idle);
@@ -790,6 +1010,13 @@ impl Router {
                 && best_feasible.map_or(true, |(_, b)| est < b)
             {
                 best_feasible = Some((i, est));
+            }
+        }
+        if !saw_compatible {
+            if let Some(m) = need {
+                return Admission::Rejected {
+                    reason: format!("no active pair serves model '{}'", m.name),
+                };
             }
         }
         if best_idle > slo_ttft_s {
@@ -817,8 +1044,9 @@ impl Router {
 mod tests {
     use super::*;
     use crate::config::topology::{ClusterConfig, PairConfig};
-    use crate::config::DeploymentConfig;
-    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::config::{DeploymentConfig, SystemKind};
+    use crate::qos::ServiceClass;
+    use crate::simgpu::model_desc::{LLAMA3_8B, QWEN2_7B};
     use crate::simgpu::spec::{A10, A100, A30, T4};
     use crate::workload::arrival::{stamp, ArrivalProcess};
     use crate::workload::azure::{generate, AzureTraceConfig};
@@ -843,6 +1071,7 @@ mod tests {
             prefix_len: prefix,
             kv_credit: 0,
             final_turn: false,
+            class: ClassId::default(),
         }
     }
 
@@ -1135,28 +1364,28 @@ mod tests {
     }
 
     #[test]
-    fn sessions_are_never_pinned_on_credit_less_pairs() {
-        // Pair 0 is a PP deployment: the staged pipeline re-prefills
-        // everything, so affinity must not pin sessions there
-        // (follow-ups would stick without saving a token).
+    fn pp_pairs_now_support_residency_and_credit() {
+        // PP prefix-credit satellite: the staged pipeline now honours
+        // `kv_credit` like DP, so affinity may pin sessions on PP pairs
+        // and grant them credit like any Cronus pair.
         let mut pp = PairConfig::cronus(DeploymentConfig::paper(A100, A10, LLAMA3_8B));
         pp.system = SystemKind::PpChunked;
         let cronus = PairConfig::cronus(DeploymentConfig::paper(A100, A30, LLAMA3_8B));
         let cfg = ClusterConfig::new(vec![pp, cronus]);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
-        // Turn 0 lands on the (empty, first) PP pair via the LOT
-        // fallback; the commit must not create residency.
         let t0 = session_req(1, 0, 800, 100);
         let d0 = router.route(&t0);
-        assert_eq!(d0.pair, 0);
+        assert_eq!(d0.pair, 0, "empty PP pair wins the LOT tie");
         router.commit_route(&t0, &d0);
-        assert_eq!(router.session_residency(1), None);
-        // The follow-up is a plain load-based pick with zero credit, not
-        // a sticky route to the PP pair.
+        assert_eq!(router.session_residency(1), Some(0));
         let t1 = session_req(1, 900, 300, 80);
         let d1 = router.route(&t1);
-        assert_eq!(d1.kv_credit, 0);
-        assert_eq!(router.kv_hits(), 0);
+        assert_eq!(d1.pair, 0, "follow-up sticks to the resident PP pair");
+        assert_eq!(d1.kv_credit, 900);
+        assert_eq!(d1.charged_tokens, 380);
+        router.commit_route(&t1, &d1);
+        assert_eq!(router.kv_hits(), 1);
+        assert_eq!(router.prefill_tokens_saved(), 900);
     }
 
     #[test]
@@ -1444,5 +1673,150 @@ mod tests {
             router.slo_admission(SimTime::ZERO, &cold, slo),
             Admission::Rejected { .. }
         ));
+    }
+
+    // --- QoS: model-aware routing + TBT-aware admission ---
+
+    #[test]
+    fn model_constrained_requests_only_land_on_compatible_pairs() {
+        let llama = PairConfig::cronus(DeploymentConfig::paper(A100, A10, LLAMA3_8B));
+        let qwen = PairConfig::cronus(DeploymentConfig::paper(A100, A30, QWEN2_7B));
+        let cfg = ClusterConfig::new(vec![llama, qwen]);
+        let mut reg = ClassRegistry::new();
+        let mut sc = ServiceClass::named("qwen-tenant");
+        sc.model = Some(QWEN2_7B);
+        let qwen_class = reg.register(sc);
+        for policy in RoutePolicy::ALL {
+            let mut router = Router::new(policy, &cfg);
+            router.set_class_registry(reg.clone());
+            assert_eq!(router.pair_model(0).name, LLAMA3_8B.name);
+            assert_eq!(router.pair_model(1).name, QWEN2_7B.name);
+            for r in &trace(40, 33) {
+                let pinned = r.with_class(qwen_class);
+                let d = router.route(&pinned);
+                assert_eq!(d.pair, 1, "{}", policy.name());
+                router.commit_route(&pinned, &d);
+            }
+            // Unconstrained traffic still uses the (less loaded) llama pair.
+            let routed = route_all(&mut router, &trace(40, 34));
+            assert!(routed.contains(&0), "{}", policy.name());
+            // Compatibility probe drives the cluster's model shed.
+            let probe = Request::new(9_999, 0, 300, 40).with_class(qwen_class);
+            assert!(router.has_active_compatible_pair(&probe));
+            router.set_pair_active(1, false);
+            assert!(!router.has_active_compatible_pair(&probe));
+            assert!(router.has_active_compatible_pair(&Request::new(9_998, 0, 300, 40)));
+            match router.slo_admission(SimTime::ZERO, &probe, 10.0) {
+                Admission::Rejected { reason } => {
+                    assert!(reason.contains(QWEN2_7B.name), "{reason}")
+                }
+                other => panic!("expected model-shed rejection, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn model_constrained_affinity_never_sticks_to_an_incompatible_pair() {
+        // Residency pinned while a class is unconstrained must not leak a
+        // dispatch onto an incompatible pair once the class pins a model.
+        let llama = PairConfig::cronus(DeploymentConfig::paper(A100, A10, LLAMA3_8B));
+        let qwen = PairConfig::cronus(DeploymentConfig::paper(A100, A30, QWEN2_7B));
+        let cfg = ClusterConfig::new(vec![llama, qwen]);
+        let mut reg = ClassRegistry::new();
+        let mut sc = ServiceClass::named("qwen-tenant");
+        sc.model = Some(QWEN2_7B);
+        let qwen_class = reg.register(sc);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        router.set_class_registry(reg);
+        // Turn 0 (default class) pins the session on the llama pair.
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0);
+        assert_eq!(d0.pair, 0);
+        router.commit_route(&t0, &d0);
+        // The follow-up arrives pinned to qwen: the resident pair is a
+        // miss (not a mismatch dispatch) and the route lands on pair 1.
+        let t1 = session_req(1, 900, 300, 80).with_class(qwen_class);
+        let d1 = router.route(&t1);
+        assert_eq!(d1.pair, 1, "affinity must yield to the model constraint");
+        assert_eq!(d1.kv_credit, 0, "the compatible pair holds no prefix KV");
+    }
+
+    #[test]
+    fn tbt_admission_protects_incumbent_decode_tails() {
+        let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+        let newcomer = Request::new(100, 0, 400, 60);
+        // No registry: the gate is inert.
+        let plain = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        assert!(plain.tbt_admission(SimTime::ZERO, &newcomer).is_none());
+        // A class whose TBT SLO no loaded decode batch can meet.
+        let mut reg = ClassRegistry::new();
+        let mut strict = ServiceClass::named("strict");
+        strict.slo_tbt_p99_s = Some(1e-9);
+        let strict_id = reg.register(strict);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        router.set_class_registry(reg);
+        // No constrained incumbent in flight: pass.
+        assert!(router.tbt_admission(SimTime::ZERO, &newcomer).is_none());
+        let inc = Request::new(1, 0, 800, 100).with_class(strict_id);
+        let d = router.route(&inc);
+        router.commit_route(&inc, &d);
+        assert!(router.estimated_tbt_s(0) > 0.0);
+        assert!(router.estimated_tbt_inflation(0, &newcomer) > 0.0);
+        // Admitting the newcomer would blow the incumbent's TBT SLO on
+        // the only pair: deferred with a forward retry hint.
+        let retry = router.tbt_admission(SimTime::ZERO, &newcomer);
+        assert!(retry.is_some() && retry.unwrap() > SimTime::ZERO);
+        // Once the incumbent's stream retires the gate opens again.
+        router.on_stream_completed(d.pair, strict_id, inc.total_context() as u64);
+        assert!(router.tbt_admission(SimTime::ZERO, &newcomer).is_none());
+        // A lax SLO never defers even with the incumbent in flight.
+        let mut lax_reg = ClassRegistry::new();
+        let mut lax = ServiceClass::named("lax");
+        lax.slo_tbt_p99_s = Some(10.0);
+        let lax_id = lax_reg.register(lax);
+        let mut lax_router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        lax_router.set_class_registry(lax_reg);
+        let inc2 = Request::new(2, 0, 800, 100).with_class(lax_id);
+        let d2 = lax_router.route(&inc2);
+        lax_router.commit_route(&inc2, &d2);
+        assert!(lax_router.tbt_admission(SimTime::ZERO, &newcomer).is_none());
+    }
+
+    #[test]
+    fn default_class_routing_is_byte_identical_with_registry_attached() {
+        // The byte-identity pin: attaching a registry changes nothing for
+        // default-class traffic, whatever other classes it declares.
+        let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
+        let t = trace(120, 31);
+        for policy in RoutePolicy::ALL {
+            let mut plain = Router::new(policy, &cfg);
+            let mut qos = Router::new(policy, &cfg);
+            let mut reg = ClassRegistry::new();
+            reg.register(ServiceClass::named("premium"));
+            qos.set_class_registry(reg);
+            assert_eq!(
+                route_all(&mut plain, &t),
+                route_all(&mut qos, &t),
+                "{}",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn best_ttft_headroom_tracks_load_and_activation() {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        let idle = router.best_ttft_headroom(1.0).unwrap();
+        assert!(idle > 0.0, "idle pairs have headroom under a 1s SLO");
+        for r in &trace(300, 35) {
+            let d = router.route(r);
+            router.commit_route(r, &d);
+        }
+        let loaded = router.best_ttft_headroom(1.0).unwrap();
+        assert!(loaded < idle, "backlog erodes headroom");
+        router.set_pair_active(0, false);
+        router.set_pair_active(1, false);
+        assert!(router.best_ttft_headroom(1.0).is_none());
     }
 }

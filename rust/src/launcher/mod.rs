@@ -18,6 +18,7 @@ use crate::systems::driver::{replay_trace, replay_trace_collect};
 use crate::systems::{
     build_system, prefill_tokens_executed, AutoscaleConfig, RunOutcome, SystemEvent,
 };
+use crate::qos::{ClassId, ClassRegistry, ServiceClass};
 use crate::util::rng::Rng;
 use crate::workload::arrival::{at_rate, stamp, ArrivalProcess};
 use crate::workload::azure::{generate, AzureTraceConfig};
@@ -673,6 +674,158 @@ pub fn autoscale_demo(
     (table, out)
 }
 
+// ---------------------------------------------------------------------------
+// Multi-tenant QoS: service classes + weighted fair sharing (beyond the
+// paper; EXPERIMENTS.md §QoS isolation)
+// ---------------------------------------------------------------------------
+
+/// The standard two-class demo contract set: an interactive `premium`
+/// class (tier 1, weight 2, a TTFT SLO) and a bulk `batch` class
+/// (tier 0, weight 1, no SLO).  Returns the registry and the premium
+/// class id for stamping.
+pub fn demo_class_registry(slo_ttft_s: f64) -> (ClassRegistry, ClassId) {
+    let mut reg = ClassRegistry::new();
+    let premium = reg.register(ServiceClass {
+        tenant: "tenant-a".to_string(),
+        tier: 1,
+        weight: 2.0,
+        slo_ttft_s: Some(slo_ttft_s),
+        ..ServiceClass::named("premium")
+    });
+    reg.register(ServiceClass {
+        tenant: "tenant-b".to_string(),
+        ..ServiceClass::named("batch")
+    });
+    (reg, premium)
+}
+
+/// The same registry with every contract stripped (tier 0, weight 1, no
+/// SLOs) — labels-only, so a baseline run reports the identical
+/// per-class breakdown while admission behaves exactly like the
+/// pre-QoS first-come first-served cluster.
+fn labels_only(reg: &ClassRegistry) -> ClassRegistry {
+    let mut plain = ClassRegistry::new();
+    for c in reg.iter().skip(1) {
+        plain.register(ServiceClass {
+            tenant: c.tenant.clone(),
+            model: c.model,
+            ..ServiceClass::named(&c.name)
+        });
+    }
+    plain
+}
+
+/// One run of the QoS demo: `label` is `baseline` (labels-only classes)
+/// or `classed` (full contracts).
+pub struct QosDemoPoint {
+    pub label: &'static str,
+    pub outcome: RunOutcome,
+}
+
+/// The `--classes` experiment: the same open-loop arrivals — 3 premium
+/// requests in every 10, the rest batch — served twice on the same
+/// fleet.  The baseline run carries the class *labels* but no
+/// contracts (plain FCFS admission); the classed run enables the full
+/// QoS subsystem (weighted fair sharing, per-class SLO admission,
+/// over-SLO tier bypass).  The table shows each class's tail latency
+/// under both, which is the isolation the subsystem buys.
+pub fn qos_classes_demo(
+    opts: &ExperimentOpts,
+    cluster: &ClusterConfig,
+    policy: RoutePolicy,
+    rate_rps: f64,
+    slo_ttft_s: f64,
+) -> (Table, Vec<QosDemoPoint>) {
+    let (registry, _) = demo_class_registry(slo_ttft_s);
+    qos_classes_demo_with(opts, cluster, policy, rate_rps, registry)
+}
+
+/// [`qos_classes_demo`] over an arbitrary registry (e.g. one loaded
+/// from a `[classes]` TOML table).  The interactive 3-in-10 share is
+/// stamped with the highest-tier non-default class (ties to the lowest
+/// id); the rest with the lowest-tier one.  Falls back to the built-in
+/// premium/batch pair when the registry has fewer than two non-default
+/// classes.
+pub fn qos_classes_demo_with(
+    opts: &ExperimentOpts,
+    cluster: &ClusterConfig,
+    policy: RoutePolicy,
+    rate_rps: f64,
+    registry: ClassRegistry,
+) -> (Table, Vec<QosDemoPoint>) {
+    let (registry, hot, cold) = if registry.len() >= 3 {
+        let mut ids: Vec<ClassId> =
+            (1..registry.len() as u16).map(ClassId).collect();
+        // Highest tier first, ties to the lowest id.
+        ids.sort_by_key(|&c| (std::cmp::Reverse(registry.get(c).tier), c.0));
+        let (hot, cold) = (ids[0], *ids.last().unwrap());
+        (registry, hot, cold)
+    } else {
+        let (reg, premium) = demo_class_registry(1.0);
+        let batch = reg.id_of("batch").unwrap();
+        (reg, premium, batch)
+    };
+    let slo_note = registry
+        .get(hot)
+        .slo_ttft_s
+        .map_or("no TTFT SLO".to_string(), |s| format!("TTFT SLO {s:.2}s"));
+    let hot_name = registry.get(hot).name.clone();
+    let base = at_rate(&paper_trace(opts), rate_rps);
+    // Deterministic class stamping: 3 interactive (hot) requests in
+    // every 10 arrivals, the rest bulk (cold).
+    let trace: Vec<Request> = base
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut r = *r;
+            r.class = if i % 10 < 3 { hot } else { cold };
+            r
+        })
+        .collect();
+
+    let mut run = |label: &'static str, reg: ClassRegistry| {
+        let mut sys =
+            ClusterSystem::new(cluster.clone(), policy).with_classes(reg);
+        QosDemoPoint { label, outcome: replay_trace(&mut sys, &trace) }
+    };
+    let points =
+        vec![run("baseline", labels_only(&registry)), run("classed", registry)];
+
+    let mut table = Table::new(
+        format!(
+            "Service classes on {}: {} requests at {rate_rps:.1} rps, \
+             '{hot_name}' {slo_note} (3 '{hot_name}' per 10 arrivals)",
+            cluster.label(),
+            trace.len()
+        ),
+        &[
+            "Run",
+            "Class",
+            "reqs",
+            "finished",
+            "shed",
+            "thpt (req/s)",
+            "TTFT p99 (s)",
+            "TBT p99 (s)",
+        ],
+    );
+    for p in &points {
+        for c in &p.outcome.report.classes {
+            table.row(vec![
+                p.label.to_string(),
+                c.name.clone(),
+                c.n_requests.to_string(),
+                c.n_finished.to_string(),
+                c.n_shed.to_string(),
+                format!("{:.2}", c.throughput_rps),
+                format!("{:.3}", c.ttft_p99_s),
+                format!("{:.4}", c.tbt_p99_s),
+            ]);
+        }
+    }
+    (table, points)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -811,6 +964,35 @@ mod tests {
         assert!(out.report.n_scale_ups >= 1, "burst never forced a scale-up");
         assert_eq!(out.report.n_finished, 20);
         assert!(table.render().contains("scale-up"));
+    }
+
+    #[test]
+    fn qos_classes_demo_reports_both_runs_per_class() {
+        let opts = ExperimentOpts { n_requests: 40, seed: 7 };
+        let cluster = ClusterConfig::mixed(2, model_desc::LLAMA3_8B);
+        let (table, points) = qos_classes_demo(
+            &opts,
+            &cluster,
+            RoutePolicy::LeastOutstandingTokens,
+            8.0,
+            1.0,
+        );
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            // default + premium + batch, in registry order.
+            let names: Vec<&str> =
+                p.outcome.report.classes.iter().map(|c| c.name.as_str()).collect();
+            assert_eq!(names, ["default", "premium", "batch"]);
+            // Every request is accounted to exactly one class.
+            let total: usize =
+                p.outcome.report.classes.iter().map(|c| c.n_requests).sum();
+            assert_eq!(total, 40);
+            let premium = &p.outcome.report.classes[1];
+            assert_eq!(premium.n_requests, 12, "3 premium per 10 arrivals");
+        }
+        let s = table.render();
+        assert!(s.contains("baseline") && s.contains("classed"), "{s}");
+        assert!(s.contains("premium") && s.contains("batch"), "{s}");
     }
 
     #[test]

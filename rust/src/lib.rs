@@ -41,6 +41,7 @@ pub mod engine;
 pub mod kvcache;
 pub mod launcher;
 pub mod planner;
+pub mod qos;
 pub mod runtime;
 pub mod server;
 pub mod systems;

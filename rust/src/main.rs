@@ -160,6 +160,13 @@ fn main() {
                 "mean think time between turns in ms (closed-loop)",
                 Some("2000"),
             )
+            .flag(
+                "classes",
+                "multi-tenant QoS demo: premium/batch service classes, \
+                 baseline (labels only) vs full contracts; writes \
+                 BENCH_qos.json ($CRONUS_QOS_BENCH_JSON overrides the path)",
+            )
+            .opt("rate-rps", "offered request rate for --classes", Some("8"))
             .flag("help", "print usage"),
             &raw,
             |args| {
@@ -198,6 +205,49 @@ fn main() {
                         r.ttft_p99_s,
                         r.tbt_p99_s
                     );
+                    return;
+                }
+                if args.has_flag("classes") {
+                    // QoS mode: the same arrivals served with class
+                    // labels only (baseline) and with the full contracts
+                    // (weighted fair sharing + per-class SLOs).
+                    let cluster = match args.get("config") {
+                        Some(path) => cluster_from_toml(path),
+                        None => cronus::config::ClusterConfig::mixed(
+                            args.get_usize("pairs").unwrap(),
+                            cronus::simgpu::model_desc::LLAMA3_8B,
+                        ),
+                    };
+                    let rate = args.get_f64("rate-rps").unwrap();
+                    let slo_s = if slo_ms > 0.0 { slo_ms / 1e3 } else { 1.0 };
+                    // A `[classes]` table in --config replaces the
+                    // built-in premium/batch contracts.
+                    let mut registry = cronus::qos::ClassRegistry::new();
+                    if let Some(path) = args.get("config") {
+                        if let Err(e) = registry.apply_toml(&load_toml(path)) {
+                            eprintln!("{path}: {e}");
+                            std::process::exit(2);
+                        }
+                    }
+                    let (table, points) = if registry.is_multi_class() {
+                        launcher::qos_classes_demo_with(
+                            &opts(args),
+                            &cluster,
+                            policy,
+                            rate,
+                            registry,
+                        )
+                    } else {
+                        launcher::qos_classes_demo(
+                            &opts(args),
+                            &cluster,
+                            policy,
+                            rate,
+                            slo_s,
+                        )
+                    };
+                    table.print();
+                    write_qos_artifact(args, &cluster, policy, rate, slo_s, &points);
                     return;
                 }
                 if args.has_flag("closed-loop") {
@@ -427,6 +477,71 @@ fn main() {
     }
 }
 
+/// Emit the machine-readable QoS artifact for `bench-cluster --classes`
+/// (schema v1; CI validates and archives it — record, don't gate, see
+/// EXPERIMENTS.md §QoS isolation).
+fn write_qos_artifact(
+    args: &cronus::config::cli::Args,
+    cluster: &cronus::config::ClusterConfig,
+    policy: RoutePolicy,
+    rate_rps: f64,
+    slo_ttft_s: f64,
+    points: &[launcher::QosDemoPoint],
+) {
+    use cronus::benchkit::JVal;
+    let class_jval = |c: &cronus::metrics::ClassBreakdown| -> JVal {
+        JVal::Obj(vec![
+            ("name".into(), JVal::Str(c.name.clone())),
+            ("requests".into(), JVal::Int(c.n_requests as u64)),
+            ("finished".into(), JVal::Int(c.n_finished as u64)),
+            ("shed".into(), JVal::Int(c.n_shed as u64)),
+            ("throughput_rps".into(), JVal::Num(c.throughput_rps)),
+            ("ttft_p99_s".into(), JVal::Num(c.ttft_p99_s)),
+            ("tbt_p99_s".into(), JVal::Num(c.tbt_p99_s)),
+        ])
+    };
+    let run_jval = |p: &launcher::QosDemoPoint| -> JVal {
+        let r = &p.outcome.report;
+        JVal::Obj(vec![
+            ("run".into(), JVal::Str(p.label.into())),
+            ("finished".into(), JVal::Int(r.n_finished as u64)),
+            ("shed".into(), JVal::Int(r.n_rejected as u64)),
+            ("ttft_p99_s".into(), JVal::Num(r.ttft_p99_s)),
+            ("tbt_p99_s".into(), JVal::Num(r.tbt_p99_s)),
+            (
+                "classes".into(),
+                JVal::Arr(r.classes.iter().map(class_jval).collect()),
+            ),
+        ])
+    };
+    let artifact = JVal::Obj(vec![
+        ("schema_version".into(), JVal::Int(1)),
+        ("generated_by".into(), JVal::Str("bench-cluster --classes".into())),
+        (
+            "workload".into(),
+            JVal::Obj(vec![
+                (
+                    "n_requests".into(),
+                    JVal::Int(args.get_usize("n").unwrap() as u64),
+                ),
+                ("seed".into(), JVal::Int(args.get_u64("seed").unwrap())),
+                ("rate_rps".into(), JVal::Num(rate_rps)),
+                ("premium_slo_ttft_s".into(), JVal::Num(slo_ttft_s)),
+                ("policy".into(), JVal::Str(policy.name().into())),
+                ("n_pairs".into(), JVal::Int(cluster.n_pairs() as u64)),
+            ]),
+        ),
+        ("runs".into(), JVal::Arr(points.iter().map(run_jval).collect())),
+    ]);
+    let path = std::env::var("CRONUS_QOS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_qos.json".to_string());
+    std::fs::write(&path, artifact.render() + "\n").unwrap_or_else(|e| {
+        eprintln!("cannot write {path}: {e}");
+        std::process::exit(2);
+    });
+    println!("\nwrote {path}");
+}
+
 fn with_parser(
     parser: Parser,
     raw: &[String],
@@ -487,7 +602,8 @@ fn print_help() {
          \x20 bench-table3   reproduce Table 3 (relative GPU utilization)\n\
          \x20 bench-fig3     reproduce Fig. 3 (linear iteration-time fits)\n\
          \x20 bench-cluster  sweep 1\u{2192}N mixed pairs behind the cluster router\n\
-         \x20                (--autoscale: queue-driven elastic pair set)\n\
+         \x20                (--autoscale: queue-driven elastic pair set;\n\
+         \x20                 --classes: multi-tenant QoS service classes)\n\
          \x20 plan-topology  search pair compositions under a budget, emit TOML\n\
          \x20 calibrate      print the Balancer's fitted predictors\n\
          \x20 trace          generate + summarize a workload trace\n\

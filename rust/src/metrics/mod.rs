@@ -127,6 +127,59 @@ impl Collector {
     }
 }
 
+/// Per-service-class slice of a cluster run (QoS observability): the
+/// same headline numbers as [`Report`], restricted to one class's
+/// requests.  Raw samples are retained so merging cluster reports keeps
+/// per-class percentiles exact, like the top-level ones.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassBreakdown {
+    pub name: String,
+    pub n_requests: usize,
+    pub n_finished: usize,
+    /// Requests of this class shed (model mismatch, SLO rejection, pair
+    /// rejection) instead of served.
+    pub n_shed: usize,
+    pub throughput_rps: f64,
+    pub ttft_p99_s: f64,
+    pub tbt_p99_s: f64,
+    /// Raw TTFT samples of this class, sorted ascending.
+    pub ttft_samples: Vec<f64>,
+    /// Raw inter-token gaps of this class, sorted ascending.
+    pub tbt_samples: Vec<f64>,
+}
+
+impl ClassBreakdown {
+    /// Assemble a class slice from raw samples; `makespan_s` is the
+    /// *run's* makespan (per-class throughput shares the run clock).
+    pub fn from_samples(
+        name: impl Into<String>,
+        n_requests: usize,
+        n_finished: usize,
+        n_shed: usize,
+        makespan_s: f64,
+        mut ttft: Vec<f64>,
+        mut tbt: Vec<f64>,
+    ) -> ClassBreakdown {
+        ttft.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        tbt.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        ClassBreakdown {
+            name: name.into(),
+            n_requests,
+            n_finished,
+            n_shed,
+            throughput_rps: if makespan_s > 0.0 {
+                n_finished as f64 / makespan_s
+            } else {
+                0.0
+            },
+            ttft_p99_s: percentile_of_sorted(&ttft, 99.0),
+            tbt_p99_s: percentile_of_sorted(&tbt, 99.0),
+            ttft_samples: ttft,
+            tbt_samples: tbt,
+        }
+    }
+}
+
 /// Aggregate results of one run (one cell of a paper table / one point of
 /// a paper figure).
 ///
@@ -173,6 +226,9 @@ pub struct Report {
     pub n_scale_ups: usize,
     /// Pairs drained and retired to standby by the fleet controller.
     pub n_scale_downs: usize,
+    /// Per-service-class breakdown (cluster runs with a QoS class
+    /// registry attached; empty otherwise).  Ordered by class id.
+    pub classes: Vec<ClassBreakdown>,
     /// Raw TTFT samples, one per request that produced a first token.
     /// Sorted ascending ([`Report::from_samples`] sorts once and derives
     /// every percentile from the sorted vector).
@@ -236,6 +292,7 @@ impl Report {
             kv_hit_rate: 0.0,
             n_scale_ups: 0,
             n_scale_downs: 0,
+            classes: Vec::new(),
             ttft_samples: ttft,
             tbt_samples: tbt,
             e2e_samples: e2e,
@@ -294,6 +351,7 @@ impl Report {
         report.n_prefix_routed = n_prefix_routed;
         report.n_scale_ups = n_scale_ups;
         report.n_scale_downs = n_scale_downs;
+        report.classes = Self::merge_classes(parts);
         // The per-pair parts of a cluster run carry no KV accounting
         // (the router owns it; the cluster stamps hits + denominator
         // after merging), but merging *cluster-level* reports keeps the
@@ -305,7 +363,45 @@ impl Report {
         };
         report
     }
-    /// One-line summary used by benches and examples.
+
+    /// Merge the parts' per-class breakdowns by class name (first-seen
+    /// order, which is class-id order when the parts share a registry),
+    /// recomputing per-class percentiles over the union of raw samples.
+    /// The merged run's makespan scales every class's throughput.
+    fn merge_classes(parts: &[Report]) -> Vec<ClassBreakdown> {
+        let makespan_s = parts.iter().fold(0.0f64, |m, p| m.max(p.makespan_s));
+        let mut order: Vec<String> = Vec::new();
+        for p in parts {
+            for c in &p.classes {
+                if !order.iter().any(|n| n == &c.name) {
+                    order.push(c.name.clone());
+                }
+            }
+        }
+        order
+            .into_iter()
+            .map(|name| {
+                let (mut n_req, mut n_fin, mut n_shed) = (0usize, 0usize, 0usize);
+                let mut ttft = Vec::new();
+                let mut tbt = Vec::new();
+                for p in parts {
+                    for c in p.classes.iter().filter(|c| c.name == name) {
+                        n_req += c.n_requests;
+                        n_fin += c.n_finished;
+                        n_shed += c.n_shed;
+                        ttft.extend_from_slice(&c.ttft_samples);
+                        tbt.extend_from_slice(&c.tbt_samples);
+                    }
+                }
+                ClassBreakdown::from_samples(
+                    name, n_req, n_fin, n_shed, makespan_s, ttft, tbt,
+                )
+            })
+            .collect()
+    }
+
+    /// One-line summary used by benches and examples (plus one indented
+    /// line per service class when a QoS breakdown is present).
     pub fn summary(&self) -> String {
         let mut s = format!(
             "{:<14} {:>5}/{:<5} reqs  thpt {:>6.2} req/s ({:>7.0} tok/s)  \
@@ -334,6 +430,21 @@ impl Report {
                 "  scale +{}/-{}",
                 self.n_scale_ups, self.n_scale_downs
             ));
+        }
+        for c in &self.classes {
+            s.push_str(&format!(
+                "\n    class {:<12} {:>5}/{:<5} reqs  thpt {:>6.2} req/s  \
+                 TTFT p99 {:>7.3}s  TBT p99 {:>7.4}s",
+                c.name,
+                c.n_finished,
+                c.n_requests,
+                c.throughput_rps,
+                c.ttft_p99_s,
+                c.tbt_p99_s
+            ));
+            if c.n_shed > 0 {
+                s.push_str(&format!("  shed {}", c.n_shed));
+            }
         }
         s
     }
@@ -547,5 +658,48 @@ mod tests {
         assert_eq!(r.n_requests, 0);
         assert_eq!(r.throughput_rps, 0.0);
         assert_eq!(r.ttft_p99_s, 0.0);
+        assert!(r.classes.is_empty());
+    }
+
+    #[test]
+    fn class_breakdowns_merge_by_name_and_surface_in_summary() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_token(1, t(0.1));
+        c.on_finish(1, t(0.2));
+        let mut a = c.report("a");
+        a.classes = vec![
+            ClassBreakdown::from_samples("premium", 2, 2, 0, 2.0, vec![0.1, 0.3], vec![0.01]),
+            ClassBreakdown::from_samples("batch", 3, 2, 1, 2.0, vec![0.5, 0.9], vec![0.02]),
+        ];
+        let mut b = a.clone();
+        b.label = "b".into();
+        // Part b saw only the batch class, with a worse tail.
+        b.classes = vec![ClassBreakdown::from_samples(
+            "batch",
+            1,
+            1,
+            0,
+            4.0,
+            vec![2.0],
+            vec![0.04],
+        )];
+        b.makespan_s = 4.0;
+        let merged = Report::merge("m", &[a, b]);
+        assert_eq!(merged.classes.len(), 2);
+        let premium = &merged.classes[0];
+        assert_eq!((premium.name.as_str(), premium.n_requests), ("premium", 2));
+        let batch = &merged.classes[1];
+        assert_eq!(batch.n_requests, 4);
+        assert_eq!(batch.n_finished, 3);
+        assert_eq!(batch.n_shed, 1);
+        assert_eq!(batch.ttft_samples, vec![0.5, 0.9, 2.0]);
+        assert!(batch.ttft_p99_s > 1.9, "merged tail must see part b");
+        // Throughput rescales to the merged makespan (4s).
+        assert!((premium.throughput_rps - 0.5).abs() < 1e-12);
+        let s = merged.summary();
+        assert!(s.contains("class premium"), "{s}");
+        assert!(s.contains("class batch"), "{s}");
+        assert!(s.contains("shed 1"), "{s}");
     }
 }

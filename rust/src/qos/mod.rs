@@ -1,0 +1,616 @@
+//! Multi-tenant QoS: service classes, priority tiers, and weighted fair
+//! sharing at cluster admission.
+//!
+//! A [`ServiceClass`] names a tenant's traffic contract: a priority
+//! `tier`, a fair-share `weight`, optional TTFT / TBT-P99 SLOs, and
+//! optionally the *model* the class must be served by (multi-model
+//! fleets route such requests only to pairs deployed with that model).
+//! Classes live in a [`ClassRegistry`] — class 0 is always the built-in
+//! `default` class (weight 1, tier 0, no SLOs, any model), so a request
+//! stream that never mentions classes behaves exactly as before the QoS
+//! layer existed.
+//!
+//! Operators declare classes in a `[classes]` TOML table (one
+//! `[classes.NAME]` sub-table per class; see `CONFIG.md`):
+//!
+//! ```toml
+//! [classes.premium]
+//! tenant = "acme"
+//! tier = 1
+//! weight = 2.0
+//! slo_ttft_s = 1.5
+//! slo_tbt_p99_s = 0.2
+//!
+//! [classes.batch]
+//! tenant = "crawler"
+//! weight = 1.0
+//! ```
+//!
+//! The [`FairShareLedger`] is the admission-time sharing mechanism: a
+//! deficit-weighted-round-robin ledger in *virtual time* (charged tokens
+//! divided by class weight).  Every admitted request advances its
+//! class's virtual time; a class that runs more than one quantum ahead
+//! of another class that is still contending for capacity gets its next
+//! submit **deferred** (the cluster returns `Admission::Deferred` and
+//! the driver retries), so a bursty low-priority tenant cannot starve a
+//! high-priority one at the admission gate.  Priority preemption is the
+//! one asymmetry: an *over-SLO* request of a strictly higher tier
+//! bypasses the fairness deferral — it jumps ahead of the queued
+//! lower-tier backlog (which simply retries later; in-flight requests
+//! and the engines beneath them are never touched).
+//!
+//! The ledger is deterministic: it is a pure function of the observed
+//! submit/admit/finish sequence, with no clocks or randomness of its
+//! own, so same-seed cluster runs remain byte-identical.
+
+use crate::config::toml::TomlDoc;
+use crate::simclock::SimTime;
+use crate::simgpu::model_desc::{self, ModelDesc};
+
+/// Index of a request's service class in the cluster's
+/// [`ClassRegistry`].  `ClassId::default()` (0) is the built-in
+/// `default` class; stamping it on every request reproduces the
+/// pre-QoS behaviour byte-for-byte.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassId(pub u16);
+
+/// The built-in class every request starts in.
+pub const DEFAULT_CLASS: ClassId = ClassId(0);
+
+/// Tokens one class may run ahead of a contending class before the
+/// fairness gate defers it (the DWRR quantum, in virtual-time tokens
+/// before weight scaling).
+pub const FAIR_QUANTUM_TOKENS: f64 = 4096.0;
+
+/// How long after its last arrival a class with nothing in flight still
+/// counts as *contending* (its deferred submits live in the driver's
+/// retry queue, invisible to the cluster, so recency of demand is the
+/// only signal available at admission).
+pub const CONTENTION_WINDOW_S: f64 = 2.0;
+
+/// Retry hint attached to a fairness deferral.
+pub const FAIR_RETRY_S: f64 = 0.05;
+
+/// One tenant traffic class.
+#[derive(Clone, Debug)]
+pub struct ServiceClass {
+    /// Class name — the `[classes.NAME]` key, unique per registry.
+    pub name: String,
+    /// Owning tenant (reporting only; defaults to the class name).
+    pub tenant: String,
+    /// Priority tier: strictly higher tiers may bypass the fairness
+    /// deferral when over their TTFT SLO (see [`FairShareLedger`]).
+    pub tier: u8,
+    /// Fair-share weight (> 0): a weight-2 class is entitled to twice
+    /// the admitted tokens of a weight-1 class while both contend.
+    pub weight: f64,
+    /// Per-class TTFT SLO; overrides the cluster-wide SLO at admission.
+    pub slo_ttft_s: Option<f64>,
+    /// Per-class TBT P99 SLO: the router's TBT-aware admission defers
+    /// new work that would blow this headroom for in-flight requests of
+    /// the class.
+    pub slo_tbt_p99_s: Option<f64>,
+    /// Model this class must be served by (`None` = any pair).
+    pub model: Option<ModelDesc>,
+}
+
+impl ServiceClass {
+    /// A named class with default contract values (tier 0, weight 1,
+    /// no SLOs, any model).
+    pub fn named(name: &str) -> ServiceClass {
+        ServiceClass {
+            name: name.to_string(),
+            tenant: name.to_string(),
+            tier: 0,
+            weight: 1.0,
+            slo_ttft_s: None,
+            slo_tbt_p99_s: None,
+            model: None,
+        }
+    }
+}
+
+/// Ordered set of service classes; index = [`ClassId`].  Class 0 is
+/// always the built-in `default`.
+#[derive(Clone, Debug)]
+pub struct ClassRegistry {
+    classes: Vec<ServiceClass>,
+}
+
+impl Default for ClassRegistry {
+    fn default() -> Self {
+        ClassRegistry::new()
+    }
+}
+
+impl ClassRegistry {
+    /// Registry holding only the built-in `default` class.
+    pub fn new() -> ClassRegistry {
+        ClassRegistry { classes: vec![ServiceClass::named("default")] }
+    }
+
+    /// Register a class; returns its id.  Names must be unique.
+    pub fn register(&mut self, class: ServiceClass) -> ClassId {
+        assert!(
+            self.id_of(&class.name).is_none(),
+            "duplicate service class '{}'",
+            class.name
+        );
+        assert!(class.weight > 0.0, "class weight must be > 0");
+        assert!(self.classes.len() < u16::MAX as usize, "too many classes");
+        self.classes.push(class);
+        ClassId((self.classes.len() - 1) as u16)
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<ClassId> {
+        self.classes
+            .iter()
+            .position(|c| c.name == name)
+            .map(|i| ClassId(i as u16))
+    }
+
+    /// Class behind `id`; unknown ids resolve to the default class so a
+    /// stale stamp can never panic the serving path.
+    pub fn get(&self, id: ClassId) -> &ServiceClass {
+        self.classes.get(id.0 as usize).unwrap_or(&self.classes[0])
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // the default class always exists
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ServiceClass> {
+        self.classes.iter()
+    }
+
+    /// Whether any non-default class is registered — the QoS machinery
+    /// (ledger, per-class SLOs, model constraints) is inert otherwise.
+    pub fn is_multi_class(&self) -> bool {
+        self.classes.len() > 1
+    }
+
+    /// Whether any class declares a TBT P99 SLO (gates the TBT-aware
+    /// admission estimate, which costs a per-pair scan).
+    pub fn any_tbt_slo(&self) -> bool {
+        self.classes.iter().any(|c| c.slo_tbt_p99_s.is_some())
+    }
+
+    /// Load `[classes.NAME]` sub-tables from a parsed TOML document.
+    /// Class ids are assigned in sorted name order (the document's
+    /// key order is a `BTreeMap`), so identical files always produce
+    /// identical registries.  Unknown keys are rejected to catch typos.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
+        let mut names: Vec<&str> = Vec::new();
+        for key in doc.section_keys("classes.") {
+            let rest = &key["classes.".len()..];
+            let name = rest
+                .split('.')
+                .next()
+                .filter(|n| !n.is_empty() && rest.contains('.'))
+                .ok_or_else(|| format!("bad [classes] key '{key}'"))?;
+            if names.last() != Some(&name) {
+                names.push(name);
+            }
+        }
+        for name in names {
+            if name == "default" {
+                return Err("the 'default' class is built in and cannot be \
+                            redefined"
+                    .into());
+            }
+            let prefix = format!("classes.{name}.");
+            for key in doc.section_keys(&prefix) {
+                let field = &key[prefix.len()..];
+                if !matches!(
+                    field,
+                    "tenant" | "tier" | "weight" | "slo_ttft_s"
+                        | "slo_tbt_p99_s" | "model"
+                ) {
+                    return Err(format!(
+                        "unknown key '{field}' in [classes.{name}]"
+                    ));
+                }
+            }
+            let mut class = ServiceClass::named(name);
+            if let Some(t) = doc.get_str(&format!("{prefix}tenant")) {
+                class.tenant = t.to_string();
+            }
+            if let Some(t) = doc.get_i64(&format!("{prefix}tier")) {
+                if !(0..=255).contains(&t) {
+                    return Err(format!("classes.{name}.tier out of range"));
+                }
+                class.tier = t as u8;
+            }
+            if let Some(w) = doc.get_f64(&format!("{prefix}weight")) {
+                if !(w > 0.0 && w.is_finite()) {
+                    return Err(format!("classes.{name}.weight must be > 0"));
+                }
+                class.weight = w;
+            }
+            if let Some(s) = doc.get_f64(&format!("{prefix}slo_ttft_s")) {
+                if !(s > 0.0 && s.is_finite()) {
+                    return Err(format!("classes.{name}.slo_ttft_s must be > 0"));
+                }
+                class.slo_ttft_s = Some(s);
+            }
+            if let Some(s) = doc.get_f64(&format!("{prefix}slo_tbt_p99_s")) {
+                if !(s > 0.0 && s.is_finite()) {
+                    return Err(format!(
+                        "classes.{name}.slo_tbt_p99_s must be > 0"
+                    ));
+                }
+                class.slo_tbt_p99_s = Some(s);
+            }
+            if let Some(m) = doc.get_str(&format!("{prefix}model")) {
+                let desc = model_desc::by_name(m)
+                    .ok_or_else(|| format!("unknown model '{m}' in [classes.{name}]"))?;
+                class.model = Some(desc);
+            }
+            if self.id_of(name).is_some() {
+                return Err(format!("duplicate service class '{name}'"));
+            }
+            self.register(class);
+        }
+        Ok(())
+    }
+}
+
+/// Deficit-weighted-round-robin ledger over service classes, applied at
+/// the cluster submit path (see the module docs for the mechanism).
+#[derive(Clone, Debug)]
+pub struct FairShareLedger {
+    weights: Vec<f64>,
+    tiers: Vec<u8>,
+    /// Virtual time per class: admitted tokens / weight.
+    vtime: Vec<f64>,
+    /// Requests admitted and not yet finished/shed, per class.
+    inflight: Vec<u32>,
+    /// Latest observed submit instant per class (seconds), or `-inf`.
+    last_arrival_s: Vec<f64>,
+    n_deferred: u64,
+}
+
+impl FairShareLedger {
+    pub fn from_registry(reg: &ClassRegistry) -> FairShareLedger {
+        FairShareLedger {
+            weights: reg.iter().map(|c| c.weight).collect(),
+            tiers: reg.iter().map(|c| c.tier).collect(),
+            vtime: vec![0.0; reg.len()],
+            inflight: vec![0; reg.len()],
+            last_arrival_s: vec![f64::NEG_INFINITY; reg.len()],
+            n_deferred: 0,
+        }
+    }
+
+    fn idx(&self, c: ClassId) -> usize {
+        (c.0 as usize).min(self.weights.len() - 1)
+    }
+
+    /// A class contends for capacity while it has work in flight or has
+    /// submitted within the contention window (its deferred submits sit
+    /// in the driver's retry queue, which the cluster cannot see).
+    fn contending(&self, j: usize, now_s: f64) -> bool {
+        self.inflight[j] > 0
+            || now_s - self.last_arrival_s[j] <= CONTENTION_WINDOW_S
+    }
+
+    /// Record a submit attempt of class `c` at `t` (counted whether or
+    /// not the request is subsequently admitted).
+    pub fn note_arrival(&mut self, c: ClassId, t: SimTime) {
+        let i = self.idx(c);
+        let s = t.as_secs_f64();
+        if s > self.last_arrival_s[i] {
+            self.last_arrival_s[i] = s;
+        }
+    }
+
+    /// Fairness gate for a class-`c` submit at `t`: `Some(retry_at)`
+    /// defers the request, `None` admits it (subject to the cluster's
+    /// other admission checks).  `over_slo` marks a request already at
+    /// risk of blowing its own TTFT SLO — such a request of a strictly
+    /// higher tier preempts (bypasses) the deferral against lower-tier
+    /// contenders.
+    pub fn check(&mut self, t: SimTime, c: ClassId, over_slo: bool) -> Option<SimTime> {
+        let i = self.idx(c);
+        let now_s = t.as_secs_f64();
+        let slack = FAIR_QUANTUM_TOKENS / self.weights[i];
+        for j in 0..self.weights.len() {
+            if j == i || !self.contending(j, now_s) {
+                continue;
+            }
+            if self.vtime[i] - self.vtime[j] <= slack {
+                continue;
+            }
+            if over_slo && self.tiers[i] > self.tiers[j] {
+                // Priority preemption: the over-SLO higher-tier request
+                // jumps the queued lower-tier backlog.
+                continue;
+            }
+            self.n_deferred += 1;
+            return Some(t.after_secs(FAIR_RETRY_S));
+        }
+        None
+    }
+
+    /// Class `c` was admitted with `tokens` charged work.  An *idle*
+    /// class (nothing in flight) first catches up to the busiest
+    /// contenders' floor so it cannot bank unbounded credit while away.
+    /// A continuously-active class keeps its deficit — that lag is
+    /// exactly what entitles a heavier class to its larger share, so
+    /// only a class re-entering from idle is caught up.
+    pub fn on_admit(&mut self, c: ClassId, tokens: u64) {
+        let i = self.idx(c);
+        if self.inflight[i] == 0 {
+            let floor = self
+                .vtime
+                .iter()
+                .zip(&self.inflight)
+                .enumerate()
+                .filter(|&(j, (_, &inflight))| j != i && inflight > 0)
+                .map(|(_, (&v, _))| v)
+                .fold(f64::INFINITY, f64::min);
+            if floor.is_finite() && self.vtime[i] < floor {
+                self.vtime[i] = floor;
+            }
+        }
+        self.vtime[i] += tokens as f64 / self.weights[i];
+        self.inflight[i] += 1;
+    }
+
+    /// A class-`c` request left the system (finished or shed in flight).
+    pub fn on_done(&mut self, c: ClassId) {
+        let i = self.idx(c);
+        self.inflight[i] = self.inflight[i].saturating_sub(1);
+    }
+
+    /// Virtual time of class `c` (tests / introspection).
+    pub fn vtime(&self, c: ClassId) -> f64 {
+        self.vtime[self.idx(c)]
+    }
+
+    /// Fairness deferrals issued so far.
+    pub fn n_deferred(&self) -> u64 {
+        self.n_deferred
+    }
+
+    /// Forget all load state (class contracts are kept).
+    pub fn reset(&mut self) {
+        self.vtime.fill(0.0);
+        self.inflight.fill(0);
+        self.last_arrival_s.fill(f64::NEG_INFINITY);
+        self.n_deferred = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    fn two_class_registry() -> ClassRegistry {
+        let mut reg = ClassRegistry::new();
+        reg.register(ServiceClass {
+            tier: 1,
+            weight: 2.0,
+            slo_ttft_s: Some(1.0),
+            ..ServiceClass::named("premium")
+        });
+        reg.register(ServiceClass::named("batch"));
+        reg
+    }
+
+    #[test]
+    fn registry_default_class_is_builtin() {
+        let reg = ClassRegistry::new();
+        assert_eq!(reg.len(), 1);
+        assert!(!reg.is_multi_class());
+        assert_eq!(reg.id_of("default"), Some(DEFAULT_CLASS));
+        let d = reg.get(DEFAULT_CLASS);
+        assert_eq!(d.tier, 0);
+        assert_eq!(d.weight, 1.0);
+        assert!(d.slo_ttft_s.is_none() && d.model.is_none());
+        // Unknown ids resolve to the default class, never panic.
+        assert_eq!(reg.get(ClassId(99)).name, "default");
+    }
+
+    #[test]
+    fn apply_toml_parses_classes_sorted_by_name() {
+        let doc = toml::parse(
+            "[classes.premium]\ntenant = \"acme\"\ntier = 1\nweight = 2.0\n\
+             slo_ttft_s = 1.5\nslo_tbt_p99_s = 0.2\nmodel = \"llama3-8b\"\n\
+             [classes.batch]\nweight = 0.5\n",
+        )
+        .unwrap();
+        let mut reg = ClassRegistry::new();
+        reg.apply_toml(&doc).unwrap();
+        assert_eq!(reg.len(), 3);
+        // BTreeMap key order: batch before premium.
+        assert_eq!(reg.get(ClassId(1)).name, "batch");
+        assert_eq!(reg.get(ClassId(2)).name, "premium");
+        let p = reg.get(reg.id_of("premium").unwrap());
+        assert_eq!(p.tenant, "acme");
+        assert_eq!(p.tier, 1);
+        assert_eq!(p.weight, 2.0);
+        assert_eq!(p.slo_ttft_s, Some(1.5));
+        assert_eq!(p.slo_tbt_p99_s, Some(0.2));
+        assert_eq!(p.model.unwrap().name, "llama3-8b");
+        assert!(reg.any_tbt_slo());
+        let b = reg.get(reg.id_of("batch").unwrap());
+        assert_eq!(b.weight, 0.5);
+        assert_eq!(b.tenant, "batch");
+    }
+
+    #[test]
+    fn apply_toml_rejects_bad_tables() {
+        let mut reg = ClassRegistry::new();
+        for bad in [
+            "[classes.default]\nweight = 2.0\n",
+            "[classes.x]\nweight = 0.0\n",
+            "[classes.x]\nweight = -1.0\n",
+            "[classes.x]\ntier = 300\n",
+            "[classes.x]\nslo_ttft_s = 0.0\n",
+            "[classes.x]\nmodel = \"gpt5\"\n",
+            "[classes.x]\nwieght = 2.0\n",
+        ] {
+            let doc = toml::parse(bad).unwrap();
+            assert!(
+                ClassRegistry::new().apply_toml(&doc).is_err(),
+                "accepted: {bad}"
+            );
+        }
+        // No [classes] section: registry unchanged.
+        let doc = toml::parse("[cluster]\nhigh_gpu = \"a100\"\n").unwrap();
+        reg.apply_toml(&doc).unwrap();
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn ledger_defers_the_class_running_ahead() {
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let premium = reg.id_of("premium").unwrap();
+        let batch = reg.id_of("batch").unwrap();
+        let t = SimTime::from_secs_f64(1.0);
+        ledger.note_arrival(batch, t);
+        ledger.note_arrival(premium, t);
+        // Batch charges far ahead of its share.
+        for _ in 0..10 {
+            ledger.on_admit(batch, 2000);
+        }
+        // Premium (behind in virtual time) always passes.
+        assert!(ledger.check(t, premium, false).is_none());
+        // Batch is now > one quantum ahead of contending premium: defer.
+        let deferred = ledger.check(t, batch, false);
+        assert!(deferred.is_some(), "batch should defer");
+        assert!(deferred.unwrap() > t);
+        assert_eq!(ledger.n_deferred(), 1);
+    }
+
+    #[test]
+    fn idle_class_does_not_bank_credit() {
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let premium = reg.id_of("premium").unwrap();
+        let batch = reg.id_of("batch").unwrap();
+        // Batch works alone for a long while.
+        for _ in 0..100 {
+            ledger.on_admit(batch, 4000);
+        }
+        // Premium arrives: its first admit catches up to batch's floor,
+        // so batch is NOT a quantum behind afterwards.
+        ledger.on_admit(premium, 1000);
+        assert!(ledger.vtime(premium) >= ledger.vtime(batch));
+    }
+
+    #[test]
+    fn active_laggard_keeps_its_deficit() {
+        // The idle catch-up must not erase a continuously-active class's
+        // lag: with both classes in flight, a weight-2 class charging
+        // the same token stream as a weight-1 class stays behind in
+        // virtual time — that deficit is exactly what entitles it to a
+        // 2x admitted share once the gate starts deferring the leader.
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let premium = reg.id_of("premium").unwrap();
+        let batch = reg.id_of("batch").unwrap();
+        let t = SimTime::from_secs_f64(1.0);
+        ledger.note_arrival(premium, t);
+        ledger.note_arrival(batch, t);
+        for _ in 0..12 {
+            ledger.on_admit(premium, 1000);
+            ledger.on_admit(batch, 1000);
+        }
+        // Premium (weight 2) advances at half rate; batch only caught up
+        // on its first (idle) admit.
+        assert_eq!(ledger.vtime(premium), 6_000.0);
+        assert_eq!(ledger.vtime(batch), 12_500.0);
+        // The fairness gate therefore defers the leader, not the laggard.
+        assert!(ledger.check(t, premium, false).is_none());
+        assert!(ledger.check(t, batch, false).is_some());
+    }
+
+    #[test]
+    fn over_slo_high_tier_preempts_the_fairness_deferral() {
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let premium = reg.id_of("premium").unwrap();
+        let batch = reg.id_of("batch").unwrap();
+        let t = SimTime::from_secs_f64(1.0);
+        ledger.note_arrival(batch, t);
+        // Premium runs far ahead while batch contends.
+        for _ in 0..20 {
+            ledger.on_admit(premium, 2000);
+        }
+        assert!(ledger.check(t, premium, false).is_some(), "fairness defers");
+        // ... but an over-SLO premium request (tier 1 > batch tier 0)
+        // bypasses the deferral.
+        assert!(ledger.check(t, premium, true).is_none(), "preemption admits");
+        // The bypass never helps the *lower* tier: batch over-SLO while
+        // premium contends still defers once batch runs ahead.
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        ledger.note_arrival(premium, t);
+        for _ in 0..20 {
+            ledger.on_admit(batch, 2000);
+        }
+        assert!(ledger.check(t, batch, true).is_some(), "no low-tier bypass");
+    }
+
+    #[test]
+    fn non_contending_class_never_causes_deferrals() {
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let batch = reg.id_of("batch").unwrap();
+        // Premium never arrives and has nothing in flight; batch may
+        // burst as far ahead as it likes.
+        for _ in 0..50 {
+            let t = SimTime::from_secs_f64(10.0);
+            assert!(ledger.check(t, batch, false).is_none());
+            ledger.on_admit(batch, 4000);
+        }
+        // After the contention window expires, a past arrival stops
+        // counting too.
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let premium = reg.id_of("premium").unwrap();
+        ledger.note_arrival(premium, SimTime::from_secs_f64(0.0));
+        for _ in 0..50 {
+            ledger.on_admit(batch, 4000);
+        }
+        let late = SimTime::from_secs_f64(100.0);
+        assert!(ledger.check(late, batch, false).is_none());
+    }
+
+    #[test]
+    fn inflight_keeps_a_class_contending() {
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let premium = reg.id_of("premium").unwrap();
+        let batch = reg.id_of("batch").unwrap();
+        ledger.on_admit(premium, 100); // premium has work in flight
+        for _ in 0..50 {
+            ledger.on_admit(batch, 4000);
+        }
+        let late = SimTime::from_secs_f64(100.0);
+        assert!(ledger.check(late, batch, false).is_some());
+        ledger.on_done(premium); // last premium request leaves
+        assert!(ledger.check(late, batch, false).is_none());
+    }
+
+    #[test]
+    fn reset_restores_a_fresh_ledger() {
+        let reg = two_class_registry();
+        let mut ledger = FairShareLedger::from_registry(&reg);
+        let batch = reg.id_of("batch").unwrap();
+        ledger.note_arrival(batch, SimTime::from_secs_f64(1.0));
+        ledger.on_admit(batch, 4000);
+        ledger.reset();
+        assert_eq!(ledger.vtime(batch), 0.0);
+        assert_eq!(ledger.n_deferred(), 0);
+        let fresh = FairShareLedger::from_registry(&reg);
+        assert_eq!(format!("{ledger:?}"), format!("{fresh:?}"));
+    }
+}

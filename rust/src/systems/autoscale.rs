@@ -63,6 +63,13 @@ pub struct AutoscaleConfig {
     /// Minimum time between scaling decisions, so one burst cannot
     /// thrash the fleet up and down.
     pub cooldown_s: f64,
+    /// TTFT-SLO headroom (seconds) below which a standby pair is
+    /// activated even when the backlog threshold is quiet — the
+    /// beyond-backlog signal fed from the router's TTFT estimator
+    /// ([`Router::best_ttft_headroom`](crate::cronus::router::Router::best_ttft_headroom)).
+    /// `0.0` (the default) disables the signal, keeping decisions a
+    /// pure function of the backlog alone.
+    pub headroom: f64,
 }
 
 impl Default for AutoscaleConfig {
@@ -74,6 +81,7 @@ impl Default for AutoscaleConfig {
             scale_up_backlog: 6144.0,
             scale_down_backlog: 768.0,
             cooldown_s: 1.0,
+            headroom: 0.0,
         }
     }
 }
@@ -98,6 +106,9 @@ impl AutoscaleConfig {
         }
         if let Some(x) = doc.get_f64("autoscale.cooldown_s") {
             self.cooldown_s = x;
+        }
+        if let Some(x) = doc.get_f64("autoscale.headroom") {
+            self.headroom = x;
         }
     }
 }
@@ -165,6 +176,13 @@ impl FleetController {
         self.states.iter().filter(|s| **s == PairState::Active).count()
     }
 
+    /// The `headroom` signal is configured (`cfg.headroom > 0`), so the
+    /// cluster should feed an observed TTFT-SLO headroom into
+    /// [`FleetController::decide_with_headroom`].
+    pub fn headroom_enabled(&self) -> bool {
+        self.cfg.headroom > 0.0
+    }
+
     /// Observe the router's per-pair outstanding-token backlog at `t`
     /// and return at most one scaling action.
     ///
@@ -172,6 +190,26 @@ impl FleetController {
     /// fleet has no reason to grow (no queue pressure) and shrinking can
     /// wait for the next call, so no separate timer is needed.
     pub fn decide(&mut self, t: SimTime, outstanding: &[f64]) -> Option<ScaleDecision> {
+        self.decide_with_headroom(t, outstanding, None)
+    }
+
+    /// [`FleetController::decide`] plus a beyond-backlog scale-up signal:
+    /// `ttft_headroom_s` is the best (largest) `SLO − estimated TTFT`
+    /// across active pairs, as reported by the router's estimator at `t`.
+    /// When `cfg.headroom > 0` and the observed headroom has shrunk below
+    /// it, a standby pair is activated even though the backlog mean is
+    /// still under `scale_up_backlog` — catching SLO pressure from long
+    /// contexts or slow pairs that plain token counts miss.  A low
+    /// headroom also vetoes draining (shrinking while TTFT is already
+    /// near the SLO would be self-defeating).  Deterministic: decisions
+    /// remain a pure function of the observed `(time, backlog, headroom)`
+    /// sequence.
+    pub fn decide_with_headroom(
+        &mut self,
+        t: SimTime,
+        outstanding: &[f64],
+        ttft_headroom_s: Option<f64>,
+    ) -> Option<ScaleDecision> {
         let n_active = self.n_active().max(1);
         let total: f64 = self
             .states
@@ -199,7 +237,9 @@ impl FleetController {
                 return None;
             }
         }
-        if mean > self.cfg.scale_up_backlog {
+        let headroom_low = self.cfg.headroom > 0.0
+            && ttft_headroom_s.is_some_and(|h| h < self.cfg.headroom);
+        if mean > self.cfg.scale_up_backlog || headroom_low {
             // Lowest-index standby first: retired pairs are reused in a
             // fixed order, keeping runs deterministic.
             let target = self.states.iter().position(|s| *s == PairState::Standby)?;
@@ -261,6 +301,7 @@ mod tests {
             scale_up_backlog: 1000.0,
             scale_down_backlog: 100.0,
             cooldown_s: 0.5,
+            headroom: 0.0,
         }
     }
 
@@ -349,10 +390,12 @@ mod tests {
     fn apply_toml_overlays_every_key() {
         let doc = toml::parse(
             "[autoscale]\nmin_pairs = 2\ninitial_pairs = 3\nwindow_s = 4.0\n\
-             scale_up_backlog = 5000\nscale_down_backlog = 500\ncooldown_s = 2.5\n",
+             scale_up_backlog = 5000\nscale_down_backlog = 500\ncooldown_s = 2.5\n\
+             headroom = 0.4\n",
         )
         .expect("parse");
         let mut c = AutoscaleConfig::default();
+        assert!(!FleetController::new(1, c.clone()).headroom_enabled());
         c.apply_toml(&doc);
         assert_eq!(c.min_pairs, 2);
         assert_eq!(c.initial_pairs, 3);
@@ -360,5 +403,44 @@ mod tests {
         assert_eq!(c.scale_up_backlog, 5000.0);
         assert_eq!(c.scale_down_backlog, 500.0);
         assert_eq!(c.cooldown_s, 2.5);
+        assert_eq!(c.headroom, 0.4);
+        assert!(FleetController::new(1, c).headroom_enabled());
+    }
+
+    #[test]
+    fn low_ttft_headroom_scales_up_below_backlog_threshold() {
+        let mut c = cfg();
+        c.headroom = 0.5;
+        c.cooldown_s = 0.0;
+        let mut ctl = FleetController::new(3, c);
+        // Backlog far under scale_up_backlog (1000), but the router says
+        // the best pair's TTFT is within 0.2 s of the SLO: activate.
+        let d = ctl.decide_with_headroom(at(0.1), &[50.0, 0.0, 0.0], Some(0.2));
+        assert_eq!(d, Some(ScaleDecision::Activate(1)));
+        // Comfortable headroom: the same quiet backlog drains instead.
+        let d = ctl.decide_with_headroom(at(5.0), &[10.0, 0.0, 0.0], Some(3.0));
+        assert_eq!(d, Some(ScaleDecision::Drain(1)));
+        ctl.on_pair_drained(1);
+        // Low headroom with no signal wired (None) never fires, and a
+        // disabled knob (headroom = 0) ignores the signal entirely.
+        assert_eq!(ctl.decide_with_headroom(at(9.0), &[0.0, 0.0, 0.0], None), None);
+        let mut off = FleetController::new(2, cfg());
+        assert_eq!(off.decide_with_headroom(at(0.1), &[0.0, 0.0], Some(0.001)), None);
+    }
+
+    #[test]
+    fn low_headroom_vetoes_draining_an_idle_fleet() {
+        let mut c = cfg();
+        c.headroom = 0.5;
+        c.cooldown_s = 0.0;
+        c.initial_pairs = 3;
+        let mut ctl = FleetController::new(3, c);
+        // Quiet backlog would normally drain, but every pair is out of
+        // standby and TTFT is already near the SLO: hold steady.
+        assert_eq!(ctl.decide_with_headroom(at(0.1), &[10.0, 10.0, 10.0], Some(0.1)), None);
+        assert_eq!(ctl.n_active(), 3);
+        // With headroom restored the drain proceeds as usual.
+        let d = ctl.decide_with_headroom(at(0.2), &[10.0, 10.0, 10.0], Some(4.0));
+        assert_eq!(d, Some(ScaleDecision::Drain(2)));
     }
 }

@@ -48,6 +48,22 @@
 //! in `Report::{n_scale_ups, n_scale_downs}`.  Without a controller the
 //! cluster behaves — byte for byte — as before.
 //!
+//! With a QoS [`ClassRegistry`] attached ([`ClusterSystem::with_classes`])
+//! the cluster is multi-tenant: each submit passes (1) a *model
+//! compatibility* shed — a class pinned to a model no active pair serves
+//! is rejected with a distinct reason, (2) the weighted-fair
+//! [`FairShareLedger`] — a class running more than a quantum ahead of a
+//! contending class is deferred, unless it is over its own TTFT SLO and
+//! of strictly higher tier (priority preemption; queued work only,
+//! in-flight requests and engines are never touched), (3) the router's
+//! TBT-aware admission — arrivals that would blow in-flight classes'
+//! TBT-P99 headroom on every compatible pair are deferred, and (4) SLO
+//! admission under the class's own TTFT SLO (falling back to the
+//! cluster-wide one).  `drain` attaches a per-class breakdown
+//! ([`Report::classes`]) with exact per-class TTFT/TBT percentiles.
+//! Without a registry every gate is inert and the cluster behaves —
+//! byte for byte — as before.
+//!
 //! # Example
 //!
 //! ```
@@ -84,7 +100,8 @@ use std::collections::BinaryHeap;
 
 use crate::config::topology::ClusterConfig;
 use crate::cronus::router::{RoutePolicy, Router};
-use crate::metrics::Report;
+use crate::metrics::{ClassBreakdown, Report};
+use crate::qos::{ClassId, ClassRegistry, FairShareLedger};
 use crate::simclock::SimTime;
 use crate::systems::{
     build_system, drain_pending_into, earliest_instant, Admission, AutoscaleConfig,
@@ -100,6 +117,30 @@ struct AssignedReq {
     tokens: u64,
     session_id: u64,
     final_turn: bool,
+    /// Service class (always the default class outside QoS runs).
+    class: ClassId,
+    /// Full context tokens — retires the request's decode stream from
+    /// the router's TBT estimator when it leaves the system.
+    ctx: u64,
+    /// True arrival instant (per-class TTFT measures from here, so
+    /// admission queueing — the thing the fair-share ledger shapes —
+    /// shows up in the per-class tail).
+    arrival: SimTime,
+    /// Last observed token instant (per-class TBT gaps).
+    last_token: Option<SimTime>,
+}
+
+/// Per-service-class accumulator for one run (QoS runs only).
+#[derive(Default)]
+struct ClassStat {
+    /// Terminal-outcome denominator: admitted or shed at the cluster
+    /// gate (driver-side deferral drops never reach the cluster and are
+    /// invisible here).
+    n_requests: usize,
+    n_finished: usize,
+    n_shed: usize,
+    ttft: Vec<f64>,
+    tbt: Vec<f64>,
 }
 
 /// The cluster's event calendar: a lazily-invalidated min-heap over the
@@ -182,6 +223,13 @@ pub struct ClusterSystem {
     /// the whole autoscale path inert — behavior is byte-identical to a
     /// controller-less cluster).
     autoscale: Option<FleetController>,
+    /// QoS class registry; `None` keeps every QoS gate inert (behavior
+    /// is byte-identical to a registry-less cluster).
+    classes: Option<ClassRegistry>,
+    /// Weighted-fair admission ledger (present iff `classes` is).
+    ledger: Option<FairShareLedger>,
+    /// Per-class outcome + latency accumulators (empty without QoS).
+    class_stats: Vec<ClassStat>,
     /// In-flight request count per pair (drain-before-retire tracking).
     inflight: Vec<usize>,
     n_scale_ups: usize,
@@ -221,6 +269,9 @@ impl ClusterSystem {
             systems,
             assigned: FxHashMap::default(),
             autoscale: None,
+            classes: None,
+            ledger: None,
+            class_stats: Vec::new(),
             inflight: vec![0; n],
             n_scale_ups: 0,
             n_scale_downs: 0,
@@ -239,6 +290,31 @@ impl ClusterSystem {
     pub fn with_slo_ttft(mut self, slo_ttft_s: Option<f64>) -> ClusterSystem {
         self.slo_ttft_s = slo_ttft_s;
         self
+    }
+
+    /// Attach a multi-tenant QoS class registry: submits pass the
+    /// weighted-fair [`FairShareLedger`] and the router's TBT-aware
+    /// admission gate, per-class TTFT SLOs override the cluster-wide
+    /// SLO, model-pinned classes are shed when no active pair serves
+    /// their model, and `drain` attaches a per-class breakdown to the
+    /// report.  Default-class traffic is unaffected byte-for-byte.
+    pub fn with_classes(mut self, registry: ClassRegistry) -> ClusterSystem {
+        self.router.set_class_registry(registry.clone());
+        self.ledger = Some(FairShareLedger::from_registry(&registry));
+        self.class_stats =
+            (0..registry.len()).map(|_| ClassStat::default()).collect();
+        self.classes = Some(registry);
+        self
+    }
+
+    /// The class-stat slot for `class` (`None` outside QoS runs; stale
+    /// ids clamp to the default class like everywhere else).
+    fn class_stat_mut(&mut self, class: ClassId) -> Option<&mut ClassStat> {
+        if self.class_stats.is_empty() {
+            return None;
+        }
+        let i = (class.0 as usize).min(self.class_stats.len() - 1);
+        self.class_stats.get_mut(i)
     }
 
     /// Attach a queue-driven [`FleetController`]: pairs beyond its
@@ -264,7 +340,14 @@ impl ClusterSystem {
     fn autoscale_tick(&mut self, t: SimTime) {
         let Some(ctl) = self.autoscale.as_mut() else { return };
         let outstanding = self.router.outstanding_tokens();
-        match ctl.decide(t, &outstanding) {
+        // Beyond-backlog signal: when the controller's `headroom` knob is
+        // set and the cluster has a TTFT SLO, feed it the best remaining
+        // SLO headroom from the router's estimator.
+        let headroom = match (self.slo_ttft_s, ctl.headroom_enabled()) {
+            (Some(slo), true) => self.router.best_ttft_headroom(slo),
+            _ => None,
+        };
+        match ctl.decide_with_headroom(t, &outstanding, headroom) {
             Some(ScaleDecision::Activate(i)) => {
                 self.router.set_pair_active(i, true);
                 self.n_scale_ups += 1;
@@ -327,29 +410,76 @@ impl ClusterSystem {
             let mut buf = std::mem::take(&mut self.scratch[i]);
             debug_assert!(buf.is_empty());
             self.systems[i].advance_into(until, &mut buf);
+            let qos = self.classes.is_some();
             for ev in &buf {
-                if let SystemEvent::Finished { id, .. } | SystemEvent::Shed { id, .. } =
-                    ev
-                {
-                    if let Some(a) = self.assigned.remove(id) {
-                        debug_assert_eq!(a.pair, i);
-                        self.router.on_completed(a.pair, a.tokens);
-                        // A finished final turn releases the session's
-                        // prefix KV; a shed turn aborts the conversation,
-                        // so its residency is dead weight either way.
-                        let shed = matches!(ev, SystemEvent::Shed { .. });
-                        if a.session_id != NO_SESSION && (a.final_turn || shed) {
-                            self.router.release_session(a.session_id);
-                        }
-                        self.inflight[i] -= 1;
-                        if self.inflight[i] == 0
-                            && self.autoscale.as_ref().is_some_and(|c| c.is_draining(i))
-                        {
-                            // Drain-before-retire: the pair's last
-                            // in-flight request just left the system.
-                            retired.push((i, ev.time()));
+                match ev {
+                    // Per-class latency sampling (QoS runs only; the
+                    // match arms below fall through untouched otherwise,
+                    // keeping the non-QoS hot path allocation-free).
+                    SystemEvent::FirstToken { id, t } if qos => {
+                        if let Some(a) = self.assigned.get_mut(id) {
+                            let c = (a.class.0 as usize)
+                                .min(self.class_stats.len() - 1);
+                            self.class_stats[c]
+                                .ttft
+                                .push(t.saturating_sub(a.arrival).as_secs_f64());
+                            a.last_token = Some(*t);
                         }
                     }
+                    SystemEvent::Token { id, t } if qos => {
+                        if let Some(a) = self.assigned.get_mut(id) {
+                            let c = (a.class.0 as usize)
+                                .min(self.class_stats.len() - 1);
+                            if let Some(prev) = a.last_token {
+                                self.class_stats[c]
+                                    .tbt
+                                    .push(t.saturating_sub(prev).as_secs_f64());
+                            }
+                            a.last_token = Some(*t);
+                        }
+                    }
+                    SystemEvent::Finished { id, .. }
+                    | SystemEvent::Shed { id, .. } => {
+                        if let Some(a) = self.assigned.remove(id) {
+                            debug_assert_eq!(a.pair, i);
+                            self.router.on_completed(a.pair, a.tokens);
+                            // A finished final turn releases the session's
+                            // prefix KV; a shed turn aborts the conversation,
+                            // so its residency is dead weight either way.
+                            let shed = matches!(ev, SystemEvent::Shed { .. });
+                            if a.session_id != NO_SESSION && (a.final_turn || shed) {
+                                self.router.release_session(a.session_id);
+                            }
+                            if qos {
+                                // Retire the decode stream from the TBT
+                                // estimator and settle the fair ledger.
+                                self.router
+                                    .on_stream_completed(a.pair, a.class, a.ctx);
+                                if let Some(l) = self.ledger.as_mut() {
+                                    l.on_done(a.class);
+                                }
+                                let c = (a.class.0 as usize)
+                                    .min(self.class_stats.len() - 1);
+                                if shed {
+                                    self.class_stats[c].n_shed += 1;
+                                } else {
+                                    self.class_stats[c].n_finished += 1;
+                                }
+                            }
+                            self.inflight[i] -= 1;
+                            if self.inflight[i] == 0
+                                && self
+                                    .autoscale
+                                    .as_ref()
+                                    .is_some_and(|c| c.is_draining(i))
+                            {
+                                // Drain-before-retire: the pair's last
+                                // in-flight request just left the system.
+                                retired.push((i, ev.time()));
+                            }
+                        }
+                    }
+                    _ => {}
                 }
             }
             self.scratch[i] = buf;
@@ -419,11 +549,70 @@ impl ServingSystem for ClusterSystem {
         // arrival is admitted or routed.
         self.autoscale_tick(t);
 
-        if let Some(slo) = self.slo_ttft_s {
+        // QoS gates (all inert without a class registry).
+        let mut class_slo = None;
+        if self.classes.is_some() {
+            // Model-aware shed: a class pinned to a model no active pair
+            // serves can never be dispatched — shed with a distinct
+            // reason rather than mis-routing it.
+            if !self.router.has_active_compatible_pair(&req) {
+                let reg = self.classes.as_ref().expect("checked above");
+                let reason = format!(
+                    "no active pair serves model '{}'",
+                    reg.get(req.class).model.map_or("<any>", |m| m.name)
+                );
+                self.n_router_rejected += 1;
+                if let Some(cs) = self.class_stat_mut(req.class) {
+                    cs.n_requests += 1;
+                    cs.n_shed += 1;
+                }
+                if req.session_id != NO_SESSION {
+                    self.router.release_session(req.session_id);
+                }
+                self.pending.push(SystemEvent::Shed {
+                    id: req.id,
+                    t,
+                    reason: reason.clone(),
+                });
+                return Admission::Rejected { reason };
+            }
+            let reg = self.classes.as_ref().expect("checked above");
+            let full_slo = reg.get(req.class).slo_ttft_s;
+            let waited = t.saturating_sub(SimTime(req.arrival_ns)).as_secs_f64();
+            // A request that has already burned half its TTFT budget in
+            // deferrals is *over SLO*: if its tier is strictly higher it
+            // may preempt (bypass) the fairness deferral below.
+            let over_slo = full_slo.is_some_and(|slo| waited >= 0.5 * slo);
+            // Per-class SLOs are end-to-end from true arrival (that is
+            // what `Report.classes` measures): admission sees only the
+            // *remaining* budget, so a request that burned its budget in
+            // deferrals is shed rather than admitted into a guaranteed
+            // violation.
+            class_slo = full_slo.map(|slo| (slo - waited).max(1e-3));
+            let ledger = self.ledger.as_mut().expect("ledger exists with classes");
+            ledger.note_arrival(req.class, t);
+            if let Some(retry_at) = ledger.check(t, req.class, over_slo) {
+                return Admission::Deferred { retry_at };
+            }
+            // TBT-aware admission: defer when every compatible pair's
+            // projected decode iteration would blow the strictest TBT
+            // SLO among its in-flight classes.
+            if let Some(retry_at) = self.router.tbt_admission(t, &req) {
+                return Admission::Deferred { retry_at };
+            }
+        }
+
+        // Per-class TTFT SLO overrides the cluster-wide one.
+        let eff_slo = class_slo.or(self.slo_ttft_s);
+        if let Some(slo) = eff_slo {
             match self.router.slo_admission(t, &req, slo) {
                 Admission::Accepted => {}
                 Admission::Rejected { reason } => {
                     self.n_router_rejected += 1;
+                    if let Some(cs) = self.class_stat_mut(req.class) {
+                        cs.n_requests += 1;
+                        cs.n_shed += 1;
+                    }
                     if req.session_id != NO_SESSION {
                         // The conversation ends here; free its residency.
                         self.router.release_session(req.session_id);
@@ -441,7 +630,7 @@ impl ServingSystem for ClusterSystem {
 
         // With an SLO, dispatch only to pairs the admission check deemed
         // able to serve in time, whatever the base policy prefers.
-        let decision = match self.slo_ttft_s {
+        let decision = match eff_slo {
             Some(slo) => self.router.route_within_slo(&req, slo),
             None => self.router.route(&req),
         };
@@ -459,6 +648,12 @@ impl ServingSystem for ClusterSystem {
                 // Commit only on acceptance, so residency and hit
                 // accounting never reflect requests the pair turned away.
                 self.router.commit_route(&req, &decision);
+                if let Some(ledger) = self.ledger.as_mut() {
+                    ledger.on_admit(req.class, decision.charged_tokens);
+                }
+                if let Some(cs) = self.class_stat_mut(req.class) {
+                    cs.n_requests += 1;
+                }
                 self.assigned.insert(
                     req.id,
                     AssignedReq {
@@ -466,6 +661,10 @@ impl ServingSystem for ClusterSystem {
                         tokens: decision.charged_tokens,
                         session_id: req.session_id,
                         final_turn: req.final_turn,
+                        class: req.class,
+                        ctx: req.total_context() as u64,
+                        arrival: SimTime(req.arrival_ns),
+                        last_token: None,
                     },
                 );
                 self.routed_counts[pair] += 1;
@@ -476,7 +675,13 @@ impl ServingSystem for ClusterSystem {
                 // The pair recorded the shed itself; release the backlog
                 // the router just charged.  The conversation aborts with
                 // it, so its residency goes too.
+                // (The decision was never committed, so the router's
+                // stream counters need no rollback.)
                 self.router.on_completed(pair, decision.charged_tokens);
+                if let Some(cs) = self.class_stat_mut(req.class) {
+                    cs.n_requests += 1;
+                    cs.n_shed += 1;
+                }
                 if req.session_id != NO_SESSION {
                     self.router.release_session(req.session_id);
                 }
@@ -556,6 +761,26 @@ impl ServingSystem for ClusterSystem {
         };
         report.n_scale_ups = self.n_scale_ups;
         report.n_scale_downs = self.n_scale_downs;
+        // Per-class breakdown (QoS runs): the accumulators drain into
+        // the report; throughput shares the run's makespan clock.
+        if let Some(reg) = &self.classes {
+            let makespan_s = report.makespan_s;
+            report.classes = reg
+                .iter()
+                .zip(self.class_stats.iter_mut())
+                .map(|(sc, cs)| {
+                    ClassBreakdown::from_samples(
+                        sc.name.clone(),
+                        cs.n_requests,
+                        cs.n_finished,
+                        cs.n_shed,
+                        makespan_s,
+                        std::mem::take(&mut cs.ttft),
+                        std::mem::take(&mut cs.tbt),
+                    )
+                })
+                .collect();
+        }
 
         // Reset for a fresh run (each drained pair reset itself, so
         // every calendar key is gone).  `Router::reset` keeps the
@@ -569,6 +794,12 @@ impl ServingSystem for ClusterSystem {
         self.inflight.iter_mut().for_each(|c| *c = 0);
         self.n_scale_ups = 0;
         self.n_scale_downs = 0;
+        if let Some(ledger) = self.ledger.as_mut() {
+            ledger.reset();
+        }
+        for cs in &mut self.class_stats {
+            *cs = ClassStat::default();
+        }
         // `Router::reset` re-activated every pair; restore the
         // controller's t=0 standby mask for the next run.
         if let Some(ctl) = self.autoscale.as_mut() {
@@ -797,5 +1028,104 @@ mod tests {
         let mut open = ClusterSystem::new(cfg, RoutePolicy::SloAware);
         let out = replay_trace(&mut open, &trace);
         assert_eq!(out.report.n_finished, 60);
+    }
+
+    // --- QoS: service classes, fair sharing, per-class reporting ---
+
+    #[test]
+    fn qos_cluster_reports_per_class_breakdown_and_conserves() {
+        use crate::qos::{ClassRegistry, ServiceClass};
+        let trace = all_at_once(60, 11);
+        let mut reg = ClassRegistry::new();
+        let premium = reg.register(ServiceClass {
+            tier: 1,
+            weight: 2.0,
+            ..ServiceClass::named("premium")
+        });
+        let batch = reg.register(ServiceClass::named("batch"));
+        let classed: Vec<Request> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r.with_class(if i % 3 == 0 { premium } else { batch }))
+            .collect();
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+            .with_classes(reg);
+        let (out, _events, stats) = replay_trace_collect(&mut sys, &classed);
+        let classes = &out.report.classes;
+        assert_eq!(classes.len(), 3);
+        assert_eq!(classes[0].name, "default");
+        assert_eq!(classes[1].name, "premium");
+        assert_eq!(classes[2].name, "batch");
+        assert_eq!(classes[0].n_requests, 0, "nothing ran in the default class");
+        // Per-class conservation: every terminal outcome lands in its
+        // class's ledger, and the slices sum to the run totals.
+        for c in classes {
+            assert_eq!(c.n_finished + c.n_shed, c.n_requests, "{}", c.name);
+        }
+        assert_eq!(
+            classes.iter().map(|c| c.n_requests).sum::<usize>(),
+            stats.n_accepted + stats.n_rejected
+        );
+        assert_eq!(
+            classes.iter().map(|c| c.n_finished).sum::<usize>(),
+            out.report.n_finished
+        );
+        assert_eq!(classes[1].ttft_samples.len(), classes[1].n_finished);
+        assert!(classes[1].n_finished > 0 && classes[2].n_finished > 0);
+        assert!(classes[1].ttft_p99_s > 0.0 && classes[2].tbt_p99_s > 0.0);
+        let s = out.report.summary();
+        assert!(s.contains("class premium") && s.contains("class batch"), "{s}");
+    }
+
+    #[test]
+    fn default_class_run_is_byte_identical_with_registry_attached() {
+        use crate::qos::{ClassRegistry, ServiceClass};
+        let trace = all_at_once(40, 12);
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut plain = ClusterSystem::new(cfg.clone(), RoutePolicy::KvAffinity);
+        let mut reg = ClassRegistry::new();
+        reg.register(ServiceClass {
+            slo_tbt_p99_s: Some(0.5),
+            ..ServiceClass::named("premium")
+        });
+        let mut qos = ClusterSystem::new(cfg, RoutePolicy::KvAffinity)
+            .with_classes(reg);
+        let (a_out, a_events, _) = replay_trace_collect(&mut plain, &trace);
+        let (b_out, b_events, _) = replay_trace_collect(&mut qos, &trace);
+        assert_eq!(a_events, b_events, "event streams must match exactly");
+        assert_eq!(a_out.report.ttft_p99_s, b_out.report.ttft_p99_s);
+        assert_eq!(a_out.report.tbt_p99_s, b_out.report.tbt_p99_s);
+        assert_eq!(a_out.report.makespan_s, b_out.report.makespan_s);
+        // Only the QoS run carries the (all-default) class breakdown.
+        assert!(a_out.report.classes.is_empty());
+        assert_eq!(b_out.report.classes.len(), 2);
+        assert_eq!(b_out.report.classes[0].n_finished, 40);
+        assert_eq!(b_out.report.classes[1].n_requests, 0);
+    }
+
+    #[test]
+    fn model_pinned_class_sheds_when_no_compatible_pair() {
+        use crate::qos::{ClassRegistry, ServiceClass};
+        use crate::simgpu::model_desc::QWEN2_7B;
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B); // llama-only fleet
+        let mut reg = ClassRegistry::new();
+        let mut sc = ServiceClass::named("qwen-tenant");
+        sc.model = Some(QWEN2_7B);
+        let qwen = reg.register(sc);
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+            .with_classes(reg);
+        let trace: Vec<Request> =
+            all_at_once(10, 13).iter().map(|r| r.with_class(qwen)).collect();
+        let (out, events, stats) = replay_trace_collect(&mut sys, &trace);
+        assert_eq!(stats.n_rejected, 10);
+        assert_eq!(out.report.n_finished, 0);
+        assert_eq!(out.report.n_rejected, 10);
+        let c = &out.report.classes[1];
+        assert_eq!((c.n_requests, c.n_shed), (10, 10));
+        assert!(events.iter().all(|e| matches!(
+            e,
+            SystemEvent::Shed { reason, .. } if reason.contains(QWEN2_7B.name)
+        )));
     }
 }

@@ -14,6 +14,8 @@ pub mod arrival;
 pub mod azure;
 pub mod session;
 
+use crate::qos::ClassId;
+
 /// [`Request::session_id`] value marking a standalone (sessionless)
 /// single-shot request; real session ids start at 1.
 pub const NO_SESSION: u64 = 0;
@@ -46,6 +48,11 @@ pub struct Request {
     /// Last turn of its session: the router releases the session's KV
     /// residency once this request completes.
     pub final_turn: bool,
+    /// Service class of the request's tenant (QoS: priority tier, fair
+    /// share, per-class SLOs, model constraint — see [`crate::qos`]).
+    /// Workload generators leave it at the built-in default class,
+    /// which carries no contract and changes nothing.
+    pub class: ClassId,
 }
 
 impl Request {
@@ -61,7 +68,14 @@ impl Request {
             prefix_len: 0,
             kv_credit: 0,
             final_turn: false,
+            class: ClassId::default(),
         }
+    }
+
+    /// The same request stamped into service class `class`.
+    pub fn with_class(mut self, class: ClassId) -> Request {
+        self.class = class;
+        self
     }
 
     pub fn total_context(&self) -> usize {

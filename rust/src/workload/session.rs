@@ -140,6 +140,7 @@ impl Session {
             prefix_len: self.prefix_len(k),
             kv_credit: 0,
             final_turn: k + 1 == self.turns.len(),
+            class: Default::default(),
         }
     }
 

@@ -609,6 +609,295 @@ fn prop_cluster_system_serves_every_request() {
 }
 
 #[test]
+fn prop_qos_per_class_conservation() {
+    // QoS bookkeeping conservation: with a class registry attached and
+    // random class stamping, every class's report breakdown must agree
+    // exactly with the event stream — each admitted request ends
+    // Finished xor Shed once in its own class, `n_requests == n_finished
+    // + n_shed` after drain, and the class slices sum to the replay's
+    // admission totals.  Retry-cap drops are synthetic driver events the
+    // cluster never accepted, so they appear in neither side.
+    use cronus::config::topology::ClusterConfig;
+    use cronus::cronus::router::RoutePolicy;
+    use cronus::qos::{ClassId, ClassRegistry, ServiceClass};
+    use cronus::systems::cluster::ClusterSystem;
+    use cronus::systems::{replay_trace_collect, SystemEvent};
+    use cronus::util::fxhash::FxHashMap;
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+    check("per-class QoS conservation", 10, |rng| {
+        let n_pairs = rng.range_usize(1, 4);
+        let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+        let policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len())];
+        let mut reg = ClassRegistry::new();
+        let premium = reg.register(ServiceClass {
+            tier: 1,
+            weight: 2.0,
+            slo_ttft_s: Some(0.5 + rng.f64() * 2.0),
+            ..ServiceClass::named("premium")
+        });
+        let batch = reg.register(ServiceClass::named("batch"));
+        let n = rng.range_usize(10, 80);
+        let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
+        let mut trace = stamp(
+            &trace,
+            ArrivalProcess::Poisson {
+                rate_rps: 1.0 + rng.f64() * 12.0,
+                seed: rng.next_u64(),
+            },
+        );
+        let mut class_of: FxHashMap<u64, ClassId> = FxHashMap::default();
+        for r in &mut trace {
+            r.class = match rng.range(0, 3) {
+                0 => ClassId::default(),
+                1 => premium,
+                _ => batch,
+            };
+            class_of.insert(r.id, r.class);
+        }
+        let mut sys = ClusterSystem::new(cfg, policy).with_classes(reg);
+        let (out, events, stats) = replay_trace_collect(&mut sys, &trace);
+
+        let mut fin = [0usize; 3];
+        let mut shed = [0usize; 3];
+        for ev in &events {
+            match ev {
+                SystemEvent::Finished { id, .. } => {
+                    fin[class_of[id].0 as usize] += 1;
+                }
+                SystemEvent::Shed { id, reason, .. }
+                    if !reason.starts_with("dropped by the replay driver") =>
+                {
+                    shed[class_of[id].0 as usize] += 1;
+                }
+                _ => {}
+            }
+        }
+        if out.report.classes.len() != 3 {
+            return PropResult::Fail(format!(
+                "{} class breakdowns for a 3-class registry",
+                out.report.classes.len()
+            ));
+        }
+        for (c, b) in out.report.classes.iter().enumerate() {
+            if b.n_finished != fin[c] || b.n_shed != shed[c] {
+                return PropResult::Fail(format!(
+                    "class {}: breakdown {}f/{}s vs events {}f/{}s",
+                    b.name, b.n_finished, b.n_shed, fin[c], shed[c]
+                ));
+            }
+            if b.n_requests != b.n_finished + b.n_shed {
+                return PropResult::Fail(format!(
+                    "class {}: {} requests but {} finished + {} shed",
+                    b.name, b.n_requests, b.n_finished, b.n_shed
+                ));
+            }
+        }
+        let total: usize = out.report.classes.iter().map(|b| b.n_requests).sum();
+        PropResult::assert_eq(
+            "class slices sum to accepted + rejected",
+            total,
+            stats.n_accepted + stats.n_rejected,
+        )
+    });
+}
+
+#[test]
+fn prop_qos_model_pinned_class_routes_only_to_matching_pairs() {
+    // Model-aware routing invariant: whatever the policy, a request of a
+    // model-pinned class is only ever assigned to a pair deployed with
+    // that model, while unconstrained requests may go anywhere.
+    use cronus::config::topology::ClusterConfig;
+    use cronus::cronus::router::{RoutePolicy, Router};
+    use cronus::qos::{ClassRegistry, ServiceClass};
+    use cronus::simgpu::model_desc::QWEN2_7B;
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+    check("model-pinned class never mismatches", 30, |rng| {
+        let n_pairs = rng.range_usize(2, 7);
+        let mut cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+        // Re-deploy a random subset of pairs with the second model; keep
+        // the fleet genuinely mixed.
+        let mut n_qwen = 0usize;
+        for i in 0..n_pairs {
+            if rng.f64() < 0.5 {
+                cfg.pairs[i].deployment.model = QWEN2_7B;
+                n_qwen += 1;
+            }
+        }
+        if n_qwen == 0 || n_qwen == n_pairs {
+            return PropResult::Discard;
+        }
+        let mut reg = ClassRegistry::new();
+        let pinned = reg.register(ServiceClass {
+            model: Some(QWEN2_7B),
+            ..ServiceClass::named("qwen-only")
+        });
+        let policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len())];
+        let mut router = Router::new(policy, &cfg);
+        router.set_class_registry(reg);
+        let n = rng.range_usize(5, 120);
+        let trace = generate(n, &AzureTraceConfig::default(), rng.next_u64());
+        let trace = stamp(&trace, ArrivalProcess::AllAtOnce);
+        for (i, r) in trace.iter().enumerate() {
+            let mut r = *r;
+            if i % 2 == 0 {
+                r.class = pinned;
+            }
+            if !router.has_active_compatible_pair(&r) {
+                return PropResult::Fail(
+                    "compatible pair exists but was not found".into(),
+                );
+            }
+            let pair = router.route(&r).pair;
+            if r.class == pinned && router.pair_model(pair).name != QWEN2_7B.name {
+                return PropResult::Fail(format!(
+                    "pinned request routed to pair {pair} serving '{}'",
+                    router.pair_model(pair).name
+                ));
+            }
+        }
+        PropResult::Ok
+    });
+}
+
+#[test]
+fn qos_weight_two_class_admits_at_least_its_fair_share() {
+    // Two classes offering identical request streams to one saturated
+    // pair, weights 2:1: the DWRR ledger must defer the lighter class
+    // once it runs a quantum ahead, so the weight-2 class ends up with
+    // at least as many admitted requests (identical shapes make request
+    // counts a faithful token-share proxy; without the ledger the split
+    // would be an even 1:1 race).
+    use cronus::config::topology::ClusterConfig;
+    use cronus::cronus::router::RoutePolicy;
+    use cronus::qos::{ClassRegistry, ServiceClass};
+    use cronus::systems::cluster::ClusterSystem;
+    use cronus::systems::replay_trace_collect;
+    use cronus::workload::Request;
+
+    let mut reg = ClassRegistry::new();
+    let gold = reg.register(ServiceClass {
+        weight: 2.0,
+        ..ServiceClass::named("gold")
+    });
+    let bronze = reg.register(ServiceClass::named("bronze"));
+    // 400 identical requests, alternating gold/bronze at 40 rps — far
+    // beyond one pair's capacity, so the ledger is the binding
+    // constraint at admission.
+    let trace: Vec<Request> = (0..400u64)
+        .map(|i| {
+            let r = Request::new(i, i * 25_000_000, 768, 64);
+            r.with_class(if i % 2 == 0 { gold } else { bronze })
+        })
+        .collect();
+    let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+    let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+        .with_classes(reg);
+    let (out, _events, stats) = replay_trace_collect(&mut sys, &trace);
+
+    assert!(
+        stats.n_deferred > 0,
+        "saturation must trigger fairness deferrals"
+    );
+    let g = &out.report.classes[gold.0 as usize];
+    let b = &out.report.classes[bronze.0 as usize];
+    assert!(g.n_requests > 0 && b.n_requests > 0, "both classes admit");
+    assert!(
+        g.n_requests >= b.n_requests,
+        "weight-2 gold admitted {} requests < weight-1 bronze's {}",
+        g.n_requests,
+        b.n_requests
+    );
+    // Conservation still holds under heavy deferral/drop pressure.
+    let total: usize = out.report.classes.iter().map(|c| c.n_requests).sum();
+    assert_eq!(total, stats.n_accepted + stats.n_rejected);
+}
+
+#[test]
+fn qos_two_class_saturation_holds_premium_slo() {
+    // The QoS acceptance criterion: on a saturated pair, an all-default
+    // baseline blows the premium tenants' arrival-to-first-token P99,
+    // while the classed run — fair-share ledger throttling batch plus
+    // per-class SLO admission — keeps the premium class inside the same
+    // SLO by shedding work that could never meet it.
+    use cronus::config::topology::ClusterConfig;
+    use cronus::cronus::router::RoutePolicy;
+    use cronus::qos::{ClassRegistry, ServiceClass};
+    use cronus::simclock::SimTime;
+    use cronus::systems::cluster::ClusterSystem;
+    use cronus::systems::{replay_trace_collect, SystemEvent};
+    use cronus::util::fxhash::FxHashMap;
+    use cronus::workload::arrival::at_rate;
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+
+    // 160 requests at 8 rps into a single pair: well past capacity.
+    // Every fifth request belongs to the premium tenant.
+    let trace = generate(160, &AzureTraceConfig::default(), 42);
+    let trace = at_rate(&trace, 8.0);
+    let premium_ids: Vec<u64> =
+        trace.iter().enumerate().filter(|(i, _)| i % 5 == 0).map(|(_, r)| r.id).collect();
+    let arrival: FxHashMap<u64, SimTime> =
+        trace.iter().map(|r| (r.id, SimTime(r.arrival_ns))).collect();
+
+    // Baseline: no classes, no SLO — everyone waits in the same queue.
+    let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+    let mut base =
+        ClusterSystem::new(cfg.clone(), RoutePolicy::LeastOutstandingTokens);
+    let (_base_out, base_events, _) = replay_trace_collect(&mut base, &trace);
+    let mut base_ttft: Vec<f64> = base_events
+        .iter()
+        .filter_map(|ev| match ev {
+            SystemEvent::FirstToken { id, t } if premium_ids.contains(id) => {
+                Some(t.saturating_sub(arrival[id]).as_secs_f64())
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(base_ttft.len(), premium_ids.len(), "baseline finishes everything");
+    base_ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let baseline_p99 = stats::percentile(&base_ttft, 99.0);
+    assert!(
+        baseline_p99 > 1.0,
+        "workload must saturate the pair (baseline premium P99 {baseline_p99:.3}s)"
+    );
+
+    // The premium SLO is half what the baseline delivers: the baseline
+    // violates it by construction.
+    let slo = 0.5 * baseline_p99;
+    let mut reg = ClassRegistry::new();
+    let premium = reg.register(ServiceClass {
+        tier: 1,
+        weight: 2.0,
+        slo_ttft_s: Some(slo),
+        ..ServiceClass::named("premium")
+    });
+    let batch = reg.register(ServiceClass::named("batch"));
+    let classed_trace: Vec<_> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, r)| r.with_class(if i % 5 == 0 { premium } else { batch }))
+        .collect();
+    let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+        .with_classes(reg);
+    let (out, _events, stats) = replay_trace_collect(&mut sys, &classed_trace);
+
+    assert!(stats.n_deferred > 0, "the fair-share ledger must throttle batch");
+    let p = &out.report.classes[premium.0 as usize];
+    assert!(p.n_finished > 0, "premium traffic must still be served");
+    assert!(
+        p.ttft_p99_s <= slo,
+        "classed premium P99 {:.3}s must hold the {slo:.3}s SLO \
+         (baseline delivered {baseline_p99:.3}s)",
+        p.ttft_p99_s
+    );
+    assert!(
+        p.ttft_p99_s < baseline_p99,
+        "classing must beat the baseline for the premium tenant"
+    );
+}
+
+#[test]
 fn prop_balancer_fast_path_matches_exhaustive() {
     // §Perf: the binary-search split must agree with the literal
     // Algorithm 1 scan (same grid, same argmin quality).

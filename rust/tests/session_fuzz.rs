@@ -398,6 +398,84 @@ fn fuzz_affinity_on_mixed_cronus_dp_fleet() {
     });
 }
 
+/// QoS inertness under closed-loop sessions: attaching a class registry
+/// — even one declaring a premium class with a TBT SLO, a weight, and a
+/// tier — must not perturb a run whose every turn stays in the default
+/// class.  The event streams must match exactly, and the QoS run's
+/// default-class breakdown must carry the whole run.
+#[test]
+fn fuzz_default_class_sessions_byte_identical_with_registry() {
+    use cronus::qos::{ClassRegistry, ServiceClass};
+    check("default-class closed loop ignores the registry", 6, |rng| {
+        let scfg = SessionConfig {
+            n_sessions: rng.range_usize(3, 8),
+            min_turns: 2,
+            max_turns: 2 + rng.range_usize(0, 3),
+            think_mean_s: 0.2 + rng.f64(),
+            start_window_s: rng.f64() * 3.0,
+            mean_new_input: 192.0 + rng.f64() * 192.0,
+            max_new_input: 1024,
+            mean_output: 96.0 + rng.f64() * 64.0,
+            max_output: 320,
+            seed: rng.next_u64(),
+            ..SessionConfig::default()
+        };
+        let sessions = generate_sessions(&scfg);
+        let n_pairs = rng.range_usize(1, 4);
+        let slo = if rng.f64() < 0.5 { Some(0.8 + rng.f64()) } else { None };
+
+        let (plain_out, plain_events, plain_stats) =
+            run(&sessions, n_pairs, RoutePolicy::KvAffinity, slo);
+
+        let mut reg = ClassRegistry::new();
+        reg.register(ServiceClass {
+            tier: 1,
+            weight: 2.0,
+            slo_tbt_p99_s: Some(0.25),
+            ..ServiceClass::named("premium")
+        });
+        let mut sys =
+            ClusterSystem::new(ClusterConfig::mixed(n_pairs, LLAMA3_8B), RoutePolicy::KvAffinity)
+                .with_slo_ttft(slo)
+                .with_classes(reg);
+        let (qos_out, qos_events, qos_stats) = closed_loop_collect(&mut sys, &sessions);
+
+        if plain_events != qos_events {
+            return PropResult::Fail(
+                "registry-attached default-class run diverged from the plain run"
+                    .into(),
+            );
+        }
+        PropResult::assert_eq(
+            "finished turns",
+            plain_stats.n_finished_turns,
+            qos_stats.n_finished_turns,
+        )
+        .and(|| {
+            PropResult::assert_eq(
+                "report.n_finished",
+                plain_out.report.n_finished,
+                qos_out.report.n_finished,
+            )
+        })
+        .and(|| {
+            PropResult::assert_eq(
+                "default class carries the whole run",
+                qos_out.report.classes[0].n_finished,
+                qos_out.report.n_finished,
+            )
+        })
+        .and(|| {
+            PropResult::assert_eq(
+                "premium class stays empty",
+                qos_out.report.classes[1].n_requests,
+                0,
+            )
+        })
+        .and(|| verify_invariants(&sessions, &qos_out, &qos_events, &qos_stats, "QoS-default"))
+    });
+}
+
 /// "Affinity never violates `--slo-ttft-ms`" is enforced at the
 /// *admission* boundary: the resident pair is used only while its
 /// prefix-credit-aware TTFT estimate meets the SLO (pinned by the
