@@ -23,7 +23,7 @@ use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
 use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
-use crate::metrics::Collector;
+use crate::metrics::{Collector, ReqId};
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::perfmodel::PerfModel;
 use crate::systems::{
@@ -211,6 +211,31 @@ impl ServingSystem for DpSystem {
             st.run_until(until, true);
             drain_pending_into(&mut st.pending, until, out);
         }
+    }
+
+    fn abort_inflight(&mut self) -> Vec<ReqId> {
+        let Some(old) = self.st.take() else {
+            return Vec::new();
+        };
+        // Rebuild the dispatcher + engines from scratch: queued and
+        // running work and all KV state die with the fault.  DP never
+        // sheds, so the in-flight set is exactly the unfinished metrics
+        // records; utilization counters and dispatch history carry over.
+        let mut st = DpState::build(&self.cfg);
+        st.metrics = old.metrics;
+        st.pending = old.pending;
+        st.dispatched = old.dispatched;
+        for e in 0..2 {
+            st.engines[e].busy_time_s = old.engines[e].busy_time_s;
+            st.engines[e].n_iterations = old.engines[e].n_iterations;
+            st.engines[e].n_preemptions = old.engines[e].n_preemptions;
+            st.engines[e].tokens_prefilled = old.engines[e].tokens_prefilled;
+            st.engines[e].tokens_decoded = old.engines[e].tokens_decoded;
+            st.engines[e].tokens_kv_received = old.engines[e].tokens_kv_received;
+        }
+        let ids = st.metrics.drop_unfinished();
+        self.st = Some(st);
+        ids
     }
 
     fn drain(&mut self) -> RunOutcome {

@@ -38,7 +38,7 @@ use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
 use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
-use crate::metrics::Collector;
+use crate::metrics::{Collector, ReqId};
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::link::LinkSpec;
 use crate::simgpu::model_desc::ModelDesc;
@@ -327,6 +327,30 @@ impl ServingSystem for PpSystem {
             st.run_until(until, true);
             drain_pending_into(&mut st.pending, until, out);
         }
+    }
+
+    fn abort_inflight(&mut self) -> Vec<ReqId> {
+        let Some(old) = self.st.take() else {
+            return Vec::new();
+        };
+        // Rebuild the pipeline from scratch: in-flight microbatch
+        // iterations and all KV state die with the fault.  PP never
+        // sheds, so the in-flight set is exactly the unfinished metrics
+        // records; stage busy time and iteration counters carry over.
+        let mut st = PpState::build(&self.cfg, self.sync_barrier);
+        st.metrics = old.metrics;
+        st.pending = old.pending;
+        st.busy = old.busy;
+        st.n_slots = old.n_slots;
+        for g in 0..2 {
+            st.groups[g].n_preemptions = old.groups[g].n_preemptions;
+            st.groups[g].tokens_prefilled = old.groups[g].tokens_prefilled;
+            st.groups[g].tokens_decoded = old.groups[g].tokens_decoded;
+            st.groups[g].tokens_kv_received = old.groups[g].tokens_kv_received;
+        }
+        let ids = st.metrics.drop_unfinished();
+        self.st = Some(st);
+        ids
     }
 
     fn drain(&mut self) -> RunOutcome {

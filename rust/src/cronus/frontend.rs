@@ -30,7 +30,7 @@ use crate::config::DeploymentConfig;
 use crate::cronus::balancer::{Balancer, SplitPolicy};
 use crate::cronus::ppi::{PartialPrefillInstance, PpiJob};
 use crate::engine::{EngineEvent, EngineInstance, EngineRequest, IterationPlan};
-use crate::metrics::Collector;
+use crate::metrics::{Collector, ReqId};
 use crate::simclock::{EventQueue, SimTime};
 use crate::simgpu::fit::calibrate;
 use crate::simgpu::perfmodel::PerfModel;
@@ -328,6 +328,43 @@ impl ServingSystem for CronusSystem {
             st.run_until(until, true);
             drain_pending_into(&mut st.pending, until, out);
         }
+    }
+
+    fn abort_inflight(&mut self) -> Vec<ReqId> {
+        let Some(old) = self.st.take() else {
+            return Vec::new();
+        };
+        let mut ids: Vec<ReqId> = old.reqs.keys().copied().collect();
+        ids.sort_unstable();
+        if ids.is_empty() && old.pending.is_empty() {
+            // Nothing in flight — keep the live state, skip the rebuild.
+            self.st = Some(old);
+            return ids;
+        }
+        // Rebuild the event loop from scratch: queued iterations, PPI
+        // jobs and every byte of KV state die with the fault.  Banked
+        // metrics (finished/shed records) and utilization counters carry
+        // over; the aborted requests' records are forgotten so the
+        // cluster can re-submit them elsewhere.
+        let mut st = CronusState::build(&self.cfg, self.policy, self.swap_gpus);
+        st.metrics = old.metrics;
+        st.n_rejected = old.n_rejected;
+        st.pending = old.pending;
+        for id in &ids {
+            st.metrics.forget(*id);
+        }
+        st.ppi.busy_time_s = old.ppi.busy_time_s;
+        st.ppi.n_prefills = old.ppi.n_prefills;
+        st.ppi.tokens_prefilled = old.ppi.tokens_prefilled;
+        st.ppi.n_buffer_stalls = old.ppi.n_buffer_stalls;
+        st.cpi.busy_time_s = old.cpi.busy_time_s;
+        st.cpi.n_iterations = old.cpi.n_iterations;
+        st.cpi.n_preemptions = old.cpi.n_preemptions;
+        st.cpi.tokens_prefilled = old.cpi.tokens_prefilled;
+        st.cpi.tokens_decoded = old.cpi.tokens_decoded;
+        st.cpi.tokens_kv_received = old.cpi.tokens_kv_received;
+        self.st = Some(st);
+        ids
     }
 
     fn drain(&mut self) -> RunOutcome {

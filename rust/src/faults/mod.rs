@@ -1,0 +1,488 @@
+//! Deterministic fault injection: pair failures, repairs, and retry
+//! backoff.
+//!
+//! A [`FaultPlan`] is a time-ordered list of pair outages fixed *before*
+//! the run — either spelled out in a TOML `[faults]` section
+//! ([`FaultConfig`]) or drawn from a seeded generator — so every chaos
+//! run is exactly reproducible: same plan + same trace + same seed ⇒
+//! byte-identical event streams, failures included.  The cluster splices
+//! the plan into its merged event stream as
+//! [`PairFailed`](crate::systems::SystemEvent::PairFailed) /
+//! [`PairRecovered`](crate::systems::SystemEvent::PairRecovered) events
+//! and recovers by masking the pair, evicting its KV residency, and
+//! re-submitting aborted in-flight work through admission under a
+//! [`RetryBackoff`] schedule.
+//!
+//! An empty plan is inert by construction: the cluster's fault hooks sit
+//! behind a single `is_some()` branch and an empty plan never reaches
+//! them, so every non-fault run stays byte-identical (pinned by the
+//! chaos suite).
+
+use crate::config::toml::{TomlDoc, TomlValue};
+use crate::simclock::SimTime;
+use crate::util::rng::Rng;
+
+/// Retry attempts allowed by default — the drivers' historical
+/// `MAX_DEFERRALS` cap, preserved so [`RetryBackoff::default`] replays
+/// old deferral behaviour byte-for-byte.
+pub const DEFAULT_MAX_ATTEMPTS: usize = 32;
+
+/// One scheduled pair outage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Index of the pair that fails.
+    pub pair: usize,
+    /// Instant the pair goes down.
+    pub fail_at: SimTime,
+    /// `None` = fail-stop (the pair never rejoins this run); `Some(t)` =
+    /// transient stall repaired at `t` (strictly after `fail_at`).
+    pub recover_at: Option<SimTime>,
+}
+
+/// A deterministic, time-ordered fault schedule for one run.
+///
+/// Build one from explicit events ([`FaultPlan::new`]) or from a
+/// `[faults]` TOML section ([`FaultConfig::build_plan`]).  The plan is
+/// immutable once built; the cluster walks it with a cursor.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Validate and time-sort a set of fault events into a plan.
+    /// Rejects outages whose repair does not come strictly after the
+    /// failure.
+    pub fn new(mut events: Vec<FaultEvent>) -> Result<FaultPlan, String> {
+        for e in &events {
+            if let Some(r) = e.recover_at {
+                if r <= e.fail_at {
+                    return Err(format!(
+                        "fault on pair {}: recover_at {:.3}s must come after \
+                         fail_at {:.3}s",
+                        e.pair,
+                        r.as_secs_f64(),
+                        e.fail_at.as_secs_f64()
+                    ));
+                }
+            }
+        }
+        events.sort_by_key(|e| (e.fail_at, e.pair));
+        Ok(FaultPlan { events })
+    }
+
+    /// The inert plan: injects nothing, leaves every run byte-identical.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The scheduled outages, sorted by `(fail_at, pair)`.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+}
+
+/// Deterministic capped exponential backoff for re-submitting deferred
+/// or failure-aborted requests.
+///
+/// Attempt `k` (0-based) retries after `min(base_s · multiplier^k,
+/// cap_s)` seconds, never earlier than the admission layer's own
+/// `retry_at` hint and never at the same nanosecond it was deferred.
+/// The default (`base_s = 0`) degenerates to "retry at the hint, at
+/// least 1 ns later, give up after [`DEFAULT_MAX_ATTEMPTS`]" — exactly
+/// the drivers' historical `MAX_DEFERRALS` behaviour.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryBackoff {
+    /// Give up (shed) once this many attempts have been made.
+    pub max_attempts: usize,
+    /// Delay before the first retry, seconds; `0` disables the delay.
+    pub base_s: f64,
+    /// Geometric growth factor per attempt.
+    pub multiplier: f64,
+    /// Ceiling on the delay, seconds.
+    pub cap_s: f64,
+}
+
+impl Default for RetryBackoff {
+    fn default() -> RetryBackoff {
+        RetryBackoff {
+            max_attempts: DEFAULT_MAX_ATTEMPTS,
+            base_s: 0.0,
+            multiplier: 2.0,
+            cap_s: 1.0,
+        }
+    }
+}
+
+impl RetryBackoff {
+    /// Whether an attempt numbered `attempts` (0-based count of attempts
+    /// already made) would exceed the cap — shed instead of retrying.
+    pub fn gives_up(&self, attempts: usize) -> bool {
+        attempts + 1 >= self.max_attempts
+    }
+
+    /// Next submission instant for a request deferred (or aborted) at
+    /// `now` after `attempts` prior attempts.  `hint` is the admission
+    /// layer's own earliest-retry estimate; the result honours whichever
+    /// of hint / backoff delay is later, and always lands strictly after
+    /// `now`.
+    pub fn retry_at(&self, now: SimTime, hint: SimTime, attempts: usize) -> SimTime {
+        let backed_off = if self.base_s > 0.0 {
+            let growth = self.multiplier.powi(attempts.min(63) as i32);
+            now.after_secs((self.base_s * growth).min(self.cap_s))
+        } else {
+            now
+        };
+        hint.max(backed_off).max(SimTime(now.0.saturating_add(1)))
+    }
+}
+
+/// The TOML `[faults]` section: an explicit schedule, a seeded outage
+/// generator, and the failure-retry backoff knobs.  See CONFIG.md
+/// §`[faults]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the outage generator (`faults.seed`).
+    pub seed: u64,
+    /// Outages to draw from the generator (`faults.n_failures`); `0`
+    /// means only the explicit schedule runs.
+    pub n_failures: usize,
+    /// Mean time between generated failures, fleet-wide, seconds
+    /// (`faults.mtbf_s`).
+    pub mtbf_s: f64,
+    /// Mean time to repair a generated transient failure, seconds
+    /// (`faults.mttr_s`).
+    pub mttr_s: f64,
+    /// Fraction of generated failures that are fail-stop — never
+    /// repaired (`faults.fail_stop_frac`).
+    pub fail_stop_frac: f64,
+    /// Explicit outages (`faults.schedule`), grammar
+    /// `"<pair>@<fail_s>[+<down_s>]"`; composed with the generated ones.
+    pub schedule: Vec<FaultEvent>,
+    /// Failure-retry attempt cap (`faults.max_retries`).
+    pub max_retries: usize,
+    /// First failure-retry delay, seconds (`faults.retry_base_s`).
+    pub retry_base_s: f64,
+    /// Geometric backoff growth (`faults.retry_multiplier`).
+    pub retry_multiplier: f64,
+    /// Backoff delay ceiling, seconds (`faults.retry_cap_s`).
+    pub retry_cap_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            seed: 7,
+            n_failures: 0,
+            mtbf_s: 5.0,
+            mttr_s: 2.0,
+            fail_stop_frac: 0.0,
+            schedule: Vec::new(),
+            max_retries: 8,
+            retry_base_s: 0.05,
+            retry_multiplier: 2.0,
+            retry_cap_s: 1.0,
+        }
+    }
+}
+
+/// Parse one `faults.schedule` entry: `"<pair>@<fail_s>[+<down_s>]"`
+/// (e.g. `"1@2.5+3"` = pair 1 down at 2.5 s, repaired 3 s later;
+/// `"0@10"` = pair 0 fail-stop at 10 s).  Also the grammar of the CLI's
+/// repeatable `--fail` flag.
+pub fn parse_schedule_entry(spec: &str) -> Result<FaultEvent, String> {
+    let bad = |what: &str| format!("fault spec '{spec}': {what} (grammar: <pair>@<fail_s>[+<down_s>])");
+    let (pair_s, rest) = spec.split_once('@').ok_or_else(|| bad("missing '@'"))?;
+    let pair: usize = pair_s
+        .trim()
+        .parse()
+        .map_err(|_| bad("pair index must be a non-negative integer"))?;
+    let (fail_s, down_s) = match rest.split_once('+') {
+        Some((f, d)) => (f, Some(d)),
+        None => (rest, None),
+    };
+    let fail: f64 = fail_s
+        .trim()
+        .parse()
+        .map_err(|_| bad("failure time must be a number of seconds"))?;
+    if !fail.is_finite() || fail < 0.0 {
+        return Err(bad("failure time must be finite and non-negative"));
+    }
+    let recover_at = match down_s {
+        Some(d) => {
+            let down: f64 = d
+                .trim()
+                .parse()
+                .map_err(|_| bad("downtime must be a number of seconds"))?;
+            if !down.is_finite() || down <= 0.0 {
+                return Err(bad("downtime must be finite and positive"));
+            }
+            Some(SimTime::from_secs_f64(fail + down))
+        }
+        None => None,
+    };
+    Ok(FaultEvent {
+        pair,
+        fail_at: SimTime::from_secs_f64(fail),
+        recover_at,
+    })
+}
+
+impl FaultConfig {
+    /// Overlay `faults.*` keys from a parsed TOML document.  Absent keys
+    /// keep their current value; a malformed `schedule` entry is an
+    /// error.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<(), String> {
+        if let Some(x) = doc.get_i64("faults.seed") {
+            self.seed = x as u64;
+        }
+        if let Some(x) = doc.get_i64("faults.n_failures") {
+            self.n_failures = x.max(0) as usize;
+        }
+        if let Some(x) = doc.get_f64("faults.mtbf_s") {
+            self.mtbf_s = x;
+        }
+        if let Some(x) = doc.get_f64("faults.mttr_s") {
+            self.mttr_s = x;
+        }
+        if let Some(x) = doc.get_f64("faults.fail_stop_frac") {
+            self.fail_stop_frac = x.clamp(0.0, 1.0);
+        }
+        if let Some(TomlValue::Array(items)) = doc.get("faults.schedule") {
+            let mut schedule = Vec::with_capacity(items.len());
+            for item in items {
+                let text = item
+                    .as_str()
+                    .ok_or("faults.schedule entries must be strings")?;
+                schedule.push(parse_schedule_entry(text)?);
+            }
+            self.schedule = schedule;
+        }
+        if let Some(x) = doc.get_i64("faults.max_retries") {
+            self.max_retries = x.max(1) as usize;
+        }
+        if let Some(x) = doc.get_f64("faults.retry_base_s") {
+            self.retry_base_s = x.max(0.0);
+        }
+        if let Some(x) = doc.get_f64("faults.retry_multiplier") {
+            self.retry_multiplier = x.max(1.0);
+        }
+        if let Some(x) = doc.get_f64("faults.retry_cap_s") {
+            self.retry_cap_s = x.max(0.0);
+        }
+        Ok(())
+    }
+
+    /// The failure-retry backoff these knobs describe.
+    pub fn backoff(&self) -> RetryBackoff {
+        RetryBackoff {
+            max_attempts: self.max_retries,
+            base_s: self.retry_base_s,
+            multiplier: self.retry_multiplier,
+            cap_s: self.retry_cap_s,
+        }
+    }
+
+    /// Materialize the plan for an `n_pairs` fleet: the explicit
+    /// schedule plus `n_failures` outages drawn from the seeded
+    /// generator (exponential inter-failure gaps at rate `1/mtbf_s`,
+    /// uniform victim pair, exponential repair at rate `1/mttr_s`, and a
+    /// `fail_stop_frac` chance of never repairing).  Same seed ⇒ same
+    /// plan.
+    pub fn build_plan(&self, n_pairs: usize) -> Result<FaultPlan, String> {
+        if n_pairs == 0 {
+            return Err("fault plan needs at least one pair".to_string());
+        }
+        let mut events = self.schedule.clone();
+        if self.n_failures > 0 {
+            let mut rng = Rng::new(self.seed);
+            let mut t = 0.0;
+            for _ in 0..self.n_failures {
+                t += rng.exponential(1.0 / self.mtbf_s.max(1e-9));
+                let pair = rng.range_usize(0, n_pairs);
+                let fail_stop = rng.f64() < self.fail_stop_frac;
+                let down = rng.exponential(1.0 / self.mttr_s.max(1e-9)).max(1e-3);
+                events.push(FaultEvent {
+                    pair,
+                    fail_at: SimTime::from_secs_f64(t),
+                    recover_at: if fail_stop {
+                        None
+                    } else {
+                        Some(SimTime::from_secs_f64(t + down))
+                    },
+                });
+            }
+        }
+        for e in &events {
+            if e.pair >= n_pairs {
+                return Err(format!(
+                    "fault on pair {} but the fleet has only {n_pairs} pairs",
+                    e.pair
+                ));
+            }
+        }
+        FaultPlan::new(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backoff_replays_flat_deferral_semantics() {
+        let b = RetryBackoff::default();
+        assert_eq!(b.max_attempts, DEFAULT_MAX_ATTEMPTS);
+        // Old driver rule: retry = hint.max(t + 1ns), give up at 32.
+        let now = SimTime(1_000);
+        assert_eq!(b.retry_at(now, SimTime(5_000), 0), SimTime(5_000));
+        assert_eq!(b.retry_at(now, SimTime::ZERO, 7), SimTime(1_001));
+        assert!(!b.gives_up(30));
+        assert!(b.gives_up(31));
+    }
+
+    #[test]
+    fn backoff_grows_geometrically_and_caps() {
+        let b = RetryBackoff {
+            max_attempts: 4,
+            base_s: 0.1,
+            multiplier: 2.0,
+            cap_s: 0.3,
+        };
+        let now = SimTime::ZERO;
+        let hint = SimTime::ZERO;
+        assert_eq!(b.retry_at(now, hint, 0), SimTime::from_secs_f64(0.1));
+        assert_eq!(b.retry_at(now, hint, 1), SimTime::from_secs_f64(0.2));
+        // 0.4 would exceed the cap.
+        assert_eq!(b.retry_at(now, hint, 2), SimTime::from_secs_f64(0.3));
+        assert_eq!(b.retry_at(now, hint, 60), SimTime::from_secs_f64(0.3));
+        // A later hint wins over the backoff delay.
+        let late = SimTime::from_secs_f64(9.0);
+        assert_eq!(b.retry_at(now, late, 0), late);
+        assert!(b.gives_up(3));
+        assert!(!b.gives_up(2));
+    }
+
+    #[test]
+    fn plan_sorts_and_validates() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                pair: 1,
+                fail_at: SimTime::from_secs_f64(5.0),
+                recover_at: None,
+            },
+            FaultEvent {
+                pair: 0,
+                fail_at: SimTime::from_secs_f64(2.0),
+                recover_at: Some(SimTime::from_secs_f64(3.0)),
+            },
+        ])
+        .expect("valid plan");
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.events()[0].pair, 0);
+        assert_eq!(plan.events()[1].pair, 1);
+        assert!(FaultPlan::empty().is_empty());
+
+        let bad = FaultPlan::new(vec![FaultEvent {
+            pair: 0,
+            fail_at: SimTime::from_secs_f64(2.0),
+            recover_at: Some(SimTime::from_secs_f64(2.0)),
+        }]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn schedule_grammar_round_trips() {
+        let e = parse_schedule_entry("1@2.5+3").expect("transient spec");
+        assert_eq!(e.pair, 1);
+        assert_eq!(e.fail_at, SimTime::from_secs_f64(2.5));
+        assert_eq!(e.recover_at, Some(SimTime::from_secs_f64(5.5)));
+
+        let e = parse_schedule_entry("0@10").expect("fail-stop spec");
+        assert_eq!(e.pair, 0);
+        assert_eq!(e.recover_at, None);
+
+        assert!(parse_schedule_entry("nope").is_err());
+        assert!(parse_schedule_entry("x@1").is_err());
+        assert!(parse_schedule_entry("0@-1").is_err());
+        assert!(parse_schedule_entry("0@1+0").is_err());
+    }
+
+    #[test]
+    fn toml_section_overlays_every_key() {
+        let doc = crate::config::toml::parse(
+            "[faults]\n\
+             seed = 99\n\
+             n_failures = 3\n\
+             mtbf_s = 1.5\n\
+             mttr_s = 0.5\n\
+             fail_stop_frac = 0.25\n\
+             schedule = [\"0@1.0+2\", \"1@4\"]\n\
+             max_retries = 5\n\
+             retry_base_s = 0.02\n\
+             retry_multiplier = 3.0\n\
+             retry_cap_s = 0.5\n",
+        )
+        .expect("parses");
+        let mut cfg = FaultConfig::default();
+        cfg.apply_toml(&doc).expect("valid section");
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.n_failures, 3);
+        assert_eq!(cfg.mtbf_s, 1.5);
+        assert_eq!(cfg.mttr_s, 0.5);
+        assert_eq!(cfg.fail_stop_frac, 0.25);
+        assert_eq!(cfg.schedule.len(), 2);
+        assert_eq!(cfg.max_retries, 5);
+        let b = cfg.backoff();
+        assert_eq!(b.max_attempts, 5);
+        assert_eq!(b.base_s, 0.02);
+        assert_eq!(b.multiplier, 3.0);
+        assert_eq!(b.cap_s, 0.5);
+    }
+
+    #[test]
+    fn generator_is_seed_deterministic_and_in_range() {
+        let cfg = FaultConfig {
+            n_failures: 16,
+            fail_stop_frac: 0.3,
+            ..FaultConfig::default()
+        };
+        let a = cfg.build_plan(4).expect("plan");
+        let b = cfg.build_plan(4).expect("plan");
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        let mut last = SimTime::ZERO;
+        for e in a.events() {
+            assert!(e.pair < 4);
+            assert!(e.fail_at >= last, "plan must be time-sorted");
+            if let Some(r) = e.recover_at {
+                assert!(r > e.fail_at);
+            }
+            last = e.fail_at;
+        }
+        let other = FaultConfig { seed: 8, ..cfg }.build_plan(4).expect("plan");
+        assert_ne!(a, other, "different seeds draw different outages");
+    }
+
+    #[test]
+    fn out_of_range_pair_is_rejected() {
+        let cfg = FaultConfig {
+            schedule: vec![FaultEvent {
+                pair: 7,
+                fail_at: SimTime::from_secs_f64(1.0),
+                recover_at: None,
+            }],
+            ..FaultConfig::default()
+        };
+        assert!(cfg.build_plan(2).is_err());
+        assert!(cfg.build_plan(8).is_ok());
+    }
+}

@@ -9,6 +9,7 @@ use crate::cronus::balancer::SplitPolicy;
 use crate::cronus::frontend::CronusSystem;
 use crate::cronus::router::RoutePolicy;
 use crate::engine::{EngineInstance, EngineRequest};
+use crate::faults::FaultConfig;
 use crate::simgpu::fit;
 use crate::simgpu::model_desc;
 use crate::simgpu::perfmodel::PerfModel;
@@ -826,6 +827,93 @@ pub fn qos_classes_demo_with(
     (table, points)
 }
 
+// ---------------------------------------------------------------------------
+// Fault injection & recovery (beyond the paper; EXPERIMENTS.md §Faults)
+// ---------------------------------------------------------------------------
+
+/// One run of the fault-injection demo: `label` is `fault-free` (no
+/// plan attached) or `faulted` (the deterministic plan injected).
+pub struct FaultsDemoPoint {
+    pub label: &'static str,
+    pub outcome: RunOutcome,
+}
+
+/// The `--faults` experiment: the same open-loop arrivals served twice
+/// on the same fleet — once fault-free, once with the deterministic
+/// fault plan built from `faults` (scheduled and/or seeded pair
+/// failures) injected mid-run.  The table shows what graceful
+/// degradation costs: failures survived, aborted work retried through
+/// admission, recovery latency, and the tail-latency delta against the
+/// undisturbed baseline.
+pub fn faults_demo(
+    opts: &ExperimentOpts,
+    cluster: &ClusterConfig,
+    policy: RoutePolicy,
+    rate_rps: f64,
+    faults: &FaultConfig,
+) -> Result<(Table, Vec<FaultsDemoPoint>), String> {
+    let plan = faults.build_plan(cluster.n_pairs())?;
+    if plan.is_empty() {
+        return Err(
+            "fault plan is empty: set faults.n_failures or faults.schedule".into(),
+        );
+    }
+    let trace = at_rate(&paper_trace(opts), rate_rps);
+    let run = |label: &'static str, faulted: bool| {
+        let mut sys = ClusterSystem::new(cluster.clone(), policy);
+        if faulted {
+            sys = sys.with_faults(plan.clone(), faults.backoff());
+        }
+        FaultsDemoPoint { label, outcome: replay_trace(&mut sys, &trace) }
+    };
+    let points = vec![run("fault-free", false), run("faulted", true)];
+
+    let mut table = Table::new(
+        format!(
+            "Fault injection on {}: {} requests at {rate_rps:.1} rps, \
+             {} planned failure(s)",
+            cluster.label(),
+            trace.len(),
+            plan.len()
+        ),
+        &[
+            "Run",
+            "reqs",
+            "finished",
+            "shed",
+            "faults",
+            "retried",
+            "recovered",
+            "mean rec (s)",
+            "thpt (req/s)",
+            "TTFT p99 (s)",
+        ],
+    );
+    for p in &points {
+        let r = &p.outcome.report;
+        let mean_rec = if r.recovery_latency_s.is_empty() {
+            "-".to_string()
+        } else {
+            let mean = r.recovery_latency_s.iter().sum::<f64>()
+                / r.recovery_latency_s.len() as f64;
+            format!("{mean:.3}")
+        };
+        table.row(vec![
+            p.label.to_string(),
+            r.n_requests.to_string(),
+            r.n_finished.to_string(),
+            r.n_rejected.to_string(),
+            r.n_pair_failures.to_string(),
+            r.n_retries.to_string(),
+            r.n_recovered.to_string(),
+            mean_rec,
+            format!("{:.2}", r.throughput_rps),
+            format!("{:.3}", r.ttft_p99_s),
+        ]);
+    }
+    Ok((table, points))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -993,6 +1081,50 @@ mod tests {
         let s = table.render();
         assert!(s.contains("baseline") && s.contains("classed"), "{s}");
         assert!(s.contains("premium") && s.contains("batch"), "{s}");
+    }
+
+    #[test]
+    fn faults_demo_reports_both_runs_and_counts_faults() {
+        let opts = ExperimentOpts { n_requests: 30, seed: 7 };
+        let cluster = ClusterConfig::mixed(2, model_desc::LLAMA3_8B);
+        let cfg = FaultConfig {
+            schedule: vec![crate::faults::parse_schedule_entry("0@0.4+1").unwrap()],
+            ..FaultConfig::default()
+        };
+        let (table, points) = faults_demo(
+            &opts,
+            &cluster,
+            RoutePolicy::LeastOutstandingTokens,
+            8.0,
+            &cfg,
+        )
+        .expect("demo runs");
+        assert_eq!(points.len(), 2);
+        let free = &points[0].outcome.report;
+        let faulted = &points[1].outcome.report;
+        assert_eq!(free.n_pair_failures, 0);
+        assert_eq!(faulted.n_pair_failures, 1);
+        assert_eq!(faulted.n_recovered, 1);
+        // Conservation under the fault on both runs.
+        assert_eq!(free.n_finished + free.n_rejected, 30);
+        assert_eq!(faulted.n_finished + faulted.n_rejected, 30);
+        let s = table.render();
+        assert!(s.contains("fault-free") && s.contains("faulted"), "{s}");
+    }
+
+    #[test]
+    fn faults_demo_rejects_empty_plan() {
+        let opts = tiny_opts();
+        let cluster = ClusterConfig::mixed(2, model_desc::LLAMA3_8B);
+        let err = faults_demo(
+            &opts,
+            &cluster,
+            RoutePolicy::LeastOutstandingTokens,
+            8.0,
+            &FaultConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.contains("empty"), "{err}");
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod benchkit;
 pub mod config;
 pub mod cronus;
 pub mod engine;
+pub mod faults;
 pub mod kvcache;
 pub mod launcher;
 pub mod planner;

@@ -166,7 +166,20 @@ fn main() {
                  baseline (labels only) vs full contracts; writes \
                  BENCH_qos.json ($CRONUS_QOS_BENCH_JSON overrides the path)",
             )
-            .opt("rate-rps", "offered request rate for --classes", Some("8"))
+            .opt("rate-rps", "offered request rate for --classes/--faults", Some("8"))
+            .flag(
+                "faults",
+                "fault-injection demo: replay the same trace fault-free vs \
+                 with deterministic pair failures ([faults] keys in --config \
+                 tune the plan); writes BENCH_faults.json \
+                 ($CRONUS_FAULTS_BENCH_JSON overrides the path)",
+            )
+            .opt(
+                "fail",
+                "comma-separated outages <pair>@<fail_s>[+<down_s>] appended \
+                 to the --faults plan (e.g. 0@1+2,1@4)",
+                None,
+            )
             .flag("help", "print usage"),
             &raw,
             |args| {
@@ -248,6 +261,59 @@ fn main() {
                     };
                     table.print();
                     write_qos_artifact(args, &cluster, policy, rate, slo_s, &points);
+                    return;
+                }
+                if args.has_flag("faults") {
+                    // Fault-injection mode: the same open-loop arrivals
+                    // served twice — undisturbed, then under a
+                    // deterministic pair-failure plan — to measure what
+                    // graceful degradation costs.
+                    let cluster = match args.get("config") {
+                        Some(path) => cluster_from_toml(path),
+                        None => cronus::config::ClusterConfig::mixed(
+                            args.get_usize("pairs").unwrap(),
+                            cronus::simgpu::model_desc::LLAMA3_8B,
+                        ),
+                    };
+                    let rate = args.get_f64("rate-rps").unwrap();
+                    let mut fcfg = cronus::faults::FaultConfig::default();
+                    if let Some(path) = args.get("config") {
+                        if let Err(e) = fcfg.apply_toml(&load_toml(path)) {
+                            eprintln!("{path}: {e}");
+                            std::process::exit(2);
+                        }
+                    }
+                    if let Some(specs) = args.get("fail") {
+                        for spec in specs.split(',').filter(|s| !s.trim().is_empty()) {
+                            match cronus::faults::parse_schedule_entry(spec.trim()) {
+                                Ok(e) => fcfg.schedule.push(e),
+                                Err(e) => {
+                                    eprintln!("{e}");
+                                    std::process::exit(2);
+                                }
+                            }
+                        }
+                    }
+                    if fcfg.n_failures == 0 && fcfg.schedule.is_empty() {
+                        // Out-of-the-box demo outage: pair 0 down at
+                        // 1 s, repaired 2 s later.
+                        fcfg.schedule.push(
+                            cronus::faults::parse_schedule_entry("0@1+2").unwrap(),
+                        );
+                    }
+                    let (table, points) = launcher::faults_demo(
+                        &opts(args),
+                        &cluster,
+                        policy,
+                        rate,
+                        &fcfg,
+                    )
+                    .unwrap_or_else(|e| {
+                        eprintln!("{e}");
+                        std::process::exit(2);
+                    });
+                    table.print();
+                    write_faults_artifact(args, &cluster, policy, rate, &fcfg, &points);
                     return;
                 }
                 if args.has_flag("closed-loop") {
@@ -542,6 +608,72 @@ fn write_qos_artifact(
     println!("\nwrote {path}");
 }
 
+/// Emit the machine-readable fault-injection artifact for
+/// `bench-cluster --faults` (schema v1; CI validates and archives it —
+/// record, don't gate, see EXPERIMENTS.md §Faults).
+fn write_faults_artifact(
+    args: &cronus::config::cli::Args,
+    cluster: &cronus::config::ClusterConfig,
+    policy: RoutePolicy,
+    rate_rps: f64,
+    fcfg: &cronus::faults::FaultConfig,
+    points: &[launcher::FaultsDemoPoint],
+) {
+    use cronus::benchkit::JVal;
+    let run_jval = |p: &launcher::FaultsDemoPoint| -> JVal {
+        let r = &p.outcome.report;
+        let mean_rec = if r.recovery_latency_s.is_empty() {
+            0.0
+        } else {
+            r.recovery_latency_s.iter().sum::<f64>() / r.recovery_latency_s.len() as f64
+        };
+        JVal::Obj(vec![
+            ("run".into(), JVal::Str(p.label.into())),
+            ("requests".into(), JVal::Int(r.n_requests as u64)),
+            ("finished".into(), JVal::Int(r.n_finished as u64)),
+            ("shed".into(), JVal::Int(r.n_rejected as u64)),
+            ("pair_failures".into(), JVal::Int(r.n_pair_failures as u64)),
+            ("retries".into(), JVal::Int(r.n_retries as u64)),
+            ("recovered".into(), JVal::Int(r.n_recovered as u64)),
+            ("recovery_latency_mean_s".into(), JVal::Num(mean_rec)),
+            ("throughput_rps".into(), JVal::Num(r.throughput_rps)),
+            ("ttft_p99_s".into(), JVal::Num(r.ttft_p99_s)),
+            ("tbt_p99_s".into(), JVal::Num(r.tbt_p99_s)),
+        ])
+    };
+    let n_planned = fcfg
+        .build_plan(cluster.n_pairs())
+        .map(|p| p.len())
+        .unwrap_or(0);
+    let artifact = JVal::Obj(vec![
+        ("schema_version".into(), JVal::Int(1)),
+        ("generated_by".into(), JVal::Str("bench-cluster --faults".into())),
+        (
+            "workload".into(),
+            JVal::Obj(vec![
+                (
+                    "n_requests".into(),
+                    JVal::Int(args.get_usize("n").unwrap() as u64),
+                ),
+                ("seed".into(), JVal::Int(args.get_u64("seed").unwrap())),
+                ("rate_rps".into(), JVal::Num(rate_rps)),
+                ("policy".into(), JVal::Str(policy.name().into())),
+                ("n_pairs".into(), JVal::Int(cluster.n_pairs() as u64)),
+                ("faults_seed".into(), JVal::Int(fcfg.seed)),
+                ("n_planned_failures".into(), JVal::Int(n_planned as u64)),
+            ]),
+        ),
+        ("runs".into(), JVal::Arr(points.iter().map(run_jval).collect())),
+    ]);
+    let path = std::env::var("CRONUS_FAULTS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    std::fs::write(&path, artifact.render() + "\n").unwrap_or_else(|e| {
+        eprintln!("cannot write {path}: {e}");
+        std::process::exit(2);
+    });
+    println!("\nwrote {path}");
+}
+
 fn with_parser(
     parser: Parser,
     raw: &[String],
@@ -603,7 +735,8 @@ fn print_help() {
          \x20 bench-fig3     reproduce Fig. 3 (linear iteration-time fits)\n\
          \x20 bench-cluster  sweep 1\u{2192}N mixed pairs behind the cluster router\n\
          \x20                (--autoscale: queue-driven elastic pair set;\n\
-         \x20                 --classes: multi-tenant QoS service classes)\n\
+         \x20                 --classes: multi-tenant QoS service classes;\n\
+         \x20                 --faults: deterministic pair-failure injection)\n\
          \x20 plan-topology  search pair compositions under a budget, emit TOML\n\
          \x20 calibrate      print the Balancer's fitted predictors\n\
          \x20 trace          generate + summarize a workload trace\n\

@@ -21,6 +21,9 @@ struct RequestRecord {
     tbt_gaps_s: Vec<f64>,
     finished: Option<SimTime>,
     output_tokens: usize,
+    /// Terminally shed (vs merely unfinished) — a fault abort must not
+    /// forget shed records, only genuinely in-flight ones.
+    shed: bool,
 }
 
 /// Collects per-request events during a run; produces a [`Report`].
@@ -46,6 +49,7 @@ impl Collector {
                 tbt_gaps_s: Vec::new(),
                 finished: None,
                 output_tokens: 0,
+                shed: false,
             },
         );
         debug_assert!(prev.is_none(), "request {req} arrived twice");
@@ -74,8 +78,36 @@ impl Collector {
 
     /// The request was shed (rejected at admission or dropped); it stays
     /// in `n_requests` but is surfaced via [`Report::n_rejected`].
-    pub fn on_shed(&mut self, _req: ReqId) {
+    pub fn on_shed(&mut self, req: ReqId) {
         self.n_shed += 1;
+        if let Some(rec) = self.records.get_mut(&req) {
+            rec.shed = true;
+        }
+    }
+
+    /// Fault abort: erase `req`'s record entirely, as if it never
+    /// arrived — it contributes to no count and no latency sample.
+    /// No-op for unknown ids.
+    pub fn forget(&mut self, req: ReqId) {
+        self.records.remove(&req);
+    }
+
+    /// Fault abort for systems that track in-flight work only through
+    /// their records: [`forget`](Collector::forget) every request that
+    /// reached no terminal state (neither finished nor shed).  Returns
+    /// the forgotten ids, ascending.
+    pub fn drop_unfinished(&mut self) -> Vec<ReqId> {
+        let mut ids: Vec<ReqId> = self
+            .records
+            .iter()
+            .filter(|(_, r)| r.finished.is_none() && !r.shed)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable();
+        for id in &ids {
+            self.records.remove(id);
+        }
+        ids
     }
 
     pub fn n_shed(&self) -> usize {
@@ -142,6 +174,9 @@ pub struct ClassBreakdown {
     pub throughput_rps: f64,
     pub ttft_p99_s: f64,
     pub tbt_p99_s: f64,
+    /// Requests of this class re-submitted after a pair failure aborted
+    /// them mid-flight (fault injection; 0 without a fault plan).
+    pub n_retries: usize,
     /// Raw TTFT samples of this class, sorted ascending.
     pub ttft_samples: Vec<f64>,
     /// Raw inter-token gaps of this class, sorted ascending.
@@ -174,6 +209,7 @@ impl ClassBreakdown {
             },
             ttft_p99_s: percentile_of_sorted(&ttft, 99.0),
             tbt_p99_s: percentile_of_sorted(&tbt, 99.0),
+            n_retries: 0,
             ttft_samples: ttft,
             tbt_samples: tbt,
         }
@@ -226,6 +262,17 @@ pub struct Report {
     pub n_scale_ups: usize,
     /// Pairs drained and retired to standby by the fleet controller.
     pub n_scale_downs: usize,
+    /// Pair outages injected by a fault plan (cluster-level; 0 without
+    /// one).
+    pub n_pair_failures: usize,
+    /// Failure-retry submissions: requests re-offered to admission after
+    /// a pair failure aborted them mid-flight.
+    pub n_retries: usize,
+    /// Outages that repaired and rejoined during the run.
+    pub n_recovered: usize,
+    /// Outage durations (seconds) of the repaired failures, sorted
+    /// ascending (kept raw so merged reports keep exact percentiles).
+    pub recovery_latency_s: Vec<f64>,
     /// Per-service-class breakdown (cluster runs with a QoS class
     /// registry attached; empty otherwise).  Ordered by class id.
     pub classes: Vec<ClassBreakdown>,
@@ -292,6 +339,10 @@ impl Report {
             kv_hit_rate: 0.0,
             n_scale_ups: 0,
             n_scale_downs: 0,
+            n_pair_failures: 0,
+            n_retries: 0,
+            n_recovered: 0,
+            recovery_latency_s: Vec::new(),
             classes: Vec::new(),
             ttft_samples: ttft,
             tbt_samples: tbt,
@@ -319,6 +370,10 @@ impl Report {
         let mut n_prefix_routed = 0usize;
         let mut n_scale_ups = 0usize;
         let mut n_scale_downs = 0usize;
+        let mut n_pair_failures = 0usize;
+        let mut n_retries = 0usize;
+        let mut n_recovered = 0usize;
+        let mut recovery_latency_s = Vec::new();
         let mut makespan_s = 0.0f64;
         for p in parts {
             n_requests += p.n_requests;
@@ -330,6 +385,10 @@ impl Report {
             n_prefix_routed += p.n_prefix_routed;
             n_scale_ups += p.n_scale_ups;
             n_scale_downs += p.n_scale_downs;
+            n_pair_failures += p.n_pair_failures;
+            n_retries += p.n_retries;
+            n_recovered += p.n_recovered;
+            recovery_latency_s.extend_from_slice(&p.recovery_latency_s);
             makespan_s = makespan_s.max(p.makespan_s);
             ttft.extend_from_slice(&p.ttft_samples);
             tbt.extend_from_slice(&p.tbt_samples);
@@ -351,6 +410,11 @@ impl Report {
         report.n_prefix_routed = n_prefix_routed;
         report.n_scale_ups = n_scale_ups;
         report.n_scale_downs = n_scale_downs;
+        report.n_pair_failures = n_pair_failures;
+        report.n_retries = n_retries;
+        report.n_recovered = n_recovered;
+        recovery_latency_s.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        report.recovery_latency_s = recovery_latency_s;
         report.classes = Self::merge_classes(parts);
         // The per-pair parts of a cluster run carry no KV accounting
         // (the router owns it; the cluster stamps hits + denominator
@@ -382,6 +446,7 @@ impl Report {
             .into_iter()
             .map(|name| {
                 let (mut n_req, mut n_fin, mut n_shed) = (0usize, 0usize, 0usize);
+                let mut n_retries = 0usize;
                 let mut ttft = Vec::new();
                 let mut tbt = Vec::new();
                 for p in parts {
@@ -389,13 +454,16 @@ impl Report {
                         n_req += c.n_requests;
                         n_fin += c.n_finished;
                         n_shed += c.n_shed;
+                        n_retries += c.n_retries;
                         ttft.extend_from_slice(&c.ttft_samples);
                         tbt.extend_from_slice(&c.tbt_samples);
                     }
                 }
-                ClassBreakdown::from_samples(
+                let mut merged = ClassBreakdown::from_samples(
                     name, n_req, n_fin, n_shed, makespan_s, ttft, tbt,
-                )
+                );
+                merged.n_retries = n_retries;
+                merged
             })
             .collect()
     }
@@ -431,6 +499,12 @@ impl Report {
                 self.n_scale_ups, self.n_scale_downs
             ));
         }
+        if self.n_pair_failures > 0 {
+            s.push_str(&format!(
+                "  faults {} (retried {}, recovered {})",
+                self.n_pair_failures, self.n_retries, self.n_recovered
+            ));
+        }
         for c in &self.classes {
             s.push_str(&format!(
                 "\n    class {:<12} {:>5}/{:<5} reqs  thpt {:>6.2} req/s  \
@@ -444,6 +518,9 @@ impl Report {
             ));
             if c.n_shed > 0 {
                 s.push_str(&format!("  shed {}", c.n_shed));
+            }
+            if c.n_retries > 0 {
+                s.push_str(&format!("  retried {}", c.n_retries));
             }
         }
         s
@@ -650,6 +727,67 @@ mod tests {
         let merged = Report::merge("m", &[r.clone(), r]);
         assert_eq!(merged.n_scale_ups, 6);
         assert_eq!(merged.n_scale_downs, 4);
+    }
+
+    #[test]
+    fn fault_counters_merge_and_surface_in_summary() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_token(1, t(0.1));
+        c.on_finish(1, t(0.2));
+        let mut r = c.report("x");
+        assert_eq!((r.n_pair_failures, r.n_retries, r.n_recovered), (0, 0, 0));
+        assert!(r.recovery_latency_s.is_empty());
+        assert!(!r.summary().contains("faults"));
+        r.n_pair_failures = 2;
+        r.n_retries = 5;
+        r.n_recovered = 1;
+        r.recovery_latency_s = vec![0.8];
+        let s = r.summary();
+        assert!(s.contains("faults 2 (retried 5, recovered 1)"), "{s}");
+        let merged = Report::merge("m", &[r.clone(), r]);
+        assert_eq!(merged.n_pair_failures, 4);
+        assert_eq!(merged.n_retries, 10);
+        assert_eq!(merged.n_recovered, 2);
+        assert_eq!(merged.recovery_latency_s, vec![0.8, 0.8]);
+    }
+
+    #[test]
+    fn fault_abort_forgets_inflight_but_keeps_terminal_records() {
+        let mut c = Collector::new();
+        // 1 finishes, 2 is shed, 3 and 4 are mid-flight.
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_token(1, t(0.1));
+        c.on_finish(1, t(0.2));
+        c.on_arrival(2, SimTime::ZERO);
+        c.on_shed(2);
+        c.on_arrival(4, SimTime::ZERO);
+        c.on_arrival(3, SimTime::ZERO);
+        c.on_token(3, t(0.1));
+        let dropped = c.drop_unfinished();
+        assert_eq!(dropped, vec![3, 4], "sorted, terminal records spared");
+        let r = c.report("x");
+        assert_eq!(r.n_requests, 2);
+        assert_eq!(r.n_finished, 1);
+        assert_eq!(r.n_rejected, 1);
+        // The aborted requests left no latency samples behind.
+        assert_eq!(r.ttft_samples.len(), 1);
+        // The ids can arrive again (re-submission to the same pair).
+        c.on_arrival(3, t(1.0));
+        c.forget(3);
+        assert_eq!(c.n_arrived(), 2);
+    }
+
+    #[test]
+    fn class_retries_merge_and_surface_in_summary() {
+        let mut a =
+            ClassBreakdown::from_samples("premium", 3, 3, 0, 1.0, vec![0.1], vec![]);
+        a.n_retries = 2;
+        let mut r = Report::from_samples("x", 3, 3, 3, 1.0, vec![], vec![], vec![]);
+        r.classes = vec![a];
+        assert!(r.summary().contains("retried 2"), "{}", r.summary());
+        let merged = Report::merge("m", &[r.clone(), r]);
+        assert_eq!(merged.classes[0].n_retries, 4);
     }
 
     #[test]

@@ -70,6 +70,12 @@ pub struct AutoscaleConfig {
     /// `0.0` (the default) disables the signal, keeping decisions a
     /// pure function of the backlog alone.
     pub headroom: f64,
+    /// Mean in-flight requests *per active pair* above which a standby
+    /// pair is activated even when the token backlog is quiet — the
+    /// per-pair utilization signal, catching batch-slot pressure from
+    /// many small requests that token counts miss.  `0.0` (the default)
+    /// disables the signal.
+    pub util: f64,
 }
 
 impl Default for AutoscaleConfig {
@@ -82,6 +88,7 @@ impl Default for AutoscaleConfig {
             scale_down_backlog: 768.0,
             cooldown_s: 1.0,
             headroom: 0.0,
+            util: 0.0,
         }
     }
 }
@@ -110,6 +117,9 @@ impl AutoscaleConfig {
         if let Some(x) = doc.get_f64("autoscale.headroom") {
             self.headroom = x;
         }
+        if let Some(x) = doc.get_f64("autoscale.util") {
+            self.util = x;
+        }
     }
 }
 
@@ -122,6 +132,9 @@ pub enum PairState {
     Draining,
     /// Retired (or never started) — eligible for the next scale-up.
     Standby,
+    /// Down due to an injected fault; invisible to scaling decisions
+    /// until repaired, then rejoins as standby.
+    Failed,
 }
 
 /// A scaling action the cluster should execute.
@@ -183,6 +196,13 @@ impl FleetController {
         self.cfg.headroom > 0.0
     }
 
+    /// The `util` signal is configured (`cfg.util > 0`), so the cluster
+    /// should feed per-pair in-flight counts into
+    /// [`FleetController::decide_full`].
+    pub fn util_enabled(&self) -> bool {
+        self.cfg.util > 0.0
+    }
+
     /// Observe the router's per-pair outstanding-token backlog at `t`
     /// and return at most one scaling action.
     ///
@@ -209,6 +229,24 @@ impl FleetController {
         t: SimTime,
         outstanding: &[f64],
         ttft_headroom_s: Option<f64>,
+    ) -> Option<ScaleDecision> {
+        self.decide_full(t, outstanding, ttft_headroom_s, None)
+    }
+
+    /// [`FleetController::decide_with_headroom`] plus the per-pair
+    /// utilization signal: `utilization[i]` is pair `i`'s in-flight
+    /// request count as observed by the cluster at `t`.  When
+    /// `cfg.util > 0` and the mean over active pairs exceeds it, a
+    /// standby pair is activated even though the token backlog is quiet
+    /// — and, like a low TTFT headroom, high utilization vetoes
+    /// draining.  `None` (or `cfg.util = 0`) keeps decisions identical
+    /// to [`FleetController::decide_with_headroom`].
+    pub fn decide_full(
+        &mut self,
+        t: SimTime,
+        outstanding: &[f64],
+        ttft_headroom_s: Option<f64>,
+        utilization: Option<&[f64]>,
     ) -> Option<ScaleDecision> {
         let n_active = self.n_active().max(1);
         let total: f64 = self
@@ -239,7 +277,18 @@ impl FleetController {
         }
         let headroom_low = self.cfg.headroom > 0.0
             && ttft_headroom_s.is_some_and(|h| h < self.cfg.headroom);
-        if mean > self.cfg.scale_up_backlog || headroom_low {
+        let util_high = self.cfg.util > 0.0
+            && utilization.is_some_and(|u| {
+                let total: f64 = self
+                    .states
+                    .iter()
+                    .zip(u)
+                    .filter(|(s, _)| **s == PairState::Active)
+                    .map(|(_, v)| *v)
+                    .sum();
+                total / n_active as f64 > self.cfg.util
+            });
+        if mean > self.cfg.scale_up_backlog || headroom_low || util_high {
             // Lowest-index standby first: retired pairs are reused in a
             // fixed order, keeping runs deterministic.
             let target = self.states.iter().position(|s| *s == PairState::Standby)?;
@@ -276,6 +325,38 @@ impl FleetController {
         self.states[i] = PairState::Standby;
     }
 
+    /// Pair `i` is down due to an injected fault.
+    pub fn is_failed(&self, i: usize) -> bool {
+        self.states[i] == PairState::Failed
+    }
+
+    /// The cluster injected a failure on pair `i`: it leaves the
+    /// routable set immediately, whatever its lifecycle state was, and
+    /// stays invisible to scaling decisions until repaired.
+    pub fn on_pair_failed(&mut self, i: usize) {
+        self.states[i] = PairState::Failed;
+    }
+
+    /// Pair `i` was repaired: it rejoins as *standby* — the failure
+    /// already flipped a standby active in its place
+    /// ([`FleetController::force_activate`]), so re-activation waits for
+    /// real backlog pressure.
+    pub fn on_pair_recovered(&mut self, i: usize) {
+        debug_assert_eq!(self.states[i], PairState::Failed);
+        self.states[i] = PairState::Standby;
+    }
+
+    /// Immediately activate the lowest-index standby pair, bypassing the
+    /// windowed thresholds and the cooldown — the implicit scale-up the
+    /// cluster executes when a pair fails.  Leaves the decision clock
+    /// untouched so ordinary scaling is not delayed by the emergency
+    /// action.  `None` when no standby is left.
+    pub fn force_activate(&mut self) -> Option<usize> {
+        let target = self.states.iter().position(|s| *s == PairState::Standby)?;
+        self.states[target] = PairState::Active;
+        Some(target)
+    }
+
     /// Restore the t=0 state (initial actives, empty window).
     pub fn reset(&mut self) {
         let initial = self.cfg.initial_pairs.clamp(self.cfg.min_pairs.max(1), self.states.len());
@@ -302,6 +383,7 @@ mod tests {
             scale_down_backlog: 100.0,
             cooldown_s: 0.5,
             headroom: 0.0,
+            util: 0.0,
         }
     }
 
@@ -391,7 +473,7 @@ mod tests {
         let doc = toml::parse(
             "[autoscale]\nmin_pairs = 2\ninitial_pairs = 3\nwindow_s = 4.0\n\
              scale_up_backlog = 5000\nscale_down_backlog = 500\ncooldown_s = 2.5\n\
-             headroom = 0.4\n",
+             headroom = 0.4\nutil = 0.9\n",
         )
         .expect("parse");
         let mut c = AutoscaleConfig::default();
@@ -404,6 +486,7 @@ mod tests {
         assert_eq!(c.scale_down_backlog, 500.0);
         assert_eq!(c.cooldown_s, 2.5);
         assert_eq!(c.headroom, 0.4);
+        assert_eq!(c.util, 0.9);
         assert!(FleetController::new(1, c).headroom_enabled());
     }
 
@@ -442,5 +525,54 @@ mod tests {
         // With headroom restored the drain proceeds as usual.
         let d = ctl.decide_with_headroom(at(0.2), &[10.0, 10.0, 10.0], Some(4.0));
         assert_eq!(d, Some(ScaleDecision::Drain(2)));
+    }
+
+    #[test]
+    fn high_utilization_scales_up_below_backlog_threshold() {
+        let mut c = cfg();
+        c.util = 4.0;
+        c.cooldown_s = 0.0;
+        let mut ctl = FleetController::new(2, c);
+        // Token backlog far under scale_up_backlog (1000), but six
+        // in-flight requests on the one active pair exceed the util
+        // threshold: activate the standby.
+        let d = ctl.decide_full(at(0.1), &[50.0, 0.0], None, Some(&[6.0, 0.0]));
+        assert_eq!(d, Some(ScaleDecision::Activate(1)));
+        // The same signal with the knob off (util = 0) is ignored...
+        let mut off = FleetController::new(2, cfg());
+        assert_eq!(
+            off.decide_full(at(0.1), &[50.0, 0.0], None, Some(&[6.0, 0.0])),
+            None
+        );
+        // ...and the knob without a wired signal (None) never fires.
+        let mut c2 = cfg();
+        c2.util = 4.0;
+        let mut unwired = FleetController::new(2, c2);
+        assert_eq!(unwired.decide_full(at(0.1), &[50.0, 0.0], None, None), None);
+    }
+
+    #[test]
+    fn failure_hooks_flip_standby_and_repair_to_standby() {
+        let mut ctl = FleetController::new(3, cfg());
+        assert_eq!(ctl.n_active(), 1);
+        ctl.on_pair_failed(0);
+        assert!(ctl.is_failed(0));
+        assert_eq!(ctl.n_active(), 0);
+        // The implicit scale-up bypasses the window and the cooldown.
+        assert_eq!(ctl.force_activate(), Some(1));
+        assert_eq!(ctl.n_active(), 1);
+        // Repair returns the pair as standby, not active.
+        ctl.on_pair_recovered(0);
+        assert!(!ctl.is_active(0) && !ctl.is_failed(0));
+        // A fully failed fleet has nothing left to force-activate.
+        ctl.on_pair_failed(0);
+        ctl.on_pair_failed(1);
+        ctl.on_pair_failed(2);
+        assert_eq!(ctl.force_activate(), None);
+        assert_eq!(ctl.n_active(), 0);
+        // Reset clears failures with everything else.
+        ctl.reset();
+        assert_eq!(ctl.n_active(), 1);
+        assert!(!ctl.is_failed(1) && !ctl.is_failed(2));
     }
 }

@@ -64,6 +64,22 @@
 //! Without a registry every gate is inert and the cluster behaves —
 //! byte for byte — as before.
 //!
+//! With a fault plan attached ([`ClusterSystem::with_faults`]) pair
+//! outages are injected mid-run at their exact scheduled instants:
+//! the failed pair is masked out of routing, its resident KV evicted,
+//! and its in-flight requests aborted and re-submitted through the full
+//! admission path under a deterministic [`RetryBackoff`] (re-prefilling
+//! from scratch — the KV died with the pair).  Failures and repairs
+//! surface as [`SystemEvent::PairFailed`] / [`SystemEvent::PairRecovered`]
+//! spliced into the merged stream, retries that exhaust the backoff (or
+//! their remaining TTFT budget) shed with a distinct reason, and a
+//! [`FleetController`] treats a failure as an implicit scale-up (a
+//! standby flips active immediately).  `drain` reports
+//! `Report::{n_pair_failures, n_retries, n_recovered, recovery_latency_s}`.
+//! An empty plan is inert: every fault hook sits behind one `is_some()`
+//! branch, so non-fault runs stay byte-identical (pinned by
+//! `tests/faults_chaos.rs`).
+//!
 //! # Example
 //!
 //! ```
@@ -100,6 +116,7 @@ use std::collections::BinaryHeap;
 
 use crate::config::topology::ClusterConfig;
 use crate::cronus::router::{RoutePolicy, Router};
+use crate::faults::{FaultEvent, FaultPlan, RetryBackoff};
 use crate::metrics::{ClassBreakdown, Report};
 use crate::qos::{ClassId, ClassRegistry, FairShareLedger};
 use crate::simclock::SimTime;
@@ -128,6 +145,9 @@ struct AssignedReq {
     arrival: SimTime,
     /// Last observed token instant (per-class TBT gaps).
     last_token: Option<SimTime>,
+    /// The request as the cluster admitted it — a fault abort re-submits
+    /// it (with its KV claim stripped) through the retry queue.
+    req: Request,
 }
 
 /// Per-service-class accumulator for one run (QoS runs only).
@@ -139,8 +159,36 @@ struct ClassStat {
     n_requests: usize,
     n_finished: usize,
     n_shed: usize,
+    /// Requests of this class aborted by a pair failure and re-queued
+    /// for admission (fault runs only).
+    n_retries: usize,
     ttft: Vec<f64>,
     tbt: Vec<f64>,
+}
+
+/// Live fault-injection state (present iff a [`FaultPlan`] is attached;
+/// without one every fault hook is a single dead `is_some()` branch).
+struct FaultState {
+    plan: FaultPlan,
+    /// Backoff schedule for re-submitting failure-aborted requests.
+    backoff: RetryBackoff,
+    /// Cursor into `plan.events()`: next outage not yet injected.
+    next_fault: usize,
+    /// Scheduled repairs: `(instant, pair)`.
+    recoveries: BinaryHeap<Reverse<(SimTime, usize)>>,
+    /// Aborted requests awaiting re-admission:
+    /// `(retry_at, request, attempts so far)`.  Rare, so a linear-scan
+    /// priority list is fine (same shape the drivers use).
+    retry_q: Vec<(SimTime, Request, usize)>,
+    /// Which pairs are currently failed.
+    down: Vec<bool>,
+    /// Outage start per failed pair (recovery-latency sample on repair).
+    fail_at: Vec<Option<SimTime>>,
+    n_pair_failures: usize,
+    n_retries: usize,
+    n_recovered: usize,
+    /// Observed outage durations, seconds (unsorted until drain).
+    recovery_latency: Vec<f64>,
 }
 
 /// The cluster's event calendar: a lazily-invalidated min-heap over the
@@ -223,6 +271,9 @@ pub struct ClusterSystem {
     /// the whole autoscale path inert — behavior is byte-identical to a
     /// controller-less cluster).
     autoscale: Option<FleetController>,
+    /// Fault-injection state; `None` keeps every fault hook inert
+    /// (behavior is byte-identical to a plan-less cluster).
+    faults: Option<FaultState>,
     /// QoS class registry; `None` keeps every QoS gate inert (behavior
     /// is byte-identical to a registry-less cluster).
     classes: Option<ClassRegistry>,
@@ -269,6 +320,7 @@ impl ClusterSystem {
             systems,
             assigned: FxHashMap::default(),
             autoscale: None,
+            faults: None,
             classes: None,
             ledger: None,
             class_stats: Vec::new(),
@@ -329,6 +381,31 @@ impl ClusterSystem {
         self
     }
 
+    /// Attach a deterministic fault plan: the scheduled pair outages are
+    /// injected at their exact instants, failed pairs are masked out of
+    /// routing (KV residency evicted, in-flight work aborted and
+    /// re-submitted under `backoff`), and repairs bring pairs back —
+    /// as standby under a [`FleetController`], directly active
+    /// otherwise.  An empty plan leaves the cluster byte-identical to
+    /// one with no plan attached.
+    pub fn with_faults(mut self, plan: FaultPlan, backoff: RetryBackoff) -> ClusterSystem {
+        let n = self.cfg.n_pairs();
+        self.faults = Some(FaultState {
+            plan,
+            backoff,
+            next_fault: 0,
+            recoveries: BinaryHeap::new(),
+            retry_q: Vec::new(),
+            down: vec![false; n],
+            fail_at: vec![None; n],
+            n_pair_failures: 0,
+            n_retries: 0,
+            n_recovered: 0,
+            recovery_latency: Vec::new(),
+        });
+        self
+    }
+
     /// Feed the router's live backlog to the fleet controller at arrival
     /// instant `t` and execute at most one scaling action.
     ///
@@ -347,7 +424,15 @@ impl ClusterSystem {
             (Some(slo), true) => self.router.best_ttft_headroom(slo),
             _ => None,
         };
-        match ctl.decide_with_headroom(t, &outstanding, headroom) {
+        // Per-pair utilization (in-flight request counts), fed only when
+        // the controller's `util` knob is on so the default path stays
+        // allocation-free and byte-identical.
+        let util: Option<Vec<f64>> = if ctl.util_enabled() {
+            Some(self.inflight.iter().map(|&c| c as f64).collect())
+        } else {
+            None
+        };
+        match ctl.decide_full(t, &outstanding, headroom, util.as_deref()) {
             Some(ScaleDecision::Activate(i)) => {
                 self.router.set_pair_active(i, true);
                 self.n_scale_ups += 1;
@@ -374,6 +459,233 @@ impl ClusterSystem {
         &self.router
     }
 
+    /// Step the cluster to `until`, injecting any fault-plan work
+    /// (failures, repairs, failure-retries) due on the way, each at its
+    /// exact instant: pairs are first stepped *to* the fault instant so
+    /// the injection sees exactly the completions that beat it.  Without
+    /// a fault plan this is one dead `is_some()` branch in front of
+    /// [`collect_pairs_until`](Self::collect_pairs_until), so non-fault
+    /// runs are byte-identical to the pre-fault cluster.
+    fn collect_until(&mut self, until: SimTime) {
+        if self.faults.is_some() {
+            while let Some(ft) =
+                self.next_fault_instant().filter(|ft| *ft <= until)
+            {
+                self.collect_pairs_until(ft);
+                self.process_faults_at(ft);
+            }
+        }
+        self.collect_pairs_until(until);
+    }
+
+    /// Earliest pending fault-plan instant: the next scheduled outage,
+    /// repair, or queued failure-retry.
+    fn next_fault_instant(&self) -> Option<SimTime> {
+        let fs = self.faults.as_ref()?;
+        let mut next = fs.plan.events().get(fs.next_fault).map(|e| e.fail_at);
+        if let Some(&Reverse((rt, _))) = fs.recoveries.peek() {
+            next = Some(next.map_or(rt, |n| n.min(rt)));
+        }
+        if let Some(rt) = fs.retry_q.iter().map(|(rt, _, _)| *rt).min() {
+            next = Some(next.map_or(rt, |n| n.min(rt)));
+        }
+        next
+    }
+
+    /// Earliest scheduled repair — the deferral hint when the whole
+    /// fleet is down.
+    fn next_recovery_instant(&self) -> Option<SimTime> {
+        let fs = self.faults.as_ref()?;
+        fs.recoveries.peek().map(|&Reverse((rt, _))| rt)
+    }
+
+    /// Execute every fault-plan item due at `t`: repairs first (a pair
+    /// repaired at `t` is routable again for the retries of the same
+    /// instant), then outages, then failure-retries in
+    /// `(retry_at, enqueue order)`.  Re-deferred retries land strictly
+    /// after `t` (the backoff guarantees it), so each loop terminates.
+    fn process_faults_at(&mut self, t: SimTime) {
+        while let Some(pair) = {
+            let fs = self.faults.as_mut().expect("fault state");
+            match fs.recoveries.peek() {
+                Some(&Reverse((rt, _))) if rt <= t => {
+                    fs.recoveries.pop().map(|Reverse((_, p))| p)
+                }
+                _ => None,
+            }
+        } {
+            self.recover_pair(pair, t);
+        }
+        while let Some(ev) = {
+            let fs = self.faults.as_mut().expect("fault state");
+            match fs.plan.events().get(fs.next_fault) {
+                Some(e) if e.fail_at <= t => {
+                    fs.next_fault += 1;
+                    Some(*e)
+                }
+                _ => None,
+            }
+        } {
+            self.fail_pair(ev, t);
+        }
+        while let Some((req, attempts)) = {
+            let fs = self.faults.as_mut().expect("fault state");
+            let due = fs
+                .retry_q
+                .iter()
+                .enumerate()
+                .filter(|(_, (rt, _, _))| *rt <= t)
+                .min_by_key(|(i, (rt, _, _))| (rt.0, *i))
+                .map(|(i, _)| i);
+            due.map(|i| {
+                let (_, req, attempts) = fs.retry_q.remove(i);
+                (req, attempts)
+            })
+        } {
+            self.resubmit(t, req, attempts);
+        }
+    }
+
+    /// Inject one scheduled outage: mask the pair out of routing, evict
+    /// its KV residency, abort and re-queue its in-flight work, and let
+    /// the fleet controller flip a standby active in its place.
+    fn fail_pair(&mut self, ev: FaultEvent, t: SimTime) {
+        let pair = ev.pair;
+        {
+            let fs = self.faults.as_mut().expect("fault state");
+            if fs.down[pair] {
+                // Overlapping outage on a pair already down: extend the
+                // repair schedule (the latest repair instant wins —
+                // `recover_pair` skips entries that a later one covers).
+                if let Some(r) = ev.recover_at {
+                    fs.recoveries.push(Reverse((r, pair)));
+                }
+                return;
+            }
+            fs.down[pair] = true;
+            fs.fail_at[pair] = Some(t);
+            fs.n_pair_failures += 1;
+            if let Some(r) = ev.recover_at {
+                fs.recoveries.push(Reverse((r, pair)));
+            }
+        }
+        // The pair leaves the routable set, and its resident KV — the
+        // sessions' warm prefixes — dies with it.
+        self.router.set_pair_active(pair, false);
+        self.router.evict_pair_residency(pair);
+        self.pending.push(SystemEvent::PairFailed { pair, t });
+
+        // Abort everything in flight on the pair, unwinding the cluster
+        // bookkeeping exactly as if each request had left the system,
+        // and queue each for re-admission with its KV claim stripped:
+        // the retry re-prefills from scratch and earns no warm-turn
+        // credit.
+        let qos = self.classes.is_some();
+        for id in self.systems[pair].abort_inflight() {
+            let Some(a) = self.assigned.remove(&id) else { continue };
+            debug_assert_eq!(a.pair, pair);
+            self.router.on_completed(pair, a.tokens);
+            if qos {
+                self.router.on_stream_completed(pair, a.class, a.ctx);
+                if let Some(l) = self.ledger.as_mut() {
+                    l.on_done(a.class);
+                }
+            }
+            // Re-admission recounts the request, so the per-class
+            // terminal ledger sees it exactly once.
+            if let Some(cs) = self.class_stat_mut(a.class) {
+                cs.n_requests -= 1;
+                cs.n_retries += 1;
+            }
+            self.inflight[pair] -= 1;
+            let mut req = a.req;
+            req.strip_kv_claim();
+            let fs = self.faults.as_mut().expect("fault state");
+            fs.n_retries += 1;
+            let retry = fs.backoff.retry_at(t, t, 0);
+            fs.retry_q.push((retry, req, 0));
+        }
+        // The pair's engines were rebuilt empty; refresh its calendar
+        // key (it goes quiet until repair).
+        self.calendar.set(pair, self.systems[pair].next_event_at());
+
+        // A failure is an implicit scale-up signal: flip a standby
+        // active right away instead of waiting for backlog pressure.
+        if let Some(ctl) = self.autoscale.as_mut() {
+            ctl.on_pair_failed(pair);
+            if let Some(j) = ctl.force_activate() {
+                self.router.set_pair_active(j, true);
+                self.n_scale_ups += 1;
+                self.pending.push(SystemEvent::ScaleUp { pair: j, t });
+            }
+        }
+    }
+
+    /// Repair a failed pair: it rejoins as standby under a fleet
+    /// controller (the failure already flipped a standby active) or is
+    /// unmasked directly on a fixed fleet.
+    fn recover_pair(&mut self, pair: usize, t: SimTime) {
+        {
+            let fs = self.faults.as_mut().expect("fault state");
+            if !fs.down[pair] {
+                // Stale entry from a merged outage.
+                return;
+            }
+            if fs
+                .recoveries
+                .iter()
+                .any(|&Reverse((rt, p))| p == pair && rt > t)
+            {
+                // An overlapping outage extended the downtime; the later
+                // repair entry wins.
+                return;
+            }
+            fs.down[pair] = false;
+            fs.n_recovered += 1;
+            if let Some(f) = fs.fail_at[pair].take() {
+                fs.recovery_latency.push(t.saturating_sub(f).as_secs_f64());
+            }
+        }
+        if let Some(ctl) = self.autoscale.as_mut() {
+            ctl.on_pair_recovered(pair);
+        } else {
+            self.router.set_pair_active(pair, true);
+        }
+        self.pending.push(SystemEvent::PairRecovered { pair, t });
+    }
+
+    /// Re-submit a failure-aborted request through the full admission
+    /// path.  A deferral re-queues it under the failure backoff;
+    /// exhausting the backoff sheds it with a distinct reason.
+    fn resubmit(&mut self, t: SimTime, req: Request, attempts: usize) {
+        match self.admit(t, req, Some(attempts)) {
+            Admission::Accepted | Admission::Rejected { .. } => {}
+            Admission::Deferred { retry_at } => {
+                let backoff =
+                    self.faults.as_ref().expect("fault state").backoff;
+                if backoff.gives_up(attempts) {
+                    let reason = format!(
+                        "pair failure: dropped after {} retry attempts",
+                        backoff.max_attempts
+                    );
+                    self.n_router_rejected += 1;
+                    if let Some(cs) = self.class_stat_mut(req.class) {
+                        cs.n_requests += 1;
+                        cs.n_shed += 1;
+                    }
+                    if req.session_id != NO_SESSION {
+                        self.router.release_session(req.session_id);
+                    }
+                    self.pending.push(SystemEvent::Shed { id: req.id, t, reason });
+                } else {
+                    let retry = backoff.retry_at(t, retry_at, attempts);
+                    let fs = self.faults.as_mut().expect("fault state");
+                    fs.retry_q.push((retry, req, attempts + 1));
+                }
+            }
+        }
+    }
+
     /// Step every pair with a *due* event to `until`, feed completions
     /// back into the router's live backlog (and session-residency
     /// lifecycle), and buffer the merged events.
@@ -384,7 +696,7 @@ impl ClusterSystem {
     /// index: exactly the order the old scan-everything stepper's
     /// per-batch stable sort produced, byte for byte (pinned by
     /// `tests/cluster_calendar_oracle.rs`).
-    fn collect_until(&mut self, until: SimTime) {
+    fn collect_pairs_until(&mut self, until: SimTime) {
         // The due list is recycled: taken out so iterating it never
         // borrows `self` while pairs/router/scratch are touched.
         let mut due = std::mem::take(&mut self.due);
@@ -534,20 +846,44 @@ impl ClusterSystem {
             self.pending.insert(pos, SystemEvent::ScaleDown { pair, t: retire_t });
         }
     }
-}
 
-impl ServingSystem for ClusterSystem {
-    fn label(&self) -> String {
-        self.label.clone()
-    }
+    /// The admission core shared by fresh arrivals (`retry = None`) and
+    /// fault-driven re-submissions (`retry = Some(attempts)`): QoS
+    /// gates, SLO admission, routing, and the pair submit.  Shed
+    /// reasons for re-submissions carry a distinct prefix; for fresh
+    /// arrivals the path (and every reason string) is unchanged.
+    fn admit(&mut self, t: SimTime, req: Request, retry: Option<usize>) -> Admission {
+        let fail_prefix = if retry.is_some() {
+            "resubmitted after pair failure: "
+        } else {
+            ""
+        };
 
-    fn submit(&mut self, t: SimTime, req: Request) -> Admission {
-        // Bring every pair up to just before the arrival so the router
-        // routes on what has actually completed by now.
-        self.collect_until(SimTime(t.0.saturating_sub(1)));
-        // Let the fleet controller react to the live backlog before this
-        // arrival is admitted or routed.
-        self.autoscale_tick(t);
+        // Whole fleet down (fault runs only): hold the request for the
+        // next scheduled repair, or shed it when none is coming.
+        if self.faults.is_some() && self.router.n_active_pairs() == 0 {
+            if let Some(rt) = self.next_recovery_instant() {
+                return Admission::Deferred {
+                    retry_at: rt.max(SimTime(t.0.saturating_add(1))),
+                };
+            }
+            let reason =
+                format!("{fail_prefix}all pairs failed with no repair scheduled");
+            self.n_router_rejected += 1;
+            if let Some(cs) = self.class_stat_mut(req.class) {
+                cs.n_requests += 1;
+                cs.n_shed += 1;
+            }
+            if req.session_id != NO_SESSION {
+                self.router.release_session(req.session_id);
+            }
+            self.pending.push(SystemEvent::Shed {
+                id: req.id,
+                t,
+                reason: reason.clone(),
+            });
+            return Admission::Rejected { reason };
+        }
 
         // QoS gates (all inert without a class registry).
         let mut class_slo = None;
@@ -558,7 +894,7 @@ impl ServingSystem for ClusterSystem {
             if !self.router.has_active_compatible_pair(&req) {
                 let reg = self.classes.as_ref().expect("checked above");
                 let reason = format!(
-                    "no active pair serves model '{}'",
+                    "{fail_prefix}no active pair serves model '{}'",
                     reg.get(req.class).model.map_or("<any>", |m| m.name)
                 );
                 self.n_router_rejected += 1;
@@ -608,6 +944,7 @@ impl ServingSystem for ClusterSystem {
             match self.router.slo_admission(t, &req, slo) {
                 Admission::Accepted => {}
                 Admission::Rejected { reason } => {
+                    let reason = format!("{fail_prefix}{reason}");
                     self.n_router_rejected += 1;
                     if let Some(cs) = self.class_stat_mut(req.class) {
                         cs.n_requests += 1;
@@ -665,6 +1002,7 @@ impl ServingSystem for ClusterSystem {
                         ctx: req.total_context() as u64,
                         arrival: SimTime(req.arrival_ns),
                         last_token: None,
+                        req,
                     },
                 );
                 self.routed_counts[pair] += 1;
@@ -686,7 +1024,9 @@ impl ServingSystem for ClusterSystem {
                     self.router.release_session(req.session_id);
                 }
                 self.routed_counts[pair] += 1;
-                Admission::Rejected { reason }
+                Admission::Rejected {
+                    reason: format!("{fail_prefix}{reason}"),
+                }
             }
             deferred @ Admission::Deferred { .. } => {
                 self.router.on_completed(pair, decision.charged_tokens);
@@ -694,11 +1034,36 @@ impl ServingSystem for ClusterSystem {
             }
         }
     }
+}
+
+impl ServingSystem for ClusterSystem {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn submit(&mut self, t: SimTime, req: Request) -> Admission {
+        // Bring every pair up to just before the arrival so the router
+        // routes on what has actually completed by now.
+        self.collect_until(SimTime(t.0.saturating_sub(1)));
+        // Let the fleet controller react to the live backlog before this
+        // arrival is admitted or routed.
+        self.autoscale_tick(t);
+        self.admit(t, req, None)
+    }
 
     fn next_event_at(&self) -> Option<SimTime> {
         // O(1): the first buffered event and the calendar top (always
         // live) — no per-pair scan.
-        earliest_instant(&self.pending, self.calendar.peek())
+        let base = earliest_instant(&self.pending, self.calendar.peek());
+        if self.faults.is_none() {
+            return base;
+        }
+        // Fault runs: scheduled outages, repairs and failure-retries are
+        // events a driver must step to even when every pair is quiet.
+        match (base, self.next_fault_instant()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 
     fn advance(&mut self, until: SimTime) -> Vec<SystemEvent> {
@@ -761,6 +1126,15 @@ impl ServingSystem for ClusterSystem {
         };
         report.n_scale_ups = self.n_scale_ups;
         report.n_scale_downs = self.n_scale_downs;
+        // Fault-injection accounting (fault runs only).
+        if let Some(fs) = self.faults.as_mut() {
+            report.n_pair_failures = fs.n_pair_failures;
+            report.n_retries = fs.n_retries;
+            report.n_recovered = fs.n_recovered;
+            fs.recovery_latency
+                .sort_unstable_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+            report.recovery_latency_s = std::mem::take(&mut fs.recovery_latency);
+        }
         // Per-class breakdown (QoS runs): the accumulators drain into
         // the report; throughput shares the run's makespan clock.
         if let Some(reg) = &self.classes {
@@ -769,7 +1143,7 @@ impl ServingSystem for ClusterSystem {
                 .iter()
                 .zip(self.class_stats.iter_mut())
                 .map(|(sc, cs)| {
-                    ClassBreakdown::from_samples(
+                    let mut cb = ClassBreakdown::from_samples(
                         sc.name.clone(),
                         cs.n_requests,
                         cs.n_finished,
@@ -777,7 +1151,9 @@ impl ServingSystem for ClusterSystem {
                         makespan_s,
                         std::mem::take(&mut cs.ttft),
                         std::mem::take(&mut cs.tbt),
-                    )
+                    );
+                    cb.n_retries = cs.n_retries;
+                    cb
                 })
                 .collect();
         }
@@ -807,6 +1183,18 @@ impl ServingSystem for ClusterSystem {
             for i in 0..self.cfg.n_pairs() {
                 self.router.set_pair_active(i, ctl.is_active(i));
             }
+        }
+        // Rewind the fault plan for the next run.
+        if let Some(fs) = self.faults.as_mut() {
+            fs.next_fault = 0;
+            fs.recoveries.clear();
+            fs.retry_q.clear();
+            fs.down.iter_mut().for_each(|d| *d = false);
+            fs.fail_at.iter_mut().for_each(|f| *f = None);
+            fs.n_pair_failures = 0;
+            fs.n_retries = 0;
+            fs.n_recovered = 0;
+            fs.recovery_latency.clear();
         }
 
         RunOutcome { report, instances }
@@ -1127,5 +1515,104 @@ mod tests {
             e,
             SystemEvent::Shed { reason, .. } if reason.contains(QWEN2_7B.name)
         )));
+    }
+
+    // --- Fault injection: outages, retries, recovery ---
+
+    #[test]
+    fn scheduled_pair_failure_recovers_and_conserves() {
+        let trace = all_at_once(40, 21);
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let plan = FaultPlan::new(vec![FaultEvent {
+            pair: 0,
+            fail_at: SimTime::from_secs_f64(0.5),
+            recover_at: Some(SimTime::from_secs_f64(2.0)),
+        }])
+        .expect("valid plan");
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+            .with_faults(plan, RetryBackoff::default());
+        let (out, events, stats) = replay_trace_collect(&mut sys, &trace);
+        assert_eq!(out.report.n_pair_failures, 1);
+        assert_eq!(out.report.n_recovered, 1);
+        assert!(out.report.n_retries > 0, "the burst keeps pair 0 busy at 0.5s");
+        assert_eq!(out.report.recovery_latency_s.len(), 1);
+        assert!((out.report.recovery_latency_s[0] - 1.5).abs() < 1e-6);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, SystemEvent::PairFailed { pair: 0, .. })));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, SystemEvent::PairRecovered { pair: 0, .. })));
+        // Conservation: every trace request reaches exactly one terminal
+        // outcome, failure or not.
+        assert_eq!(stats.n_accepted + stats.n_rejected + stats.n_dropped, 40);
+        assert_eq!(out.report.n_finished + out.report.n_rejected, 40);
+        assert!(sys.assigned.is_empty());
+        assert!(out.report.summary().contains("faults 1"));
+    }
+
+    #[test]
+    fn fail_stop_on_single_pair_sheds_survivors_distinctly() {
+        // The only pair fail-stops mid-burst with no repair scheduled:
+        // aborted and not-yet-arrived requests shed with fault reasons
+        // instead of hanging or panicking.
+        let trace = all_at_once(20, 22);
+        let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
+        let plan = FaultPlan::new(vec![FaultEvent {
+            pair: 0,
+            fail_at: SimTime::from_secs_f64(0.2),
+            recover_at: None,
+        }])
+        .expect("valid plan");
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+            .with_faults(plan, RetryBackoff::default());
+        let (out, events, stats) = replay_trace_collect(&mut sys, &trace);
+        assert_eq!(out.report.n_pair_failures, 1);
+        assert_eq!(out.report.n_recovered, 0);
+        assert!(out.report.n_finished < 20, "the outage must cost something");
+        assert_eq!(stats.n_accepted + stats.n_rejected + stats.n_dropped, 20);
+        assert_eq!(out.report.n_finished + out.report.n_rejected, 20);
+        assert!(events.iter().any(|e| matches!(
+            e,
+            SystemEvent::Shed { reason, .. }
+                if reason.contains("pair failure") || reason.contains("all pairs failed")
+        )));
+    }
+
+    #[test]
+    fn empty_fault_plan_is_byte_identical_to_no_plan() {
+        let trace = all_at_once(40, 23);
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut plain = ClusterSystem::new(cfg.clone(), RoutePolicy::KvAffinity);
+        let mut inert = ClusterSystem::new(cfg, RoutePolicy::KvAffinity)
+            .with_faults(FaultPlan::empty(), RetryBackoff::default());
+        let (a_out, a_events, _) = replay_trace_collect(&mut plain, &trace);
+        let (b_out, b_events, _) = replay_trace_collect(&mut inert, &trace);
+        assert_eq!(a_events, b_events, "inert plan must not perturb the stream");
+        assert_eq!(a_out.report.makespan_s, b_out.report.makespan_s);
+        assert_eq!(a_out.report.ttft_p99_s, b_out.report.ttft_p99_s);
+        assert_eq!(a_out.report.tbt_p99_s, b_out.report.tbt_p99_s);
+        assert_eq!(b_out.report.n_pair_failures, 0);
+        assert_eq!(b_out.report.n_retries, 0);
+    }
+
+    #[test]
+    fn faulted_runs_reset_cleanly_for_reuse() {
+        let trace = all_at_once(30, 24);
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let plan = FaultPlan::new(vec![FaultEvent {
+            pair: 1,
+            fail_at: SimTime::from_secs_f64(0.3),
+            recover_at: Some(SimTime::from_secs_f64(1.0)),
+        }])
+        .expect("valid plan");
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+            .with_faults(plan, RetryBackoff::default());
+        let a = replay_trace(&mut sys, &trace);
+        let b = replay_trace(&mut sys, &trace);
+        assert_eq!(a.report.n_pair_failures, b.report.n_pair_failures);
+        assert_eq!(a.report.n_retries, b.report.n_retries);
+        assert_eq!(a.report.makespan_s, b.report.makespan_s);
+        assert_eq!(a.report.ttft_p99_s, b.report.ttft_p99_s);
     }
 }

@@ -30,6 +30,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::faults::RetryBackoff;
 use crate::simclock::SimTime;
 use crate::systems::{Admission, RunOutcome, ServingSystem, SystemEvent};
 use crate::util::fxhash::FxHashMap;
@@ -37,8 +38,10 @@ use crate::workload::session::Session;
 use crate::workload::Request;
 
 /// How often a single request may be deferred by SLO admission control
-/// before the open-loop driver gives up and drops it.
-pub const MAX_DEFERRALS: usize = 32;
+/// before the open-loop driver gives up and drops it.  Both drivers now
+/// express this through [`RetryBackoff::default`], whose flat (zero
+/// base-delay) schedule reproduces the historical behaviour exactly.
+pub const MAX_DEFERRALS: usize = crate::faults::DEFAULT_MAX_ATTEMPTS;
 
 /// Bookkeeping of one open-loop replay.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -92,6 +95,7 @@ fn replay_trace_impl(
     // Deferred retries: (retry_at, request, attempts so far).  Rare (SLO
     // admission only), so a linear-scan priority list is fine.
     let mut deferred: Vec<(SimTime, Request, usize)> = Vec::new();
+    let backoff = RetryBackoff::default();
     // Synthetic Shed events for requests dropped at the retry cap — the
     // system never accepted them, so the driver records the loss.
     let mut dropped: Vec<SystemEvent> = Vec::new();
@@ -138,7 +142,7 @@ fn replay_trace_impl(
             Admission::Rejected { .. } => stats.n_rejected += 1,
             Admission::Deferred { retry_at } => {
                 stats.n_deferred += 1;
-                if attempts + 1 >= MAX_DEFERRALS {
+                if backoff.gives_up(attempts) {
                     stats.n_dropped += 1;
                     dropped.push(SystemEvent::Shed {
                         id: req.id,
@@ -151,7 +155,7 @@ fn replay_trace_impl(
                 } else {
                     // Always strictly later than `t` so the loop makes
                     // progress even on a degenerate retry hint.
-                    let retry = retry_at.max(SimTime(t.0 + 1));
+                    let retry = backoff.retry_at(t, retry_at, attempts);
                     deferred.push((retry, req, attempts + 1));
                 }
             }
@@ -332,6 +336,7 @@ fn closed_loop_impl(
     let mut batch: Vec<SystemEvent> = Vec::new();
     // Synthetic Shed events for turns dropped at the retry cap.
     let mut dropped: Vec<SystemEvent> = Vec::new();
+    let backoff = RetryBackoff::default();
 
     loop {
         // Earliest ready submission (ties break toward the lowest session
@@ -383,7 +388,7 @@ fn closed_loop_impl(
                 }
                 Admission::Deferred { retry_at } => {
                     stats.n_deferred += 1;
-                    if attempts + 1 >= MAX_DEFERRALS {
+                    if backoff.gives_up(attempts) {
                         stats.n_dropped_turns += 1;
                         stats.n_aborted_sessions += 1;
                         dropped.push(SystemEvent::Shed {
@@ -398,7 +403,7 @@ fn closed_loop_impl(
                     } else {
                         // Strictly later than `at` so the loop always
                         // makes progress, even on a degenerate hint.
-                        let retry = retry_at.max(SimTime(at.0 + 1));
+                        let retry = backoff.retry_at(at, retry_at, attempts);
                         states[i] =
                             SessState::Ready { at: retry, attempts: attempts + 1 };
                         ready_q.push(i, retry);

@@ -113,6 +113,14 @@ pub enum SystemEvent {
     /// standby (cluster systems only).  Emitted at the instant the last
     /// in-flight request on the pair completed.
     ScaleDown { pair: usize, t: SimTime },
+    /// A fault plan took pair `pair` down (cluster systems only): its
+    /// in-flight work is aborted and re-submitted elsewhere, its KV
+    /// residency is lost, and the router masks it out.
+    PairFailed { pair: usize, t: SimTime },
+    /// Pair `pair` was repaired and rejoined the fleet (cluster systems
+    /// only): standby under a fleet controller, immediately active
+    /// otherwise.  It rejoins cold — all KV state died with the fault.
+    PairRecovered { pair: usize, t: SimTime },
 }
 
 impl SystemEvent {
@@ -123,12 +131,14 @@ impl SystemEvent {
             | SystemEvent::Finished { t, .. }
             | SystemEvent::Shed { t, .. }
             | SystemEvent::ScaleUp { t, .. }
-            | SystemEvent::ScaleDown { t, .. } => *t,
+            | SystemEvent::ScaleDown { t, .. }
+            | SystemEvent::PairFailed { t, .. }
+            | SystemEvent::PairRecovered { t, .. } => *t,
         }
     }
 
-    /// The request the event belongs to.  Scale events carry no request;
-    /// they report the affected pair index instead.
+    /// The request the event belongs to.  Scale and fault events carry
+    /// no request; they report the affected pair index instead.
     pub fn id(&self) -> ReqId {
         match self {
             SystemEvent::FirstToken { id, .. }
@@ -136,7 +146,9 @@ impl SystemEvent {
             | SystemEvent::Finished { id, .. }
             | SystemEvent::Shed { id, .. } => *id,
             SystemEvent::ScaleUp { pair, .. }
-            | SystemEvent::ScaleDown { pair, .. } => *pair as ReqId,
+            | SystemEvent::ScaleDown { pair, .. }
+            | SystemEvent::PairFailed { pair, .. }
+            | SystemEvent::PairRecovered { pair, .. } => *pair as ReqId,
         }
     }
 }
@@ -179,6 +191,17 @@ pub trait ServingSystem {
     /// events are discarded (call `advance(SimTime(u64::MAX))` first to
     /// keep them).  The system resets and may serve a fresh run after.
     fn drain(&mut self) -> RunOutcome;
+
+    /// Fault abort: drop every in-flight request — queued and running
+    /// work vanishes, engine/KV state resets, and the aborted requests'
+    /// metrics records are forgotten (they contribute to no count and no
+    /// sample; the cluster re-submits them elsewhere).  Banked state —
+    /// finished/shed records and utilization counters — survives.
+    /// Returns the aborted request ids, ascending.  Default: nothing to
+    /// abort (systems without online state).
+    fn abort_inflight(&mut self) -> Vec<ReqId> {
+        Vec::new()
+    }
 }
 
 /// Shared deadline predicate for the systems' event loops: `inclusive`

@@ -99,6 +99,15 @@ impl Request {
             .min(self.prefix_len)
             .min(self.input_len.saturating_sub(1));
     }
+
+    /// Forget any session-prefix claim: the resident KV this request
+    /// counted on died with its pair, so a fault-driven retry must
+    /// re-prefill the whole prompt from scratch (and earn no warm-turn
+    /// credit when re-routed).
+    pub fn strip_kv_claim(&mut self) {
+        self.prefix_len = 0;
+        self.kv_credit = 0;
+    }
 }
 
 /// Summary statistics of a trace (used by tests and bench headers).

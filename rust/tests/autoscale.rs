@@ -27,6 +27,7 @@ fn twitchy() -> AutoscaleConfig {
         scale_up_backlog: 3000.0,
         scale_down_backlog: 1500.0,
         cooldown_s: 0.2,
+        ..Default::default()
     }
 }
 
@@ -47,8 +48,9 @@ fn burst_then_sparse_tail(seed: u64) -> Vec<Request> {
 }
 
 /// FNV-1a digest over the (tag, id, timestamp) stream, scale events
-/// included (tags 5/6) — the same byte-level pin the determinism suites
-/// apply to the fixed-fleet paths.
+/// included (tags 5/6) and fault events (tags 7/8) — the same
+/// byte-level pin the determinism suites apply to the fixed-fleet
+/// paths.
 fn digest_stream(events: &[SystemEvent]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut mix = |x: u64| {
@@ -65,6 +67,8 @@ fn digest_stream(events: &[SystemEvent]) -> u64 {
             SystemEvent::Shed { id, t, .. } => (4, *id, t.0),
             SystemEvent::ScaleUp { pair, t } => (5, *pair as u64, t.0),
             SystemEvent::ScaleDown { pair, t } => (6, *pair as u64, t.0),
+            SystemEvent::PairFailed { pair, t } => (7, *pair as u64, t.0),
+            SystemEvent::PairRecovered { pair, t } => (8, *pair as u64, t.0),
         };
         mix(tag);
         mix(id);

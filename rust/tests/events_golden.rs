@@ -607,6 +607,8 @@ mod system_stream {
                 SystemEvent::Shed { id, t, .. } => (4, *id, t.0),
                 SystemEvent::ScaleUp { pair, t } => (5, *pair as u64, t.0),
                 SystemEvent::ScaleDown { pair, t } => (6, *pair as u64, t.0),
+                SystemEvent::PairFailed { pair, t } => (7, *pair as u64, t.0),
+                SystemEvent::PairRecovered { pair, t } => (8, *pair as u64, t.0),
             };
             d.u64(tag);
             d.u64(id);

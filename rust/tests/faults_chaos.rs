@@ -1,0 +1,219 @@
+//! Chaos fuzz for the fault-injection subsystem: randomized
+//! deterministic fault plans × routing policies, pinning the recovery
+//! invariants — every submitted request still terminates exactly once,
+//! the merged stream stays monotone, same-seed runs are byte-identical
+//! *including* failure events, and an inert plan leaves a run
+//! byte-identical to one with no plan at all.
+
+use std::collections::HashMap;
+
+use cronus::config::topology::ClusterConfig;
+use cronus::cronus::router::RoutePolicy;
+use cronus::faults::{FaultConfig, FaultPlan, RetryBackoff};
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::systems::cluster::ClusterSystem;
+use cronus::systems::driver::replay_trace_collect;
+use cronus::systems::{prefill_tokens_executed, SystemEvent};
+use cronus::util::rng::Rng;
+use cronus::workload::arrival::at_rate;
+use cronus::workload::azure::{generate, AzureTraceConfig};
+use cronus::workload::Request;
+
+fn trace(n: usize, seed: u64, rate_rps: f64) -> Vec<Request> {
+    at_rate(&generate(n, &AzureTraceConfig::default(), seed), rate_rps)
+}
+
+/// One randomized chaos round: a seeded fault plan on a random fleet
+/// under a random policy.  Returns the event streams of two identical
+/// runs for the caller's byte-identity check.
+fn chaos_round(rng: &mut Rng) -> (Vec<SystemEvent>, Vec<SystemEvent>, Vec<Request>) {
+    let seed = rng.next_u64();
+    let n_pairs = rng.range_usize(1, 4);
+    let policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len())];
+    let rate = 6.0 + rng.f64() * 14.0;
+    let trace = trace(30, seed, rate);
+    let fcfg = FaultConfig {
+        seed,
+        n_failures: rng.range_usize(1, 5),
+        mtbf_s: 0.3 + rng.f64() * 1.5,
+        mttr_s: 0.2 + rng.f64() * 1.5,
+        fail_stop_frac: [0.0, 0.3, 1.0][rng.range_usize(0, 3)],
+        max_retries: rng.range_usize(2, 8),
+        retry_base_s: rng.f64() * 0.1,
+        ..FaultConfig::default()
+    };
+    let plan = fcfg.build_plan(n_pairs).expect("generated plan is valid");
+    let run = || {
+        let cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+        let mut sys = ClusterSystem::new(cfg, policy)
+            .with_faults(plan.clone(), fcfg.backoff());
+        replay_trace_collect(&mut sys, &trace)
+    };
+    let (_, events_a, _) = run();
+    let (_, events_b, _) = run();
+    (events_a, events_b, trace)
+}
+
+#[test]
+fn chaos_every_request_terminates_exactly_once() {
+    let mut rng = Rng::new(0xFA_0175);
+    let mut saw_failure = false;
+    for _ in 0..12 {
+        let (events, events_b, trace) = chaos_round(&mut rng);
+
+        // Same seed, same plan ⇒ byte-identical streams, failures and
+        // recoveries included.
+        assert_eq!(events, events_b, "chaos run is not deterministic");
+
+        // Monotone merged stream, fault events included.
+        assert!(
+            events.windows(2).all(|w| w[0].time() <= w[1].time()),
+            "event stream went backwards"
+        );
+
+        saw_failure |= events
+            .iter()
+            .any(|e| matches!(e, SystemEvent::PairFailed { .. }));
+
+        // Finished xor Shed, exactly once per trace request — a pair
+        // failure may abort and re-serve a request but must never lose
+        // or double-terminate it.
+        let mut finished: HashMap<u64, usize> = HashMap::new();
+        let mut shed: HashMap<u64, usize> = HashMap::new();
+        let mut tokens: HashMap<u64, usize> = HashMap::new();
+        for ev in &events {
+            match ev {
+                SystemEvent::Finished { id, .. } => {
+                    *finished.entry(*id).or_insert(0) += 1
+                }
+                SystemEvent::Shed { id, .. } => *shed.entry(*id).or_insert(0) += 1,
+                SystemEvent::FirstToken { id, .. } | SystemEvent::Token { id, .. } => {
+                    *tokens.entry(*id).or_insert(0) += 1
+                }
+                _ => {}
+            }
+        }
+        for r in &trace {
+            let f = finished.get(&r.id).copied().unwrap_or(0);
+            let s = shed.get(&r.id).copied().unwrap_or(0);
+            assert_eq!(
+                f + s,
+                1,
+                "request {} ended {f}x Finished / {s}x Shed",
+                r.id
+            );
+            // A finished request streamed its full response; an abort
+            // before the failure may have added partial tokens on top
+            // (that work is retried from scratch), never removed any.
+            if f == 1 {
+                let got = tokens.get(&r.id).copied().unwrap_or(0);
+                assert!(
+                    got >= r.output_len,
+                    "request {}: {got} token events < output_len {}",
+                    r.id,
+                    r.output_len
+                );
+            }
+        }
+    }
+    assert!(saw_failure, "chaos rounds never injected a failure mid-run");
+}
+
+#[test]
+fn inert_plan_is_byte_identical_to_no_plan() {
+    let trace = trace(40, 17, 12.0);
+    for policy in [RoutePolicy::LeastOutstandingTokens, RoutePolicy::KvAffinity] {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut plain = ClusterSystem::new(cfg.clone(), policy);
+        let mut inert = ClusterSystem::new(cfg, policy)
+            .with_faults(FaultPlan::empty(), RetryBackoff::default());
+        let (out_p, events_p, stats_p) = replay_trace_collect(&mut plain, &trace);
+        let (out_i, events_i, stats_i) = replay_trace_collect(&mut inert, &trace);
+        assert_eq!(events_p, events_i, "inert plan changed the event stream");
+        assert_eq!(stats_p, stats_i);
+        assert_eq!(out_p.report.makespan_s, out_i.report.makespan_s);
+        assert_eq!(out_p.report.ttft_p99_s, out_i.report.ttft_p99_s);
+        assert_eq!(out_i.report.n_pair_failures, 0);
+        assert_eq!(out_i.report.n_retries, 0);
+    }
+}
+
+#[test]
+fn retried_work_reprefills_from_scratch() {
+    // A transient outage mid-burst: the faulted run must re-execute the
+    // prefill of every aborted request (KV died with the pair), so its
+    // executed prefill tokens strictly exceed the fault-free run's.
+    let trace = trace(30, 23, 15.0);
+    let fcfg = FaultConfig {
+        schedule: vec![cronus::faults::parse_schedule_entry("0@0.4+1.5").unwrap()],
+        ..FaultConfig::default()
+    };
+    let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+    let mut plain =
+        ClusterSystem::new(cfg.clone(), RoutePolicy::LeastOutstandingTokens);
+    let mut faulted =
+        ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens).with_faults(
+            fcfg.build_plan(2).expect("plan"),
+            fcfg.backoff(),
+        );
+    let (out_p, _, _) = replay_trace_collect(&mut plain, &trace);
+    let (out_f, events_f, _) = replay_trace_collect(&mut faulted, &trace);
+
+    assert_eq!(out_f.report.n_pair_failures, 1);
+    assert_eq!(out_f.report.n_recovered, 1);
+    assert!(
+        out_f.report.n_retries >= 1,
+        "the outage aborted nothing — move the failure into the burst"
+    );
+    assert!(
+        events_f.iter().any(|e| matches!(e, SystemEvent::PairFailed { pair: 0, .. })),
+        "PairFailed missing from the merged stream"
+    );
+    assert!(
+        events_f
+            .iter()
+            .any(|e| matches!(e, SystemEvent::PairRecovered { pair: 0, .. })),
+        "PairRecovered missing from the merged stream"
+    );
+    assert!(
+        prefill_tokens_executed(&out_f) > prefill_tokens_executed(&out_p),
+        "retries must re-prefill aborted prompts from scratch"
+    );
+    // Conservation still holds under the outage.
+    let r = &out_f.report;
+    assert_eq!(r.n_finished + r.n_rejected, trace.len());
+}
+
+#[test]
+fn fail_stop_chaos_never_panics_and_sheds_the_rest() {
+    // Kill every pair permanently mid-run: whatever was in flight is
+    // retried into a fleet with no capacity and must drain as shed —
+    // never hang, never panic.
+    let trace = trace(20, 31, 10.0);
+    let fcfg = FaultConfig {
+        schedule: vec![
+            cronus::faults::parse_schedule_entry("0@0.3").unwrap(),
+            cronus::faults::parse_schedule_entry("1@0.5").unwrap(),
+        ],
+        max_retries: 3,
+        ..FaultConfig::default()
+    };
+    let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+    let mut sys = ClusterSystem::new(cfg, RoutePolicy::LeastOutstandingTokens)
+        .with_faults(fcfg.build_plan(2).expect("plan"), fcfg.backoff());
+    let (out, events, _) = replay_trace_collect(&mut sys, &trace);
+    let r = &out.report;
+    assert_eq!(r.n_pair_failures, 2);
+    assert_eq!(r.n_recovered, 0);
+    assert_eq!(r.n_finished + r.n_rejected, trace.len());
+    assert!(r.n_rejected >= 1, "a dead fleet must shed its backlog");
+    let mut terminal: HashMap<u64, usize> = HashMap::new();
+    for ev in &events {
+        if let SystemEvent::Finished { id, .. } | SystemEvent::Shed { id, .. } = ev {
+            *terminal.entry(*id).or_insert(0) += 1;
+        }
+    }
+    for req in &trace {
+        assert_eq!(terminal.get(&req.id), Some(&1), "request {} not conserved", req.id);
+    }
+}

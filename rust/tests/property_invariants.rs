@@ -428,7 +428,10 @@ fn prop_replay_conserves_requests_and_tokens() {
                 SystemEvent::FirstToken { id, .. } | SystemEvent::Token { id, .. } => {
                     *tokens.entry(*id).or_insert(0) += 1
                 }
-                SystemEvent::ScaleUp { .. } | SystemEvent::ScaleDown { .. } => {}
+                SystemEvent::ScaleUp { .. }
+                | SystemEvent::ScaleDown { .. }
+                | SystemEvent::PairFailed { .. }
+                | SystemEvent::PairRecovered { .. } => {}
             }
         }
         // Terminal-state exactness: Finished xor Shed, exactly once.

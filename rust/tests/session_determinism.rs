@@ -50,6 +50,8 @@ fn digest_stream(events: &[SystemEvent]) -> u64 {
             SystemEvent::Shed { id, t, .. } => (4, *id, t.0),
             SystemEvent::ScaleUp { pair, t } => (5, *pair as u64, t.0),
             SystemEvent::ScaleDown { pair, t } => (6, *pair as u64, t.0),
+            SystemEvent::PairFailed { pair, t } => (7, *pair as u64, t.0),
+            SystemEvent::PairRecovered { pair, t } => (8, *pair as u64, t.0),
         };
         mix(tag);
         mix(id);

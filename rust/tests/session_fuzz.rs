@@ -80,7 +80,10 @@ fn verify_invariants(
             SystemEvent::FirstToken { id, .. } | SystemEvent::Token { id, .. } => {
                 *tokens.entry(*id).or_insert(0) += 1
             }
-            SystemEvent::ScaleUp { .. } | SystemEvent::ScaleDown { .. } => {}
+            SystemEvent::ScaleUp { .. }
+            | SystemEvent::ScaleDown { .. }
+            | SystemEvent::PairFailed { .. }
+            | SystemEvent::PairRecovered { .. } => {}
         }
     }
 
