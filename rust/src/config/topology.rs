@@ -16,7 +16,18 @@
 //! [topology]
 //! model = "llama3-8b"
 //! pairs = ["a100+a10", "a100+a30:1.5", "a100+v100@dp"]
+//!
+//! [cluster]
+//! link = "100G@5us:0.9"      # inter-pair interconnect (KV migration)
+//! links = ["2:25G@20us:0.8"] # per-pair override: pair 2 sits on 25G
 //! ```
+//!
+//! The `[cluster] link` key enables cross-pair KV migration: warm
+//! session prefixes ship over the modeled interconnect (priced by
+//! [`LinkSpec::kv_transfer_time`]) instead of being recomputed when
+//! their resident pair drains or blows the TTFT SLO.  Omitting it (the
+//! default everywhere) keeps migration off and the cluster
+//! byte-identical to the pre-migration code.
 //!
 //! Each pair spec is `<high_gpu>+<low_gpu>` with an optional
 //! `:<rate_share>` suffix, an optional `@<system>` suffix (`cronus`,
@@ -32,6 +43,7 @@
 
 use crate::config::cluster::{DeploymentConfig, SystemKind};
 use crate::config::toml::{TomlDoc, TomlValue};
+use crate::simgpu::link::LinkSpec;
 use crate::simgpu::model_desc::{self, ModelDesc};
 use crate::simgpu::spec::{self, GpuSpec};
 
@@ -45,6 +57,11 @@ pub struct PairConfig {
     pub system: SystemKind,
     /// Relative share of offered load for weighted routing policies.
     pub rate_share: f64,
+    /// Inter-pair link override for this pair's node (KV migration
+    /// prices a transfer at the slower endpoint).  `None` falls back to
+    /// [`ClusterConfig::link`]; both `None` disables migration for
+    /// transfers touching this pair.
+    pub link: Option<LinkSpec>,
 }
 
 impl PairConfig {
@@ -57,6 +74,7 @@ impl PairConfig {
             deployment,
             system: SystemKind::Cronus,
             rate_share: 1.0,
+            link: None,
         }
     }
 
@@ -169,17 +187,23 @@ fn system_spec_token(kind: SystemKind) -> &'static str {
 #[derive(Clone, Debug, Default)]
 pub struct ClusterConfig {
     pub pairs: Vec<PairConfig>,
+    /// Default inter-pair interconnect.  `Some` enables cross-pair KV
+    /// migration (warm prefixes ship instead of being recomputed);
+    /// `None` (the default) keeps every migration path a dead branch —
+    /// routing is byte-identical to the pre-migration cluster.
+    pub link: Option<LinkSpec>,
 }
 
 impl ClusterConfig {
     pub fn new(pairs: Vec<PairConfig>) -> ClusterConfig {
-        ClusterConfig { pairs }
+        ClusterConfig { pairs, link: None }
     }
 
     /// `n` identical Cronus pairs.
     pub fn homogeneous(n: usize, deployment: DeploymentConfig) -> ClusterConfig {
         ClusterConfig {
             pairs: (0..n).map(|_| PairConfig::cronus(deployment.clone())).collect(),
+            link: None,
         }
     }
 
@@ -205,7 +229,14 @@ impl ClusterConfig {
                     PairConfig::cronus(DeploymentConfig::paper(spec::A100, low, model))
                 })
                 .collect(),
+            link: None,
         }
+    }
+
+    /// Enable cross-pair KV migration over `link` (builder form).
+    pub fn with_link(mut self, link: LinkSpec) -> ClusterConfig {
+        self.link = Some(link);
+        self
     }
 
     pub fn n_pairs(&self) -> usize {
@@ -259,6 +290,32 @@ impl ClusterConfig {
             }
             self.pairs = pairs;
         }
+        // Interconnect: `[cluster] link = "<gbps>G[@<lat>us][:<eff>]"`
+        // turns cross-pair KV migration on; `links = ["<pair>:<spec>"]`
+        // overrides individual pairs (asymmetric fabrics — the
+        // multi-vendor setting where link speeds differ per node).
+        if let Some(text) = doc.get_str("cluster.link") {
+            self.link = Some(LinkSpec::parse(text)?);
+        }
+        if let Some(TomlValue::Array(items)) = doc.get("cluster.links") {
+            for item in items {
+                let text = item
+                    .as_str()
+                    .ok_or("cluster.links entries must be strings")?;
+                let (idx, spec) = text
+                    .split_once(':')
+                    .ok_or_else(|| format!("link override '{text}' is not '<pair>:<spec>'"))?;
+                let idx: usize = idx
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad pair index in link override '{text}'"))?;
+                let n = self.pairs.len();
+                let pair = self.pairs.get_mut(idx).ok_or_else(|| {
+                    format!("link override '{text}' names pair {idx} of a {n}-pair fleet")
+                })?;
+                pair.link = Some(LinkSpec::parse(spec.trim())?);
+            }
+        }
         Ok(())
     }
 
@@ -267,7 +324,8 @@ impl ClusterConfig {
     /// `pairs` array — the in-tree parser's requirement).  The default
     /// model is taken from the first pair; pairs serving a different
     /// model carry an explicit `=<model>` suffix, so multi-model fleets
-    /// round-trip too.
+    /// round-trip too.  A configured interconnect (and any per-pair
+    /// overrides) is emitted as a `[cluster]` section after it.
     pub fn to_toml(&self) -> String {
         let model = self
             .pairs
@@ -279,11 +337,27 @@ impl ClusterConfig {
             .iter()
             .map(|p| format!("\"{}\"", p.spec_with_default(model)))
             .collect();
-        format!(
+        let mut out = format!(
             "[topology]\nmodel = \"{}\"\npairs = [{}]\n",
             model.name,
             specs.join(", ")
-        )
+        );
+        let overrides: Vec<String> = self
+            .pairs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.link.map(|l| format!("\"{i}:{}\"", l.spec())))
+            .collect();
+        if self.link.is_some() || !overrides.is_empty() {
+            out.push_str("\n[cluster]\n");
+            if let Some(l) = self.link {
+                out.push_str(&format!("link = \"{}\"\n", l.spec()));
+            }
+            if !overrides.is_empty() {
+                out.push_str(&format!("links = [{}]\n", overrides.join(", ")));
+            }
+        }
+        out
     }
 }
 
@@ -441,6 +515,31 @@ mod tests {
         assert!((c.cost_per_hour() - want_cost).abs() < 1e-12);
         let want_w = 2.0 * A100.power_w + A10.power_w + A30.power_w;
         assert!((c.power_w() - want_w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_link_round_trips_through_toml() {
+        let mut c = ClusterConfig::mixed(3, LLAMA3_8B)
+            .with_link(LinkSpec::INFINIBAND_100G);
+        c.pairs[2].link = Some(LinkSpec::parse("25G@20us:0.8").unwrap());
+        let text = c.to_toml();
+        assert!(text.contains("link = \"100G\""), "{text}");
+        assert!(text.contains("links = [\"2:25G@"), "{text}");
+        let doc = toml::parse(&text).unwrap();
+        let mut rt = ClusterConfig::default();
+        rt.apply_toml(&doc).unwrap();
+        assert_eq!(rt.link, Some(LinkSpec::INFINIBAND_100G));
+        assert_eq!(rt.pairs[0].link, None);
+        assert_eq!(rt.pairs[2].link, c.pairs[2].link);
+        // No link configured: no [cluster] section at all, so planner
+        // emissions and older configs are unchanged byte-for-byte.
+        let plain = ClusterConfig::mixed(2, LLAMA3_8B).to_toml();
+        assert!(!plain.contains("[cluster]"), "{plain}");
+        // Bad overrides error out.
+        let doc = toml::parse("[cluster]\nlinks = [\"9:100G\"]\n").unwrap();
+        assert!(ClusterConfig::mixed(2, LLAMA3_8B).apply_toml(&doc).is_err());
+        let doc = toml::parse("[cluster]\nlink = \"fast\"\n").unwrap();
+        assert!(ClusterConfig::mixed(2, LLAMA3_8B).apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -86,6 +86,22 @@
 //! no TBT SLOs — every QoS path is inert and routing is byte-identical
 //! to the pre-QoS router.
 //!
+//! With an interconnect configured ([`ClusterConfig::link`] or per-pair
+//! overrides) the affinity policy stops throwing warm sessions away:
+//! when the resident pair is SLO-infeasible or draining, the router
+//! prices shipping the resident prefix over the link
+//! ([`LinkSpec::kv_transfer_time`]) against recomputing it at each
+//! candidate destination, and migrates whenever the transfer is
+//! strictly cheaper — the migrated prefix arrives as `kv_credit` at the
+//! destination with the transfer delay carried on the
+//! [`RouteDecision`] (added to the TTFT estimate *and*, by the cluster,
+//! to the actual admission instant).  Draining pairs hand their whole
+//! residency over the link before retiring
+//! ([`Router::handoff_pair_residency`]); a *failed* pair's KV is dead
+//! and is still evicted, never migrated.  Without a link every
+//! migration path is one dead branch and routing is byte-identical to
+//! the pre-migration router.
+//!
 //! # Example
 //!
 //! Build a router over a two-pair fleet and dispatch one request:
@@ -99,7 +115,7 @@
 //! let fleet = ClusterConfig::mixed(2, LLAMA3_8B);
 //! let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &fleet);
 //! let req = Request::new(0, 0, 512, 64);
-//! let d = router.route(&req);
+//! let d = router.route(&req).expect("an active pair exists");
 //! assert!(d.pair < fleet.n_pairs());
 //! router.commit_route(&req, &d);
 //! // ... the chosen pair serves the request, then completes it ...
@@ -113,6 +129,7 @@ use crate::config::topology::ClusterConfig;
 use crate::qos::{ClassId, ClassRegistry};
 use crate::simclock::SimTime;
 use crate::simgpu::fit::{calibrate, PrefillCoeffs};
+use crate::simgpu::link::LinkSpec;
 use crate::simgpu::model_desc::ModelDesc;
 use crate::simgpu::perfmodel::{IterationShape, PerfModel, PrefillSeg};
 use crate::systems::Admission;
@@ -231,6 +248,35 @@ struct Residency {
     tokens: u64,
     /// Monotone use counter for LRU eviction.
     last_use: u64,
+    /// Instant (ns) the prefix finishes arriving on `pair` — non-zero
+    /// only right after a drain handoff shipped it over the link.  A
+    /// turn arriving earlier waits out the remainder of the transfer.
+    ready_at: u64,
+}
+
+/// One cross-pair KV shipment attached to a [`RouteDecision`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvTransfer {
+    /// Pair the prefix ships from (equal to the decision's `pair` when
+    /// the delay is the residual of an earlier drain handoff — that
+    /// shipment was already counted as a migration when it started).
+    pub from: usize,
+    /// Link delay in nanoseconds: the cluster submits the request to
+    /// the destination pair exactly this much after the routing
+    /// instant, so the transfer shows up in the measured TTFT.
+    pub delay_ns: u64,
+    /// Prefix tokens shipped (equals the decision's `kv_credit`).
+    pub tokens: u64,
+}
+
+/// An affinity-policy routing target: the pair holding (or receiving)
+/// the session's prefix KV, the credit it grants, and the shipment
+/// backing it when the prefix moves or is still in flight.
+#[derive(Clone, Copy, Debug)]
+struct AffinityHit {
+    pair: usize,
+    credit: usize,
+    transfer: Option<KvTransfer>,
 }
 
 /// Outcome of one routing decision.
@@ -245,6 +291,9 @@ pub struct RouteDecision {
     /// Backlog tokens charged against the pair — release exactly this via
     /// [`Router::on_completed`] when the request leaves the system.
     pub charged_tokens: u64,
+    /// KV shipment backing the credit, if the prefix is (still) on the
+    /// wire.  `None` on every decision when no link is configured.
+    pub transfer: Option<KvTransfer>,
 }
 
 impl PairLoad {
@@ -346,6 +395,17 @@ pub struct Router {
     /// gate derives each pair's strictest incumbent TBT SLO from it.
     /// Empty until a registry is attached.
     class_inflight: Vec<Vec<u32>>,
+    // --- cross-pair KV migration (no link configured = all paths inert) ---
+    /// Cluster-wide inter-pair link, if migration is enabled.
+    link: Option<LinkSpec>,
+    /// Per-pair link overrides (`None` falls back to `link`).
+    pair_links: Vec<Option<LinkSpec>>,
+    /// Prefixes shipped across pairs instead of recomputed.
+    n_migrations: u64,
+    /// Context tokens those shipments carried.
+    migrated_tokens: u64,
+    /// Wall-clock seconds spent on the link by those shipments.
+    migration_time_s: f64,
 }
 
 /// Coarse steady-state token throughput of a pair: the CPI running full
@@ -422,6 +482,11 @@ impl Router {
             n_prefix_routed: 0,
             classes: None,
             class_inflight: Vec::new(),
+            link: cluster.link,
+            pair_links: cluster.pairs.iter().map(|p| p.link).collect(),
+            n_migrations: 0,
+            migrated_tokens: 0,
+            migration_time_s: 0.0,
         }
     }
 
@@ -490,6 +555,9 @@ impl Router {
         self.n_kv_hits = 0;
         self.prefill_tokens_saved = 0;
         self.n_prefix_routed = 0;
+        self.n_migrations = 0;
+        self.migrated_tokens = 0;
+        self.migration_time_s = 0.0;
     }
 
     pub fn n_pairs(&self) -> usize {
@@ -536,6 +604,93 @@ impl Router {
         n
     }
 
+    /// A pair is draining toward retirement but its KV memory is still
+    /// alive: ship each resident session's prefix to the cheapest viable
+    /// destination over the link instead of evicting it.  Shipments
+    /// serialize on the source's link starting at `now` (MRU sessions
+    /// first — they are the likeliest to see another turn), each landing
+    /// with a `ready_at` instant the TTFT estimator and the cluster's
+    /// delayed admission honour.  Sessions with no viable destination
+    /// (no link, no capacity, transfer not cheaper than recompute) are
+    /// evicted as before.  Without any configured link this *is*
+    /// [`evict_pair_residency`](Self::evict_pair_residency).  Returns how
+    /// many sessions migrated.
+    pub fn handoff_pair_residency(&mut self, pair: usize, now: SimTime) -> usize {
+        if !self.migration_enabled() {
+            self.evict_pair_residency(pair);
+            return 0;
+        }
+        let mut cursor_ns = now.0;
+        let mut moved = 0;
+        while let Some((_, sid)) = self.pairs[pair].lru.pop_last() {
+            let r = self.residency.remove(&sid).expect("lru entry has residency");
+            self.pairs[pair].resident_tokens =
+                self.pairs[pair].resident_tokens.saturating_sub(r.tokens);
+            if r.ready_at > now.0 || r.tokens == 0 {
+                continue; // still on the wire from an earlier handoff
+            }
+            let src_model = self.pairs[pair].model;
+            let mut dest: Option<(usize, f64, f64)> = None;
+            for (j, p) in self.pairs.iter().enumerate() {
+                if j == pair
+                    || !p.active
+                    || !p.supports_credit
+                    || p.model.name != src_model.name
+                    || p.resident_tokens + r.tokens > p.residency_capacity_tokens
+                {
+                    continue;
+                }
+                let Some(xfer_s) = self.kv_transfer_s(pair, j, r.tokens) else {
+                    continue;
+                };
+                if xfer_s >= p.prefill.predict(r.tokens as usize) {
+                    continue; // recomputing the prefix there is cheaper
+                }
+                let load = p.outstanding_tokens;
+                if dest.map_or(true, |(_, b, _)| load < b) {
+                    dest = Some((j, load, xfer_s));
+                }
+            }
+            let Some((j, _, xfer_s)) = dest else {
+                continue; // no viable destination: plain eviction
+            };
+            cursor_ns = cursor_ns.saturating_add((xfer_s * 1e9) as u64);
+            self.use_seq += 1;
+            self.pairs[j].resident_tokens += r.tokens;
+            self.pairs[j].lru.insert((self.use_seq, sid));
+            self.residency.insert(
+                sid,
+                Residency {
+                    pair: j,
+                    tokens: r.tokens,
+                    last_use: self.use_seq,
+                    ready_at: cursor_ns,
+                },
+            );
+            self.n_migrations += 1;
+            self.migrated_tokens += r.tokens;
+            self.migration_time_s += xfer_s;
+            moved += 1;
+        }
+        moved
+    }
+
+    /// Prefix shipments across pairs so far (route-time and drain
+    /// handoffs combined).
+    pub fn n_migrations(&self) -> u64 {
+        self.n_migrations
+    }
+
+    /// Context tokens those shipments carried.
+    pub fn migrated_tokens(&self) -> u64 {
+        self.migrated_tokens
+    }
+
+    /// Wall-clock seconds spent on the link by those shipments.
+    pub fn migration_time_s(&self) -> f64 {
+        self.migration_time_s
+    }
+
     /// Calibrated sustained service-rate estimate per pair (tokens/s),
     /// before `rate_share` scaling — the topology planner reads these to
     /// assign capacity-proportional shares.
@@ -572,62 +727,173 @@ impl Router {
     /// session's KV is resident there, only the fresh suffix needs
     /// prefilling.  (Fixes the old estimator, which assumed a full-prompt
     /// prefill for every request and so over-rejected follow-up turns at
-    /// the SLO admission gate.)
+    /// the SLO admission gate.)  A prefix still on the wire from a drain
+    /// handoff adds the residual transfer time — the pair cannot start
+    /// the credited prefill before the KV lands.
     pub fn estimated_ttft_for(&self, i: usize, req: &Request) -> f64 {
         self.estimated_ttft(i, req.input_len - self.resident_credit(i, req))
+            + self.residual_ready_delay_ns(i, req) as f64 * 1e-9
+    }
+
+    /// Credit a residency record grants `req`: capped by the recorded
+    /// prompt prefix and below `input_len` so at least one token is
+    /// always computed.
+    fn residency_credit(r: &Residency, req: &Request) -> usize {
+        req.prefix_len
+            .min(r.tokens as usize)
+            .min(req.input_len.saturating_sub(1))
     }
 
     /// Resident-prefix tokens pair `i` could skip for `req` (0 unless the
     /// session's KV is resident on exactly this pair and the pair's
-    /// system can exploit it).  Capped below `input_len` so at least one
-    /// token is always computed.
+    /// system can exploit it).
     fn resident_credit(&self, pair: usize, req: &Request) -> usize {
         if req.session_id == NO_SESSION || !self.pairs[pair].supports_credit {
             return 0;
         }
         match self.residency.get(&req.session_id) {
-            Some(r) if r.pair == pair => req
-                .prefix_len
-                .min(r.tokens as usize)
-                .min(req.input_len.saturating_sub(1)),
+            Some(r) if r.pair == pair => Self::residency_credit(r, req),
             _ => 0,
         }
     }
 
+    /// Remaining nanoseconds until `req`'s prefix KV finishes arriving on
+    /// `pair` (0 when it is already there, or resident elsewhere).
+    fn residual_ready_delay_ns(&self, pair: usize, req: &Request) -> u64 {
+        if req.session_id == NO_SESSION {
+            return 0;
+        }
+        match self.residency.get(&req.session_id) {
+            Some(r) if r.pair == pair => r.ready_at.saturating_sub(req.arrival_ns),
+            _ => 0,
+        }
+    }
+
+    /// The link reaching pair `i`, if any (per-pair override first, then
+    /// the cluster-wide link).
+    fn pair_link(&self, i: usize) -> Option<LinkSpec> {
+        self.pair_links.get(i).copied().flatten().or(self.link)
+    }
+
+    /// Whether any link is configured at all — the migration feature
+    /// gate.  False keeps every migration path a dead branch.
+    fn migration_enabled(&self) -> bool {
+        self.link.is_some() || self.pair_links.iter().any(|l| l.is_some())
+    }
+
+    /// Seconds to ship `tokens` of pair `from`'s KV to pair `to`, or
+    /// `None` when either endpoint is linkless.  The slower endpoint's
+    /// link is the bottleneck.
+    fn kv_transfer_s(&self, from: usize, to: usize, tokens: u64) -> Option<f64> {
+        let src = self.pair_link(from)?;
+        let dst = self.pair_link(to)?;
+        let bytes_per_token = self.pairs[from].model.kv_bytes_per_token();
+        let a = src.kv_transfer_time(tokens as usize, bytes_per_token);
+        let b = dst.kv_transfer_time(tokens as usize, bytes_per_token);
+        Some(a.max(b))
+    }
+
     /// The resident pair for `req`'s session under the affinity policy,
     /// with its credit — `None` on a miss, for non-session requests, or
-    /// when the resident pair's estimated TTFT blows `slo` (fall back to
-    /// the load-based pick).
-    fn affinity_target(&self, req: &Request, slo: Option<f64>) -> Option<(usize, usize)> {
+    /// when neither serving in place nor migrating the prefix is viable
+    /// (fall back to the load-based pick with zero credit).
+    fn affinity_target(&self, req: &Request, slo: Option<f64>) -> Option<AffinityHit> {
         if self.policy != RoutePolicy::KvAffinity || req.session_id == NO_SESSION {
             return None;
         }
         let r = self.residency.get(&req.session_id)?;
-        if !self.pairs[r.pair].active {
-            // The resident pair is draining or retired — don't stick new
-            // turns to it; fall back to the load-based pick (a miss).
-            return None;
-        }
         if !self.pair_serves(r.pair, self.required_model(req)) {
             // The session changed to a class pinning a different model
-            // than the resident pair serves: a miss, never a mismatch.
+            // than the resident pair serves: a miss, never a mismatch
+            // (and never a migration — the bytes are for the wrong model).
             return None;
         }
-        let credit = self.resident_credit(r.pair, req);
-        if let Some(slo) = slo {
-            if self.estimated_ttft(r.pair, req.input_len - credit) > slo {
-                return None;
+        if self.pairs[r.pair].active {
+            let credit = self.resident_credit(r.pair, req);
+            let within_slo =
+                slo.map_or(true, |s| self.estimated_ttft_for(r.pair, req) <= s);
+            if within_slo {
+                let residual = self.residual_ready_delay_ns(r.pair, req);
+                let transfer = (residual > 0).then(|| KvTransfer {
+                    from: r.pair,
+                    delay_ns: residual,
+                    tokens: credit as u64,
+                });
+                return Some(AffinityHit { pair: r.pair, credit, transfer });
+            }
+            // SLO-infeasible in place: a migration may still beat a cold
+            // re-prefill elsewhere.
+        }
+        // Resident pair draining/retired, or SLO-blown: price shipping
+        // the prefix over the link instead of throwing it away.
+        self.migration_target(r, req, slo)
+    }
+
+    /// Cheapest destination worth shipping `req`'s resident prefix to:
+    /// the transfer must beat recomputing the prefix there, and the
+    /// destination's estimated TTFT (including the transfer) must meet
+    /// `slo` when one is given.  `None` when no link is configured or no
+    /// destination qualifies.
+    fn migration_target(
+        &self,
+        r: &Residency,
+        req: &Request,
+        slo: Option<f64>,
+    ) -> Option<AffinityHit> {
+        if r.ready_at > req.arrival_ns {
+            // The prefix is itself still on the wire from an earlier
+            // handoff — it cannot be re-shipped before it lands.
+            return None;
+        }
+        let tokens = Self::residency_credit(r, req);
+        if tokens == 0 {
+            return None;
+        }
+        let need = self.required_model(req);
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (j, p) in self.pairs.iter().enumerate() {
+            if j == r.pair || !p.active || !p.supports_credit || !self.pair_serves(j, need)
+            {
+                continue;
+            }
+            let Some(xfer_s) = self.kv_transfer_s(r.pair, j, tokens as u64) else {
+                continue;
+            };
+            // Price the alternative: prefilling the prefix from scratch
+            // as part of the full prompt on this destination.
+            let recompute_s =
+                p.prefill.predict(req.input_len) - p.prefill.predict(req.input_len - tokens);
+            if xfer_s >= recompute_s {
+                continue;
+            }
+            let est = self.estimated_ttft(j, req.input_len - tokens) + xfer_s;
+            if slo.is_some_and(|s| est > s) {
+                continue;
+            }
+            if best.map_or(true, |(_, b, _)| est < b) {
+                best = Some((j, est, xfer_s));
             }
         }
-        Some((r.pair, credit))
+        best.map(|(pair, _, xfer_s)| AffinityHit {
+            pair,
+            credit: tokens,
+            transfer: Some(KvTransfer {
+                from: r.pair,
+                delay_ns: (xfer_s * 1e9) as u64,
+                tokens: tokens as u64,
+            }),
+        })
     }
 
     /// Pick the policy's best pair, optionally restricted to pairs whose
     /// estimated TTFT meets `slo`.  Falls back to the unrestricted best
-    /// when no pair qualifies (callers gate admission first, so this is
-    /// a safety net, not a policy).  Ties break toward the lowest pair
-    /// index, keeping the assignment deterministic.
-    fn pick(&self, req: &Request, slo: Option<f64>) -> usize {
+    /// when no pair qualifies within the SLO (callers gate admission
+    /// first, so this is a safety net, not a policy), and to `None`
+    /// when no pair is active and model-compatible at all — the caller
+    /// sheds deterministically instead of routing to a masked pair.
+    /// Ties break toward the lowest pair index, keeping the assignment
+    /// deterministic.
+    fn pick(&self, req: &Request, slo: Option<f64>) -> Option<usize> {
         let need = self.required_model(req);
         // Hot path: the unconstrained least-outstanding argmin (also the
         // KvAffinity miss/first-turn fallback) is answered by the load
@@ -641,7 +907,12 @@ impl Router {
                 RoutePolicy::LeastOutstandingTokens | RoutePolicy::KvAffinity
             )
         {
-            return self.load_index.argmin();
+            let i = self.load_index.argmin();
+            if self.pairs[i].active {
+                return Some(i);
+            }
+            // Every pair is parked at +∞ (all inactive): fall through to
+            // the scan, which returns None instead of a masked pair.
         }
         let score = |p: &PairLoad, i: usize| -> f64 {
             match self.policy {
@@ -670,16 +941,16 @@ impl Router {
             }
         }
         match best {
-            Some((i, _)) => i,
+            Some((i, _)) => Some(i),
             // No active compatible pair met the SLO filter: safety-net
             // unrestricted pick (admission gates first, so this is rare).
             None if slo.is_some() => self.pick(req, None),
-            // No active pair at all — the fleet controller never drains
-            // below its minimum, and the cluster sheds model-mismatched
-            // requests before routing, so this is unreachable in
-            // practice; the index argmin keeps the answer deterministic
-            // regardless.
-            None => self.load_index.argmin(),
+            // No active compatible pair at all.  The old fallback
+            // returned `load_index.argmin()`, which ignores the `active`
+            // and model masks and so could route to a failed or
+            // mismatched pair; report the condition instead and let the
+            // caller shed deterministically.
+            None => None,
         }
     }
 
@@ -698,28 +969,36 @@ impl Router {
         load
     }
 
-    fn route_impl(&mut self, req: &Request, slo: Option<f64>) -> RouteDecision {
-        let (pair, kv_credit) = match self.affinity_target(req, slo) {
-            Some(hit) => hit,
-            None => (self.pick(req, slo), 0),
+    fn route_impl(&mut self, req: &Request, slo: Option<f64>) -> Option<RouteDecision> {
+        let (pair, kv_credit, transfer) = match self.affinity_target(req, slo) {
+            Some(hit) => (hit.pair, hit.credit, hit.transfer),
+            None => (self.pick(req, slo)?, 0, None),
         };
         let charged_tokens = self.charge(pair, req, kv_credit);
-        RouteDecision { pair, kv_credit, charged_tokens }
+        Some(RouteDecision { pair, kv_credit, charged_tokens, transfer })
     }
 
     /// Route one request; records its load as outstanding.  The caller
     /// must either [`commit_route`](Self::commit_route) the decision once
     /// the pair accepts, or release `charged_tokens` via
     /// [`on_completed`](Self::on_completed) if the pair turns it away.
-    pub fn route(&mut self, req: &Request) -> RouteDecision {
+    /// `None` when no active model-compatible pair exists (all failed or
+    /// all mismatched): shed the request, nothing was charged.
+    pub fn route(&mut self, req: &Request) -> Option<RouteDecision> {
         self.route_impl(req, None)
     }
 
     /// Route among the pairs whose estimated TTFT meets `slo_ttft_s`, so
     /// an admission decision ("some pair can serve this in time") is
     /// honoured by the dispatch itself, whatever the base policy.  Under
-    /// KV affinity the resident pair wins only while it is SLO-feasible.
-    pub fn route_within_slo(&mut self, req: &Request, slo_ttft_s: f64) -> RouteDecision {
+    /// KV affinity the resident pair wins only while it is SLO-feasible —
+    /// otherwise a priced KV migration may carry the credit elsewhere.
+    /// `None` as for [`route`](Self::route).
+    pub fn route_within_slo(
+        &mut self,
+        req: &Request,
+        slo_ttft_s: f64,
+    ) -> Option<RouteDecision> {
         self.route_impl(req, Some(slo_ttft_s))
     }
 
@@ -744,6 +1023,16 @@ impl Router {
         if decision.kv_credit > 0 {
             self.n_kv_hits += 1;
             self.prefill_tokens_saved += decision.kv_credit as u64;
+        }
+        if let Some(x) = decision.transfer {
+            // A residual-delay transfer (`from == pair`) re-surfaces a
+            // drain handoff already counted when the prefix started
+            // moving; only a fresh cross-pair shipment counts here.
+            if x.from != decision.pair {
+                self.n_migrations += 1;
+                self.migrated_tokens += x.tokens;
+                self.migration_time_s += x.delay_ns as f64 * 1e-9;
+            }
         }
         if self.policy == RoutePolicy::KvAffinity {
             self.note_residency(decision.pair, req);
@@ -791,7 +1080,7 @@ impl Router {
         self.pairs[pair].lru.insert((self.use_seq, req.session_id));
         self.residency.insert(
             req.session_id,
-            Residency { pair, tokens, last_use: self.use_seq },
+            Residency { pair, tokens, last_use: self.use_seq, ready_at: 0 },
         );
     }
 
@@ -1002,7 +1291,9 @@ impl Router {
             let eff_len = req.input_len - self.resident_credit(i, req);
             let idle = p.prefill.predict(eff_len);
             best_idle = best_idle.min(idle);
-            let est = self.estimated_ttft(i, eff_len);
+            // In-flight migrated KV delays the credited prefill start.
+            let est = self.estimated_ttft(i, eff_len)
+                + self.residual_ready_delay_ns(i, req) as f64 * 1e-9;
             if est <= slo_ttft_s {
                 return Admission::Accepted;
             }
@@ -1057,7 +1348,7 @@ mod tests {
     }
 
     fn route_all(router: &mut Router, trace: &[Request]) -> Vec<usize> {
-        trace.iter().map(|r| router.route(r).pair).collect()
+        trace.iter().map(|r| router.route(r).expect("routable").pair).collect()
     }
 
     /// Turn `k` of session `sid`: `prefix` replayed tokens + fresh tail.
@@ -1100,7 +1391,7 @@ mod tests {
         for r in &trace(150, 3) {
             let before = router.outstanding_tokens();
             let min = before.iter().cloned().fold(f64::INFINITY, f64::min);
-            let idx = router.route(r).pair;
+            let idx = router.route(r).expect("routable").pair;
             assert!(
                 before[idx] <= min + 1e-9,
                 "routed to {idx} with backlog {} > min {min}",
@@ -1127,7 +1418,7 @@ mod tests {
         let cfg = ClusterConfig::new(vec![slow, fast]);
         let mut router = Router::new(RoutePolicy::SloAware, &cfg);
         let t = trace(1, 5);
-        assert_eq!(router.route(&t[0]).pair, 1, "idle cluster: fastest prefill wins");
+        assert_eq!(router.route(&t[0]).expect("routable").pair, 1, "idle cluster: fastest prefill wins");
         // Under sustained all-at-once load the faster pair absorbs more.
         route_all(&mut router, &trace(199, 5));
         let counts = router.routed_counts();
@@ -1139,7 +1430,7 @@ mod tests {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
         let t = trace(1, 6);
-        let d = router.route(&t[0]);
+        let d = router.route(&t[0]).expect("routable");
         let pair = d.pair;
         let load = (t[0].input_len + t[0].output_len) as u64;
         assert_eq!(d.charged_tokens, load, "no credit: full load charged");
@@ -1186,10 +1477,10 @@ mod tests {
         let fast_est = router.estimated_ttft(1, req.input_len);
         assert!(fast_est < slow_est);
         let slo = (fast_est + slow_est) / 2.0; // feasible only on pair 1
-        assert_eq!(router.route_within_slo(&req, slo).pair, 1);
+        assert_eq!(router.route_within_slo(&req, slo).expect("routable").pair, 1);
         // With an SLO nobody meets, it falls back to the plain pick.
         let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
-        assert_eq!(router.route_within_slo(&req, 0.0).pair, 0);
+        assert_eq!(router.route_within_slo(&req, 0.0).expect("routable").pair, 0);
     }
 
     #[test]
@@ -1211,7 +1502,7 @@ mod tests {
         // deferral with a strictly future retry hint.
         let slo = router.estimated_ttft(0, 1000) + 0.05;
         for r in &trace(400, 14) {
-            router.route(r);
+            let _ = router.route(r);
         }
         match router.slo_admission(now, &Request::new(0, 0, 1000, 64), slo) {
             Admission::Deferred { retry_at } => assert!(retry_at > now),
@@ -1267,14 +1558,14 @@ mod tests {
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         // Turn 0 (no prefix): load-based pick, then commit pins residency.
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         assert_eq!(d0.kv_credit, 0);
         router.commit_route(&t0, &d0);
         assert_eq!(router.session_residency(1), Some(d0.pair));
         assert_eq!(router.resident_tokens()[d0.pair], 900);
         // Turn 1 replays the 900-token context: same pair, full credit.
         let t1 = session_req(1, 900, 300, 80);
-        let d1 = router.route(&t1);
+        let d1 = router.route(&t1).expect("routable");
         assert_eq!(d1.pair, d0.pair, "follow-up must stick to the resident pair");
         assert_eq!(d1.kv_credit, 900);
         // Backlog is charged for the fresh work only.
@@ -1285,7 +1576,7 @@ mod tests {
         assert_eq!(router.n_prefix_routed(), 1);
         // A different session starts fresh: no credit.
         let other = session_req(2, 0, 500, 50);
-        assert_eq!(router.route(&other).kv_credit, 0);
+        assert_eq!(router.route(&other).expect("routable").kv_credit, 0);
     }
 
     #[test]
@@ -1298,10 +1589,10 @@ mod tests {
         ] {
             let mut router = Router::new(policy, &cfg);
             let t0 = session_req(1, 0, 800, 100);
-            let d0 = router.route(&t0);
+            let d0 = router.route(&t0).expect("routable");
             router.commit_route(&t0, &d0);
             let t1 = session_req(1, 900, 300, 80);
-            let d1 = router.route(&t1);
+            let d1 = router.route(&t1).expect("routable");
             assert_eq!(d1.kv_credit, 0, "{}", policy.name());
             router.commit_route(&t1, &d1);
             assert_eq!(router.kv_hits(), 0, "{}", policy.name());
@@ -1317,7 +1608,7 @@ mod tests {
         router.set_residency_capacity_tokens(0, 2500);
         for sid in 1..=3u64 {
             let t = session_req(sid, 0, 900, 100);
-            let d = router.route(&t);
+            let d = router.route(&t).expect("routable");
             router.commit_route(&t, &d);
         }
         // Session 1 (least recently used) was evicted to fit session 3.
@@ -1328,10 +1619,10 @@ mod tests {
         assert_eq!(router.resident_tokens()[0], 2000);
         // An evicted session's follow-up is a miss: no credit.
         let t1 = session_req(1, 1000, 200, 50);
-        assert_eq!(router.route(&t1).kv_credit, 0);
+        assert_eq!(router.route(&t1).expect("routable").kv_credit, 0);
         // A context bigger than the whole budget is never pinned.
         let huge = session_req(9, 0, 4000, 100);
-        let d = router.route(&huge);
+        let d = router.route(&huge).expect("routable");
         router.commit_route(&huge, &d);
         assert_eq!(router.session_residency(9), None);
     }
@@ -1341,14 +1632,14 @@ mod tests {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         router.commit_route(&t0, &d0);
         let resident = d0.pair;
         // Bury the resident pair in backlog: affinity keeps routing the
         // session's turns there, and none complete.
         for _ in 0..150 {
             let t = session_req(1, 900, 2000, 100);
-            let d = router.route(&t);
+            let d = router.route(&t).expect("routable");
             assert_eq!(d.pair, resident);
             router.commit_route(&t, &d);
         }
@@ -1358,7 +1649,7 @@ mod tests {
             router.estimated_ttft_for(resident, &t1) > slo,
             "resident pair must be infeasible for this test"
         );
-        let d1 = router.route_within_slo(&t1, slo);
+        let d1 = router.route_within_slo(&t1, slo).expect("routable");
         assert_eq!(d1.pair, 1 - resident, "SLO-infeasible resident pair skipped");
         assert_eq!(d1.kv_credit, 0, "fallback pair holds no prefix KV");
     }
@@ -1374,12 +1665,12 @@ mod tests {
         let cfg = ClusterConfig::new(vec![pp, cronus]);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         assert_eq!(d0.pair, 0, "empty PP pair wins the LOT tie");
         router.commit_route(&t0, &d0);
         assert_eq!(router.session_residency(1), Some(0));
         let t1 = session_req(1, 900, 300, 80);
-        let d1 = router.route(&t1);
+        let d1 = router.route(&t1).expect("routable");
         assert_eq!(d1.pair, 0, "follow-up sticks to the resident PP pair");
         assert_eq!(d1.kv_credit, 900);
         assert_eq!(d1.charged_tokens, 380);
@@ -1399,12 +1690,12 @@ mod tests {
         let cfg = ClusterConfig::new(vec![dp, cronus]);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         assert_eq!(d0.pair, 0, "empty DP pair wins the LOT tie");
         router.commit_route(&t0, &d0);
         assert_eq!(router.session_residency(1), Some(0));
         let t1 = session_req(1, 900, 300, 80);
-        let d1 = router.route(&t1);
+        let d1 = router.route(&t1).expect("routable");
         assert_eq!(d1.pair, 0, "follow-up sticks to the resident DP pair");
         assert_eq!(d1.kv_credit, 900);
         assert_eq!(d1.charged_tokens, 380);
@@ -1418,7 +1709,7 @@ mod tests {
         let cfg = ClusterConfig::mixed(3, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         router.commit_route(&t0, &d0);
         route_all(&mut router, &trace(40, 19));
         assert!(router.resident_sessions() > 0);
@@ -1458,7 +1749,7 @@ mod tests {
                 }
                 best
             };
-            let d = router.route(r);
+            let d = router.route(r).expect("routable");
             assert_eq!(d.pair, scan, "arrival {k}");
             charged.push((d.pair, d.charged_tokens));
             // Release a few in-flight requests along the way so the
@@ -1473,7 +1764,7 @@ mod tests {
         }
         // Everything released: all backlogs zero, tie breaks to pair 0.
         assert_eq!(router.outstanding_tokens(), vec![0.0; 5]);
-        assert_eq!(router.route(&t[0]).pair, 0);
+        assert_eq!(router.route(&t[0]).expect("routable").pair, 0);
     }
 
     #[test]
@@ -1481,7 +1772,7 @@ mod tests {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         router.commit_route(&t0, &d0);
         assert_eq!(router.resident_sessions(), 1);
         router.release_session(1);
@@ -1517,7 +1808,7 @@ mod tests {
                 if step % 25 == 24 { 4000 } else { rng.range_usize(100, 1500) };
             let output = rng.range_usize(40, 160);
             let req = session_req(sid, 0, fresh, output);
-            let d = router.route(&req);
+            let d = router.route(&req).expect("routable");
             router.commit_route(&req, &d);
             // Mirror note_residency with the old scan semantics.
             use_seq += 1;
@@ -1561,7 +1852,7 @@ mod tests {
             assert!(!router.is_pair_active(0));
             assert_eq!(router.n_active_pairs(), 2);
             for r in &trace(60, 21) {
-                assert_ne!(router.route(r).pair, 0, "{}", policy.name());
+                assert_ne!(router.route(r).expect("routable").pair, 0, "{}", policy.name());
             }
             // Reactivation puts the pair back into rotation.
             router.set_pair_active(0, true);
@@ -1575,7 +1866,7 @@ mod tests {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
         let t = trace(10, 23);
-        let decisions: Vec<RouteDecision> = t.iter().map(|r| router.route(r)).collect();
+        let decisions: Vec<RouteDecision> = t.iter().map(|r| router.route(r).expect("routable")).collect();
         router.set_pair_active(0, false);
         for d in &decisions {
             if d.pair == 0 {
@@ -1586,7 +1877,7 @@ mod tests {
         // new arrival still goes to pair 1.
         assert_eq!(router.outstanding_tokens()[0], 0.0);
         for r in &trace(20, 24) {
-            assert_eq!(router.route(r).pair, 1);
+            assert_eq!(router.route(r).expect("routable").pair, 1);
         }
     }
 
@@ -1595,11 +1886,11 @@ mod tests {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         router.commit_route(&t0, &d0);
         router.set_pair_active(d0.pair, false);
         let t1 = session_req(1, 900, 300, 80);
-        let d1 = router.route(&t1);
+        let d1 = router.route(&t1).expect("routable");
         assert_ne!(d1.pair, d0.pair, "follow-up must leave the draining pair");
         assert_eq!(d1.kv_credit, 0, "the other pair holds no prefix KV");
     }
@@ -1609,10 +1900,10 @@ mod tests {
         let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         router.commit_route(&t0, &d0);
         let t1 = session_req(2, 0, 700, 90);
-        let d1 = router.route(&t1);
+        let d1 = router.route(&t1).expect("routable");
         router.commit_route(&t1, &d1);
         assert_ne!(d0.pair, d1.pair, "LOT spreads the two sessions");
         assert_eq!(router.resident_sessions(), 2);
@@ -1630,7 +1921,7 @@ mod tests {
         router.set_pair_active(1, false);
         // Bury the only active pair.
         for r in &trace(400, 25) {
-            router.route(r);
+            let _ = router.route(r);
         }
         let req = Request::new(0, 0, 1000, 64);
         // An idle pair 1 would accept, but it is inactive: deferred.
@@ -1650,7 +1941,7 @@ mod tests {
         let cfg = ClusterConfig::mixed(1, LLAMA3_8B);
         let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
         let t0 = session_req(1, 0, 500, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         router.commit_route(&t0, &d0);
         router.on_completed(d0.pair, d0.charged_tokens);
         // Follow-up: 600 resident + 400 fresh.  Pick an SLO between the
@@ -1693,7 +1984,7 @@ mod tests {
             assert_eq!(router.pair_model(1).name, QWEN2_7B.name);
             for r in &trace(40, 33) {
                 let pinned = r.with_class(qwen_class);
-                let d = router.route(&pinned);
+                let d = router.route(&pinned).expect("routable");
                 assert_eq!(d.pair, 1, "{}", policy.name());
                 router.commit_route(&pinned, &d);
             }
@@ -1730,13 +2021,13 @@ mod tests {
         router.set_class_registry(reg);
         // Turn 0 (default class) pins the session on the llama pair.
         let t0 = session_req(1, 0, 800, 100);
-        let d0 = router.route(&t0);
+        let d0 = router.route(&t0).expect("routable");
         assert_eq!(d0.pair, 0);
         router.commit_route(&t0, &d0);
         // The follow-up arrives pinned to qwen: the resident pair is a
         // miss (not a mismatch dispatch) and the route lands on pair 1.
         let t1 = session_req(1, 900, 300, 80).with_class(qwen_class);
-        let d1 = router.route(&t1);
+        let d1 = router.route(&t1).expect("routable");
         assert_eq!(d1.pair, 1, "affinity must yield to the model constraint");
         assert_eq!(d1.kv_credit, 0, "the compatible pair holds no prefix KV");
     }
@@ -1758,7 +2049,7 @@ mod tests {
         // No constrained incumbent in flight: pass.
         assert!(router.tbt_admission(SimTime::ZERO, &newcomer).is_none());
         let inc = Request::new(1, 0, 800, 100).with_class(strict_id);
-        let d = router.route(&inc);
+        let d = router.route(&inc).expect("routable");
         router.commit_route(&inc, &d);
         assert!(router.estimated_tbt_s(0) > 0.0);
         assert!(router.estimated_tbt_inflation(0, &newcomer) > 0.0);
@@ -1777,7 +2068,7 @@ mod tests {
         let mut lax_router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
         lax_router.set_class_registry(lax_reg);
         let inc2 = Request::new(2, 0, 800, 100).with_class(lax_id);
-        let d2 = lax_router.route(&inc2);
+        let d2 = lax_router.route(&inc2).expect("routable");
         lax_router.commit_route(&inc2, &d2);
         assert!(lax_router.tbt_admission(SimTime::ZERO, &newcomer).is_none());
     }
@@ -1810,7 +2101,7 @@ mod tests {
         let idle = router.best_ttft_headroom(1.0).unwrap();
         assert!(idle > 0.0, "idle pairs have headroom under a 1s SLO");
         for r in &trace(300, 35) {
-            let d = router.route(r);
+            let d = router.route(r).expect("routable");
             router.commit_route(r, &d);
         }
         let loaded = router.best_ttft_headroom(1.0).unwrap();
@@ -1818,5 +2109,166 @@ mod tests {
         router.set_pair_active(0, false);
         router.set_pair_active(1, false);
         assert!(router.best_ttft_headroom(1.0).is_none());
+    }
+
+    // --- terminal-fallback mask regression + KV migration ---
+
+    #[test]
+    fn route_sheds_when_no_active_compatible_pair_exists() {
+        // Satellite regression: the old terminal fallback returned
+        // `load_index.argmin()` ignoring the `active` and model masks,
+        // so an all-failed fleet still "routed" to pair 0.
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let req = Request::new(0, 0, 400, 60);
+        for policy in RoutePolicy::ALL {
+            let mut router = Router::new(policy, &cfg);
+            router.set_pair_active(0, false);
+            router.set_pair_active(1, false);
+            assert_eq!(router.route(&req), None, "{}", policy.name());
+            assert_eq!(
+                router.route_within_slo(&req, 10.0),
+                None,
+                "{}",
+                policy.name()
+            );
+            // One survivor: routing resumes, deterministically to it.
+            router.set_pair_active(1, true);
+            assert_eq!(
+                router.route(&req).expect("routable").pair,
+                1,
+                "{}",
+                policy.name()
+            );
+        }
+        // All-mismatched: a class pinning a model nobody serves.
+        let mut reg = ClassRegistry::new();
+        let mut sc = ServiceClass::named("qwen-tenant");
+        sc.model = Some(QWEN2_7B);
+        let qwen_class = reg.register(sc);
+        let mut router = Router::new(RoutePolicy::LeastOutstandingTokens, &cfg);
+        router.set_class_registry(reg);
+        assert_eq!(router.route(&req.with_class(qwen_class)), None);
+    }
+
+    #[test]
+    fn affinity_slo_check_agrees_with_estimated_ttft_for() {
+        // Satellite: `affinity_target` used to hand-compute
+        // `estimated_ttft(pair, len - credit)`; both paths are now the
+        // same function, so a boundary SLO flips them together.
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0).expect("routable");
+        router.commit_route(&t0, &d0);
+        let t1 = session_req(1, 900, 300, 80);
+        let est = router.estimated_ttft_for(d0.pair, &t1);
+        assert_eq!(
+            est,
+            router.estimated_ttft(d0.pair, t1.input_len - 900),
+            "single-sourced credit-aware estimate"
+        );
+        // Exactly at the estimate the resident pair is still feasible.
+        let d = router.route_within_slo(&t1, est).expect("routable");
+        assert_eq!(d.pair, d0.pair);
+        assert_eq!(d.kv_credit, 900);
+        // Infinitesimally below it, the affinity hit is refused (and
+        // with no link configured, nothing migrates: a plain miss).
+        let mut router2 = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let d0b = router2.route(&t0).expect("routable");
+        router2.commit_route(&t0, &d0b);
+        let d2 = router2.route_within_slo(&t1, est * 0.999).expect("routable");
+        assert_eq!(d2.kv_credit, 0, "SLO below the credit-aware estimate");
+        assert_eq!(d2.transfer, None);
+    }
+
+    #[test]
+    fn slo_blown_resident_pair_migrates_the_prefix_over_the_link() {
+        let link = LinkSpec::parse("1000G").unwrap();
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B).with_link(link);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = router.route(&t0).expect("routable");
+        router.commit_route(&t0, &d0);
+        let resident = d0.pair;
+        // Bury the resident pair under the session's own heavy turns.
+        for _ in 0..150 {
+            let t = session_req(1, 900, 2000, 100);
+            let d = router.route(&t).expect("routable");
+            assert_eq!(d.pair, resident);
+            router.commit_route(&t, &d);
+        }
+        let t1 = session_req(1, 900, 300, 80);
+        let slo = router.estimated_ttft(1 - resident, t1.input_len) + 0.1;
+        assert!(
+            router.estimated_ttft_for(resident, &t1) > slo,
+            "resident pair must be infeasible for this test"
+        );
+        let d1 = router.route_within_slo(&t1, slo).expect("routable");
+        assert_eq!(d1.pair, 1 - resident, "SLO-infeasible resident pair left");
+        assert_eq!(d1.kv_credit, 900, "the prefix ships instead of recomputing");
+        let x = d1.transfer.expect("a migration backs the credit");
+        assert_eq!(x.from, resident);
+        assert_eq!(x.tokens, 900);
+        assert!(x.delay_ns > 0);
+        router.commit_route(&t1, &d1);
+        assert_eq!(router.n_migrations(), 1);
+        assert_eq!(router.migrated_tokens(), 900);
+        assert!(router.migration_time_s() > 0.0);
+        // The residency followed the session to the destination.
+        assert_eq!(router.session_residency(1), Some(1 - resident));
+        // Migration counters reset with the rest of the router state.
+        router.reset();
+        assert_eq!(router.n_migrations(), 0);
+        assert_eq!(router.migrated_tokens(), 0);
+        assert_eq!(router.migration_time_s(), 0.0);
+    }
+
+    #[test]
+    fn handoff_ships_residency_and_eviction_stays_without_a_link() {
+        // Without a link, the handoff *is* the old eviction.
+        let plain_cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let mut plain = Router::new(RoutePolicy::KvAffinity, &plain_cfg);
+        let t0 = session_req(1, 0, 800, 100);
+        let d0 = plain.route(&t0).expect("routable");
+        plain.commit_route(&t0, &d0);
+        assert_eq!(plain.handoff_pair_residency(d0.pair, SimTime::ZERO), 0);
+        assert_eq!(plain.session_residency(1), None);
+        assert_eq!(plain.n_migrations(), 0);
+
+        // With a link, a draining pair ships its residency over.
+        let link = LinkSpec::parse("1000G").unwrap();
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B).with_link(link);
+        let mut router = Router::new(RoutePolicy::KvAffinity, &cfg);
+        let d0 = router.route(&t0).expect("routable");
+        router.commit_route(&t0, &d0);
+        router.set_pair_active(d0.pair, false);
+        let moved = router.handoff_pair_residency(d0.pair, SimTime::ZERO);
+        assert_eq!(moved, 1);
+        assert_eq!(router.session_residency(1), Some(1 - d0.pair));
+        assert_eq!(router.resident_tokens()[d0.pair], 0);
+        assert_eq!(router.resident_tokens()[1 - d0.pair], 900);
+        assert_eq!(router.n_migrations(), 1);
+        assert_eq!(router.migrated_tokens(), 900);
+        assert!(router.migration_time_s() > 0.0);
+        // A turn arriving while the KV is still on the wire carries the
+        // residual delay (from == pair: not a second migration) and the
+        // estimator prices the wait.
+        let t_early = session_req(1, 900, 300, 80); // arrival_ns == 0
+        let base = router.estimated_ttft(1 - d0.pair, 300);
+        assert!(router.estimated_ttft_for(1 - d0.pair, &t_early) > base);
+        let de = router.route(&t_early).expect("routable");
+        assert_eq!(de.pair, 1 - d0.pair);
+        assert_eq!(de.kv_credit, 900);
+        let xe = de.transfer.expect("residual transfer delay");
+        assert_eq!(xe.from, de.pair, "residual, not a fresh migration");
+        assert!(xe.delay_ns > 0);
+        // A turn arriving well after the transfer landed sees plain
+        // resident credit with no delay.
+        let mut t_late = session_req(1, 900, 300, 80);
+        t_late.arrival_ns = 10_000_000_000;
+        let dl = router.route(&t_late).expect("routable");
+        assert_eq!(dl.pair, 1 - d0.pair);
+        assert_eq!(dl.kv_credit, 900);
+        assert_eq!(dl.transfer, None, "KV already landed: no residual");
     }
 }

@@ -11,6 +11,7 @@ use crate::cronus::router::RoutePolicy;
 use crate::engine::{EngineInstance, EngineRequest};
 use crate::faults::FaultConfig;
 use crate::simgpu::fit;
+use crate::simgpu::link::LinkSpec;
 use crate::simgpu::model_desc;
 use crate::simgpu::perfmodel::PerfModel;
 use crate::systems::cluster::{build_cluster_system, ClusterSystem};
@@ -914,6 +915,101 @@ pub fn faults_demo(
     Ok((table, points))
 }
 
+// ---------------------------------------------------------------------------
+// Cross-pair KV migration (beyond the paper; EXPERIMENTS.md §Migration)
+// ---------------------------------------------------------------------------
+
+/// One run of the migration demo: `label` is `no-link` (drains evict
+/// warm sessions) or `migrate` (the inter-pair link ships them).
+pub struct MigrationDemoPoint {
+    pub label: &'static str,
+    pub outcome: RunOutcome,
+    pub stats: ClosedLoopStats,
+    /// Prefill tokens the cluster actually computed (excludes KV
+    /// transfers and resident session prefixes).
+    pub prefill_tokens_executed: u64,
+}
+
+/// The `--migrate` experiment: a closed-loop session workload whose
+/// think-time lulls let a twitchy fleet controller drain pairs between
+/// turns, served twice on the same fleet and seed.  Without a link every
+/// drain evicts the drained pair's warm prefixes and the sessions'
+/// next turns re-prefill from scratch; with `link` configured the
+/// drained pair hands its residency to a surviving pair over the wire
+/// wherever `kv_transfer_time < recompute`.  Both runs complete the
+/// same turns — the migrated one executes strictly fewer prefill
+/// tokens, which is the entire payoff.
+pub fn migration_demo(
+    opts: &ExperimentOpts,
+    cluster: &ClusterConfig,
+    link: LinkSpec,
+) -> (Table, Vec<MigrationDemoPoint>) {
+    let n_sessions = opts.n_requests.max(2);
+    let sessions = session_workload(n_sessions, 2.0, opts.seed);
+    // Start wide and drain eagerly: every think-time lull retires a
+    // pair, every turn burst brings one back.
+    let autoscale = AutoscaleConfig {
+        initial_pairs: cluster.n_pairs(),
+        window_s: 0.25,
+        cooldown_s: 0.25,
+        scale_up_backlog: 2048.0,
+        scale_down_backlog: 512.0,
+        ..AutoscaleConfig::default()
+    };
+    let mut no_link = cluster.clone();
+    no_link.link = None;
+    for p in &mut no_link.pairs {
+        p.link = None;
+    }
+    let linked = no_link.clone().with_link(link);
+    let mut run = |label: &'static str, cfg: ClusterConfig| {
+        let mut sys = ClusterSystem::new(cfg, RoutePolicy::KvAffinity)
+            .with_autoscale(autoscale.clone());
+        let (outcome, stats) = closed_loop(&mut sys, &sessions);
+        let prefill_tokens_executed = prefill_tokens_executed(&outcome);
+        MigrationDemoPoint { label, outcome, stats, prefill_tokens_executed }
+    };
+    let points = vec![run("no-link", no_link), run("migrate", linked)];
+
+    let n_turns = total_turns(&sessions);
+    let mut table = Table::new(
+        format!(
+            "KV migration on {}: {} sessions / {} turns closed-loop, \
+             link {}",
+            cluster.label(),
+            n_sessions,
+            n_turns,
+            link.spec()
+        ),
+        &[
+            "Run",
+            "turns",
+            "prefill tok",
+            "saved tok",
+            "migrations",
+            "migrated tok",
+            "link (s)",
+            "drains",
+            "TTFT p99 (s)",
+        ],
+    );
+    for p in &points {
+        let r = &p.outcome.report;
+        table.row(vec![
+            p.label.to_string(),
+            format!("{}/{}", p.stats.n_finished_turns, n_turns),
+            p.prefill_tokens_executed.to_string(),
+            r.prefill_tokens_saved.to_string(),
+            r.n_migrations.to_string(),
+            r.migrated_tokens.to_string(),
+            format!("{:.4}", r.migration_time_s),
+            r.n_scale_downs.to_string(),
+            format!("{:.3}", r.ttft_p99_s),
+        ]);
+    }
+    (table, points)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1110,6 +1206,47 @@ mod tests {
         assert_eq!(faulted.n_finished + faulted.n_rejected, 30);
         let s = table.render();
         assert!(s.contains("fault-free") && s.contains("faulted"), "{s}");
+    }
+
+    #[test]
+    fn migration_demo_same_turns_strictly_fewer_prefill_tokens() {
+        // The tentpole's acceptance criterion: forced drains on a
+        // closed-loop session workload, same seed with and without the
+        // link — identical turns served, strictly fewer prefill tokens
+        // executed, and migration chosen only where the transfer beats
+        // the recompute (a fast link makes that unambiguous).
+        let opts = ExperimentOpts { n_requests: 8, seed: 7 };
+        let cluster = ClusterConfig::mixed(2, model_desc::LLAMA3_8B);
+        let link = LinkSpec::parse("400G").unwrap();
+        let (table, points) = migration_demo(&opts, &cluster, link);
+        assert_eq!(points.len(), 2);
+        let base = &points[0];
+        let mig = &points[1];
+        assert_eq!(base.label, "no-link");
+        assert_eq!(mig.label, "migrate");
+        // The controller actually drained pairs in both runs.
+        assert!(base.outcome.report.n_scale_downs >= 1, "no drain forced");
+        assert!(mig.outcome.report.n_scale_downs >= 1, "no drain forced");
+        // No link, no migration.
+        assert_eq!(base.outcome.report.n_migrations, 0);
+        assert_eq!(base.outcome.report.migrated_tokens, 0);
+        // The linked run shipped at least one warm prefix and paid wire
+        // time for it.
+        assert!(mig.outcome.report.n_migrations >= 1, "{}", table.render());
+        assert!(mig.outcome.report.migrated_tokens > 0);
+        assert!(mig.outcome.report.migration_time_s > 0.0);
+        // Same turns completed, strictly fewer prefill tokens executed.
+        assert_eq!(base.stats.n_finished_turns, mig.stats.n_finished_turns);
+        assert_eq!(base.stats.n_shed_turns, 0);
+        assert_eq!(mig.stats.n_shed_turns, 0);
+        assert!(
+            mig.prefill_tokens_executed < base.prefill_tokens_executed,
+            "migrate {} !< no-link {}",
+            mig.prefill_tokens_executed,
+            base.prefill_tokens_executed
+        );
+        let s = table.render();
+        assert!(s.contains("no-link") && s.contains("migrate"), "{s}");
     }
 
     #[test]

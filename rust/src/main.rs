@@ -180,6 +180,19 @@ fn main() {
                  to the --faults plan (e.g. 0@1+2,1@4)",
                 None,
             )
+            .flag(
+                "migrate",
+                "KV-migration demo: closed-loop sessions with forced drains, \
+                 served with and without the inter-pair link; writes \
+                 BENCH_migration.json ($CRONUS_MIGRATION_BENCH_JSON overrides \
+                 the path)",
+            )
+            .opt(
+                "link",
+                "inter-pair link for --migrate, <gbps>G[@<lat>us][:<eff>] \
+                 (a [cluster] link in --config takes precedence)",
+                Some("100G"),
+            )
             .flag("help", "print usage"),
             &raw,
             |args| {
@@ -314,6 +327,44 @@ fn main() {
                     });
                     table.print();
                     write_faults_artifact(args, &cluster, policy, rate, &fcfg, &points);
+                    return;
+                }
+                if args.has_flag("migrate") {
+                    // Migration mode: the same closed-loop session
+                    // workload served twice — drains evicting warm KV
+                    // (no link) vs handing it over the inter-pair link.
+                    let cluster = match args.get("config") {
+                        Some(path) => cluster_from_toml(path),
+                        None => cronus::config::ClusterConfig::mixed(
+                            args.get_usize("pairs").unwrap(),
+                            cronus::simgpu::model_desc::LLAMA3_8B,
+                        ),
+                    };
+                    let link = match cluster.link {
+                        Some(l) => l,
+                        None => {
+                            let spec = args.get("link").unwrap();
+                            cronus::simgpu::link::LinkSpec::parse(spec)
+                                .unwrap_or_else(|e| {
+                                    eprintln!("{e}");
+                                    std::process::exit(2);
+                                })
+                        }
+                    };
+                    let (table, points) =
+                        launcher::migration_demo(&opts(args), &cluster, link);
+                    table.print();
+                    if let Some(mig) =
+                        points.iter().find(|p| p.label == "migrate")
+                    {
+                        let r = &mig.outcome.report;
+                        println!(
+                            "\nmigrate: {} prefixes shipped ({} tokens, \
+                             {:.4}s on the wire)",
+                            r.n_migrations, r.migrated_tokens, r.migration_time_s
+                        );
+                    }
+                    write_migration_artifact(args, &cluster, link, &points);
                     return;
                 }
                 if args.has_flag("closed-loop") {
@@ -674,6 +725,60 @@ fn write_faults_artifact(
     println!("\nwrote {path}");
 }
 
+/// Emit the machine-readable migration artifact for
+/// `bench-cluster --migrate` (schema v1; CI validates and archives it —
+/// record, don't gate, see EXPERIMENTS.md §Migration protocol).
+fn write_migration_artifact(
+    args: &cronus::config::cli::Args,
+    cluster: &cronus::config::ClusterConfig,
+    link: cronus::simgpu::link::LinkSpec,
+    points: &[launcher::MigrationDemoPoint],
+) {
+    use cronus::benchkit::JVal;
+    let run_jval = |p: &launcher::MigrationDemoPoint| -> JVal {
+        let r = &p.outcome.report;
+        JVal::Obj(vec![
+            ("run".into(), JVal::Str(p.label.into())),
+            ("finished_turns".into(), JVal::Int(p.stats.n_finished_turns as u64)),
+            ("shed".into(), JVal::Int(r.n_rejected as u64)),
+            (
+                "prefill_tokens_executed".into(),
+                JVal::Int(p.prefill_tokens_executed),
+            ),
+            ("prefill_tokens_saved".into(), JVal::Int(r.prefill_tokens_saved)),
+            ("n_migrations".into(), JVal::Int(r.n_migrations as u64)),
+            ("migrated_tokens".into(), JVal::Int(r.migrated_tokens)),
+            ("migration_time_s".into(), JVal::Num(r.migration_time_s)),
+            ("scale_downs".into(), JVal::Int(r.n_scale_downs as u64)),
+            ("ttft_p99_s".into(), JVal::Num(r.ttft_p99_s)),
+        ])
+    };
+    let artifact = JVal::Obj(vec![
+        ("schema_version".into(), JVal::Int(1)),
+        ("generated_by".into(), JVal::Str("bench-cluster --migrate".into())),
+        (
+            "workload".into(),
+            JVal::Obj(vec![
+                (
+                    "n_sessions".into(),
+                    JVal::Int(args.get_usize("n").unwrap() as u64),
+                ),
+                ("seed".into(), JVal::Int(args.get_u64("seed").unwrap())),
+                ("link".into(), JVal::Str(link.spec())),
+                ("n_pairs".into(), JVal::Int(cluster.n_pairs() as u64)),
+            ]),
+        ),
+        ("runs".into(), JVal::Arr(points.iter().map(run_jval).collect())),
+    ]);
+    let path = std::env::var("CRONUS_MIGRATION_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_migration.json".to_string());
+    std::fs::write(&path, artifact.render() + "\n").unwrap_or_else(|e| {
+        eprintln!("cannot write {path}: {e}");
+        std::process::exit(2);
+    });
+    println!("\nwrote {path}");
+}
+
 fn with_parser(
     parser: Parser,
     raw: &[String],
@@ -736,7 +841,8 @@ fn print_help() {
          \x20 bench-cluster  sweep 1\u{2192}N mixed pairs behind the cluster router\n\
          \x20                (--autoscale: queue-driven elastic pair set;\n\
          \x20                 --classes: multi-tenant QoS service classes;\n\
-         \x20                 --faults: deterministic pair-failure injection)\n\
+         \x20                 --faults: deterministic pair-failure injection;\n\
+         \x20                 --migrate: cross-pair KV migration over the link)\n\
          \x20 plan-topology  search pair compositions under a budget, emit TOML\n\
          \x20 calibrate      print the Balancer's fitted predictors\n\
          \x20 trace          generate + summarize a workload trace\n\

@@ -195,8 +195,10 @@ impl ClassBreakdown {
         mut ttft: Vec<f64>,
         mut tbt: Vec<f64>,
     ) -> ClassBreakdown {
-        ttft.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        tbt.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        ttft.retain(|v| v.is_finite());
+        tbt.retain(|v| v.is_finite());
+        ttft.sort_unstable_by(f64::total_cmp);
+        tbt.sort_unstable_by(f64::total_cmp);
         ClassBreakdown {
             name: name.into(),
             n_requests,
@@ -273,6 +275,14 @@ pub struct Report {
     /// Outage durations (seconds) of the repaired failures, sorted
     /// ascending (kept raw so merged reports keep exact percentiles).
     pub recovery_latency_s: Vec<f64>,
+    /// Warm prefixes shipped to another pair over the inter-pair link
+    /// instead of recomputed (cluster-level; 0 without a configured
+    /// link).
+    pub n_migrations: usize,
+    /// Prefix tokens those migrations carried across the link.
+    pub migrated_tokens: u64,
+    /// Total time the migrated KV spent on the wire, seconds.
+    pub migration_time_s: f64,
     /// Per-service-class breakdown (cluster runs with a QoS class
     /// registry attached; empty otherwise).  Ordered by class id.
     pub classes: Vec<ClassBreakdown>,
@@ -305,9 +315,15 @@ impl Report {
         mut tbt: Vec<f64>,
         mut e2e: Vec<f64>,
     ) -> Report {
-        ttft.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        tbt.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        e2e.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        // Reject non-finite samples up front: a NaN would previously
+        // panic the `partial_cmp(..).unwrap()` sort, and `total_cmp`
+        // alone would let it pollute the percentiles.
+        ttft.retain(|v| v.is_finite());
+        tbt.retain(|v| v.is_finite());
+        e2e.retain(|v| v.is_finite());
+        ttft.sort_unstable_by(f64::total_cmp);
+        tbt.sort_unstable_by(f64::total_cmp);
+        e2e.sort_unstable_by(f64::total_cmp);
         Report {
             label: label.into(),
             n_requests,
@@ -343,6 +359,9 @@ impl Report {
             n_retries: 0,
             n_recovered: 0,
             recovery_latency_s: Vec::new(),
+            n_migrations: 0,
+            migrated_tokens: 0,
+            migration_time_s: 0.0,
             classes: Vec::new(),
             ttft_samples: ttft,
             tbt_samples: tbt,
@@ -374,6 +393,9 @@ impl Report {
         let mut n_retries = 0usize;
         let mut n_recovered = 0usize;
         let mut recovery_latency_s = Vec::new();
+        let mut n_migrations = 0usize;
+        let mut migrated_tokens = 0u64;
+        let mut migration_time_s = 0.0f64;
         let mut makespan_s = 0.0f64;
         for p in parts {
             n_requests += p.n_requests;
@@ -388,7 +410,11 @@ impl Report {
             n_pair_failures += p.n_pair_failures;
             n_retries += p.n_retries;
             n_recovered += p.n_recovered;
-            recovery_latency_s.extend_from_slice(&p.recovery_latency_s);
+            recovery_latency_s
+                .extend(p.recovery_latency_s.iter().copied().filter(|v| v.is_finite()));
+            n_migrations += p.n_migrations;
+            migrated_tokens += p.migrated_tokens;
+            migration_time_s += p.migration_time_s;
             makespan_s = makespan_s.max(p.makespan_s);
             ttft.extend_from_slice(&p.ttft_samples);
             tbt.extend_from_slice(&p.tbt_samples);
@@ -413,8 +439,11 @@ impl Report {
         report.n_pair_failures = n_pair_failures;
         report.n_retries = n_retries;
         report.n_recovered = n_recovered;
-        recovery_latency_s.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        recovery_latency_s.sort_unstable_by(f64::total_cmp);
         report.recovery_latency_s = recovery_latency_s;
+        report.n_migrations = n_migrations;
+        report.migrated_tokens = migrated_tokens;
+        report.migration_time_s = migration_time_s;
         report.classes = Self::merge_classes(parts);
         // The per-pair parts of a cluster run carry no KV accounting
         // (the router owns it; the cluster stamps hits + denominator
@@ -503,6 +532,12 @@ impl Report {
             s.push_str(&format!(
                 "  faults {} (retried {}, recovered {})",
                 self.n_pair_failures, self.n_retries, self.n_recovered
+            ));
+        }
+        if self.n_migrations > 0 {
+            s.push_str(&format!(
+                "  migrated {} ({} tok, {:.3}s link)",
+                self.n_migrations, self.migrated_tokens, self.migration_time_s
             ));
         }
         for c in &self.classes {
@@ -749,6 +784,65 @@ mod tests {
         assert_eq!(merged.n_pair_failures, 4);
         assert_eq!(merged.n_retries, 10);
         assert_eq!(merged.n_recovered, 2);
+        assert_eq!(merged.recovery_latency_s, vec![0.8, 0.8]);
+    }
+
+    #[test]
+    fn migration_counters_merge_and_surface_in_summary() {
+        let mut c = Collector::new();
+        c.on_arrival(1, SimTime::ZERO);
+        c.on_token(1, t(0.1));
+        c.on_finish(1, t(0.2));
+        let mut r = c.report("x");
+        assert_eq!((r.n_migrations, r.migrated_tokens), (0, 0));
+        assert_eq!(r.migration_time_s, 0.0);
+        assert!(!r.summary().contains("migrated"));
+        r.n_migrations = 2;
+        r.migrated_tokens = 1800;
+        r.migration_time_s = 0.025;
+        assert!(
+            r.summary().contains("migrated 2 (1800 tok, 0.025s link)"),
+            "{}",
+            r.summary()
+        );
+        let merged = Report::merge("m", &[r.clone(), r]);
+        assert_eq!(merged.n_migrations, 4);
+        assert_eq!(merged.migrated_tokens, 3600);
+        assert!((merged.migration_time_s - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_samples_are_rejected_not_panicked_on() {
+        // A NaN used to panic the `partial_cmp(..).unwrap()` sorts in
+        // from_samples and merge; now non-finite samples are rejected at
+        // insertion and the sorts are total.
+        let r = Report::from_samples(
+            "x",
+            4,
+            4,
+            4,
+            1.0,
+            vec![0.2, f64::NAN, 0.1, f64::INFINITY],
+            vec![f64::NAN],
+            vec![f64::NEG_INFINITY, 0.5],
+        );
+        assert_eq!(r.ttft_samples, vec![0.1, 0.2]);
+        assert!(r.tbt_samples.is_empty());
+        assert_eq!(r.e2e_samples, vec![0.5]);
+        let c = ClassBreakdown::from_samples(
+            "premium",
+            2,
+            2,
+            0,
+            1.0,
+            vec![f64::NAN, 0.3],
+            vec![0.01, f64::INFINITY],
+        );
+        assert_eq!(c.ttft_samples, vec![0.3]);
+        assert_eq!(c.tbt_samples, vec![0.01]);
+        let mut faulty = r.clone();
+        faulty.recovery_latency_s = vec![0.8, f64::NAN];
+        let merged = Report::merge("m", &[faulty.clone(), faulty]);
         assert_eq!(merged.recovery_latency_s, vec![0.8, 0.8]);
     }
 

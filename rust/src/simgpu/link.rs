@@ -36,6 +36,79 @@ impl LinkSpec {
     pub fn kv_transfer_time(&self, tokens: usize, kv_bytes_per_token: u64) -> f64 {
         self.transfer_time(tokens as f64 * kv_bytes_per_token as f64)
     }
+
+    /// Parse the config grammar `<gbps>G[@<latency>us][:<efficiency>]`:
+    /// `"100G"` is a 100 Gbps link with [`INFINIBAND_100G`]'s latency and
+    /// efficiency, `"25G@20us:0.8"` overrides both.  Case-insensitive on
+    /// the unit suffixes.
+    pub fn parse(text: &str) -> Result<LinkSpec, String> {
+        let mut spec = LinkSpec::INFINIBAND_100G;
+        let (rest, eff) = match text.rsplit_once(':') {
+            Some((r, e)) => {
+                let eff: f64 = e
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad link efficiency in '{text}'"))?;
+                if !(eff > 0.0 && eff <= 1.0) {
+                    return Err(format!("link efficiency must be in (0, 1] in '{text}'"));
+                }
+                (r, Some(eff))
+            }
+            None => (text, None),
+        };
+        let (rate, lat) = match rest.split_once('@') {
+            Some((r, l)) => {
+                let l = l.trim();
+                let micros = l
+                    .strip_suffix("us")
+                    .or_else(|| l.strip_suffix("US"))
+                    .ok_or_else(|| format!("link latency must end in 'us' in '{text}'"))?;
+                let us: f64 = micros
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad link latency in '{text}'"))?;
+                if us < 0.0 {
+                    return Err(format!("link latency must be >= 0 in '{text}'"));
+                }
+                (r, Some(us * 1e-6))
+            }
+            None => (rest, None),
+        };
+        let rate = rate.trim();
+        let gbps_txt = rate
+            .strip_suffix('G')
+            .or_else(|| rate.strip_suffix('g'))
+            .ok_or_else(|| format!("link rate must end in 'G' in '{text}'"))?;
+        let gbps: f64 = gbps_txt
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad link rate in '{text}'"))?;
+        if !(gbps > 0.0) {
+            return Err(format!("link rate must be > 0 in '{text}'"));
+        }
+        spec.gbps = gbps;
+        if let Some(l) = lat {
+            spec.latency_s = l;
+        }
+        if let Some(e) = eff {
+            spec.efficiency = e;
+        }
+        Ok(spec)
+    }
+
+    /// Render this link back into the grammar [`LinkSpec::parse`]
+    /// accepts, eliding the suffixes that match the InfiniBand defaults.
+    pub fn spec(&self) -> String {
+        let mut s = format!("{}G", self.gbps);
+        if self.latency_s != LinkSpec::INFINIBAND_100G.latency_s {
+            s.push_str(&format!("@{}us", self.latency_s * 1e6));
+        }
+        if self.efficiency != LinkSpec::INFINIBAND_100G.efficiency {
+            s.push(':');
+            s.push_str(&self.efficiency.to_string());
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -68,6 +141,33 @@ mod tests {
         let l = LinkSpec::INFINIBAND_100G;
         let t = l.kv_transfer_time(1014, LLAMA3_8B.kv_bytes_per_token());
         assert!((0.005..0.05).contains(&t), "kv transfer {t}");
+    }
+
+    #[test]
+    fn parse_full_and_defaulted_specs() {
+        let l = LinkSpec::parse("100G").unwrap();
+        assert_eq!(l, LinkSpec::INFINIBAND_100G);
+        let l = LinkSpec::parse("25G@20us:0.8").unwrap();
+        assert_eq!(l.gbps, 25.0);
+        assert!((l.latency_s - 20e-6).abs() < 1e-12);
+        assert_eq!(l.efficiency, 0.8);
+        let l = LinkSpec::parse("10g@5us").unwrap();
+        assert_eq!(l.gbps, 10.0);
+        assert_eq!(l.efficiency, LinkSpec::INFINIBAND_100G.efficiency);
+        assert!(LinkSpec::parse("100").is_err(), "missing G suffix");
+        assert!(LinkSpec::parse("0G").is_err(), "zero rate");
+        assert!(LinkSpec::parse("100G@5ms").is_err(), "latency unit");
+        assert!(LinkSpec::parse("100G:1.5").is_err(), "efficiency > 1");
+    }
+
+    #[test]
+    fn spec_round_trips_through_parse() {
+        for text in ["100G", "25G@20us:0.8", "10G:0.5", "40G@1us"] {
+            let l = LinkSpec::parse(text).unwrap();
+            let rt = LinkSpec::parse(&l.spec()).unwrap();
+            assert_eq!(rt, l, "'{text}' -> '{}' changed the link", l.spec());
+        }
+        assert_eq!(LinkSpec::INFINIBAND_100G.spec(), "100G");
     }
 
     #[test]

@@ -320,6 +320,14 @@ impl FleetController {
 
     /// A draining pair's last in-flight request finished: it is now
     /// standby and may be re-activated by a later scale-up.
+    ///
+    /// The pair's resident KV is *alive* at this point — the cluster
+    /// hands its sessions to surviving pairs over the inter-pair link
+    /// ([`Router::handoff_pair_residency`]) instead of evicting them
+    /// blindly; only when no link is configured (or no destination
+    /// qualifies) does retirement fall back to eviction.
+    ///
+    /// [`Router::handoff_pair_residency`]: crate::cronus::router::Router::handoff_pair_residency
     pub fn on_pair_drained(&mut self, i: usize) {
         debug_assert_eq!(self.states[i], PairState::Draining);
         self.states[i] = PairState::Standby;

@@ -80,6 +80,20 @@
 //! branch, so non-fault runs stay byte-identical (pinned by
 //! `tests/faults_chaos.rs`).
 //!
+//! With an inter-pair link configured ([`ClusterConfig::link`] or
+//! per-pair overrides) warm sessions survive displacement: the router
+//! prices shipping a session's resident prefix over the link against
+//! recomputing it ([`Router::handoff_pair_residency`] on drain, the
+//! migration-aware affinity target on SLO-infeasible residents), and an
+//! admitted request whose KV is still on the wire is *delivered* to its
+//! destination pair only once the transfer lands — the link delay is
+//! part of the measured TTFT.  A *failed* pair's KV is dead and is still
+//! evicted, never migrated, and transfers still in flight toward a pair
+//! that fails are aborted into the fault retry path.  `drain` reports
+//! `Report::{n_migrations, migrated_tokens, migration_time_s}`.
+//! Without a link every migration hook sits behind one `is_some()`
+//! branch and runs are byte-identical to the pre-migration cluster.
+//!
 //! # Example
 //!
 //! ```
@@ -115,7 +129,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::config::topology::ClusterConfig;
-use crate::cronus::router::{RoutePolicy, Router};
+use crate::cronus::router::{RouteDecision, RoutePolicy, Router};
 use crate::faults::{FaultEvent, FaultPlan, RetryBackoff};
 use crate::metrics::{ClassBreakdown, Report};
 use crate::qos::{ClassId, ClassRegistry, FairShareLedger};
@@ -189,6 +203,17 @@ struct FaultState {
     n_recovered: usize,
     /// Observed outage durations, seconds (unsorted until drain).
     recovery_latency: Vec<f64>,
+}
+
+/// Live KV-migration state (present iff the topology configures an
+/// inter-pair link; without one every migration hook is a single dead
+/// `is_some()` branch).
+struct MigrationState {
+    /// Admitted requests whose prefix KV is still on the wire, sorted by
+    /// delivery instant (FIFO on ties): the destination pair sees the
+    /// `submit` only once the transfer lands, so the link delay shows up
+    /// in the measured TTFT, not just the estimate.
+    deliveries: Vec<(SimTime, Request, RouteDecision)>,
 }
 
 /// The cluster's event calendar: a lazily-invalidated min-heap over the
@@ -274,6 +299,10 @@ pub struct ClusterSystem {
     /// Fault-injection state; `None` keeps every fault hook inert
     /// (behavior is byte-identical to a plan-less cluster).
     faults: Option<FaultState>,
+    /// KV-migration state; `None` (no link configured) keeps every
+    /// migration hook inert (behavior is byte-identical to a link-less
+    /// cluster).
+    migration: Option<MigrationState>,
     /// QoS class registry; `None` keeps every QoS gate inert (behavior
     /// is byte-identical to a registry-less cluster).
     classes: Option<ClassRegistry>,
@@ -312,6 +341,13 @@ impl ClusterSystem {
             .map(|pair| build_system(pair.system, &pair.deployment))
             .collect();
         let n = cfg.n_pairs();
+        let migration = if cfg.link.is_some()
+            || cfg.pairs.iter().any(|p| p.link.is_some())
+        {
+            Some(MigrationState { deliveries: Vec::new() })
+        } else {
+            None
+        };
         ClusterSystem {
             cfg,
             label,
@@ -321,6 +357,7 @@ impl ClusterSystem {
             assigned: FxHashMap::default(),
             autoscale: None,
             faults: None,
+            migration,
             classes: None,
             ledger: None,
             class_stats: Vec::new(),
@@ -442,7 +479,10 @@ impl ClusterSystem {
                 self.router.set_pair_active(i, false);
                 if self.inflight[i] == 0 {
                     ctl.on_pair_drained(i);
-                    self.router.evict_pair_residency(i);
+                    // The pair's KV is alive: hand its warm sessions over
+                    // the link where that beats re-prefilling (a plain
+                    // eviction without a configured link).
+                    self.router.handoff_pair_residency(i, t);
                     self.n_scale_downs += 1;
                     self.pending.push(SystemEvent::ScaleDown { pair: i, t });
                 }
@@ -467,15 +507,60 @@ impl ClusterSystem {
     /// [`collect_pairs_until`](Self::collect_pairs_until), so non-fault
     /// runs are byte-identical to the pre-fault cluster.
     fn collect_until(&mut self, until: SimTime) {
-        if self.faults.is_some() {
-            while let Some(ft) =
-                self.next_fault_instant().filter(|ft| *ft <= until)
-            {
-                self.collect_pairs_until(ft);
-                self.process_faults_at(ft);
+        if self.faults.is_some() || self.migration.is_some() {
+            loop {
+                let next = match
+                    (self.next_fault_instant(), self.next_migration_instant())
+                {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                let Some(it) = next.filter(|it| *it <= until) else { break };
+                self.collect_pairs_until(it);
+                if self.next_fault_instant().is_some_and(|ft| ft <= it) {
+                    self.process_faults_at(it);
+                }
+                self.deliver_migrations_at(it);
             }
         }
         self.collect_pairs_until(until);
+    }
+
+    /// Earliest pending KV-migration delivery, if any.
+    fn next_migration_instant(&self) -> Option<SimTime> {
+        self.migration
+            .as_ref()
+            .and_then(|ms| ms.deliveries.first().map(|(at, _, _)| *at))
+    }
+
+    /// Hand every admitted request whose KV transfer has landed by `t`
+    /// to its destination pair.  A pair-side deferral re-queues the
+    /// delivery strictly later, so the loop terminates; a pair-side
+    /// rejection buffered a `Shed` the next collect batch unwinds like
+    /// any other in-flight shed.
+    fn deliver_migrations_at(&mut self, t: SimTime) {
+        while let Some((_, req, decision)) = {
+            match self.migration.as_mut() {
+                Some(ms) => match ms.deliveries.first() {
+                    Some((at, _, _)) if *at <= t => Some(ms.deliveries.remove(0)),
+                    _ => None,
+                },
+                None => None,
+            }
+        } {
+            let pair = decision.pair;
+            match self.systems[pair].submit(t, req) {
+                Admission::Accepted | Admission::Rejected { .. } => {}
+                Admission::Deferred { retry_at } => {
+                    let deliver = retry_at.max(SimTime(t.0.saturating_add(1)));
+                    let ms = self.migration.as_mut().expect("migration state");
+                    let pos =
+                        ms.deliveries.partition_point(|(a, _, _)| *a <= deliver);
+                    ms.deliveries.insert(pos, (deliver, req, decision));
+                }
+            }
+            self.calendar.set(pair, self.systems[pair].next_event_at());
+        }
     }
 
     /// Earliest pending fault-plan instant: the next scheduled outage,
@@ -605,6 +690,43 @@ impl ClusterSystem {
             let retry = fs.backoff.retry_at(t, t, 0);
             fs.retry_q.push((retry, req, 0));
         }
+        // Admitted-but-undelivered migrations destined to the failed
+        // pair abort the same way: their KV on the wire has nowhere to
+        // land, so the retry re-prefills from scratch.  (Transfers
+        // *sourced* from the failed pair already left its memory before
+        // the outage and are unaffected.)
+        let doomed = match self.migration.as_mut() {
+            Some(ms) => {
+                let (doomed, keep): (Vec<_>, Vec<_>) = ms
+                    .deliveries
+                    .drain(..)
+                    .partition(|(_, _, d)| d.pair == pair);
+                ms.deliveries = keep;
+                doomed
+            }
+            None => Vec::new(),
+        };
+        for (_, dreq, _) in doomed {
+            let Some(a) = self.assigned.remove(&dreq.id) else { continue };
+            self.router.on_completed(pair, a.tokens);
+            if qos {
+                self.router.on_stream_completed(pair, a.class, a.ctx);
+                if let Some(l) = self.ledger.as_mut() {
+                    l.on_done(a.class);
+                }
+            }
+            if let Some(cs) = self.class_stat_mut(a.class) {
+                cs.n_requests -= 1;
+                cs.n_retries += 1;
+            }
+            self.inflight[pair] -= 1;
+            let mut req = a.req;
+            req.strip_kv_claim();
+            let fs = self.faults.as_mut().expect("fault state");
+            fs.n_retries += 1;
+            let retry = fs.backoff.retry_at(t, t, 0);
+            fs.retry_q.push((retry, req, 0));
+        }
         // The pair's engines were rebuilt empty; refresh its calendar
         // key (it goes quiet until repair).
         self.calendar.set(pair, self.systems[pair].next_event_at());
@@ -643,7 +765,12 @@ impl ClusterSystem {
             fs.down[pair] = false;
             fs.n_recovered += 1;
             if let Some(f) = fs.fail_at[pair].take() {
-                fs.recovery_latency.push(t.saturating_sub(f).as_secs_f64());
+                let lat = t.saturating_sub(f).as_secs_f64();
+                // Non-finite samples would poison the report's sorted
+                // percentile arrays; reject them at insertion.
+                if lat.is_finite() {
+                    fs.recovery_latency.push(lat);
+                }
             }
         }
         if let Some(ctl) = self.autoscale.as_mut() {
@@ -840,11 +967,43 @@ impl ClusterSystem {
         for (pair, retire_t) in retired {
             let ctl = self.autoscale.as_mut().expect("retired pairs imply a controller");
             ctl.on_pair_drained(pair);
-            self.router.evict_pair_residency(pair);
+            // Drained, not failed: the KV is alive, so warm sessions ship
+            // over the link where that beats re-prefilling (plain
+            // eviction without a configured link).
+            self.router.handoff_pair_residency(pair, retire_t);
             self.n_scale_downs += 1;
             let pos = self.pending.partition_point(|e| e.time() <= retire_t);
             self.pending.insert(pos, SystemEvent::ScaleDown { pair, t: retire_t });
         }
+    }
+
+    /// Bookkeeping for one accepted admission: commit the route, settle
+    /// the fair ledger, and register the in-flight record.  Shared by
+    /// the immediate-submit path and the delayed KV-migration path.
+    fn record_accept(&mut self, req: Request, decision: &RouteDecision) {
+        self.router.commit_route(&req, decision);
+        if let Some(ledger) = self.ledger.as_mut() {
+            ledger.on_admit(req.class, decision.charged_tokens);
+        }
+        if let Some(cs) = self.class_stat_mut(req.class) {
+            cs.n_requests += 1;
+        }
+        self.assigned.insert(
+            req.id,
+            AssignedReq {
+                pair: decision.pair,
+                tokens: decision.charged_tokens,
+                session_id: req.session_id,
+                final_turn: req.final_turn,
+                class: req.class,
+                ctx: req.total_context() as u64,
+                arrival: SimTime(req.arrival_ns),
+                last_token: None,
+                req,
+            },
+        );
+        self.routed_counts[decision.pair] += 1;
+        self.inflight[decision.pair] += 1;
     }
 
     /// The admission core shared by fresh arrivals (`retry = None`) and
@@ -967,15 +1126,50 @@ impl ClusterSystem {
 
         // With an SLO, dispatch only to pairs the admission check deemed
         // able to serve in time, whatever the base policy prefers.
-        let decision = match eff_slo {
+        let Some(decision) = (match eff_slo {
             Some(slo) => self.router.route_within_slo(&req, slo),
             None => self.router.route(&req),
+        }) else {
+            // No active model-compatible pair survives (e.g. the whole
+            // fleet failed with no fault plan bookkeeping to defer on):
+            // shed deterministically instead of routing to a masked pair.
+            let reason = format!("{fail_prefix}no active compatible pair");
+            self.n_router_rejected += 1;
+            if let Some(cs) = self.class_stat_mut(req.class) {
+                cs.n_requests += 1;
+                cs.n_shed += 1;
+            }
+            if req.session_id != NO_SESSION {
+                self.router.release_session(req.session_id);
+            }
+            self.pending.push(SystemEvent::Shed {
+                id: req.id,
+                t,
+                reason: reason.clone(),
+            });
+            return Admission::Rejected { reason };
         };
         let pair = decision.pair;
         // The chosen pair may skip the resident prefix: stamp the granted
         // credit into the request it sees.
         let mut pair_req = req;
         pair_req.kv_credit = decision.kv_credit;
+        // A migrated prefix is still on the wire: commit the admission
+        // now, but deliver the request to the destination pair only once
+        // the transfer lands, so the link delay is part of the measured
+        // TTFT, not just the estimate.
+        let delay_ns = decision.transfer.map_or(0, |x| x.delay_ns);
+        if delay_ns > 0 {
+            let deliver = SimTime(t.0.saturating_add(delay_ns));
+            self.record_accept(req, &decision);
+            let ms = self
+                .migration
+                .as_mut()
+                .expect("a transfer implies a configured link");
+            let pos = ms.deliveries.partition_point(|(a, _, _)| *a <= deliver);
+            ms.deliveries.insert(pos, (deliver, pair_req, decision));
+            return Admission::Accepted;
+        }
         let admission = self.systems[pair].submit(t, pair_req);
         // The pair's timeline changed (new work scheduled, or a Shed
         // buffered on rejection): refresh its calendar key.
@@ -984,29 +1178,7 @@ impl ClusterSystem {
             Admission::Accepted => {
                 // Commit only on acceptance, so residency and hit
                 // accounting never reflect requests the pair turned away.
-                self.router.commit_route(&req, &decision);
-                if let Some(ledger) = self.ledger.as_mut() {
-                    ledger.on_admit(req.class, decision.charged_tokens);
-                }
-                if let Some(cs) = self.class_stat_mut(req.class) {
-                    cs.n_requests += 1;
-                }
-                self.assigned.insert(
-                    req.id,
-                    AssignedReq {
-                        pair,
-                        tokens: decision.charged_tokens,
-                        session_id: req.session_id,
-                        final_turn: req.final_turn,
-                        class: req.class,
-                        ctx: req.total_context() as u64,
-                        arrival: SimTime(req.arrival_ns),
-                        last_token: None,
-                        req,
-                    },
-                );
-                self.routed_counts[pair] += 1;
-                self.inflight[pair] += 1;
+                self.record_accept(req, &decision);
                 Admission::Accepted
             }
             Admission::Rejected { reason } => {
@@ -1055,12 +1227,18 @@ impl ServingSystem for ClusterSystem {
         // O(1): the first buffered event and the calendar top (always
         // live) — no per-pair scan.
         let base = earliest_instant(&self.pending, self.calendar.peek());
-        if self.faults.is_none() {
+        if self.faults.is_none() && self.migration.is_none() {
             return base;
         }
         // Fault runs: scheduled outages, repairs and failure-retries are
         // events a driver must step to even when every pair is quiet.
-        match (base, self.next_fault_instant()) {
+        // Migration runs: likewise pending KV deliveries.
+        let extra = match (self.next_fault_instant(), self.next_migration_instant())
+        {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        match (base, extra) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
         }
@@ -1131,10 +1309,14 @@ impl ServingSystem for ClusterSystem {
             report.n_pair_failures = fs.n_pair_failures;
             report.n_retries = fs.n_retries;
             report.n_recovered = fs.n_recovered;
-            fs.recovery_latency
-                .sort_unstable_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+            fs.recovery_latency.sort_unstable_by(f64::total_cmp);
             report.recovery_latency_s = std::mem::take(&mut fs.recovery_latency);
         }
+        // KV-migration accounting lives in the router (always zero
+        // without a configured link).
+        report.n_migrations = self.router.n_migrations() as usize;
+        report.migrated_tokens = self.router.migrated_tokens();
+        report.migration_time_s = self.router.migration_time_s();
         // Per-class breakdown (QoS runs): the accumulators drain into
         // the report; throughput shares the run's makespan clock.
         if let Some(reg) = &self.classes {
@@ -1183,6 +1365,10 @@ impl ServingSystem for ClusterSystem {
             for i in 0..self.cfg.n_pairs() {
                 self.router.set_pair_active(i, ctl.is_active(i));
             }
+        }
+        // No KV transfer outlives its run (drain delivered everything).
+        if let Some(ms) = self.migration.as_mut() {
+            ms.deliveries.clear();
         }
         // Rewind the fault plan for the next run.
         if let Some(fs) = self.faults.as_mut() {

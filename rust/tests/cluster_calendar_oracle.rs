@@ -143,7 +143,8 @@ impl ServingSystem for NaiveClusterSystem {
         let decision = match self.slo_ttft_s {
             Some(slo) => self.router.route_within_slo(&req, slo),
             None => self.router.route(&req),
-        };
+        }
+        .expect("oracle fleets always keep an active compatible pair");
         let pair = decision.pair;
         let mut pair_req = req;
         pair_req.kv_credit = decision.kv_credit;

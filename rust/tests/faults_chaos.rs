@@ -139,6 +139,87 @@ fn inert_plan_is_byte_identical_to_no_plan() {
 }
 
 #[test]
+fn configured_link_without_displacement_is_byte_identical_to_no_link() {
+    // The migration machinery arms itself whenever a link is configured,
+    // but with nothing displacing warm sessions (no drains, no SLO
+    // rejections, no faults) it must never fire: the armed run's event
+    // stream is byte-identical to the link-less one.
+    use cronus::simgpu::link::LinkSpec;
+    let trace = trace(40, 17, 12.0);
+    for policy in [RoutePolicy::LeastOutstandingTokens, RoutePolicy::KvAffinity] {
+        let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+        let linked_cfg = cfg.clone().with_link(LinkSpec::INFINIBAND_100G);
+        let mut plain = ClusterSystem::new(cfg, policy);
+        let mut linked = ClusterSystem::new(linked_cfg, policy);
+        let (out_p, events_p, stats_p) = replay_trace_collect(&mut plain, &trace);
+        let (out_l, events_l, stats_l) = replay_trace_collect(&mut linked, &trace);
+        assert_eq!(events_p, events_l, "an unused link changed the event stream");
+        assert_eq!(stats_p, stats_l);
+        assert_eq!(out_p.report.makespan_s, out_l.report.makespan_s);
+        assert_eq!(out_p.report.ttft_p99_s, out_l.report.ttft_p99_s);
+        assert_eq!(out_l.report.n_migrations, 0);
+        assert_eq!(out_l.report.migrated_tokens, 0);
+    }
+}
+
+#[test]
+fn failed_pair_kv_never_migrates_even_with_a_link() {
+    // A drained pair's KV is alive and ships over the link; a *failed*
+    // pair's KV died with it.  Even on a fleet with a fast link
+    // configured, an outage must produce zero migrations — the aborted
+    // sessions re-prefill from scratch through the retry path.
+    use cronus::simgpu::link::LinkSpec;
+    use cronus::systems::driver::closed_loop_collect;
+    use cronus::workload::session::{generate_sessions, SessionConfig};
+    let scfg = SessionConfig {
+        n_sessions: 8,
+        min_turns: 3,
+        max_turns: 4,
+        think_mean_s: 0.4,
+        start_window_s: 0.5,
+        seed: 11,
+        ..SessionConfig::default()
+    };
+    let sessions = generate_sessions(&scfg);
+    let fcfg = FaultConfig {
+        schedule: vec![cronus::faults::parse_schedule_entry("0@0.6+2").unwrap()],
+        ..FaultConfig::default()
+    };
+    let cfg = ClusterConfig::mixed(2, LLAMA3_8B)
+        .with_link(LinkSpec::parse("1000G").expect("spec"));
+    let mut free = ClusterSystem::new(cfg.clone(), RoutePolicy::KvAffinity);
+    let mut faulted = ClusterSystem::new(cfg, RoutePolicy::KvAffinity)
+        .with_faults(fcfg.build_plan(2).expect("plan"), fcfg.backoff());
+    let (out_free, _, _) = closed_loop_collect(&mut free, &sessions);
+    let (out_f, events_f, _) = closed_loop_collect(&mut faulted, &sessions);
+
+    assert_eq!(out_f.report.n_pair_failures, 1);
+    assert!(
+        out_f.report.n_retries >= 1,
+        "the outage aborted nothing — move the failure into the burst"
+    );
+    // Dead KV never ships, however fast the link.
+    assert_eq!(out_f.report.n_migrations, 0);
+    assert_eq!(out_f.report.migrated_tokens, 0);
+    assert_eq!(out_f.report.migration_time_s, 0.0);
+    // And the fault-free run on the same linked fleet has nothing to
+    // migrate either: no drains, no SLO.
+    assert_eq!(out_free.report.n_migrations, 0);
+    // The aborted prompts were re-prefilled from scratch.
+    assert!(
+        prefill_tokens_executed(&out_f) > prefill_tokens_executed(&out_free),
+        "retries must re-prefill aborted prompts from scratch"
+    );
+    // Conservation under the outage.
+    let r = &out_f.report;
+    assert_eq!(r.n_finished + r.n_rejected, r.n_requests);
+    assert!(
+        events_f.windows(2).all(|w| w[0].time() <= w[1].time()),
+        "event stream went backwards"
+    );
+}
+
+#[test]
 fn retried_work_reprefills_from_scratch() {
     // A transient outage mid-burst: the faulted run must re-execute the
     // prefill of every aborted request (KV died with the pair), so its

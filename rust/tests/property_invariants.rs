@@ -551,7 +551,7 @@ fn prop_router_partitions_trace_exactly() {
         let trace = stamp(&trace, process);
         let mut router = Router::new(policy, &cfg);
         let assignments: Vec<usize> =
-            trace.iter().map(|r| router.route(r).pair).collect();
+            trace.iter().map(|r| router.route(r).expect("routable").pair).collect();
         if assignments.len() != n {
             return PropResult::Fail(format!(
                 "{} assignments for {n} requests",
@@ -752,7 +752,7 @@ fn prop_qos_model_pinned_class_routes_only_to_matching_pairs() {
                     "compatible pair exists but was not found".into(),
                 );
             }
-            let pair = router.route(&r).pair;
+            let pair = router.route(&r).expect("routable").pair;
             if r.class == pinned && router.pair_model(pair).name != QWEN2_7B.name {
                 return PropResult::Fail(format!(
                     "pinned request routed to pair {pair} serving '{}'",

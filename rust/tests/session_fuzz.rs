@@ -479,6 +479,126 @@ fn fuzz_default_class_sessions_byte_identical_with_registry() {
     });
 }
 
+/// Migration interplay (cross-pair KV migration tentpole): with an
+/// inter-pair link and a twitchy controller draining pairs in every
+/// think-time lull, drained pairs hand their warm sessions to survivors
+/// over the wire.  Pins, per seed: same-seed byte-identity *including*
+/// migration deliveries; the exact prefill accounting
+/// (`executed == total − saved`) extends to migrated prefixes; the
+/// link-less run degrades to plain eviction with zero migrations; and
+/// handoff never changes how many turns complete.
+#[test]
+fn fuzz_drained_pairs_hand_sessions_over_the_link() {
+    use cronus::simgpu::link::LinkSpec;
+    use cronus::systems::AutoscaleConfig;
+    use std::cell::Cell;
+    let migrations_seen = Cell::new(0u64);
+    check("drain handoff over the link", 6, |rng| {
+        let scfg = SessionConfig {
+            n_sessions: rng.range_usize(4, 9),
+            min_turns: 2,
+            max_turns: 2 + rng.range_usize(0, 3),
+            think_mean_s: 1.2 + rng.f64(),
+            start_window_s: rng.f64() * 0.5,
+            mean_new_input: 192.0 + rng.f64() * 256.0,
+            max_new_input: 1024,
+            mean_output: 96.0 + rng.f64() * 96.0,
+            max_output: 384,
+            seed: rng.next_u64(),
+            ..SessionConfig::default()
+        };
+        let sessions = generate_sessions(&scfg);
+        let n_pairs = rng.range_usize(2, 4);
+        let total_input: u64 =
+            sessions.iter().map(|s| s.total_input_tokens() as u64).sum();
+        let autoscale = AutoscaleConfig {
+            initial_pairs: n_pairs,
+            window_s: 0.25,
+            cooldown_s: 0.25,
+            scale_up_backlog: 2048.0,
+            scale_down_backlog: 512.0,
+            ..AutoscaleConfig::default()
+        };
+        let go = |linked: bool| {
+            let mut cfg = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+            if linked {
+                cfg = cfg.with_link(LinkSpec::parse("400G").expect("spec"));
+            }
+            let mut sys = ClusterSystem::new(cfg, RoutePolicy::KvAffinity)
+                .with_autoscale(autoscale.clone());
+            closed_loop_collect(&mut sys, &sessions)
+        };
+        let (mig_out, mig_events, mig_stats) = go(true);
+        let (rep_out, rep_events, _) = go(true);
+        if mig_events != rep_events {
+            return PropResult::Fail(
+                "same-seed migration run diverged (deliveries included)".into(),
+            );
+        }
+        if mig_out.report.n_migrations != rep_out.report.n_migrations
+            || mig_out.report.migrated_tokens != rep_out.report.migrated_tokens
+        {
+            return PropResult::Fail("migration counters diverged".into());
+        }
+        migrations_seen
+            .set(migrations_seen.get() + mig_out.report.n_migrations as u64);
+        let (ev_out, ev_events, ev_stats) = go(false);
+
+        let inv =
+            verify_invariants(&sessions, &mig_out, &mig_events, &mig_stats, "migrate")
+                .and(|| {
+                    verify_invariants(&sessions, &ev_out, &ev_events, &ev_stats, "evict")
+                });
+        if !matches!(inv, PropResult::Ok) {
+            return inv;
+        }
+        let preemptions = |out: &RunOutcome| -> u64 {
+            out.instances.iter().map(|i| i.n_preemptions).sum()
+        };
+        if preemptions(&mig_out) + preemptions(&ev_out) > 0 {
+            return PropResult::Discard;
+        }
+
+        PropResult::assert_eq("no link, no migration", ev_out.report.n_migrations, 0)
+            .and(|| {
+                PropResult::assert_eq(
+                    "no link, no migrated tokens",
+                    ev_out.report.migrated_tokens as usize,
+                    0,
+                )
+            })
+            .and(|| {
+                // Exact accounting: migrated prefixes are *saved* at the
+                // destination, neither recomputed nor double-counted.
+                PropResult::assert_eq(
+                    "migrated run skips exactly its saved tokens",
+                    prefill_tokens_executed(&mig_out),
+                    total_input - mig_out.report.prefill_tokens_saved,
+                )
+            })
+            .and(|| {
+                PropResult::assert_eq(
+                    "evict run skips exactly its saved tokens",
+                    prefill_tokens_executed(&ev_out),
+                    total_input - ev_out.report.prefill_tokens_saved,
+                )
+            })
+            .and(|| {
+                // Without an SLO nothing sheds: handing sessions over
+                // never changes how many turns complete.
+                PropResult::assert_eq(
+                    "handoff never loses turns",
+                    mig_stats.n_finished_turns,
+                    ev_stats.n_finished_turns,
+                )
+            })
+    });
+    assert!(
+        migrations_seen.get() > 0,
+        "no seed ever migrated a session — the drain handoff never fired"
+    );
+}
+
 /// "Affinity never violates `--slo-ttft-ms`" is enforced at the
 /// *admission* boundary: the resident pair is used only while its
 /// prefix-credit-aware TTFT estimate meets the SLO (pinned by the
