@@ -1,0 +1,35 @@
+//! # Robustness harness: capsules, oracle, shrinking
+//!
+//! Three pieces that together turn "a fuzz seed failed somewhere" into
+//! "here is a three-request TOML file that still fails":
+//!
+//! * [`scenario`] — **scenario capsules**.  A [`Scenario`] fully
+//!   determines a run (topology, link fabric, workload + arrival
+//!   process, routing policy, SLO, autoscaling, fault plan, QoS
+//!   classes, seeds) and round-trips byte-for-byte through a single
+//!   TOML file, so any failure is a portable artifact: check it into
+//!   `cases/`, attach it to a bug report, replay it with
+//!   `cronus repro <case.toml>`.
+//! * [`oracle`] — the **online invariant oracle**.  [`InvariantChecker`]
+//!   consumes the [`SystemEvent`](crate::systems::SystemEvent) stream
+//!   incrementally (O(1) per event) and checks the conservation laws
+//!   the test suites used to each re-implement: every submitted request
+//!   ends `Finished` xor `Shed` exactly once, token events match
+//!   `output_len`, event times are monotone, per-class counts conserve,
+//!   and the report's counters agree with the events.
+//! * [`shrink`] — **minimal-counterexample reduction**.
+//!   [`shrink`](shrink::shrink) delta-debugs a failing scenario (halve
+//!   the workload, ddmin requests and fault events, collapse the fleet,
+//!   drop optional subsystems) while re-verifying the property at every
+//!   step; [`check_scenarios`] wraps the fuzz loop so a failing suite
+//!   panics with the path to a shrunk `repro_*.toml` instead of a seed.
+
+pub mod oracle;
+pub mod scenario;
+pub mod shrink;
+
+pub use oracle::{CheckSummary, InvariantChecker, Violation, ViolationKind};
+pub use scenario::{InjectSpec, Scenario, WorkloadSpec};
+pub use shrink::{
+    check_scenarios, repro_dir, run_scenario, shrink_to_file, ScenarioRun, ShrinkOutcome,
+};

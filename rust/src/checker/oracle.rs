@@ -1,0 +1,534 @@
+//! The online invariant oracle: one incremental checker for the
+//! conservation, monotonicity, and token-accounting laws the fuzz and
+//! property suites used to each re-implement.
+//!
+//! [`InvariantChecker`] consumes the [`SystemEvent`] stream *as it is
+//! produced* — O(1) work and O(#requests) state per event, no buffering
+//! of the stream — so it rides along on production-scale runs
+//! (`bench-cluster --check`, `replay_trace_observed`) as easily as on a
+//! collected test vector.  Feed it expectations
+//! ([`expect_trace`](InvariantChecker::expect_trace) /
+//! [`expect_sessions`](InvariantChecker::expect_sessions)), stream
+//! events through [`on_event`](InvariantChecker::on_event), optionally
+//! cross-check the final [`Report`] with
+//! [`check_report`](InvariantChecker::check_report), and call
+//! [`finish`](InvariantChecker::finish) for the verdict.
+//!
+//! The invariants, and the suite that previously owned each (see
+//! ARCHITECTURE.md §Robustness harness for the full table):
+//!
+//! * every expected request ends `Finished` xor `Shed` **exactly once**
+//!   (`session_fuzz`, `faults_chaos`) — [`ViolationKind::DoubleTerminal`]
+//!   / [`ViolationKind::LostRequest`];
+//! * a finished request emits exactly `output_len` token events
+//!   (`FirstToken` counts as the first token) in fault-free runs, and at
+//!   least `output_len` when a fault plan may abort and re-serve partial
+//!   decodes (`property_invariants`, `faults_chaos`) —
+//!   [`ViolationKind::TokenCountMismatch`];
+//! * the event stream is monotone in simulation time
+//!   (`property_invariants`) — [`ViolationKind::TimeRegression`];
+//! * report counters agree with the events that justify them
+//!   (`faults_chaos`, `tests/autoscale.rs`) —
+//!   [`ViolationKind::CounterMismatch`] /
+//!   [`ViolationKind::PhantomMigration`];
+//! * per-class breakdowns conserve requests (`qos` suites) —
+//!   [`ViolationKind::ClassConservation`].
+//!
+//! Driver-synthetic sheds (reason prefixed
+//! [`SYNTHETIC_SHED_PREFIX`] — turns dropped at the retry cap, which the
+//! *system* never saw) are terminals for conservation but are exempt
+//! from the monotonicity clock and from per-class sums, mirroring how
+//! the drivers fold them into the report after `drain()`.
+
+use std::fmt;
+
+use crate::metrics::Report;
+use crate::simclock::SimTime;
+use crate::systems::SystemEvent;
+use crate::util::fxhash::FxHashMap;
+use crate::workload::session::{turn_request_id, Session};
+use crate::workload::Request;
+
+/// Reason prefix of the sheds the drivers synthesize for requests
+/// dropped at the retry cap ("dropped by the replay driver…" /
+/// "dropped by the closed-loop driver…").
+pub const SYNTHETIC_SHED_PREFIX: &str = "dropped by the";
+
+/// Violations recorded verbatim before the checker starts counting
+/// instead of storing (a corrupt run can violate once per event).
+const MAX_VIOLATIONS: usize = 64;
+
+/// The invariant class a [`Violation`] belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ViolationKind {
+    /// An event carried an earlier timestamp than its predecessor.
+    TimeRegression,
+    /// A request reached a second terminal (`Finished`/`Shed`) event.
+    DoubleTerminal,
+    /// An expected request produced tokens or was required, but never
+    /// reached a terminal event.
+    LostRequest,
+    /// A finished request's token-event count disagrees with its
+    /// `output_len` (or a shed request emitted tokens in a fault-free
+    /// run).
+    TokenCountMismatch,
+    /// A request-bearing event for an id no expectation covers.
+    PhantomEvent,
+    /// Migration counters without a configured link / migrated tokens,
+    /// or migrated tokens without a migration.
+    PhantomMigration,
+    /// A report counter disagrees with the events that justify it.
+    CounterMismatch,
+    /// A per-class breakdown fails conservation, or the class sums
+    /// disagree with the cluster totals.
+    ClassConservation,
+}
+
+impl ViolationKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ViolationKind::TimeRegression => "time-regression",
+            ViolationKind::DoubleTerminal => "double-terminal",
+            ViolationKind::LostRequest => "lost-request",
+            ViolationKind::TokenCountMismatch => "token-count-mismatch",
+            ViolationKind::PhantomEvent => "phantom-event",
+            ViolationKind::PhantomMigration => "phantom-migration",
+            ViolationKind::CounterMismatch => "counter-mismatch",
+            ViolationKind::ClassConservation => "class-conservation",
+        }
+    }
+}
+
+/// One recorded invariant violation.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.kind.name(), self.detail)
+    }
+}
+
+/// What the workload promises about one request id.
+struct Expect {
+    want_tokens: usize,
+    /// `true` = the request is definitely submitted (open-loop trace);
+    /// `false` = it may legitimately never appear (a closed-loop turn
+    /// after an aborted session).
+    required: bool,
+}
+
+/// What the event stream has shown about one request id.
+#[derive(Default)]
+struct Progress {
+    tokens: usize,
+    n_finished: u32,
+    n_shed: u32,
+}
+
+/// The verdict of one checked run.
+#[derive(Debug, Default)]
+pub struct CheckSummary {
+    pub violations: Vec<Violation>,
+    /// Events consumed by the checker.
+    pub n_events: u64,
+    /// Violations beyond [the storage cap](`MAX_VIOLATIONS`), counted
+    /// but not recorded.
+    pub n_suppressed: usize,
+}
+
+impl CheckSummary {
+    /// No violations at all.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty() && self.n_suppressed == 0
+    }
+
+    /// Whether any recorded violation is of `kind`.
+    pub fn has(&self, kind: ViolationKind) -> bool {
+        self.violations.iter().any(|v| v.kind == kind)
+    }
+
+    /// Human-readable multi-line rendering of the verdict.
+    pub fn render(&self) -> String {
+        if self.ok() {
+            return format!("ok: {} events, no invariant violations", self.n_events);
+        }
+        let mut out = format!(
+            "{} invariant violation(s) over {} events",
+            self.violations.len() + self.n_suppressed,
+            self.n_events
+        );
+        for v in &self.violations {
+            out.push_str(&format!("\n  {v}"));
+        }
+        if self.n_suppressed > 0 {
+            out.push_str(&format!("\n  … and {} more (suppressed)", self.n_suppressed));
+        }
+        out
+    }
+}
+
+/// Incremental invariant checker over one run's event stream.  See the
+/// module docs for the laws it enforces.
+pub struct InvariantChecker {
+    expected: FxHashMap<u64, Expect>,
+    seen: FxHashMap<u64, Progress>,
+    /// Fault-free runs owe *exact* token conservation; with an active
+    /// fault plan an aborted decode is re-served from scratch, so a
+    /// finished request may emit more than `output_len` tokens and a
+    /// shed one may have partial output.
+    exact_tokens: bool,
+    faults_planned: bool,
+    link_configured: bool,
+    has_expectations: bool,
+    last_t: Option<SimTime>,
+    n_events: u64,
+    n_finished_ev: usize,
+    n_shed_ev: usize,
+    n_synthetic_shed_ev: usize,
+    n_scale_up_ev: usize,
+    n_scale_down_ev: usize,
+    n_pair_failed_ev: usize,
+    n_pair_recovered_ev: usize,
+    violations: Vec<Violation>,
+    n_suppressed: usize,
+}
+
+impl Default for InvariantChecker {
+    fn default() -> Self {
+        InvariantChecker::new()
+    }
+}
+
+impl InvariantChecker {
+    pub fn new() -> InvariantChecker {
+        InvariantChecker {
+            expected: FxHashMap::default(),
+            seen: FxHashMap::default(),
+            exact_tokens: true,
+            faults_planned: false,
+            link_configured: false,
+            has_expectations: false,
+            last_t: None,
+            n_events: 0,
+            n_finished_ev: 0,
+            n_shed_ev: 0,
+            n_synthetic_shed_ev: 0,
+            n_scale_up_ev: 0,
+            n_scale_down_ev: 0,
+            n_pair_failed_ev: 0,
+            n_pair_recovered_ev: 0,
+            violations: Vec::new(),
+            n_suppressed: 0,
+        }
+    }
+
+    /// Declare whether a fault plan is active: switches token accounting
+    /// from exact to at-least and legalizes `PairFailed` / retry
+    /// counters.
+    pub fn with_faults(mut self, active: bool) -> InvariantChecker {
+        self.faults_planned = active;
+        if active {
+            self.exact_tokens = false;
+        }
+        self
+    }
+
+    /// Declare whether an inter-pair link is configured (gates the
+    /// migration-counter laws).
+    pub fn with_link(mut self, configured: bool) -> InvariantChecker {
+        self.link_configured = configured;
+        self
+    }
+
+    /// Expect every request of an open-loop trace: each must terminate
+    /// exactly once.
+    pub fn expect_trace(&mut self, trace: &[Request]) {
+        for r in trace {
+            self.expected.insert(
+                r.id,
+                Expect { want_tokens: r.output_len, required: true },
+            );
+        }
+        self.has_expectations = true;
+    }
+
+    /// Expect the potential turns of a closed-loop session workload.
+    /// Turns are *optional* (an aborted session never submits its later
+    /// turns), but any turn that does appear is held to the same
+    /// terminal and token laws.
+    pub fn expect_sessions(&mut self, sessions: &[Session]) {
+        for s in sessions {
+            for (k, turn) in s.turns.iter().enumerate() {
+                self.expected.insert(
+                    turn_request_id(s.id, k),
+                    Expect { want_tokens: turn.output_len, required: false },
+                );
+            }
+        }
+        self.has_expectations = true;
+    }
+
+    fn push(&mut self, kind: ViolationKind, detail: String) {
+        if self.violations.len() < MAX_VIOLATIONS {
+            self.violations.push(Violation { kind, detail });
+        } else {
+            self.n_suppressed += 1;
+        }
+    }
+
+    /// Known to neither the expectations nor any earlier event.
+    fn flag_phantom(&mut self, id: u64, what: &str) {
+        if self.has_expectations
+            && !self.expected.contains_key(&id)
+            && !self.seen.contains_key(&id)
+        {
+            self.push(
+                ViolationKind::PhantomEvent,
+                format!("{what} for unexpected request id {id}"),
+            );
+        }
+    }
+
+    /// Consume one event.  O(1): a hash-map update and a few counters.
+    pub fn on_event(&mut self, ev: &SystemEvent) {
+        self.n_events += 1;
+        let synthetic = matches!(
+            ev,
+            SystemEvent::Shed { reason, .. } if reason.starts_with(SYNTHETIC_SHED_PREFIX)
+        );
+        // Monotone simulation time.  Synthetic driver sheds are recorded
+        // at their drop instant and merged by a stable sort, so they sit
+        // outside the system's clock — skip them entirely.
+        if !synthetic {
+            let t = ev.time();
+            if let Some(last) = self.last_t {
+                if t < last {
+                    self.push(
+                        ViolationKind::TimeRegression,
+                        format!(
+                            "event at {:.6}s after one at {:.6}s ({ev:?})",
+                            t.as_secs_f64(),
+                            last.as_secs_f64()
+                        ),
+                    );
+                }
+            }
+            self.last_t = Some(self.last_t.map_or(t, |l| l.max(t)));
+        }
+        match ev {
+            SystemEvent::FirstToken { id, .. } | SystemEvent::Token { id, .. } => {
+                self.flag_phantom(*id, "token event");
+                self.seen.entry(*id).or_default().tokens += 1;
+            }
+            SystemEvent::Finished { id, .. } => {
+                self.flag_phantom(*id, "Finished");
+                self.n_finished_ev += 1;
+                let p = self.seen.entry(*id).or_default();
+                p.n_finished += 1;
+                let terminals = p.n_finished + p.n_shed;
+                if terminals == 2 {
+                    self.push(
+                        ViolationKind::DoubleTerminal,
+                        format!("request {id} reached a second terminal (Finished)"),
+                    );
+                }
+            }
+            SystemEvent::Shed { id, .. } => {
+                self.flag_phantom(*id, "Shed");
+                self.n_shed_ev += 1;
+                if synthetic {
+                    self.n_synthetic_shed_ev += 1;
+                }
+                let p = self.seen.entry(*id).or_default();
+                p.n_shed += 1;
+                let terminals = p.n_finished + p.n_shed;
+                if terminals == 2 {
+                    self.push(
+                        ViolationKind::DoubleTerminal,
+                        format!("request {id} reached a second terminal (Shed)"),
+                    );
+                }
+            }
+            SystemEvent::ScaleUp { .. } => self.n_scale_up_ev += 1,
+            SystemEvent::ScaleDown { .. } => self.n_scale_down_ev += 1,
+            SystemEvent::PairFailed { pair, .. } => {
+                self.n_pair_failed_ev += 1;
+                if !self.faults_planned {
+                    self.push(
+                        ViolationKind::PhantomEvent,
+                        format!("PairFailed({pair}) without a fault plan"),
+                    );
+                }
+            }
+            SystemEvent::PairRecovered { .. } => self.n_pair_recovered_ev += 1,
+        }
+    }
+
+    /// Cross-check the final [`Report`] against the events witnessed:
+    /// every counter the report exposes must be justified by the stream.
+    pub fn check_report(&mut self, report: &Report) {
+        let pairs: [(&str, usize, usize); 6] = [
+            ("n_finished", report.n_finished, self.n_finished_ev),
+            ("n_rejected", report.n_rejected, self.n_shed_ev),
+            ("n_scale_ups", report.n_scale_ups, self.n_scale_up_ev),
+            ("n_scale_downs", report.n_scale_downs, self.n_scale_down_ev),
+            ("n_pair_failures", report.n_pair_failures, self.n_pair_failed_ev),
+            ("n_recovered", report.n_recovered, self.n_pair_recovered_ev),
+        ];
+        for (name, reported, witnessed) in pairs {
+            if reported != witnessed {
+                self.push(
+                    ViolationKind::CounterMismatch,
+                    format!(
+                        "report.{name} = {reported} but the stream shows {witnessed}"
+                    ),
+                );
+            }
+        }
+        if report.n_requests != report.n_finished + report.n_rejected {
+            self.push(
+                ViolationKind::CounterMismatch,
+                format!(
+                    "n_requests {} != n_finished {} + n_rejected {}",
+                    report.n_requests, report.n_finished, report.n_rejected
+                ),
+            );
+        }
+        if !self.faults_planned && report.n_retries > 0 {
+            self.push(
+                ViolationKind::CounterMismatch,
+                format!("{} failure retries without a fault plan", report.n_retries),
+            );
+        }
+        if report.n_retries > 0 && self.n_pair_failed_ev == 0 {
+            self.push(
+                ViolationKind::CounterMismatch,
+                format!(
+                    "{} failure retries but no PairFailed event",
+                    report.n_retries
+                ),
+            );
+        }
+        let phantom_migration = (report.n_migrations > 0
+            && (report.migrated_tokens == 0 || !self.link_configured))
+            || (report.n_migrations == 0 && report.migrated_tokens > 0);
+        if phantom_migration {
+            self.push(
+                ViolationKind::PhantomMigration,
+                format!(
+                    "n_migrations = {} / migrated_tokens = {} with link_configured = {}",
+                    report.n_migrations, report.migrated_tokens, self.link_configured
+                ),
+            );
+        }
+        if !report.classes.is_empty() {
+            let (mut sr, mut sf, mut ss) = (0usize, 0usize, 0usize);
+            for c in &report.classes {
+                if c.n_requests != c.n_finished + c.n_shed {
+                    self.push(
+                        ViolationKind::ClassConservation,
+                        format!(
+                            "class '{}': n_requests {} != n_finished {} + n_shed {}",
+                            c.name, c.n_requests, c.n_finished, c.n_shed
+                        ),
+                    );
+                }
+                sr += c.n_requests;
+                sf += c.n_finished;
+                ss += c.n_shed;
+            }
+            // Driver-synthetic drops are folded into the cluster totals
+            // after drain(), so the class sums trail them by exactly the
+            // synthetic shed count.
+            let syn = self.n_synthetic_shed_ev;
+            if sr + syn != report.n_requests
+                || sf != report.n_finished
+                || ss + syn != report.n_rejected
+            {
+                self.push(
+                    ViolationKind::ClassConservation,
+                    format!(
+                        "class sums (req {sr}, fin {sf}, shed {ss}) + {syn} synthetic \
+                         != totals (req {}, fin {}, rej {})",
+                        report.n_requests, report.n_finished, report.n_rejected
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Close the stream: apply the end-of-run laws (lost requests, token
+    /// conservation) and return the verdict.  Iterates expected ids in
+    /// sorted order so the violation list is deterministic.
+    pub fn finish(mut self) -> CheckSummary {
+        let mut ids: Vec<u64> = self.expected.keys().copied().collect();
+        ids.sort_unstable();
+        let mut pending: Vec<Violation> = Vec::new();
+        let mut suppressed = 0usize;
+        let mut push = |kind: ViolationKind, detail: String| {
+            if self.violations.len() + pending.len() < MAX_VIOLATIONS {
+                pending.push(Violation { kind, detail });
+            } else {
+                suppressed += 1;
+            }
+        };
+        for id in ids {
+            let exp = &self.expected[&id];
+            let (tokens, terminals, finished) = match self.seen.get(&id) {
+                Some(p) => (p.tokens, p.n_finished + p.n_shed, p.n_finished > 0),
+                None => (0, 0, false),
+            };
+            if terminals == 0 {
+                if exp.required || tokens > 0 {
+                    push(
+                        ViolationKind::LostRequest,
+                        format!(
+                            "request {id} never reached a terminal event \
+                             ({tokens} tokens seen)"
+                        ),
+                    );
+                }
+                continue;
+            }
+            if terminals > 1 {
+                continue; // already flagged online
+            }
+            if finished {
+                let bad = if self.exact_tokens {
+                    tokens != exp.want_tokens
+                } else {
+                    tokens < exp.want_tokens
+                };
+                if bad {
+                    push(
+                        ViolationKind::TokenCountMismatch,
+                        format!(
+                            "request {id} finished with {tokens} token events, \
+                             expected {}{}",
+                            if self.exact_tokens { "" } else { ">= " },
+                            exp.want_tokens
+                        ),
+                    );
+                }
+            } else if self.exact_tokens && tokens > 0 {
+                push(
+                    ViolationKind::TokenCountMismatch,
+                    format!(
+                        "request {id} was shed but emitted {tokens} token events \
+                         in a fault-free run"
+                    ),
+                );
+            }
+        }
+        self.violations.extend(pending);
+        CheckSummary {
+            violations: self.violations,
+            n_events: self.n_events,
+            n_suppressed: self.n_suppressed + suppressed,
+        }
+    }
+}

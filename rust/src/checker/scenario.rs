@@ -1,0 +1,789 @@
+//! Scenario capsules: one TOML file that fully determines a run.
+//!
+//! A [`Scenario`] bundles everything that shapes a simulation — the
+//! cluster topology and link fabric, the workload (open-loop trace,
+//! explicit request list, or closed-loop sessions), the arrival
+//! process, routing policy, SLO, autoscaling, fault plan, QoS classes,
+//! and every seed — so a fuzz case, chaos case, or bench config becomes
+//! a single portable artifact.  [`Scenario::to_toml`] /
+//! [`Scenario::from_toml`] round-trip byte-for-byte (the `[topology]`
+//! contract, extended to the whole run), and `cronus repro <case.toml>`
+//! replays a capsule under the invariant oracle.
+//!
+//! [`InjectSpec`] is the corruption knob behind the harness's own
+//! tests: it deterministically damages a finished run's event stream or
+//! report *before* the oracle sees them, turning a healthy scenario
+//! into a reproducible known-failing one — the seed material for shrink
+//! smoke tests and CI.
+
+use crate::config::toml::{self, TomlDoc, TomlValue};
+use crate::config::topology::ClusterConfig;
+use crate::cronus::router::RoutePolicy;
+use crate::faults::FaultConfig;
+use crate::metrics::Report;
+use crate::qos::{ClassId, ClassRegistry};
+use crate::simclock::SimTime;
+use crate::simgpu::model_desc::LLAMA3_8B;
+use crate::systems::cluster::ClusterSystem;
+use crate::systems::{AutoscaleConfig, SystemEvent};
+use crate::workload::arrival::{stamp, ArrivalProcess};
+use crate::workload::azure::{generate, AzureTraceConfig};
+use crate::workload::session::{generate_sessions, Session, SessionConfig};
+use crate::workload::Request;
+
+/// The workload half of a scenario.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    /// `n_requests` Azure-shaped requests (seeded by `trace_seed`),
+    /// stamped with `arrival` and replayed open-loop.
+    OpenLoop {
+        n_requests: usize,
+        trace_seed: u64,
+        arrival: ArrivalProcess,
+    },
+    /// A literal request list — what shrinking reduces an open-loop
+    /// workload to, so a minimal capsule carries its exact requests.
+    Explicit { requests: Vec<Request> },
+    /// Closed-loop multi-turn sessions.
+    Sessions { sessions: SessionConfig },
+}
+
+/// One fully-determined run: parse with [`Scenario::from_toml`], replay
+/// with [`crate::checker::shrink::run_scenario`].
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    /// Reserved for run-level seeding; the workload and fault generators
+    /// carry their own seeds so a capsule is self-contained.
+    pub seed: u64,
+    pub policy: RoutePolicy,
+    pub slo_ttft_s: Option<f64>,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadSpec,
+    pub autoscale: Option<AutoscaleConfig>,
+    pub faults: Option<FaultConfig>,
+    pub classes: Option<ClassRegistry>,
+    /// Post-run corruption applied before the oracle (harness
+    /// self-tests only).
+    pub inject: Option<InjectSpec>,
+}
+
+impl Scenario {
+    /// A minimal healthy scenario: one pair, a small all-at-once trace.
+    pub fn minimal(name: &str) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            seed: 42,
+            policy: RoutePolicy::RoundRobin,
+            slo_ttft_s: None,
+            cluster: ClusterConfig::mixed(1, LLAMA3_8B),
+            workload: WorkloadSpec::OpenLoop {
+                n_requests: 16,
+                trace_seed: 1,
+                arrival: ArrivalProcess::AllAtOnce,
+            },
+            autoscale: None,
+            faults: None,
+            classes: None,
+            inject: None,
+        }
+    }
+
+    /// Whether the fault plan would actually inject outages (an empty
+    /// `[faults]` section only tunes retry backoff — token accounting
+    /// stays exact).
+    pub fn faults_active(&self) -> bool {
+        self.faults
+            .as_ref()
+            .map(|f| f.n_failures > 0 || !f.schedule.is_empty())
+            .unwrap_or(false)
+    }
+
+    /// Whether any inter-pair link is configured (cluster-wide or
+    /// per-pair override) — gates the oracle's migration laws.
+    pub fn link_configured(&self) -> bool {
+        self.cluster.link.is_some()
+            || self.cluster.pairs.iter().any(|p| p.link.is_some())
+    }
+
+    pub fn is_closed_loop(&self) -> bool {
+        matches!(self.workload, WorkloadSpec::Sessions { .. })
+    }
+
+    /// Materialize the open-loop request trace (class-stamped
+    /// round-robin across the registry when QoS classes are attached).
+    /// Errors for closed-loop scenarios — drive those through
+    /// [`Scenario::sessions`].
+    pub fn trace(&self) -> Result<Vec<Request>, String> {
+        let mut trace = match &self.workload {
+            WorkloadSpec::OpenLoop { n_requests, trace_seed, arrival } => {
+                arrival.validate().map_err(|e| e.to_string())?;
+                stamp(
+                    &generate(*n_requests, &AzureTraceConfig::default(), *trace_seed),
+                    *arrival,
+                )
+            }
+            WorkloadSpec::Explicit { requests } => requests.clone(),
+            WorkloadSpec::Sessions { .. } => {
+                return Err("closed-loop scenario has no open-loop trace".into())
+            }
+        };
+        if let Some(reg) = &self.classes {
+            let n = reg.len();
+            for (i, r) in trace.iter_mut().enumerate() {
+                *r = r.with_class(ClassId((i % n) as u16));
+            }
+        }
+        Ok(trace)
+    }
+
+    /// Materialize the session workload (`None` for open-loop
+    /// scenarios).
+    pub fn sessions(&self) -> Option<Vec<Session>> {
+        match &self.workload {
+            WorkloadSpec::Sessions { sessions } => Some(generate_sessions(sessions)),
+            _ => None,
+        }
+    }
+
+    /// Build the serving system this scenario describes.
+    pub fn build_system(&self) -> Result<ClusterSystem, String> {
+        let mut sys = ClusterSystem::new(self.cluster.clone(), self.policy)
+            .with_slo_ttft(self.slo_ttft_s);
+        if let Some(a) = &self.autoscale {
+            sys = sys.with_autoscale(a.clone());
+        }
+        if let Some(f) = &self.faults {
+            sys = sys.with_faults(f.build_plan(self.cluster.n_pairs())?, f.backoff());
+        }
+        if let Some(c) = &self.classes {
+            sys = sys.with_classes(c.clone());
+        }
+        Ok(sys)
+    }
+
+    /// Structural validation beyond what parsing enforces.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cluster.n_pairs() == 0 {
+            return Err("scenario needs at least one pair".into());
+        }
+        match &self.workload {
+            WorkloadSpec::OpenLoop { arrival, .. } => {
+                arrival.validate().map_err(|e| e.to_string())?;
+            }
+            WorkloadSpec::Explicit { requests } => {
+                let mut ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                if ids.len() != requests.len() {
+                    return Err("explicit requests must have unique ids".into());
+                }
+                for r in requests {
+                    if r.input_len == 0 || r.output_len == 0 {
+                        return Err(format!(
+                            "request {} needs input_len and output_len >= 1",
+                            r.id
+                        ));
+                    }
+                }
+            }
+            WorkloadSpec::Sessions { sessions } => {
+                if sessions.n_sessions == 0 {
+                    return Err("session workload needs n_sessions >= 1".into());
+                }
+                if sessions.min_turns == 0 || sessions.min_turns > sessions.max_turns {
+                    return Err("session turns need 1 <= min_turns <= max_turns".into());
+                }
+            }
+        }
+        if let Some(f) = &self.faults {
+            for e in &f.schedule {
+                if e.pair >= self.cluster.n_pairs() {
+                    return Err(format!(
+                        "fault on pair {} but the scenario has {} pairs",
+                        e.pair,
+                        self.cluster.n_pairs()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize the capsule.  Canonical: every parsed key is emitted,
+    /// so `emit(parse(emit(s))) == emit(s)` byte-for-byte.
+    pub fn to_toml(&self) -> String {
+        let mut sections: Vec<String> = Vec::new();
+        let mut head = String::from("[scenario]\n");
+        head.push_str(&format!("name = \"{}\"\n", self.name));
+        head.push_str(&format!("seed = {}\n", self.seed));
+        head.push_str(&format!("policy = \"{}\"\n", self.policy.name()));
+        if let Some(s) = self.slo_ttft_s {
+            head.push_str(&format!("slo_ttft_s = {s}\n"));
+        }
+        if let Some(inj) = self.inject {
+            head.push_str(&format!("inject = \"{}\"\n", inj.name()));
+        }
+        sections.push(head);
+
+        let mut work = String::from("[workload]\n");
+        match &self.workload {
+            WorkloadSpec::OpenLoop { n_requests, trace_seed, arrival } => {
+                work.push_str("kind = \"open-loop\"\n");
+                work.push_str(&format!("n_requests = {n_requests}\n"));
+                work.push_str(&format!("trace_seed = {trace_seed}\n"));
+                match *arrival {
+                    ArrivalProcess::AllAtOnce => {
+                        work.push_str("arrival = \"all-at-once\"\n");
+                    }
+                    ArrivalProcess::FixedInterval { interval_s } => {
+                        work.push_str("arrival = \"fixed\"\n");
+                        work.push_str(&format!("interval_s = {interval_s}\n"));
+                    }
+                    ArrivalProcess::Poisson { rate_rps, seed } => {
+                        work.push_str("arrival = \"poisson\"\n");
+                        work.push_str(&format!("rate_rps = {rate_rps}\n"));
+                        work.push_str(&format!("arrival_seed = {seed}\n"));
+                    }
+                    ArrivalProcess::Diurnal { period_s, peak_rps, trough_rps, seed } => {
+                        work.push_str("arrival = \"diurnal\"\n");
+                        work.push_str(&format!("period_s = {period_s}\n"));
+                        work.push_str(&format!("peak_rps = {peak_rps}\n"));
+                        work.push_str(&format!("trough_rps = {trough_rps}\n"));
+                        work.push_str(&format!("arrival_seed = {seed}\n"));
+                    }
+                    ArrivalProcess::Bursty { base_rps, burst_rps, burst_len_s, seed } => {
+                        work.push_str("arrival = \"bursty\"\n");
+                        work.push_str(&format!("base_rps = {base_rps}\n"));
+                        work.push_str(&format!("burst_rps = {burst_rps}\n"));
+                        work.push_str(&format!("burst_len_s = {burst_len_s}\n"));
+                        work.push_str(&format!("arrival_seed = {seed}\n"));
+                    }
+                }
+            }
+            WorkloadSpec::Explicit { requests } => {
+                work.push_str("kind = \"explicit\"\n");
+                let specs: Vec<String> = requests
+                    .iter()
+                    .map(|r| format!("\"{}\"", request_spec(r)))
+                    .collect();
+                work.push_str(&format!("requests = [{}]\n", specs.join(", ")));
+            }
+            WorkloadSpec::Sessions { .. } => {
+                work.push_str("kind = \"sessions\"\n");
+            }
+        }
+        sections.push(work);
+
+        if let WorkloadSpec::Sessions { sessions } = &self.workload {
+            sections.push(sessions_to_toml(sessions));
+        }
+
+        sections.push(self.cluster.to_toml());
+        if let Some(a) = &self.autoscale {
+            sections.push(a.to_toml());
+        }
+        if let Some(f) = &self.faults {
+            sections.push(f.to_toml());
+        }
+        if let Some(c) = &self.classes {
+            let t = c.to_toml();
+            if !t.is_empty() {
+                sections.push(t);
+            }
+        }
+        sections.join("\n")
+    }
+
+    /// Parse a capsule.  Optional sections absent from the file stay
+    /// `None`; the result is [`validate`](Scenario::validate)d.
+    pub fn from_toml(text: &str) -> Result<Scenario, String> {
+        let doc = toml::parse(text).map_err(|e| e.to_string())?;
+        let name = doc.get_str("scenario.name").unwrap_or("scenario").to_string();
+        let seed = doc.get_i64("scenario.seed").unwrap_or(42) as u64;
+        let policy_name = doc.get_str("scenario.policy").unwrap_or("round-robin");
+        let policy = RoutePolicy::from_name(policy_name)
+            .ok_or_else(|| format!("unknown routing policy '{policy_name}'"))?;
+        let slo_ttft_s = match doc.get_f64("scenario.slo_ttft_s") {
+            Some(s) if s.is_finite() && s > 0.0 => Some(s),
+            Some(s) => return Err(format!("scenario.slo_ttft_s must be > 0, got {s}")),
+            None => None,
+        };
+        let inject = match doc.get_str("scenario.inject") {
+            Some(n) => Some(
+                InjectSpec::from_name(n)
+                    .ok_or_else(|| format!("unknown inject spec '{n}'"))?,
+            ),
+            None => None,
+        };
+
+        let workload = parse_workload(&doc, seed)?;
+
+        let mut cluster = ClusterConfig::mixed(1, LLAMA3_8B);
+        cluster.apply_toml(&doc)?;
+
+        let autoscale = if doc.section_keys("autoscale.").is_empty() {
+            None
+        } else {
+            let mut a = AutoscaleConfig::default();
+            a.apply_toml(&doc);
+            Some(a)
+        };
+        let faults = if doc.section_keys("faults.").is_empty() {
+            None
+        } else {
+            let mut f = FaultConfig::default();
+            f.apply_toml(&doc)?;
+            Some(f)
+        };
+        let classes = if doc.section_keys("classes.").is_empty() {
+            None
+        } else {
+            let mut c = ClassRegistry::new();
+            c.apply_toml(&doc)?;
+            Some(c)
+        };
+
+        let s = Scenario {
+            name,
+            seed,
+            policy,
+            slo_ttft_s,
+            cluster,
+            workload,
+            autoscale,
+            faults,
+            classes,
+            inject,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+/// Render one explicit request: `<id>@<arrival_ns>:<input>/<output>`.
+fn request_spec(r: &Request) -> String {
+    format!("{}@{}:{}/{}", r.id, r.arrival_ns, r.input_len, r.output_len)
+}
+
+/// Parse one explicit request spec (inverse of [`request_spec`]).
+pub fn parse_request_spec(text: &str) -> Result<Request, String> {
+    let bad = |what: &str| {
+        format!(
+            "request spec '{text}': {what} \
+             (grammar: <id>@<arrival_ns>:<input>/<output>)"
+        )
+    };
+    let (id_s, rest) = text.split_once('@').ok_or_else(|| bad("missing '@'"))?;
+    let (arr_s, lens) = rest.split_once(':').ok_or_else(|| bad("missing ':'"))?;
+    let (in_s, out_s) = lens.split_once('/').ok_or_else(|| bad("missing '/'"))?;
+    let id: u64 = id_s.trim().parse().map_err(|_| bad("bad id"))?;
+    let arrival_ns: u64 = arr_s.trim().parse().map_err(|_| bad("bad arrival"))?;
+    let input_len: usize = in_s.trim().parse().map_err(|_| bad("bad input_len"))?;
+    let output_len: usize = out_s.trim().parse().map_err(|_| bad("bad output_len"))?;
+    if input_len == 0 || output_len == 0 {
+        return Err(bad("input_len and output_len must be >= 1"));
+    }
+    Ok(Request::new(id, arrival_ns, input_len, output_len))
+}
+
+fn parse_workload(doc: &TomlDoc, default_seed: u64) -> Result<WorkloadSpec, String> {
+    let kind = doc.get_str("workload.kind").unwrap_or("open-loop");
+    match kind {
+        "open-loop" => {
+            let n_requests = doc.get_i64("workload.n_requests").unwrap_or(64).max(0) as usize;
+            let trace_seed = doc.get_i64("workload.trace_seed").unwrap_or(1) as u64;
+            let arrival = parse_arrival(doc, default_seed)?;
+            Ok(WorkloadSpec::OpenLoop { n_requests, trace_seed, arrival })
+        }
+        "explicit" => {
+            let items = match doc.get("workload.requests") {
+                Some(TomlValue::Array(items)) => items,
+                Some(_) => return Err("workload.requests must be an array".into()),
+                None => return Err("explicit workload needs workload.requests".into()),
+            };
+            let mut requests = Vec::with_capacity(items.len());
+            for item in items {
+                let text = item
+                    .as_str()
+                    .ok_or("workload.requests entries must be strings")?;
+                requests.push(parse_request_spec(text)?);
+            }
+            Ok(WorkloadSpec::Explicit { requests })
+        }
+        "sessions" => {
+            let mut cfg = SessionConfig::default();
+            apply_sessions_toml(&mut cfg, doc);
+            Ok(WorkloadSpec::Sessions { sessions: cfg })
+        }
+        other => Err(format!(
+            "unknown workload.kind '{other}' (open-loop | explicit | sessions)"
+        )),
+    }
+}
+
+fn parse_arrival(doc: &TomlDoc, default_seed: u64) -> Result<ArrivalProcess, String> {
+    let need = |key: &str| {
+        doc.get_f64(&format!("workload.{key}"))
+            .ok_or_else(|| format!("arrival process needs workload.{key}"))
+    };
+    let seed = doc
+        .get_i64("workload.arrival_seed")
+        .map(|x| x as u64)
+        .unwrap_or(default_seed);
+    let name = doc.get_str("workload.arrival").unwrap_or("all-at-once");
+    let p = match name {
+        "all-at-once" => return Ok(ArrivalProcess::AllAtOnce),
+        "fixed" => ArrivalProcess::fixed(need("interval_s")?),
+        "poisson" => ArrivalProcess::poisson(need("rate_rps")?, seed),
+        "diurnal" => ArrivalProcess::diurnal(
+            need("period_s")?,
+            need("peak_rps")?,
+            need("trough_rps")?,
+            seed,
+        ),
+        "bursty" => ArrivalProcess::bursty(
+            need("base_rps")?,
+            need("burst_rps")?,
+            need("burst_len_s")?,
+            seed,
+        ),
+        other => {
+            return Err(format!(
+                "unknown arrival process '{other}' \
+                 (all-at-once | fixed | poisson | diurnal | bursty)"
+            ))
+        }
+    };
+    p.map_err(|e| e.to_string())
+}
+
+/// Emit a canonical `[sessions]` section (every [`SessionConfig`] key).
+fn sessions_to_toml(cfg: &SessionConfig) -> String {
+    format!(
+        "[sessions]\n\
+         n_sessions = {}\n\
+         min_turns = {}\n\
+         max_turns = {}\n\
+         think_mean_s = {}\n\
+         start_window_s = {}\n\
+         mean_new_input = {}\n\
+         sigma_new_input = {}\n\
+         min_new_input = {}\n\
+         max_new_input = {}\n\
+         mean_output = {}\n\
+         sigma_output = {}\n\
+         min_output = {}\n\
+         max_output = {}\n\
+         seed = {}\n",
+        cfg.n_sessions,
+        cfg.min_turns,
+        cfg.max_turns,
+        cfg.think_mean_s,
+        cfg.start_window_s,
+        cfg.mean_new_input,
+        cfg.sigma_new_input,
+        cfg.min_new_input,
+        cfg.max_new_input,
+        cfg.mean_output,
+        cfg.sigma_output,
+        cfg.min_output,
+        cfg.max_output,
+        cfg.seed,
+    )
+}
+
+fn apply_sessions_toml(cfg: &mut SessionConfig, doc: &TomlDoc) {
+    if let Some(x) = doc.get_i64("sessions.n_sessions") {
+        cfg.n_sessions = x.max(0) as usize;
+    }
+    if let Some(x) = doc.get_i64("sessions.min_turns") {
+        cfg.min_turns = x.max(0) as usize;
+    }
+    if let Some(x) = doc.get_i64("sessions.max_turns") {
+        cfg.max_turns = x.max(0) as usize;
+    }
+    if let Some(x) = doc.get_f64("sessions.think_mean_s") {
+        cfg.think_mean_s = x;
+    }
+    if let Some(x) = doc.get_f64("sessions.start_window_s") {
+        cfg.start_window_s = x;
+    }
+    if let Some(x) = doc.get_f64("sessions.mean_new_input") {
+        cfg.mean_new_input = x;
+    }
+    if let Some(x) = doc.get_f64("sessions.sigma_new_input") {
+        cfg.sigma_new_input = x;
+    }
+    if let Some(x) = doc.get_i64("sessions.min_new_input") {
+        cfg.min_new_input = x.max(1) as usize;
+    }
+    if let Some(x) = doc.get_i64("sessions.max_new_input") {
+        cfg.max_new_input = x.max(1) as usize;
+    }
+    if let Some(x) = doc.get_f64("sessions.mean_output") {
+        cfg.mean_output = x;
+    }
+    if let Some(x) = doc.get_f64("sessions.sigma_output") {
+        cfg.sigma_output = x;
+    }
+    if let Some(x) = doc.get_i64("sessions.min_output") {
+        cfg.min_output = x.max(1) as usize;
+    }
+    if let Some(x) = doc.get_i64("sessions.max_output") {
+        cfg.max_output = x.max(1) as usize;
+    }
+    if let Some(x) = doc.get_i64("sessions.seed") {
+        cfg.seed = x as u64;
+    }
+}
+
+/// Deterministic post-run corruption for harness self-tests: each
+/// variant damages the `(events, report)` pair in a way that trips
+/// exactly one oracle law, so a capsule with `inject` set is a
+/// reproducible known-failing scenario (and stays failing under
+/// shrinking, which re-applies the corruption every probe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InjectSpec {
+    /// Duplicate the first `Finished` event → double terminal.
+    DoubleFinish,
+    /// Delete the first `Finished` event → lost request.
+    LoseTerminal,
+    /// Delete one token event → token undercount.
+    UndercountTokens,
+    /// Swap the timestamps of the first and last events → time warp.
+    TimeWarp,
+    /// Claim a migration the events can't justify.
+    PhantomMigration,
+}
+
+impl InjectSpec {
+    pub const ALL: [InjectSpec; 5] = [
+        InjectSpec::DoubleFinish,
+        InjectSpec::LoseTerminal,
+        InjectSpec::UndercountTokens,
+        InjectSpec::TimeWarp,
+        InjectSpec::PhantomMigration,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InjectSpec::DoubleFinish => "double-finish",
+            InjectSpec::LoseTerminal => "lose-terminal",
+            InjectSpec::UndercountTokens => "undercount-tokens",
+            InjectSpec::TimeWarp => "time-warp",
+            InjectSpec::PhantomMigration => "phantom-migration",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<InjectSpec> {
+        InjectSpec::ALL.iter().copied().find(|i| i.name() == name)
+    }
+
+    /// The violation kind this corruption is designed to trip — the
+    /// default shrink property for capsules with `inject` set.
+    pub fn expected_kind(&self) -> crate::checker::oracle::ViolationKind {
+        use crate::checker::oracle::ViolationKind as K;
+        match self {
+            InjectSpec::DoubleFinish => K::DoubleTerminal,
+            InjectSpec::LoseTerminal => K::LostRequest,
+            InjectSpec::UndercountTokens => K::TokenCountMismatch,
+            InjectSpec::TimeWarp => K::TimeRegression,
+            InjectSpec::PhantomMigration => K::PhantomMigration,
+        }
+    }
+
+    /// Corrupt a finished run in place.  No-op when the stream lacks the
+    /// event the variant targets (e.g. an empty run).
+    pub fn apply(&self, events: &mut Vec<SystemEvent>, report: &mut Report) {
+        match self {
+            InjectSpec::DoubleFinish => {
+                if let Some(i) = events
+                    .iter()
+                    .position(|e| matches!(e, SystemEvent::Finished { .. }))
+                {
+                    let dup = events[i].clone();
+                    events.insert(i + 1, dup);
+                }
+            }
+            InjectSpec::LoseTerminal => {
+                if let Some(i) = events
+                    .iter()
+                    .position(|e| matches!(e, SystemEvent::Finished { .. }))
+                {
+                    events.remove(i);
+                }
+            }
+            InjectSpec::UndercountTokens => {
+                let i = events
+                    .iter()
+                    .position(|e| matches!(e, SystemEvent::Token { .. }))
+                    .or_else(|| {
+                        events
+                            .iter()
+                            .position(|e| matches!(e, SystemEvent::FirstToken { .. }))
+                    });
+                if let Some(i) = i {
+                    events.remove(i);
+                }
+            }
+            InjectSpec::TimeWarp => {
+                if events.len() >= 2 {
+                    let t_first = events.first().unwrap().time();
+                    let t_last = events.last().unwrap().time();
+                    if t_first != t_last {
+                        set_event_time(events.first_mut().unwrap(), t_last);
+                        set_event_time(events.last_mut().unwrap(), t_first);
+                    }
+                }
+            }
+            InjectSpec::PhantomMigration => {
+                report.n_migrations += 1;
+                report.migrated_tokens = 0;
+            }
+        }
+    }
+}
+
+fn set_event_time(ev: &mut SystemEvent, t: SimTime) {
+    match ev {
+        SystemEvent::FirstToken { t: x, .. }
+        | SystemEvent::Token { t: x, .. }
+        | SystemEvent::Finished { t: x, .. }
+        | SystemEvent::Shed { t: x, .. }
+        | SystemEvent::ScaleUp { t: x, .. }
+        | SystemEvent::ScaleDown { t: x, .. }
+        | SystemEvent::PairFailed { t: x, .. }
+        | SystemEvent::PairRecovered { t: x, .. } => *x = t,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::parse_schedule_entry;
+    use crate::qos::ServiceClass;
+    use crate::simgpu::link::LinkSpec;
+
+    fn kitchen_sink() -> Scenario {
+        let mut s = Scenario::minimal("kitchen-sink");
+        s.seed = 7;
+        s.policy = RoutePolicy::SloAware;
+        s.slo_ttft_s = Some(2.5);
+        s.cluster = ClusterConfig::mixed(4, LLAMA3_8B);
+        s.cluster.link = Some(LinkSpec::parse("100G@2us:0.9").unwrap());
+        s.workload = WorkloadSpec::OpenLoop {
+            n_requests: 200,
+            trace_seed: 11,
+            arrival: ArrivalProcess::diurnal(60.0, 24.0, 4.0, 5).unwrap(),
+        };
+        s.autoscale = Some(AutoscaleConfig { min_pairs: 2, ..Default::default() });
+        s.faults = Some(FaultConfig {
+            n_failures: 2,
+            schedule: vec![parse_schedule_entry("1@2.5+3").unwrap()],
+            ..FaultConfig::default()
+        });
+        let mut reg = ClassRegistry::new();
+        reg.register(ServiceClass { tier: 1, weight: 2.0, ..ServiceClass::named("premium") });
+        s.classes = Some(reg);
+        s.inject = Some(InjectSpec::DoubleFinish);
+        s
+    }
+
+    #[test]
+    fn scenario_toml_round_trips_byte_for_byte() {
+        for s in [
+            Scenario::minimal("tiny"),
+            kitchen_sink(),
+            Scenario {
+                workload: WorkloadSpec::Explicit {
+                    requests: vec![
+                        parse_request_spec("0@0:512/64").unwrap(),
+                        parse_request_spec("1@500000:256/32").unwrap(),
+                    ],
+                },
+                ..Scenario::minimal("explicit")
+            },
+            Scenario {
+                workload: WorkloadSpec::Sessions {
+                    sessions: SessionConfig { n_sessions: 3, ..Default::default() },
+                },
+                ..Scenario::minimal("sessions")
+            },
+            Scenario {
+                workload: WorkloadSpec::OpenLoop {
+                    n_requests: 50,
+                    trace_seed: 3,
+                    arrival: ArrivalProcess::bursty(1.0, 40.0, 0.5, 9).unwrap(),
+                },
+                ..Scenario::minimal("bursty")
+            },
+        ] {
+            let text = s.to_toml();
+            let back = Scenario::from_toml(&text)
+                .unwrap_or_else(|e| panic!("'{}' failed to re-parse: {e}\n{text}", s.name));
+            assert_eq!(back.to_toml(), text, "'{}' must round-trip", s.name);
+        }
+    }
+
+    #[test]
+    fn parsed_scenario_preserves_structure() {
+        let s = kitchen_sink();
+        let back = Scenario::from_toml(&s.to_toml()).unwrap();
+        assert_eq!(back.name, "kitchen-sink");
+        assert_eq!(back.policy, RoutePolicy::SloAware);
+        assert_eq!(back.slo_ttft_s, Some(2.5));
+        assert_eq!(back.cluster.n_pairs(), 4);
+        assert!(back.link_configured());
+        assert!(back.faults_active());
+        assert_eq!(back.inject, Some(InjectSpec::DoubleFinish));
+        assert_eq!(back.classes.as_ref().unwrap().len(), 2);
+        match back.workload {
+            WorkloadSpec::OpenLoop { n_requests, arrival, .. } => {
+                assert_eq!(n_requests, 200);
+                assert!(matches!(arrival, ArrivalProcess::Diurnal { .. }));
+            }
+            other => panic!("wrong workload {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_capsules_are_rejected() {
+        assert!(Scenario::from_toml("[scenario]\npolicy = \"nope\"\n").is_err());
+        assert!(Scenario::from_toml("[scenario]\ninject = \"nope\"\n").is_err());
+        assert!(
+            Scenario::from_toml("[workload]\nkind = \"open-loop\"\narrival = \"poisson\"\n")
+                .is_err(),
+            "poisson without a rate must be rejected"
+        );
+        assert!(Scenario::from_toml(
+            "[workload]\nkind = \"open-loop\"\narrival = \"poisson\"\nrate_rps = -1\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[workload]\nkind = \"explicit\"\nrequests = [\"0@0:10/5\", \"0@1:10/5\"]\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml("[scenario]\nslo_ttft_s = -2\n").is_err());
+        assert!(parse_request_spec("1@2:0/5").is_err());
+        assert!(parse_request_spec("garbage").is_err());
+    }
+
+    #[test]
+    fn trace_stamps_classes_round_robin() {
+        let mut s = Scenario::minimal("classes");
+        let mut reg = ClassRegistry::new();
+        reg.register(ServiceClass::named("premium"));
+        s.classes = Some(reg);
+        let trace = s.trace().unwrap();
+        assert!(trace.iter().enumerate().all(|(i, r)| r.class.0 as usize == i % 2));
+    }
+
+    #[test]
+    fn inject_names_round_trip() {
+        for i in InjectSpec::ALL {
+            assert_eq!(InjectSpec::from_name(i.name()), Some(i));
+        }
+        assert_eq!(InjectSpec::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,632 @@
+//! Replay a [`Scenario`] under the invariant oracle, and shrink failing
+//! scenarios to minimal counterexamples.
+//!
+//! [`run_scenario`] is the harness's one entry point: build the system
+//! the capsule describes, serve its workload with events collected,
+//! apply the capsule's [`InjectSpec`] corruption (if any), and return
+//! the oracle's verdict alongside the report and event stream.
+//!
+//! [`shrink`] is deterministic delta debugging over the scenario
+//! structure.  Given a failing capsule and a property (a predicate on
+//! [`ScenarioRun`] that holds exactly when the bug reproduces), it
+//! alternates passes — halve the workload, ddmin the explicit request
+//! list, collapse the fleet, freeze and ddmin the fault schedule, drop
+//! optional subsystems, halve request lengths — until a fixpoint, and
+//! every accepted step re-verifies the property, so the output is a
+//! small capsule that *still fails the same way*.  [`shrink_to_file`]
+//! writes it next to the run (`$CRONUS_REPRO_DIR` or the system temp
+//! dir) as `repro_<label>.toml`, replayable with `cronus repro`.
+//!
+//! [`check_scenarios`] is the fuzz-loop harness the test suites use:
+//! generate N seeded scenarios, replay each, and on the first property
+//! failure shrink it and panic with the path to the minimal capsule —
+//! a failing fuzz run hands you a file, not a seed to chase.
+
+use std::path::PathBuf;
+
+use crate::checker::oracle::{CheckSummary, InvariantChecker};
+use crate::checker::scenario::{Scenario, WorkloadSpec};
+use crate::metrics::Report;
+use crate::systems::driver::{closed_loop_collect, replay_trace_collect};
+use crate::systems::SystemEvent;
+use crate::util::rng::Rng;
+use crate::workload::arrival::{stamp, ArrivalProcess};
+use crate::workload::azure::{generate, AzureTraceConfig};
+use crate::workload::Request;
+
+/// Everything one replay produced: the final report, the full event
+/// stream (post-injection), the oracle's verdict, and the workload size
+/// (requests submitted, or total session turns).
+#[derive(Clone, Debug)]
+pub struct ScenarioRun {
+    pub report: Report,
+    pub events: Vec<SystemEvent>,
+    pub summary: CheckSummary,
+    pub n_requests: usize,
+}
+
+/// Result of a shrink: the minimal scenario plus how much work it took.
+#[derive(Clone, Debug)]
+pub struct ShrinkOutcome {
+    pub scenario: Scenario,
+    /// Candidate replays executed (every accepted or rejected probe).
+    pub probes: usize,
+    /// Fixpoint iterations over the pass list.
+    pub rounds: usize,
+}
+
+/// Hard caps so a pathological property cannot spin forever: the pass
+/// loop stops after this many full rounds…
+const MAX_ROUNDS: usize = 8;
+/// …or this many candidate replays, whichever comes first.
+const MAX_PROBES: usize = 4000;
+
+/// Build, serve, corrupt (per `inject`), and judge one scenario.
+pub fn run_scenario(s: &Scenario) -> Result<ScenarioRun, String> {
+    s.validate()?;
+    let mut sys = s.build_system()?;
+    let mut checker = InvariantChecker::new()
+        .with_faults(s.faults_active())
+        .with_link(s.link_configured());
+    let (outcome, mut events, n_requests) = if let Some(sessions) = s.sessions() {
+        checker.expect_sessions(&sessions);
+        let n: usize = sessions.iter().map(|x| x.turns.len()).sum();
+        let (out, ev, _stats) = closed_loop_collect(&mut sys, &sessions);
+        (out, ev, n)
+    } else {
+        let trace = s.trace()?;
+        checker.expect_trace(&trace);
+        let n = trace.len();
+        let (out, ev, _stats) = replay_trace_collect(&mut sys, &trace);
+        (out, ev, n)
+    };
+    let mut report = outcome.report;
+    if let Some(inj) = s.inject {
+        inj.apply(&mut events, &mut report);
+    }
+    for ev in &events {
+        checker.on_event(ev);
+    }
+    checker.check_report(&report);
+    Ok(ScenarioRun { report, events, summary: checker.finish(), n_requests })
+}
+
+/// Minimize `seed` while `fails` keeps returning `true`.  Errors if the
+/// seed scenario does not fail the property in the first place (a
+/// shrink of a healthy scenario would "converge" to noise).
+pub fn shrink(
+    seed: &Scenario,
+    fails: &dyn Fn(&ScenarioRun) -> bool,
+) -> Result<ShrinkOutcome, String> {
+    let mut sh = Shrinker { fails, probes: 0 };
+    let mut cur = seed.clone();
+    if !sh.still_fails(&cur) {
+        return Err(format!(
+            "scenario '{}' does not fail the property; nothing to shrink",
+            seed.name
+        ));
+    }
+    let mut rounds = 0;
+    loop {
+        rounds += 1;
+        let before = cur.to_toml();
+        sh.pass_workload(&mut cur);
+        sh.pass_ddmin_requests(&mut cur);
+        sh.pass_fleet(&mut cur);
+        sh.pass_faults(&mut cur);
+        sh.pass_optionals(&mut cur);
+        sh.pass_halve_fields(&mut cur);
+        if cur.to_toml() == before || rounds >= MAX_ROUNDS || sh.probes >= MAX_PROBES {
+            break;
+        }
+    }
+    Ok(ShrinkOutcome { scenario: cur, probes: sh.probes, rounds })
+}
+
+/// Directory shrunk capsules are written to: `$CRONUS_REPRO_DIR` when
+/// set (CI points it at an artifact dir), else the system temp dir.
+pub fn repro_dir() -> PathBuf {
+    match std::env::var_os("CRONUS_REPRO_DIR") {
+        Some(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir(),
+    }
+}
+
+/// [`shrink`], then write the minimal capsule to
+/// `repro_dir()/repro_<label>.toml` and return its path.
+pub fn shrink_to_file(
+    seed: &Scenario,
+    fails: &dyn Fn(&ScenarioRun) -> bool,
+    label: &str,
+) -> Result<(PathBuf, ShrinkOutcome), String> {
+    let out = shrink(seed, fails)?;
+    let dir = repro_dir();
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+    let safe: String = label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect();
+    let path = dir.join(format!("repro_{safe}.toml"));
+    std::fs::write(&path, out.scenario.to_toml())
+        .map_err(|e| format!("writing {}: {e}", path.display()))?;
+    Ok((path, out))
+}
+
+/// Fuzz-loop harness: replay `cases` seeded scenarios from `gen`; on
+/// the first run where `fails` holds, shrink it and panic with the path
+/// to the minimal `repro_*.toml` capsule.
+///
+/// Case seeds follow the repo's property-test convention: an FNV-1a
+/// hash of `name` xor a per-case splitmix stride, so suites are stable
+/// across runs and independent of each other.
+pub fn check_scenarios(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> Scenario,
+    fails: impl Fn(&ScenarioRun) -> bool,
+) {
+    let base = fnv1a(name);
+    for case in 0..cases {
+        let mut rng = Rng::new(base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let scenario = gen(&mut rng);
+        let run = run_scenario(&scenario)
+            .unwrap_or_else(|e| panic!("{name} case {case}: scenario failed to run: {e}"));
+        if fails(&run) {
+            let label = format!("{name}_case{case}");
+            match shrink_to_file(&scenario, &fails, &label) {
+                Ok((path, out)) => panic!(
+                    "{name} case {case} violated the property.\n{}\n\
+                     Minimal capsule ({} probes, {} rounds) written to {path_}\n\
+                     Replay it with: cronus repro {path_}",
+                    run.summary.render(),
+                    out.probes,
+                    out.rounds,
+                    path_ = path.display(),
+                ),
+                Err(e) => panic!(
+                    "{name} case {case} violated the property and shrinking errored ({e}).\n{}",
+                    run.summary.render()
+                ),
+            }
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn with_requests(cur: &Scenario, requests: Vec<Request>) -> Scenario {
+    let mut cand = cur.clone();
+    cand.workload = WorkloadSpec::Explicit { requests };
+    cand
+}
+
+struct Shrinker<'a> {
+    fails: &'a dyn Fn(&ScenarioRun) -> bool,
+    probes: usize,
+}
+
+impl Shrinker<'_> {
+    /// One probe: replay the candidate and test the property.  A
+    /// candidate that errors (or blows the probe budget) counts as "no
+    /// longer failing", so shrinking never accepts a broken scenario.
+    fn still_fails(&mut self, cand: &Scenario) -> bool {
+        if self.probes >= MAX_PROBES {
+            return false;
+        }
+        self.probes += 1;
+        match run_scenario(cand) {
+            Ok(run) => (self.fails)(&run),
+            Err(_) => false,
+        }
+    }
+
+    fn try_accept(&mut self, cur: &mut Scenario, cand: Scenario) -> bool {
+        if self.still_fails(&cand) {
+            *cur = cand;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Shrink the workload generator itself: halve the request (or
+    /// session) count, simplify the arrival process, and finally freeze
+    /// an open-loop workload into an explicit request list so
+    /// [`Shrinker::pass_ddmin_requests`] can bite.
+    fn pass_workload(&mut self, cur: &mut Scenario) {
+        match cur.workload.clone() {
+            WorkloadSpec::OpenLoop { mut n_requests, trace_seed, arrival } => {
+                while n_requests > 1 {
+                    let half = n_requests / 2;
+                    let mut cand = cur.clone();
+                    cand.workload =
+                        WorkloadSpec::OpenLoop { n_requests: half, trace_seed, arrival };
+                    if !self.try_accept(cur, cand) {
+                        break;
+                    }
+                    n_requests = half;
+                }
+                if !matches!(arrival, ArrivalProcess::AllAtOnce) {
+                    let mut cand = cur.clone();
+                    if let WorkloadSpec::OpenLoop { arrival: a, .. } = &mut cand.workload {
+                        *a = ArrivalProcess::AllAtOnce;
+                    }
+                    self.try_accept(cur, cand);
+                }
+                if let WorkloadSpec::OpenLoop { n_requests, trace_seed, arrival } =
+                    cur.workload
+                {
+                    let raw = stamp(
+                        &generate(n_requests, &AzureTraceConfig::default(), trace_seed),
+                        arrival,
+                    );
+                    // Keep only the four fields a capsule serializes, so
+                    // the in-memory scenario matches its emitted TOML.
+                    let requests: Vec<Request> = raw
+                        .iter()
+                        .map(|r| Request::new(r.id, r.arrival_ns, r.input_len, r.output_len))
+                        .collect();
+                    let cand = with_requests(cur, requests);
+                    self.try_accept(cur, cand);
+                }
+            }
+            WorkloadSpec::Sessions { sessions } => {
+                let mut cfg = sessions;
+                while cfg.n_sessions > 1 {
+                    let mut next = cfg;
+                    next.n_sessions /= 2;
+                    let mut cand = cur.clone();
+                    cand.workload = WorkloadSpec::Sessions { sessions: next };
+                    if !self.try_accept(cur, cand) {
+                        break;
+                    }
+                    cfg = next;
+                }
+                while cfg.max_turns > 1 {
+                    let mut next = cfg;
+                    next.min_turns = 1;
+                    next.max_turns = (next.max_turns / 2).max(1);
+                    let mut cand = cur.clone();
+                    cand.workload = WorkloadSpec::Sessions { sessions: next };
+                    if !self.try_accept(cur, cand) {
+                        break;
+                    }
+                    cfg = next;
+                }
+            }
+            WorkloadSpec::Explicit { .. } => {}
+        }
+    }
+
+    /// Classic ddmin over the explicit request list.
+    fn pass_ddmin_requests(&mut self, cur: &mut Scenario) {
+        if let WorkloadSpec::Explicit { requests } = cur.workload.clone() {
+            self.ddmin(cur, requests, false, &with_requests);
+        }
+    }
+
+    /// Collapse the fleet: try one pair outright, then halve.  Fault
+    /// schedule entries and autoscale bounds that name dropped pairs
+    /// are clamped so every candidate is well-formed.
+    fn pass_fleet(&mut self, cur: &mut Scenario) {
+        loop {
+            let n = cur.cluster.n_pairs();
+            if n <= 1 {
+                return;
+            }
+            if self.try_pairs(cur, 1) {
+                continue;
+            }
+            if n / 2 >= 1 && n / 2 < n && self.try_pairs(cur, n / 2) {
+                continue;
+            }
+            return;
+        }
+    }
+
+    fn try_pairs(&mut self, cur: &mut Scenario, k: usize) -> bool {
+        let mut cand = cur.clone();
+        cand.cluster.pairs.truncate(k);
+        if let Some(f) = &mut cand.faults {
+            f.schedule.retain(|e| e.pair < k);
+        }
+        if let Some(a) = &mut cand.autoscale {
+            a.min_pairs = a.min_pairs.min(k);
+            a.initial_pairs = a.initial_pairs.min(k);
+        }
+        self.try_accept(cur, cand)
+    }
+
+    /// Simplify the fault plan: drop it entirely if the bug survives;
+    /// otherwise freeze the seeded generator into an explicit schedule
+    /// (behavior-identical, verified by the probe) and ddmin that.
+    fn pass_faults(&mut self, cur: &mut Scenario) {
+        if cur.faults.is_none() {
+            return;
+        }
+        let mut cand = cur.clone();
+        cand.faults = None;
+        if self.try_accept(cur, cand) {
+            return;
+        }
+        let f = cur.faults.clone().expect("checked above");
+        if f.n_failures > 0 {
+            if let Ok(plan) = f.build_plan(cur.cluster.n_pairs()) {
+                let mut cand = cur.clone();
+                if let Some(fc) = &mut cand.faults {
+                    fc.schedule = plan.events().to_vec();
+                    fc.n_failures = 0;
+                }
+                self.try_accept(cur, cand);
+            }
+        }
+        if let Some(f) = cur.faults.clone() {
+            if !f.schedule.is_empty() {
+                self.ddmin(cur, f.schedule, true, &|s, items| {
+                    let mut cand = s.clone();
+                    if let Some(fc) = &mut cand.faults {
+                        fc.schedule = items;
+                    }
+                    cand
+                });
+            }
+        }
+    }
+
+    /// Drop optional subsystems one at a time: QoS classes, the SLO
+    /// gate, autoscaling, and the inter-pair link fabric.
+    fn pass_optionals(&mut self, cur: &mut Scenario) {
+        if cur.classes.is_some() {
+            let mut cand = cur.clone();
+            cand.classes = None;
+            self.try_accept(cur, cand);
+        }
+        if cur.slo_ttft_s.is_some() {
+            let mut cand = cur.clone();
+            cand.slo_ttft_s = None;
+            self.try_accept(cur, cand);
+        }
+        if cur.autoscale.is_some() {
+            let mut cand = cur.clone();
+            cand.autoscale = None;
+            self.try_accept(cur, cand);
+        }
+        if cur.link_configured() {
+            let mut cand = cur.clone();
+            cand.cluster.link = None;
+            for p in &mut cand.cluster.pairs {
+                p.link = None;
+            }
+            self.try_accept(cur, cand);
+        }
+    }
+
+    /// Halve explicit requests' token lengths and zero their arrival
+    /// offsets, to fixpoint.
+    fn pass_halve_fields(&mut self, cur: &mut Scenario) {
+        loop {
+            let requests = match &cur.workload {
+                WorkloadSpec::Explicit { requests } => requests.clone(),
+                _ => return,
+            };
+            let mut progressed = false;
+            let mutators: [fn(&mut Request); 3] = [
+                |r| r.output_len = (r.output_len / 2).max(1),
+                |r| r.input_len = (r.input_len / 2).max(1),
+                |r| r.arrival_ns = 0,
+            ];
+            for mutate in mutators {
+                let base = match &cur.workload {
+                    WorkloadSpec::Explicit { requests } => requests.clone(),
+                    _ => return,
+                };
+                let mut changed = false;
+                let next: Vec<Request> = base
+                    .iter()
+                    .map(|r| {
+                        let mut q = *r;
+                        mutate(&mut q);
+                        if q != *r {
+                            changed = true;
+                        }
+                        q
+                    })
+                    .collect();
+                if changed {
+                    let cand = with_requests(cur, next);
+                    if self.try_accept(cur, cand) {
+                        progressed = true;
+                    }
+                }
+            }
+            let after = match &cur.workload {
+                WorkloadSpec::Explicit { requests } => requests.clone(),
+                _ => return,
+            };
+            if !progressed || after == requests || self.probes >= MAX_PROBES {
+                return;
+            }
+        }
+    }
+
+    /// Delta debugging (Zeller's ddmin): remove complement chunks at
+    /// increasing granularity until 1-minimal (or empty when
+    /// `allow_empty`).  `build` turns a surviving item list into a
+    /// candidate scenario.
+    fn ddmin<T: Clone>(
+        &mut self,
+        cur: &mut Scenario,
+        items: Vec<T>,
+        allow_empty: bool,
+        build: &dyn Fn(&Scenario, Vec<T>) -> Scenario,
+    ) {
+        let min_len = usize::from(!allow_empty);
+        let mut items = items;
+        if items.len() <= min_len {
+            return;
+        }
+        let mut n = 2usize;
+        loop {
+            let chunk = items.len().div_ceil(n);
+            let mut reduced = false;
+            let mut start = 0;
+            while start < items.len() {
+                let end = (start + chunk).min(items.len());
+                let mut rest: Vec<T> = Vec::with_capacity(items.len() - (end - start));
+                rest.extend_from_slice(&items[..start]);
+                rest.extend_from_slice(&items[end..]);
+                if rest.len() < min_len {
+                    start = end;
+                    continue;
+                }
+                let cand = build(cur, rest.clone());
+                if self.still_fails(&cand) {
+                    *cur = cand;
+                    items = rest;
+                    n = n.saturating_sub(1).max(2);
+                    reduced = true;
+                    break;
+                }
+                start = end;
+            }
+            if !reduced {
+                if n >= items.len() {
+                    return;
+                }
+                n = (n * 2).min(items.len());
+            }
+            if items.len() <= min_len || self.probes >= MAX_PROBES {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checker::oracle::ViolationKind;
+    use crate::checker::scenario::InjectSpec;
+    use crate::config::topology::ClusterConfig;
+    use crate::faults::FaultConfig;
+    use crate::simgpu::model_desc::LLAMA3_8B;
+    use crate::workload::session::SessionConfig;
+
+    #[test]
+    fn healthy_scenario_passes_the_oracle() {
+        let run = run_scenario(&Scenario::minimal("healthy")).unwrap();
+        assert!(run.summary.ok(), "{}", run.summary.render());
+        assert_eq!(run.n_requests, 16);
+        assert!(run.report.n_finished > 0);
+    }
+
+    #[test]
+    fn healthy_session_scenario_passes_the_oracle() {
+        let mut s = Scenario::minimal("sessions");
+        s.workload = WorkloadSpec::Sessions {
+            sessions: SessionConfig { n_sessions: 4, ..Default::default() },
+        };
+        let run = run_scenario(&s).unwrap();
+        assert!(run.summary.ok(), "{}", run.summary.render());
+        assert!(run.n_requests >= 8, "4 sessions x >=2 turns");
+    }
+
+    #[test]
+    fn every_injection_trips_its_target_invariant() {
+        for inj in InjectSpec::ALL {
+            let mut s = Scenario::minimal("inject");
+            s.inject = Some(inj);
+            let run = run_scenario(&s).unwrap();
+            assert!(
+                run.summary.has(inj.expected_kind()),
+                "{} should trip {:?}, got: {}",
+                inj.name(),
+                inj.expected_kind(),
+                run.summary.render()
+            );
+        }
+    }
+
+    #[test]
+    fn shrink_refuses_a_healthy_seed() {
+        let err = shrink(&Scenario::minimal("healthy"), &|run| !run.summary.ok());
+        assert!(err.is_err());
+    }
+
+    fn failing_seed() -> Scenario {
+        let mut s = Scenario::minimal("seeded-failure");
+        s.cluster = ClusterConfig::mixed(2, LLAMA3_8B);
+        s.workload = WorkloadSpec::OpenLoop {
+            n_requests: 64,
+            trace_seed: 3,
+            arrival: ArrivalProcess::poisson(200.0, 7).unwrap(),
+        };
+        s.faults = Some(FaultConfig { n_failures: 1, ..FaultConfig::default() });
+        s.inject = Some(InjectSpec::DoubleFinish);
+        s
+    }
+
+    #[test]
+    fn shrink_finds_a_tiny_double_finish_capsule() {
+        let fails =
+            |run: &ScenarioRun| run.summary.has(ViolationKind::DoubleTerminal);
+        let out = shrink(&failing_seed(), &fails).unwrap();
+        let s = &out.scenario;
+        assert_eq!(s.cluster.n_pairs(), 1, "fleet should collapse to one pair");
+        assert!(s.faults.is_none(), "fault plan is irrelevant to the bug");
+        match &s.workload {
+            WorkloadSpec::Explicit { requests } => {
+                assert!(
+                    requests.len() <= 3,
+                    "expected <=3 requests, got {}",
+                    requests.len()
+                );
+            }
+            other => panic!("workload should be explicit, got {other:?}"),
+        }
+        // The minimal capsule must still fail the same way.
+        let run = run_scenario(s).unwrap();
+        assert!(fails(&run));
+        // And shrinking is deterministic.
+        let again = shrink(&failing_seed(), &fails).unwrap();
+        assert_eq!(again.scenario.to_toml(), s.to_toml());
+    }
+
+    #[test]
+    fn shrunk_capsule_round_trips_through_toml() {
+        let fails =
+            |run: &ScenarioRun| run.summary.has(ViolationKind::DoubleTerminal);
+        let out = shrink(&failing_seed(), &fails).unwrap();
+        let text = out.scenario.to_toml();
+        let back = Scenario::from_toml(&text).unwrap();
+        assert_eq!(back.to_toml(), text);
+        let run = run_scenario(&back).unwrap();
+        assert!(fails(&run), "reloaded capsule must still fail");
+    }
+
+    #[test]
+    fn check_scenarios_accepts_healthy_generators() {
+        check_scenarios(
+            "shrink-smoke-healthy",
+            3,
+            |rng| {
+                let mut s = Scenario::minimal("gen");
+                s.workload = WorkloadSpec::OpenLoop {
+                    n_requests: 4 + rng.range_usize(0, 8),
+                    trace_seed: rng.range_usize(1, 100) as u64,
+                    arrival: ArrivalProcess::AllAtOnce,
+                };
+                s
+            },
+            |run| !run.summary.ok(),
+        );
+    }
+}

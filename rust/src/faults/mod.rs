@@ -90,6 +90,20 @@ impl FaultPlan {
     }
 }
 
+impl FaultEvent {
+    /// Render this outage in the `faults.schedule` / `--fail` grammar,
+    /// `"<pair>@<fail_s>[+<down_s>]"` — the exact inverse of
+    /// [`parse_schedule_entry`], so an emitted entry parses back to an
+    /// equal `FaultEvent`.
+    pub fn spec(&self) -> String {
+        let fail = self.fail_at.as_secs_f64();
+        match self.recover_at {
+            Some(r) => format!("{}@{}+{}", self.pair, fail, r.as_secs_f64() - fail),
+            None => format!("{}@{}", self.pair, fail),
+        }
+    }
+}
+
 /// Deterministic capped exponential backoff for re-submitting deferred
 /// or failure-aborted requests.
 ///
@@ -281,6 +295,31 @@ impl FaultConfig {
         Ok(())
     }
 
+    /// Emit this config as a canonical `[faults]` section.  The output
+    /// parses back ([`FaultConfig::apply_toml`]) to an equal config, and
+    /// re-emission is byte-identical — the `[topology]` round-trip
+    /// contract, extended to faults so a captured scenario capsule is a
+    /// complete run description.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::from("[faults]\n");
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out.push_str(&format!("n_failures = {}\n", self.n_failures));
+        out.push_str(&format!("mtbf_s = {}\n", self.mtbf_s));
+        out.push_str(&format!("mttr_s = {}\n", self.mttr_s));
+        out.push_str(&format!("fail_stop_frac = {}\n", self.fail_stop_frac));
+        let entries: Vec<String> = self
+            .schedule
+            .iter()
+            .map(|e| format!("\"{}\"", e.spec()))
+            .collect();
+        out.push_str(&format!("schedule = [{}]\n", entries.join(", ")));
+        out.push_str(&format!("max_retries = {}\n", self.max_retries));
+        out.push_str(&format!("retry_base_s = {}\n", self.retry_base_s));
+        out.push_str(&format!("retry_multiplier = {}\n", self.retry_multiplier));
+        out.push_str(&format!("retry_cap_s = {}\n", self.retry_cap_s));
+        out
+    }
+
     /// The failure-retry backoff these knobs describe.
     pub fn backoff(&self) -> RetryBackoff {
         RetryBackoff {
@@ -470,6 +509,55 @@ mod tests {
         }
         let other = FaultConfig { seed: 8, ..cfg }.build_plan(4).expect("plan");
         assert_ne!(a, other, "different seeds draw different outages");
+    }
+
+    #[test]
+    fn event_spec_inverts_parse() {
+        for spec in ["1@2.5+3", "0@10", "3@0.125+0.25", "2@100.5"] {
+            let e = parse_schedule_entry(spec).expect("parses");
+            assert_eq!(e.spec(), spec, "spec should re-render canonically");
+            assert_eq!(parse_schedule_entry(&e.spec()).unwrap(), e);
+        }
+        // Non-canonical input still round-trips by value.
+        let e = parse_schedule_entry(" 1 @ 2.50 + 3.0 ").expect("parses");
+        assert_eq!(parse_schedule_entry(&e.spec()).unwrap(), e);
+    }
+
+    #[test]
+    fn faults_toml_round_trips_byte_for_byte() {
+        let cfg = FaultConfig {
+            seed: 99,
+            n_failures: 3,
+            mtbf_s: 1.5,
+            mttr_s: 0.5,
+            fail_stop_frac: 0.25,
+            schedule: vec![
+                parse_schedule_entry("0@1+2").unwrap(),
+                parse_schedule_entry("1@4").unwrap(),
+            ],
+            max_retries: 5,
+            retry_base_s: 0.02,
+            retry_multiplier: 3.0,
+            retry_cap_s: 0.5,
+        };
+        let text = cfg.to_toml();
+        let doc = crate::config::toml::parse(&text).expect("emitted TOML parses");
+        let mut back = FaultConfig::default();
+        back.apply_toml(&doc).expect("applies");
+        assert_eq!(back, cfg, "parse(emit(cfg)) == cfg");
+        assert_eq!(back.to_toml(), text, "re-emission is byte-identical");
+
+        // Defaults (empty schedule) round-trip too.
+        let d = FaultConfig::default();
+        let doc = crate::config::toml::parse(&d.to_toml()).expect("parses");
+        let mut back = FaultConfig {
+            seed: 1,
+            n_failures: 9,
+            schedule: vec![parse_schedule_entry("0@1").unwrap()],
+            ..FaultConfig::default()
+        };
+        back.apply_toml(&doc).expect("applies");
+        assert_eq!(back, d);
     }
 
     #[test]

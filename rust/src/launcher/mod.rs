@@ -3,6 +3,7 @@
 //! paper table/figure (see DESIGN.md §4 for the experiment index).
 
 use crate::benchkit::{time_once, Table};
+use crate::checker::oracle::CheckSummary;
 use crate::config::topology::ClusterConfig;
 use crate::config::{DeploymentConfig, SystemKind};
 use crate::cronus::balancer::SplitPolicy;
@@ -1008,6 +1009,25 @@ pub fn migration_demo(
         ]);
     }
     (table, points)
+}
+
+/// One-line (or, on failure, multi-line) verdict for a checked run —
+/// shared by `bench-cluster --check` and `cronus repro`.
+pub fn check_verdict(report: &crate::metrics::Report, summary: &CheckSummary) -> String {
+    if summary.ok() {
+        format!(
+            "oracle: ok — {} events checked, {} finished / {} rejected, \
+             no violations",
+            summary.n_events, report.n_finished, report.n_rejected
+        )
+    } else {
+        format!(
+            "oracle: {} violation(s) in {} events\n{}",
+            summary.violations.len(),
+            summary.n_events,
+            summary.render()
+        )
+    }
 }
 
 #[cfg(test)]

@@ -35,6 +35,7 @@
 
 pub mod baselines;
 pub mod benchkit;
+pub mod checker;
 pub mod config;
 pub mod cronus;
 pub mod engine;

@@ -7,6 +7,7 @@
 //! cronus bench-table3     reproduce Table 3 (relative GPU utilization)
 //! cronus bench-fig3       reproduce Fig. 3 (linear iteration-time fits)
 //! cronus bench-cluster    sweep 1→N mixed pairs behind the cluster router
+//! cronus repro            replay a scenario capsule under the invariant oracle
 //! cronus plan-topology    search pair compositions under a budget, emit TOML
 //! cronus calibrate        print the Balancer's fitted predictors
 //! cronus trace            generate + summarize a workload trace
@@ -99,6 +100,7 @@ fn main() {
     let cmd = if raw.is_empty() { "help".to_string() } else { raw.remove(0) };
     match cmd.as_str() {
         "serve" => serve(&raw),
+        "repro" => repro(&raw),
         "bench-table2" => with_parser(
             common_parser("cronus bench-table2", "reproduce Table 2"),
             &raw,
@@ -193,6 +195,34 @@ fn main() {
                  (a [cluster] link in --config takes precedence)",
                 Some("100G"),
             )
+            .flag(
+                "check",
+                "attach the online invariant oracle: replay the open-loop \
+                 workload with every event checked (O(1) each) and exit 1 \
+                 on any violation; honors --arrival, --fail, --autoscale \
+                 and [faults]/[autoscale] keys in --config",
+            )
+            .opt(
+                "arrival",
+                "arrival process for --check (all-at-once | fixed | poisson \
+                 | diurnal | bursty); rates come from --rate-rps and the \
+                 process knobs below",
+                Some("poisson"),
+            )
+            .opt("period-s", "diurnal period in seconds (--check)", Some("20"))
+            .opt("peak-rps", "diurnal peak rate, req/s (--check)", Some("16"))
+            .opt("trough-rps", "diurnal trough rate, req/s (--check)", Some("2"))
+            .opt("burst-rps", "bursty in-burst rate, req/s (--check)", Some("40"))
+            .opt(
+                "burst-len-s",
+                "bursty mean burst length in seconds (--check)",
+                Some("1"),
+            )
+            .opt(
+                "capture",
+                "write the run's scenario capsule TOML to this file (--check)",
+                None,
+            )
             .flag("help", "print usage"),
             &raw,
             |args| {
@@ -203,6 +233,10 @@ fn main() {
                 });
                 let slo_ms = args.get_f64("slo-ttft-ms").unwrap();
                 let slo = (slo_ms > 0.0).then_some(slo_ms / 1e3);
+                if args.has_flag("check") {
+                    run_checked(args, policy, slo);
+                    return;
+                }
                 if args.has_flag("autoscale") {
                     // Elastic-fleet mode: burst/trickle trace, scale
                     // events tabulated as they happen.
@@ -594,6 +628,269 @@ fn main() {
     }
 }
 
+/// `bench-cluster --check`: assemble a scenario capsule from the flags,
+/// stream the open-loop run through the online invariant oracle (every
+/// event checked as it is produced, O(1) each), and exit 1 on any
+/// violation.  `--capture <file>` saves the capsule for `cronus repro`.
+fn run_checked(args: &cronus::config::cli::Args, policy: RoutePolicy, slo: Option<f64>) {
+    use cronus::checker::{InvariantChecker, Scenario, WorkloadSpec};
+    use cronus::systems::driver::replay_trace_observed;
+    use cronus::workload::arrival::ArrivalProcess;
+
+    let cluster = match args.get("config") {
+        Some(path) => cluster_from_toml(path),
+        None => cronus::config::ClusterConfig::mixed(
+            args.get_usize("pairs").unwrap(),
+            cronus::simgpu::model_desc::LLAMA3_8B,
+        ),
+    };
+    let seed = args.get_u64("seed").unwrap();
+    let rate = args.get_f64("rate-rps").unwrap();
+    let arrival_name = args.get("arrival").unwrap();
+    let arrival = match arrival_name {
+        "all-at-once" => Ok(ArrivalProcess::AllAtOnce),
+        "fixed" => {
+            ArrivalProcess::fixed(if rate > 0.0 { 1.0 / rate } else { 0.0 })
+        }
+        "poisson" => ArrivalProcess::poisson(rate, seed),
+        "diurnal" => ArrivalProcess::diurnal(
+            args.get_f64("period-s").unwrap(),
+            args.get_f64("peak-rps").unwrap(),
+            args.get_f64("trough-rps").unwrap(),
+            seed,
+        ),
+        "bursty" => ArrivalProcess::bursty(
+            rate,
+            args.get_f64("burst-rps").unwrap(),
+            args.get_f64("burst-len-s").unwrap(),
+            seed,
+        ),
+        other => {
+            eprintln!("unknown arrival process '{other}'");
+            std::process::exit(2);
+        }
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    // Fault plan: `[faults]` keys in --config plus any --fail entries.
+    let mut fcfg = cronus::faults::FaultConfig::default();
+    let mut have_faults = false;
+    if let Some(path) = args.get("config") {
+        let doc = load_toml(path);
+        have_faults = !doc.section_keys("faults.").is_empty();
+        if let Err(e) = fcfg.apply_toml(&doc) {
+            eprintln!("{path}: {e}");
+            std::process::exit(2);
+        }
+    }
+    if let Some(specs) = args.get("fail") {
+        for spec in specs.split(',').filter(|s| !s.trim().is_empty()) {
+            match cronus::faults::parse_schedule_entry(spec.trim()) {
+                Ok(e) => {
+                    fcfg.schedule.push(e);
+                    have_faults = true;
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    let autoscale = args.has_flag("autoscale").then(|| {
+        let mut acfg = cronus::systems::AutoscaleConfig::default();
+        if let Some(path) = args.get("config") {
+            acfg.apply_toml(&load_toml(path));
+        }
+        acfg
+    });
+    let scenario = Scenario {
+        name: "bench-cluster".to_string(),
+        seed,
+        policy,
+        slo_ttft_s: slo,
+        cluster,
+        workload: WorkloadSpec::OpenLoop {
+            n_requests: args.get_usize("n").unwrap(),
+            trace_seed: seed,
+            arrival,
+        },
+        autoscale,
+        faults: have_faults.then_some(fcfg),
+        classes: None,
+        inject: None,
+    };
+    if let Some(path) = args.get("capture") {
+        std::fs::write(path, scenario.to_toml()).unwrap_or_else(|e| {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(2);
+        });
+        eprintln!("captured scenario capsule -> {path}");
+    }
+    let mut sys = scenario.build_system().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let trace = scenario.trace().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let mut checker = InvariantChecker::new()
+        .with_faults(scenario.faults_active())
+        .with_link(scenario.link_configured());
+    checker.expect_trace(&trace);
+    let (outcome, _stats) =
+        replay_trace_observed(&mut sys, &trace, &mut |ev| checker.on_event(ev));
+    checker.check_report(&outcome.report);
+    let summary = checker.finish();
+    let r = &outcome.report;
+    println!(
+        "{} requests on {} pairs ({}, {} arrivals): {} finished / {} rejected, \
+         TTFT p99 {:.3}s",
+        r.n_requests,
+        scenario.cluster.n_pairs(),
+        policy.name(),
+        arrival_name,
+        r.n_finished,
+        r.n_rejected,
+        r.ttft_p99_s
+    );
+    println!("{}", launcher::check_verdict(r, &summary));
+    if !summary.ok() {
+        std::process::exit(1);
+    }
+}
+
+/// `cronus repro <case.toml> [--shrink] [--out <file>]`: replay a
+/// scenario capsule under the invariant oracle.  Exits 0 when the run
+/// is clean, 1 when the oracle flags violations; `--shrink` then also
+/// minimizes the capsule (property: the first violation's kind still
+/// fires) and writes the reduced `repro_*.toml`.
+fn repro(raw: &[String]) {
+    use cronus::checker::shrink::{run_scenario, shrink, ScenarioRun};
+    use cronus::checker::{repro_dir, Scenario, WorkloadSpec};
+
+    let usage = "usage: cronus repro <case.toml> [--shrink] [--out <file>]\n\n\
+                 replay a scenario capsule under the online invariant oracle;\n\
+                 --shrink minimizes a failing capsule to a minimal one that\n\
+                 still trips the same violation (written to --out, or to\n\
+                 $CRONUS_REPRO_DIR / the system temp dir)";
+    let mut path: Option<String> = None;
+    let mut do_shrink = false;
+    let mut out: Option<String> = None;
+    let mut i = 0;
+    while i < raw.len() {
+        match raw[i].as_str() {
+            "--shrink" => do_shrink = true,
+            "--out" => {
+                i += 1;
+                match raw.get(i) {
+                    Some(p) => out = Some(p.clone()),
+                    None => {
+                        eprintln!("--out needs a file argument\n{usage}");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--help" | "-h" => {
+                println!("{usage}");
+                return;
+            }
+            other if !other.starts_with('-') && path.is_none() => {
+                path = Some(other.to_string());
+            }
+            other => {
+                eprintln!("unexpected argument '{other}'\n{usage}");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    let path = path.unwrap_or_else(|| {
+        eprintln!("{usage}");
+        std::process::exit(2);
+    });
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        eprintln!("cannot read {path}: {e}");
+        std::process::exit(2);
+    });
+    let scenario = Scenario::from_toml(&text).unwrap_or_else(|e| {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    });
+    let workload = match &scenario.workload {
+        WorkloadSpec::OpenLoop { n_requests, .. } => {
+            format!("{n_requests} open-loop requests")
+        }
+        WorkloadSpec::Explicit { requests } => {
+            format!("{} explicit requests", requests.len())
+        }
+        WorkloadSpec::Sessions { sessions } => {
+            format!("{} closed-loop sessions", sessions.n_sessions)
+        }
+    };
+    println!(
+        "replaying '{}': {} on {} pairs ({}{}{})",
+        scenario.name,
+        workload,
+        scenario.cluster.n_pairs(),
+        scenario.policy.name(),
+        if scenario.faults_active() { ", faults" } else { "" },
+        scenario
+            .inject
+            .map(|i| format!(", inject={}", i.name()))
+            .unwrap_or_default(),
+    );
+    let run = run_scenario(&scenario).unwrap_or_else(|e| {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    });
+    println!("{}", launcher::check_verdict(&run.report, &run.summary));
+    if run.summary.ok() {
+        return;
+    }
+    if do_shrink {
+        let kind = run.summary.violations[0].kind;
+        let fails = move |r: &ScenarioRun| r.summary.has(kind);
+        match shrink(&scenario, &fails) {
+            Ok(outcome) => {
+                let dest = out.unwrap_or_else(|| {
+                    repro_dir()
+                        .join(format!("repro_{}.toml", scenario.name))
+                        .to_string_lossy()
+                        .into_owned()
+                });
+                if let Some(dir) = std::path::Path::new(&dest).parent() {
+                    let _ = std::fs::create_dir_all(dir);
+                }
+                std::fs::write(&dest, outcome.scenario.to_toml()).unwrap_or_else(
+                    |e| {
+                        eprintln!("cannot write {dest}: {e}");
+                        std::process::exit(2);
+                    },
+                );
+                let n_min = match &outcome.scenario.workload {
+                    WorkloadSpec::OpenLoop { n_requests, .. } => *n_requests,
+                    WorkloadSpec::Explicit { requests } => requests.len(),
+                    WorkloadSpec::Sessions { sessions } => sessions.n_sessions,
+                };
+                println!(
+                    "shrunk to {} request(s) on {} pair(s) in {} probes \
+                     ({} rounds) -> {dest}",
+                    n_min,
+                    outcome.scenario.cluster.n_pairs(),
+                    outcome.probes,
+                    outcome.rounds
+                );
+            }
+            Err(e) => eprintln!("shrink failed: {e}"),
+        }
+    }
+    std::process::exit(1);
+}
+
 /// Emit the machine-readable QoS artifact for `bench-cluster --classes`
 /// (schema v1; CI validates and archives it — record, don't gate, see
 /// EXPERIMENTS.md §QoS isolation).
@@ -842,7 +1139,10 @@ fn print_help() {
          \x20                (--autoscale: queue-driven elastic pair set;\n\
          \x20                 --classes: multi-tenant QoS service classes;\n\
          \x20                 --faults: deterministic pair-failure injection;\n\
-         \x20                 --migrate: cross-pair KV migration over the link)\n\
+         \x20                 --migrate: cross-pair KV migration over the link;\n\
+         \x20                 --check: online invariant oracle on the stream)\n\
+         \x20 repro          replay a scenario capsule under the invariant\n\
+         \x20                oracle; --shrink minimizes failing capsules\n\
          \x20 plan-topology  search pair compositions under a budget, emit TOML\n\
          \x20 calibrate      print the Balancer's fitted predictors\n\
          \x20 trace          generate + summarize a workload trace\n\

@@ -257,6 +257,38 @@ impl ClassRegistry {
         }
         Ok(())
     }
+
+    /// Emit the non-default classes as canonical `[classes.NAME]`
+    /// sub-tables, sorted by name (the id order
+    /// [`ClassRegistry::apply_toml`] assigns), so parse(emit) rebuilds
+    /// an identical registry and re-emission is byte-identical.  The
+    /// `tenant`/`tier`/`weight` keys are always written — a key-less
+    /// `[classes.NAME]` header would vanish on re-parse, since the
+    /// loader discovers classes through their flattened keys.  Returns
+    /// an empty string for a default-only registry.
+    pub fn to_toml(&self) -> String {
+        let mut named: Vec<&ServiceClass> =
+            self.classes.iter().filter(|c| c.name != "default").collect();
+        named.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut out = String::new();
+        for c in named {
+            out.push_str(&format!("[classes.{}]\n", c.name));
+            out.push_str(&format!("tenant = \"{}\"\n", c.tenant));
+            out.push_str(&format!("tier = {}\n", c.tier));
+            out.push_str(&format!("weight = {}\n", c.weight));
+            if let Some(s) = c.slo_ttft_s {
+                out.push_str(&format!("slo_ttft_s = {s}\n"));
+            }
+            if let Some(s) = c.slo_tbt_p99_s {
+                out.push_str(&format!("slo_tbt_p99_s = {s}\n"));
+            }
+            if let Some(m) = c.model {
+                out.push_str(&format!("model = \"{}\"\n", m.name));
+            }
+            out.push('\n');
+        }
+        out
+    }
 }
 
 /// Deficit-weighted-round-robin ledger over service classes, applied at
@@ -401,6 +433,37 @@ mod tests {
         });
         reg.register(ServiceClass::named("batch"));
         reg
+    }
+
+    #[test]
+    fn classes_toml_round_trips_byte_for_byte() {
+        let mut reg = ClassRegistry::new();
+        reg.register(ServiceClass {
+            tenant: "acme".to_string(),
+            tier: 1,
+            weight: 2.0,
+            slo_ttft_s: Some(1.5),
+            slo_tbt_p99_s: Some(0.2),
+            model: crate::simgpu::model_desc::by_name("qwen2-7b"),
+            ..ServiceClass::named("premium")
+        });
+        reg.register(ServiceClass::named("batch"));
+        let text = reg.to_toml();
+        let doc = toml::parse(&text).expect("emitted TOML parses");
+        let mut back = ClassRegistry::new();
+        back.apply_toml(&doc).expect("applies");
+        assert_eq!(back.to_toml(), text, "re-emission is byte-identical");
+        assert_eq!(back.len(), reg.len());
+        // Sorted name order: batch before premium.
+        assert_eq!(back.get(ClassId(1)).name, "batch");
+        let p = back.get(back.id_of("premium").unwrap());
+        assert_eq!(p.tenant, "acme");
+        assert_eq!(p.tier, 1);
+        assert_eq!(p.weight, 2.0);
+        assert_eq!(p.slo_ttft_s, Some(1.5));
+        assert_eq!(p.model.map(|m| m.name), Some("qwen2-7b"));
+        // Default-only registries emit nothing.
+        assert_eq!(ClassRegistry::new().to_toml(), "");
     }
 
     #[test]

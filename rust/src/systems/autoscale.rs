@@ -121,6 +121,32 @@ impl AutoscaleConfig {
             self.util = x;
         }
     }
+
+    /// Emit this config as a canonical `[autoscale]` section.  Inverse
+    /// of [`AutoscaleConfig::apply_toml`]: the output parses back to an
+    /// equal config and re-emits byte-identically, so planner output and
+    /// scenario capsules carry the full scaling policy.
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[autoscale]\n\
+             min_pairs = {}\n\
+             initial_pairs = {}\n\
+             window_s = {}\n\
+             scale_up_backlog = {}\n\
+             scale_down_backlog = {}\n\
+             cooldown_s = {}\n\
+             headroom = {}\n\
+             util = {}\n",
+            self.min_pairs,
+            self.initial_pairs,
+            self.window_s,
+            self.scale_up_backlog,
+            self.scale_down_backlog,
+            self.cooldown_s,
+            self.headroom,
+            self.util,
+        )
+    }
 }
 
 /// Lifecycle state of one pair under fleet control.
@@ -397,6 +423,28 @@ mod tests {
 
     fn at(s: f64) -> SimTime {
         SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn autoscale_toml_round_trips_byte_for_byte() {
+        let c = AutoscaleConfig {
+            min_pairs: 2,
+            initial_pairs: 3,
+            window_s: 1.25,
+            scale_up_backlog: 4096.0,
+            scale_down_backlog: 512.0,
+            cooldown_s: 0.75,
+            headroom: 0.2,
+            util: 48.0,
+        };
+        let text = c.to_toml();
+        let doc = toml::parse(&text).expect("emitted TOML parses");
+        let mut back = AutoscaleConfig::default();
+        back.apply_toml(&doc);
+        assert_eq!(back.to_toml(), text, "re-emission is byte-identical");
+        assert_eq!(back.min_pairs, 2);
+        assert_eq!(back.window_s, 1.25);
+        assert_eq!(back.util, 48.0);
     }
 
     #[test]

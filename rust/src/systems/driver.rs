@@ -65,7 +65,7 @@ pub struct ReplayStats {
 /// synthetic [`SystemEvent::Shed`]s by [`replay_trace_collect`], so no
 /// request ever vanishes silently.
 pub fn replay_trace(system: &mut dyn ServingSystem, trace: &[Request]) -> RunOutcome {
-    replay_trace_impl(system, trace, false).0
+    replay_trace_impl(system, trace, Sink::Discard).0
 }
 
 /// [`replay_trace`], additionally returning every [`SystemEvent`] the
@@ -75,13 +75,37 @@ pub fn replay_trace_collect(
     system: &mut dyn ServingSystem,
     trace: &[Request],
 ) -> (RunOutcome, Vec<SystemEvent>, ReplayStats) {
-    replay_trace_impl(system, trace, true)
+    replay_trace_impl(system, trace, Sink::Collect)
+}
+
+/// [`replay_trace`], streaming every [`SystemEvent`] through `observe`
+/// as it is drained instead of materializing the run's event vector —
+/// peak memory stays at one horizon's events, so an online consumer
+/// (e.g. the invariant oracle behind `bench-cluster --check`) can ride
+/// along on production-scale replays for free.  Synthetic driver-drop
+/// sheds are observed at their drop instant, which never precedes an
+/// already-observed event.
+pub fn replay_trace_observed(
+    system: &mut dyn ServingSystem,
+    trace: &[Request],
+    observe: &mut dyn FnMut(&SystemEvent),
+) -> (RunOutcome, ReplayStats) {
+    let (out, _events, stats) = replay_trace_impl(system, trace, Sink::Observe(observe));
+    (out, stats)
+}
+
+/// Where a replay's event stream goes: dropped on the floor, collected
+/// into a `Vec`, or streamed through a callback.
+enum Sink<'a> {
+    Discard,
+    Collect,
+    Observe(&'a mut dyn FnMut(&SystemEvent)),
 }
 
 fn replay_trace_impl(
     system: &mut dyn ServingSystem,
     trace: &[Request],
-    collect: bool,
+    mut sink: Sink<'_>,
 ) -> (RunOutcome, Vec<SystemEvent>, ReplayStats) {
     // Arrival order; the sort is stable so ties keep trace order, which
     // matches how the old batch loop enqueued arrivals.
@@ -129,13 +153,23 @@ fn replay_trace_impl(
                 (a, r, 0)
             }
         };
-        if !collect {
-            // Nobody will read the event stream: discard everything up
-            // to (but excluding) the submission instant so the system's
-            // pending buffer stays bounded instead of accumulating one
-            // event per token for the whole run.
-            system.advance_into(SimTime(t.0.saturating_sub(1)), &mut scratch);
-            scratch.clear();
+        match &mut sink {
+            Sink::Collect => {}
+            // Nobody keeps the event stream: drain everything up to (but
+            // excluding) the submission instant so the system's pending
+            // buffer stays bounded instead of accumulating one event per
+            // token for the whole run.  An observer sees each slice
+            // before it is recycled.
+            Sink::Discard => {
+                system.advance_into(SimTime(t.0.saturating_sub(1)), &mut scratch);
+                scratch.clear();
+            }
+            Sink::Observe(f) => {
+                system.advance_into(SimTime(t.0.saturating_sub(1)), &mut scratch);
+                for ev in scratch.drain(..) {
+                    f(&ev);
+                }
+            }
         }
         match system.submit(t, req) {
             Admission::Accepted => stats.n_accepted += 1,
@@ -144,14 +178,20 @@ fn replay_trace_impl(
                 stats.n_deferred += 1;
                 if backoff.gives_up(attempts) {
                     stats.n_dropped += 1;
-                    dropped.push(SystemEvent::Shed {
+                    let shed = SystemEvent::Shed {
                         id: req.id,
                         t,
                         reason: format!(
                             "dropped by the replay driver after {MAX_DEFERRALS} \
                              deferrals"
                         ),
-                    });
+                    };
+                    // The drop happens *now*: prior drains stopped at
+                    // t−1, so observing it here keeps the stream ordered.
+                    if let Sink::Observe(f) = &mut sink {
+                        f(&shed);
+                    }
+                    dropped.push(shed);
                 } else {
                     // Always strictly later than `t` so the loop makes
                     // progress even on a degenerate retry hint.
@@ -163,14 +203,23 @@ fn replay_trace_impl(
     }
 
     let mut events = Vec::new();
-    if collect {
-        system.advance_into(SimTime(u64::MAX), &mut events);
-    } else {
-        // Drain the tail horizon-by-horizon, dropping each slice, so
+    match &mut sink {
+        Sink::Collect => system.advance_into(SimTime(u64::MAX), &mut events),
+        // Drain the tail horizon-by-horizon, recycling each slice, so
         // peak memory is one timestamp's events rather than the run's.
-        while let Some(t) = system.next_event_at() {
-            system.advance_into(t, &mut scratch);
-            scratch.clear();
+        Sink::Discard => {
+            while let Some(t) = system.next_event_at() {
+                system.advance_into(t, &mut scratch);
+                scratch.clear();
+            }
+        }
+        Sink::Observe(f) => {
+            while let Some(t) = system.next_event_at() {
+                system.advance_into(t, &mut scratch);
+                for ev in scratch.drain(..) {
+                    f(&ev);
+                }
+            }
         }
     }
     let mut outcome = system.drain();
@@ -514,6 +563,22 @@ mod tests {
         for w in events.windows(2) {
             assert!(w[0].time() <= w[1].time());
         }
+    }
+
+    #[test]
+    fn observed_replay_streams_the_collected_event_sequence() {
+        let cfg = DeploymentConfig::paper(A100, A10, LLAMA3_8B);
+        let trace = generate(30, &AzureTraceConfig::default(), 21);
+        let trace = at_rate(&trace, 4.0);
+        let mut a = build_system(SystemKind::Cronus, &cfg);
+        let (out_c, collected, _) = replay_trace_collect(a.as_mut(), &trace);
+        let mut b = build_system(SystemKind::Cronus, &cfg);
+        let mut observed = Vec::new();
+        let (out_o, stats) =
+            replay_trace_observed(b.as_mut(), &trace, &mut |ev| observed.push(ev.clone()));
+        assert_eq!(stats.n_submitted, 30);
+        assert_eq!(out_o.report.n_finished, out_c.report.n_finished);
+        assert_eq!(observed, collected, "observer sees the collected stream");
     }
 
     #[test]

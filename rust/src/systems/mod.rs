@@ -42,7 +42,7 @@ pub use autoscale::{AutoscaleConfig, FleetController, PairState, ScaleDecision};
 pub use cluster::{build_cluster_system, ClusterSystem};
 pub use driver::{
     closed_loop, closed_loop_collect, replay_trace, replay_trace_collect,
-    ClosedLoopStats, ReplayStats,
+    replay_trace_observed, ClosedLoopStats, ReplayStats,
 };
 
 /// Per-instance accounting attached to a run (feeds Table 3).

@@ -2,12 +2,38 @@
 //!
 //! The paper sends requests "with fixed time interval" for the latency
 //! experiments (Fig. 4) and all-at-once for max throughput (Table 2).
-//! Poisson arrivals are provided for ablations.
+//! Poisson arrivals are provided for ablations, and two
+//! production-shaped processes drive the scaled chaos runs:
+//!
+//! * [`ArrivalProcess::Diurnal`] — a non-homogeneous Poisson process
+//!   whose rate follows a raised-cosine day/night curve between
+//!   `trough_rps` and `peak_rps` with period `period_s`, sampled by
+//!   thinning (candidate arrivals at the peak rate, accepted with
+//!   probability `rate(t) / peak`).
+//! * [`ArrivalProcess::Bursty`] — a two-state Markov-modulated Poisson
+//!   process: quiet epochs at `base_rps` alternate with burst epochs at
+//!   `burst_rps`; burst durations are exponential with mean
+//!   `burst_len_s`, quiet gaps exponential with mean
+//!   [`QUIET_GAP_FACTOR`]` × burst_len_s` (a 20 % burst duty cycle).
+//!
+//! Every rate-bearing variant is validated: construct processes through
+//! the checked constructors ([`ArrivalProcess::poisson`] and friends),
+//! which reject non-finite or non-positive rates with a typed
+//! [`ArrivalError`] instead of looping forever or stamping NaN
+//! timestamps.  [`stamp`] re-validates and panics with the same message
+//! on a hand-built invalid variant.
+
+use std::fmt;
 
 use crate::util::rng::Rng;
 use crate::workload::Request;
 
-#[derive(Clone, Copy, Debug)]
+/// Mean quiet-gap length of [`ArrivalProcess::Bursty`], as a multiple of
+/// `burst_len_s`: gaps average 4× the burst length, so bursts occupy
+/// ~20 % of the timeline.
+pub const QUIET_GAP_FACTOR: f64 = 4.0;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ArrivalProcess {
     /// Everything arrives at t=0 (max-throughput measurement).
     AllAtOnce,
@@ -15,10 +41,170 @@ pub enum ArrivalProcess {
     FixedInterval { interval_s: f64 },
     /// Poisson process with `rate_rps` requests/second.
     Poisson { rate_rps: f64, seed: u64 },
+    /// Non-homogeneous Poisson with a raised-cosine diurnal rate curve:
+    /// `rate(t) = trough + (peak − trough) · (1 − cos(2πt/period)) / 2`
+    /// (trough at t=0, peak at t=period/2), sampled by thinning.
+    Diurnal { period_s: f64, peak_rps: f64, trough_rps: f64, seed: u64 },
+    /// Two-state MMPP: `base_rps` in quiet epochs, `burst_rps` during
+    /// bursts whose durations average `burst_len_s` seconds.
+    Bursty { base_rps: f64, burst_rps: f64, burst_len_s: f64, seed: u64 },
+}
+
+/// Why an arrival process was rejected at construction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalError {
+    /// A rate or duration parameter was non-finite, or outside its legal
+    /// range (rates must be positive where arrivals depend on them).
+    BadRate {
+        process: &'static str,
+        field: &'static str,
+        value: f64,
+    },
+    /// Parameters are individually finite but mutually inconsistent
+    /// (e.g. a diurnal trough above its peak).
+    BadShape { process: &'static str, why: String },
+}
+
+impl fmt::Display for ArrivalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArrivalError::BadRate { process, field, value } => write!(
+                f,
+                "invalid {process} arrival process: {field} = {value} \
+                 (must be finite and in range)"
+            ),
+            ArrivalError::BadShape { process, why } => {
+                write!(f, "invalid {process} arrival process: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArrivalError {}
+
+/// `value` must be finite and `> 0`.
+fn positive(
+    process: &'static str,
+    field: &'static str,
+    value: f64,
+) -> Result<(), ArrivalError> {
+    if value.is_finite() && value > 0.0 {
+        Ok(())
+    } else {
+        Err(ArrivalError::BadRate { process, field, value })
+    }
+}
+
+/// `value` must be finite and `>= 0`.
+fn non_negative(
+    process: &'static str,
+    field: &'static str,
+    value: f64,
+) -> Result<(), ArrivalError> {
+    if value.is_finite() && value >= 0.0 {
+        Ok(())
+    } else {
+        Err(ArrivalError::BadRate { process, field, value })
+    }
+}
+
+impl ArrivalProcess {
+    /// Checked constructor for [`ArrivalProcess::FixedInterval`].
+    pub fn fixed(interval_s: f64) -> Result<ArrivalProcess, ArrivalError> {
+        let p = ArrivalProcess::FixedInterval { interval_s };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Checked constructor for [`ArrivalProcess::Poisson`].
+    pub fn poisson(rate_rps: f64, seed: u64) -> Result<ArrivalProcess, ArrivalError> {
+        let p = ArrivalProcess::Poisson { rate_rps, seed };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Checked constructor for [`ArrivalProcess::Diurnal`].
+    pub fn diurnal(
+        period_s: f64,
+        peak_rps: f64,
+        trough_rps: f64,
+        seed: u64,
+    ) -> Result<ArrivalProcess, ArrivalError> {
+        let p = ArrivalProcess::Diurnal { period_s, peak_rps, trough_rps, seed };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Checked constructor for [`ArrivalProcess::Bursty`].
+    pub fn bursty(
+        base_rps: f64,
+        burst_rps: f64,
+        burst_len_s: f64,
+        seed: u64,
+    ) -> Result<ArrivalProcess, ArrivalError> {
+        let p = ArrivalProcess::Bursty { base_rps, burst_rps, burst_len_s, seed };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Validate this process's parameters — the single source of truth
+    /// behind the checked constructors, [`stamp`], and the scenario
+    /// capsule loader.
+    pub fn validate(&self) -> Result<(), ArrivalError> {
+        match *self {
+            ArrivalProcess::AllAtOnce => Ok(()),
+            ArrivalProcess::FixedInterval { interval_s } => {
+                non_negative("fixed-interval", "interval_s", interval_s)
+            }
+            ArrivalProcess::Poisson { rate_rps, .. } => {
+                positive("poisson", "rate_rps", rate_rps)
+            }
+            ArrivalProcess::Diurnal { period_s, peak_rps, trough_rps, .. } => {
+                positive("diurnal", "period_s", period_s)?;
+                positive("diurnal", "peak_rps", peak_rps)?;
+                non_negative("diurnal", "trough_rps", trough_rps)?;
+                if trough_rps > peak_rps {
+                    return Err(ArrivalError::BadShape {
+                        process: "diurnal",
+                        why: format!(
+                            "trough_rps {trough_rps} exceeds peak_rps {peak_rps}"
+                        ),
+                    });
+                }
+                Ok(())
+            }
+            ArrivalProcess::Bursty { base_rps, burst_rps, burst_len_s, .. } => {
+                non_negative("bursty", "base_rps", base_rps)?;
+                positive("bursty", "burst_rps", burst_rps)?;
+                positive("bursty", "burst_len_s", burst_len_s)?;
+                if base_rps > burst_rps {
+                    return Err(ArrivalError::BadShape {
+                        process: "bursty",
+                        why: format!(
+                            "base_rps {base_rps} exceeds burst_rps {burst_rps}"
+                        ),
+                    });
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Instantaneous diurnal rate at time `t` (seconds).
+fn diurnal_rate(t: f64, period_s: f64, peak_rps: f64, trough_rps: f64) -> f64 {
+    let phase = (std::f64::consts::TAU * t / period_s).cos();
+    trough_rps + (peak_rps - trough_rps) * (1.0 - phase) * 0.5
 }
 
 /// Return a copy of `trace` with arrival times stamped.
+///
+/// Panics on an invalid process (see [`ArrivalProcess::validate`]); use
+/// the checked constructors to surface the error as a value instead.
 pub fn stamp(trace: &[Request], process: ArrivalProcess) -> Vec<Request> {
+    if let Err(e) = process.validate() {
+        panic!("stamp: {e}");
+    }
     let mut out = trace.to_vec();
     match process {
         ArrivalProcess::AllAtOnce => {
@@ -27,17 +213,62 @@ pub fn stamp(trace: &[Request], process: ArrivalProcess) -> Vec<Request> {
             }
         }
         ArrivalProcess::FixedInterval { interval_s } => {
-            assert!(interval_s >= 0.0);
             for (i, r) in out.iter_mut().enumerate() {
                 r.arrival_ns = (i as f64 * interval_s * 1e9).round() as u64;
             }
         }
         ArrivalProcess::Poisson { rate_rps, seed } => {
-            assert!(rate_rps > 0.0);
             let mut rng = Rng::new(seed);
             let mut t = 0.0f64;
             for r in &mut out {
                 t += rng.exponential(rate_rps);
+                r.arrival_ns = (t * 1e9).round() as u64;
+            }
+        }
+        ArrivalProcess::Diurnal { period_s, peak_rps, trough_rps, seed } => {
+            // Thinning (Lewis–Shedler): homogeneous candidates at the
+            // peak rate, accepted with probability rate(t)/peak.
+            // Rejected candidates still advance t, so the loop always
+            // terminates even through a zero-rate trough.
+            let mut rng = Rng::new(seed);
+            let mut t = 0.0f64;
+            for r in &mut out {
+                loop {
+                    t += rng.exponential(peak_rps);
+                    let rate = diurnal_rate(t, period_s, peak_rps, trough_rps);
+                    if rng.f64() * peak_rps <= rate {
+                        break;
+                    }
+                }
+                r.arrival_ns = (t * 1e9).round() as u64;
+            }
+        }
+        ArrivalProcess::Bursty { base_rps, burst_rps, burst_len_s, seed } => {
+            // Two-state MMPP.  The exponential clock is memoryless, so
+            // re-sampling the inter-arrival gap after a state switch is
+            // distribution-exact.
+            let mut rng = Rng::new(seed);
+            let mut t = 0.0f64;
+            let mut in_burst = false;
+            let mut state_end = rng.exponential(1.0 / (QUIET_GAP_FACTOR * burst_len_s));
+            for r in &mut out {
+                loop {
+                    let rate = if in_burst { burst_rps } else { base_rps };
+                    let dt =
+                        if rate > 0.0 { rng.exponential(rate) } else { f64::INFINITY };
+                    if t + dt <= state_end {
+                        t += dt;
+                        break;
+                    }
+                    t = state_end;
+                    in_burst = !in_burst;
+                    let mean_len = if in_burst {
+                        burst_len_s
+                    } else {
+                        QUIET_GAP_FACTOR * burst_len_s
+                    };
+                    state_end = t + rng.exponential(1.0 / mean_len);
+                }
                 r.arrival_ns = (t * 1e9).round() as u64;
             }
         }
@@ -92,5 +323,109 @@ mod tests {
         let out = stamp(&mk(3), ArrivalProcess::AllAtOnce);
         assert!(out.iter().all(|r| r.input_len == 10 && r.output_len == 5));
         assert_eq!(out.len(), 3);
+    }
+
+    // --- validation (typed errors at construction) ---
+
+    #[test]
+    fn bad_rates_are_rejected_with_typed_errors() {
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let e = ArrivalProcess::poisson(bad, 1).unwrap_err();
+            assert!(
+                matches!(e, ArrivalError::BadRate { field: "rate_rps", .. }),
+                "{e}"
+            );
+        }
+        assert!(ArrivalProcess::fixed(-0.1).is_err());
+        assert!(ArrivalProcess::fixed(f64::NAN).is_err());
+        assert!(ArrivalProcess::fixed(0.0).is_ok()); // degenerate but legal
+
+        assert!(ArrivalProcess::diurnal(0.0, 10.0, 1.0, 1).is_err());
+        assert!(ArrivalProcess::diurnal(10.0, 0.0, 0.0, 1).is_err());
+        assert!(ArrivalProcess::diurnal(10.0, f64::NAN, 0.0, 1).is_err());
+        assert!(ArrivalProcess::diurnal(10.0, 4.0, -1.0, 1).is_err());
+        // Trough above peak is a shape error, not a rate error.
+        let e = ArrivalProcess::diurnal(10.0, 4.0, 8.0, 1).unwrap_err();
+        assert!(matches!(e, ArrivalError::BadShape { .. }), "{e}");
+
+        assert!(ArrivalProcess::bursty(1.0, 0.0, 1.0, 1).is_err());
+        assert!(ArrivalProcess::bursty(-1.0, 10.0, 1.0, 1).is_err());
+        assert!(ArrivalProcess::bursty(1.0, 10.0, 0.0, 1).is_err());
+        assert!(ArrivalProcess::bursty(1.0, 10.0, f64::INFINITY, 1).is_err());
+        let e = ArrivalProcess::bursty(20.0, 10.0, 1.0, 1).unwrap_err();
+        assert!(matches!(e, ArrivalError::BadShape { .. }), "{e}");
+        // Zero base rate is fine: all traffic arrives in bursts.
+        assert!(ArrivalProcess::bursty(0.0, 10.0, 1.0, 1).is_ok());
+
+        // The error renders a human-readable message.
+        let msg = ArrivalProcess::poisson(-1.0, 0).unwrap_err().to_string();
+        assert!(msg.contains("rate_rps"), "{msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "stamp: invalid poisson arrival process")]
+    fn stamp_panics_on_hand_built_invalid_process() {
+        stamp(&mk(2), ArrivalProcess::Poisson { rate_rps: 0.0, seed: 1 });
+    }
+
+    #[test]
+    fn diurnal_mean_rate_and_shape() {
+        let p = ArrivalProcess::diurnal(10.0, 16.0, 4.0, 7).unwrap();
+        let out = stamp(&mk(20_000), p);
+        assert!(out.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+        let span_s = out.last().unwrap().arrival_ns as f64 / 1e9;
+        // Long-run mean rate is (peak + trough) / 2 = 10 rps.
+        let rate = 20_000.0 / span_s;
+        assert!((rate - 10.0).abs() < 1.0, "mean rate {rate}");
+        // Arrivals concentrate around the peak phase (period/2): the
+        // middle half of each period carries more than half the load.
+        let mid = out
+            .iter()
+            .filter(|r| {
+                let phase = (r.arrival_ns as f64 / 1e9) % 10.0;
+                (2.5..7.5).contains(&phase)
+            })
+            .count();
+        assert!(
+            mid as f64 > 0.55 * out.len() as f64,
+            "only {mid}/{} arrivals near the diurnal peak",
+            out.len()
+        );
+    }
+
+    #[test]
+    fn bursty_clusters_arrivals() {
+        let p = ArrivalProcess::bursty(1.0, 50.0, 1.0, 5).unwrap();
+        let out = stamp(&mk(10_000), p);
+        assert!(out.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+        let span_s = out.last().unwrap().arrival_ns as f64 / 1e9;
+        // Long-run mean ≈ (4·base + 1·burst) / 5 = 10.8 rps; loose band.
+        let rate = 10_000.0 / span_s;
+        assert!((2.0..40.0).contains(&rate), "mean rate {rate}");
+        // Clustering: the busiest 1-second window far exceeds the mean.
+        let mut per_sec = std::collections::HashMap::new();
+        for r in &out {
+            *per_sec.entry(r.arrival_ns / 1_000_000_000).or_insert(0u32) += 1;
+        }
+        let peak = per_sec.values().copied().max().unwrap();
+        assert!(peak as f64 > 2.0 * rate, "peak window {peak} vs mean {rate}");
+    }
+
+    #[test]
+    fn new_processes_are_seed_deterministic() {
+        for p in [
+            ArrivalProcess::diurnal(10.0, 16.0, 4.0, 11).unwrap(),
+            ArrivalProcess::bursty(1.0, 30.0, 2.0, 11).unwrap(),
+        ] {
+            let a = stamp(&mk(500), p);
+            let b = stamp(&mk(500), p);
+            assert!(a
+                .iter()
+                .zip(&b)
+                .all(|(x, y)| x.arrival_ns == y.arrival_ns));
+        }
+        let a = stamp(&mk(500), ArrivalProcess::diurnal(10.0, 16.0, 4.0, 1).unwrap());
+        let b = stamp(&mk(500), ArrivalProcess::diurnal(10.0, 16.0, 4.0, 2).unwrap());
+        assert!(a.iter().zip(&b).any(|(x, y)| x.arrival_ns != y.arrival_ns));
     }
 }

@@ -1,0 +1,296 @@
+//! Robustness-harness integration tests (tentpole satellite).
+//!
+//! Mutation-tests the invariant oracle — for each corruption of a
+//! hand-built event stream (double finish, lost request, token
+//! undercount, non-monotone timestamp, phantom migration) the checker
+//! must report *exactly* the targeted violation and nothing else — and
+//! pins the shrinker end to end: a production-scale failing scenario
+//! (hundreds of requests, four pairs, diurnal arrivals, an active fault
+//! plan) must reduce to a capsule of at most 3 requests on 1 pair with
+//! at most 1 fault event that still fails the same property after a
+//! round trip through its TOML file.
+
+use cronus::checker::shrink::shrink;
+use cronus::checker::{
+    run_scenario, shrink_to_file, CheckSummary, InjectSpec, InvariantChecker,
+    Scenario, ScenarioRun, ViolationKind, WorkloadSpec,
+};
+use cronus::config::topology::ClusterConfig;
+use cronus::faults::FaultConfig;
+use cronus::metrics::{Collector, Report};
+use cronus::simclock::SimTime;
+use cronus::simgpu::model_desc::LLAMA3_8B;
+use cronus::systems::SystemEvent;
+use cronus::workload::arrival::ArrivalProcess;
+use cronus::workload::Request;
+
+/// Two requests the synthetic streams below serve: id 1 wants 3 output
+/// tokens, id 2 wants 2.
+fn trace() -> Vec<Request> {
+    vec![Request::new(1, 0, 8, 3), Request::new(2, 0, 8, 2)]
+}
+
+/// A stream that satisfies every invariant for [`trace`].
+fn healthy_stream() -> Vec<SystemEvent> {
+    vec![
+        SystemEvent::FirstToken { id: 1, t: SimTime(10) },
+        SystemEvent::Token { id: 1, t: SimTime(20) },
+        SystemEvent::Token { id: 1, t: SimTime(30) },
+        SystemEvent::Finished { id: 1, t: SimTime(30) },
+        SystemEvent::FirstToken { id: 2, t: SimTime(40) },
+        SystemEvent::Token { id: 2, t: SimTime(50) },
+        SystemEvent::Finished { id: 2, t: SimTime(50) },
+    ]
+}
+
+/// Build a [`Report`] that faithfully describes `events`, the way a
+/// serving system's collector would — so a mutation test perturbs
+/// exactly one invariant, not the report/stream agreement too.
+fn report_for(events: &[SystemEvent]) -> Report {
+    let mut c = Collector::new();
+    let mut seen: Vec<u64> = Vec::new();
+    for ev in events {
+        if let SystemEvent::FirstToken { id, .. }
+        | SystemEvent::Token { id, .. }
+        | SystemEvent::Finished { id, .. }
+        | SystemEvent::Shed { id, .. } = ev
+        {
+            if !seen.contains(id) {
+                seen.push(*id);
+                c.on_arrival(*id, SimTime::ZERO);
+            }
+        }
+    }
+    for ev in events {
+        match ev {
+            SystemEvent::FirstToken { id, t } | SystemEvent::Token { id, t } => {
+                c.on_token(*id, *t)
+            }
+            SystemEvent::Finished { id, t } => c.on_finish(*id, *t),
+            SystemEvent::Shed { id, .. } => c.on_shed(*id),
+            _ => {}
+        }
+    }
+    c.report("synthetic")
+}
+
+fn verdict(events: &[SystemEvent], report: &Report, linked: bool) -> CheckSummary {
+    let mut checker = InvariantChecker::new().with_link(linked);
+    checker.expect_trace(&trace());
+    for ev in events {
+        checker.on_event(ev);
+    }
+    checker.check_report(report);
+    checker.finish()
+}
+
+/// At least one violation, all of them of `kind`, none suppressed.
+fn assert_exactly(summary: &CheckSummary, kind: ViolationKind) {
+    assert!(
+        !summary.violations.is_empty(),
+        "expected a {kind:?} violation, got a clean run"
+    );
+    assert!(
+        summary.violations.iter().all(|v| v.kind == kind),
+        "expected only {kind:?}:\n{}",
+        summary.render()
+    );
+    assert_eq!(summary.n_suppressed, 0, "{}", summary.render());
+}
+
+#[test]
+fn oracle_accepts_the_healthy_synthetic_stream() {
+    let events = healthy_stream();
+    let report = report_for(&events);
+    let summary = verdict(&events, &report, false);
+    assert!(summary.ok(), "{}", summary.render());
+    assert_eq!(summary.n_events, events.len() as u64);
+}
+
+#[test]
+fn mutation_double_finish_is_exactly_double_terminal() {
+    let mut events = healthy_stream();
+    events.insert(4, SystemEvent::Finished { id: 1, t: SimTime(30) });
+    // Keep the report in agreement with the corrupt stream so the only
+    // broken law is the terminal-exactness one.
+    let mut report = report_for(&healthy_stream());
+    report.n_finished += 1;
+    report.n_requests += 1;
+    assert_exactly(&verdict(&events, &report, false), ViolationKind::DoubleTerminal);
+}
+
+#[test]
+fn mutation_lost_request_is_exactly_lost_request() {
+    // Request 2 vanishes entirely: no tokens, no terminal.
+    let events: Vec<SystemEvent> = healthy_stream()
+        .into_iter()
+        .filter(|ev| {
+            !matches!(
+                ev,
+                SystemEvent::FirstToken { id: 2, .. }
+                    | SystemEvent::Token { id: 2, .. }
+                    | SystemEvent::Finished { id: 2, .. }
+            )
+        })
+        .collect();
+    let report = report_for(&events);
+    assert_exactly(&verdict(&events, &report, false), ViolationKind::LostRequest);
+}
+
+#[test]
+fn mutation_token_undercount_is_exactly_token_count_mismatch() {
+    // Request 1 finishes after only 2 of its 3 promised tokens.
+    let mut events = healthy_stream();
+    events.remove(1);
+    let report = report_for(&events);
+    assert_exactly(
+        &verdict(&events, &report, false),
+        ViolationKind::TokenCountMismatch,
+    );
+}
+
+#[test]
+fn mutation_backwards_timestamp_is_exactly_time_regression() {
+    let mut events = healthy_stream();
+    let last = events.len() - 1;
+    events[last] = SystemEvent::Finished { id: 2, t: SimTime(5) };
+    let report = report_for(&events);
+    assert_exactly(&verdict(&events, &report, false), ViolationKind::TimeRegression);
+}
+
+#[test]
+fn mutation_phantom_migration_is_exactly_phantom_migration() {
+    let events = healthy_stream();
+
+    // A migration counter without a configured link…
+    let mut report = report_for(&events);
+    report.n_migrations = 1;
+    report.migrated_tokens = 512;
+    assert_exactly(&verdict(&events, &report, false), ViolationKind::PhantomMigration);
+
+    // …a migration that moved zero tokens even with a link…
+    let mut report = report_for(&events);
+    report.n_migrations = 1;
+    report.migrated_tokens = 0;
+    assert_exactly(&verdict(&events, &report, true), ViolationKind::PhantomMigration);
+
+    // …and migrated tokens with no migration to carry them.
+    let mut report = report_for(&events);
+    report.migrated_tokens = 256;
+    assert_exactly(&verdict(&events, &report, true), ViolationKind::PhantomMigration);
+}
+
+/// The pinned shrink of the issue: a production-scale chaos scenario —
+/// hundreds of requests under a diurnal arrival process across four
+/// pairs with an active fault plan — seeded with a double-finish
+/// corruption must reduce to at most 3 requests on 1 pair with at most
+/// 1 fault event, still failing the same property.
+#[test]
+fn pinned_shrink_reduces_production_scale_chaos() {
+    let mut s = Scenario::minimal("pinned-chaos");
+    s.seed = 2026;
+    s.cluster = ClusterConfig::mixed(4, LLAMA3_8B);
+    s.workload = WorkloadSpec::OpenLoop {
+        n_requests: 512,
+        trace_seed: 13,
+        arrival: ArrivalProcess::diurnal(8.0, 40.0, 4.0, 5).expect("valid arrival"),
+    };
+    s.faults = Some(FaultConfig {
+        seed: 9,
+        n_failures: 2,
+        mtbf_s: 2.0,
+        mttr_s: 1.0,
+        ..FaultConfig::default()
+    });
+    s.inject = Some(InjectSpec::DoubleFinish);
+
+    let fails =
+        |run: &ScenarioRun| run.summary.has(ViolationKind::DoubleTerminal);
+    let seed_run = run_scenario(&s).expect("seed scenario runs");
+    assert!(fails(&seed_run), "seed must fail:\n{}", seed_run.summary.render());
+    assert_eq!(seed_run.n_requests, 512);
+
+    let out = shrink(&s, &fails).expect("shrink succeeds");
+    let minimal = &out.scenario;
+    assert_eq!(minimal.cluster.n_pairs(), 1, "fleet should collapse to one pair");
+    let fault_events = minimal
+        .faults
+        .as_ref()
+        .map_or(0, |f| f.schedule.len() + f.n_failures);
+    assert!(
+        fault_events <= 1,
+        "fault plan should shrink to <=1 event, kept {fault_events}"
+    );
+    match &minimal.workload {
+        WorkloadSpec::Explicit { requests } => {
+            assert!(
+                requests.len() <= 3,
+                "expected <=3 requests, got {}",
+                requests.len()
+            );
+        }
+        other => panic!("workload should freeze to explicit requests, got {other:?}"),
+    }
+
+    // The capsule must still fail the same way after a round trip
+    // through its serialized form — exactly what `cronus repro` loads.
+    let text = minimal.to_toml();
+    let back = Scenario::from_toml(&text).expect("capsule parses");
+    assert_eq!(back.to_toml(), text, "capsule must round-trip byte-for-byte");
+    let run = run_scenario(&back).expect("capsule runs");
+    assert!(fails(&run), "minimal capsule lost the bug:\n{}", run.summary.render());
+}
+
+#[test]
+fn shrink_to_file_honors_the_repro_dir_env() {
+    let dir = std::env::temp_dir().join("cronus_checker_shrink_test");
+    std::env::set_var("CRONUS_REPRO_DIR", &dir);
+    let mut s = Scenario::minimal("filed");
+    s.inject = Some(InjectSpec::LoseTerminal);
+    let fails = |run: &ScenarioRun| run.summary.has(ViolationKind::LostRequest);
+    let result = shrink_to_file(&s, &fails, "filed case");
+    std::env::remove_var("CRONUS_REPRO_DIR");
+
+    let (path, out) = result.expect("shrink_to_file succeeds");
+    assert!(path.starts_with(&dir), "capsule landed at {}", path.display());
+    assert_eq!(
+        path.file_name().and_then(|n| n.to_str()),
+        Some("repro_filed_case.toml"),
+        "label must be sanitized into the file name"
+    );
+    let text = std::fs::read_to_string(&path).expect("capsule readable");
+    assert_eq!(text, out.scenario.to_toml());
+    let back = Scenario::from_toml(&text).expect("capsule parses");
+    assert_eq!(back.to_toml(), text);
+    let run = run_scenario(&back).expect("capsule runs");
+    assert!(fails(&run), "filed capsule must still fail");
+}
+
+#[test]
+fn capsule_files_replay_deterministically_from_disk() {
+    use cronus::cronus::router::RoutePolicy;
+    let mut s = Scenario::minimal("disk");
+    s.seed = 11;
+    s.policy = RoutePolicy::SloAware;
+    s.slo_ttft_s = Some(2.0);
+    s.cluster = ClusterConfig::mixed(2, LLAMA3_8B);
+    s.workload = WorkloadSpec::OpenLoop {
+        n_requests: 32,
+        trace_seed: 3,
+        arrival: ArrivalProcess::bursty(4.0, 40.0, 0.5, 9).expect("valid arrival"),
+    };
+    s.faults = Some(FaultConfig { n_failures: 1, ..FaultConfig::default() });
+
+    let path = std::env::temp_dir().join("cronus_capsule_disk_test.toml");
+    std::fs::write(&path, s.to_toml()).expect("capsule written");
+    let back = Scenario::from_toml(&std::fs::read_to_string(&path).expect("readable"))
+        .expect("capsule parses");
+    assert_eq!(back.to_toml(), s.to_toml());
+
+    // Same capsule, same run: the whole point of a repro file.
+    let a = run_scenario(&s).expect("original runs");
+    let b = run_scenario(&back).expect("reloaded runs");
+    assert_eq!(a.events, b.events, "replay from disk diverged");
+    assert!(a.summary.ok(), "{}", a.summary.render());
+    assert!(b.summary.ok(), "{}", b.summary.render());
+}

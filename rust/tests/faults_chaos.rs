@@ -7,9 +7,11 @@
 
 use std::collections::HashMap;
 
+use cronus::checker::InvariantChecker;
 use cronus::config::topology::ClusterConfig;
 use cronus::cronus::router::RoutePolicy;
 use cronus::faults::{FaultConfig, FaultPlan, RetryBackoff};
+use cronus::metrics::Report;
 use cronus::simgpu::model_desc::LLAMA3_8B;
 use cronus::systems::cluster::ClusterSystem;
 use cronus::systems::driver::replay_trace_collect;
@@ -24,9 +26,11 @@ fn trace(n: usize, seed: u64, rate_rps: f64) -> Vec<Request> {
 }
 
 /// One randomized chaos round: a seeded fault plan on a random fleet
-/// under a random policy.  Returns the event streams of two identical
-/// runs for the caller's byte-identity check.
-fn chaos_round(rng: &mut Rng) -> (Vec<SystemEvent>, Vec<SystemEvent>, Vec<Request>) {
+/// under a random policy.  Returns the report and event streams of two
+/// identical runs for the caller's byte-identity and oracle checks.
+fn chaos_round(
+    rng: &mut Rng,
+) -> (Report, Vec<SystemEvent>, Vec<SystemEvent>, Vec<Request>) {
     let seed = rng.next_u64();
     let n_pairs = rng.range_usize(1, 4);
     let policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len())];
@@ -49,9 +53,9 @@ fn chaos_round(rng: &mut Rng) -> (Vec<SystemEvent>, Vec<SystemEvent>, Vec<Reques
             .with_faults(plan.clone(), fcfg.backoff());
         replay_trace_collect(&mut sys, &trace)
     };
-    let (_, events_a, _) = run();
+    let (out_a, events_a, _) = run();
     let (_, events_b, _) = run();
-    (events_a, events_b, trace)
+    (out_a.report, events_a, events_b, trace)
 }
 
 #[test]
@@ -59,7 +63,19 @@ fn chaos_every_request_terminates_exactly_once() {
     let mut rng = Rng::new(0xFA_0175);
     let mut saw_failure = false;
     for _ in 0..12 {
-        let (events, events_b, trace) = chaos_round(&mut rng);
+        let (report, events, events_b, trace) = chaos_round(&mut rng);
+
+        // The shared oracle must agree with every hand-rolled check
+        // below (it was extracted from this suite — keep them in
+        // lockstep so a divergence flags a checker bug).
+        let mut checker = InvariantChecker::new().with_faults(true);
+        checker.expect_trace(&trace);
+        for ev in &events {
+            checker.on_event(ev);
+        }
+        checker.check_report(&report);
+        let summary = checker.finish();
+        assert!(summary.ok(), "{}", summary.render());
 
         // Same seed, same plan ⇒ byte-identical streams, failures and
         // recoveries included.
@@ -297,4 +313,59 @@ fn fail_stop_chaos_never_panics_and_sheds_the_rest() {
     for req in &trace {
         assert_eq!(terminal.get(&req.id), Some(&1), "request {} not conserved", req.id);
     }
+}
+
+#[test]
+fn scaled_chaos_with_realistic_arrivals_is_clean() {
+    // Production-shaped chaos: a few hundred requests arriving under
+    // non-homogeneous processes (diurnal thinning, MMPP bursts) on a
+    // multi-pair fleet with an active fault plan, judged by the shared
+    // oracle.  On failure `check_scenarios` shrinks the scenario and
+    // panics with a path to a minimal repro_*.toml capsule.
+    use cronus::checker::{check_scenarios, Scenario, WorkloadSpec};
+    use cronus::workload::arrival::ArrivalProcess;
+    check_scenarios(
+        "faults-chaos-arrivals",
+        4,
+        |rng| {
+            let seed = rng.next_u64();
+            let n_pairs = 2 + rng.range_usize(0, 3);
+            let arrival = if rng.f64() < 0.5 {
+                ArrivalProcess::diurnal(
+                    6.0 + rng.f64() * 6.0,
+                    20.0 + rng.f64() * 20.0,
+                    2.0,
+                    rng.next_u64(),
+                )
+                .expect("valid diurnal")
+            } else {
+                ArrivalProcess::bursty(
+                    2.0,
+                    30.0 + rng.f64() * 30.0,
+                    0.5 + rng.f64(),
+                    rng.next_u64(),
+                )
+                .expect("valid bursty")
+            };
+            let mut s = Scenario::minimal("chaos-arrivals");
+            s.seed = seed;
+            s.policy = RoutePolicy::ALL[rng.range_usize(0, RoutePolicy::ALL.len())];
+            s.cluster = ClusterConfig::mixed(n_pairs, LLAMA3_8B);
+            s.workload = WorkloadSpec::OpenLoop {
+                n_requests: 250 + rng.range_usize(0, 100),
+                trace_seed: seed,
+                arrival,
+            };
+            s.faults = Some(FaultConfig {
+                seed,
+                n_failures: 1 + rng.range_usize(0, 3),
+                mtbf_s: 0.5 + rng.f64() * 2.0,
+                mttr_s: 0.3 + rng.f64() * 1.5,
+                fail_stop_frac: 0.3,
+                ..FaultConfig::default()
+            });
+            s
+        },
+        |run| !run.summary.ok(),
+    );
 }

@@ -418,6 +418,22 @@ fn prop_replay_conserves_requests_and_tokens() {
         let mut sys = build_system(kind, &cfg);
         let (out, events, stats) = replay_trace_collect(sys.as_mut(), &trace);
 
+        // The shared oracle was extracted from the hand-rolled checks
+        // below; run both so the extraction stays honest.
+        let mut checker = cronus::checker::InvariantChecker::new();
+        checker.expect_trace(&trace);
+        for ev in &events {
+            checker.on_event(ev);
+        }
+        checker.check_report(&out.report);
+        let summary = checker.finish();
+        if !summary.ok() {
+            return PropResult::Fail(format!(
+                "invariant oracle disagrees\n{}",
+                summary.render()
+            ));
+        }
+
         let mut finished: FxHashMap<u64, usize> = FxHashMap::default();
         let mut shed: FxHashMap<u64, usize> = FxHashMap::default();
         let mut tokens: FxHashMap<u64, usize> = FxHashMap::default();
@@ -660,6 +676,22 @@ fn prop_qos_per_class_conservation() {
         }
         let mut sys = ClusterSystem::new(cfg, policy).with_classes(reg);
         let (out, events, stats) = replay_trace_collect(&mut sys, &trace);
+
+        // The oracle's per-class conservation law must agree with the
+        // explicit breakdown reconciliation below.
+        let mut checker = cronus::checker::InvariantChecker::new();
+        checker.expect_trace(&trace);
+        for ev in &events {
+            checker.on_event(ev);
+        }
+        checker.check_report(&out.report);
+        let summary = checker.finish();
+        if !summary.ok() {
+            return PropResult::Fail(format!(
+                "invariant oracle disagrees\n{}",
+                summary.render()
+            ));
+        }
 
         let mut fin = [0usize; 3];
         let mut shed = [0usize; 3];

@@ -123,6 +123,51 @@ fn collect_and_noncollect_drivers_agree() {
 }
 
 #[test]
+fn checked_run_is_byte_identical_to_unchecked() {
+    // The invariant oracle is a passive observer (acceptance criterion
+    // of the robustness-harness issue): streaming a run through
+    // `replay_trace_observed` with an `InvariantChecker` attached must
+    // leave the event stream, the submission schedule, and every
+    // outcome number byte-identical to the unchecked collecting run —
+    // and the oracle must come back clean.
+    use cronus::checker::InvariantChecker;
+    use cronus::systems::driver::{replay_trace_collect, replay_trace_observed};
+    use cronus::workload::arrival::{stamp, ArrivalProcess};
+    use cronus::workload::azure::{generate, AzureTraceConfig};
+
+    let trace = generate(120, &AzureTraceConfig::default(), 31);
+    let trace =
+        stamp(&trace, ArrivalProcess::Poisson { rate_rps: 6.0, seed: 9 });
+    let cfg = ClusterConfig::mixed(2, LLAMA3_8B);
+
+    let mut plain = ClusterSystem::new(cfg.clone(), RoutePolicy::KvAffinity);
+    let (plain_out, plain_events, plain_stats) =
+        replay_trace_collect(&mut plain, &trace);
+
+    let mut checker = InvariantChecker::new();
+    checker.expect_trace(&trace);
+    let mut observed: Vec<SystemEvent> = Vec::new();
+    let mut checked = ClusterSystem::new(cfg, RoutePolicy::KvAffinity);
+    let (checked_out, checked_stats) =
+        replay_trace_observed(&mut checked, &trace, &mut |ev| {
+            checker.on_event(ev);
+            observed.push(ev.clone());
+        });
+    checker.check_report(&checked_out.report);
+    let summary = checker.finish();
+    assert!(summary.ok(), "{}", summary.render());
+
+    assert_eq!(plain_events, observed, "checked run diverged from unchecked");
+    assert_eq!(digest_stream(&plain_events), digest_stream(&observed));
+    assert_eq!(plain_stats, checked_stats, "submission schedules diverged");
+    assert_eq!(plain_out.report.n_finished, checked_out.report.n_finished);
+    assert_eq!(plain_out.report.n_rejected, checked_out.report.n_rejected);
+    assert_eq!(plain_out.report.makespan_s, checked_out.report.makespan_s);
+    assert_eq!(plain_out.report.ttft_samples, checked_out.report.ttft_samples);
+    assert_eq!(plain_out.report.tbt_samples, checked_out.report.tbt_samples);
+}
+
+#[test]
 fn one_pair_cluster_closed_loop_matches_bare_pair() {
     // A 1-pair cluster under a credit-less policy must serve the session
     // workload exactly like the bare Cronus pair: the cluster layer adds

@@ -17,7 +17,12 @@
 //!   in the `Report` (the acceptance criterion of the issue);
 //! * with a TTFT SLO configured, affinity never bypasses admission:
 //!   everything still conserves and the run completes.
+//!
+//! Every run is additionally fed through the shared
+//! [`InvariantChecker`] oracle, which was extracted from the hand-rolled
+//! checks below — the two must agree, keeping the extraction honest.
 
+use cronus::checker::InvariantChecker;
 use cronus::config::topology::ClusterConfig;
 use cronus::cronus::router::RoutePolicy;
 use cronus::simgpu::model_desc::LLAMA3_8B;
@@ -50,14 +55,32 @@ fn run(
 }
 
 /// The invariants every closed-loop run must satisfy, whatever the
-/// policy or SLO.
+/// policy or SLO.  `linked` declares whether an inter-pair link is
+/// configured (gates the oracle's migration-counter laws).
 fn verify_invariants(
     sessions: &[Session],
     out: &RunOutcome,
     events: &[SystemEvent],
     stats: &ClosedLoopStats,
+    linked: bool,
     label: &str,
 ) -> PropResult {
+    // The online oracle was extracted from this suite's hand-rolled
+    // checks below; run both so they stay in lockstep.
+    let mut checker = InvariantChecker::new().with_link(linked);
+    checker.expect_sessions(sessions);
+    for ev in events {
+        checker.on_event(ev);
+    }
+    checker.check_report(&out.report);
+    let summary = checker.finish();
+    if !summary.ok() {
+        return PropResult::Fail(format!(
+            "{label}: invariant oracle disagrees\n{}",
+            summary.render()
+        ));
+    }
+
     // Monotone event stream.
     for w in events.windows(2) {
         if w[0].time() > w[1].time() {
@@ -215,16 +238,18 @@ fn fuzz_affinity_vs_load_only_routing() {
         let (aff_out, aff_events, aff_stats) =
             run(&sessions, n_pairs, RoutePolicy::KvAffinity, None);
 
-        let r = verify_invariants(&sessions, &lot_out, &lot_events, &lot_stats, "LOT")
-            .and(|| {
-                verify_invariants(
-                    &sessions,
-                    &aff_out,
-                    &aff_events,
-                    &aff_stats,
-                    "KvAffinity",
-                )
-            });
+        let r =
+            verify_invariants(&sessions, &lot_out, &lot_events, &lot_stats, false, "LOT")
+                .and(|| {
+                    verify_invariants(
+                        &sessions,
+                        &aff_out,
+                        &aff_events,
+                        &aff_stats,
+                        false,
+                        "KvAffinity",
+                    )
+                });
         if !matches!(r, PropResult::Ok) {
             return r;
         }
@@ -338,16 +363,24 @@ fn fuzz_affinity_on_mixed_cronus_dp_fleet() {
         let (aff_out, aff_events, aff_stats) =
             run_cfg(&sessions, cfg, RoutePolicy::KvAffinity, None);
 
-        let r = verify_invariants(&sessions, &lot_out, &lot_events, &lot_stats, "LOT+DP")
-            .and(|| {
-                verify_invariants(
-                    &sessions,
-                    &aff_out,
-                    &aff_events,
-                    &aff_stats,
-                    "KvAffinity+DP",
-                )
-            });
+        let r = verify_invariants(
+            &sessions,
+            &lot_out,
+            &lot_events,
+            &lot_stats,
+            false,
+            "LOT+DP",
+        )
+        .and(|| {
+            verify_invariants(
+                &sessions,
+                &aff_out,
+                &aff_events,
+                &aff_stats,
+                false,
+                "KvAffinity+DP",
+            )
+        });
         if !matches!(r, PropResult::Ok) {
             return r;
         }
@@ -475,7 +508,16 @@ fn fuzz_default_class_sessions_byte_identical_with_registry() {
                 0,
             )
         })
-        .and(|| verify_invariants(&sessions, &qos_out, &qos_events, &qos_stats, "QoS-default"))
+        .and(|| {
+            verify_invariants(
+                &sessions,
+                &qos_out,
+                &qos_events,
+                &qos_stats,
+                false,
+                "QoS-default",
+            )
+        })
     });
 }
 
@@ -544,11 +586,17 @@ fn fuzz_drained_pairs_hand_sessions_over_the_link() {
             .set(migrations_seen.get() + mig_out.report.n_migrations as u64);
         let (ev_out, ev_events, ev_stats) = go(false);
 
-        let inv =
-            verify_invariants(&sessions, &mig_out, &mig_events, &mig_stats, "migrate")
-                .and(|| {
-                    verify_invariants(&sessions, &ev_out, &ev_events, &ev_stats, "evict")
-                });
+        let inv = verify_invariants(
+            &sessions,
+            &mig_out,
+            &mig_events,
+            &mig_stats,
+            true,
+            "migrate",
+        )
+        .and(|| {
+            verify_invariants(&sessions, &ev_out, &ev_events, &ev_stats, false, "evict")
+        });
         if !matches!(inv, PropResult::Ok) {
             return inv;
         }
@@ -630,7 +678,7 @@ fn fuzz_affinity_under_slo_admission_conserves() {
         let slo = Some(0.5 + rng.f64() * 1.5);
         let (out, events, stats) =
             run(&sessions, rng.range_usize(1, 4), RoutePolicy::KvAffinity, slo);
-        verify_invariants(&sessions, &out, &events, &stats, "KvAffinity+SLO").and(
+        verify_invariants(&sessions, &out, &events, &stats, false, "KvAffinity+SLO").and(
             || {
                 PropResult::assert_eq(
                     "report conserves submitted turns",
